@@ -1,0 +1,54 @@
+//! Energy characterization sweep: regenerate the chip's Fig. 6/7/8
+//! curves from the calibrated models and sweep the multi-core standby
+//! policies — the "power knob" tour for a systems user deciding how to
+//! deploy the core bank.
+//!
+//! ```sh
+//! cargo run --release --offline --example energy_sweep -- [--csv out/]
+//! ```
+
+use sotb_bic::experiments::{fig6, fig7, fig8, multicore};
+use sotb_bic::power::{i_stb, BackBias, StandbyMode, Supply};
+use sotb_bic::substrate::stats::format_si;
+
+fn main() -> anyhow::Result<()> {
+    let csv_dir = std::env::args().skip_while(|a| a != "--csv").nth(1);
+
+    for result in [fig6::run(), fig7::run(), fig8::run()] {
+        println!("{}", result.render());
+        if let Some(dir) = &csv_dir {
+            std::fs::create_dir_all(dir)?;
+            let path = std::path::Path::new(dir).join(format!("{}.csv", result.id));
+            std::fs::write(&path, result.table.to_csv())?;
+            println!("wrote {}\n", path.display());
+        }
+    }
+
+    // The standby design space at a glance: what one parked core costs.
+    println!("### one parked core @0.4 V, by technique\n");
+    let v04 = Supply::new(0.4);
+    for (name, mode) in [
+        ("active-idle (no mgmt)", StandbyMode::ActiveIdle { f: 10.1e6 }),
+        ("clock gating", StandbyMode::ClockGated),
+        ("power gating (59.8%)", StandbyMode::PowerGated { leak_reduction: 0.598 }),
+        ("CG+RBB -1 V", StandbyMode::CgRbb { vbb: -1.0 }),
+        ("CG+RBB -2 V (chip)", StandbyMode::CgRbb { vbb: -2.0 }),
+    ] {
+        println!(
+            "  {name:<24} {:>12}   (I_stb {:>12})",
+            format_si(mode.power(v04), "W"),
+            format_si(
+                match mode {
+                    StandbyMode::CgRbb { vbb } =>
+                        i_stb(v04, BackBias::reverse(vbb)),
+                    _ => mode.power(v04) / 0.4,
+                },
+                "A"
+            ),
+        );
+    }
+
+    // System-level consequence: the policy ablation.
+    println!("\n{}", multicore::run(multicore::Scale::Quick).render());
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifact, index a batch on the PJRT request
+//! path, cross-check against the golden model, and run a Fig. 1-style
+//! query — the 60-second tour of the public API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use sotb_bic::bic::{BicConfig, BicCore, Query};
+use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Artifacts: compiled once by `make artifacts`; Python never runs here.
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let variant = manifest.find_bic("chip").expect("chip variant");
+    println!(
+        "artifact: {} ({} records x {} words, {} keys)",
+        variant.file.display(),
+        variant.n,
+        variant.w,
+        variant.m
+    );
+
+    // 2. PJRT: compile the HLO text and index a batch of records.
+    let rt = Runtime::cpu()?;
+    println!("PJRT backend: {} ({} devices)", rt.platform_name(), rt.device_count());
+    let exe = BicExecutable::load(&rt, variant)?;
+
+    // Records are sets of 8-bit words; keys are the attributes to index.
+    let records: Vec<Vec<i32>> = (0..16)
+        .map(|j| (0..32).map(|w| ((j * 7 + w * 13) % 256) as i32).collect())
+        .collect();
+    let keys: Vec<i32> = vec![7, 13, 20, 33, 91, 140, 200, 255];
+    let bi = exe.index(&records, &keys)?;
+    println!("\nbitmap index ({} attrs x {} objects):", bi.num_attrs(), bi.num_objects());
+    for (i, &k) in keys.iter().enumerate() {
+        let row: String = (0..bi.num_objects())
+            .map(|j| if bi.get(i, j) { '1' } else { '.' })
+            .collect();
+        println!("  key {k:>3}: {row}");
+    }
+
+    // 3. The golden model agrees bit-for-bit.
+    let golden = BicCore::new(BicConfig::CHIP).index(&records, &keys);
+    assert_eq!(bi, golden);
+    println!("\ngolden model agreement: OK");
+
+    // 4. Multi-dimensional query (paper Fig. 1): key0 AND key2 AND NOT key5.
+    let q = Query::attr(0).and(Query::attr(2)).and(Query::attr(5).not());
+    let hits = q.eval(&bi)?;
+    println!(
+        "query key[0] AND key[2] AND NOT key[5]: objects {:?}",
+        hits.iter_ones().collect::<Vec<_>>()
+    );
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python never appears on the
+request path. Interchange format is HLO text, NOT a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs, under --out (default: ../artifacts):
+  bic_<name>.hlo.txt       one per BIC model variant (fused hot path)
+  bic_<name>_twostep.hlo.txt  fusion-ablation variant (chip + batch only)
+  query_<name>.hlo.txt     query evaluator matched to the variant's (M, NW)
+  coalesce<b>_<name>.hlo.txt  vmap'd multi-batch variant
+  manifest.txt             line-oriented manifest consumed by rust runtime/
+  manifest.json            the same, for humans/tools
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+WORD_BITS = 32
+
+# (name, N records, W words/record, M keys). `chip` is the fabricated
+# configuration (paper §IV: 16 records x 32 words, 8 keys); `fpga` is the
+# pre-shrink configuration the chip was cut down from (256 records x 256
+# words, 16 keys); `batch` is the coordinator's default workload unit;
+# `large` is the throughput-bench shape.
+VARIANTS = [
+    ("chip", 16, 32, 8),
+    ("fpga", 256, 256, 16),
+    ("batch", 256, 32, 16),
+    ("large", 2048, 32, 64),
+]
+
+# Variants that also get a two-step (unfused) artifact, for the fusion
+# ablation in EXPERIMENTS.md §Perf.
+TWOSTEP = {"chip", "batch"}
+
+# Variants that also get the MXU-formulation artifact (DESIGN.md §6).
+MXU = {"chip", "batch"}
+
+# Multi-batch coalescing factors (vmap'd artifact) per variant.
+COALESCE = {"batch": 4}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def nw_of(n: int) -> int:
+    return (n + WORD_BITS - 1) // WORD_BITS
+
+
+def lower_bic(n, w, m):
+    recs = _spec((n, w), jnp.int32)
+    keys = _spec((m,), jnp.int32)
+    return to_hlo_text(jax.jit(model.bic_index).lower(recs, keys))
+
+
+def lower_bic_twostep(n, w, m):
+    recs = _spec((n, w), jnp.int32)
+    keys = _spec((m,), jnp.int32)
+    return to_hlo_text(jax.jit(model.bic_index_twostep).lower(recs, keys))
+
+
+def lower_bic_mxu(n, w, m):
+    recs = _spec((n, w), jnp.int32)
+    keys = _spec((m,), jnp.int32)
+    return to_hlo_text(jax.jit(model.bic_index_mxu).lower(recs, keys))
+
+
+def lower_query(m, nw):
+    bi = _spec((m, nw), jnp.uint32)
+    mask = _spec((m,), jnp.int32)
+    return to_hlo_text(jax.jit(model.query_eval).lower(bi, mask, mask))
+
+
+def lower_coalesce(b, n, w, m):
+    recs = _spec((b, n, w), jnp.int32)
+    keys = _spec((m,), jnp.int32)
+    return to_hlo_text(jax.jit(model.batch_index).lower(recs, keys))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated variant names to build"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest_lines = []
+    manifest_json = {"bic": [], "twostep": [], "query": [], "coalesce": []}
+
+    for name, n, w, m in VARIANTS:
+        if only and name not in only:
+            continue
+        nw = nw_of(n)
+
+        fname = f"bic_{name}.hlo.txt"
+        _write(args.out, fname, lower_bic(n, w, m))
+        manifest_lines.append(
+            f"bic name={name} file={fname} n={n} w={w} m={m} nw={nw}"
+        )
+        manifest_json["bic"].append(
+            {"name": name, "file": fname, "n": n, "w": w, "m": m, "nw": nw}
+        )
+
+        if name in TWOSTEP:
+            fname = f"bic_{name}_twostep.hlo.txt"
+            _write(args.out, fname, lower_bic_twostep(n, w, m))
+            manifest_lines.append(
+                f"twostep name={name} file={fname} n={n} w={w} m={m} nw={nw}"
+            )
+            manifest_json["twostep"].append(
+                {"name": name, "file": fname, "n": n, "w": w, "m": m, "nw": nw}
+            )
+
+        if name in MXU:
+            fname = f"bic_{name}_mxu.hlo.txt"
+            _write(args.out, fname, lower_bic_mxu(n, w, m))
+            manifest_lines.append(
+                f"mxu name={name} file={fname} n={n} w={w} m={m} nw={nw}"
+            )
+            manifest_json.setdefault("mxu", []).append(
+                {"name": name, "file": fname, "n": n, "w": w, "m": m, "nw": nw}
+            )
+
+        fname = f"query_{name}.hlo.txt"
+        _write(args.out, fname, lower_query(m, nw))
+        manifest_lines.append(f"query name={name} file={fname} m={m} nw={nw}")
+        manifest_json["query"].append(
+            {"name": name, "file": fname, "m": m, "nw": nw}
+        )
+
+        if name in COALESCE:
+            b = COALESCE[name]
+            fname = f"coalesce{b}_{name}.hlo.txt"
+            _write(args.out, fname, lower_coalesce(b, n, w, m))
+            manifest_lines.append(
+                f"coalesce name={name} file={fname} b={b} n={n} w={w} m={m} nw={nw}"
+            )
+            manifest_json["coalesce"].append(
+                {"name": name, "file": fname, "b": b, "n": n, "w": w,
+                 "m": m, "nw": nw}
+            )
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest_json, f, indent=2)
+    print(f"wrote {len(manifest_lines)} artifacts to {args.out}")
+
+
+def _write(out_dir: str, fname: str, text: str) -> None:
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars")
+
+
+if __name__ == "__main__":
+    main()

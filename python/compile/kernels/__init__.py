@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for the BIC compute hot-spot (+ their jnp oracle).
+
+- ``cam_match``   — CAM content-match as a tiled compare-and-reduce.
+- ``bit_pack``    — TM output stage: bit matrix -> packed u32 words.
+- ``fused_index`` — match+pack fused (the shipped hot path).
+- ``ref``         — pure-jnp semantic oracle for all of the above.
+"""
+
+from .bit_pack import bit_pack
+from .cam_match import cam_match
+from .fused_index import fused_index
+
+__all__ = ["bit_pack", "cam_match", "fused_index"]

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: bit packing — the transpose-matrix (TM) output stage.
+
+The chip's TM walks the row buffer and emits the bitmap column-by-column;
+the packed u32 words here are the software contract for that output format
+(LSB-first, word w bit j <=> column w*32+j — see ref.py).
+
+In the kernel the "transpose" is free: the match kernel already produces
+the bitmap in (keys, records) = (M, N) layout, so packing is a tiled
+weighted reduction along the last axis — a (TILE_G, 32) x (32,) contraction
+per output word, executed on the VPU. BlockSpec tiles are (TILE_M rows x
+TILE_G output words), i.e. (TILE_M, TILE_G*32) input bits staged in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import WORD_BITS
+
+DEFAULT_TILE_M = 8
+DEFAULT_TILE_G = 8  # output words per tile -> 256 input bits
+
+
+def _pack_kernel(bits_ref, out_ref):
+    bits = bits_ref[...]  # (TM, TG*32) of 0/1 i32
+    tm, tg32 = bits.shape
+    tg = tg32 // WORD_BITS
+    grouped = bits.astype(jnp.uint32).reshape(tm, tg, WORD_BITS)
+    weights = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    )
+    out_ref[...] = jnp.sum(grouped * weights[None, None, :], axis=-1,
+                           dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_g"))
+def bit_pack(
+    bits: jnp.ndarray,
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+    tile_g: int = DEFAULT_TILE_G,
+) -> jnp.ndarray:
+    """Pack i32[M, N] of 0/1 into u32[M, ceil(N/32)], LSB-first.
+
+    Columns beyond N read as 0 (zero padding), matching the Rust bitmap's
+    trailing-word semantics.
+    """
+    m, n = bits.shape
+    nw = (n + WORD_BITS - 1) // WORD_BITS
+    tile_m = min(tile_m, m)
+    tile_g = min(tile_g, max(nw, 1))
+    mp = _round_up(m, tile_m)
+    gw = _round_up(nw, tile_g)
+    bits_p = jnp.pad(
+        bits, ((0, mp - m), (0, gw * WORD_BITS - n)), constant_values=0
+    )
+
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=(mp // tile_m, gw // tile_g),
+        in_specs=[pl.BlockSpec((tile_m, tile_g * WORD_BITS), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tile_m, tile_g), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, gw), jnp.uint32),
+        interpret=True,
+    )(bits_p)
+    return out[:m, :nw]
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to

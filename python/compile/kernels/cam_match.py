@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: CAM match — the chip's compute hot-spot.
+
+Hardware adaptation (DESIGN.md §6). The ASIC's CAM holds one record (W
+8-bit words) in RAM-mapped CAM blocks and streams M keys past it, emitting
+one match bit per key per record: a content match. On a TPU there is no CAM;
+the transferable insight is that content match over a small alphabet is a
+*dense compare-and-reduce*, which maps directly onto the VPU:
+
+  - a `(TILE_N, W)` block of records is staged in VMEM (the scratchpad
+    analogue of the chip's CAM RAM bits) by the BlockSpec index map — the
+    HBM->VMEM schedule plays the role of the chip's record-load step;
+  - the key tile `(TILE_M,)` is broadcast against it, `==` compared, and
+    `any`-reduced along W — the vectorized equivalent of the CAM's
+    parallel match lines;
+  - the grid walks (key tiles x record tiles), so each record block is
+    reused across all key tiles while resident, mirroring the chip's
+    "record loaded once, keys streamed" loop nest.
+
+VMEM footprint per grid step (i32): TILE_N*W + TILE_M + TILE_M*TILE_N
+words; for the default TILE_M=8, TILE_N=128, W=32 that is ~21 KiB — far
+under the ~16 MiB VMEM budget, leaving room for the double-buffered
+pipeline the Pallas runtime inserts.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on-TPU behaviour is *estimated* in DESIGN.md / EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_M = 8
+DEFAULT_TILE_N = 128
+
+
+def _match_kernel(keys_ref, recs_ref, out_ref):
+    """One (TILE_M, TILE_N) output tile: out[i, j] = any_w(recs[j,w]==keys[i])."""
+    keys = keys_ref[...]  # (TM,)
+    recs = recs_ref[...]  # (TN, W)
+    # (TM, TN, W) equality cube reduced over W. The VPU executes this as
+    # W vectorized compares + OR-accumulate; no MXU involvement.
+    eq = recs[None, :, :] == keys[:, None, None]
+    out_ref[...] = jnp.any(eq, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def cam_match(
+    records: jnp.ndarray,
+    keys: jnp.ndarray,
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+    tile_n: int = DEFAULT_TILE_N,
+) -> jnp.ndarray:
+    """BI[i, j] = 1 iff record j contains key i.
+
+    records: i32[N, W] (pad value -1), keys: i32[M] -> i32[M, N] of 0/1.
+    M and N need not be tile multiples; inputs are padded and the output
+    sliced back.
+    """
+    m = keys.shape[0]
+    n, w = records.shape
+    tile_m = min(tile_m, _round_up(m, 1))
+    tile_n = min(tile_n, _round_up(n, 1))
+    mp = _round_up(m, tile_m)
+    np_ = _round_up(n, tile_n)
+    # Key padding uses -2 (records pad with -1) so padding never matches.
+    keys_p = jnp.pad(keys, (0, mp - m), constant_values=-2)
+    recs_p = jnp.pad(records, ((0, np_ - n), (0, 0)), constant_values=-1)
+
+    out = pl.pallas_call(
+        _match_kernel,
+        grid=(mp // tile_m, np_ // tile_n),
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(keys_p, recs_p)
+    return out[:m, :n]
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: CAM match, MXU formulation.
+
+The VPU formulation (`cam_match.py`) does W vectorized compares per key
+tile. For wide alphabets / many keys the *systolic-array* formulation is
+better on a real TPU: one-hot encode both sides over the 256-word
+alphabet and contract —
+
+    hist[n, a]  = 1 iff record n contains alphabet word a   (W-compare)
+    onehot[m,a] = 1 iff key m is alphabet word a
+    BI          = onehot @ hist^T   (bf16 matmul on the MXU) > 0
+
+The compare work collapses into a (M, 256) x (256, N) matmul that the MXU
+executes at ~256 MACs/cycle/lane, while the VPU only builds the one-hot
+operands. VMEM per grid step (defaults TILE_M=8, TILE_N=128, bf16):
+8*256 + 128*256 + 8*128 halfwords ~ 69 KiB — comfortably resident.
+
+On this image the kernel runs under interpret=True (CPU), so the MXU win
+is *estimated* in DESIGN.md §Perf; correctness is what tests assert here,
+and both formulations must agree bit-for-bit with ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ALPHABET = 256
+DEFAULT_TILE_M = 8
+DEFAULT_TILE_N = 128
+
+
+def _mxu_kernel(keys_ref, recs_ref, out_ref):
+    keys = keys_ref[...]  # (TM,) i32
+    recs = recs_ref[...]  # (TN, W) i32
+    tn, _w = recs.shape
+    alpha = jnp.arange(ALPHABET, dtype=jnp.int32)
+    # hist[n, a]: record n contains word a. Padding (-1) never equals a.
+    hist = jnp.any(recs[:, :, None] == alpha[None, None, :], axis=1)
+    # onehot[m, a]: key m == word a. Pad keys (-2) produce a zero row.
+    onehot = keys[:, None] == alpha[None, :]
+    # The MXU contraction (bf16 accumulate is exact for 0/1 entries up to
+    # W <= 256 < 2^8, well inside bf16's integer range).
+    acc = jax.lax.dot_general(
+        onehot.astype(jnp.bfloat16),
+        hist.astype(jnp.bfloat16),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TM, TN)
+    del tn
+    out_ref[...] = (acc > 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def cam_match_mxu(
+    records: jnp.ndarray,
+    keys: jnp.ndarray,
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+    tile_n: int = DEFAULT_TILE_N,
+) -> jnp.ndarray:
+    """MXU-formulated CAM match: same contract as `cam_match`."""
+    m = keys.shape[0]
+    n, w = records.shape
+    tile_m = min(tile_m, max(m, 1))
+    tile_n = min(tile_n, max(n, 1))
+    mp = _round_up(m, tile_m)
+    np_ = _round_up(n, tile_n)
+    keys_p = jnp.pad(keys, (0, mp - m), constant_values=-2)
+    recs_p = jnp.pad(records, ((0, np_ - n), (0, 0)), constant_values=-1)
+
+    out = pl.pallas_call(
+        _mxu_kernel,
+        grid=(mp // tile_m, np_ // tile_n),
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(keys_p, recs_p)
+    return out[:m, :n]
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: fused CAM-match + bit-pack — the optimized hot path.
+
+Fusing the match and the pack keeps the intermediate (M, N) bit matrix in
+VMEM/registers instead of round-tripping it through HBM: for the `large`
+variant (N=2048, M=64) that intermediate is 512 KiB of i32 that never
+materializes. This is the kernel the shipped artifacts are built from;
+`cam_match` + `bit_pack` remain as the two-step reference path (and as an
+ablation point — see EXPERIMENTS.md §Perf).
+
+Grid: (key tiles, record-word-group tiles). Each step stages
+(TILE_G*32, W) records + (TILE_M,) keys in VMEM and writes a
+(TILE_M, TILE_G) packed-u32 tile. VMEM per step for the defaults
+(TILE_M=8, TILE_G=4, W=32) is ~17 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import WORD_BITS
+
+DEFAULT_TILE_M = 8
+DEFAULT_TILE_G = 4  # packed words per tile -> TILE_G*32 records per step
+
+
+def _fused_kernel(keys_ref, recs_ref, out_ref):
+    keys = keys_ref[...]  # (TM,)
+    recs = recs_ref[...]  # (TG*32, W)
+    tm = keys.shape[0]
+    tg32 = recs.shape[0]
+    tg = tg32 // WORD_BITS
+    # Match: (TM, TG*32) bits, kept entirely on-chip.
+    eq = recs[None, :, :] == keys[:, None, None]
+    bits = jnp.any(eq, axis=-1).astype(jnp.uint32)
+    # Pack: LSB-first weighted reduction along each 32-column group.
+    grouped = bits.reshape(tm, tg, WORD_BITS)
+    weights = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    )
+    out_ref[...] = jnp.sum(grouped * weights[None, None, :], axis=-1,
+                           dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_g"))
+def fused_index(
+    records: jnp.ndarray,
+    keys: jnp.ndarray,
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+    tile_g: int = DEFAULT_TILE_G,
+) -> jnp.ndarray:
+    """records i32[N, W] (pad -1), keys i32[M] -> packed bitmap u32[M, ceil(N/32)]."""
+    m = keys.shape[0]
+    n, w = records.shape
+    nw = (n + WORD_BITS - 1) // WORD_BITS
+    tile_m = min(tile_m, m)
+    tile_g = min(tile_g, max(nw, 1))
+    mp = _round_up(m, tile_m)
+    gw = _round_up(nw, tile_g)
+    keys_p = jnp.pad(keys, (0, mp - m), constant_values=-2)
+    recs_p = jnp.pad(
+        records, ((0, gw * WORD_BITS - n), (0, 0)), constant_values=-1
+    )
+
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid=(mp // tile_m, gw // tile_g),
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_g * WORD_BITS, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_g), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, gw), jnp.uint32),
+        interpret=True,
+    )(keys_p, recs_p)
+    return out[:m, :nw]
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to

@@ -1,0 +1,71 @@
+"""Pure-`jnp` oracle for every Pallas kernel in this package.
+
+These are the *semantic* definitions of the BIC datapath; the Pallas
+kernels (and, transitively, the Rust golden model and the cycle-level
+simulator) are tested against them.
+
+Bit layout convention (shared with the Rust `bic::bitmap` module):
+  packed word `w` of row `i`, bit `j` (LSB-first)  <=>  BI[i, w*32 + j].
+"""
+
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def match_ref(records: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """CAM match semantics: BI[i, j] = 1 iff record j contains key i.
+
+    records: i32[N, W] — N records of W 8-bit words (values 0..255; padding
+             slots use -1, which can never equal a key).
+    keys:    i32[M]
+    returns: i32[M, N] of 0/1 match bits.
+    """
+    # (M, N, W) equality cube, reduced over the word axis.
+    eq = records[None, :, :] == keys[:, None, None]
+    return jnp.any(eq, axis=-1).astype(jnp.int32)
+
+
+def pack_ref(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a 0/1 bit matrix i32[M, N] into u32[M, N // 32], LSB-first.
+
+    N must be a multiple of 32 (the model pads before calling).
+    """
+    m, n = bits.shape
+    assert n % WORD_BITS == 0, f"N={n} not a multiple of {WORD_BITS}"
+    grouped = bits.astype(jnp.uint32).reshape(m, n // WORD_BITS, WORD_BITS)
+    weights = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    )
+    return jnp.sum(grouped * weights[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def index_ref(records: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Whole-pipeline oracle: records, keys -> packed bitmap u32[M, N/32]."""
+    return pack_ref(match_ref(records, keys))
+
+
+def query_ref(
+    bi: jnp.ndarray, include: jnp.ndarray, exclude: jnp.ndarray
+) -> jnp.ndarray:
+    """Multi-dimensional query oracle (the Fig. 1 use case).
+
+    bi:      u32[M, NW] packed bitmap index.
+    include: i32[M] 0/1 — rows that must all be set (AND).
+    exclude: i32[M] 0/1 — rows whose objects are rejected (AND NOT).
+    returns: u32[NW] — packed result bitmap over objects.
+
+    Semantics: AND_{i: include_i} BI_i  &  ~( OR_{i: exclude_i} BI_i ).
+    With no include rows the AND identity (all-ones) is returned, matching
+    the Rust query engine.
+    """
+    ones = jnp.uint32(0xFFFFFFFF)
+    inc_rows = jnp.where(include[:, None] != 0, bi, ones)
+    exc_rows = jnp.where(exclude[:, None] != 0, bi, jnp.uint32(0))
+    inc_acc = inc_rows[0]
+    for i in range(1, bi.shape[0]):
+        inc_acc = inc_acc & inc_rows[i]
+    exc_acc = exc_rows[0]
+    for i in range(1, bi.shape[0]):
+        exc_acc = exc_acc | exc_rows[i]
+    return inc_acc & ~exc_acc

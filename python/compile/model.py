@@ -1,0 +1,85 @@
+"""L2 — the BIC pipeline as a JAX compute graph, calling the L1 kernels.
+
+The ASIC pipeline (Fig. 3 of the paper) is: CAM match (record x key ->
+bit) -> row buffer -> transpose matrix -> M x N bitmap, emitted as packed
+words. Here that whole pipeline is one jitted function producing the packed
+bitmap directly; the buffer/transpose stages exist in the tiling/layout of
+the kernels rather than as materialized arrays (DESIGN.md §6).
+
+These functions are what `aot.py` lowers to HLO text; the Rust runtime
+executes the artifacts and never imports Python.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bit_pack, cam_match, fused_index
+from .kernels.cam_match_mxu import cam_match_mxu
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_g"))
+def bic_index(records, keys, *, tile_m=8, tile_g=4):
+    """records i32[N, W], keys i32[M] -> packed bitmap u32[M, ceil(N/32)].
+
+    The shipped single-kernel hot path (fused match+pack).
+    """
+    return fused_index(records, keys, tile_m=tile_m, tile_g=tile_g)
+
+
+@jax.jit
+def bic_index_twostep(records, keys):
+    """Two-kernel reference path: cam_match then bit_pack.
+
+    Functionally identical to `bic_index`; kept as the fusion ablation
+    (EXPERIMENTS.md §Perf) and as a second implementation for differential
+    testing.
+    """
+    return bit_pack(cam_match(records, keys))
+
+
+@jax.jit
+def bic_index_mxu(records, keys):
+    """MXU-formulation path: one-hot matmul match then pack.
+
+    The systolic-array ablation (DESIGN.md §6): identical semantics,
+    different hardware mapping. Shipped as a separate artifact so the
+    Rust side can A/B the two formulations.
+    """
+    return bit_pack(cam_match_mxu(records, keys))
+
+
+@jax.jit
+def query_eval(bi, include, exclude):
+    """Multi-dimensional query over a packed bitmap index (Fig. 1).
+
+    bi u32[M, NW]; include/exclude i32[M] 0/1 masks.
+    result u32[NW] = AND_{include} BI_i & ~(OR_{exclude} BI_i).
+
+    Pure jnp — the bitwise algebra is memory-bound and fuses into a single
+    XLA loop; a Pallas kernel would add nothing on any backend.
+    """
+    ones = jnp.uint32(0xFFFFFFFF)
+    inc_rows = jnp.where(include[:, None] != 0, bi, ones)
+    exc_rows = jnp.where(exclude[:, None] != 0, bi, jnp.uint32(0))
+    # lax reduces fuse to single passes; M is static at trace time.
+    inc_acc = jax.lax.reduce(
+        inc_rows, jnp.uint32(0xFFFFFFFF), jax.lax.bitwise_and, (0,)
+    )
+    exc_acc = jax.lax.reduce(
+        exc_rows, jnp.uint32(0), jax.lax.bitwise_or, (0,)
+    )
+    return inc_acc & ~exc_acc
+
+
+@jax.jit
+def batch_index(records_batch, keys):
+    """Multi-batch variant: records i32[B, N, W], keys i32[M] ->
+    u32[B, M, ceil(N/32)].
+
+    `vmap` over the fused kernel — this is the artifact the coordinator's
+    multi-core driver uses when it coalesces several batches into one
+    PJRT execution (ablation: per-batch vs coalesced dispatch).
+    """
+    return jax.vmap(lambda r: fused_index(r, keys))(records_batch)

@@ -1,0 +1,25 @@
+"""Shared helpers + hypothesis strategies for the kernel/model test suite."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import strategies as st
+
+# The chip's alphabet: 8-bit words. -1 is the record pad value, -2 the key
+# pad value; both are outside the alphabet by construction.
+ALPHABET = 256
+
+
+def make_records(rng: np.random.Generator, n: int, w: int) -> jnp.ndarray:
+    return jnp.asarray(rng.integers(0, ALPHABET, (n, w)), jnp.int32)
+
+
+def make_keys(rng: np.random.Generator, m: int) -> jnp.ndarray:
+    return jnp.asarray(rng.integers(0, ALPHABET, (m,)), jnp.int32)
+
+
+# Shape strategies. Interpret-mode Pallas is slow, so sizes are bounded but
+# deliberately straddle the tile boundaries (8, 32, 128) used by the kernels.
+ns = st.integers(min_value=1, max_value=160)
+ws = st.integers(min_value=1, max_value=40)
+ms = st.integers(min_value=1, max_value=24)
+seeds = st.integers(min_value=0, max_value=2**32 - 1)

@@ -1,0 +1,83 @@
+"""AOT artifact tests: lowering produces parseable HLO text with the
+expected parameter/result signature, and the lowered computation still
+computes the oracle's answer when executed through XLA from the text.
+
+This is the Python-side half of the interchange contract; the Rust-side
+half is `rust/tests/runtime_roundtrip.rs`.
+"""
+
+import re
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from .conftest import make_keys, make_records
+
+
+@pytest.fixture(scope="module")
+def chip_hlo():
+    return aot.lower_bic(16, 32, 8)
+
+
+def test_hlo_text_has_entry_and_params(chip_hlo):
+    assert "ENTRY" in chip_hlo
+    # Two parameters: records s32[16,32], keys s32[8].
+    assert re.search(r"parameter\(0\)", chip_hlo)
+    assert re.search(r"parameter\(1\)", chip_hlo)
+    assert "s32[16,32]" in chip_hlo
+    assert "s32[8]" in chip_hlo
+
+
+def test_hlo_output_is_tuple_of_packed_u32(chip_hlo):
+    # return_tuple=True -> ENTRY result is a 1-tuple of u32[8,1].
+    assert re.search(r"\(u32\[8,1\]", chip_hlo)
+
+
+def test_hlo_has_no_custom_calls(chip_hlo):
+    """interpret=True must lower to plain HLO — a Mosaic custom-call would
+    be unloadable by the CPU PJRT client on the Rust side."""
+    assert "custom-call" not in chip_hlo
+
+
+def test_query_hlo_signature():
+    text = aot.lower_query(8, 1)
+    assert "u32[8,1]" in text
+    assert "s32[8]" in text
+
+
+def test_lowered_text_reexecutes_correctly():
+    """Round-trip the HLO text through xla_client and compare to the oracle —
+    the same path the Rust runtime takes (text -> parse -> compile -> run)."""
+    import jax
+    from jax._src.lib import xla_client as xc
+
+    rng = np.random.default_rng(21)
+    recs, keys = make_records(rng, 16, 32), make_keys(rng, 8)
+    want = np.asarray(model.bic_index(recs, keys))
+
+    text = aot.lower_bic(16, 32, 8)
+    # Parse the text back into a computation and execute on the CPU backend.
+    mod = xc._xla.hlo_module_from_text(text)
+    comp = xc.XlaComputation(mod.as_serialized_hlo_module_proto())
+    client = jax.devices("cpu")[0].client
+    mlir = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    exe = client.compile_and_load(mlir, list(client.devices()))
+    out = exe.execute(
+        [client.buffer_from_pyval(np.asarray(recs)),
+         client.buffer_from_pyval(np.asarray(keys))]
+    )
+    got = np.asarray(out[0])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_variant_table_is_consistent():
+    for name, n, w, m in aot.VARIANTS:
+        assert n >= 1 and w >= 1 and m >= 1
+        assert aot.nw_of(n) == (n + 31) // 32
+    names = [v[0] for v in aot.VARIANTS]
+    assert len(names) == len(set(names))
+    assert aot.TWOSTEP <= set(names)
+    assert set(aot.COALESCE) <= set(names)

@@ -1,0 +1,75 @@
+"""Pallas `bit_pack` vs the jnp oracle + bit-layout contract tests."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bit_pack
+from compile.kernels import ref
+
+
+def _np_pack(bits: np.ndarray) -> np.ndarray:
+    """Independent numpy implementation of the LSB-first packing contract."""
+    m, n = bits.shape
+    nw = (n + 31) // 32
+    out = np.zeros((m, nw), np.uint32)
+    for i in range(m):
+        for j in range(n):
+            if bits[i, j]:
+                out[i, j // 32] |= np.uint32(1) << np.uint32(j % 32)
+    return out
+
+
+def test_single_bit_positions():
+    """Bit j of word w must be column w*32+j — the Rust-side contract."""
+    for col in [0, 1, 31, 32, 33, 63]:
+        bits = np.zeros((1, 64), np.int32)
+        bits[0, col] = 1
+        got = np.asarray(bit_pack(jnp.asarray(bits)))
+        want = np.zeros((1, 2), np.uint32)
+        want[0, col // 32] = np.uint32(1) << np.uint32(col % 32)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_all_ones_row():
+    bits = jnp.ones((2, 96), jnp.int32)
+    got = np.asarray(bit_pack(bits))
+    np.testing.assert_array_equal(got, np.full((2, 3), 0xFFFFFFFF, np.uint32))
+
+
+def test_ragged_tail_zero_padded():
+    """Columns past N must read as 0 in the trailing word."""
+    bits = jnp.ones((1, 33), jnp.int32)
+    got = np.asarray(bit_pack(bits))
+    np.testing.assert_array_equal(got, [[0xFFFFFFFF, 0x1]])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 20),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matches_numpy_oracle(m, n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (m, n)).astype(np.int32)
+    got = np.asarray(bit_pack(jnp.asarray(bits)))
+    np.testing.assert_array_equal(got, _np_pack(bits))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 12), g=st.integers(1, 6), seed=st.integers(0, 2**32 - 1))
+def test_matches_ref_on_aligned_shapes(m, g, seed):
+    rng = np.random.default_rng(seed)
+    bits = jnp.asarray(rng.integers(0, 2, (m, g * 32)), jnp.int32)
+    np.testing.assert_array_equal(bit_pack(bits), ref.pack_ref(bits))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_tile_size_invariance(seed):
+    rng = np.random.default_rng(seed)
+    bits = jnp.asarray(rng.integers(0, 2, (13, 130)), jnp.int32)
+    base = bit_pack(bits)
+    for tm, tg in [(1, 1), (5, 3), (8, 8), (13, 2)]:
+        np.testing.assert_array_equal(bit_pack(bits, tile_m=tm, tile_g=tg), base)

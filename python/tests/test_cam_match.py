@@ -1,0 +1,105 @@
+"""Pallas `cam_match` vs the jnp oracle, plus CAM semantic edge cases."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import cam_match
+from compile.kernels import ref
+from .conftest import make_keys, make_records, ms, ns, seeds, ws
+
+
+def test_chip_configuration():
+    """The fabricated configuration: 16 records x 32 words, 8 keys."""
+    rng = np.random.default_rng(1)
+    recs, keys = make_records(rng, 16, 32), make_keys(rng, 8)
+    got = cam_match(recs, keys)
+    want = ref.match_ref(recs, keys)
+    np.testing.assert_array_equal(got, want)
+    assert got.shape == (8, 16)
+    assert got.dtype == jnp.int32
+
+
+def test_known_tiny_example():
+    """Hand-checked: record contents drive exactly the expected bits."""
+    recs = jnp.asarray([[5, 7], [7, 7], [0, 1]], jnp.int32)  # 3 records, W=2
+    keys = jnp.asarray([7, 5, 9], jnp.int32)
+    got = np.asarray(cam_match(recs, keys))
+    want = np.asarray(
+        [
+            [1, 1, 0],  # key 7 in records 0, 1
+            [1, 0, 0],  # key 5 in record 0 only
+            [0, 0, 0],  # key 9 nowhere
+        ]
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fig1_example():
+    """The paper's Fig. 1: 9 objects x 5 attributes, bits as drawn."""
+    # Object j contains attribute i -> encode each object as the set of
+    # attributes it contains (one word per attribute present; pad with -1).
+    membership = {
+        0: [2, 4], 1: [1], 2: [2, 5], 3: [3], 4: [2, 4],
+        5: [1, 5], 6: [4], 7: [2], 8: [3, 4],
+    }
+    w = 3
+    recs = np.full((9, w), -1, np.int32)
+    for j, attrs in membership.items():
+        recs[j, : len(attrs)] = attrs
+    keys = jnp.arange(1, 6, dtype=jnp.int32)  # attributes A1..A5
+    bi = np.asarray(cam_match(jnp.asarray(recs), keys))
+    # Row A2 AND A4 AND NOT A5 -> objects {0, 4} (the query in §II-A).
+    hit = bi[1] & bi[3] & (1 - bi[4])
+    np.testing.assert_array_equal(hit, [1, 0, 0, 0, 1, 0, 0, 0, 0])
+
+
+def test_no_false_match_on_padding():
+    """Records padded with -1 must never match any real key."""
+    recs = jnp.full((4, 8), -1, jnp.int32)
+    keys = jnp.asarray([0, 1, 255], jnp.int32)
+    assert int(cam_match(recs, keys).sum()) == 0
+
+
+def test_every_key_matches_when_present():
+    recs = jnp.tile(jnp.arange(8, dtype=jnp.int32), (3, 1))
+    keys = jnp.arange(8, dtype=jnp.int32)
+    got = cam_match(recs, keys)
+    assert int(got.sum()) == 8 * 3
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=ns, w=ws, m=ms, seed=seeds)
+def test_matches_oracle_on_random_shapes(n, w, m, seed):
+    rng = np.random.default_rng(seed)
+    recs, keys = make_records(rng, n, w), make_keys(rng, m)
+    np.testing.assert_array_equal(cam_match(recs, keys), ref.match_ref(recs, keys))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds)
+def test_tile_size_invariance(seed):
+    """The tiling is an implementation detail: results must not depend on it."""
+    rng = np.random.default_rng(seed)
+    recs, keys = make_records(rng, 50, 9), make_keys(rng, 11)
+    base = cam_match(recs, keys)
+    for tm, tn in [(1, 1), (3, 7), (8, 128), (16, 32)]:
+        np.testing.assert_array_equal(
+            cam_match(recs, keys, tile_m=tm, tile_n=tn), base
+        )
+
+
+def test_duplicate_keys_give_duplicate_rows():
+    rng = np.random.default_rng(3)
+    recs = make_records(rng, 20, 6)
+    keys = jnp.asarray([42, 42, 7], jnp.int32)
+    got = np.asarray(cam_match(recs, keys))
+    np.testing.assert_array_equal(got[0], got[1])
+
+
+@pytest.mark.parametrize("n,w,m", [(1, 1, 1), (1, 40, 24), (160, 1, 1)])
+def test_degenerate_shapes(n, w, m):
+    rng = np.random.default_rng(n * 1000 + w * 10 + m)
+    recs, keys = make_records(rng, n, w), make_keys(rng, m)
+    np.testing.assert_array_equal(cam_match(recs, keys), ref.match_ref(recs, keys))

@@ -1,0 +1,40 @@
+"""MXU-formulation CAM match vs the VPU formulation and the oracle."""
+
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import cam_match
+from compile.kernels.cam_match_mxu import cam_match_mxu
+from compile.kernels import ref
+from .conftest import make_keys, make_records, ms, ns, seeds, ws
+
+
+def test_chip_configuration():
+    rng = np.random.default_rng(0)
+    recs, keys = make_records(rng, 16, 32), make_keys(rng, 8)
+    np.testing.assert_array_equal(cam_match_mxu(recs, keys), ref.match_ref(recs, keys))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=ns, w=ws, m=ms, seed=seeds)
+def test_mxu_equals_vpu_formulation(n, w, m, seed):
+    rng = np.random.default_rng(seed)
+    recs, keys = make_records(rng, n, w), make_keys(rng, m)
+    np.testing.assert_array_equal(cam_match_mxu(recs, keys), cam_match(recs, keys))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=seeds)
+def test_tile_invariance(seed):
+    rng = np.random.default_rng(seed)
+    recs, keys = make_records(rng, 45, 7), make_keys(rng, 10)
+    base = cam_match_mxu(recs, keys)
+    for tm, tn in [(1, 1), (5, 9), (10, 45)]:
+        np.testing.assert_array_equal(cam_match_mxu(recs, keys, tile_m=tm, tile_n=tn), base)
+
+
+def test_padding_never_matches():
+    import jax.numpy as jnp
+    recs = jnp.full((3, 4), -1, jnp.int32)
+    keys = jnp.asarray([0, 255], jnp.int32)
+    assert int(np.asarray(cam_match_mxu(recs, keys)).sum()) == 0

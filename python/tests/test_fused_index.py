@@ -1,0 +1,60 @@
+"""Fused match+pack kernel vs oracle and vs the two-step composition."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings
+
+from compile.kernels import bit_pack, cam_match, fused_index
+from compile.kernels import ref
+from .conftest import make_keys, make_records, ms, ns, seeds, ws
+
+
+def test_chip_configuration():
+    rng = np.random.default_rng(7)
+    recs, keys = make_records(rng, 16, 32), make_keys(rng, 8)
+    got = fused_index(recs, keys)
+    assert got.shape == (8, 1)  # 16 records pack into one u32 word
+    want = ref.pack_ref(
+        jnp.pad(ref.match_ref(recs, keys), ((0, 0), (0, 16)))
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=ns, w=ws, m=ms, seed=seeds)
+def test_fused_equals_twostep(n, w, m, seed):
+    """The fusion must be semantics-preserving for arbitrary shapes."""
+    rng = np.random.default_rng(seed)
+    recs, keys = make_records(rng, n, w), make_keys(rng, m)
+    fused = fused_index(recs, keys)
+    twostep = bit_pack(cam_match(recs, keys))
+    np.testing.assert_array_equal(fused, twostep)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=ns, m=ms, seed=seeds)
+def test_fused_matches_index_ref_on_aligned(n, m, seed):
+    rng = np.random.default_rng(seed)
+    n = ((n + 31) // 32) * 32  # oracle requires 32-aligned N
+    recs, keys = make_records(rng, n, 8), make_keys(rng, m)
+    np.testing.assert_array_equal(
+        fused_index(recs, keys), ref.index_ref(recs, keys)
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=seeds)
+def test_tile_size_invariance(seed):
+    rng = np.random.default_rng(seed)
+    recs, keys = make_records(rng, 70, 5), make_keys(rng, 9)
+    base = fused_index(recs, keys)
+    for tm, tg in [(1, 1), (3, 2), (8, 4), (9, 3)]:
+        np.testing.assert_array_equal(
+            fused_index(recs, keys, tile_m=tm, tile_g=tg), base
+        )
+
+
+def test_empty_match_is_all_zero_words():
+    recs = jnp.zeros((40, 4), jnp.int32)
+    keys = jnp.asarray([9, 10], jnp.int32)
+    assert int(np.asarray(fused_index(recs, keys)).sum()) == 0

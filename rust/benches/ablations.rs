@@ -1,0 +1,106 @@
+//! Design-choice ablations (DESIGN.md calls these out):
+//!   1. kernel fusion — fused match+pack vs the two-step artifact;
+//!   2. hardware formulation — VPU compare-reduce vs MXU one-hot matmul;
+//!   3. dispatch coalescing — 4 batches per PJRT call vs 4 calls;
+//!   4. compression — WAH vs roaring vs raw on the three content
+//!      distributions.
+
+use sotb_bic::bic::{BicConfig, Bitmap, RoaringBitmap, WahBitmap};
+use sotb_bic::coordinator::{ContentDist, WorkloadGen};
+use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
+use sotb_bic::substrate::bench::{group, Bench};
+use sotb_bic::substrate::rng::Xoshiro256;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::cpu().expect("PJRT");
+
+    // --- 1+2: fusion & formulation, on the batch geometry. ---
+    group("ablation: kernel fusion & formulation (batch: 256x32, 16 keys)");
+    let fused_v = manifest.find_bic("batch").unwrap();
+    let twostep_v = manifest.find_twostep("batch").unwrap();
+    let mxu_v = manifest.find_mxu("batch").unwrap();
+    let mut rng = Xoshiro256::seeded(1);
+    let recs: Vec<Vec<i32>> = (0..fused_v.n)
+        .map(|_| (0..fused_v.w).map(|_| rng.next_below(256) as i32).collect())
+        .collect();
+    let keys: Vec<i32> =
+        (0..fused_v.m).map(|_| rng.next_below(256) as i32).collect();
+    let bytes = (fused_v.n * fused_v.w) as u64;
+    for (label, v) in [("fused", fused_v), ("twostep", twostep_v), ("mxu", mxu_v)] {
+        let exe = BicExecutable::load(&rt, v).expect("compile");
+        // All three must agree before we time them.
+        let out = exe.index(&recs, &keys).unwrap();
+        let fused_exe = BicExecutable::load(&rt, fused_v).unwrap();
+        assert_eq!(out, fused_exe.index(&recs, &keys).unwrap(), "{label}");
+        Bench::new(format!("pjrt/{label}"))
+            .bytes(bytes)
+            .run(|| exe.index(&recs, &keys).unwrap());
+    }
+
+    // --- 3: dispatch coalescing. ---
+    group("ablation: dispatch coalescing (4 batches)");
+    let co_v = manifest.find_coalesce("batch").unwrap();
+    let exe_one = BicExecutable::load(&rt, fused_v).unwrap();
+    let exe_co = BicExecutable::load(&rt, co_v).unwrap();
+    let batches: Vec<Vec<Vec<i32>>> = (0..4)
+        .map(|_| {
+            (0..co_v.n)
+                .map(|_| (0..co_v.w).map(|_| rng.next_below(256) as i32).collect())
+                .collect()
+        })
+        .collect();
+    let batch_refs: Vec<&[Vec<i32>]> = batches.iter().map(|b| b.as_slice()).collect();
+    Bench::new("dispatch/4-separate-calls")
+        .bytes(4 * bytes)
+        .run(|| {
+            batches
+                .iter()
+                .map(|b| exe_one.index(b, &keys).unwrap())
+                .collect::<Vec<_>>()
+        });
+    Bench::new("dispatch/1-coalesced-call")
+        .bytes(4 * bytes)
+        .run(|| exe_co.index_coalesced(&batch_refs, &keys).unwrap());
+
+    // --- 4: compression on the three content distributions. ---
+    group("ablation: compression (row of 262k objects)");
+    for (name, dist) in [
+        ("uniform", ContentDist::Uniform),
+        ("zipf", ContentDist::Zipf { s: 1.2 }),
+        ("clustered", ContentDist::Clustered { spread: 16 }),
+    ] {
+        // Build one attribute row by indexing generated batches.
+        let cfg = BicConfig { n_records: 256, w_words: 8, m_keys: 16 };
+        let mut gen = WorkloadGen::new(cfg, dist, 3);
+        let mut core = sotb_bic::bic::BicCore::new(cfg);
+        let mut bits = Vec::new();
+        for _ in 0..1024 {
+            let b = gen.batch_at(0.0);
+            let bi = core.index(&b.records, &b.keys);
+            for j in 0..256 {
+                bits.push(bi.get(0, j));
+            }
+        }
+        let row = Bitmap::from_bools(&bits);
+        let wah = WahBitmap::compress(&row);
+        let roar = RoaringBitmap::from_bitmap(&row);
+        println!(
+            "{name}: raw {} B | WAH {} B ({:.2}x) | roaring {} B ({:.2}x) | density {:.3}",
+            row.len() / 8,
+            wah.compressed_bytes(),
+            wah.ratio(),
+            roar.compressed_bytes(),
+            (row.len() / 8) as f64 / roar.compressed_bytes() as f64,
+            row.count_ones() as f64 / row.len() as f64,
+        );
+        Bench::new(format!("compress/wah-{name}")).run(|| WahBitmap::compress(&row));
+        Bench::new(format!("compress/roaring-{name}"))
+            .run(|| RoaringBitmap::from_bitmap(&row));
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench target for Fig. 5: regenerates the die-features table (memory
+//! census + physical-design model) and times the structural census.
+
+use sotb_bic::bic::BicConfig;
+use sotb_bic::experiments::fig5;
+use sotb_bic::substrate::bench::{group, Bench};
+
+fn main() {
+    group("fig5: die features");
+    let r = fig5::run();
+    println!("{}", r.render());
+    Bench::new("fig5/census+physical-model").run(|| fig5::estimate(&BicConfig::CHIP));
+    Bench::new("fig5/census-fpga-geometry").run(|| fig5::estimate(&BicConfig::FPGA));
+}

@@ -1,0 +1,12 @@
+//! Bench target for Fig. 6: regenerates the frequency/power-vs-Vdd table
+//! and times the underlying model sweep.
+
+use sotb_bic::experiments::fig6;
+use sotb_bic::substrate::bench::{group, Bench};
+
+fn main() {
+    group("fig6: frequency & active power vs Vdd");
+    let r = fig6::run();
+    println!("{}", r.render());
+    Bench::new("fig6/model-sweep").run(fig6::series);
+}

@@ -1,0 +1,44 @@
+//! Bench target for Fig. 7: regenerates the energy-per-cycle table and
+//! times the sweep; also attributes one simulated batch's energy across
+//! blocks (the activity-weighted split the figure aggregates).
+
+use sotb_bic::bic::BicConfig;
+use sotb_bic::experiments::fig7;
+use sotb_bic::power::{attribute, delay, Supply};
+use sotb_bic::sim::CoreSim;
+use sotb_bic::substrate::bench::{group, Bench};
+use sotb_bic::substrate::rng::Xoshiro256;
+use sotb_bic::substrate::stats::format_si;
+
+fn main() {
+    group("fig7: energy per cycle vs Vdd");
+    let r = fig7::run();
+    println!("{}", r.render());
+    Bench::new("fig7/model-sweep").run(fig7::series);
+
+    // Per-block attribution of one chip batch at 1.2 V.
+    let mut sim = CoreSim::new(BicConfig::CHIP);
+    let mut rng = Xoshiro256::seeded(1);
+    let recs: Vec<Vec<i32>> = (0..16)
+        .map(|_| (0..32).map(|_| rng.next_below(256) as i32).collect())
+        .collect();
+    let keys: Vec<i32> = (0..8).map(|_| rng.next_below(256) as i32).collect();
+    let run = sim.index_batch(&recs, &keys);
+    let s = Supply::new(1.2);
+    let br = attribute(s, delay::f_max_chip(s), &run.activity);
+    println!(
+        "\nper-batch attribution @1.2V: clock={} cam={} buffer={} tm={} ctrl={} leak={} total={}",
+        format_si(br.clock_tree, "J"),
+        format_si(br.cam, "J"),
+        format_si(br.buffer, "J"),
+        format_si(br.tm, "J"),
+        format_si(br.control, "J"),
+        format_si(br.leakage, "J"),
+        format_si(br.total(), "J"),
+    );
+    Bench::new("fig7/cycle-sim+attribution").run(|| {
+        let mut sim = CoreSim::new(BicConfig::CHIP);
+        let run = sim.index_batch(&recs, &keys);
+        attribute(s, delay::f_max_chip(s), &run.activity)
+    });
+}

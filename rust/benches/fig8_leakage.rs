@@ -1,0 +1,13 @@
+//! Bench target for Fig. 8: regenerates the standby-current grid and
+//! times the leakage-model evaluation.
+
+use sotb_bic::experiments::fig8;
+use sotb_bic::power::leakage;
+use sotb_bic::substrate::bench::{group, Bench};
+
+fn main() {
+    group("fig8: standby current vs Vbb x Vdd");
+    let r = fig8::run();
+    println!("{}", r.render());
+    Bench::new("fig8/grid-evaluation").run(leakage::fig8_grid);
+}

@@ -1,0 +1,94 @@
+//! Hot-path microbenchmarks — the L3 performance-pass instrument
+//! (EXPERIMENTS.md §Perf): bitmap algebra, WAH, query engine, the golden
+//! indexing core, the cycle simulator, and PJRT artifact dispatch.
+
+use sotb_bic::baselines::SoftwareIndexer;
+use sotb_bic::bic::{BicConfig, BicCore, Bitmap, Query, WahBitmap};
+use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
+use sotb_bic::sim::CoreSim;
+use sotb_bic::substrate::bench::{group, Bench};
+use sotb_bic::substrate::rng::Xoshiro256;
+
+fn random_batch(rng: &mut Xoshiro256, n: usize, w: usize) -> Vec<Vec<i32>> {
+    (0..n).map(|_| (0..w).map(|_| rng.next_below(256) as i32).collect()).collect()
+}
+
+fn main() {
+    let mut rng = Xoshiro256::seeded(0x1407);
+
+    group("bitmap algebra (1 Mbit rows)");
+    let nbits = 1 << 20;
+    let mut a = Bitmap::zeros(nbits);
+    let mut b = Bitmap::zeros(nbits);
+    for _ in 0..nbits / 16 {
+        a.set(rng.next_below(nbits as u64) as usize, true);
+        b.set(rng.next_below(nbits as u64) as usize, true);
+    }
+    Bench::new("bitmap/and-1Mbit").bytes((nbits / 8) as u64).run(|| a.and(&b));
+    let mut acc = a.clone();
+    Bench::new("bitmap/and_assign-1Mbit")
+        .bytes((nbits / 8) as u64)
+        .run(|| acc.and_assign(&b));
+    Bench::new("bitmap/count_ones-1Mbit")
+        .bytes((nbits / 8) as u64)
+        .run(|| a.count_ones());
+
+    group("WAH compression (1 Mbit, sparse)");
+    let wah_a = WahBitmap::compress(&a);
+    let wah_b = WahBitmap::compress(&b);
+    println!("compression ratio: {:.1}x", wah_a.ratio());
+    Bench::new("wah/compress").bytes((nbits / 8) as u64).run(|| WahBitmap::compress(&a));
+    Bench::new("wah/and-compressed").run(|| wah_a.and(&wah_b));
+    Bench::new("wah/count_ones").run(|| wah_a.count_ones());
+
+    group("indexing cores (chip geometry: 16x32, 8 keys)");
+    let recs = random_batch(&mut rng, 16, 32);
+    let keys: Vec<i32> = (0..8).map(|_| rng.next_below(256) as i32).collect();
+    let mut golden = BicCore::new(BicConfig::CHIP);
+    Bench::new("index/golden-model")
+        .bytes(512)
+        .run(|| golden.index(&recs, &keys));
+    let mut sim = CoreSim::new(BicConfig::CHIP);
+    Bench::new("index/cycle-simulator")
+        .bytes(512)
+        .run(|| sim.index_batch(&recs, &keys));
+    let sw = SoftwareIndexer::new(8);
+    Bench::new("index/software-baseline")
+        .bytes(512)
+        .run(|| sw.index(&recs, &keys));
+
+    group("query engine (64 attrs x 1M objects)");
+    let mut qrng = Xoshiro256::seeded(7);
+    let rows: Vec<Bitmap> = (0..64)
+        .map(|_| {
+            let mut r = Bitmap::zeros(1 << 20);
+            for _ in 0..(1 << 14) {
+                r.set(qrng.next_below(1 << 20) as usize, true);
+            }
+            r
+        })
+        .collect();
+    let bi = sotb_bic::bic::BitmapIndex::from_rows(rows);
+    let q = Query::attr(1).and(Query::attr(5)).and(Query::attr(9).not());
+    Bench::new("query/and-and-not-1Mobj").run(|| q.eval(&bi).unwrap());
+
+    group("PJRT artifact dispatch");
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.txt").exists() {
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let rt = Runtime::cpu().expect("PJRT client");
+        for name in ["chip", "batch", "large"] {
+            let v = manifest.find_bic(name).expect("variant");
+            let exe = BicExecutable::load(&rt, v).expect("compile");
+            let mut vrng = Xoshiro256::seeded(name.len() as u64);
+            let recs = random_batch(&mut vrng, v.n, v.w);
+            let keys: Vec<i32> =
+                (0..v.m).map(|_| vrng.next_below(256) as i32).collect();
+            Bench::new(format!("pjrt/index-{name} (n={} w={} m={})", v.n, v.w, v.m))
+                .bytes((v.n * v.w) as u64)
+                .run(|| exe.index(&recs, &keys).unwrap());
+        }
+    } else {
+        println!("(skipped: run `make artifacts` first)");
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench target for the Fig. 4 system claim: standby-policy ablation on
+//! a diurnal trace at full scale (energy proportionality), plus timing
+//! of the discrete-event scheduler itself.
+
+use sotb_bic::coordinator::Policy;
+use sotb_bic::experiments::multicore::{self, Scale};
+use sotb_bic::substrate::bench::{group, Bench};
+
+fn main() {
+    group("multicore: standby-policy ablation (full scale)");
+    let r = multicore::run(Scale::Full);
+    println!("{}", r.render());
+
+    Bench::new("multicore/scheduler-quick-trace").run(|| {
+        multicore::run_policy(
+            Policy::CgThenRbb { idle_to_cg: 1e-3, cg_to_rbb: 50e-3 },
+            Scale::Quick,
+        )
+    });
+}

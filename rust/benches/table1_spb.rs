@@ -1,0 +1,13 @@
+//! Bench target for Table I: regenerates the standby-power-per-bit
+//! comparison (all rows recomputed from design characteristics).
+
+use sotb_bic::baselines::table1;
+use sotb_bic::experiments::table1 as exp_table1;
+use sotb_bic::substrate::bench::{group, Bench};
+
+fn main() {
+    group("table1: standby power per bit");
+    let r = exp_table1::run();
+    println!("{}", r.render());
+    Bench::new("table1/recompute-all-rows").run(table1);
+}

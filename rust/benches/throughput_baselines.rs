@@ -1,0 +1,20 @@
+//! Bench target for the §I throughput claims: simulated multi-core ASIC
+//! system vs published CPU/GPU/FPGA operating points plus a live software
+//! indexer, at full scale.
+
+use sotb_bic::experiments::throughput::{self, Scale};
+use sotb_bic::substrate::bench::{group, Bench, BenchConfig};
+
+fn main() {
+    group("throughput: BIC system vs baselines (full scale)");
+    let r = throughput::run(Scale::Full);
+    println!("{}", r.render());
+
+    let quick = BenchConfig::default();
+    Bench::new("throughput/simulate-8core-200batches")
+        .with_config(quick)
+        .run(|| throughput::simulate_system(8, Scale::Quick));
+    Bench::new("throughput/software-indexer-batch").run(|| {
+        throughput::measure_software(Scale::Quick)
+    });
+}

@@ -1,0 +1,108 @@
+//! CPU baseline: the ParaSAIL many-core bitmap indexer (paper ref. [2],
+//! T. Zhong et al.) modelled from its two published operating points —
+//! 108 MB/s on 16 cores and 473 MB/s on 60 cores — plus a *living*
+//! software indexer in plain Rust so the comparison has a measurable
+//! counterpart on this machine (used by the throughput bench).
+
+use crate::bic::bitmap::BitmapIndex;
+
+/// Published ParaSAIL operating points: (cores, MB/s).
+pub const PARASAIL_POINTS: [(u32, f64); 2] = [(16, 108.0), (60, 473.0)];
+
+/// Linear throughput fit through the two published points:
+/// slope 8.30 MB/s per core, intercept -24.7 MB/s (parallel efficiency
+/// improves with occupancy on the Phi-class part they used).
+pub fn parasail_throughput_mbs(cores: u32) -> f64 {
+    let (c1, t1) = PARASAIL_POINTS[0];
+    let (c2, t2) = PARASAIL_POINTS[1];
+    let slope = (t2 - t1) / (c2 - c1) as f64;
+    (t1 + slope * (cores as f64 - c1 as f64)).max(0.0)
+}
+
+/// Power model for the CPU baseline [W]: the paper's §I framing ("the
+/// more the cores are exploited, the higher the power consumption") with
+/// an 80-W-class socket (ref. [3]'s CPU comparator): idle floor plus a
+/// per-core increment that reaches TDP at 60 cores.
+pub fn parasail_power_w(cores: u32) -> f64 {
+    const IDLE_W: f64 = 20.0;
+    const TDP_W: f64 = 80.0;
+    IDLE_W + (TDP_W - IDLE_W) * (cores as f64 / 60.0).min(1.0)
+}
+
+/// Indexing energy efficiency [MB/J].
+pub fn parasail_efficiency(cores: u32) -> f64 {
+    parasail_throughput_mbs(cores) / parasail_power_w(cores)
+}
+
+/// A living software bitmap indexer: the same CAM-match semantics
+/// executed directly on this CPU (scalar inner loop, like ParaSAIL's
+/// per-core kernel). The throughput bench runs it for a measured-on-this-
+/// machine baseline row next to the modelled published numbers.
+pub struct SoftwareIndexer {
+    pub m_keys: usize,
+}
+
+impl SoftwareIndexer {
+    pub fn new(m_keys: usize) -> Self {
+        Self { m_keys }
+    }
+
+    /// Index `records` by `keys` — straightforward software loop.
+    pub fn index(&self, records: &[Vec<i32>], keys: &[i32]) -> BitmapIndex {
+        assert_eq!(keys.len(), self.m_keys);
+        let mut bi = BitmapIndex::new(keys.len(), records.len());
+        for (j, rec) in records.iter().enumerate() {
+            for (i, &k) in keys.iter().enumerate() {
+                if rec.iter().any(|&w| w == k) {
+                    bi.set(i, j, true);
+                }
+            }
+        }
+        bi
+    }
+
+    /// Bytes processed per `index()` call.
+    pub fn bytes_of(records: &[Vec<i32>]) -> usize {
+        records.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bic::{BicConfig, BicCore};
+    use crate::substrate::rng::Xoshiro256;
+
+    #[test]
+    fn fit_hits_published_points() {
+        for &(c, t) in &PARASAIL_POINTS {
+            let got = parasail_throughput_mbs(c);
+            assert!((got - t).abs() < 1e-9, "{c} cores: {got}");
+        }
+    }
+
+    #[test]
+    fn throughput_monotone_in_cores() {
+        assert!(parasail_throughput_mbs(32) > parasail_throughput_mbs(16));
+        assert!(parasail_throughput_mbs(60) > parasail_throughput_mbs(32));
+    }
+
+    #[test]
+    fn power_grows_with_cores() {
+        assert!(parasail_power_w(60) > parasail_power_w(16));
+        assert!((parasail_power_w(60) - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn software_indexer_matches_golden_model() {
+        let cfg = BicConfig::CHIP;
+        let mut rng = Xoshiro256::seeded(42);
+        let records: Vec<Vec<i32>> = (0..16)
+            .map(|_| (0..32).map(|_| rng.next_below(256) as i32).collect())
+            .collect();
+        let keys: Vec<i32> = (0..8).map(|_| rng.next_below(256) as i32).collect();
+        let sw = SoftwareIndexer::new(8).index(&records, &keys);
+        let hw = BicCore::new(cfg).index(&records, &keys);
+        assert_eq!(sw, hw);
+    }
+}

@@ -1,0 +1,66 @@
+//! FPGA baseline: the authors' own 150-MHz FPGA BIC system (paper
+//! ref. [4]) — the design the ASIC was cut down from. We model it as a
+//! bank of FPGA-geometry BIC cores (256 records x 256 words, 16 keys) at
+//! 150 MHz, and cross-check the modelled system throughput against the
+//! published comparison (2.8x the 16-core ParaSAIL CPU's 108 MB/s).
+
+use crate::bic::BicConfig;
+
+/// FPGA system clock [Hz] (paper §I: "150-MHz FPGA-based BIC system").
+pub const FPGA_CLOCK_HZ: f64 = 150e6;
+
+/// The FPGA:CPU throughput ratio published in [4] (vs 16-core ParaSAIL).
+pub const FPGA_OVER_CPU: f64 = 2.8;
+
+/// Published-system throughput implied by the ratio [MB/s]: 2.8 x 108.
+pub const FPGA_SYSTEM_THROUGHPUT_MBS: f64 = FPGA_OVER_CPU * 108.0;
+
+/// FPGA board power [W] — FPGA accelerator boards of that era draw
+/// ~25 W under load (an order below the GPU, above the ASIC).
+pub const FPGA_BOARD_W: f64 = 25.0;
+
+/// Throughput of one FPGA-geometry BIC core at the FPGA clock [MB/s]:
+/// `input_bytes / cycles * f`. For the 256x256x16 geometry this is
+/// ~140 MB/s, so the published 302 MB/s system implies a small multi-core
+/// bank — consistent with Fig. 4's multi-core architecture.
+pub fn fpga_core_throughput_mbs(cfg: &BicConfig) -> f64 {
+    cfg.batch_input_bytes() as f64 / cfg.cycles_per_batch() as f64 * FPGA_CLOCK_HZ
+        / 1e6
+}
+
+/// Number of FPGA cores needed to reach the published system throughput.
+pub fn fpga_cores_for_published() -> usize {
+    (FPGA_SYSTEM_THROUGHPUT_MBS / fpga_core_throughput_mbs(&BicConfig::FPGA))
+        .ceil() as usize
+}
+
+/// Modelled FPGA system throughput with `z` cores [MB/s].
+pub fn fpga_system_throughput_mbs(z: usize) -> f64 {
+    z as f64 * fpga_core_throughput_mbs(&BicConfig::FPGA)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::cpu_parasail::PARASAIL_POINTS;
+
+    #[test]
+    fn core_rate_is_140mb_class() {
+        let t = fpga_core_throughput_mbs(&BicConfig::FPGA);
+        assert!((130.0..150.0).contains(&t), "core rate {t:.1} MB/s");
+    }
+
+    #[test]
+    fn published_system_needs_a_small_bank() {
+        let z = fpga_cores_for_published();
+        assert!((2..=4).contains(&z), "z = {z}");
+        assert!(fpga_system_throughput_mbs(z) >= FPGA_SYSTEM_THROUGHPUT_MBS);
+    }
+
+    #[test]
+    fn beats_cpu_by_published_factor() {
+        let cpu16 = PARASAIL_POINTS[0].1;
+        let ratio = FPGA_SYSTEM_THROUGHPUT_MBS / cpu16;
+        assert!((ratio - FPGA_OVER_CPU).abs() < 1e-9);
+    }
+}

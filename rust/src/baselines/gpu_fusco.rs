@@ -1,0 +1,41 @@
+//! GPU baseline: the packet-indexing system of Fusco et al. (paper
+//! ref. [5]) — modelled from the comparison the authors publish in [4]:
+//! their FPGA BIC delivers 1.7x the GPU's indexing throughput while the
+//! GPU burns a 225-W-class board (ref. [3]'s GPU comparator).
+
+use super::fpga_bic::FPGA_SYSTEM_THROUGHPUT_MBS;
+
+/// The FPGA:GPU throughput ratio published in [4].
+pub const FPGA_OVER_GPU: f64 = 1.7;
+
+/// GPU board power [W] (225-W class, per the paper's §I framing via [3]).
+pub const GPU_BOARD_W: f64 = 225.0;
+
+/// GPU indexing throughput [MB/s], implied by the published ratio
+/// against the FPGA system's throughput.
+pub fn gpu_throughput_mbs() -> f64 {
+    FPGA_SYSTEM_THROUGHPUT_MBS / FPGA_OVER_GPU
+}
+
+/// Energy efficiency [MB/J].
+pub fn gpu_efficiency() -> f64 {
+    gpu_throughput_mbs() / GPU_BOARD_W
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_is_consistent() {
+        let g = gpu_throughput_mbs();
+        assert!((FPGA_SYSTEM_THROUGHPUT_MBS / g - FPGA_OVER_GPU).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gpu_efficiency_is_poor_vs_asic() {
+        // The whole point of the paper: joules per byte on a 225-W board
+        // dwarf an ASIC core's.
+        assert!(gpu_efficiency() < 10.0);
+    }
+}

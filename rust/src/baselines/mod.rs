@@ -1,0 +1,17 @@
+//! Every comparator the paper cites, modelled from its published
+//! characteristics so the comparison tables are recomputed rather than
+//! transcribed (DESIGN.md §7):
+//!
+//! - [`cpu_parasail`] — the many-core CPU indexer of ref. [2], plus a
+//!   living software indexer measured on this machine;
+//! - [`gpu_fusco`]    — the GPU packet indexer of ref. [5];
+//! - [`fpga_bic`]     — the authors' own 150-MHz FPGA BIC of ref. [4];
+//! - [`cam_designs`]  — the four Table I CAM designs [12][13][14][15].
+
+pub mod cam_designs;
+pub mod cpu_parasail;
+pub mod fpga_bic;
+pub mod gpu_fusco;
+
+pub use cam_designs::{table1, CamDesign, Technique};
+pub use cpu_parasail::SoftwareIndexer;

@@ -1,0 +1,402 @@
+//! Packed bitmap container + bitwise algebra.
+//!
+//! Layout contract (shared with `python/compile/kernels/ref.py` and the
+//! AOT artifacts): bit `j` of word `w` (LSB-first) is column `w*32 + j`.
+//! Trailing bits past `nbits` in the last word are always zero — every
+//! operation maintains that invariant so word-level comparisons are exact.
+
+pub const WORD_BITS: usize = 32;
+
+/// A fixed-length bitmap packed into `u32` words.
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
+pub struct Bitmap {
+    nbits: usize,
+    words: Vec<u32>,
+}
+
+#[inline]
+pub fn words_for(nbits: usize) -> usize {
+    nbits.div_ceil(WORD_BITS)
+}
+
+impl Bitmap {
+    /// All-zero bitmap of `nbits` bits.
+    pub fn zeros(nbits: usize) -> Self {
+        Self { nbits, words: vec![0; words_for(nbits)] }
+    }
+
+    /// All-one bitmap of `nbits` bits (trailing bits cleared).
+    pub fn ones(nbits: usize) -> Self {
+        let mut b = Self { nbits, words: vec![u32::MAX; words_for(nbits)] };
+        b.mask_tail();
+        b
+    }
+
+    /// From a slice of bools, index order = column order.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut b = Self::zeros(bits.len());
+        for (i, &v) in bits.iter().enumerate() {
+            if v {
+                b.set(i, true);
+            }
+        }
+        b
+    }
+
+    /// From pre-packed words (must already satisfy the tail invariant, which
+    /// is re-enforced here defensively).
+    pub fn from_words(nbits: usize, words: Vec<u32>) -> Self {
+        assert_eq!(words.len(), words_for(nbits), "word count mismatch");
+        let mut b = Self { nbits, words };
+        b.mask_tail();
+        b
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nbits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nbits == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Mutable word access for word-level builders (WAH decompress); the
+    /// caller must maintain the tail invariant.
+    #[inline]
+    pub(crate) fn words_mut(&mut self) -> &mut [u32] {
+        &mut self.words
+    }
+
+    /// True iff no bit is set. Short-circuits on the first nonzero word,
+    /// so the common case (probing a live accumulator) is O(1) — unlike
+    /// `count_ones`, which always scans.
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.nbits, "bit index {i} out of range {}", self.nbits);
+        (self.words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.nbits, "bit index {i} out of range {}", self.nbits);
+        let (w, j) = (i / WORD_BITS, i % WORD_BITS);
+        if v {
+            self.words[w] |= 1 << j;
+        } else {
+            self.words[w] &= !(1 << j);
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Indices of set bits, ascending.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            BitIter { word: w, base: wi * WORD_BITS }
+        })
+    }
+
+    fn mask_tail(&mut self) {
+        let tail = self.nbits % WORD_BITS;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u32 << tail) - 1;
+            }
+        }
+        if self.nbits == 0 {
+            self.words.clear();
+        }
+    }
+
+    fn check_len(&self, other: &Self) {
+        assert_eq!(
+            self.nbits, other.nbits,
+            "bitmap length mismatch: {} vs {}",
+            self.nbits, other.nbits
+        );
+    }
+
+    /// `self & other`, elementwise.
+    pub fn and(&self, other: &Self) -> Self {
+        self.check_len(other);
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| a & b)
+            .collect();
+        Self { nbits: self.nbits, words }
+    }
+
+    /// `self | other`, elementwise.
+    pub fn or(&self, other: &Self) -> Self {
+        self.check_len(other);
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| a | b)
+            .collect();
+        Self { nbits: self.nbits, words }
+    }
+
+    /// `self ^ other`, elementwise.
+    pub fn xor(&self, other: &Self) -> Self {
+        self.check_len(other);
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| a ^ b)
+            .collect();
+        Self { nbits: self.nbits, words }
+    }
+
+    /// `self & !other` (the query engine's ANDNOT primitive).
+    pub fn and_not(&self, other: &Self) -> Self {
+        self.check_len(other);
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| a & !b)
+            .collect();
+        Self { nbits: self.nbits, words }
+    }
+
+    /// Bitwise complement (trailing bits stay zero).
+    pub fn not(&self) -> Self {
+        let mut out = Self {
+            nbits: self.nbits,
+            words: self.words.iter().map(|w| !w).collect(),
+        };
+        out.mask_tail();
+        out
+    }
+
+    /// In-place AND — the allocation-free hot-path variant.
+    pub fn and_assign(&mut self, other: &Self) {
+        self.check_len(other);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// In-place OR.
+    pub fn or_assign(&mut self, other: &Self) {
+        self.check_len(other);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// In-place ANDNOT.
+    pub fn and_not_assign(&mut self, other: &Self) {
+        self.check_len(other);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+}
+
+struct BitIter {
+    word: u32,
+    base: usize,
+}
+
+impl Iterator for BitIter {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.word == 0 {
+            return None;
+        }
+        let j = self.word.trailing_zeros() as usize;
+        self.word &= self.word - 1;
+        Some(self.base + j)
+    }
+}
+
+/// A bitmap index: `m` attribute rows over `n` objects (the `M x N`-bit BI
+/// of the paper, row-major).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct BitmapIndex {
+    n: usize,
+    rows: Vec<Bitmap>,
+}
+
+impl BitmapIndex {
+    pub fn new(m: usize, n: usize) -> Self {
+        Self { n, rows: vec![Bitmap::zeros(n); m] }
+    }
+
+    pub fn from_rows(rows: Vec<Bitmap>) -> Self {
+        let n = rows.first().map_or(0, Bitmap::len);
+        assert!(rows.iter().all(|r| r.len() == n), "ragged rows");
+        Self { n, rows }
+    }
+
+    /// Rebuild from the packed words the AOT artifact returns
+    /// (`u32[m, nw]`, row-major, `nw = ceil(n/32)`).
+    pub fn from_packed(m: usize, n: usize, words: &[u32]) -> Self {
+        let nw = words_for(n);
+        assert_eq!(words.len(), m * nw, "packed length mismatch");
+        let rows = (0..m)
+            .map(|i| Bitmap::from_words(n, words[i * nw..(i + 1) * nw].to_vec()))
+            .collect();
+        Self { n, rows }
+    }
+
+    /// Flatten to the packed row-major word layout (the artifact format).
+    pub fn to_packed(&self) -> Vec<u32> {
+        self.rows.iter().flat_map(|r| r.words().iter().copied()).collect()
+    }
+
+    #[inline]
+    pub fn num_attrs(&self) -> usize {
+        self.rows.len()
+    }
+
+    #[inline]
+    pub fn num_objects(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &Bitmap {
+        &self.rows[i]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut Bitmap {
+        &mut self.rows[i]
+    }
+
+    #[inline]
+    pub fn get(&self, attr: usize, obj: usize) -> bool {
+        self.rows[attr].get(obj)
+    }
+
+    #[inline]
+    pub fn set(&mut self, attr: usize, obj: usize, v: bool) {
+        self.rows[attr].set(obj, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = Bitmap::zeros(70);
+        for i in [0, 1, 31, 32, 33, 63, 64, 69] {
+            assert!(!b.get(i));
+            b.set(i, true);
+            assert!(b.get(i));
+        }
+        assert_eq!(b.count_ones(), 8);
+        b.set(32, false);
+        assert!(!b.get(32));
+        assert_eq!(b.count_ones(), 7);
+    }
+
+    #[test]
+    fn word_layout_is_lsb_first() {
+        let mut b = Bitmap::zeros(64);
+        b.set(0, true);
+        b.set(33, true);
+        assert_eq!(b.words(), &[0x1, 0x2]);
+    }
+
+    #[test]
+    fn ones_masks_tail() {
+        let b = Bitmap::ones(33);
+        assert_eq!(b.words(), &[u32::MAX, 0x1]);
+        assert_eq!(b.count_ones(), 33);
+    }
+
+    #[test]
+    fn not_keeps_tail_invariant() {
+        let b = Bitmap::zeros(33).not();
+        assert_eq!(b.count_ones(), 33);
+        assert_eq!(b.words()[1], 0x1);
+    }
+
+    #[test]
+    fn algebra_matches_boolwise() {
+        let x = Bitmap::from_bools(&[true, false, true, false, true]);
+        let y = Bitmap::from_bools(&[true, true, false, false, true]);
+        assert_eq!(x.and(&y), Bitmap::from_bools(&[true, false, false, false, true]));
+        assert_eq!(x.or(&y), Bitmap::from_bools(&[true, true, true, false, true]));
+        assert_eq!(x.xor(&y), Bitmap::from_bools(&[false, true, true, false, false]));
+        assert_eq!(x.and_not(&y), Bitmap::from_bools(&[false, false, true, false, false]));
+    }
+
+    #[test]
+    fn inplace_matches_functional() {
+        let x = Bitmap::from_bools(&[true, false, true]);
+        let y = Bitmap::from_bools(&[true, true, false]);
+        let mut z = x.clone();
+        z.and_assign(&y);
+        assert_eq!(z, x.and(&y));
+        let mut z = x.clone();
+        z.or_assign(&y);
+        assert_eq!(z, x.or(&y));
+        let mut z = x.clone();
+        z.and_not_assign(&y);
+        assert_eq!(z, x.and_not(&y));
+    }
+
+    #[test]
+    fn iter_ones_ascending() {
+        let mut b = Bitmap::zeros(100);
+        for i in [3, 5, 31, 32, 64, 99] {
+            b.set(i, true);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, vec![3, 5, 31, 32, 64, 99]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn and_length_mismatch_panics() {
+        let _ = Bitmap::zeros(3).and(&Bitmap::zeros(4));
+    }
+
+    #[test]
+    fn packed_roundtrip() {
+        let mut bi = BitmapIndex::new(3, 40);
+        bi.set(0, 0, true);
+        bi.set(1, 39, true);
+        bi.set(2, 32, true);
+        let packed = bi.to_packed();
+        assert_eq!(packed.len(), 3 * 2);
+        let back = BitmapIndex::from_packed(3, 40, &packed);
+        assert_eq!(back, bi);
+    }
+
+    #[test]
+    fn empty_bitmap() {
+        let b = Bitmap::zeros(0);
+        assert!(b.is_empty());
+        assert_eq!(b.count_ones(), 0);
+        assert_eq!(b.not(), b);
+    }
+}

@@ -1,0 +1,134 @@
+//! Functional model of the chip's row buffer.
+//!
+//! As record `j` sits in the CAM and the `M` keys stream past, the `M`
+//! match bits are written sequentially into row `j` of the buffer (the
+//! paper's "first row" advances per record). The buffer therefore holds an
+//! `N x M` bit matrix in *record-major* order; the transpose matrix then
+//! flips it to the key-major `M x N` BI. Dual-port behaviour (simultaneous
+//! read/write) is a timing property modelled in `sim`; here we model the
+//! contents and the fill/drain protocol.
+
+/// `N x M` record-major match-bit buffer.
+#[derive(Clone, Debug)]
+pub struct RowBuffer {
+    n: usize,
+    m: usize,
+    bits: Vec<bool>, // row-major: bits[j*m + i] = match(record j, key i)
+    cursor: usize,   // next write position (sequential, like the chip)
+}
+
+impl RowBuffer {
+    pub fn new(n: usize, m: usize) -> Self {
+        Self { n, m, bits: vec![false; n * m], cursor: 0 }
+    }
+
+    #[inline]
+    pub fn num_records(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn num_keys(&self) -> usize {
+        self.m
+    }
+
+    /// Sequential write — the chip's only write mode: bit for (record
+    /// `cursor / m`, key `cursor % m`). Panics when written past full,
+    /// as the real control logic would never issue such a write.
+    pub fn push(&mut self, bit: bool) {
+        assert!(self.cursor < self.bits.len(), "buffer overflow");
+        self.bits[self.cursor] = bit;
+        self.cursor += 1;
+    }
+
+    /// Write a whole record's match-bit row at once (M sequential pushes).
+    pub fn push_record(&mut self, row: &[bool]) {
+        assert_eq!(row.len(), self.m, "row width mismatch");
+        for &b in row {
+            self.push(b);
+        }
+    }
+
+    /// True when all `N*M` bits have been written.
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.cursor == self.bits.len()
+    }
+
+    /// Number of complete record rows currently resident.
+    #[inline]
+    pub fn rows_filled(&self) -> usize {
+        self.cursor / self.m
+    }
+
+    /// Random-access read (the TM's read port).
+    #[inline]
+    pub fn get(&self, record: usize, key: usize) -> bool {
+        assert!(record < self.n && key < self.m, "index out of range");
+        self.bits[record * self.m + key]
+    }
+
+    /// Drain: hand the contents to the TM and reset for the next batch.
+    pub fn drain(&mut self) -> Vec<bool> {
+        assert!(self.is_full(), "drain before full");
+        self.cursor = 0;
+        std::mem::replace(&mut self.bits, vec![false; self.n * self.m])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_protocol() {
+        let mut b = RowBuffer::new(2, 3);
+        assert!(!b.is_full());
+        b.push_record(&[true, false, true]);
+        assert_eq!(b.rows_filled(), 1);
+        b.push_record(&[false, true, false]);
+        assert!(b.is_full());
+        assert!(b.get(0, 0));
+        assert!(!b.get(0, 1));
+        assert!(b.get(1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer overflow")]
+    fn overflow_panics() {
+        let mut b = RowBuffer::new(1, 1);
+        b.push(true);
+        b.push(true);
+    }
+
+    #[test]
+    #[should_panic(expected = "drain before full")]
+    fn early_drain_panics() {
+        let mut b = RowBuffer::new(2, 2);
+        b.push(true);
+        b.drain();
+    }
+
+    #[test]
+    fn drain_resets() {
+        let mut b = RowBuffer::new(1, 2);
+        b.push_record(&[true, true]);
+        let bits = b.drain();
+        assert_eq!(bits, vec![true, true]);
+        assert!(!b.is_full());
+        assert_eq!(b.rows_filled(), 0);
+        b.push_record(&[false, true]);
+        assert!(!b.get(0, 0) && b.get(0, 1));
+    }
+
+    #[test]
+    fn partial_row_counts() {
+        let mut b = RowBuffer::new(2, 4);
+        b.push(true);
+        b.push(false);
+        assert_eq!(b.rows_filled(), 0);
+        b.push(true);
+        b.push(true);
+        assert_eq!(b.rows_filled(), 1);
+    }
+}

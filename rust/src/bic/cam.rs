@@ -1,0 +1,165 @@
+//! Functional model of the chip's CAM: one record resident, keys streamed.
+//!
+//! The ASIC builds its CAM from 32-word x 8-bit CAM blocks (CBs), each
+//! realized as an 8-Kbit dual-port RAM per the Xilinx XAPP1151 mapping
+//! (one CAM cell costs 32 RAM bits). This module is the *semantic* model —
+//! "does the resident record contain the key?" — used by the golden
+//! pipeline in [`crate::bic::core`]. The structural, cycle-level model
+//! lives in [`crate::sim`].
+
+/// Record pad value: outside the 8-bit alphabet, never equal to a key.
+/// (Matches the Python kernels' pad convention.)
+pub const PAD: i32 = -1;
+
+/// Width of the chip alphabet in bits; words are 0..=255.
+pub const WORD_WIDTH_BITS: usize = 8;
+
+/// A record: `W` alphabet words (pad slots hold [`PAD`]).
+pub type Record = Vec<i32>;
+
+/// Functional CAM holding one record of `width` words.
+///
+/// Matching uses a 256-entry presence table rebuilt at `load` — the
+/// software analogue of the chip's RAM-mapped CAM rows (one lookup per
+/// key instead of a W-word scan; §Perf took the golden model past the
+/// naive software baseline with this). Out-of-alphabet words still match
+/// correctly via the slow path.
+#[derive(Clone, Debug)]
+pub struct Cam {
+    width: usize,
+    words: Vec<i32>,
+    /// presence[v] = occurrences of alphabet word v in the record.
+    presence: [u16; 1 << WORD_WIDTH_BITS],
+}
+
+impl Cam {
+    /// An empty CAM of the given record width (all slots padded).
+    pub fn new(width: usize) -> Self {
+        Self {
+            width,
+            words: vec![PAD; width],
+            presence: [0; 1 << WORD_WIDTH_BITS],
+        }
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Load a record, replacing the previous one (step 1 of Fig. 3).
+    /// Records shorter than the CAM width are padded; longer ones are
+    /// rejected so silent truncation can't corrupt an index.
+    pub fn load(&mut self, record: &[i32]) {
+        assert!(
+            record.len() <= self.width,
+            "record of {} words exceeds CAM width {}",
+            record.len(),
+            self.width
+        );
+        // Decrement the outgoing words rather than clearing the whole
+        // table: O(W) either way, but this touches only live entries.
+        for &w in &self.words {
+            if is_alphabet_word(w) {
+                self.presence[w as usize] -= 1;
+            }
+        }
+        self.words[..record.len()].copy_from_slice(record);
+        self.words[record.len()..].fill(PAD);
+        for &w in &self.words {
+            if is_alphabet_word(w) {
+                self.presence[w as usize] += 1;
+            }
+        }
+    }
+
+    /// Match one key against the resident record (step 2 of Fig. 3):
+    /// returns `true` iff any resident word equals the key. The chip
+    /// returns this bit one clock after the key enters; latency is
+    /// modelled in `sim`, not here.
+    #[inline]
+    pub fn matches(&self, key: i32) -> bool {
+        debug_assert!(key != PAD, "keys must be inside the alphabet");
+        if is_alphabet_word(key) {
+            self.presence[key as usize] != 0
+        } else {
+            // Out-of-alphabet key (never produced by the chip's 8-bit
+            // datapath, but the library accepts wider tests): scan.
+            self.words.iter().any(|&w| w == key)
+        }
+    }
+
+    /// Convenience: stream all keys and collect the match bits
+    /// (the full per-record CAM pass).
+    pub fn match_all(&self, keys: &[i32]) -> Vec<bool> {
+        keys.iter().map(|&k| self.matches(k)).collect()
+    }
+}
+
+/// Validate that a value is a legal alphabet word (0..=255).
+#[inline]
+pub fn is_alphabet_word(v: i32) -> bool {
+    (0..(1 << WORD_WIDTH_BITS)).contains(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_cam_matches_nothing() {
+        let cam = Cam::new(8);
+        for k in 0..256 {
+            assert!(!cam.matches(k));
+        }
+    }
+
+    #[test]
+    fn load_then_match() {
+        let mut cam = Cam::new(4);
+        cam.load(&[1, 2, 3, 4]);
+        assert!(cam.matches(3));
+        assert!(!cam.matches(5));
+    }
+
+    #[test]
+    fn reload_replaces_previous_record() {
+        let mut cam = Cam::new(4);
+        cam.load(&[10, 20, 30, 40]);
+        cam.load(&[50, 60]);
+        assert!(!cam.matches(10), "stale word must be gone");
+        assert!(cam.matches(60));
+    }
+
+    #[test]
+    fn short_record_is_padded() {
+        let mut cam = Cam::new(8);
+        cam.load(&[7]);
+        assert!(cam.matches(7));
+        assert_eq!(cam.match_all(&[7, 8]), vec![true, false]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds CAM width")]
+    fn oversized_record_rejected() {
+        Cam::new(2).load(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn match_all_order_follows_keys() {
+        let mut cam = Cam::new(3);
+        cam.load(&[5, 9, 200]);
+        assert_eq!(
+            cam.match_all(&[9, 5, 1, 200]),
+            vec![true, true, false, true]
+        );
+    }
+
+    #[test]
+    fn alphabet_check() {
+        assert!(is_alphabet_word(0));
+        assert!(is_alphabet_word(255));
+        assert!(!is_alphabet_word(256));
+        assert!(!is_alphabet_word(PAD));
+    }
+}

@@ -1,0 +1,188 @@
+//! The golden functional model of one BIC core — the three-step procedure
+//! of Fig. 3, stitched from the CAM, buffer and TM functional models.
+//!
+//! This is the semantic reference every other implementation is checked
+//! against: the AOT artifact (via `runtime`), the cycle-level simulator
+//! (`sim::core_sim`), and the Python kernels (transitively, through the
+//! shared packed-word format).
+
+use super::bitmap::BitmapIndex;
+use super::buffer::RowBuffer;
+use super::cam::{Cam, PAD};
+use super::transpose::transpose;
+
+/// Static configuration of a BIC core: `n` records per batch, `w` words
+/// per record, `m` keys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BicConfig {
+    pub n_records: usize,
+    pub w_words: usize,
+    pub m_keys: usize,
+}
+
+impl BicConfig {
+    /// The fabricated chip configuration (paper §IV): 16 records of 32
+    /// 8-bit words, 8 keys.
+    pub const CHIP: BicConfig = BicConfig { n_records: 16, w_words: 32, m_keys: 8 };
+
+    /// The pre-shrink FPGA configuration the chip was cut down from
+    /// (256 records of 256 words, 16 keys).
+    pub const FPGA: BicConfig = BicConfig { n_records: 256, w_words: 256, m_keys: 16 };
+
+    /// Memory bits of the CAM: one CAM cell costs 32 RAM bits in the
+    /// XAPP1151 mapping, and there are `w` cells of 8 bits each
+    /// (paper: 32 x 32 x 8 = 8,192 for the chip).
+    pub fn cam_ram_bits(&self) -> usize {
+        self.w_words * 32 * 8
+    }
+
+    /// Memory bits of the row buffer (`N x M`; paper: 16 x 8 = 128).
+    pub fn buffer_bits(&self) -> usize {
+        self.n_records * self.m_keys
+    }
+
+    /// Total memory bits of one core (paper: 8,320 for the chip).
+    pub fn total_memory_bits(&self) -> usize {
+        self.cam_ram_bits() + self.buffer_bits()
+    }
+
+    /// Cycles one core spends indexing one batch: per record, W cycles of
+    /// CAM load then M cycles of key streaming; then the TM drain — N
+    /// cycles absorbing buffer rows plus `M * ceil(N/32)` cycles emitting
+    /// packed BI words (one word per cycle). The cycle-stepped simulator
+    /// (`sim::core_sim`) reproduces this count emergently; tests assert
+    /// the two agree.
+    pub fn cycles_per_batch(&self) -> u64 {
+        let per_record = (self.w_words + self.m_keys) as u64;
+        let drain =
+            (self.n_records + self.m_keys * self.n_records.div_ceil(32)) as u64;
+        per_record * self.n_records as u64 + drain
+    }
+
+    /// Input bytes consumed per batch (records only; keys amortize).
+    pub fn batch_input_bytes(&self) -> usize {
+        self.n_records * self.w_words
+    }
+}
+
+/// One functional BIC core.
+#[derive(Debug)]
+pub struct BicCore {
+    cfg: BicConfig,
+    cam: Cam,
+}
+
+impl BicCore {
+    pub fn new(cfg: BicConfig) -> Self {
+        Self { cfg, cam: Cam::new(cfg.w_words) }
+    }
+
+    #[inline]
+    pub fn config(&self) -> &BicConfig {
+        &self.cfg
+    }
+
+    /// Index one batch: `records` (up to `n` of up to `w` words each,
+    /// short batches padded) by `keys` (exactly `m`). Returns the
+    /// `M x N` bitmap index.
+    pub fn index(&mut self, records: &[Vec<i32>], keys: &[i32]) -> BitmapIndex {
+        let BicConfig { n_records: n, m_keys: m, .. } = self.cfg;
+        assert!(
+            records.len() <= n,
+            "batch of {} records exceeds core capacity {n}",
+            records.len()
+        );
+        assert_eq!(keys.len(), m, "expected exactly {m} keys");
+        assert!(keys.iter().all(|&k| k != PAD), "PAD is not a valid key");
+
+        let mut buffer = RowBuffer::new(n, m);
+        for record in records {
+            // Step 1: record into the CAM.
+            self.cam.load(record);
+            // Step 2+3: stream keys, write match bits into the buffer row.
+            buffer.push_record(&self.cam.match_all(keys));
+        }
+        // Short batch: remaining rows are all-zero (empty CAM semantics —
+        // the chip would simply clock padding records through).
+        for _ in records.len()..n {
+            buffer.push_record(&vec![false; m]);
+        }
+        // Step 4: TM swaps rows to columns.
+        transpose(&buffer.drain(), n, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(words: &[i32]) -> Vec<i32> {
+        words.to_vec()
+    }
+
+    #[test]
+    fn chip_config_memory_inventory_matches_paper() {
+        let c = BicConfig::CHIP;
+        assert_eq!(c.cam_ram_bits(), 8_192);
+        assert_eq!(c.buffer_bits(), 128);
+        assert_eq!(c.total_memory_bits(), 8_320);
+    }
+
+    #[test]
+    fn index_tiny_batch() {
+        let cfg = BicConfig { n_records: 3, w_words: 2, m_keys: 2 };
+        let mut core = BicCore::new(cfg);
+        let records = vec![rec(&[5, 7]), rec(&[7, 7]), rec(&[0, 1])];
+        let bi = core.index(&records, &[7, 5]);
+        // key 7 -> records 0,1; key 5 -> record 0.
+        assert!(bi.get(0, 0) && bi.get(0, 1) && !bi.get(0, 2));
+        assert!(bi.get(1, 0) && !bi.get(1, 1) && !bi.get(1, 2));
+    }
+
+    #[test]
+    fn short_batch_pads_with_zero_columns() {
+        let cfg = BicConfig { n_records: 4, w_words: 2, m_keys: 1 };
+        let mut core = BicCore::new(cfg);
+        let bi = core.index(&[rec(&[9, 9])], &[9]);
+        assert!(bi.get(0, 0));
+        for j in 1..4 {
+            assert!(!bi.get(0, j), "padding column {j} must be zero");
+        }
+    }
+
+    #[test]
+    fn core_is_reusable_across_batches() {
+        let cfg = BicConfig { n_records: 2, w_words: 2, m_keys: 1 };
+        let mut core = BicCore::new(cfg);
+        let bi1 = core.index(&[rec(&[1, 2]), rec(&[3, 4])], &[1]);
+        let bi2 = core.index(&[rec(&[5, 6]), rec(&[7, 8])], &[1]);
+        assert!(bi1.get(0, 0));
+        assert_eq!(bi2.row(0).count_ones(), 0, "no state leaks across batches");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds core capacity")]
+    fn oversized_batch_rejected() {
+        let cfg = BicConfig { n_records: 1, w_words: 1, m_keys: 1 };
+        BicCore::new(cfg).index(&[rec(&[1]), rec(&[2])], &[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly 2 keys")]
+    fn wrong_key_count_rejected() {
+        let cfg = BicConfig { n_records: 1, w_words: 1, m_keys: 2 };
+        BicCore::new(cfg).index(&[rec(&[1])], &[1]);
+    }
+
+    #[test]
+    fn cycles_per_batch_chip() {
+        // (32 + 8) * 16 + (16 + 8 * 1) = 640 + 24 = 664.
+        assert_eq!(BicConfig::CHIP.cycles_per_batch(), 664);
+    }
+
+    #[test]
+    fn cycles_per_batch_fpga() {
+        // (256 + 16) * 256 + (256 + 16 * 8) = 69,632 + 384 = 70,016.
+        assert_eq!(BicConfig::FPGA.cycles_per_batch(), 70_016);
+    }
+}

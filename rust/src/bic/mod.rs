@@ -1,0 +1,29 @@
+//! Functional bitmap-index-creation engine: the golden model of the
+//! paper's BIC core (Fig. 3) plus the downstream bitmap/query machinery.
+//!
+//! - [`bitmap`] — packed bitmap container + bitwise algebra (the shared
+//!   layout contract with the Python kernels and AOT artifacts);
+//! - [`cam`] / [`buffer`] / [`transpose`] — functional models of the three
+//!   chip blocks;
+//! - [`core`] — the three-step indexing pipeline stitched together;
+//! - [`query`] — multi-dimensional query engine (Fig. 1 use case);
+//! - [`wah`] — WAH compression for stored bitmap rows.
+//!
+//! Timing/energy behaviour deliberately lives elsewhere (`crate::sim`,
+//! `crate::power`): this module answers only "what is the correct bitmap".
+
+pub mod bitmap;
+pub mod buffer;
+pub mod cam;
+pub mod core;
+pub mod query;
+pub mod roaring;
+pub mod transpose;
+pub mod wah;
+
+pub use bitmap::{Bitmap, BitmapIndex};
+pub use cam::{Cam, Record, PAD};
+pub use core::{BicConfig, BicCore};
+pub use query::{conjunctive, Query, QueryError};
+pub use roaring::RoaringBitmap;
+pub use wah::WahBitmap;

@@ -1,0 +1,79 @@
+//! Functional model of the chip's transpose matrix (TM).
+//!
+//! The TM reads the record-major `N x M` buffer contents and emits the
+//! key-major `M x N` bitmap index, one BI row at a time (control unit =
+//! read/write sequencing; transpose unit = the actual row/column swap).
+//! The packed-word output here is the same layout the AOT artifact
+//! produces, so all three implementations are word-for-word comparable.
+
+use super::bitmap::{Bitmap, BitmapIndex};
+
+/// Transpose drained buffer contents (record-major `N x M`) into a
+/// key-major `M x N` [`BitmapIndex`].
+pub fn transpose(bits: &[bool], n: usize, m: usize) -> BitmapIndex {
+    assert_eq!(bits.len(), n * m, "bit count mismatch");
+    let mut rows = Vec::with_capacity(m);
+    for i in 0..m {
+        let mut row = Bitmap::zeros(n);
+        for j in 0..n {
+            if bits[j * m + i] {
+                row.set(j, true);
+            }
+        }
+        rows.push(row);
+    }
+    BitmapIndex::from_rows(rows)
+}
+
+/// Transpose a `BitmapIndex` back to record-major bools (the inverse view;
+/// used by tests to state the involution property).
+pub fn untranspose(bi: &BitmapIndex) -> Vec<bool> {
+    let (m, n) = (bi.num_attrs(), bi.num_objects());
+    let mut bits = vec![false; n * m];
+    for i in 0..m {
+        for j in bi.row(i).iter_ones() {
+            bits[j * m + i] = true;
+        }
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_transpose() {
+        // 2 records x 3 keys, record-major.
+        let bits = [true, false, true, false, true, true];
+        let bi = transpose(&bits, 2, 3);
+        assert_eq!(bi.num_attrs(), 3);
+        assert_eq!(bi.num_objects(), 2);
+        // key 0: records {0}; key 1: records {1}; key 2: records {0,1}.
+        assert!(bi.get(0, 0) && !bi.get(0, 1));
+        assert!(!bi.get(1, 0) && bi.get(1, 1));
+        assert!(bi.get(2, 0) && bi.get(2, 1));
+    }
+
+    #[test]
+    fn involution() {
+        let n = 7;
+        let m = 5;
+        let bits: Vec<bool> = (0..n * m).map(|i| (i * 37) % 3 == 0).collect();
+        let bi = transpose(&bits, n, m);
+        assert_eq!(untranspose(&bi), bits);
+    }
+
+    #[test]
+    fn empty_dimensions() {
+        let bi = transpose(&[], 0, 0);
+        assert_eq!(bi.num_attrs(), 0);
+        assert_eq!(bi.num_objects(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bit count mismatch")]
+    fn wrong_size_panics() {
+        transpose(&[true], 2, 3);
+    }
+}

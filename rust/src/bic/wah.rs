@@ -1,0 +1,428 @@
+//! Word-Aligned Hybrid (WAH) compression for bitmap rows.
+//!
+//! Bitmap indices are stored compressed in practice (the paper's citation
+//! [1]/[9] lineage — FastBit-style WAH); the coordinator's external-memory
+//! model charges bytes for BI results, so a real compressor belongs in the
+//! library. 31-bit-payload WAH over our 32-bit words:
+//!
+//! - literal word:  MSB=0, low 31 bits are a verbatim 31-bit group;
+//! - fill word:     MSB=1, bit 30 = fill bit, low 30 bits = run length in
+//!   31-bit groups (>= 1).
+//!
+//! The last (possibly partial) group carries `len % 31` meaningful bits;
+//! the uncompressed length is stored alongside so round-trips are exact.
+
+use super::bitmap::Bitmap;
+
+const GROUP_BITS: usize = 31;
+const FILL_FLAG: u32 = 1 << 31;
+const FILL_BIT: u32 = 1 << 30;
+const MAX_RUN: u32 = (1 << 30) - 1;
+
+/// A WAH-compressed bitmap.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WahBitmap {
+    nbits: usize,
+    words: Vec<u32>,
+}
+
+/// Streaming run-length encoder over 31-bit groups (shared by `compress`
+/// and the direct compressed AND/OR paths).
+struct GroupCompressor {
+    words: Vec<u32>,
+    run_bit: Option<bool>,
+    run_len: u32,
+}
+
+impl GroupCompressor {
+    fn new() -> Self {
+        Self { words: Vec::new(), run_bit: None, run_len: 0 }
+    }
+
+    /// Pre-size for a worst-case all-literals stream (avoids regrowth on
+    /// dense inputs, the compressor's worst case).
+    fn with_capacity(ngroups: usize) -> Self {
+        Self { words: Vec::with_capacity(ngroups), run_bit: None, run_len: 0 }
+    }
+
+    fn flush_run(&mut self, bit: bool, len: u32) {
+        debug_assert!(len >= 1);
+        if len == 1 {
+            // A 1-group run encodes smaller as a literal.
+            self.words.push(if bit { (1u32 << GROUP_BITS) - 1 } else { 0 });
+        } else {
+            self.words.push(FILL_FLAG | if bit { FILL_BIT } else { 0 } | len);
+        }
+    }
+
+    /// Push one group. The trailing partial group must be pushed with
+    /// `is_partial = true` so it never joins a fill (its padding bits are
+    /// not real).
+    fn push(&mut self, group: u32, is_partial: bool) {
+        let full_ones = group == (1u32 << GROUP_BITS) - 1;
+        let full_zeros = group == 0;
+        if !is_partial && (full_ones || full_zeros) {
+            let bit = full_ones;
+            match self.run_bit {
+                Some(b) if b == bit && self.run_len < MAX_RUN => self.run_len += 1,
+                Some(b) => {
+                    let len = self.run_len;
+                    self.flush_run(b, len);
+                    self.run_bit = Some(bit);
+                    self.run_len = 1;
+                }
+                None => {
+                    self.run_bit = Some(bit);
+                    self.run_len = 1;
+                }
+            }
+        } else {
+            if let Some(b) = self.run_bit.take() {
+                let len = self.run_len;
+                self.flush_run(b, len);
+                self.run_len = 0;
+            }
+            self.words.push(group);
+        }
+    }
+
+    /// Push `len` identical full groups in O(1).
+    fn push_run(&mut self, bit: bool, mut len: u32) {
+        match self.run_bit {
+            Some(b) if b == bit => {
+                let room = MAX_RUN - self.run_len;
+                let take = len.min(room);
+                self.run_len += take;
+                len -= take;
+            }
+            Some(b) => {
+                let l = self.run_len;
+                self.flush_run(b, l);
+                self.run_bit = None;
+            }
+            None => {}
+        }
+        while len > 0 {
+            let take = len.min(MAX_RUN);
+            if self.run_bit.is_some() {
+                let b = self.run_bit.take().unwrap();
+                let l = self.run_len;
+                self.flush_run(b, l);
+            }
+            self.run_bit = Some(bit);
+            self.run_len = take;
+            len -= take;
+            if len > 0 {
+                // Saturated run: flush and keep going.
+                let l = self.run_len;
+                self.flush_run(bit, l);
+                self.run_bit = None;
+            }
+        }
+    }
+
+    fn finish(mut self) -> Vec<u32> {
+        if let Some(b) = self.run_bit {
+            let len = self.run_len;
+            self.flush_run(b, len);
+        }
+        self.words
+    }
+}
+
+impl WahBitmap {
+    /// Compress a bitmap. Groups are extracted word-at-a-time (a u64
+    /// window across the two backing words), not bit-by-bit — the §Perf
+    /// pass took this from 75 MB/s to GB/s-class.
+    pub fn compress(bm: &Bitmap) -> Self {
+        let nbits = bm.len();
+        let ngroups = nbits.div_ceil(GROUP_BITS);
+        let mut enc = GroupCompressor::with_capacity(ngroups);
+        for g in 0..ngroups {
+            let group = extract_group(bm, g);
+            let is_partial = g == ngroups - 1 && nbits % GROUP_BITS != 0;
+            enc.push(group, is_partial);
+        }
+        Self { nbits, words: enc.finish() }
+    }
+
+    /// Decompress back to a plain bitmap (word-level writes).
+    pub fn decompress(&self) -> Bitmap {
+        let mut bm = Bitmap::zeros(self.nbits);
+        let mut bit_pos = 0usize;
+        for &w in &self.words {
+            if w & FILL_FLAG != 0 {
+                let bit = w & FILL_BIT != 0;
+                let len = (w & MAX_RUN) as usize;
+                if bit {
+                    set_ones_range(bm.words_mut(), bit_pos, len * GROUP_BITS);
+                }
+                bit_pos += len * GROUP_BITS;
+            } else {
+                let take = GROUP_BITS.min(self.nbits - bit_pos);
+                let mask = if take == 32 { u32::MAX } else { (1u32 << take) - 1 };
+                or_group(bm.words_mut(), bit_pos, w & mask);
+                bit_pos += take;
+            }
+        }
+        debug_assert!(bit_pos >= self.nbits.saturating_sub(GROUP_BITS));
+        bm
+    }
+
+    /// Uncompressed length in bits.
+    pub fn len(&self) -> usize {
+        self.nbits
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nbits == 0
+    }
+
+    /// Compressed size in bytes (what the extmem model charges).
+    pub fn compressed_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    /// Uncompressed size in bytes, for ratio reporting.
+    pub fn uncompressed_bytes(&self) -> usize {
+        self.nbits.div_ceil(8)
+    }
+
+    /// Compression ratio (uncompressed / compressed); > 1 is a win.
+    pub fn ratio(&self) -> f64 {
+        if self.compressed_bytes() == 0 {
+            return 1.0;
+        }
+        self.uncompressed_bytes() as f64 / self.compressed_bytes() as f64
+    }
+
+    /// Bitwise AND directly on the compressed form (run-aware merge) —
+    /// the operation FastBit-style query engines live on. The merged
+    /// group stream feeds the run-length encoder directly; no
+    /// intermediate bitmap is materialized (§Perf: 3.2 ms -> µs-class
+    /// on 1 Mbit rows).
+    pub fn and(&self, other: &Self) -> Self {
+        self.merge(other, |a, b| a & b)
+    }
+
+    /// Bitwise OR on the compressed form.
+    pub fn or(&self, other: &Self) -> Self {
+        self.merge(other, |a, b| a | b)
+    }
+
+    fn merge(&self, other: &Self, op: impl Fn(u32, u32) -> u32) -> Self {
+        assert_eq!(self.nbits, other.nbits, "length mismatch");
+        let mut a = GroupCursor::new(&self.words);
+        let mut b = GroupCursor::new(&other.words);
+        let ngroups = self.nbits.div_ceil(GROUP_BITS);
+        let has_partial = self.nbits % GROUP_BITS != 0;
+        let mut enc = GroupCompressor::new();
+        let mut consumed = 0usize;
+        while consumed < ngroups {
+            // Fast path: both cursors inside fills — emit the overlap as
+            // one run in O(1). (Fills never cover a trailing partial
+            // group by construction, so this path cannot overrun it.)
+            let span = a.fill_remaining.min(b.fill_remaining) as usize;
+            if span >= 1 {
+                let merged = op(a.fill_value, b.fill_value);
+                debug_assert!(merged == 0 || merged == (1u32 << GROUP_BITS) - 1);
+                enc.push_run(merged != 0, span as u32);
+                a.skip(span as u32);
+                b.skip(span as u32);
+                consumed += span;
+                continue;
+            }
+            let is_partial = has_partial && consumed == ngroups - 1;
+            enc.push(op(a.next_group(), b.next_group()), is_partial);
+            consumed += 1;
+        }
+        Self { nbits: self.nbits, words: enc.finish() }
+    }
+
+    /// Count of set bits without decompressing.
+    pub fn count_ones(&self) -> usize {
+        let mut total = 0usize;
+        let mut bit_pos = 0usize;
+        for &w in &self.words {
+            if w & FILL_FLAG != 0 {
+                let len = (w & MAX_RUN) as usize;
+                if w & FILL_BIT != 0 {
+                    total += len * GROUP_BITS;
+                }
+                bit_pos += len * GROUP_BITS;
+            } else {
+                let take = GROUP_BITS.min(self.nbits - bit_pos);
+                total += (w & ((1u64 << take) - 1) as u32).count_ones() as usize;
+                bit_pos += take;
+            }
+        }
+        total
+    }
+
+}
+
+/// Extract 31-bit group `g` of a bitmap (trailing bits zero) via a u64
+/// window over the two backing words — no per-bit probing.
+#[inline]
+fn extract_group(bm: &Bitmap, g: usize) -> u32 {
+    let words = bm.words();
+    let start = g * GROUP_BITS;
+    let wi = start / 32;
+    let off = start % 32;
+    let lo = words[wi] as u64;
+    let hi = *words.get(wi + 1).unwrap_or(&0) as u64;
+    ((((hi << 32) | lo) >> off) as u32) & ((1u32 << GROUP_BITS) - 1)
+}
+
+/// OR a 31-bit group into packed words at bit offset `start`.
+#[inline]
+fn or_group(words: &mut [u32], start: usize, group: u32) {
+    let wi = start / 32;
+    let off = start % 32;
+    words[wi] |= group << off;
+    // The group spills (off - 1) bits into the next word (absent for the
+    // trailing partial group, whose masked bits all fit).
+    if off > 1 && wi + 1 < words.len() {
+        words[wi + 1] |= group >> (32 - off);
+    }
+}
+
+/// Set `len` consecutive bits starting at `start`, word-at-a-time.
+fn set_ones_range(words: &mut [u32], start: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    let end = start + len; // exclusive
+    let (w0, b0) = (start / 32, start % 32);
+    let (w1, b1) = (end / 32, end % 32);
+    if w0 == w1 {
+        let mask = (((1u64 << (b1 - b0)) - 1) << b0) as u32;
+        words[w0] |= mask;
+        return;
+    }
+    words[w0] |= u32::MAX << b0;
+    for w in words.iter_mut().take(w1).skip(w0 + 1) {
+        *w = u32::MAX;
+    }
+    if b1 > 0 {
+        words[w1] |= (1u32 << b1) - 1;
+    }
+}
+
+/// Streaming reader that yields uncompressed 31-bit groups from WAH words.
+struct GroupCursor<'a> {
+    words: &'a [u32],
+    idx: usize,
+    fill_remaining: u32,
+    fill_value: u32,
+}
+
+impl<'a> GroupCursor<'a> {
+    fn new(words: &'a [u32]) -> Self {
+        Self { words, idx: 0, fill_remaining: 0, fill_value: 0 }
+    }
+
+    /// Consume `n` pending fill groups (caller checked `fill_remaining`).
+    #[inline]
+    fn skip(&mut self, n: u32) {
+        debug_assert!(n <= self.fill_remaining);
+        self.fill_remaining -= n;
+    }
+
+    fn next_group(&mut self) -> u32 {
+        if self.fill_remaining > 0 {
+            self.fill_remaining -= 1;
+            return self.fill_value;
+        }
+        let w = self.words[self.idx];
+        self.idx += 1;
+        if w & FILL_FLAG != 0 {
+            let len = w & MAX_RUN;
+            self.fill_value =
+                if w & FILL_BIT != 0 { (1u32 << GROUP_BITS) - 1 } else { 0 };
+            self.fill_remaining = len - 1;
+            self.fill_value
+        } else {
+            w
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bm_from(pattern: impl Iterator<Item = bool>) -> Bitmap {
+        let bits: Vec<bool> = pattern.collect();
+        Bitmap::from_bools(&bits)
+    }
+
+    #[test]
+    fn roundtrip_dense_random() {
+        let bm = bm_from((0..500).map(|i| (i * 2654435761u64) % 3 == 0));
+        let wah = WahBitmap::compress(&bm);
+        assert_eq!(wah.decompress(), bm);
+    }
+
+    #[test]
+    fn roundtrip_sparse() {
+        let mut bm = Bitmap::zeros(10_000);
+        for i in [0, 5_000, 9_999] {
+            bm.set(i, true);
+        }
+        let wah = WahBitmap::compress(&bm);
+        assert_eq!(wah.decompress(), bm);
+        assert!(
+            wah.compressed_bytes() < bm.len() / 8 / 10,
+            "sparse bitmap should compress >10x: {} bytes",
+            wah.compressed_bytes()
+        );
+    }
+
+    #[test]
+    fn roundtrip_all_ones_and_zeros() {
+        for nbits in [1, 30, 31, 32, 62, 63, 1000] {
+            let ones = Bitmap::ones(nbits);
+            let zeros = Bitmap::zeros(nbits);
+            assert_eq!(WahBitmap::compress(&ones).decompress(), ones, "n={nbits}");
+            assert_eq!(WahBitmap::compress(&zeros).decompress(), zeros, "n={nbits}");
+        }
+    }
+
+    #[test]
+    fn long_zero_run_is_one_fill_word() {
+        let bm = Bitmap::zeros(31 * 100);
+        let wah = WahBitmap::compress(&bm);
+        assert_eq!(wah.compressed_bytes(), 4);
+    }
+
+    #[test]
+    fn count_ones_without_decompress() {
+        let bm = bm_from((0..777).map(|i| i % 7 == 0));
+        let wah = WahBitmap::compress(&bm);
+        assert_eq!(wah.count_ones(), bm.count_ones());
+    }
+
+    #[test]
+    fn compressed_and_or_match_plain() {
+        let a = bm_from((0..400).map(|i| i % 5 == 0));
+        let b = bm_from((0..400).map(|i| i % 3 == 0 || i > 350));
+        let (wa, wb) = (WahBitmap::compress(&a), WahBitmap::compress(&b));
+        assert_eq!(wa.and(&wb).decompress(), a.and(&b));
+        assert_eq!(wa.or(&wb).decompress(), a.or(&b));
+    }
+
+    #[test]
+    fn ratio_reports_win_on_runs() {
+        let bm = Bitmap::zeros(31 * 1000);
+        assert!(WahBitmap::compress(&bm).ratio() > 100.0);
+    }
+
+    #[test]
+    fn empty_bitmap() {
+        let bm = Bitmap::zeros(0);
+        let wah = WahBitmap::compress(&bm);
+        assert_eq!(wah.decompress(), bm);
+        assert_eq!(wah.count_ones(), 0);
+    }
+}

@@ -1,0 +1,293 @@
+//! CLI dispatcher: the `sotb-bic` leader binary.
+//!
+//! ```text
+//! sotb-bic experiment <id|all> [--full] [--json DIR] [--csv DIR]
+//! sotb-bic index  [--variant chip] [--batches 8] [--seed 1] [--golden-only]
+//! sotb-bic serve  [--cores 8] [--rate 2000] [--duration 2] [--policy ladder]
+//! sotb-bic query  [--objects 100000] [--attrs 16] [--seed 1]
+//! sotb-bic help
+//! ```
+
+use crate::bic::{BicConfig, BicCore, Query, WahBitmap};
+use crate::coordinator::{
+    ArrivalProcess, ContentDist, Policy, Scheduler, SchedulerConfig, WorkloadGen,
+};
+use crate::experiments;
+use crate::runtime::{BicExecutable, Manifest, Runtime};
+use crate::substrate::cli::Args;
+use crate::substrate::rng::Xoshiro256;
+use crate::substrate::stats::format_si;
+
+const HELP: &str = "\
+sotb-bic — multi-core bitmap-index-creation runtime (65-nm SOTB BIC reproduction)
+
+USAGE:
+    sotb-bic <subcommand> [flags]
+
+SUBCOMMANDS:
+    experiment <id|all>   regenerate a paper table/figure
+                          ids: fig5 fig6 fig7 fig8 table1 claims throughput multicore
+                          flags: --full (bench-scale sweeps), --json DIR, --csv DIR
+    index                 index random batches through the AOT artifact (PJRT)
+                          and cross-check against the golden model
+                          flags: --variant NAME --batches N --seed S --golden-only
+    serve                 run the multi-core coordinator on a synthetic workload
+                          flags: --cores Z --rate R --duration D
+                                 --policy always-on|cg|ladder|rbb --vdd V
+    query                 build an index and run Fig. 1-style queries
+                          flags: --objects N --attrs M --seed S
+    help                  this text
+";
+
+/// Entry point; returns the process exit code.
+pub fn cli_main(raw: Vec<String>) -> i32 {
+    match run(raw) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(&raw)?;
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some("experiment") => cmd_experiment(&args),
+        Some("index") => cmd_index(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("query") => cmd_query(&args),
+        Some(other) => Err(format!("unknown subcommand {other:?}; see `sotb-bic help`")),
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<(), String> {
+    let id = args
+        .positionals()
+        .first()
+        .map(String::as_str)
+        .ok_or("experiment: missing id (or `all`)")?;
+    let full = args.has("full");
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let r = run_experiment(id, full).ok_or_else(|| format!("unknown experiment {id:?}"))?;
+        println!("{}", r.render());
+        if let Some(dir) = args.get("json") {
+            let path = std::path::Path::new(dir).join(format!("{id}.json"));
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            std::fs::write(&path, r.json.render()).map_err(|e| e.to_string())?;
+            println!("wrote {}", path.display());
+        }
+        if let Some(dir) = args.get("csv") {
+            let path = std::path::Path::new(dir).join(format!("{id}.csv"));
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            std::fs::write(&path, r.table.to_csv()).map_err(|e| e.to_string())?;
+            println!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn run_experiment(id: &str, full: bool) -> Option<experiments::ExperimentResult> {
+    use experiments::{multicore, throughput};
+    if full {
+        match id {
+            "throughput" => return Some(throughput::run(throughput::Scale::Full)),
+            "multicore" => return Some(multicore::run(multicore::Scale::Full)),
+            _ => {}
+        }
+    }
+    experiments::run(id)
+}
+
+fn cmd_index(args: &Args) -> Result<(), String> {
+    let variant_name = args.get("variant").unwrap_or("chip");
+    let batches: usize = args.get_parsed("batches", 8)?;
+    let seed: u64 = args.get_parsed("seed", 1)?;
+    let golden_only = args.has("golden-only");
+
+    let dir = Manifest::default_dir();
+    let manifest = Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+    let v = manifest
+        .find_bic(variant_name)
+        .ok_or_else(|| format!("unknown variant {variant_name:?}"))?;
+    let cfg = BicConfig { n_records: v.n, w_words: v.w, m_keys: v.m };
+    println!(
+        "variant {} : n={} records x w={} words, m={} keys",
+        v.name, v.n, v.w, v.m
+    );
+
+    let mut gen = WorkloadGen::new(cfg, ContentDist::Uniform, seed);
+    let mut golden = BicCore::new(cfg);
+    let exe = if golden_only {
+        None
+    } else {
+        let rt = Runtime::cpu().map_err(|e| format!("{e:#}"))?;
+        Some(BicExecutable::load(&rt, v).map_err(|e| format!("{e:#}"))?)
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut bytes = 0usize;
+    let mut ones = 0usize;
+    for i in 0..batches {
+        let b = gen.batch_at(i as f64);
+        bytes += b.input_bytes();
+        let bi_golden = golden.index(&b.records, &b.keys);
+        if let Some(exe) = &exe {
+            let bi_pjrt = exe.index(&b.records, &b.keys).map_err(|e| format!("{e:#}"))?;
+            if bi_pjrt != bi_golden {
+                return Err(format!("batch {i}: PJRT result != golden model"));
+            }
+        }
+        ones += (0..cfg.m_keys).map(|k| bi_golden.row(k).count_ones()).sum::<usize>();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{batches} batches, {bytes} input bytes, {ones} set bits, {:.2} ms total ({})",
+        dt * 1e3,
+        format_si(bytes as f64 / dt, "B/s"),
+    );
+    if exe.is_some() {
+        println!("PJRT artifact output verified against the golden model ✓");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cores: usize = args.get_parsed("cores", 8)?;
+    let rate: f64 = args.get_parsed("rate", 2_000.0)?;
+    let duration: f64 = args.get_parsed("duration", 2.0)?;
+    let vdd: f64 = args.get_parsed("vdd", 1.2)?;
+    let policy = match args.get("policy").unwrap_or("ladder") {
+        "always-on" => Policy::AlwaysOn,
+        "cg" => Policy::CgOnly { idle_to_cg: 1e-3 },
+        "ladder" => Policy::CgThenRbb { idle_to_cg: 1e-3, cg_to_rbb: 50e-3 },
+        "rbb" => Policy::ImmediateRbb,
+        other => return Err(format!("unknown policy {other:?}")),
+    };
+
+    let mut cfg = SchedulerConfig::chip_system(cores);
+    cfg.supply = crate::power::Supply::new(vdd);
+    cfg.policy = policy;
+    cfg.compute_results = false;
+    let mut gen = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 42);
+    let trace = gen.trace(ArrivalProcess::Steady { rate }, duration);
+    println!("offered {} batches over {duration} s at ~{rate}/s on {cores} cores", trace.len());
+    let r = Scheduler::new(cfg).run(trace);
+    println!(
+        "completed {}/{} | throughput {:.2} MB/s | avg power {} | p50 {} p99 {}",
+        r.completed,
+        r.offered,
+        r.throughput_mbps(),
+        format_si(r.avg_power(), "W"),
+        format_si(r.latency.p50, "s"),
+        format_si(r.latency.p99, "s"),
+    );
+    let e = &r.energy;
+    println!(
+        "energy: active {} | idle {} | cg {} | rbb {} | waking {} (total {})",
+        format_si(e.active, "J"),
+        format_si(e.idle, "J"),
+        format_si(e.cg, "J"),
+        format_si(e.rbb, "J"),
+        format_si(e.waking, "J"),
+        format_si(e.total(), "J"),
+    );
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<(), String> {
+    let objects: usize = args.get_parsed("objects", 100_000)?;
+    let attrs: usize = args.get_parsed("attrs", 16)?;
+    let seed: u64 = args.get_parsed("seed", 1)?;
+    let mut rng = Xoshiro256::seeded(seed);
+
+    // Build a synthetic index directly (each object gets a few attrs).
+    let mut bi = crate::bic::BitmapIndex::new(attrs, objects);
+    for obj in 0..objects {
+        let k = 1 + rng.next_below(3) as usize;
+        for _ in 0..k {
+            bi.set(rng.next_below(attrs as u64) as usize, obj, true);
+        }
+    }
+    // Fig. 1's query shape: A2 AND A4 AND (NOT A5).
+    let q = Query::attr(1).and(Query::attr(3)).and(Query::attr(4).not());
+    let t0 = std::time::Instant::now();
+    let hits = q.eval(&bi).map_err(|e| e.to_string())?;
+    let dt = t0.elapsed();
+    println!(
+        "A2 AND A4 AND (NOT A5) over {objects} objects x {attrs} attrs: {} hits in {:?} ({} ops)",
+        hits.count_ones(),
+        dt,
+        q.op_count(),
+    );
+    let row = bi.row(1);
+    let wah = WahBitmap::compress(row);
+    println!(
+        "row A2: {} set bits, WAH {} -> {} bytes ({:.1}x)",
+        row.count_ones(),
+        wah.uncompressed_bytes(),
+        wah.compressed_bytes(),
+        wah.ratio(),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn call(toks: &[&str]) -> i32 {
+        cli_main(toks.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn help_succeeds() {
+        assert_eq!(call(&["help"]), 0);
+        assert_eq!(call(&[]), 0);
+    }
+
+    #[test]
+    fn unknown_subcommand_fails() {
+        assert_eq!(call(&["frobnicate"]), 1);
+    }
+
+    #[test]
+    fn experiment_fig6_runs() {
+        assert_eq!(call(&["experiment", "fig6"]), 0);
+    }
+
+    #[test]
+    fn experiment_unknown_id_fails() {
+        assert_eq!(call(&["experiment", "fig99"]), 1);
+    }
+
+    #[test]
+    fn query_demo_runs() {
+        assert_eq!(call(&["query", "--objects", "1000", "--attrs", "8"]), 0);
+    }
+
+    #[test]
+    fn serve_short_run() {
+        assert_eq!(
+            call(&["serve", "--cores", "2", "--rate", "500", "--duration", "0.2"]),
+            0
+        );
+    }
+
+    #[test]
+    fn index_golden_only_runs_without_artifacts() {
+        // golden-only still needs the manifest for shapes; skip if absent.
+        if Manifest::default_dir().join("manifest.txt").exists() {
+            assert_eq!(call(&["index", "--batches", "2", "--golden-only"]), 0);
+        }
+    }
+}

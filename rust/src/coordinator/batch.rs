@@ -1,0 +1,131 @@
+//! Batch types: the unit of work the multi-core system routes (Fig. 4 —
+//! "each set of records and keys is stored as a batch in an external
+//! memory in advance").
+
+use crate::bic::bitmap::BitmapIndex;
+use crate::bic::BicConfig;
+
+/// One unit of indexing work.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub id: u64,
+    /// Arrival time [s] in the workload trace.
+    pub arrival: f64,
+    pub records: Vec<Vec<i32>>,
+    pub keys: Vec<i32>,
+}
+
+impl Batch {
+    /// Input bytes this batch occupies in external memory (one byte per
+    /// alphabet word — the chip's native record format).
+    pub fn input_bytes(&self) -> usize {
+        self.records.iter().map(Vec::len).sum::<usize>() + self.keys.len()
+    }
+
+    /// Output bytes of the packed BI result for config `cfg`.
+    pub fn output_bytes(&self, cfg: &BicConfig) -> usize {
+        cfg.m_keys * cfg.n_records.div_ceil(32) * 4
+    }
+
+    /// Validate against a core configuration.
+    pub fn check(&self, cfg: &BicConfig) -> Result<(), String> {
+        if self.records.len() > cfg.n_records {
+            return Err(format!(
+                "batch {}: {} records > capacity {}",
+                self.id,
+                self.records.len(),
+                cfg.n_records
+            ));
+        }
+        if self.keys.len() != cfg.m_keys {
+            return Err(format!(
+                "batch {}: {} keys != {}",
+                self.id,
+                self.keys.len(),
+                cfg.m_keys
+            ));
+        }
+        if let Some(r) = self.records.iter().find(|r| r.len() > cfg.w_words) {
+            return Err(format!(
+                "batch {}: record of {} words > width {}",
+                self.id,
+                r.len(),
+                cfg.w_words
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A completed batch.
+#[derive(Clone, Debug)]
+pub struct CompletedBatch {
+    pub id: u64,
+    pub arrival: f64,
+    /// When the core finished computing [s].
+    pub completed: f64,
+    /// When the result transfer to external memory finished [s].
+    pub stored: f64,
+    /// Core that executed it.
+    pub core: usize,
+    /// Clock cycles spent.
+    pub cycles: u64,
+    /// The index, when result computation was requested (None in
+    /// timing-only simulations of very long traces).
+    pub index: Option<BitmapIndex>,
+}
+
+impl CompletedBatch {
+    /// End-to-end latency [s].
+    pub fn latency(&self) -> f64 {
+        self.stored - self.arrival
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(id: u64, nrec: usize, w: usize, m: usize) -> Batch {
+        Batch {
+            id,
+            arrival: 0.0,
+            records: vec![vec![1; w]; nrec],
+            keys: vec![2; m],
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let b = mk(1, 4, 8, 3);
+        assert_eq!(b.input_bytes(), 4 * 8 + 3);
+        assert_eq!(b.output_bytes(&BicConfig::CHIP), 8 * 1 * 4);
+    }
+
+    #[test]
+    fn check_accepts_fitting_batch() {
+        let b = mk(1, 16, 32, 8);
+        assert!(b.check(&BicConfig::CHIP).is_ok());
+    }
+
+    #[test]
+    fn check_rejects_oversize() {
+        assert!(mk(1, 17, 32, 8).check(&BicConfig::CHIP).is_err());
+        assert!(mk(1, 16, 33, 8).check(&BicConfig::CHIP).is_err());
+        assert!(mk(1, 16, 32, 9).check(&BicConfig::CHIP).is_err());
+    }
+
+    #[test]
+    fn latency_is_store_minus_arrival() {
+        let c = CompletedBatch {
+            id: 0,
+            arrival: 1.0,
+            completed: 3.0,
+            stored: 3.5,
+            core: 0,
+            cycles: 10,
+            index: None,
+        };
+        assert!((c.latency() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,131 @@
+//! External-memory model: the single shared channel batches arrive
+//! through and BI results return through (Fig. 4's "external memory").
+//!
+//! A bandwidth-limited FIFO channel: each transfer occupies the channel
+//! for `bytes / bandwidth` seconds; concurrent requests queue. This is
+//! the substitution for the authors' host interface (DESIGN.md §7) — it
+//! exercises the same backpressure path a DMA engine would.
+
+/// Bandwidth-limited transfer channel.
+#[derive(Clone, Debug)]
+pub struct ExtMem {
+    /// Channel bandwidth [bytes/s].
+    bandwidth: f64,
+    /// Time the channel becomes free.
+    busy_until: f64,
+    /// Totals for conservation checks + metrics.
+    bytes_in: u64,
+    bytes_out: u64,
+    transfers: u64,
+    /// Total time requests spent waiting for the channel.
+    queue_wait: f64,
+}
+
+/// Direction of a transfer (for accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// Records+keys: memory -> core.
+    In,
+    /// BI result: core -> memory.
+    Out,
+}
+
+impl ExtMem {
+    pub fn new(bandwidth: f64) -> Self {
+        assert!(bandwidth > 0.0, "bandwidth must be positive");
+        Self {
+            bandwidth,
+            busy_until: 0.0,
+            bytes_in: 0,
+            bytes_out: 0,
+            transfers: 0,
+            queue_wait: 0.0,
+        }
+    }
+
+    pub fn bandwidth(&self) -> f64 {
+        self.bandwidth
+    }
+
+    /// Request a transfer of `bytes` starting no earlier than `now`;
+    /// returns the completion time. FIFO: the channel serves requests in
+    /// call order (the scheduler calls in event order).
+    pub fn transfer(&mut self, now: f64, bytes: usize, dir: Dir) -> f64 {
+        let start = now.max(self.busy_until);
+        self.queue_wait += start - now;
+        let dur = bytes as f64 / self.bandwidth;
+        self.busy_until = start + dur;
+        self.transfers += 1;
+        match dir {
+            Dir::In => self.bytes_in += bytes as u64,
+            Dir::Out => self.bytes_out += bytes as u64,
+        }
+        self.busy_until
+    }
+
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    /// Cumulative queueing delay [s] — the backpressure signal.
+    pub fn queue_wait(&self) -> f64 {
+        self.queue_wait
+    }
+
+    /// Channel utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon: f64) -> f64 {
+        ((self.bytes_in + self.bytes_out) as f64 / self.bandwidth / horizon)
+            .min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_bytes_over_bandwidth() {
+        let mut m = ExtMem::new(1000.0);
+        let done = m.transfer(0.0, 500, Dir::In);
+        assert!((done - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn back_to_back_transfers_queue() {
+        let mut m = ExtMem::new(100.0);
+        let d1 = m.transfer(0.0, 100, Dir::In); // busy until 1.0
+        let d2 = m.transfer(0.5, 100, Dir::Out); // must wait until 1.0
+        assert!((d1 - 1.0).abs() < 1e-12);
+        assert!((d2 - 2.0).abs() < 1e-12);
+        assert!((m.queue_wait() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_channel_starts_immediately() {
+        let mut m = ExtMem::new(100.0);
+        m.transfer(0.0, 100, Dir::In);
+        let d = m.transfer(5.0, 100, Dir::In);
+        assert!((d - 6.0).abs() < 1e-12);
+        assert_eq!(m.queue_wait(), 0.0);
+    }
+
+    #[test]
+    fn accounting() {
+        let mut m = ExtMem::new(1e6);
+        m.transfer(0.0, 300, Dir::In);
+        m.transfer(0.0, 200, Dir::Out);
+        assert_eq!(m.bytes_in(), 300);
+        assert_eq!(m.bytes_out(), 200);
+        assert_eq!(m.transfers(), 2);
+        let u = m.utilization(1.0);
+        assert!((u - 500e-6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,123 @@
+//! Run metrics: latency distribution, throughput, and energy-efficiency
+//! figures assembled from the scheduler's completion records and the
+//! power manager's ledger.
+
+use super::power_mgr::EnergyLedger;
+
+/// Latency distribution summary [s].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| {
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx]
+        };
+        Self {
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Full report of one coordinator run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Batches completed / offered.
+    pub completed: usize,
+    pub offered: usize,
+    /// Batches re-queued due to core failures.
+    pub requeued: u64,
+    /// Simulated horizon [s].
+    pub horizon: f64,
+    /// Record bytes indexed.
+    pub input_bytes: u64,
+    /// End-to-end latency distribution.
+    pub latency: LatencyStats,
+    /// Energy ledger across all cores [J].
+    pub energy: EnergyLedger,
+    /// External-memory queueing delay total [s].
+    pub extmem_queue_wait: f64,
+    /// External-memory channel utilization.
+    pub extmem_utilization: f64,
+}
+
+impl SimReport {
+    /// Indexing throughput [MB/s] over the horizon.
+    pub fn throughput_mbps(&self) -> f64 {
+        self.input_bytes as f64 / 1e6 / self.horizon
+    }
+
+    /// Energy per indexed input byte [J/B].
+    pub fn energy_per_byte(&self) -> f64 {
+        if self.input_bytes == 0 {
+            return 0.0;
+        }
+        self.energy.total() / self.input_bytes as f64
+    }
+
+    /// Average total power across the run [W].
+    pub fn avg_power(&self) -> f64 {
+        self.energy.total() / self.horizon
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencyStats::from_samples(&samples);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p95 - 95.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn empty_samples_are_zero() {
+        assert_eq!(LatencyStats::from_samples(&[]), LatencyStats::default());
+    }
+
+    #[test]
+    fn report_derived_metrics() {
+        let r = SimReport {
+            completed: 10,
+            offered: 10,
+            requeued: 0,
+            horizon: 2.0,
+            input_bytes: 4_000_000,
+            latency: LatencyStats::default(),
+            energy: EnergyLedger {
+                active: 1.0,
+                idle: 0.5,
+                cg: 0.25,
+                rbb: 0.25,
+                waking: 0.0,
+            },
+            extmem_queue_wait: 0.0,
+            extmem_utilization: 0.1,
+        };
+        assert!((r.throughput_mbps() - 2.0).abs() < 1e-12);
+        assert!((r.energy_per_byte() - 0.5e-6).abs() < 1e-15);
+        assert!((r.avg_power() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! The multi-core BIC coordinator — the paper's system contribution
+//! (Fig. 4) as a deployable runtime: batch router, core bank, standby
+//! power manager, external-memory channel, and workload machinery.
+//!
+//! The event loop is a discrete-event simulation over the calibrated chip
+//! models: compute time comes from `bic::BicConfig::cycles_per_batch` and
+//! the delay model, energy from `power`, and correctness from the golden
+//! model (or, on the PJRT path, the AOT artifact — see the examples).
+
+pub mod batch;
+pub mod extmem;
+pub mod metrics;
+pub mod policy;
+pub mod power_mgr;
+pub mod scheduler;
+pub mod service;
+pub mod workload;
+
+pub use batch::{Batch, CompletedBatch};
+pub use extmem::{Dir, ExtMem};
+pub use metrics::{LatencyStats, SimReport};
+pub use policy::Policy;
+pub use power_mgr::{CoreState, EnergyLedger, PowerManager};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use service::IndexService;
+pub use workload::{ArrivalProcess, ContentDist, WorkloadGen};

@@ -1,0 +1,117 @@
+//! Core-activation policies: when to park an idle core, how deep, and
+//! which core to wake for new work. The policy is the knob the paper's
+//! energy-proportionality claim hangs on ("depending on the workload, a
+//! specific number of BIC cores are activated; the remainders are put
+//! into standby mode to save the energy") — the multicore-energy bench
+//! ablates these choices.
+
+use super::power_mgr::CoreState;
+
+/// A standby-management policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    /// No management: idle cores stay in `Idle` forever (the clock tree
+    /// burns). Baseline for the ablation.
+    AlwaysOn,
+    /// Clock-gate after `idle_to_cg` seconds of idleness; never RBB.
+    CgOnly { idle_to_cg: f64 },
+    /// The paper's scheme: CG after `idle_to_cg`, then deepen to CG+RBB
+    /// after a further `cg_to_rbb` seconds.
+    CgThenRbb { idle_to_cg: f64, cg_to_rbb: f64 },
+    /// Go straight to deep standby immediately on idle (greedy; maximal
+    /// leakage saving, maximal wake-latency exposure).
+    ImmediateRbb,
+}
+
+impl Policy {
+    /// The demotion step for a core that has sat in `state` for `dwell`
+    /// seconds: `Some((next_state, after))` if a timer should fire
+    /// `after` seconds from the state's start.
+    pub fn demotion(&self, state: CoreState) -> Option<(CoreState, f64)> {
+        match (*self, state) {
+            (Policy::AlwaysOn, _) => None,
+            (Policy::CgOnly { idle_to_cg }, CoreState::Idle) => {
+                Some((CoreState::CgStandby, idle_to_cg))
+            }
+            (Policy::CgOnly { .. }, _) => None,
+            (Policy::CgThenRbb { idle_to_cg, .. }, CoreState::Idle) => {
+                Some((CoreState::CgStandby, idle_to_cg))
+            }
+            (Policy::CgThenRbb { cg_to_rbb, .. }, CoreState::CgStandby) => {
+                Some((CoreState::RbbStandby, cg_to_rbb))
+            }
+            (Policy::CgThenRbb { .. }, _) => None,
+            (Policy::ImmediateRbb, CoreState::Idle) => {
+                Some((CoreState::RbbStandby, 0.0))
+            }
+            (Policy::ImmediateRbb, _) => None,
+        }
+    }
+
+    /// Preference order when choosing a core to dispatch onto: cheaper
+    /// wake first. Returns a rank (lower = preferred) or `None` if the
+    /// core cannot take work now.
+    pub fn dispatch_rank(state: CoreState) -> Option<u8> {
+        match state {
+            CoreState::Idle => Some(0),
+            CoreState::CgStandby => Some(1),
+            CoreState::RbbStandby => Some(2),
+            CoreState::Active | CoreState::Waking { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_on_never_demotes() {
+        assert_eq!(Policy::AlwaysOn.demotion(CoreState::Idle), None);
+    }
+
+    #[test]
+    fn cg_then_rbb_ladder() {
+        let p = Policy::CgThenRbb { idle_to_cg: 0.5, cg_to_rbb: 2.0 };
+        assert_eq!(
+            p.demotion(CoreState::Idle),
+            Some((CoreState::CgStandby, 0.5))
+        );
+        assert_eq!(
+            p.demotion(CoreState::CgStandby),
+            Some((CoreState::RbbStandby, 2.0))
+        );
+        assert_eq!(p.demotion(CoreState::RbbStandby), None);
+    }
+
+    #[test]
+    fn cg_only_stops_at_cg() {
+        let p = Policy::CgOnly { idle_to_cg: 1.0 };
+        assert!(p.demotion(CoreState::CgStandby).is_none());
+    }
+
+    #[test]
+    fn immediate_rbb_skips_cg() {
+        assert_eq!(
+            Policy::ImmediateRbb.demotion(CoreState::Idle),
+            Some((CoreState::RbbStandby, 0.0))
+        );
+    }
+
+    #[test]
+    fn dispatch_prefers_cheapest_wake() {
+        assert!(
+            Policy::dispatch_rank(CoreState::Idle).unwrap()
+                < Policy::dispatch_rank(CoreState::CgStandby).unwrap()
+        );
+        assert!(
+            Policy::dispatch_rank(CoreState::CgStandby).unwrap()
+                < Policy::dispatch_rank(CoreState::RbbStandby).unwrap()
+        );
+        assert_eq!(Policy::dispatch_rank(CoreState::Active), None);
+        assert_eq!(
+            Policy::dispatch_rank(CoreState::Waking { ready_at: 1.0 }),
+            None
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! Per-core power-state machine + time-weighted energy accounting — the
+//! run-time half of the paper's standby story: depending on the workload
+//! a certain number of BIC cores are active, and the remainder are parked
+//! under CG or CG+RBB (Fig. 4).
+//!
+//! Invariants (property-tested in `rust/tests/`):
+//! - energy strictly accumulates (monotone in time);
+//! - a core in `RbbStandby` accrues energy at exactly the Fig. 8 leakage
+//!   rate — never dynamic power;
+//! - transitions out of deep standby pay the wake latency before the core
+//!   can enter `Active`.
+
+use crate::power::calibration::Hertz;
+use crate::power::{p_active, StandbyMode, Supply};
+
+/// Power state of one core.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CoreState {
+    /// Computing a batch.
+    Active,
+    /// Awake but unmanaged (clock tree still toggling).
+    Idle,
+    /// Clock-gated standby.
+    CgStandby,
+    /// Clock-gated + reverse-back-biased standby (the chip's deep mode).
+    RbbStandby,
+    /// Transitioning out of standby; usable at `ready_at`.
+    Waking { ready_at: f64 },
+}
+
+/// Energy ledger split by state category [J].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyLedger {
+    pub active: f64,
+    pub idle: f64,
+    pub cg: f64,
+    pub rbb: f64,
+    pub waking: f64,
+}
+
+impl EnergyLedger {
+    pub fn total(&self) -> f64 {
+        self.active + self.idle + self.cg + self.rbb + self.waking
+    }
+
+    /// Standby share (everything but active compute).
+    pub fn overhead(&self) -> f64 {
+        self.total() - self.active
+    }
+}
+
+#[derive(Clone, Debug)]
+struct CoreSlot {
+    state: CoreState,
+    since: f64,
+    generation: u64,
+}
+
+/// The power manager for a bank of `z` cores at one operating point.
+#[derive(Clone, Debug)]
+pub struct PowerManager {
+    supply: Supply,
+    f: Hertz,
+    rbb_vbb: f64,
+    cores: Vec<CoreSlot>,
+    ledger: EnergyLedger,
+}
+
+impl PowerManager {
+    /// All cores start in the deep-standby park state (system power-on
+    /// with no load offered).
+    pub fn new(z: usize, supply: Supply, f: Hertz, rbb_vbb: f64) -> Self {
+        assert!(z >= 1, "need at least one core");
+        Self {
+            supply,
+            f,
+            rbb_vbb,
+            cores: vec![
+                CoreSlot { state: CoreState::RbbStandby, since: 0.0, generation: 0 };
+                z
+            ],
+            ledger: EnergyLedger::default(),
+        }
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn state(&self, core: usize) -> CoreState {
+        self.cores[core].state
+    }
+
+    /// Time the core entered its current state.
+    pub fn since(&self, core: usize) -> f64 {
+        self.cores[core].since
+    }
+
+    /// Generation counter — bumps on every transition; lets the scheduler
+    /// invalidate stale demotion timers.
+    pub fn generation(&self, core: usize) -> u64 {
+        self.cores[core].generation
+    }
+
+    /// Instantaneous power [W] of a state.
+    pub fn state_power(&self, state: CoreState) -> f64 {
+        match state {
+            CoreState::Active => p_active(self.supply, self.f),
+            CoreState::Idle => {
+                StandbyMode::ActiveIdle { f: self.f }.power(self.supply)
+            }
+            CoreState::CgStandby => StandbyMode::ClockGated.power(self.supply),
+            CoreState::RbbStandby => {
+                StandbyMode::CgRbb { vbb: self.rbb_vbb }.power(self.supply)
+            }
+            // While the wells recharge the clock stays gated: CG-level
+            // leakage during wake.
+            CoreState::Waking { .. } => {
+                StandbyMode::ClockGated.power(self.supply)
+            }
+        }
+    }
+
+    /// Charge the elapsed interval at the old state's power and switch.
+    pub fn transition(&mut self, core: usize, now: f64, next: CoreState) {
+        let slot = &mut self.cores[core];
+        let dt = now - slot.since;
+        assert!(dt >= -1e-9, "time went backwards: {} -> {now}", slot.since);
+        let dt = dt.max(0.0);
+        let e = match slot.state {
+            CoreState::Active => &mut self.ledger.active,
+            CoreState::Idle => &mut self.ledger.idle,
+            CoreState::CgStandby => &mut self.ledger.cg,
+            CoreState::RbbStandby => &mut self.ledger.rbb,
+            CoreState::Waking { .. } => &mut self.ledger.waking,
+        };
+        *e += match slot.state {
+            CoreState::Active => p_active(self.supply, self.f),
+            CoreState::Idle => StandbyMode::ActiveIdle { f: self.f }.power(self.supply),
+            CoreState::CgStandby | CoreState::Waking { .. } => {
+                StandbyMode::ClockGated.power(self.supply)
+            }
+            CoreState::RbbStandby => {
+                StandbyMode::CgRbb { vbb: self.rbb_vbb }.power(self.supply)
+            }
+        } * dt;
+        slot.state = next;
+        slot.since = now;
+        slot.generation += 1;
+    }
+
+    /// Begin waking a standby core; returns when it will be ready.
+    /// Idle cores are ready immediately.
+    pub fn wake(&mut self, core: usize, now: f64) -> f64 {
+        let lat = match self.cores[core].state {
+            CoreState::Idle => return now,
+            CoreState::Active | CoreState::Waking { .. } => {
+                panic!("wake() on a busy core")
+            }
+            CoreState::CgStandby => {
+                StandbyMode::ClockGated.wakeup_latency(self.f)
+            }
+            CoreState::RbbStandby => {
+                StandbyMode::CgRbb { vbb: self.rbb_vbb }.wakeup_latency(self.f)
+            }
+        };
+        let ready_at = now + lat;
+        self.transition(core, now, CoreState::Waking { ready_at });
+        ready_at
+    }
+
+    /// Finalize the ledger at `horizon` (charges every core's tail
+    /// interval) and return it.
+    pub fn finalize(&mut self, horizon: f64) -> EnergyLedger {
+        for core in 0..self.cores.len() {
+            let state = self.cores[core].state;
+            self.transition(core, horizon, state);
+        }
+        self.ledger
+    }
+
+    /// Current ledger without finalizing (tail intervals not charged).
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(z: usize) -> PowerManager {
+        PowerManager::new(z, Supply::new(0.4), 10.1e6, -2.0)
+    }
+
+    #[test]
+    fn parked_core_accrues_rbb_leakage_only() {
+        let mut m = mgr(1);
+        let ledger = m.finalize(100.0);
+        // 2.64 nW * 100 s = 264 nJ.
+        assert!((ledger.rbb - 264e-9).abs() / 264e-9 < 0.03, "{}", ledger.rbb);
+        assert_eq!(ledger.active, 0.0);
+        assert_eq!(ledger.idle, 0.0);
+    }
+
+    #[test]
+    fn active_interval_charged_at_active_power() {
+        let mut m = mgr(1);
+        m.transition(0, 0.0, CoreState::Active);
+        m.transition(0, 2.0, CoreState::Idle);
+        let p = m.state_power(CoreState::Active);
+        let ledger = m.finalize(2.0);
+        assert!((ledger.active - 2.0 * p).abs() / (2.0 * p) < 1e-9);
+    }
+
+    #[test]
+    fn wake_from_rbb_pays_latency() {
+        let mut m = mgr(1);
+        let ready = m.wake(0, 1.0);
+        assert!((ready - 1.0 - 50e-6).abs() < 1e-12);
+        assert!(matches!(m.state(0), CoreState::Waking { .. }));
+    }
+
+    #[test]
+    fn wake_from_idle_is_free() {
+        let mut m = mgr(1);
+        m.transition(0, 0.0, CoreState::Idle);
+        assert_eq!(m.wake(0, 5.0), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "busy core")]
+    fn wake_active_panics() {
+        let mut m = mgr(1);
+        m.transition(0, 0.0, CoreState::Active);
+        m.wake(0, 1.0);
+    }
+
+    #[test]
+    fn state_power_ordering() {
+        let m = mgr(2);
+        let active = m.state_power(CoreState::Active);
+        let idle = m.state_power(CoreState::Idle);
+        let cg = m.state_power(CoreState::CgStandby);
+        let rbb = m.state_power(CoreState::RbbStandby);
+        assert!(active > idle && idle > cg && cg > rbb);
+        // The paper's 4,000x CG -> RBB gap.
+        assert!(cg / rbb > 3_500.0);
+    }
+
+    #[test]
+    fn generation_bumps_on_transition() {
+        let mut m = mgr(1);
+        let g0 = m.generation(0);
+        m.transition(0, 1.0, CoreState::Idle);
+        assert_eq!(m.generation(0), g0 + 1);
+    }
+
+    #[test]
+    fn ledger_total_is_sum_of_parts() {
+        let mut m = mgr(2);
+        m.transition(0, 0.0, CoreState::Active);
+        m.transition(1, 0.0, CoreState::CgStandby);
+        m.transition(0, 1.0, CoreState::Idle);
+        let l = m.finalize(3.0);
+        let sum = l.active + l.idle + l.cg + l.rbb + l.waking;
+        assert!((l.total() - sum).abs() < 1e-18);
+        assert!(l.overhead() < l.total());
+    }
+}

@@ -1,0 +1,452 @@
+//! The coordinator's event loop: a discrete-event simulation of the
+//! multi-core BIC system of Fig. 4 — batch router, core bank with
+//! power-managed standby, and the external-memory channel.
+//!
+//! Flow per batch: arrival -> (wake a core ∥ DMA records in) -> compute
+//! `cycles_per_batch / f` seconds -> DMA the BI result out -> core takes
+//! the next queued batch or begins the policy's demotion ladder.
+//!
+//! Failure injection: a core can be configured to die at a given time;
+//! its in-flight batch is re-queued and the core is excluded — the
+//! invariant "every offered batch completes exactly once" is property-
+//! tested in `rust/tests/coordinator_props.rs`.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::batch::{Batch, CompletedBatch};
+use super::extmem::{Dir, ExtMem};
+use super::metrics::{LatencyStats, SimReport};
+use super::policy::Policy;
+use super::power_mgr::{CoreState, PowerManager};
+use crate::bic::{BicConfig, BicCore};
+use crate::power::calibration::Hertz;
+use crate::power::{delay, Supply};
+
+/// Static configuration of a coordinator run.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Number of BIC cores (the paper's Z).
+    pub cores: usize,
+    /// Core geometry.
+    pub core_cfg: BicConfig,
+    /// Operating point.
+    pub supply: Supply,
+    /// Clock frequency; defaults to `f_max_chip(supply)`.
+    pub freq: Option<Hertz>,
+    /// Reverse back-bias used for deep standby.
+    pub rbb_vbb: f64,
+    /// Standby policy.
+    pub policy: Policy,
+    /// External memory bandwidth [bytes/s].
+    pub extmem_bandwidth: f64,
+    /// Compute actual bitmap results via the golden model (off for pure
+    /// timing studies of long traces).
+    pub compute_results: bool,
+    /// Failure injection: (core, time) pairs — the core dies at `time`.
+    pub core_failures: Vec<(usize, f64)>,
+}
+
+impl SchedulerConfig {
+    /// A sensible default system: Z cores of the chip geometry at 1.2 V,
+    /// the paper's CG->RBB ladder, and a DDR-class-but-narrow channel.
+    pub fn chip_system(cores: usize) -> Self {
+        Self {
+            cores,
+            core_cfg: BicConfig::CHIP,
+            supply: Supply::new(1.2),
+            freq: None,
+            rbb_vbb: -2.0,
+            policy: Policy::CgThenRbb { idle_to_cg: 1e-3, cg_to_rbb: 0.1 },
+            extmem_bandwidth: 400e6,
+            compute_results: true,
+            core_failures: Vec::new(),
+        }
+    }
+
+    pub fn frequency(&self) -> Hertz {
+        self.freq.unwrap_or_else(|| delay::f_max_chip(self.supply))
+    }
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Arrival { batch: usize },
+    ComputeDone { core: usize, epoch: u64 },
+    OutputDone { core: usize, epoch: u64 },
+    Demote { core: usize, generation: u64 },
+    CoreFail { core: usize },
+}
+
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// In-flight assignment bookkeeping for one core.
+#[derive(Clone, Debug, Default)]
+struct Assignment {
+    batch: Option<usize>,
+    epoch: u64,
+    compute_end: f64,
+}
+
+/// The coordinator.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    mgr: PowerManager,
+    extmem: ExtMem,
+    golden: BicCore,
+    events: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    queue: VecDeque<usize>,
+    assignments: Vec<Assignment>,
+    failed: Vec<bool>,
+    batches: Vec<Batch>,
+    completed: Vec<CompletedBatch>,
+    requeued: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        let f = cfg.frequency();
+        let mgr = PowerManager::new(cfg.cores, cfg.supply, f, cfg.rbb_vbb);
+        let extmem = ExtMem::new(cfg.extmem_bandwidth);
+        let golden = BicCore::new(cfg.core_cfg);
+        Self {
+            assignments: vec![Assignment::default(); cfg.cores],
+            failed: vec![false; cfg.cores],
+            mgr,
+            extmem,
+            golden,
+            events: BinaryHeap::new(),
+            seq: 0,
+            queue: VecDeque::new(),
+            batches: Vec::new(),
+            completed: Vec::new(),
+            requeued: 0,
+            cfg,
+        }
+    }
+
+    fn push_event(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Reverse(Event { time, seq: self.seq, kind }));
+    }
+
+    /// Run the trace to completion and report.
+    pub fn run(self, batches: Vec<Batch>) -> SimReport {
+        self.run_collect(batches).0
+    }
+
+    /// Run and also return the per-batch completion records (with bitmap
+    /// results when `compute_results` is set).
+    pub fn run_collect(mut self, batches: Vec<Batch>) -> (SimReport, Vec<CompletedBatch>) {
+        for b in &batches {
+            b.check(&self.cfg.core_cfg)
+                .unwrap_or_else(|e| panic!("invalid batch: {e}"));
+        }
+        let offered = batches.len();
+        self.batches = batches;
+        for i in 0..self.batches.len() {
+            self.push_event(self.batches[i].arrival, EventKind::Arrival { batch: i });
+        }
+        let failures = self.cfg.core_failures.clone();
+        for (core, time) in failures {
+            assert!(core < self.cfg.cores, "failure on unknown core {core}");
+            self.push_event(time, EventKind::CoreFail { core });
+        }
+
+        // `event_horizon` covers trailing demotion timers; the *report*
+        // horizon is the last useful instant (final result stored), so
+        // throughput is not diluted by post-work standby timers.
+        let mut event_horizon: f64 = 0.0;
+        while let Some(Reverse(ev)) = self.events.pop() {
+            event_horizon = event_horizon.max(ev.time);
+            self.handle(ev);
+        }
+        assert!(
+            self.queue.is_empty() || self.all_cores_failed(),
+            "drained event loop with {} batches stranded",
+            self.queue.len()
+        );
+        let horizon = self
+            .completed
+            .iter()
+            .map(|c| c.stored)
+            .fold(0.0_f64, f64::max);
+
+        let energy = self.mgr.finalize(event_horizon.max(horizon));
+        let latencies: Vec<f64> =
+            self.completed.iter().map(CompletedBatch::latency).collect();
+        let input_bytes: u64 = self
+            .completed
+            .iter()
+            .map(|c| self.batches[c.id as usize].input_bytes() as u64)
+            .sum();
+        let report = SimReport {
+            completed: self.completed.len(),
+            offered,
+            requeued: self.requeued,
+            horizon,
+            input_bytes,
+            latency: LatencyStats::from_samples(&latencies),
+            energy,
+            extmem_queue_wait: self.extmem.queue_wait(),
+            extmem_utilization: self.extmem.utilization(horizon.max(f64::MIN_POSITIVE)),
+        };
+        (report, self.completed)
+    }
+
+    fn all_cores_failed(&self) -> bool {
+        self.failed.iter().all(|&f| f)
+    }
+
+    fn handle(&mut self, ev: Event) {
+        let now = ev.time;
+        match ev.kind {
+            EventKind::Arrival { batch } => {
+                self.queue.push_back(batch);
+                self.try_dispatch(now);
+            }
+            EventKind::ComputeDone { core, epoch } => {
+                if self.failed[core] || self.assignments[core].epoch != epoch {
+                    return; // stale: core failed mid-flight
+                }
+                self.assignments[core].compute_end = now;
+                let batch = self.assignments[core].batch.expect("assignment");
+                let out_bytes = self.batches[batch].output_bytes(&self.cfg.core_cfg);
+                let done = self.extmem.transfer(now, out_bytes, Dir::Out);
+                self.push_event(done, EventKind::OutputDone { core, epoch });
+            }
+            EventKind::OutputDone { core, epoch } => {
+                if self.failed[core] || self.assignments[core].epoch != epoch {
+                    return;
+                }
+                let batch = self.assignments[core].batch.take().expect("assignment");
+                let b = &self.batches[batch];
+                let index = if self.cfg.compute_results {
+                    Some(self.golden.index(&b.records, &b.keys))
+                } else {
+                    None
+                };
+                self.completed.push(CompletedBatch {
+                    id: b.id,
+                    arrival: b.arrival,
+                    completed: self.assignments[core].compute_end,
+                    stored: now,
+                    core,
+                    cycles: self.cfg.core_cfg.cycles_per_batch(),
+                    index,
+                });
+                // Release the core: next batch or the demotion ladder.
+                if let Some(next) = self.queue.pop_front() {
+                    self.mgr.transition(core, now, CoreState::Idle);
+                    self.assign(core, next, now);
+                } else {
+                    self.mgr.transition(core, now, CoreState::Idle);
+                    self.schedule_demotion(core, now);
+                }
+            }
+            EventKind::Demote { core, generation } => {
+                if self.failed[core] || self.mgr.generation(core) != generation {
+                    return; // state changed since the timer was armed
+                }
+                let state = self.mgr.state(core);
+                if let Some((next, _)) = self.cfg.policy.demotion(state) {
+                    self.mgr.transition(core, now, next);
+                    self.schedule_demotion(core, now);
+                }
+            }
+            EventKind::CoreFail { core } => {
+                if self.failed[core] {
+                    return;
+                }
+                self.failed[core] = true;
+                // Invalidate in-flight work and requeue its batch.
+                if let Some(batch) = self.assignments[core].batch.take() {
+                    self.assignments[core].epoch += 1;
+                    self.queue.push_front(batch);
+                    self.requeued += 1;
+                }
+                // Park the dead core for energy accounting (it leaks).
+                // The core may hold a future-dated Active transition (wake
+                // in progress); never move its ledger clock backwards.
+                let t = now.max(self.mgr.since(core));
+                self.mgr.transition(core, t, CoreState::RbbStandby);
+                self.try_dispatch(now);
+            }
+        }
+    }
+
+    /// Dispatch queued batches onto the cheapest available cores.
+    fn try_dispatch(&mut self, now: f64) {
+        while !self.queue.is_empty() {
+            let mut best: Option<(u8, usize)> = None;
+            for core in 0..self.cfg.cores {
+                if self.failed[core] || self.assignments[core].batch.is_some() {
+                    continue;
+                }
+                if let Some(rank) = Policy::dispatch_rank(self.mgr.state(core)) {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, core));
+                    }
+                }
+            }
+            let Some((_, core)) = best else { return };
+            let batch = self.queue.pop_front().unwrap();
+            self.assign(core, batch, now);
+        }
+    }
+
+    /// Bind `batch` to `core`: wake ∥ input DMA, then compute.
+    fn assign(&mut self, core: usize, batch: usize, now: f64) {
+        debug_assert!(!self.failed[core]);
+        debug_assert!(self.assignments[core].batch.is_none());
+        let ready_at = self.mgr.wake(core, now);
+        let in_bytes = self.batches[batch].input_bytes();
+        let input_done = self.extmem.transfer(now, in_bytes, Dir::In);
+        let start = ready_at.max(input_done);
+        self.mgr.transition(core, start, CoreState::Active);
+        let duration =
+            self.cfg.core_cfg.cycles_per_batch() as f64 / self.cfg.frequency();
+        self.assignments[core].batch = Some(batch);
+        self.assignments[core].epoch += 1;
+        let epoch = self.assignments[core].epoch;
+        self.push_event(start + duration, EventKind::ComputeDone { core, epoch });
+    }
+
+    fn schedule_demotion(&mut self, core: usize, now: f64) {
+        if let Some((_, after)) = self.cfg.policy.demotion(self.mgr.state(core)) {
+            let generation = self.mgr.generation(core);
+            self.push_event(now + after, EventKind::Demote { core, generation });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload::{ArrivalProcess, ContentDist, WorkloadGen};
+
+    fn steady_trace(n_batches: usize, rate: f64, seed: u64) -> Vec<Batch> {
+        let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, seed);
+        let mut trace =
+            g.trace(ArrivalProcess::Steady { rate }, n_batches as f64 / rate * 2.0);
+        trace.truncate(n_batches);
+        trace
+    }
+
+    #[test]
+    fn completes_every_batch() {
+        let trace = steady_trace(50, 1000.0, 1);
+        let report = Scheduler::new(SchedulerConfig::chip_system(4)).run(trace);
+        assert_eq!(report.completed, 50);
+        assert_eq!(report.offered, 50);
+        assert_eq!(report.requeued, 0);
+        assert!(report.latency.mean > 0.0);
+    }
+
+    #[test]
+    fn results_match_golden_model() {
+        let trace = steady_trace(10, 1000.0, 2);
+        let expect: Vec<_> = {
+            let mut core = BicCore::new(BicConfig::CHIP);
+            trace.iter().map(|b| core.index(&b.records, &b.keys)).collect()
+        };
+        let (report, completed) = Scheduler::new(SchedulerConfig::chip_system(2))
+            .run_collect(trace);
+        assert_eq!(report.completed, 10);
+        for c in &completed {
+            let idx = c.index.as_ref().expect("compute_results is on");
+            assert_eq!(idx, &expect[c.id as usize], "batch {}", c.id);
+        }
+    }
+
+    #[test]
+    fn single_core_serializes() {
+        let trace = steady_trace(20, 1e6, 3); // effectively simultaneous
+        let cfg = SchedulerConfig::chip_system(1);
+        let f = cfg.frequency();
+        let per_batch = BicConfig::CHIP.cycles_per_batch() as f64 / f;
+        let report = Scheduler::new(cfg).run(trace);
+        assert_eq!(report.completed, 20);
+        // 20 serialized batches take at least 20 * compute time.
+        assert!(report.horizon >= 20.0 * per_batch * 0.99);
+    }
+
+    #[test]
+    fn more_cores_is_faster_under_load() {
+        let t1 = steady_trace(100, 1e6, 4);
+        let t4 = t1.clone();
+        let r1 = Scheduler::new(SchedulerConfig::chip_system(1)).run(t1);
+        let r4 = Scheduler::new(SchedulerConfig::chip_system(4)).run(t4);
+        assert!(
+            r4.horizon < r1.horizon * 0.5,
+            "4 cores {} vs 1 core {}",
+            r4.horizon,
+            r1.horizon
+        );
+    }
+
+    #[test]
+    fn idle_fleet_sinks_into_rbb() {
+        // One early burst then a long silence: the ledger must be
+        // RBB-dominated over the tail.
+        let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 5);
+        let mut trace: Vec<Batch> = (0..4).map(|_| g.batch_at(0.0)).collect();
+        // A final batch far in the future stretches the horizon.
+        trace.push(g.batch_at(100.0));
+        let report = Scheduler::new(SchedulerConfig::chip_system(4)).run(trace);
+        assert_eq!(report.completed, 5);
+        let e = &report.energy;
+        assert!(
+            e.rbb < e.total() && e.cg < e.rbb,
+            "tail should be RBB-parked: {e:?}"
+        );
+        // Average power over the mostly-idle run must be far below one
+        // core's active power.
+        assert!(report.avg_power() < 1e-4, "avg {}", report.avg_power());
+    }
+
+    #[test]
+    fn core_failure_requeues_in_flight_batch() {
+        let trace = steady_trace(30, 1e6, 6);
+        let mut cfg = SchedulerConfig::chip_system(2);
+        // Kill core 0 early, mid-flight.
+        cfg.core_failures = vec![(0, 10e-6)];
+        let report = Scheduler::new(cfg).run(trace);
+        assert_eq!(report.completed, 30, "all batches survive the failure");
+        assert!(report.requeued >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid batch")]
+    fn rejects_misshapen_batches() {
+        let bad = Batch {
+            id: 0,
+            arrival: 0.0,
+            records: vec![vec![1; 99]],
+            keys: vec![1; 8],
+        };
+        Scheduler::new(SchedulerConfig::chip_system(1)).run(vec![bad]);
+    }
+}

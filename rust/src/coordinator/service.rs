@@ -1,0 +1,184 @@
+//! A *live* indexing service: the Fig. 4 topology executed for real —
+//! worker threads each owning a PJRT-compiled BIC executable, pulling
+//! batches from a shared queue (router), returning bitmap indexes over
+//! completion channels. This is the deployable counterpart of the
+//! discrete-event `Scheduler` (which models timing/energy); integration
+//! tests cross-check the two stay semantically identical.
+//!
+//! PJRT client handles are not `Send`, so each worker constructs its own
+//! `Runtime` + `BicExecutable` inside its thread — one compiled
+//! executable per core, exactly like the chip's per-core CAM/buffer/TM.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::bic::bitmap::BitmapIndex;
+use crate::runtime::{BicExecutable, BicVariant, Runtime};
+
+/// One indexing request.
+struct Job {
+    records: Vec<Vec<i32>>,
+    keys: Vec<i32>,
+    reply: Sender<Result<BitmapIndex>>,
+}
+
+/// Handle to a running service.
+pub struct IndexService {
+    queue: Sender<Job>,
+    workers: Vec<JoinHandle<()>>,
+    /// Per-worker completed-job counters (for routing/balance tests).
+    counters: Arc<Vec<Mutex<u64>>>,
+}
+
+impl IndexService {
+    /// Spawn `workers` threads, each compiling `variant` on its own PJRT
+    /// client. Returns once every worker is ready (or the first
+    /// compilation error).
+    pub fn start(workers: usize, variant: &BicVariant) -> Result<Self> {
+        assert!(workers >= 1, "need at least one worker");
+        let (tx, rx) = channel::<Job>();
+        // A single shared pull queue is the router: idle workers steal
+        // the next batch, which is exactly the paper's "batch i is sent
+        // to BIC i" round-robin under uniform service times.
+        let rx = Arc::new(Mutex::new(rx));
+        let counters: Arc<Vec<Mutex<u64>>> =
+            Arc::new((0..workers).map(|_| Mutex::new(0)).collect());
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&rx);
+            let counters = Arc::clone(&counters);
+            let variant = variant.clone();
+            let ready = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let exe = match Runtime::cpu()
+                    .and_then(|rt| BicExecutable::load(&rt, &variant))
+                {
+                    Ok(exe) => {
+                        let _ = ready.send(Ok(()));
+                        exe
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    // Pull the next job; hold the lock only for the recv.
+                    let job = { rx.lock().unwrap().recv() };
+                    let Ok(job) = job else { break }; // queue closed
+                    let result = exe.index(&job.records, &job.keys);
+                    *counters[w].lock().unwrap() += 1;
+                    let _ = job.reply.send(result);
+                }
+            }));
+        }
+        for _ in 0..workers {
+            ready_rx.recv().expect("worker startup")?;
+        }
+        Ok(Self { queue: tx, workers: handles, counters })
+    }
+
+    /// Submit a batch; returns a receiver for the result (async-style
+    /// completion without an async runtime).
+    pub fn submit(
+        &self,
+        records: Vec<Vec<i32>>,
+        keys: Vec<i32>,
+    ) -> Receiver<Result<BitmapIndex>> {
+        let (reply, rx) = channel();
+        self.queue
+            .send(Job { records, keys, reply })
+            .expect("service stopped");
+        rx
+    }
+
+    /// Convenience: submit and block for the result.
+    pub fn index(&self, records: Vec<Vec<i32>>, keys: Vec<i32>) -> Result<BitmapIndex> {
+        self.submit(records, keys).recv().expect("worker dropped reply")
+    }
+
+    /// Jobs completed per worker (routing balance inspection).
+    pub fn per_worker_counts(&self) -> Vec<u64> {
+        self.counters.iter().map(|c| *c.lock().unwrap()).collect()
+    }
+
+    /// Graceful shutdown: close the queue and join the workers.
+    pub fn shutdown(self) {
+        drop(self.queue);
+        for h in self.workers {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bic::{BicConfig, BicCore};
+    use crate::runtime::Manifest;
+    use crate::substrate::rng::Xoshiro256;
+
+    fn chip_variant() -> Option<BicVariant> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("SKIP: run `make artifacts`");
+            return None;
+        }
+        Manifest::load(&dir).unwrap().find_bic("chip").cloned()
+    }
+
+    fn random_batch(rng: &mut Xoshiro256) -> (Vec<Vec<i32>>, Vec<i32>) {
+        let recs = (0..16)
+            .map(|_| (0..32).map(|_| rng.next_below(256) as i32).collect())
+            .collect();
+        let keys = (0..8).map(|_| rng.next_below(256) as i32).collect();
+        (recs, keys)
+    }
+
+    #[test]
+    fn serves_correct_results_across_workers() {
+        let Some(variant) = chip_variant() else { return };
+        let svc = IndexService::start(3, &variant).expect("start");
+        let mut golden = BicCore::new(BicConfig::CHIP);
+        let mut rng = Xoshiro256::seeded(404);
+        // Submit a burst, then collect.
+        let jobs: Vec<_> = (0..24)
+            .map(|_| {
+                let (recs, keys) = random_batch(&mut rng);
+                let rx = svc.submit(recs.clone(), keys.clone());
+                (recs, keys, rx)
+            })
+            .collect();
+        for (recs, keys, rx) in jobs {
+            let got = rx.recv().unwrap().expect("index ok");
+            assert_eq!(got, golden.index(&recs, &keys));
+        }
+        // All workers should have participated in a 24-job burst.
+        let counts = svc.per_worker_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 24);
+        assert!(
+            counts.iter().filter(|&&c| c > 0).count() >= 2,
+            "burst should spread over workers: {counts:?}"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_batch_reports_error_not_poison() {
+        let Some(variant) = chip_variant() else { return };
+        let svc = IndexService::start(1, &variant).expect("start");
+        // 17 records exceeds the chip capacity: the job must fail cleanly
+        // and the worker must keep serving.
+        let bad = vec![vec![0i32; 32]; 17];
+        assert!(svc.index(bad, vec![1, 2, 3, 4, 5, 6, 7, 8]).is_err());
+        let mut rng = Xoshiro256::seeded(9);
+        let (recs, keys) = random_batch(&mut rng);
+        assert!(svc.index(recs, keys).is_ok(), "worker survived the error");
+        svc.shutdown();
+    }
+}

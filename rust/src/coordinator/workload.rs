@@ -1,0 +1,250 @@
+//! Workload generation: record/key content distributions and batch
+//! arrival processes. The chip itself is data-oblivious (fixed cycles per
+//! batch), but content matters for the query engine and WAH compression,
+//! and the *arrival* process is what exercises the power manager —
+//! energy proportionality only shows up under load variation.
+
+use super::batch::Batch;
+use crate::bic::BicConfig;
+use crate::substrate::rng::Xoshiro256;
+
+/// Record/key content distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ContentDist {
+    /// Words uniform over the alphabet.
+    Uniform,
+    /// Words Zipf-distributed (skewed dictionaries — text-like data).
+    Zipf { s: f64 },
+    /// Clustered: each record draws from a narrow window of the alphabet
+    /// (models sorted/partitioned inputs; produces runny bitmaps that WAH
+    /// compresses well).
+    Clustered { spread: usize },
+}
+
+/// Batch arrival process over a trace of `duration` seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals at a constant rate [batches/s].
+    Steady { rate: f64 },
+    /// Sinusoidal diurnal load: rate(t) = base + amp * (1+sin)/2.
+    /// (The paper's motivation: peak workload hours vs off-peak time.)
+    Diurnal { base: f64, amp: f64, period: f64 },
+    /// On/off bursts: `on` seconds at `rate`, `off` seconds silent.
+    Bursty { rate: f64, on: f64, off: f64 },
+}
+
+/// Workload generator: content + arrivals for a given core geometry.
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    pub cfg: BicConfig,
+    pub content: ContentDist,
+    rng: Xoshiro256,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: BicConfig, content: ContentDist, seed: u64) -> Self {
+        Self { cfg, content, rng: Xoshiro256::seeded(seed), next_id: 0 }
+    }
+
+    fn word(&mut self, lo: usize, hi: usize) -> i32 {
+        match self.content {
+            ContentDist::Uniform => self.rng.range(lo, hi) as i32,
+            ContentDist::Zipf { s } => {
+                (lo + self.rng.zipf(hi - lo, s)) as i32
+            }
+            ContentDist::Clustered { .. } => self.rng.range(lo, hi) as i32,
+        }
+    }
+
+    /// Generate one full batch arriving at `arrival`.
+    pub fn batch_at(&mut self, arrival: f64) -> Batch {
+        let cfg = self.cfg;
+        let (lo, hi) = match self.content {
+            ContentDist::Clustered { spread } => {
+                let spread = spread.clamp(1, 256);
+                let lo = self.rng.range(0, 257 - spread);
+                (lo, lo + spread)
+            }
+            _ => (0, 256),
+        };
+        let records: Vec<Vec<i32>> = (0..cfg.n_records)
+            .map(|_| (0..cfg.w_words).map(|_| self.word(lo, hi)).collect())
+            .collect();
+        // Keys are drawn from the same distribution so hit rates are
+        // representative of a dictionary lookup.
+        let keys: Vec<i32> =
+            (0..cfg.m_keys).map(|_| self.word(lo, hi)).collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        Batch { id, arrival, records, keys }
+    }
+
+    /// Generate a whole arrival trace over `[0, duration)` seconds.
+    pub fn trace(&mut self, process: ArrivalProcess, duration: f64) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            let rate = match process {
+                ArrivalProcess::Steady { rate } => rate,
+                ArrivalProcess::Diurnal { base, amp, period } => {
+                    base + amp
+                        * (1.0 + (2.0 * std::f64::consts::PI * t / period).sin())
+                        / 2.0
+                }
+                ArrivalProcess::Bursty { rate, on, off } => {
+                    if t % (on + off) < on {
+                        rate
+                    } else {
+                        0.0
+                    }
+                }
+            };
+            if rate <= 0.0 {
+                // Skip to the next active window (bursty off period).
+                match process {
+                    ArrivalProcess::Bursty { on, off, .. } => {
+                        t = next_window(t, on + off);
+                        if t >= duration {
+                            break;
+                        }
+                        continue;
+                    }
+                    _ => unreachable!("steady/diurnal rates stay positive"),
+                }
+            }
+            t += self.rng.exp(rate);
+            if t >= duration {
+                break;
+            }
+            // A jump that lands in a bursty off-window is not an arrival:
+            // resume the process at the next on-window.
+            if let ArrivalProcess::Bursty { on, off, .. } = process {
+                let cycle = on + off;
+                if t % cycle >= on {
+                    t = next_window(t, cycle);
+                    continue;
+                }
+            }
+            let b = self.batch_at(t);
+            out.push(b);
+        }
+        out
+    }
+}
+
+/// Start of the next on-window strictly after `t`. Guarantees forward
+/// progress even when `t` sits exactly on a cycle boundary and
+/// `floor(t/cycle)*cycle + cycle` would round back to `t` (the float
+/// pathology where `t % cycle == cycle - eps`).
+fn next_window(t: f64, cycle: f64) -> f64 {
+    let mut next = ((t / cycle).floor() + 1.0) * cycle;
+    if next <= t {
+        next += cycle;
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_window_always_advances() {
+        // The exact values that hung the bursty generator (float
+        // boundary where the naive skip returned t itself).
+        let cycle = 0.07839625710838183 + 0.026581104415174223;
+        let t = 0.3149320845706681;
+        let n1 = next_window(t, cycle);
+        assert!(n1 > t);
+        // And from the boundary itself.
+        let n2 = next_window(n1, cycle);
+        assert!(n2 > n1);
+        for i in 0..1000 {
+            let t = i as f64 * cycle; // exact multiples
+            assert!(next_window(t, cycle) > t, "stuck at {t}");
+        }
+    }
+
+    #[test]
+    fn batches_fit_config() {
+        let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 1);
+        for i in 0..10 {
+            let b = g.batch_at(i as f64);
+            assert!(b.check(&BicConfig::CHIP).is_ok());
+            assert_eq!(b.id, i);
+        }
+    }
+
+    #[test]
+    fn steady_trace_rate_is_plausible() {
+        let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 2);
+        let trace = g.trace(ArrivalProcess::Steady { rate: 100.0 }, 10.0);
+        assert!((800..1200).contains(&trace.len()), "{} arrivals", trace.len());
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn bursty_trace_has_silent_gaps() {
+        let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 3);
+        let trace = g.trace(
+            ArrivalProcess::Bursty { rate: 50.0, on: 1.0, off: 4.0 },
+            10.0,
+        );
+        // All arrivals must fall inside on-windows ([0,1) and [5,6)).
+        for b in &trace {
+            let phase = b.arrival % 5.0;
+            assert!(phase < 1.0, "arrival at {} is in the off window", b.arrival);
+        }
+        assert!(!trace.is_empty());
+    }
+
+    #[test]
+    fn diurnal_rate_varies() {
+        let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 4);
+        let trace = g.trace(
+            ArrivalProcess::Diurnal { base: 10.0, amp: 200.0, period: 10.0 },
+            10.0,
+        );
+        // Count arrivals in the peak half vs trough half of the period.
+        let peak = trace.iter().filter(|b| b.arrival % 10.0 < 5.0).count();
+        let trough = trace.len() - peak;
+        assert!(peak > trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn clustered_content_stays_in_window() {
+        let mut g = WorkloadGen::new(
+            BicConfig { n_records: 8, w_words: 16, m_keys: 4 },
+            ContentDist::Clustered { spread: 16 },
+            5,
+        );
+        let b = g.batch_at(0.0);
+        for rec in &b.records {
+            let lo = *rec.iter().min().unwrap();
+            let hi = *rec.iter().max().unwrap();
+            assert!(hi - lo < 16, "record spans {lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn zipf_content_is_skewed() {
+        let mut g = WorkloadGen::new(
+            BicConfig { n_records: 32, w_words: 32, m_keys: 4 },
+            ContentDist::Zipf { s: 1.3 },
+            6,
+        );
+        let b = g.batch_at(0.0);
+        let low = b
+            .records
+            .iter()
+            .flatten()
+            .filter(|&&w| w < 16)
+            .count();
+        let total = 32 * 32;
+        assert!(
+            low * 2 > total,
+            "zipf should concentrate mass at low words: {low}/{total}"
+        );
+    }
+}

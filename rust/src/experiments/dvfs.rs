@@ -1,0 +1,111 @@
+//! Extension experiment (future-work direction the paper's 0.4–1.2 V
+//! envelope implies): voltage/frequency scaling of the whole multi-core
+//! system. For a fixed workload, sweep the operating point and report
+//! throughput / energy / tail latency — the energy-optimal Vdd emerges
+//! from the interplay of the Fig. 6 delay curve, the Fig. 7 energy curve
+//! and standby leakage.
+
+use super::ExperimentResult;
+use crate::bic::BicConfig;
+use crate::coordinator::{
+    ArrivalProcess, ContentDist, Policy, Scheduler, SchedulerConfig, SimReport,
+    WorkloadGen,
+};
+use crate::power::Supply;
+use crate::substrate::json::Json;
+use crate::substrate::stats::format_si;
+use crate::substrate::table::Table;
+
+/// Run the reference workload at one operating point.
+pub fn run_at(vdd: f64, seed: u64) -> SimReport {
+    let mut cfg = SchedulerConfig::chip_system(4);
+    cfg.supply = Supply::new(vdd);
+    cfg.freq = None; // track f_max(Vdd)
+    cfg.policy = Policy::CgThenRbb { idle_to_cg: 1e-3, cg_to_rbb: 20e-3 };
+    cfg.compute_results = false;
+    let mut gen = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, seed);
+    // Moderate load: ~25% of the 1.2 V capacity, so low-Vdd points must
+    // work harder (less standby) while high-Vdd points idle more.
+    let trace = gen.trace(ArrivalProcess::Steady { rate: 15_000.0 }, 0.2);
+    Scheduler::new(cfg).run(trace)
+}
+
+pub fn run() -> ExperimentResult {
+    let mut t = Table::new(vec![
+        "Vdd (V)",
+        "throughput (MB/s)",
+        "energy/byte",
+        "avg power",
+        "p99 latency",
+    ]);
+    let mut best: Option<(f64, f64)> = None;
+    let mut rows_json = Vec::new();
+    for s in Supply::sweep() {
+        let r = run_at(s.vdd, 33);
+        let epb = r.energy_per_byte();
+        if best.map_or(true, |(_, e)| epb < e) {
+            best = Some((s.vdd, epb));
+        }
+        t.row(vec![
+            format!("{:.1}", s.vdd),
+            format!("{:.2}", r.throughput_mbps()),
+            format_si(epb, "J/B"),
+            format_si(r.avg_power(), "W"),
+            format_si(r.latency.p99, "s"),
+        ]);
+        rows_json.push(Json::obj([
+            ("vdd", s.vdd.into()),
+            ("mbps", r.throughput_mbps().into()),
+            ("j_per_byte", epb.into()),
+            ("p99_s", r.latency.p99.into()),
+        ]));
+    }
+    let (v_opt, e_opt) = best.unwrap();
+    ExperimentResult {
+        id: "dvfs",
+        title: "extension: system-level voltage/frequency scaling",
+        table: t,
+        json: Json::obj([("rows", Json::Arr(rows_json))]),
+        notes: vec![format!(
+            "energy-optimal operating point at this load: Vdd = {v_opt:.1} V \
+             ({} per byte) — low Vdd wins while the cores stay busy enough \
+             to amortize leakage",
+            format_si(e_opt, "J/B")
+        )],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_points_complete_the_workload() {
+        for vdd in [0.4, 0.8, 1.2] {
+            let r = run_at(vdd, 1);
+            assert_eq!(r.completed, r.offered, "Vdd={vdd}");
+        }
+    }
+
+    #[test]
+    fn low_vdd_is_more_energy_efficient_under_load() {
+        // At a load both points can sustain, CV^2 says 0.4-0.6 V beats 1.2 V
+        // on energy per byte.
+        let e_low = run_at(0.5, 2).energy_per_byte();
+        let e_high = run_at(1.2, 2).energy_per_byte();
+        assert!(
+            e_low < e_high,
+            "J/B at 0.5 V ({e_low:.3e}) should beat 1.2 V ({e_high:.3e})"
+        );
+    }
+
+    #[test]
+    fn high_vdd_has_better_tail_latency() {
+        let p99_low = run_at(0.4, 3).latency.p99;
+        let p99_high = run_at(1.2, 3).latency.p99;
+        assert!(
+            p99_high < p99_low,
+            "p99 at 1.2 V ({p99_high:.3e}) should beat 0.4 V ({p99_low:.3e})"
+        );
+    }
+}

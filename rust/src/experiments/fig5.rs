@@ -1,0 +1,191 @@
+//! Fig. 5 — die features table: memory-bit census, cell/transistor/area
+//! estimates, operating envelope, headline power points.
+//!
+//! The memory-bit census is *computed* from the simulator's structural
+//! models; cells/transistors/area come from a linear physical-design
+//! model calibrated on the fabricated die (every memory bit is a
+//! dedicated register on this ASIC — paper §IV):
+//!
+//!   cells(cfg)       = K_CELLS_PER_BIT * mem_bits + C_CELLS_FIXED
+//!   transistors(cfg) = cells * T_PER_CELL
+//!   area(cfg)        = cells * AREA_PER_CELL_MM2
+//!
+//! Calibration: the chip's 8,320 bits / 36,205 cells / 466,854
+//! transistors / 0.21 mm² give K = 4.1, C = 2,093, T/cell = 12.9,
+//! 5.8 um^2/cell. The same model then *projects* the pre-shrink FPGA
+//! geometry — the reason the authors had to cut the design down to fit
+//! the package (paper §IV).
+
+use super::ExperimentResult;
+use crate::bic::BicConfig;
+use crate::power::calibration::{
+    DIE_AREA_MM2, DIE_CELLS, DIE_MEMORY_BITS, DIE_TRANSISTORS,
+};
+use crate::power::{delay, dynamic, StandbyMode, Supply};
+use crate::sim::CoreSim;
+use crate::substrate::json::Json;
+use crate::substrate::stats::format_si;
+use crate::substrate::table::Table;
+
+/// Standard cells per memory bit (registers + match/mux logic).
+pub const K_CELLS_PER_BIT: f64 = 4.1;
+/// Fixed cells (control FSM, clock gate, I/O ring interface).
+pub const C_CELLS_FIXED: f64 = 2_093.0;
+/// Average transistors per standard cell on this library.
+pub const T_PER_CELL: f64 = 12.9;
+/// Core area per cell [mm^2].
+pub const AREA_PER_CELL_MM2: f64 = DIE_AREA_MM2 / DIE_CELLS as f64;
+
+/// Physical-design estimate for a core geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct DieEstimate {
+    pub memory_bits: usize,
+    pub cells: f64,
+    pub transistors: f64,
+    pub area_mm2: f64,
+}
+
+pub fn estimate(cfg: &BicConfig) -> DieEstimate {
+    let bits = CoreSim::new(*cfg).memory_bits();
+    let cells = K_CELLS_PER_BIT * bits as f64 + C_CELLS_FIXED;
+    DieEstimate {
+        memory_bits: bits,
+        cells,
+        transistors: cells * T_PER_CELL,
+        area_mm2: cells * AREA_PER_CELL_MM2,
+    }
+}
+
+pub fn run() -> ExperimentResult {
+    let chip = estimate(&BicConfig::CHIP);
+    let fpga = estimate(&BicConfig::FPGA);
+    let v04 = Supply::new(0.4);
+    let v12 = Supply::new(1.2);
+    let f04 = delay::f_max_chip(v04);
+    let f12 = delay::f_max_chip(v12);
+
+    let mut t = Table::new(vec!["feature", "model", "paper"]);
+    t.row(vec![
+        "technology".into(),
+        "65-nm SOTB CMOS (simulated)".to_string(),
+        "65-nm SOTB CMOS".into(),
+    ]);
+    t.row(vec![
+        "memory bits".into(),
+        format!("{}", chip.memory_bits),
+        format!("{DIE_MEMORY_BITS}"),
+    ]);
+    t.row(vec![
+        "# of cells".into(),
+        format!("{:.0}", chip.cells),
+        format!("{DIE_CELLS}"),
+    ]);
+    t.row(vec![
+        "# of transistors".into(),
+        format!("{:.0}", chip.transistors),
+        format!("{DIE_TRANSISTORS}"),
+    ]);
+    t.row(vec![
+        "core area (mm^2)".into(),
+        format!("{:.3}", chip.area_mm2),
+        format!("{DIE_AREA_MM2}"),
+    ]);
+    t.row(vec![
+        "core Vdd".into(),
+        "0.4 - 1.2 V".to_string(),
+        "0.4 - 1.2 V".into(),
+    ]);
+    t.row(vec![
+        "active @ 1.2 V".into(),
+        format!(
+            "{} @ {}",
+            format_si(f12, "Hz"),
+            format_si(dynamic::p_active(v12, f12), "W")
+        ),
+        "41 MHz @ 6.68 mW".into(),
+    ]);
+    t.row(vec![
+        "active @ 0.4 V".into(),
+        format!(
+            "{} @ {}",
+            format_si(f04, "Hz"),
+            format_si(dynamic::p_active(v04, f04), "W")
+        ),
+        "10.1 MHz @ 0.17 mW".into(),
+    ]);
+    t.row(vec![
+        "standby @ 0.4 V".into(),
+        format_si(StandbyMode::CHIP.power(v04), "W"),
+        "2.64 nW".into(),
+    ]);
+    t.row(vec![
+        "pre-shrink (FPGA geom) bits".into(),
+        format!("{}", fpga.memory_bits),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "pre-shrink est. area (mm^2)".into(),
+        format!("{:.2}", fpga.area_mm2),
+        "- (did not fit the packet)".into(),
+    ]);
+
+    let json = Json::obj([
+        ("memory_bits", chip.memory_bits.into()),
+        ("cells", chip.cells.into()),
+        ("transistors", chip.transistors.into()),
+        ("area_mm2", chip.area_mm2.into()),
+        ("fpga_geom_bits", fpga.memory_bits.into()),
+        ("fpga_geom_area_mm2", fpga.area_mm2.into()),
+    ]);
+    ExperimentResult {
+        id: "fig5",
+        title: "die features (census from sim + calibrated physical model)",
+        table: t,
+        json,
+        notes: vec![
+            "cells/transistors/area use the linear physical model calibrated \
+             on the die; the memory-bit census is computed structurally"
+                .into(),
+            format!(
+                "pre-shrink geometry needs {:.1}x the fabricated area — why \
+                 the design was cut down to 16 records / 8 keys",
+                fpga.area_mm2 / chip.area_mm2
+            ),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_census_is_exact() {
+        let e = estimate(&BicConfig::CHIP);
+        assert_eq!(e.memory_bits, DIE_MEMORY_BITS);
+    }
+
+    #[test]
+    fn physical_model_hits_die_numbers() {
+        let e = estimate(&BicConfig::CHIP);
+        assert!((e.cells - DIE_CELLS as f64).abs() / (DIE_CELLS as f64) < 0.01);
+        assert!(
+            (e.transistors - DIE_TRANSISTORS as f64).abs()
+                / (DIE_TRANSISTORS as f64)
+                < 0.01
+        );
+        assert!((e.area_mm2 - DIE_AREA_MM2).abs() / DIE_AREA_MM2 < 0.01);
+    }
+
+    #[test]
+    fn fpga_geometry_exceeds_package_budget() {
+        let e = estimate(&BicConfig::FPGA);
+        // 256-word CAM = 8 CBs = 65,536 + buffer 4,096 bits.
+        assert_eq!(e.memory_bits, 65_536 + 4_096);
+        assert!(
+            e.area_mm2 > 4.0 * DIE_AREA_MM2,
+            "pre-shrink area {:.2} must dwarf the package budget",
+            e.area_mm2
+        );
+    }
+}

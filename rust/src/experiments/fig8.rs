@@ -1,0 +1,75 @@
+//! Fig. 8 — standby current vs back-gate bias and supply voltage: the
+//! (Vbb ∈ {0, -0.5, -1, -1.5, -2}) x (Vdd ∈ 0.4..1.2) grid from the
+//! calibrated subthreshold + GIDL model, reproducing the decade-per-0.5-V
+//! slope, the 6.6 nA minimum, and the GIDL crossover above 0.8 V.
+
+use super::ExperimentResult;
+use crate::power::leakage;
+use crate::substrate::json::Json;
+use crate::substrate::stats::format_si;
+use crate::substrate::table::Table;
+
+pub fn run() -> ExperimentResult {
+    let grid = leakage::fig8_grid();
+    let vdds: Vec<f64> = grid[0].1.iter().map(|p| p.0).collect();
+
+    let mut headers = vec!["Vbb (V)".to_string()];
+    headers.extend(vdds.iter().map(|v| format!("Vdd={v:.1}")));
+    let mut t = Table::new(headers);
+    let mut rows_json = Vec::new();
+    for (vbb, series) in &grid {
+        let mut row = vec![format!("{vbb:.1}")];
+        row.extend(series.iter().map(|(_, i)| format_si(*i, "A")));
+        t.row(row);
+        rows_json.push(Json::obj([
+            ("vbb", (*vbb).into()),
+            (
+                "istb_a",
+                Json::Arr(series.iter().map(|(_, i)| (*i).into()).collect()),
+            ),
+        ]));
+    }
+    ExperimentResult {
+        id: "fig8",
+        title: "standby current I_stb vs Vbb and Vdd",
+        table: t,
+        json: Json::obj([
+            ("vdd", Json::Arr(vdds.iter().map(|&v| v.into()).collect())),
+            ("rows", Json::Arr(rows_json)),
+        ]),
+        notes: vec![
+            "at Vdd=0.4: one decade per -0.5 V of Vbb down to the 6.6 nA \
+             GIDL floor at -2 V"
+                .into(),
+            "for Vdd > 0.8 V the Vbb=-2 curve crosses above Vbb=-1.5 \
+             (GIDL dominates) — the paper's §IV observation"
+                .into(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::{i_stb, BackBias, Supply};
+
+    #[test]
+    fn minimum_is_6_6na() {
+        let i = i_stb(Supply::new(0.4), BackBias::FULL_REVERSE);
+        assert!((6.4e-9..6.8e-9).contains(&i), "{i:.3e}");
+    }
+
+    #[test]
+    fn zero_bias_row_spans_microamps() {
+        let i = i_stb(Supply::new(0.4), BackBias::ZERO);
+        assert!((25e-6..28e-6).contains(&i));
+    }
+
+    #[test]
+    fn table_has_five_bias_rows() {
+        let r = run();
+        let rendered = r.table.render();
+        assert_eq!(rendered.lines().count(), 2 + 5);
+        assert!(rendered.contains("-2.0"));
+    }
+}

@@ -1,0 +1,84 @@
+//! Reproduction harnesses: one module per table/figure in the paper's
+//! evaluation, plus the in-text claims. Each produces an
+//! [`ExperimentResult`] (aligned table + machine-readable JSON) and is
+//! reachable three ways: the CLI (`sotb-bic experiment <id>`), the bench
+//! targets under `rust/benches/`, and integration tests that pin the
+//! headline numbers.
+
+pub mod claims;
+pub mod dvfs;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod multicore;
+pub mod table1;
+pub mod throughput;
+
+use crate::substrate::json::Json;
+use crate::substrate::table::Table;
+
+/// Output of one experiment run.
+pub struct ExperimentResult {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub table: Table,
+    pub json: Json,
+    /// Free-form notes (calibration deltas, caveats) printed after the
+    /// table and recorded in EXPERIMENTS.md.
+    pub notes: Vec<String>,
+}
+
+impl ExperimentResult {
+    /// Human-readable rendering.
+    pub fn render(&self) -> String {
+        let mut out = format!("### {} — {}\n\n{}", self.id, self.title, self.table.render());
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+}
+
+/// All experiment ids, in paper order (dvfs is the extension study).
+pub const ALL: [&str; 9] = [
+    "fig5", "fig6", "fig7", "fig8", "table1", "claims", "throughput",
+    "multicore", "dvfs",
+];
+
+/// Run an experiment by id (fast configurations; benches run the heavier
+/// sweeps).
+pub fn run(id: &str) -> Option<ExperimentResult> {
+    match id {
+        "fig5" => Some(fig5::run()),
+        "fig6" => Some(fig6::run()),
+        "fig7" => Some(fig7::run()),
+        "fig8" => Some(fig8::run()),
+        "table1" => Some(table1::run()),
+        "claims" => Some(claims::run()),
+        "throughput" => Some(throughput::run(throughput::Scale::Quick)),
+        "multicore" => Some(multicore::run(multicore::Scale::Quick)),
+        "dvfs" => Some(dvfs::run()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_experiment_runs() {
+        for id in ALL {
+            let r = run(id).unwrap_or_else(|| panic!("unknown experiment {id}"));
+            assert!(!r.table.is_empty(), "{id}: empty table");
+            assert!(!r.render().is_empty());
+            assert!(!r.json.render().is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(run("fig99").is_none());
+    }
+}

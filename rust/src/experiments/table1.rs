@@ -1,0 +1,87 @@
+//! Table I — standby-power-per-bit comparison against the four published
+//! CAM designs, with every row recomputed from design characteristics
+//! (`baselines::cam_designs`) and this work's row from the calibrated
+//! standby model.
+
+use super::ExperimentResult;
+use crate::baselines::table1;
+use crate::substrate::json::Json;
+use crate::substrate::table::Table;
+
+pub fn run() -> ExperimentResult {
+    let rows = table1();
+    let mut t = Table::new(vec![
+        "design",
+        "tech (nm)",
+        "area (mm^2)",
+        "memory (Kbit)",
+        "technique",
+        "standby (uW)",
+        "SPB (pW/bit)",
+    ]);
+    let mut rows_json = Vec::new();
+    for d in &rows {
+        t.row(vec![
+            d.name.to_string(),
+            d.technology.to_string(),
+            format!("{:.2}", d.area_mm2),
+            format!("{:.3}", d.memory_bits as f64 / 1024.0),
+            d.technique.label().to_string(),
+            format!("{:.4}", d.standby_w * 1e6),
+            format!("{:.2}", d.spb() * 1e12),
+        ]);
+        rows_json.push(Json::obj([
+            ("name", d.name.into()),
+            ("tech", d.technology.into()),
+            ("area_mm2", d.area_mm2.into()),
+            ("memory_bits", d.memory_bits.into()),
+            ("technique", d.technique.label().into()),
+            ("standby_w", d.standby_w.into()),
+            ("spb_w_per_bit", d.spb().into()),
+        ]));
+    }
+    let ours = rows.last().unwrap().spb();
+    ExperimentResult {
+        id: "table1",
+        title: "standby power per bit vs published CAM designs",
+        table: t,
+        json: Json::obj([("rows", Json::Arr(rows_json))]),
+        notes: vec![
+            format!(
+                "this work: {:.2} pW/bit = {:.4}% of [12], {:.4}% of [13], \
+                 {:.1}% of [15], {:.1}% of [14]",
+                ours * 1e12,
+                ours / rows[0].spb() * 100.0,
+                ours / rows[1].spb() * 100.0,
+                ours / rows[3].spb() * 100.0,
+                ours / rows[2].spb() * 100.0,
+            ),
+            "our standby row is the calibrated CG+RBB model output, not a \
+             transcription"
+                .into(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_rows_ours_last_and_best() {
+        let r = run();
+        let rendered = r.table.render();
+        assert_eq!(rendered.lines().count(), 2 + 5);
+        let rows = table1();
+        assert_eq!(rows.last().unwrap().name, "This work");
+        let ours = rows.last().unwrap().spb();
+        assert!(rows.iter().take(4).all(|d| d.spb() > ours));
+    }
+
+    #[test]
+    fn our_spb_is_0_31_pw_per_bit_class() {
+        let rows = table1();
+        let spb_pw = rows.last().unwrap().spb() * 1e12;
+        assert!((0.30..0.33).contains(&spb_pw), "{spb_pw:.3}");
+    }
+}

@@ -1,0 +1,16 @@
+//! `sotb_bic` — reproduction of the 65-nm SOTB bitmap-index-creation (BIC)
+//! core and its multi-core, energy-proportional runtime.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod baselines;
+pub mod bic;
+pub mod cli_app;
+pub mod coordinator;
+pub mod experiments;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod substrate;
+
+pub use cli_app::cli_main;

@@ -1,0 +1,6 @@
+//! `sotb-bic` CLI — leader entrypoint for the multi-core BIC runtime and the
+//! reproduction experiment harness. See `sotb-bic help`.
+
+fn main() {
+    std::process::exit(sotb_bic::cli_main(std::env::args().skip(1).collect()));
+}

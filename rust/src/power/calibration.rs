@@ -1,0 +1,196 @@
+//! Calibration constants for the SOTB power/delay models, fitted to the
+//! paper's own measured points (DESIGN.md §5). Every constant's
+//! derivation is documented inline; `tests` re-assert the fits against
+//! the measurement table so a drive-by edit cannot silently decalibrate
+//! the models.
+//!
+//! Measured reference points (paper §IV, Figs. 5–8):
+//!
+//! | quantity                        | value                 |
+//! |---------------------------------|-----------------------|
+//! | f, P at Vdd = 0.4 V             | 10.1 MHz, 0.17 mW     |
+//! | f, P at Vdd = 0.55 V            | 22 MHz, 0.6 mW        |
+//! | f, P at Vdd = 1.2 V             | 41 MHz, 6.68 mW       |
+//! | E/cycle at 1.2 V                | 162.9 pJ              |
+//! | post-layout core-only f         | 150 MHz (~6x measured)|
+//! | CG-only standby @ 0.4 V         | 10.6 uW               |
+//! | CG+RBB standby @ 0.4 V, -2 V    | 2.64 nW (6.6 nA)      |
+//! | I_stb slope vs Vbb @ 0.4 V      | one decade per 0.5 V  |
+//! | GIDL crossover (-2 V vs -1.5 V) | Vdd ~ 0.8 V           |
+
+/// Volts.
+pub type Volt = f64;
+/// Hertz.
+pub type Hertz = f64;
+/// Watts.
+pub type Watt = f64;
+/// Amperes.
+pub type Ampere = f64;
+/// Joules.
+pub type Joule = f64;
+
+// ---------------------------------------------------------------------------
+// Alpha-power delay fit: f(Vdd) = K_F * (Vdd - VTH)^ALPHA / Vdd.
+//
+// Solving the three (Vdd, f) points simultaneously: with VTH = 0.32 V the
+// two pairwise ratio equations give ALPHA = 1.039 and 1.043 — consistent —
+// so ALPHA = 1.041 and K_F from the 0.4 V point:
+//   K_F = 10.1 MHz * 0.4 / 0.08^1.041 = 55.9 MHz.
+// Residuals: f(0.55) = 22.0 MHz (meas. 22), f(1.2) = 40.8 MHz (meas. 41).
+// ---------------------------------------------------------------------------
+
+/// Effective threshold voltage of the critical path [V].
+pub const VTH: Volt = 0.32;
+/// Velocity-saturation exponent (near-linear in this regime).
+pub const ALPHA: f64 = 1.041;
+/// Frequency prefactor [Hz].
+pub const K_F: Hertz = 55.9e6;
+
+/// Package/pad slowdown: the measured chip clocks ~6x below the
+/// post-layout core (paper §IV: 150 MHz simulated vs the fabricated
+/// 22 MHz at the same 0.55 V) — interconnect to the chip packet plus the
+/// packet itself dominate the critical path. 150 / 22 = 6.82.
+pub const PACKAGE_SLOWDOWN: f64 = 6.82;
+
+// ---------------------------------------------------------------------------
+// Dynamic energy: E/cycle = C_EFF * Vdd^2, calibrated exactly at the
+// headline point 162.9 pJ @ 1.2 V: C_EFF = 162.9e-12 / 1.44 = 113.1 pF.
+// Cross-checks: predicts 0.183 mW @ 0.4 V (meas. 0.17, +7.6%) and
+// 0.75 mW @ 0.55 V (meas. 0.6, +25% — the paper reports that point to one
+// significant figure). Shape (quadratic, monotone) is what Fig. 6/7 need.
+// ---------------------------------------------------------------------------
+
+/// Effective switching capacitance of the whole core [F].
+pub const C_EFF: f64 = 113.1e-12;
+
+/// Fraction of C_EFF in the clock tree + sequential overhead: charged per
+/// delivered clock even when the datapath idles; the remainder is
+/// distributed over datapath blocks by switching activity. The 40/60
+/// split follows the usual clock-tree share of register-dominated designs
+/// (every memory bit on this die is a dedicated register — paper §IV).
+pub const CLOCK_TREE_FRACTION: f64 = 0.4;
+
+// ---------------------------------------------------------------------------
+// Subthreshold leakage (RBB-controlled):
+//   I_slc(Vdd, Vbb) = I0 * 10^(DIBL_DECADES*(Vdd - 0.4)) * 10^(Vbb / S_BB)
+// I0 from the CG-only standby point: 10.6 uW / 0.4 V = 26.5 uA.
+// S_BB = 0.5 V/decade is the paper's stated slope ("whenever Vbb decreases
+// by 0.5 V, Istb is proportionally reduced by one order of magnitude").
+// ---------------------------------------------------------------------------
+
+/// Subthreshold leakage at Vdd = 0.4 V, Vbb = 0 [A].
+pub const I_SLC_0: Ampere = 26.5e-6;
+/// Reverse-body-bias sensitivity [V per decade].
+pub const S_BB: Volt = 0.5;
+/// DIBL-driven leakage growth with Vdd [decades per volt].
+pub const DIBL_DECADES: f64 = 0.6;
+
+// ---------------------------------------------------------------------------
+// GIDL: I_gidl(Vdd, Vbb) = A_GIDL * 10^(GD*Vdd + GB*|Vbb|).
+// Three constraints pin the fit (derivation in DESIGN.md §5):
+//   (a) total I_stb(0.4, -2) = 6.6 nA (Fig. 8 minimum)
+//       -> I_gidl(0.4, -2) = 6.6 - 2.65 = 3.95 nA;
+//   (b) the Vbb = -2 and -1.5 curves cross at Vdd = 0.8 V (Fig. 8);
+//   (c) GD = 3 decades/V chosen for the sharp Vdd dependence the paper
+//       describes ("if Vbb was small and Vdd became high, Igidl sharply
+//       increased and completely dominated Istb").
+// Solving (a) + (b) with GD = 3: GB = 0.943 dec/V, A_GIDL = 3.24 pA.
+// ---------------------------------------------------------------------------
+
+/// GIDL prefactor [A].
+pub const A_GIDL: Ampere = 3.24e-12;
+/// GIDL Vdd sensitivity [decades per volt].
+pub const GD: f64 = 3.0;
+/// GIDL |Vbb| sensitivity [decades per volt].
+pub const GB: f64 = 0.943;
+
+// ---------------------------------------------------------------------------
+// The paper's measured reference table, used by tests and experiments.
+// ---------------------------------------------------------------------------
+
+/// (Vdd [V], measured f [Hz], measured P [W]) — Fig. 6.
+pub const MEASURED_F_P: [(Volt, Hertz, Watt); 3] = [
+    (0.4, 10.1e6, 0.17e-3),
+    (0.55, 22.0e6, 0.6e-3),
+    (1.2, 41.0e6, 6.68e-3),
+];
+
+/// Headline energy point — Fig. 7.
+pub const MEASURED_E_CYCLE_1V2: Joule = 162.9e-12;
+
+/// CG-only standby power at 0.4 V — §I / §IV.
+pub const MEASURED_STANDBY_CG: Watt = 10.6e-6;
+
+/// CG+RBB standby power at 0.4 V, Vbb = -2 V — Fig. 5 / §IV.
+pub const MEASURED_STANDBY_RBB: Watt = 2.64e-9;
+
+/// Minimum standby current at (0.4 V, -2 V) — Fig. 8.
+pub const MEASURED_I_STB_MIN: Ampere = 6.6e-9;
+
+/// The fabricated die's inventory — Fig. 5.
+pub const DIE_MEMORY_BITS: usize = 8_320;
+pub const DIE_CELLS: usize = 36_205;
+pub const DIE_TRANSISTORS: usize = 466_854;
+pub const DIE_AREA_MM2: f64 = 0.21;
+pub const DIE_CORE_W_UM: f64 = 648.0;
+pub const DIE_CORE_H_UM: f64 = 320.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The alpha-power fit must hit the three measured frequencies within
+    /// a few percent — this is the calibration contract.
+    #[test]
+    fn alpha_power_fit_residuals() {
+        for &(vdd, f_meas, _) in &MEASURED_F_P {
+            let f = K_F * (vdd - VTH).powf(ALPHA) / vdd;
+            let err = (f - f_meas).abs() / f_meas;
+            assert!(err < 0.02, "Vdd={vdd}: f={f:.3e} vs {f_meas:.3e} ({err:.3})");
+        }
+    }
+
+    #[test]
+    fn c_eff_reproduces_headline_energy_exactly() {
+        let e = C_EFF * 1.2 * 1.2;
+        let err = (e - MEASURED_E_CYCLE_1V2).abs() / MEASURED_E_CYCLE_1V2;
+        assert!(err < 0.005, "E/cycle @1.2V: {e:.4e}");
+    }
+
+    #[test]
+    fn i_slc_matches_cg_standby_point() {
+        // 26.5 uA * 0.4 V = 10.6 uW.
+        let p = I_SLC_0 * 0.4;
+        assert!((p - MEASURED_STANDBY_CG).abs() / MEASURED_STANDBY_CG < 1e-6);
+    }
+
+    #[test]
+    fn gidl_fit_reproduces_istb_minimum() {
+        let islc = I_SLC_0 * 10f64.powf(-2.0 / S_BB);
+        let igidl = A_GIDL * 10f64.powf(GD * 0.4 + GB * 2.0);
+        let total = islc + igidl;
+        let err = (total - MEASURED_I_STB_MIN).abs() / MEASURED_I_STB_MIN;
+        assert!(err < 0.02, "I_stb(0.4,-2) = {total:.3e}");
+    }
+
+    #[test]
+    fn gidl_crossover_sits_near_0v8() {
+        // At the crossover Vdd, Istb(-2.0) == Istb(-1.5).
+        let istb = |vdd: f64, vbb: f64| {
+            I_SLC_0
+                * 10f64.powf(DIBL_DECADES * (vdd - 0.4))
+                * 10f64.powf(vbb / S_BB)
+                + A_GIDL * 10f64.powf(GD * vdd + GB * vbb.abs())
+        };
+        let diff_07 = istb(0.7, -2.0) - istb(0.7, -1.5);
+        let diff_09 = istb(0.9, -2.0) - istb(0.9, -1.5);
+        assert!(diff_07 < 0.0, "below 0.8 V the -2 V curve must be lower");
+        assert!(diff_09 > 0.0, "above 0.8 V the -2 V curve must be higher");
+    }
+
+    #[test]
+    fn rbb_reduction_factor_near_4000x() {
+        let ratio = MEASURED_STANDBY_CG / MEASURED_STANDBY_RBB;
+        assert!((3_900.0..4_100.0).contains(&ratio), "ratio = {ratio:.0}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Critical-path delay model: maximum clock frequency vs supply voltage
+//! (Fig. 6's frequency curve), via the alpha-power law
+//! `f = K_F * (Vdd - VTH)^ALPHA / Vdd` with constants fitted to the
+//! chip's three measured points (`calibration`).
+//!
+//! Two levels exist because the paper reports both: the *chip* level
+//! (pad/package-limited — what Fig. 6 plots) and the *core* level (the
+//! 150 MHz post-layout number), related by `PACKAGE_SLOWDOWN`.
+
+use super::calibration::{Hertz, Volt, ALPHA, K_F, PACKAGE_SLOWDOWN, VTH};
+use super::sotb::Supply;
+
+/// Maximum chip-level clock frequency at `vdd` (package-limited, as
+/// measured on the fabricated part).
+pub fn f_max_chip(supply: Supply) -> Hertz {
+    let vdd = supply.vdd;
+    debug_assert!(vdd > VTH, "below threshold the chip does not run");
+    K_F * (vdd - VTH).powf(ALPHA) / vdd
+}
+
+/// Maximum core-level clock frequency (what the BIC core itself could
+/// sustain, per the post-layout simulations — 150 MHz class).
+pub fn f_max_core(supply: Supply) -> Hertz {
+    f_max_chip(supply) * PACKAGE_SLOWDOWN
+}
+
+/// Critical-path delay at `vdd` [s] (chip level).
+pub fn t_crit_chip(supply: Supply) -> f64 {
+    1.0 / f_max_chip(supply)
+}
+
+/// The (Vdd, f) series Fig. 6 plots, over the standard sweep.
+pub fn fig6_frequency_series() -> Vec<(Volt, Hertz)> {
+    Supply::sweep().into_iter().map(|s| (s.vdd, f_max_chip(s))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::calibration::MEASURED_F_P;
+
+    #[test]
+    fn endpoints_match_measurements() {
+        for &(vdd, f_meas, _) in &MEASURED_F_P {
+            let f = f_max_chip(Supply::new(vdd));
+            assert!(
+                (f - f_meas).abs() / f_meas < 0.02,
+                "Vdd={vdd}: {f:.3e} vs {f_meas:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_increasing_in_vdd() {
+        let series = fig6_frequency_series();
+        for w in series.windows(2) {
+            assert!(w[1].1 > w[0].1, "f must increase with Vdd: {series:?}");
+        }
+    }
+
+    #[test]
+    fn concavity_alpha_power_shape() {
+        // df/dV decreasing: the curve flattens at high Vdd (Fig. 6 shape).
+        let f = |v: f64| f_max_chip(Supply::new(v));
+        let d1 = f(0.6) - f(0.5);
+        let d2 = f(1.1) - f(1.0);
+        assert!(d1 > d2, "slope must flatten: {d1:.3e} vs {d2:.3e}");
+    }
+
+    #[test]
+    fn core_level_hits_150mhz_class() {
+        let f = f_max_core(Supply::new(0.55));
+        assert!(
+            (140e6..160e6).contains(&f),
+            "core f(0.55) = {f:.3e}, expected ~150 MHz"
+        );
+    }
+
+    #[test]
+    fn delay_is_inverse_frequency() {
+        let s = Supply::new(0.8);
+        let t = t_crit_chip(s);
+        assert!((t * f_max_chip(s) - 1.0).abs() < 1e-12);
+    }
+}

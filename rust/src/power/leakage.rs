@@ -1,0 +1,137 @@
+//! Standby leakage model (Fig. 8): subthreshold leakage controlled by
+//! reverse back-gate bias, plus gate-induced drain leakage (GIDL) that
+//! takes over at high Vdd and deep reverse bias.
+//!
+//! `I_stb(Vdd, Vbb) = I_slc + I_gidl` with
+//! `I_slc = I_SLC_0 * 10^(DIBL*(Vdd-0.4)) * 10^(Vbb/S_BB)` and
+//! `I_gidl = A_GIDL * 10^(GD*Vdd + GB*|Vbb|)`; constants in
+//! [`super::calibration`], fitted to the paper's measured points.
+
+use super::calibration::{
+    Ampere, Volt, Watt, A_GIDL, DIBL_DECADES, GB, GD, I_SLC_0, S_BB,
+};
+use super::sotb::{BackBias, Supply};
+
+/// Subthreshold leakage component [A].
+pub fn i_slc(supply: Supply, bias: BackBias) -> Ampere {
+    I_SLC_0
+        * 10f64.powf(DIBL_DECADES * (supply.vdd - 0.4))
+        * 10f64.powf(bias.vbb / S_BB)
+}
+
+/// GIDL component [A]. Suppressed at low Vdd by the SOTB structure;
+/// grows sharply with Vdd and with reverse bias magnitude (paper §IV).
+pub fn i_gidl(supply: Supply, bias: BackBias) -> Ampere {
+    A_GIDL * 10f64.powf(GD * supply.vdd + GB * bias.vbb.abs())
+}
+
+/// Total standby current [A] — the quantity Fig. 8 plots.
+pub fn i_stb(supply: Supply, bias: BackBias) -> Ampere {
+    i_slc(supply, bias) + i_gidl(supply, bias)
+}
+
+/// Standby leakage power [W] at the operating point.
+pub fn p_stb(supply: Supply, bias: BackBias) -> Watt {
+    i_stb(supply, bias) * supply.vdd
+}
+
+/// The (Vbb, Vdd) grid of Fig. 8: for each Vbb in {0, -0.5, ..., -2.0},
+/// the I_stb series over the Vdd sweep. Returns (vbb, vec of (vdd, istb)).
+pub fn fig8_grid() -> Vec<(Volt, Vec<(Volt, Ampere)>)> {
+    [0.0, -0.5, -1.0, -1.5, -2.0]
+        .iter()
+        .map(|&vbb| {
+            let bias = BackBias::reverse(vbb);
+            let series = Supply::sweep()
+                .into_iter()
+                .map(|s| (s.vdd, i_stb(s, bias)))
+                .collect();
+            (vbb, series)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::calibration::{MEASURED_I_STB_MIN, MEASURED_STANDBY_CG};
+
+    const V04: Supply = Supply { vdd: 0.4 };
+
+    #[test]
+    fn cg_only_point() {
+        // Vbb = 0, Vdd = 0.4: 26.5 uA -> 10.6 uW.
+        let p = p_stb(V04, BackBias::ZERO);
+        assert!((p - MEASURED_STANDBY_CG).abs() / MEASURED_STANDBY_CG < 0.02);
+    }
+
+    #[test]
+    fn decade_per_half_volt_at_0v4() {
+        // The paper's stated slope, valid until the GIDL floor: each
+        // -0.5 V of Vbb cuts I_stb by ~10x.
+        let steps = [0.0, -0.5, -1.0, -1.5];
+        for w in steps.windows(2) {
+            let a = i_stb(V04, BackBias::reverse(w[0]));
+            let b = i_stb(V04, BackBias::reverse(w[1]));
+            let ratio = a / b;
+            assert!(
+                (8.0..12.0).contains(&ratio),
+                "slope {ratio:.2} between Vbb={} and {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn minimum_istb_matches_fig8() {
+        let i = i_stb(V04, BackBias::FULL_REVERSE);
+        assert!(
+            (i - MEASURED_I_STB_MIN).abs() / MEASURED_I_STB_MIN < 0.02,
+            "I_stb(0.4,-2) = {i:.3e}"
+        );
+    }
+
+    #[test]
+    fn gidl_crossover_above_0v8() {
+        // Fig. 8: for Vdd > 0.8 V the Vbb=-2 curve exceeds Vbb=-1.5.
+        for vdd in [0.9, 1.0, 1.1, 1.2] {
+            let s = Supply::new(vdd);
+            assert!(
+                i_stb(s, BackBias::reverse(-2.0))
+                    > i_stb(s, BackBias::reverse(-1.5)),
+                "no crossover at Vdd={vdd}"
+            );
+        }
+        for vdd in [0.4, 0.5, 0.6, 0.7] {
+            let s = Supply::new(vdd);
+            assert!(
+                i_stb(s, BackBias::reverse(-2.0))
+                    < i_stb(s, BackBias::reverse(-1.5)),
+                "premature crossover at Vdd={vdd}"
+            );
+        }
+    }
+
+    #[test]
+    fn gidl_negligible_at_low_vdd_shallow_bias() {
+        let s = Supply::new(0.4);
+        let b = BackBias::reverse(-0.5);
+        assert!(i_gidl(s, b) < i_slc(s, b) / 100.0);
+    }
+
+    #[test]
+    fn fig8_grid_shape() {
+        let grid = fig8_grid();
+        assert_eq!(grid.len(), 5);
+        for (_, series) in &grid {
+            assert_eq!(series.len(), 9);
+        }
+        // Every curve increases with Vdd.
+        for (vbb, series) in &grid {
+            for w in series.windows(2) {
+                assert!(w[1].1 > w[0].1, "Vbb={vbb}: not monotone in Vdd");
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! SOTB device-level relations (paper §II-B).
+//!
+//! The silicon-on-thin-buried-oxide device adds a back gate under the
+//! ultra-thin BOX layer: biasing it (Vbb) shifts the effective threshold
+//! voltage after fabrication, which is what makes the reverse-back-bias
+//! standby mode possible without any data-retention circuitry.
+
+use super::calibration::Volt;
+
+/// Back-gate bias operating point. The paper's Eq. (1) couples the n-well
+/// and p-well bias rails: `Vbb = Vbn = Vdd - Vbp` — a single knob.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BackBias {
+    /// The common bias value Vbb [V]; 0 = no bias, negative = reverse.
+    pub vbb: Volt,
+}
+
+impl BackBias {
+    /// No back-gate bias (active-mode default).
+    pub const ZERO: BackBias = BackBias { vbb: 0.0 };
+
+    /// The chip's deepest reverse bias (Fig. 8 sweep end).
+    pub const FULL_REVERSE: BackBias = BackBias { vbb: -2.0 };
+
+    /// Construct a reverse bias; forward bias is outside the chip's
+    /// standby envelope and rejected here.
+    pub fn reverse(vbb: Volt) -> Self {
+        assert!(vbb <= 0.0, "reverse bias must be <= 0 (got {vbb})");
+        assert!(vbb >= -2.5, "beyond the -2 V envelope the model is unfit");
+        Self { vbb }
+    }
+
+    /// NMOS back-gate voltage Vbn (Eq. 1): equals Vbb.
+    pub fn vbn(&self) -> Volt {
+        self.vbb
+    }
+
+    /// PMOS back-gate voltage Vbp (Eq. 1): `Vdd - Vbb`.
+    pub fn vbp(&self, vdd: Volt) -> Volt {
+        vdd - self.vbb
+    }
+}
+
+/// Supply-voltage operating point, constrained to the chip's validated
+/// envelope (0.4–1.2 V; Fig. 5 "Core Vdd").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Supply {
+    pub vdd: Volt,
+}
+
+impl Supply {
+    pub const MIN: Volt = 0.4;
+    pub const MAX: Volt = 1.2;
+
+    pub fn new(vdd: Volt) -> Self {
+        assert!(
+            (Self::MIN..=Self::MAX).contains(&vdd),
+            "Vdd {vdd} outside the chip's validated 0.4-1.2 V range"
+        );
+        Self { vdd }
+    }
+
+    /// The Fig. 6/7 sweep grid (0.4 to 1.2 V inclusive, step 0.1).
+    pub fn sweep() -> Vec<Supply> {
+        (4..=12).map(|i| Supply::new(i as f64 / 10.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_well_voltages() {
+        let bb = BackBias::reverse(-1.5);
+        assert_eq!(bb.vbn(), -1.5);
+        assert_eq!(bb.vbp(0.4), 1.9);
+        assert_eq!(BackBias::ZERO.vbp(1.2), 1.2);
+    }
+
+    #[test]
+    #[should_panic(expected = "reverse bias")]
+    fn forward_bias_rejected() {
+        BackBias::reverse(0.1);
+    }
+
+    #[test]
+    fn supply_envelope() {
+        assert_eq!(Supply::new(0.4).vdd, 0.4);
+        assert_eq!(Supply::new(1.2).vdd, 1.2);
+        let sweep = Supply::sweep();
+        assert_eq!(sweep.len(), 9);
+        assert!((sweep[0].vdd - 0.4).abs() < 1e-12);
+        assert!((sweep[8].vdd - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the chip")]
+    fn out_of_envelope_rejected() {
+        Supply::new(1.3);
+    }
+}

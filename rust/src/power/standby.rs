@@ -1,0 +1,138 @@
+//! Standby technique models: what an *idle* core costs under each power-
+//! management scheme, plus wake-up latency — the trade-off the paper's
+//! multi-core system (Fig. 4) and Table I revolve around.
+//!
+//! - `ActiveIdle`  — no management: clock tree keeps switching.
+//! - `ClockGated`  — CG: dynamic power gone, full leakage remains
+//!   (10.6 uW @ 0.4 V on the chip).
+//! - `PowerGated`  — sleep transistor cuts a *fraction* of leakage
+//!   (models refs [12]/[13]: 29.8% / 59.8% reduction) but needs data
+//!   retention to keep sequential state.
+//! - `CgRbb`       — the paper's scheme: CG plus reverse back-gate bias;
+//!   leakage follows the Fig. 8 model (2.64 nW @ 0.4 V, -2 V). No
+//!   retention circuitry needed — SOTB state holds at reduced bias.
+
+use super::calibration::{Hertz, Volt, Watt, CLOCK_TREE_FRACTION, C_EFF};
+use super::leakage;
+use super::sotb::{BackBias, Supply};
+
+/// A standby power-management technique.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StandbyMode {
+    /// Idle but unmanaged: clock tree still toggles at `f`.
+    ActiveIdle { f: Hertz },
+    /// Clock gating only.
+    ClockGated,
+    /// Power gating with the given leakage-reduction fraction (0..1) —
+    /// the comparison designs' technique.
+    PowerGated { leak_reduction: f64 },
+    /// Clock gating + reverse back-gate bias at `vbb` (the paper's mode).
+    CgRbb { vbb: Volt },
+}
+
+impl StandbyMode {
+    /// The chip's shipped standby configuration (Fig. 5): CG + RBB at the
+    /// full -2 V reverse bias.
+    pub const CHIP: StandbyMode = StandbyMode::CgRbb { vbb: -2.0 };
+
+    /// Standby power [W] of one idle core at `supply`.
+    pub fn power(&self, supply: Supply) -> Watt {
+        let leak_full = leakage::p_stb(supply, BackBias::ZERO);
+        match *self {
+            StandbyMode::ActiveIdle { f } => {
+                // Clock tree + sequential overhead keeps switching; the
+                // datapath holds its values (no new events).
+                CLOCK_TREE_FRACTION * C_EFF * supply.vdd * supply.vdd * f + leak_full
+            }
+            StandbyMode::ClockGated => leak_full,
+            StandbyMode::PowerGated { leak_reduction } => {
+                assert!((0.0..=1.0).contains(&leak_reduction));
+                leak_full * (1.0 - leak_reduction)
+            }
+            StandbyMode::CgRbb { vbb } => {
+                leakage::p_stb(supply, BackBias::reverse(vbb))
+            }
+        }
+    }
+
+    /// Standby power per memory bit [W/bit] — Table I's metric.
+    pub fn spb(&self, supply: Supply, memory_bits: usize) -> Watt {
+        self.power(supply) / memory_bits as f64
+    }
+
+    /// Wake-up latency [s]: how long before the core can accept work
+    /// after leaving standby. CG reopens in a couple of clocks; RBB must
+    /// wait for the well bias to settle (charge-pump slew across the
+    /// back-gate capacitance — tens of microseconds, the price of the
+    /// 4,000x leakage win); PG must restore retained state.
+    /// These constants are modelling assumptions (the paper does not
+    /// report wake latency) — see DESIGN.md §7.
+    pub fn wakeup_latency(&self, f: Hertz) -> f64 {
+        match *self {
+            StandbyMode::ActiveIdle { .. } => 0.0,
+            StandbyMode::ClockGated => 2.0 / f,
+            StandbyMode::PowerGated { .. } => 10e-6,
+            StandbyMode::CgRbb { .. } => 50e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::calibration::{MEASURED_STANDBY_CG, MEASURED_STANDBY_RBB};
+
+    const V04: Supply = Supply { vdd: 0.4 };
+
+    #[test]
+    fn cg_matches_paper_point() {
+        let p = StandbyMode::ClockGated.power(V04);
+        assert!((p - MEASURED_STANDBY_CG).abs() / MEASURED_STANDBY_CG < 0.02);
+    }
+
+    #[test]
+    fn cg_rbb_matches_paper_point() {
+        let p = StandbyMode::CHIP.power(V04);
+        assert!(
+            (p - MEASURED_STANDBY_RBB).abs() / MEASURED_STANDBY_RBB < 0.02,
+            "P = {p:.3e}"
+        );
+    }
+
+    #[test]
+    fn rbb_beats_cg_by_about_4000x() {
+        let ratio =
+            StandbyMode::ClockGated.power(V04) / StandbyMode::CHIP.power(V04);
+        assert!((3_800.0..4_300.0).contains(&ratio), "ratio = {ratio:.0}");
+    }
+
+    #[test]
+    fn spb_matches_table1_row() {
+        // This work: 2.64 nW over 8,320 bits = 0.317 pW/bit (~0.31).
+        let spb = StandbyMode::CHIP.spb(V04, 8_320);
+        assert!(
+            (0.30e-12..0.33e-12).contains(&spb),
+            "SPB = {:.3} pW/bit",
+            spb * 1e12
+        );
+    }
+
+    #[test]
+    fn technique_ordering() {
+        // ActiveIdle > CG > PG(59.8%) > CG+RBB at the standby point.
+        let idle = StandbyMode::ActiveIdle { f: 10.1e6 }.power(V04);
+        let cg = StandbyMode::ClockGated.power(V04);
+        let pg = StandbyMode::PowerGated { leak_reduction: 0.598 }.power(V04);
+        let rbb = StandbyMode::CHIP.power(V04);
+        assert!(idle > cg && cg > pg && pg > rbb, "{idle} {cg} {pg} {rbb}");
+    }
+
+    #[test]
+    fn wakeup_latency_ordering() {
+        let f = 41e6;
+        let cg = StandbyMode::ClockGated.wakeup_latency(f);
+        let pg = StandbyMode::PowerGated { leak_reduction: 0.3 }.wakeup_latency(f);
+        let rbb = StandbyMode::CHIP.wakeup_latency(f);
+        assert!(cg < pg && pg < rbb, "deeper sleep must wake slower");
+    }
+}

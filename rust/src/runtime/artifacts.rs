@@ -1,0 +1,229 @@
+//! Artifact manifest parsing and variant registry.
+//!
+//! `python -m compile.aot` writes `manifest.txt`, one artifact per line:
+//!
+//! ```text
+//! bic name=chip file=bic_chip.hlo.txt n=16 w=32 m=8 nw=1
+//! twostep name=chip file=bic_chip_twostep.hlo.txt n=16 w=32 m=8 nw=1
+//! query name=chip file=query_chip.hlo.txt m=8 nw=1
+//! coalesce name=batch file=coalesce4_batch.hlo.txt b=4 n=256 w=32 m=16 nw=8
+//! ```
+//!
+//! Line-oriented `key=value` rather than JSON keeps the Rust side free of a
+//! JSON parser on the load path; `manifest.json` exists for humans.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One BIC model artifact (fused or two-step): shapes + file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BicVariant {
+    pub name: String,
+    pub file: PathBuf,
+    /// Records per batch.
+    pub n: usize,
+    /// Words per record.
+    pub w: usize,
+    /// Keys.
+    pub m: usize,
+    /// Packed words per BI row = ceil(n/32).
+    pub nw: usize,
+    /// Batch-coalescing factor (1 for plain variants).
+    pub b: usize,
+}
+
+/// One query-evaluator artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueryVariant {
+    pub name: String,
+    pub file: PathBuf,
+    pub m: usize,
+    pub nw: usize,
+}
+
+/// Parsed manifest: all artifacts produced by `make artifacts`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub bic: Vec<BicVariant>,
+    pub twostep: Vec<BicVariant>,
+    /// MXU-formulation ablation artifacts (one-hot matmul match).
+    pub mxu: Vec<BicVariant>,
+    pub coalesce: Vec<BicVariant>,
+    pub query: Vec<QueryVariant>,
+}
+
+impl Manifest {
+    /// Locate the artifacts directory: `$SOTB_BIC_ARTIFACTS`, else
+    /// `./artifacts` relative to the current directory.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SOTB_BIC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load and parse `<dir>/manifest.txt`; artifact paths are resolved
+    /// relative to `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` first?)",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` is prepended to file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut out = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap();
+            let kv: HashMap<&str, &str> = parts
+                .map(|p| {
+                    p.split_once('=').with_context(|| {
+                        format!("manifest line {}: bad token {p:?}", lineno + 1)
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k).copied().with_context(|| {
+                    format!("manifest line {}: missing {k}=", lineno + 1)
+                })
+            };
+            let get_num = |k: &str| -> Result<usize> {
+                get(k)?.parse::<usize>().with_context(|| {
+                    format!("manifest line {}: bad number for {k}", lineno + 1)
+                })
+            };
+            match kind {
+                "bic" | "twostep" | "mxu" | "coalesce" => {
+                    let v = BicVariant {
+                        name: get("name")?.to_string(),
+                        file: dir.join(get("file")?),
+                        n: get_num("n")?,
+                        w: get_num("w")?,
+                        m: get_num("m")?,
+                        nw: get_num("nw")?,
+                        b: if kind == "coalesce" { get_num("b")? } else { 1 },
+                    };
+                    if v.nw != v.n.div_ceil(32) {
+                        bail!(
+                            "manifest line {}: nw={} inconsistent with n={}",
+                            lineno + 1,
+                            v.nw,
+                            v.n
+                        );
+                    }
+                    match kind {
+                        "bic" => out.bic.push(v),
+                        "twostep" => out.twostep.push(v),
+                        "mxu" => out.mxu.push(v),
+                        _ => out.coalesce.push(v),
+                    }
+                }
+                "query" => out.query.push(QueryVariant {
+                    name: get("name")?.to_string(),
+                    file: dir.join(get("file")?),
+                    m: get_num("m")?,
+                    nw: get_num("nw")?,
+                }),
+                other => bail!(
+                    "manifest line {}: unknown artifact kind {other:?}",
+                    lineno + 1
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn find_bic(&self, name: &str) -> Option<&BicVariant> {
+        self.bic.iter().find(|v| v.name == name)
+    }
+
+    pub fn find_twostep(&self, name: &str) -> Option<&BicVariant> {
+        self.twostep.iter().find(|v| v.name == name)
+    }
+
+    pub fn find_mxu(&self, name: &str) -> Option<&BicVariant> {
+        self.mxu.iter().find(|v| v.name == name)
+    }
+
+    pub fn find_coalesce(&self, name: &str) -> Option<&BicVariant> {
+        self.coalesce.iter().find(|v| v.name == name)
+    }
+
+    pub fn find_query(&self, name: &str) -> Option<&QueryVariant> {
+        self.query.iter().find(|v| v.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+bic name=chip file=bic_chip.hlo.txt n=16 w=32 m=8 nw=1
+twostep name=chip file=bic_chip_twostep.hlo.txt n=16 w=32 m=8 nw=1
+query name=chip file=query_chip.hlo.txt m=8 nw=1
+coalesce name=batch file=coalesce4_batch.hlo.txt b=4 n=256 w=32 m=16 nw=8
+";
+
+    #[test]
+    fn parses_all_kinds() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.bic.len(), 1);
+        assert_eq!(m.twostep.len(), 1);
+        assert_eq!(m.query.len(), 1);
+        assert_eq!(m.coalesce.len(), 1);
+        let chip = m.find_bic("chip").unwrap();
+        assert_eq!(chip.n, 16);
+        assert_eq!(chip.file, PathBuf::from("/a/bic_chip.hlo.txt"));
+        assert_eq!(m.find_coalesce("batch").unwrap().b, 4);
+    }
+
+    #[test]
+    fn rejects_inconsistent_nw() {
+        let bad = "bic name=x file=f n=64 w=1 m=1 nw=1\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        assert!(Manifest::parse("blah name=x file=f\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_field() {
+        assert!(
+            Manifest::parse("bic name=x n=1 w=1 m=1 nw=1\n", Path::new("."))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn missing_lookup_is_none() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.find_bic("nope").is_none());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration hook: when `make artifacts` has run, the real
+        // manifest must parse and contain the chip variant.
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let chip = m.find_bic("chip").expect("chip variant");
+            assert_eq!((chip.n, chip.w, chip.m), (16, 32, 8));
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! PJRT client wrapper: load AOT HLO-text artifacts and compile them once.
+//!
+//! Interchange is HLO *text* — jax >= 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Thin wrapper over [`xla::PjRtClient`] that owns artifact compilation.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client (the only backend in this environment;
+    /// TPU execution of the Mosaic path is compile-only — DESIGN.md §6).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load one HLO-text artifact and compile it to a loaded executable.
+    pub fn compile_hlo_text(
+        &self,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform_name())
+            .field("devices", &self.device_count())
+            .finish()
+    }
+}

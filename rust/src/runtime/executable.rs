@@ -1,0 +1,167 @@
+//! Typed executables over the raw PJRT interface: marshal records/keys in,
+//! packed bitmap words out. This is the entire request-path surface of the
+//! AOT compute artifacts — no Python anywhere.
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifacts::{BicVariant, QueryVariant};
+use super::client::Runtime;
+use crate::bic::bitmap::BitmapIndex;
+use crate::bic::PAD;
+
+/// A compiled BIC model (fused, two-step, or coalesced variant).
+pub struct BicExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    variant: BicVariant,
+}
+
+impl BicExecutable {
+    /// Compile the artifact for `variant` on `rt`.
+    pub fn load(rt: &Runtime, variant: &BicVariant) -> Result<Self> {
+        let exe = rt.compile_hlo_text(&variant.file)?;
+        Ok(Self { exe, variant: variant.clone() })
+    }
+
+    pub fn variant(&self) -> &BicVariant {
+        &self.variant
+    }
+
+    /// Index one batch. `records`: up to `n` records of up to `w` words
+    /// (padded here); `keys`: exactly `m`. Returns the `M x N` bitmap index
+    /// decoded from the artifact's packed `u32[m, nw]` output.
+    pub fn index(&self, records: &[Vec<i32>], keys: &[i32]) -> Result<BitmapIndex> {
+        ensure!(self.variant.b == 1, "coalesced variant: use index_coalesced");
+        let packed = self.run_raw(&self.flatten_records(records)?, keys)?;
+        Ok(BitmapIndex::from_packed(self.variant.m, self.variant.n, &packed))
+    }
+
+    /// Index `b` batches in one PJRT dispatch (the coalesced artifact).
+    pub fn index_coalesced(
+        &self,
+        batches: &[&[Vec<i32>]],
+        keys: &[i32],
+    ) -> Result<Vec<BitmapIndex>> {
+        let b = self.variant.b;
+        ensure!(b > 1, "not a coalesced variant");
+        ensure!(batches.len() == b, "expected exactly {b} batches");
+        let mut flat = Vec::with_capacity(b * self.variant.n * self.variant.w);
+        for batch in batches {
+            flat.extend_from_slice(&self.flatten_records(batch)?);
+        }
+        let packed = self.run_raw(&flat, keys)?;
+        let stride = self.variant.m * self.variant.nw;
+        Ok((0..b)
+            .map(|i| {
+                BitmapIndex::from_packed(
+                    self.variant.m,
+                    self.variant.n,
+                    &packed[i * stride..(i + 1) * stride],
+                )
+            })
+            .collect())
+    }
+
+    /// Flatten + pad records to the artifact's static `[n, w]` shape.
+    fn flatten_records(&self, records: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let (n, w) = (self.variant.n, self.variant.w);
+        ensure!(
+            records.len() <= n,
+            "batch of {} records exceeds variant capacity {n}",
+            records.len()
+        );
+        let mut flat = vec![PAD; n * w];
+        for (j, rec) in records.iter().enumerate() {
+            ensure!(
+                rec.len() <= w,
+                "record {j} has {} words, variant width is {w}",
+                rec.len()
+            );
+            flat[j * w..j * w + rec.len()].copy_from_slice(rec);
+        }
+        Ok(flat)
+    }
+
+    /// Raw dispatch: flat records + keys -> flat packed words.
+    fn run_raw(&self, flat_records: &[i32], keys: &[i32]) -> Result<Vec<u32>> {
+        let v = &self.variant;
+        ensure!(keys.len() == v.m, "expected {} keys, got {}", v.m, keys.len());
+        ensure!(keys.iter().all(|&k| k != PAD), "PAD is not a valid key");
+        let rec_dims: Vec<i64> = if v.b == 1 {
+            vec![v.n as i64, v.w as i64]
+        } else {
+            vec![v.b as i64, v.n as i64, v.w as i64]
+        };
+        let recs = xla::Literal::vec1(flat_records)
+            .reshape(&rec_dims)
+            .context("reshaping records literal")?;
+        let keys_lit = xla::Literal::vec1(keys);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[recs, keys_lit])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // Artifacts are lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let words = out.to_vec::<u32>().context("decoding u32 output")?;
+        ensure!(
+            words.len() == v.b * v.m * v.nw,
+            "output length {} != b*m*nw = {}",
+            words.len(),
+            v.b * v.m * v.nw
+        );
+        Ok(words)
+    }
+}
+
+impl std::fmt::Debug for BicExecutable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BicExecutable").field("variant", &self.variant).finish()
+    }
+}
+
+/// A compiled query evaluator (`AND_{include} & ~OR_{exclude}`).
+pub struct QueryExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    variant: QueryVariant,
+}
+
+impl QueryExecutable {
+    pub fn load(rt: &Runtime, variant: &QueryVariant) -> Result<Self> {
+        let exe = rt.compile_hlo_text(&variant.file)?;
+        Ok(Self { exe, variant: variant.clone() })
+    }
+
+    pub fn variant(&self) -> &QueryVariant {
+        &self.variant
+    }
+
+    /// Evaluate the conjunctive query on a packed bitmap index.
+    pub fn eval(
+        &self,
+        bi: &BitmapIndex,
+        include: &[bool],
+        exclude: &[bool],
+    ) -> Result<Vec<u32>> {
+        let v = &self.variant;
+        ensure!(bi.num_attrs() == v.m, "index has {} attrs, variant {}", bi.num_attrs(), v.m);
+        ensure!(include.len() == v.m && exclude.len() == v.m, "mask width");
+        let packed = bi.to_packed();
+        ensure!(packed.len() == v.m * v.nw, "packed index shape mismatch");
+        let bi_lit = xla::Literal::vec1(&packed)
+            .reshape(&[v.m as i64, v.nw as i64])
+            .context("reshaping index literal")?;
+        let to_mask = |mask: &[bool]| -> xla::Literal {
+            let v: Vec<i32> = mask.iter().map(|&b| b as i32).collect();
+            xla::Literal::vec1(&v)
+        };
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[bi_lit, to_mask(include), to_mask(exclude)])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?.to_vec::<u32>()?;
+        ensure!(out.len() == v.nw, "query output length");
+        Ok(out)
+    }
+}

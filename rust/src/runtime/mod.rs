@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Build-time Python, run-time Rust: after `make artifacts` the binary is
+//! self-contained — this module never shells out or imports anything.
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+
+pub use artifacts::{BicVariant, Manifest, QueryVariant};
+pub use client::Runtime;
+pub use executable::{BicExecutable, QueryExecutable};

@@ -1,0 +1,88 @@
+//! Switching-activity accounting — the bridge from the cycle-level
+//! simulator to the dynamic-power model.
+//!
+//! The power model is calibrated so that total C_eff matches the chip's
+//! measured energy (DESIGN.md §5); the per-block split lets experiments
+//! attribute energy to CAM vs buffer vs TM and lets the coordinator
+//! charge idle-but-clocked cores only their clock-tree component.
+
+/// Per-block event counters for one simulation run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockActivity {
+    /// Cycles during which the block's clock was delivered (not gated).
+    pub clocked_cycles: u64,
+    /// Write events (RAM writes, register loads).
+    pub writes: u64,
+    /// Read/lookup events.
+    pub reads: u64,
+    /// Output bit toggles observed (Hamming distance between successive
+    /// output values) — the first-order datapath switching proxy.
+    pub bit_toggles: u64,
+}
+
+impl BlockActivity {
+    pub fn add(&mut self, other: &BlockActivity) {
+        self.clocked_cycles += other.clocked_cycles;
+        self.writes += other.writes;
+        self.reads += other.reads;
+        self.bit_toggles += other.bit_toggles;
+    }
+}
+
+/// Whole-core activity, one entry per chip block.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoreActivity {
+    pub cam: BlockActivity,
+    pub buffer: BlockActivity,
+    pub tm: BlockActivity,
+    pub control: BlockActivity,
+    /// Total clock cycles the core's (post-gate) clock ran.
+    pub cycles: u64,
+}
+
+impl CoreActivity {
+    pub fn add(&mut self, other: &CoreActivity) {
+        self.cam.add(&other.cam);
+        self.buffer.add(&other.buffer);
+        self.tm.add(&other.tm);
+        self.control.add(&other.control);
+        self.cycles += other.cycles;
+    }
+
+    /// Total datapath events (used as the activity weight by
+    /// `power::dynamic`; the clock tree is charged per `cycles`).
+    pub fn total_events(&self) -> u64 {
+        let b = |a: &BlockActivity| a.writes + a.reads + a.bit_toggles;
+        b(&self.cam) + b(&self.buffer) + b(&self.tm) + b(&self.control)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = CoreActivity::default();
+        a.cam.writes = 3;
+        a.cycles = 10;
+        let mut b = CoreActivity::default();
+        b.cam.writes = 4;
+        b.buffer.reads = 2;
+        b.cycles = 5;
+        a.add(&b);
+        assert_eq!(a.cam.writes, 7);
+        assert_eq!(a.buffer.reads, 2);
+        assert_eq!(a.cycles, 15);
+    }
+
+    #[test]
+    fn total_events_sums_all_blocks() {
+        let mut a = CoreActivity::default();
+        a.cam.writes = 1;
+        a.buffer.reads = 2;
+        a.tm.bit_toggles = 3;
+        a.control.writes = 4;
+        assert_eq!(a.total_events(), 10);
+    }
+}

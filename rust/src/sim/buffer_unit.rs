@@ -1,0 +1,136 @@
+//! Row-buffer unit: the `N x M`-bit dual-port RAM between the CAM and the
+//! TM (paper Fig. 3; 16 x 8 = 128 bits on the chip). One match bit is
+//! written per key cycle; the TM later reads M-bit rows through the second
+//! port while the next batch could already be streaming in (dual-port).
+
+use super::activity::BlockActivity;
+use super::ram::DualPortRam;
+
+/// `N x M` match-bit buffer; each row is one record's key-match vector.
+#[derive(Clone, Debug)]
+pub struct BufferUnit {
+    n: usize,
+    m: usize,
+    ram: DualPortRam,
+    cursor: usize,
+    row_shadow: u64, // bits of the row currently being assembled
+}
+
+impl BufferUnit {
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(m >= 1 && m <= 64, "key count {m} out of supported range");
+        assert!(n >= 1, "record count must be positive");
+        Self { n, m, ram: DualPortRam::new(n, m), cursor: 0, row_shadow: 0 }
+    }
+
+    #[inline]
+    pub fn num_records(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn num_keys(&self) -> usize {
+        self.m
+    }
+
+    /// Storage bits (Fig. 5 census: N*M).
+    pub fn bits(&self) -> usize {
+        self.ram.bits()
+    }
+
+    /// Write the next match bit (one key cycle). Bits accumulate in the
+    /// row shadow register and commit to RAM when the row completes —
+    /// mirroring the chip's serial-in, word-wide-commit write path.
+    pub fn push_bit(&mut self, bit: bool) {
+        assert!(self.cursor < self.n * self.m, "buffer overflow");
+        let key_idx = self.cursor % self.m;
+        if bit {
+            self.row_shadow |= 1u64 << key_idx;
+        }
+        if key_idx == self.m - 1 {
+            self.ram.write(self.cursor / self.m, self.row_shadow);
+            self.row_shadow = 0;
+        }
+        self.cursor += 1;
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.cursor == self.n * self.m
+    }
+
+    /// TM read port: fetch record-row `j` (single cycle).
+    pub fn read_row(&mut self, j: usize) -> u64 {
+        assert!(j < self.n, "row {j} out of range {}", self.n);
+        self.ram.read(j)
+    }
+
+    /// Reset the fill cursor for the next batch (contents are overwritten
+    /// row by row; no bulk clear needed, as on the chip).
+    pub fn rearm(&mut self) {
+        assert!(self.is_full(), "rearm before full");
+        self.cursor = 0;
+        self.row_shadow = 0;
+    }
+
+    pub fn activity(&self) -> &BlockActivity {
+        self.ram.activity()
+    }
+
+    pub fn take_activity(&mut self) -> BlockActivity {
+        self.ram.take_activity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_census() {
+        assert_eq!(BufferUnit::new(16, 8).bits(), 128);
+    }
+
+    #[test]
+    fn rows_commit_when_complete() {
+        let mut b = BufferUnit::new(2, 3);
+        b.push_bit(true);
+        b.push_bit(false);
+        assert_eq!(b.activity().writes, 0, "row not committed yet");
+        b.push_bit(true);
+        assert_eq!(b.activity().writes, 1);
+        assert_eq!(b.read_row(0), 0b101);
+        b.push_bit(false);
+        b.push_bit(true);
+        b.push_bit(false);
+        assert!(b.is_full());
+        assert_eq!(b.read_row(1), 0b010);
+    }
+
+    #[test]
+    fn rearm_allows_next_batch() {
+        let mut b = BufferUnit::new(1, 2);
+        b.push_bit(true);
+        b.push_bit(true);
+        b.rearm();
+        b.push_bit(false);
+        b.push_bit(true);
+        assert_eq!(b.read_row(0), 0b10);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer overflow")]
+    fn overflow_panics() {
+        let mut b = BufferUnit::new(1, 1);
+        b.push_bit(true);
+        b.push_bit(true);
+    }
+
+    #[test]
+    #[should_panic(expected = "rearm before full")]
+    fn early_rearm_panics() {
+        let mut b = BufferUnit::new(2, 2);
+        b.push_bit(true);
+        b.rearm();
+    }
+}

@@ -1,0 +1,132 @@
+//! Record-wide CAM assembled from CAM blocks: `ceil(W/32)` CBs hold one
+//! record of `W` words; a key lookup fans out to every CB in parallel and
+//! the match bit is the OR of the per-CB hit masks (single cycle, like the
+//! chip's wired match line).
+
+use super::activity::BlockActivity;
+use super::cam_block::{CamBlock, CB_SLOTS};
+use crate::bic::cam::PAD;
+
+/// CAM for records of `width` words.
+#[derive(Clone, Debug)]
+pub struct CamArray {
+    width: usize,
+    blocks: Vec<CamBlock>,
+}
+
+impl CamArray {
+    pub fn new(width: usize) -> Self {
+        assert!(width >= 1, "width must be positive");
+        let nblocks = width.div_ceil(CB_SLOTS);
+        Self { width, blocks: (0..nblocks).map(|_| CamBlock::new()).collect() }
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Total RAM bits across CBs (Fig. 5 census: W/32 blocks x 8,192).
+    pub fn ram_bits(&self) -> usize {
+        self.blocks.iter().map(CamBlock::ram_bits).sum()
+    }
+
+    /// Write word `w` of the resident record (PAD clears the slot).
+    /// One record-load cycle per call.
+    pub fn write_word(&mut self, w: usize, value: i32) {
+        assert!(w < self.width, "word index {w} out of range {}", self.width);
+        self.blocks[w / CB_SLOTS].write_word(w % CB_SLOTS, value);
+    }
+
+    /// Load an entire record (<= width words; the remainder is cleared).
+    /// Costs `width` record-load cycles on the chip — the caller
+    /// (`core_sim`) advances the clock; this just applies the writes.
+    pub fn load_record(&mut self, record: &[i32]) {
+        assert!(
+            record.len() <= self.width,
+            "record of {} words exceeds CAM width {}",
+            record.len(),
+            self.width
+        );
+        for w in 0..self.width {
+            let v = record.get(w).copied().unwrap_or(PAD);
+            self.write_word(w, v);
+        }
+    }
+
+    /// Single-cycle key match: OR of all CB hit masks.
+    pub fn matches(&mut self, key: i32) -> bool {
+        let mut hit = false;
+        for cb in &mut self.blocks {
+            // Every CB performs its lookup in parallel on the chip; we
+            // still query each so activity counts stay faithful.
+            hit |= cb.matches(key);
+        }
+        hit
+    }
+
+    /// Drain accumulated activity from all CBs.
+    pub fn take_activity(&mut self) -> BlockActivity {
+        let mut total = BlockActivity::default();
+        for cb in &mut self.blocks {
+            total.add(&cb.take_activity());
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_width_is_one_block() {
+        let cam = CamArray::new(32);
+        assert_eq!(cam.num_blocks(), 1);
+        assert_eq!(cam.ram_bits(), 8_192);
+    }
+
+    #[test]
+    fn fpga_width_is_eight_blocks() {
+        let cam = CamArray::new(256);
+        assert_eq!(cam.num_blocks(), 8);
+        assert_eq!(cam.ram_bits(), 65_536);
+    }
+
+    #[test]
+    fn match_spans_blocks() {
+        let mut cam = CamArray::new(64);
+        let mut rec = vec![0i32; 64];
+        rec[0] = 11; // block 0
+        rec[63] = 99; // block 1
+        cam.load_record(&rec);
+        assert!(cam.matches(11));
+        assert!(cam.matches(99));
+        assert!(!cam.matches(50));
+    }
+
+    #[test]
+    fn reload_clears_stale_words() {
+        let mut cam = CamArray::new(40);
+        cam.load_record(&vec![7; 40]);
+        cam.load_record(&[1, 2]);
+        assert!(!cam.matches(7), "stale words must clear on short reload");
+        assert!(cam.matches(1) && cam.matches(2));
+    }
+
+    #[test]
+    fn odd_width_rounds_blocks_up() {
+        assert_eq!(CamArray::new(33).num_blocks(), 2);
+        assert_eq!(CamArray::new(1).num_blocks(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds CAM width")]
+    fn oversized_record_panics() {
+        CamArray::new(2).load_record(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,169 @@
+//! 32-word x 8-bit CAM block (CB) built from an 8-Kbit dual-port RAM —
+//! the XAPP1151 mapping the paper's CAM uses ("one CAM cell cost 32 RAM
+//! bits": 256 rows x 32 columns = 8,192 bits per CB).
+//!
+//! Mapping: RAM row = alphabet value (0..=255), RAM column = CAM slot.
+//! `lookup(v)` is a single RAM read returning the 32-bit mask of slots
+//! currently holding `v`. Updating slot `s` from old value `o` to `v` is
+//! an erase+write pair (clear bit `s` of row `o`, set bit `s` of row `v`);
+//! the chip overlaps the two row read-modify-writes across the RAM's two
+//! ports, so a word write costs one cycle of the record-load stream —
+//! matching the analytic `W` cycles-per-record-load of
+//! [`crate::bic::BicConfig::cycles_per_batch`].
+
+use super::activity::BlockActivity;
+use super::ram::DualPortRam;
+use crate::bic::cam::PAD;
+
+/// Slots per CB (fixed by the chip's block design).
+pub const CB_SLOTS: usize = 32;
+/// Alphabet size (8-bit words).
+pub const CB_ROWS: usize = 256;
+
+/// One CAM block: 32 slots over an 8-bit alphabet.
+#[derive(Clone, Debug)]
+pub struct CamBlock {
+    ram: DualPortRam,
+    /// Shadow of the current value in each slot (PAD = empty) — the
+    /// erase half of the update needs the old value; the chip keeps the
+    /// equivalent in its write-control registers.
+    slot_values: [i32; CB_SLOTS],
+}
+
+impl Default for CamBlock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CamBlock {
+    pub fn new() -> Self {
+        Self {
+            ram: DualPortRam::new(CB_ROWS, CB_SLOTS),
+            slot_values: [PAD; CB_SLOTS],
+        }
+    }
+
+    /// RAM bits backing this CB (8,192 — the Fig. 5 census input).
+    pub fn ram_bits(&self) -> usize {
+        self.ram.bits()
+    }
+
+    /// Write `value` (or PAD to clear) into `slot`. One record-load cycle.
+    pub fn write_word(&mut self, slot: usize, value: i32) {
+        assert!(slot < CB_SLOTS, "slot {slot} out of range");
+        assert!(
+            value == PAD || (0..CB_ROWS as i32).contains(&value),
+            "value {value} outside alphabet"
+        );
+        let old = self.slot_values[slot];
+        if old == value {
+            // Still a clocked write in the stream; RAM contents unchanged.
+            return;
+        }
+        // Erase: clear the slot bit in the old value's row.
+        if old != PAD {
+            let row = self.ram.read(old as usize);
+            self.ram.write(old as usize, row & !(1u64 << slot));
+        }
+        // Write: set the slot bit in the new value's row.
+        if value != PAD {
+            let row = self.ram.read(value as usize);
+            self.ram.write(value as usize, row | (1u64 << slot));
+        }
+        self.slot_values[slot] = value;
+    }
+
+    /// Clear every slot (between batches the chip simply overwrites, but
+    /// short batches need explicit padding clears).
+    pub fn clear(&mut self) {
+        for slot in 0..CB_SLOTS {
+            self.write_word(slot, PAD);
+        }
+    }
+
+    /// Single-cycle lookup: mask of slots holding `key`.
+    pub fn lookup(&mut self, key: i32) -> u64 {
+        debug_assert!((0..CB_ROWS as i32).contains(&key), "key outside alphabet");
+        self.ram.read(key as usize)
+    }
+
+    /// Match bit: does any slot hold `key`?
+    pub fn matches(&mut self, key: i32) -> bool {
+        self.lookup(key) != 0
+    }
+
+    pub fn activity(&self) -> &BlockActivity {
+        self.ram.activity()
+    }
+
+    pub fn take_activity(&mut self) -> BlockActivity {
+        self.ram.take_activity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_matches_paper() {
+        assert_eq!(CamBlock::new().ram_bits(), 8_192);
+    }
+
+    #[test]
+    fn write_then_lookup() {
+        let mut cb = CamBlock::new();
+        cb.write_word(0, 42);
+        cb.write_word(5, 42);
+        cb.write_word(7, 9);
+        assert_eq!(cb.lookup(42), (1 << 0) | (1 << 5));
+        assert_eq!(cb.lookup(9), 1 << 7);
+        assert_eq!(cb.lookup(1), 0);
+        assert!(cb.matches(42) && !cb.matches(1));
+    }
+
+    #[test]
+    fn overwrite_erases_old_value() {
+        let mut cb = CamBlock::new();
+        cb.write_word(3, 100);
+        cb.write_word(3, 200);
+        assert_eq!(cb.lookup(100), 0, "old value must be erased");
+        assert_eq!(cb.lookup(200), 1 << 3);
+    }
+
+    #[test]
+    fn pad_clears_slot() {
+        let mut cb = CamBlock::new();
+        cb.write_word(1, 77);
+        cb.write_word(1, PAD);
+        assert_eq!(cb.lookup(77), 0);
+    }
+
+    #[test]
+    fn clear_empties_everything() {
+        let mut cb = CamBlock::new();
+        for s in 0..CB_SLOTS {
+            cb.write_word(s, (s as i32) % 256);
+        }
+        cb.clear();
+        for v in 0..256 {
+            assert_eq!(cb.lookup(v), 0);
+        }
+    }
+
+    #[test]
+    fn idempotent_write_skips_ram_traffic() {
+        let mut cb = CamBlock::new();
+        cb.write_word(0, 5);
+        let w = cb.activity().writes;
+        cb.write_word(0, 5);
+        assert_eq!(cb.activity().writes, w, "same-value write is free in RAM");
+    }
+
+    #[test]
+    #[should_panic(expected = "outside alphabet")]
+    fn bad_value_panics() {
+        CamBlock::new().write_word(0, 256);
+    }
+}

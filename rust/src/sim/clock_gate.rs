@@ -1,0 +1,68 @@
+//! Clock-gating cell (paper Fig. 4): in active mode the core sees the
+//! system clock `sclk`; raising `stb` isolates `sclk` from the core, so
+//! no dynamic switching occurs downstream while leakage continues (the
+//! leakage half is `power::standby`'s job).
+
+/// One core's clock gate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClockGate {
+    stb: bool,
+    delivered: u64,
+    suppressed: u64,
+}
+
+impl ClockGate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Assert/deassert standby (the `stb_i` signal).
+    pub fn set_standby(&mut self, stb: bool) {
+        self.stb = stb;
+    }
+
+    #[inline]
+    pub fn is_standby(&self) -> bool {
+        self.stb
+    }
+
+    /// One `sclk` edge: returns whether the core receives the edge.
+    #[inline]
+    pub fn tick(&mut self) -> bool {
+        if self.stb {
+            self.suppressed += 1;
+            false
+        } else {
+            self.delivered += 1;
+            true
+        }
+    }
+
+    /// Edges delivered to the core (drive dynamic energy).
+    pub fn delivered(&self) -> u64 {
+        self.delivered
+    }
+
+    /// Edges suppressed by the gate (saved dynamic energy).
+    pub fn suppressed(&self) -> u64 {
+        self.suppressed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gates_when_standby() {
+        let mut g = ClockGate::new();
+        assert!(g.tick());
+        g.set_standby(true);
+        assert!(!g.tick());
+        assert!(!g.tick());
+        g.set_standby(false);
+        assert!(g.tick());
+        assert_eq!(g.delivered(), 2);
+        assert_eq!(g.suppressed(), 2);
+    }
+}

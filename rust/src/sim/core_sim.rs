@@ -1,0 +1,346 @@
+//! Cycle-stepped simulator of one whole BIC core — CAM, buffer, TM and
+//! clock gate wired together under the control FSM of Fig. 3.
+//!
+//! Unlike the analytic cycle formula in [`crate::bic::BicConfig`], the
+//! count here is *emergent*: each `step()` call is one delivered clock
+//! edge and advances exactly one FSM micro-operation. Integration tests
+//! assert (a) the emergent count equals the analytic formula and (b) the
+//! produced bitmap equals the golden model and the PJRT artifact.
+
+use super::activity::CoreActivity;
+use super::buffer_unit::BufferUnit;
+use super::cam_array::CamArray;
+use super::clock_gate::ClockGate;
+use super::transpose_unit::TransposeUnit;
+use crate::bic::bitmap::{words_for, BitmapIndex};
+use crate::bic::cam::PAD;
+use crate::bic::BicConfig;
+
+/// FSM state: which micro-operation the next clock edge performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    /// No batch loaded.
+    Idle,
+    /// Writing word `word` of record `rec` into the CAM.
+    LoadRecord { rec: usize, word: usize },
+    /// Streaming key `key` past the CAM for record `rec`.
+    StreamKeys { rec: usize, key: usize },
+    /// TM phase 1: absorbing buffer row `row`.
+    TmRead { row: usize },
+    /// TM phase 2: emitting packed word `word`.
+    TmEmit { word: usize },
+    /// Batch complete; result available.
+    Done,
+}
+
+/// Result of one simulated batch.
+#[derive(Clone, Debug)]
+pub struct BatchRun {
+    pub index: BitmapIndex,
+    /// Clock cycles consumed (emergent count).
+    pub cycles: u64,
+    /// Per-block switching activity.
+    pub activity: CoreActivity,
+}
+
+/// One cycle-level BIC core.
+#[derive(Debug)]
+pub struct CoreSim {
+    cfg: BicConfig,
+    cam: CamArray,
+    buffer: BufferUnit,
+    tm: TransposeUnit,
+    gate: ClockGate,
+    state: State,
+    records: Vec<Vec<i32>>,
+    keys: Vec<i32>,
+    out_words: Vec<u32>,
+    cycles_this_batch: u64,
+    control_toggles: u64,
+}
+
+impl CoreSim {
+    pub fn new(cfg: BicConfig) -> Self {
+        Self {
+            cfg,
+            cam: CamArray::new(cfg.w_words),
+            buffer: BufferUnit::new(cfg.n_records, cfg.m_keys),
+            tm: TransposeUnit::new(cfg.n_records, cfg.m_keys),
+            gate: ClockGate::new(),
+            state: State::Idle,
+            records: Vec::new(),
+            keys: Vec::new(),
+            out_words: Vec::new(),
+            cycles_this_batch: 0,
+            control_toggles: 0,
+        }
+    }
+
+    pub fn config(&self) -> &BicConfig {
+        &self.cfg
+    }
+
+    /// Memory-bit census of the simulated core (the Fig. 5 inventory):
+    /// CAM RAM bits + buffer bits (the TM bank is register-file on the
+    /// ASIC and counted separately by the area model).
+    pub fn memory_bits(&self) -> usize {
+        self.cam.ram_bits() + self.buffer.bits()
+    }
+
+    /// Clock-gate control (standby mode; `power::standby` charges the
+    /// corresponding leakage).
+    pub fn set_standby(&mut self, stb: bool) {
+        self.gate.set_standby(stb);
+    }
+
+    pub fn is_standby(&self) -> bool {
+        self.gate.is_standby()
+    }
+
+    pub fn gate(&self) -> &ClockGate {
+        &self.gate
+    }
+
+    /// Load a batch (records padded to `n`; exactly `m` keys) and arm the
+    /// FSM. Panics if a batch is already in flight.
+    pub fn load_batch(&mut self, records: &[Vec<i32>], keys: &[i32]) {
+        assert!(
+            matches!(self.state, State::Idle | State::Done),
+            "batch already in flight"
+        );
+        let n = self.cfg.n_records;
+        assert!(records.len() <= n, "batch exceeds core capacity");
+        assert_eq!(keys.len(), self.cfg.m_keys, "key count");
+        assert!(keys.iter().all(|&k| k != PAD), "PAD is not a valid key");
+        self.records = records.to_vec();
+        self.keys = keys.to_vec();
+        self.out_words.clear();
+        self.cycles_this_batch = 0;
+        // The TM bank is set-only during absorb; clear it for this batch
+        // (the chip's drain-start control pulse).
+        self.tm.reset();
+        self.state = State::LoadRecord { rec: 0, word: 0 };
+    }
+
+    /// True when the armed batch has completed.
+    pub fn is_done(&self) -> bool {
+        self.state == State::Done
+    }
+
+    /// One system-clock edge. Returns `true` if the edge was delivered
+    /// (not gated) and the FSM advanced.
+    pub fn tick(&mut self) -> bool {
+        if !self.gate.tick() {
+            return false; // gated: zero switching downstream
+        }
+        self.step();
+        true
+    }
+
+    /// One delivered clock edge: exactly one micro-operation.
+    fn step(&mut self) {
+        let n = self.cfg.n_records;
+        let w = self.cfg.w_words;
+        let m = self.cfg.m_keys;
+        let nw = words_for(n);
+        if !matches!(self.state, State::Idle | State::Done) {
+            self.cycles_this_batch += 1;
+            self.control_toggles += 1; // FSM state register clocks over
+        }
+        self.state = match self.state {
+            State::Idle | State::Done => return,
+            State::LoadRecord { rec, word } => {
+                let v = self
+                    .records
+                    .get(rec)
+                    .and_then(|r| r.get(word))
+                    .copied()
+                    .unwrap_or(PAD);
+                self.cam.write_word(word, v);
+                if word + 1 < w {
+                    State::LoadRecord { rec, word: word + 1 }
+                } else {
+                    State::StreamKeys { rec, key: 0 }
+                }
+            }
+            State::StreamKeys { rec, key } => {
+                // Padding records beyond the batch match nothing; the chip
+                // clocks them through with a cleared CAM, which is exactly
+                // what LoadRecord wrote (all PAD).
+                let bit = self.cam.matches(self.keys[key]);
+                self.buffer.push_bit(bit);
+                if key + 1 < m {
+                    State::StreamKeys { rec, key: key + 1 }
+                } else if rec + 1 < n {
+                    State::LoadRecord { rec: rec + 1, word: 0 }
+                } else {
+                    State::TmRead { row: 0 }
+                }
+            }
+            State::TmRead { row } => {
+                let bits = self.buffer.read_row(row);
+                self.tm.absorb_row(row, bits);
+                if row + 1 < n {
+                    State::TmRead { row: row + 1 }
+                } else {
+                    State::TmEmit { word: 0 }
+                }
+            }
+            State::TmEmit { word } => {
+                self.out_words.push(self.tm.emit_word(word));
+                if word + 1 < m * nw {
+                    State::TmEmit { word: word + 1 }
+                } else {
+                    self.buffer.rearm();
+                    State::Done
+                }
+            }
+        };
+    }
+
+    /// Drive a loaded batch to completion and collect the result.
+    /// (With the gate in standby this would spin forever, so it asserts
+    /// active mode — the coordinator wakes cores before dispatching.)
+    pub fn run_to_completion(&mut self) -> BatchRun {
+        assert!(!self.gate.is_standby(), "core is in standby");
+        assert!(
+            !matches!(self.state, State::Idle),
+            "no batch loaded"
+        );
+        while !self.is_done() {
+            self.tick();
+        }
+        let cycles = self.cycles_this_batch;
+        let index =
+            BitmapIndex::from_packed(self.cfg.m_keys, self.cfg.n_records, &self.out_words);
+        let mut activity = CoreActivity {
+            cam: self.cam.take_activity(),
+            buffer: self.buffer.take_activity(),
+            tm: self.tm.take_activity(),
+            ..CoreActivity::default()
+        };
+        activity.control.writes = std::mem::take(&mut self.control_toggles);
+        activity.cycles = cycles;
+        activity.cam.clocked_cycles = cycles;
+        activity.buffer.clocked_cycles = cycles;
+        activity.tm.clocked_cycles = cycles;
+        activity.control.clocked_cycles = cycles;
+        BatchRun { index, cycles, activity }
+    }
+
+    /// Convenience: load + run one batch.
+    pub fn index_batch(&mut self, records: &[Vec<i32>], keys: &[i32]) -> BatchRun {
+        self.load_batch(records, keys);
+        self.run_to_completion()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bic::BicCore;
+    use crate::substrate::rng::Xoshiro256;
+
+    fn random_batch(rng: &mut Xoshiro256, n: usize, w: usize) -> Vec<Vec<i32>> {
+        (0..n)
+            .map(|_| (0..w).map(|_| rng.next_below(256) as i32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn chip_batch_matches_golden_and_analytic_cycles() {
+        let cfg = BicConfig::CHIP;
+        let mut sim = CoreSim::new(cfg);
+        let mut golden = BicCore::new(cfg);
+        let mut rng = Xoshiro256::seeded(1);
+        let recs = random_batch(&mut rng, 16, 32);
+        let keys: Vec<i32> = (0..8).map(|_| rng.next_below(256) as i32).collect();
+        let run = sim.index_batch(&recs, &keys);
+        assert_eq!(run.index, golden.index(&recs, &keys));
+        assert_eq!(run.cycles, cfg.cycles_per_batch());
+    }
+
+    #[test]
+    fn short_batch_same_cycles_zero_padding() {
+        // The chip clocks padding records through: cycle count is fixed.
+        let cfg = BicConfig::CHIP;
+        let mut sim = CoreSim::new(cfg);
+        let keys: Vec<i32> = (1..=8).collect();
+        let run = sim.index_batch(&[vec![1, 2, 3]], &keys);
+        assert_eq!(run.cycles, cfg.cycles_per_batch());
+        assert!(run.index.get(0, 0));
+        for j in 1..16 {
+            assert!(!run.index.get(0, j));
+        }
+    }
+
+    #[test]
+    fn gated_ticks_do_not_advance() {
+        let cfg = BicConfig { n_records: 2, w_words: 2, m_keys: 2 };
+        let mut sim = CoreSim::new(cfg);
+        sim.load_batch(&[vec![1, 2]], &[1, 2]);
+        sim.set_standby(true);
+        for _ in 0..100 {
+            assert!(!sim.tick());
+        }
+        assert!(!sim.is_done());
+        assert_eq!(sim.gate().suppressed(), 100);
+        sim.set_standby(false);
+        let run = sim.run_to_completion();
+        assert_eq!(run.cycles, cfg.cycles_per_batch(), "gated edges are free");
+    }
+
+    #[test]
+    fn core_reusable_across_batches() {
+        let cfg = BicConfig { n_records: 4, w_words: 4, m_keys: 4 };
+        let mut sim = CoreSim::new(cfg);
+        let mut golden = BicCore::new(cfg);
+        let mut rng = Xoshiro256::seeded(5);
+        for _ in 0..4 {
+            let recs = random_batch(&mut rng, 4, 4);
+            let keys: Vec<i32> =
+                (0..4).map(|_| rng.next_below(256) as i32).collect();
+            let run = sim.index_batch(&recs, &keys);
+            assert_eq!(run.index, golden.index(&recs, &keys));
+        }
+    }
+
+    #[test]
+    fn memory_census_matches_paper() {
+        assert_eq!(CoreSim::new(BicConfig::CHIP).memory_bits(), 8_320);
+    }
+
+    #[test]
+    fn activity_is_plausible() {
+        let cfg = BicConfig::CHIP;
+        let mut sim = CoreSim::new(cfg);
+        let mut rng = Xoshiro256::seeded(9);
+        let recs = random_batch(&mut rng, 16, 32);
+        let keys: Vec<i32> = (0..8).map(|_| rng.next_below(256) as i32).collect();
+        let run = sim.index_batch(&recs, &keys);
+        let a = &run.activity;
+        // CAM reads: at least the N*M key lookups, plus the data-dependent
+        // erase/write RMW traffic (bounded by 2 RAM ops per loaded word).
+        let lookups = 16 * 8;
+        let max_write_reads = 16 * 32 * 2;
+        assert!(a.cam.reads >= lookups);
+        assert!(a.cam.reads <= lookups + max_write_reads);
+        // Buffer: one committed row per record; TM reads each row once.
+        assert_eq!(a.buffer.writes, 16);
+        assert_eq!(a.buffer.reads, 16);
+        // TM: N absorbs + M*NW emits.
+        assert_eq!(a.tm.writes, 16);
+        assert_eq!(a.tm.reads, 8);
+        assert_eq!(a.cycles, run.cycles);
+        assert!(a.total_events() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch already in flight")]
+    fn double_load_panics() {
+        let cfg = BicConfig { n_records: 1, w_words: 1, m_keys: 1 };
+        let mut sim = CoreSim::new(cfg);
+        sim.load_batch(&[vec![1]], &[1]);
+        sim.load_batch(&[vec![1]], &[1]);
+    }
+}

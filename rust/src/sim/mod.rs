@@ -1,0 +1,23 @@
+//! Cycle-level hardware simulator of the BIC chip.
+//!
+//! Structural models of every block on the die — dual-port RAM,
+//! RAM-mapped CAM blocks (XAPP1151), the row buffer, the transpose
+//! matrix, the clock gate — composed into a cycle-stepped core FSM
+//! ([`core_sim::CoreSim`]). The simulator produces (a) the bitmap index,
+//! cross-checked against the golden model and the AOT artifact, (b) an
+//! emergent cycle count, cross-checked against the analytic formula, and
+//! (c) per-block switching activity, which is what the calibrated power
+//! model (`crate::power`) converts to energy.
+
+pub mod activity;
+pub mod buffer_unit;
+pub mod cam_array;
+pub mod cam_block;
+pub mod clock_gate;
+pub mod core_sim;
+pub mod ram;
+pub mod transpose_unit;
+
+pub use activity::{BlockActivity, CoreActivity};
+pub use clock_gate::ClockGate;
+pub use core_sim::{BatchRun, CoreSim};

@@ -1,0 +1,153 @@
+//! Dual-port RAM block model — the substrate every chip block is built
+//! from (the paper's CAM is RAM-mapped per XAPP1151; the buffer is a set
+//! of dual-port RAMs; on the ASIC each bit is a dedicated register, which
+//! changes area/power but not behaviour).
+//!
+//! Port semantics: one synchronous read port and one synchronous write
+//! port, usable in the same cycle at different addresses; a same-cycle
+//! read of the written address returns the *old* data (read-first), which
+//! is the semantics the XAPP1151 mapping relies on during its
+//! read-modify-write update.
+
+use super::activity::BlockActivity;
+
+/// A `depth x width`-bit dual-port RAM (width <= 64).
+#[derive(Clone, Debug)]
+pub struct DualPortRam {
+    depth: usize,
+    width: usize,
+    data: Vec<u64>,
+    activity: BlockActivity,
+}
+
+impl DualPortRam {
+    pub fn new(depth: usize, width: usize) -> Self {
+        assert!(width >= 1 && width <= 64, "width {width} out of range");
+        assert!(depth >= 1, "depth must be positive");
+        Self { depth, width, data: vec![0; depth], activity: BlockActivity::default() }
+    }
+
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Storage bits (for the memory-bit census of Fig. 5).
+    pub fn bits(&self) -> usize {
+        self.depth * self.width
+    }
+
+    #[inline]
+    fn mask(&self) -> u64 {
+        if self.width == 64 { u64::MAX } else { (1u64 << self.width) - 1 }
+    }
+
+    /// Synchronous read (counted as one read event).
+    pub fn read(&mut self, addr: usize) -> u64 {
+        assert!(addr < self.depth, "read address {addr} out of range {}", self.depth);
+        self.activity.reads += 1;
+        self.data[addr]
+    }
+
+    /// Peek without charging activity (testing/introspection only).
+    pub fn peek(&self, addr: usize) -> u64 {
+        self.data[addr]
+    }
+
+    /// Synchronous write (counted; toggles = Hamming distance old->new,
+    /// the switching-energy proxy).
+    pub fn write(&mut self, addr: usize, value: u64) {
+        assert!(addr < self.depth, "write address {addr} out of range {}", self.depth);
+        let value = value & self.mask();
+        self.activity.writes += 1;
+        self.activity.bit_toggles += (self.data[addr] ^ value).count_ones() as u64;
+        self.data[addr] = value;
+    }
+
+    /// Same-cycle read+write at distinct addresses (the dual-port case).
+    /// Read-first semantics also hold when the addresses collide.
+    pub fn read_write(&mut self, raddr: usize, waddr: usize, wvalue: u64) -> u64 {
+        let out = self.read(raddr);
+        self.write(waddr, wvalue);
+        out
+    }
+
+    /// Clear all contents without charging activity (power-on reset).
+    pub fn reset(&mut self) {
+        self.data.fill(0);
+    }
+
+    pub fn activity(&self) -> &BlockActivity {
+        &self.activity
+    }
+
+    pub fn take_activity(&mut self) -> BlockActivity {
+        std::mem::take(&mut self.activity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_then_read() {
+        let mut ram = DualPortRam::new(8, 16);
+        ram.write(3, 0xBEEF);
+        assert_eq!(ram.read(3), 0xBEEF);
+    }
+
+    #[test]
+    fn width_masking() {
+        let mut ram = DualPortRam::new(2, 4);
+        ram.write(0, 0xFF);
+        assert_eq!(ram.read(0), 0xF);
+    }
+
+    #[test]
+    fn read_first_on_collision() {
+        let mut ram = DualPortRam::new(4, 8);
+        ram.write(1, 0xAA);
+        let old = ram.read_write(1, 1, 0x55);
+        assert_eq!(old, 0xAA, "collision must return old data (read-first)");
+        assert_eq!(ram.read(1), 0x55);
+    }
+
+    #[test]
+    fn activity_counts_events_and_toggles() {
+        let mut ram = DualPortRam::new(4, 8);
+        ram.write(0, 0b1111); // 4 toggles from 0
+        ram.write(0, 0b1001); // 2 toggles
+        ram.read(0);
+        let a = ram.activity();
+        assert_eq!(a.writes, 2);
+        assert_eq!(a.reads, 1);
+        assert_eq!(a.bit_toggles, 6);
+    }
+
+    #[test]
+    fn bits_census() {
+        assert_eq!(DualPortRam::new(256, 32).bits(), 8_192);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn oob_read_panics() {
+        DualPortRam::new(2, 8).read(2);
+    }
+
+    #[test]
+    fn reset_clears_without_activity() {
+        let mut ram = DualPortRam::new(2, 8);
+        ram.write(0, 0xFF);
+        let w = ram.activity().writes;
+        ram.reset();
+        assert_eq!(ram.peek(0), 0);
+        assert_eq!(ram.activity().writes, w);
+    }
+}

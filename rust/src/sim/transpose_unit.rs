@@ -1,0 +1,149 @@
+//! Transpose-matrix (TM) unit: control FSM + transpose datapath.
+//!
+//! Phase 1 (read): the control unit fetches one buffer row per cycle
+//! (`N` cycles) while the transpose unit scatters the M bits of each row
+//! into an internal M-row register bank — the row/column swap.
+//! Phase 2 (emit): the packed BI is streamed out one 32-bit word per
+//! cycle, row-major over the `u32[M, ceil(N/32)]` artifact layout
+//! (`M * ceil(N/32)` cycles).
+//!
+//! Cycle cost: `N + M*ceil(N/32)` — the drain term of
+//! [`crate::bic::BicConfig::cycles_per_batch`].
+
+use super::activity::BlockActivity;
+use super::buffer_unit::BufferUnit;
+use crate::bic::bitmap::{words_for, BitmapIndex};
+
+/// TM datapath for an `N x M` buffer.
+#[derive(Clone, Debug)]
+pub struct TransposeUnit {
+    n: usize,
+    m: usize,
+    /// Internal register bank: M rows x ceil(N/32) packed words.
+    bank: Vec<u32>,
+    activity: BlockActivity,
+}
+
+impl TransposeUnit {
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(m >= 1 && m <= 64, "key count out of range");
+        Self { n, m, bank: vec![0; m * words_for(n)], activity: BlockActivity::default() }
+    }
+
+    /// Register bits of the transpose bank (part of the Fig. 5 census on
+    /// the ASIC, where every bit is a dedicated register).
+    pub fn bank_bits(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Drain cycle count for this geometry.
+    pub fn drain_cycles(&self) -> u64 {
+        (self.n + self.m * words_for(self.n)) as u64
+    }
+
+    /// Clear the register bank — must precede each batch's phase 1, since
+    /// `absorb_row` only ever sets bits (the chip resets the bank with the
+    /// drain-start control pulse).
+    pub fn reset(&mut self) {
+        self.bank.fill(0);
+    }
+
+    /// Phase 1, one cycle: absorb buffer row `j` (M bits) into the bank.
+    pub fn absorb_row(&mut self, j: usize, row: u64) {
+        assert!(j < self.n, "row {j} out of range");
+        let nw = words_for(self.n);
+        for i in 0..self.m {
+            if (row >> i) & 1 == 1 {
+                self.bank[i * nw + j / 32] |= 1u32 << (j % 32);
+                self.activity.bit_toggles += 1;
+            }
+        }
+        self.activity.writes += 1;
+    }
+
+    /// Phase 2, one cycle per word: emit packed word `k` (row-major).
+    pub fn emit_word(&mut self, k: usize) -> u32 {
+        let nw = words_for(self.n);
+        assert!(k < self.m * nw, "word index out of range");
+        self.activity.reads += 1;
+        self.bank[k]
+    }
+
+    /// Full drain: pull every row from `buffer`, then emit the whole BI.
+    /// Returns (index, cycles consumed). The caller advances the core
+    /// clock by the returned cycle count.
+    pub fn drain(&mut self, buffer: &mut BufferUnit) -> (BitmapIndex, u64) {
+        assert_eq!(buffer.num_records(), self.n, "geometry mismatch");
+        assert_eq!(buffer.num_keys(), self.m, "geometry mismatch");
+        self.reset();
+        for j in 0..self.n {
+            let row = buffer.read_row(j);
+            self.absorb_row(j, row);
+        }
+        let nw = words_for(self.n);
+        let mut packed = Vec::with_capacity(self.m * nw);
+        for k in 0..self.m * nw {
+            packed.push(self.emit_word(k));
+        }
+        buffer.rearm();
+        (BitmapIndex::from_packed(self.m, self.n, &packed), self.drain_cycles())
+    }
+
+    pub fn activity(&self) -> &BlockActivity {
+        &self.activity
+    }
+
+    pub fn take_activity(&mut self) -> BlockActivity {
+        std::mem::take(&mut self.activity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_drain_cycles() {
+        // N=16, M=8: 16 reads + 8*1 emits = 24.
+        assert_eq!(TransposeUnit::new(16, 8).drain_cycles(), 24);
+    }
+
+    #[test]
+    fn transpose_matches_direct_construction() {
+        let (n, m) = (5, 3);
+        let mut buf = BufferUnit::new(n, m);
+        // Record j matches key i iff (i + j) % 2 == 0.
+        for j in 0..n {
+            for i in 0..m {
+                buf.push_bit((i + j) % 2 == 0);
+            }
+        }
+        let mut tm = TransposeUnit::new(n, m);
+        let (bi, cycles) = tm.drain(&mut buf);
+        assert_eq!(cycles, (n + m) as u64); // 5 reads + 3*1 emits
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(bi.get(i, j), (i + j) % 2 == 0, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn drain_rearms_buffer_for_next_batch() {
+        let mut buf = BufferUnit::new(1, 2);
+        buf.push_bit(true);
+        buf.push_bit(false);
+        let mut tm = TransposeUnit::new(1, 2);
+        let (bi1, _) = tm.drain(&mut buf);
+        assert!(bi1.get(0, 0) && !bi1.get(1, 0));
+        buf.push_bit(false);
+        buf.push_bit(true);
+        let (bi2, _) = tm.drain(&mut buf);
+        assert!(!bi2.get(0, 0) && bi2.get(1, 0), "bank must reset per drain");
+    }
+
+    #[test]
+    fn bank_census() {
+        assert_eq!(TransposeUnit::new(16, 8).bank_bits(), 128);
+    }
+}

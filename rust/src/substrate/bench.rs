@@ -1,0 +1,172 @@
+//! Criterion-like micro-benchmark harness (the vendored crate shelf has
+//! no `criterion`, so the repo ships its own): adaptive iteration counts,
+//! warmup, sample statistics, and aligned reporting. Used by every target
+//! under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{format_si, Summary};
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup budget before sampling.
+    pub warmup: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Minimum wall time per sample (iterations adapt to reach it).
+    pub min_sample_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            min_sample_time: Duration::from_millis(10),
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time [s].
+    pub per_iter: Summary,
+    /// Iterations per sample used.
+    pub iters_per_sample: u64,
+    /// Optional throughput denominator: bytes processed per iteration.
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    /// Mean throughput [bytes/s] if a byte count was attached.
+    pub fn throughput(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b as f64 / self.per_iter.mean)
+    }
+
+    /// One aligned report line.
+    pub fn line(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>14}/iter  (±{:>5.1}%, n={})",
+            self.name,
+            format_si(self.per_iter.mean, "s"),
+            self.per_iter.rsd() * 100.0,
+            self.per_iter.n,
+        );
+        if let Some(tp) = self.throughput() {
+            s.push_str(&format!("  {:>12}", format_si(tp, "B/s")));
+        }
+        s
+    }
+}
+
+/// A named benchmark run.
+pub struct Bench {
+    cfg: BenchConfig,
+    name: String,
+    bytes: Option<u64>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { cfg: BenchConfig::default(), name: name.into(), bytes: None }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Attach a throughput denominator (bytes processed per iteration).
+    pub fn bytes(mut self, bytes: u64) -> Self {
+        self.bytes = Some(bytes);
+        self
+    }
+
+    /// Run the closure under the harness. `f` should return something
+    /// observable to keep the optimizer honest; the return value is
+    /// passed through `std::hint::black_box`.
+    pub fn run<T>(self, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + iteration calibration.
+        let warm_start = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while warm_start.elapsed() < self.cfg.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter_est = self.cfg.warmup.as_secs_f64() / calib_iters as f64;
+        let iters = ((self.cfg.min_sample_time.as_secs_f64() / per_iter_est)
+            .ceil() as u64)
+            .max(1);
+
+        let mut samples = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let result = BenchResult {
+            name: self.name,
+            per_iter: Summary::of(&samples),
+            iters_per_sample: iters,
+            bytes_per_iter: self.bytes,
+        };
+        println!("{}", result.line());
+        result
+    }
+}
+
+/// Group header for bench output.
+pub fn group(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            samples: 5,
+            min_sample_time: Duration::from_micros(200),
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let r = Bench::new("noop-ish")
+            .with_config(fast_cfg())
+            .run(|| (0..100u64).sum::<u64>());
+        assert!(r.per_iter.mean > 0.0);
+        assert_eq!(r.per_iter.n, 5);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn throughput_uses_bytes() {
+        let r = Bench::new("tp")
+            .with_config(fast_cfg())
+            .bytes(1_000)
+            .run(|| std::hint::black_box(42));
+        let tp = r.throughput().unwrap();
+        assert!(tp > 0.0);
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            per_iter: Summary::of(&[1e-6, 1e-6]),
+            iters_per_sample: 10,
+            bytes_per_iter: Some(512),
+        };
+        let line = r.line();
+        assert!(line.contains("/iter"));
+        assert!(line.contains("B/s"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser (no `clap` on the offline shelf):
+//! `prog <subcommand> [--flag] [--key value|--key=value] [positional...]`.
+
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    positionals: Vec<String>,
+}
+
+/// A flag without a value stores this marker.
+const PRESENT: &str = "\u{1}";
+
+impl Args {
+    /// Parse raw arguments (without argv[0]). The first non-flag token is
+    /// the subcommand; `--key value` and `--key=value` both work; a flag
+    /// followed by another flag (or nothing) is boolean.
+    pub fn parse(raw: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), PRESENT.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// String flag value (None if absent or boolean-style).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str).filter(|v| *v != PRESENT)
+    }
+
+    /// Typed flag with default; errors on unparseable values.
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("--{name}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Required string flag.
+    pub fn require(&self, name: &str) -> Result<&str, String> {
+        self.get(name).ok_or_else(|| format!("missing required --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+            .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["run", "input.dat", "more"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positionals(), ["input.dat", "more"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["x", "--cores", "4", "--vdd=0.9"]);
+        assert_eq!(a.get("cores"), Some("4"));
+        assert_eq!(a.get("vdd"), Some("0.9"));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["x", "--verbose", "--json"]);
+        assert!(a.has("verbose") && a.has("json"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn flag_before_another_flag_is_boolean() {
+        let a = parse(&["x", "--quiet", "--cores", "2"]);
+        assert!(a.has("quiet"));
+        assert_eq!(a.get("quiet"), None);
+        assert_eq!(a.get("cores"), Some("2"));
+    }
+
+    #[test]
+    fn typed_parsing_with_default() {
+        let a = parse(&["x", "--n", "17"]);
+        assert_eq!(a.get_parsed("n", 3usize).unwrap(), 17);
+        assert_eq!(a.get_parsed("missing", 3usize).unwrap(), 3);
+        assert!(a.get_parsed::<usize>("n", 0).is_ok());
+        let bad = parse(&["x", "--n", "abc"]);
+        assert!(bad.get_parsed::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn require_errors_when_absent() {
+        let a = parse(&["x"]);
+        assert!(a.require("out").is_err());
+    }
+}

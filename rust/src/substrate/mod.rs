@@ -1,0 +1,15 @@
+//! Hand-rolled infrastructure substrates.
+//!
+//! The build is fully offline against a small vendored crate shelf (no
+//! `clap`/`criterion`/`proptest`/`serde`/`rand`), so the framework pieces a
+//! production repo would pull from crates.io are implemented here instead:
+//! a PRNG, a property-testing harness, a benchmarking harness, statistics,
+//! a CLI argument parser, and table/CSV/JSON emitters.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

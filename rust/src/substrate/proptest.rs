@@ -1,0 +1,148 @@
+//! Mini property-testing harness (no `proptest` on the offline crate
+//! shelf). Deterministic: every case derives from a base seed, and a
+//! failure report prints the exact seed + case index so the case can be
+//! replayed with `Gen::replay`.
+//!
+//! No generic shrinking — generators are encouraged to bias toward small
+//! sizes instead (all the `Gen` size helpers do).
+
+use super::rng::Xoshiro256;
+
+/// Per-case value generator.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Identifies this case for replay.
+    pub seed: u64,
+    pub case: u64,
+}
+
+impl Gen {
+    fn for_case(seed: u64, case: u64) -> Self {
+        // Decorrelate cases: hash (seed, case) through the seeder.
+        Self {
+            rng: Xoshiro256::seeded(seed ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            seed,
+            case,
+        }
+    }
+
+    /// Rebuild the generator of a reported failure.
+    pub fn replay(seed: u64, case: u64) -> Self {
+        Self::for_case(seed, case)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.rng.range(lo, hi_inclusive + 1)
+    }
+
+    /// Size generator biased toward small values (geometric-ish): small
+    /// cases dominate, occasionally large ones appear.
+    pub fn size(&mut self, max: usize) -> usize {
+        let r = self.rng.next_f64();
+        ((r * r * max as f64) as usize).min(max)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// An alphabet word (the chip's 8-bit record/key domain).
+    pub fn word(&mut self) -> i32 {
+        self.rng.range(0, 256) as i32
+    }
+
+    /// Access to the raw RNG for anything else.
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` randomized cases of a property; panics with a replayable
+/// report on the first failure. The property returns `Err(message)` (or
+/// panics) to signal failure.
+pub fn check(
+    name: &str,
+    seed: u64,
+    cases: u64,
+    mut prop: impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut g = Gen::for_case(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at seed={seed} case={case}: {msg}\n\
+                 replay with Gen::replay({seed}, {case})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0u64;
+        check("tautology", 1, 50, |_| {
+            ran += 1;
+            Ok(())
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "seed=7 case=")]
+    fn failure_reports_seed_and_case() {
+        check("always-fails-eventually", 7, 100, |g| {
+            if g.case >= 3 { Err("boom".into()) } else { Ok(()) }
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_values() {
+        let mut recorded = Vec::new();
+        check("record", 11, 5, |g| {
+            recorded.push((g.case, g.u64()));
+            Ok(())
+        });
+        for &(case, value) in &recorded {
+            let mut g = Gen::replay(11, case);
+            assert_eq!(g.u64(), value, "case {case} must replay identically");
+        }
+    }
+
+    #[test]
+    fn size_is_biased_small_but_reaches_max() {
+        let mut g = Gen::for_case(3, 0);
+        let sizes: Vec<usize> = (0..2000).map(|_| g.size(100)).collect();
+        let small = sizes.iter().filter(|&&s| s < 25).count();
+        assert!(small > 800, "small sizes should dominate: {small}");
+        assert!(*sizes.iter().max().unwrap() > 80, "large sizes must appear");
+    }
+
+    #[test]
+    fn word_is_in_alphabet() {
+        let mut g = Gen::for_case(5, 0);
+        for _ in 0..1000 {
+            let w = g.word();
+            assert!((0..256).contains(&w));
+        }
+    }
+}

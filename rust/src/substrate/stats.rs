@@ -1,0 +1,149 @@
+//! Statistics helpers for the bench harness and experiment reports.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+        };
+        Self {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+        }
+    }
+
+    /// Relative standard deviation (coefficient of variation).
+    pub fn rsd(&self) -> f64 {
+        if self.mean == 0.0 { 0.0 } else { self.stddev / self.mean }
+    }
+}
+
+/// Percentile (0..=1) by nearest-rank on a copy.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "percentile out of range");
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+/// Ordinary least squares `y = a + b*x`; returns (a, b).
+pub fn linear_fit(points: &[(f64, f64)]) -> (f64, f64) {
+    assert!(points.len() >= 2, "need at least two points");
+    let n = points.len() as f64;
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    assert!(denom.abs() > 1e-30, "degenerate x values");
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Format a value with an SI prefix: `format_si(2.64e-9, "W")` = "2.64 nW".
+pub fn format_si(value: f64, unit: &str) -> String {
+    const PREFIXES: [(f64, &str); 9] = [
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+        (1.0, ""),
+        (1e-3, "m"),
+        (1e-6, "u"),
+        (1e-9, "n"),
+        (1e-12, "p"),
+    ];
+    if value == 0.0 {
+        return format!("0 {unit}");
+    }
+    let mag = value.abs();
+    for &(scale, prefix) in &PREFIXES {
+        if mag >= scale {
+            return format!("{:.3} {}{}", value / scale, prefix, unit);
+        }
+    }
+    format!("{:.3e} {}", value, unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - 2.0_f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn even_median() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        assert_eq!(Summary::of(&[]), Summary::default());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 99.0);
+        assert!((percentile(&xs, 0.5) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let pts: Vec<(f64, f64)> =
+            (0..10).map(|i| (i as f64, 3.0 + 2.0 * i as f64)).collect();
+        let (a, b) = linear_fit(&pts);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(format_si(2.64e-9, "W"), "2.640 nW");
+        assert_eq!(format_si(162.9e-12, "J"), "162.900 pJ");
+        assert_eq!(format_si(41e6, "Hz"), "41.000 MHz");
+        assert_eq!(format_si(0.0, "W"), "0 W");
+        assert_eq!(format_si(-6.68e-3, "W"), "-6.680 mW");
+    }
+}

@@ -1,0 +1,199 @@
+//! Property tests: bitmap algebra laws, WAH round-trips, transpose
+//! involution — the invariants the query engine's correctness rests on.
+
+use sotb_bic::bic::bitmap::{Bitmap, BitmapIndex};
+use sotb_bic::bic::transpose::{transpose, untranspose};
+use sotb_bic::bic::WahBitmap;
+use sotb_bic::substrate::proptest::{check, Gen};
+
+fn arb_bitmap(g: &mut Gen, nbits: usize) -> Bitmap {
+    let density = g.f64_in(0.0, 1.0);
+    let bits: Vec<bool> = (0..nbits).map(|_| g.chance(density)).collect();
+    Bitmap::from_bools(&bits)
+}
+
+#[test]
+fn de_morgan_laws() {
+    check("de-morgan", 0xD0, 200, |g| {
+        let n = g.size(300) + 1;
+        let a = arb_bitmap(g, n);
+        let b = arb_bitmap(g, n);
+        if a.and(&b).not() != a.not().or(&b.not()) {
+            return Err("!(a&b) != !a | !b".into());
+        }
+        if a.or(&b).not() != a.not().and(&b.not()) {
+            return Err("!(a|b) != !a & !b".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn involution_and_identities() {
+    check("involution", 0xD1, 200, |g| {
+        let n = g.size(300) + 1;
+        let a = arb_bitmap(g, n);
+        if a.not().not() != a {
+            return Err("!!a != a".into());
+        }
+        if a.and(&Bitmap::ones(n)) != a || a.or(&Bitmap::zeros(n)) != a {
+            return Err("identity elements violated".into());
+        }
+        if a.xor(&a).count_ones() != 0 {
+            return Err("a^a != 0".into());
+        }
+        if a.and_not(&a).count_ones() != 0 {
+            return Err("a&!a != 0".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn xor_is_or_minus_and() {
+    check("xor-decomposition", 0xD2, 200, |g| {
+        let n = g.size(300) + 1;
+        let a = arb_bitmap(g, n);
+        let b = arb_bitmap(g, n);
+        let lhs = a.xor(&b);
+        let rhs = a.or(&b).and_not(&a.and(&b));
+        if lhs != rhs {
+            return Err("a^b != (a|b) & !(a&b)".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn count_ones_matches_iteration_and_popcount_sum() {
+    check("count-consistency", 0xD3, 150, |g| {
+        let n = g.size(500) + 1;
+        let a = arb_bitmap(g, n);
+        let by_iter = a.iter_ones().count();
+        let by_get = (0..n).filter(|&i| a.get(i)).count();
+        if a.count_ones() != by_iter || by_iter != by_get {
+            return Err(format!(
+                "count {} vs iter {} vs get {}",
+                a.count_ones(),
+                by_iter,
+                by_get
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn inplace_ops_equal_functional() {
+    check("inplace-vs-functional", 0xD4, 150, |g| {
+        let n = g.size(300) + 1;
+        let a = arb_bitmap(g, n);
+        let b = arb_bitmap(g, n);
+        let mut x = a.clone();
+        x.and_assign(&b);
+        if x != a.and(&b) {
+            return Err("and_assign".into());
+        }
+        let mut x = a.clone();
+        x.or_assign(&b);
+        if x != a.or(&b) {
+            return Err("or_assign".into());
+        }
+        let mut x = a.clone();
+        x.and_not_assign(&b);
+        if x != a.and_not(&b) {
+            return Err("and_not_assign".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wah_roundtrip_arbitrary() {
+    check("wah-roundtrip", 0xD5, 200, |g| {
+        let n = g.size(2_000);
+        let a = arb_bitmap(g, n);
+        let w = WahBitmap::compress(&a);
+        if w.decompress() != a {
+            return Err(format!("roundtrip failed at n={n}"));
+        }
+        if w.count_ones() != a.count_ones() {
+            return Err("compressed count_ones mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wah_compressed_ops_match_plain() {
+    check("wah-ops", 0xD6, 100, |g| {
+        let n = g.size(1_500) + 1;
+        let a = arb_bitmap(g, n);
+        let b = arb_bitmap(g, n);
+        let (wa, wb) = (WahBitmap::compress(&a), WahBitmap::compress(&b));
+        if wa.and(&wb).decompress() != a.and(&b) {
+            return Err("compressed AND".into());
+        }
+        if wa.or(&wb).decompress() != a.or(&b) {
+            return Err("compressed OR".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wah_runs_compress_well() {
+    check("wah-runs", 0xD7, 50, |g| {
+        // Runny bitmaps (long fills) must compress below 1/3 of raw:
+        // each run costs at most one fill word + one boundary literal,
+        // so with runs >= 300 bits the 3x bound always has slack.
+        let runs = g.size(20) + 2;
+        let mut bits = Vec::new();
+        for _ in 0..runs {
+            let len = g.size(400) + 300;
+            let v = g.bool();
+            bits.extend(std::iter::repeat(v).take(len));
+        }
+        let a = Bitmap::from_bools(&bits);
+        let w = WahBitmap::compress(&a);
+        if w.compressed_bytes() * 3 > w.uncompressed_bytes() {
+            return Err(format!(
+                "poor run compression: {}/{} bytes",
+                w.compressed_bytes(),
+                w.uncompressed_bytes()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn transpose_involution_arbitrary() {
+    check("transpose-involution", 0xD8, 150, |g| {
+        let n = g.size(40) + 1;
+        let m = g.size(30) + 1;
+        let bits: Vec<bool> = (0..n * m).map(|_| g.bool()).collect();
+        let bi = transpose(&bits, n, m);
+        if untranspose(&bi) != bits {
+            return Err(format!("involution failed at n={n} m={m}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_roundtrip_arbitrary() {
+    check("packed-roundtrip", 0xD9, 150, |g| {
+        let m = g.size(16) + 1;
+        let n = g.size(200) + 1;
+        let mut bi = BitmapIndex::new(m, n);
+        for _ in 0..g.size(64) {
+            bi.set(g.usize_in(0, m - 1), g.usize_in(0, n - 1), true);
+        }
+        let packed = bi.to_packed();
+        if BitmapIndex::from_packed(m, n, &packed) != bi {
+            return Err("packed roundtrip".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,156 @@
+//! Three-way equivalence: the golden functional model, the cycle-level
+//! simulator, and the PJRT-executed AOT artifact must produce identical
+//! bitmaps on arbitrary inputs — the repository's central correctness
+//! claim (DESIGN.md §3).
+
+use sotb_bic::bic::{conjunctive, BicConfig, BicCore, Query};
+use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
+use sotb_bic::sim::CoreSim;
+use sotb_bic::substrate::proptest::{check, Gen};
+
+fn arb_records(g: &mut Gen, n_max: usize, w: usize) -> Vec<Vec<i32>> {
+    let n = g.usize_in(0, n_max);
+    (0..n)
+        .map(|_| {
+            let len = g.usize_in(1, w);
+            (0..len).map(|_| g.word()).collect()
+        })
+        .collect()
+}
+
+fn arb_keys(g: &mut Gen, m: usize) -> Vec<i32> {
+    (0..m).map(|_| g.word()).collect()
+}
+
+#[test]
+fn golden_equals_cycle_simulator_arbitrary_geometry() {
+    check("golden-vs-sim", 0xE0, 40, |g| {
+        let cfg = BicConfig {
+            n_records: g.usize_in(1, 48),
+            w_words: g.usize_in(1, 48),
+            m_keys: g.usize_in(1, 24),
+        };
+        let mut golden = BicCore::new(cfg);
+        let mut sim = CoreSim::new(cfg);
+        for _ in 0..2 {
+            let recs = arb_records(g, cfg.n_records, cfg.w_words);
+            let keys = arb_keys(g, cfg.m_keys);
+            let run = sim.index_batch(&recs, &keys);
+            if run.index != golden.index(&recs, &keys) {
+                return Err(format!("mismatch at cfg {cfg:?}"));
+            }
+            if run.cycles != cfg.cycles_per_batch() {
+                return Err(format!(
+                    "cycles {} != analytic {} at cfg {cfg:?}",
+                    run.cycles,
+                    cfg.cycles_per_batch()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn golden_equals_pjrt_on_all_variants() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    for v in manifest
+        .bic
+        .iter()
+        .chain(manifest.twostep.iter())
+        .chain(manifest.mxu.iter())
+    {
+        let exe = BicExecutable::load(&rt, v).unwrap();
+        let cfg = BicConfig { n_records: v.n, w_words: v.w, m_keys: v.m };
+        let mut golden = BicCore::new(cfg);
+        let rounds = if v.n * v.w > 20_000 { 2 } else { 6 };
+        check(&format!("pjrt-{}", v.name), 0xE1 + v.n as u64, rounds, |g| {
+            let recs = arb_records(g, cfg.n_records, cfg.w_words);
+            let keys = arb_keys(g, cfg.m_keys);
+            let via_pjrt = exe.index(&recs, &keys).map_err(|e| format!("{e:#}"))?;
+            if via_pjrt != golden.index(&recs, &keys) {
+                return Err(format!("variant {} diverged", v.name));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn query_three_way_equivalence() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let bic_v = manifest.find_bic("batch").unwrap();
+    let q_v = manifest.find_query("batch").unwrap();
+    let exe = BicExecutable::load(&rt, bic_v).unwrap();
+    let qexe = sotb_bic::runtime::QueryExecutable::load(&rt, q_v).unwrap();
+    let cfg = BicConfig { n_records: bic_v.n, w_words: bic_v.w, m_keys: bic_v.m };
+
+    check("query-3way", 0xE7, 8, |g| {
+        let recs = arb_records(g, cfg.n_records, cfg.w_words);
+        let keys = arb_keys(g, cfg.m_keys);
+        let bi = exe.index(&recs, &keys).map_err(|e| format!("{e:#}"))?;
+        let include: Vec<bool> = (0..cfg.m_keys).map(|_| g.chance(0.4)).collect();
+        let exclude: Vec<bool> = (0..cfg.m_keys).map(|_| g.chance(0.3)).collect();
+
+        // 1. PJRT query artifact.
+        let via_pjrt = qexe.eval(&bi, &include, &exclude).map_err(|e| format!("{e:#}"))?;
+        // 2. Rust conjunctive engine.
+        let via_conj = conjunctive(&bi, &include, &exclude);
+        if via_pjrt != via_conj.words() {
+            return Err("pjrt != conjunctive".into());
+        }
+        // 3. Expression-tree engine.
+        let inc_q = Query::And(
+            include
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b)
+                .map(|(i, _)| Query::Attr(i))
+                .collect(),
+        );
+        let exc_q = Query::Or(
+            exclude
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b)
+                .map(|(i, _)| Query::Attr(i))
+                .collect(),
+        );
+        let via_expr = inc_q.and(exc_q.not()).eval(&bi).map_err(|e| e.to_string())?;
+        if via_expr != via_conj {
+            return Err("expression != conjunctive".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_activity_scales_with_geometry() {
+    // Sanity on the power pipeline: more records/keys => more events.
+    let small = CoreSim::new(BicConfig { n_records: 4, w_words: 8, m_keys: 4 });
+    let big = CoreSim::new(BicConfig { n_records: 16, w_words: 32, m_keys: 8 });
+    let mut run = |mut sim: CoreSim, seed: u64| {
+        let mut g = Gen::replay(seed, 0);
+        let cfg = *sim.config();
+        let recs: Vec<Vec<i32>> = (0..cfg.n_records)
+            .map(|_| (0..cfg.w_words).map(|_| g.word()).collect())
+            .collect();
+        let keys: Vec<i32> = (0..cfg.m_keys).map(|_| g.word()).collect();
+        sim.index_batch(&recs, &keys).activity.total_events()
+    };
+    let e_small = run(small, 1);
+    let e_big = run(big, 2);
+    assert!(e_big > 4 * e_small, "events {e_small} -> {e_big}");
+}

@@ -1,0 +1,148 @@
+//! Integration: AOT artifact -> PJRT -> bitmap must equal the pure-Rust
+//! golden model (`bic::BicCore`) word-for-word, for every shipped variant.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI runs
+//! through the Makefile so the artifacts always exist there).
+
+use sotb_bic::bic::{conjunctive, BicConfig, BicCore, PAD};
+use sotb_bic::runtime::{BicExecutable, Manifest, QueryExecutable, Runtime};
+use sotb_bic::substrate::rng::Xoshiro256;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest parses"))
+}
+
+fn random_batch(
+    rng: &mut Xoshiro256,
+    n: usize,
+    w: usize,
+    fill: f64,
+) -> Vec<Vec<i32>> {
+    // `fill` controls ragged records: each record has 1..=w real words.
+    (0..n)
+        .map(|_| {
+            let len = 1 + rng.next_below(((w as f64 * fill) as u64).max(1)) as usize;
+            (0..len.min(w)).map(|_| rng.next_below(256) as i32).collect()
+        })
+        .collect()
+}
+
+fn random_keys(rng: &mut Xoshiro256, m: usize) -> Vec<i32> {
+    (0..m).map(|_| rng.next_below(256) as i32).collect()
+}
+
+#[test]
+fn every_bic_variant_matches_golden_model() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    for variant in manifest.bic.iter().chain(manifest.twostep.iter()) {
+        let exe = BicExecutable::load(&rt, variant)
+            .unwrap_or_else(|e| panic!("loading {}: {e:?}", variant.name));
+        let cfg = BicConfig {
+            n_records: variant.n,
+            w_words: variant.w,
+            m_keys: variant.m,
+        };
+        let mut golden = BicCore::new(cfg);
+        let mut rng = Xoshiro256::seeded(0xB1C0 + variant.n as u64);
+        for round in 0..3 {
+            let recs = random_batch(&mut rng, variant.n, variant.w, 1.0);
+            let keys = random_keys(&mut rng, variant.m);
+            let via_pjrt = exe.index(&recs, &keys).expect("PJRT index");
+            let via_rust = golden.index(&recs, &keys);
+            assert_eq!(
+                via_pjrt, via_rust,
+                "variant {} round {round}: artifact != golden model",
+                variant.name
+            );
+        }
+    }
+}
+
+#[test]
+fn short_and_ragged_batches_agree() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let variant = manifest.find_bic("chip").expect("chip variant");
+    let exe = BicExecutable::load(&rt, variant).unwrap();
+    let mut golden = BicCore::new(BicConfig::CHIP);
+    let mut rng = Xoshiro256::seeded(77);
+    // Half-full batch of ragged records.
+    let recs = random_batch(&mut rng, 7, 32, 0.4);
+    let keys = random_keys(&mut rng, 8);
+    assert_eq!(exe.index(&recs, &keys).unwrap(), golden.index(&recs, &keys));
+}
+
+#[test]
+fn coalesced_variant_matches_per_batch_dispatch() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let co = manifest.find_coalesce("batch").expect("coalesce4 artifact");
+    let single = manifest.find_bic("batch").expect("batch artifact");
+    let exe_co = BicExecutable::load(&rt, co).unwrap();
+    let exe_single = BicExecutable::load(&rt, single).unwrap();
+
+    let mut rng = Xoshiro256::seeded(1234);
+    let keys = random_keys(&mut rng, co.m);
+    let batches: Vec<Vec<Vec<i32>>> =
+        (0..co.b).map(|_| random_batch(&mut rng, co.n, co.w, 1.0)).collect();
+    let batch_refs: Vec<&[Vec<i32>]> =
+        batches.iter().map(|b| b.as_slice()).collect();
+
+    let coalesced = exe_co.index_coalesced(&batch_refs, &keys).unwrap();
+    for (i, batch) in batches.iter().enumerate() {
+        let one = exe_single.index(batch, &keys).unwrap();
+        assert_eq!(coalesced[i], one, "batch {i}");
+    }
+}
+
+#[test]
+fn query_artifact_matches_rust_engine() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let bic_v = manifest.find_bic("batch").unwrap();
+    let q_v = manifest.find_query("batch").expect("query artifact");
+    let exe = BicExecutable::load(&rt, bic_v).unwrap();
+    let qexe = QueryExecutable::load(&rt, q_v).unwrap();
+
+    let mut rng = Xoshiro256::seeded(99);
+    let recs = random_batch(&mut rng, bic_v.n, bic_v.w, 1.0);
+    let keys = random_keys(&mut rng, bic_v.m);
+    let bi = exe.index(&recs, &keys).unwrap();
+
+    for trial in 0..5 {
+        let include: Vec<bool> = (0..q_v.m).map(|_| rng.chance(0.4)).collect();
+        let exclude: Vec<bool> = (0..q_v.m).map(|_| rng.chance(0.3)).collect();
+        let via_pjrt = qexe.eval(&bi, &include, &exclude).unwrap();
+        let via_rust = conjunctive(&bi, &include, &exclude);
+        // The artifact returns raw words over n bits (tail bits zero by
+        // the index's invariant + exclude cannot set them).
+        assert_eq!(
+            via_pjrt,
+            via_rust.words(),
+            "trial {trial}: query artifact != rust engine"
+        );
+    }
+}
+
+#[test]
+fn rejects_invalid_inputs() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let variant = manifest.find_bic("chip").unwrap();
+    let exe = BicExecutable::load(&rt, variant).unwrap();
+    // Too many records.
+    let too_many = vec![vec![0i32; 32]; 17];
+    assert!(exe.index(&too_many, &[1, 2, 3, 4, 5, 6, 7, 8]).is_err());
+    // Wrong key count.
+    assert!(exe.index(&[vec![1]], &[1, 2]).is_err());
+    // PAD as key.
+    assert!(exe
+        .index(&[vec![1]], &[PAD, 2, 3, 4, 5, 6, 7, 8])
+        .is_err());
+}
