@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Repo gate: format + lint (when the components are installed) and the
+# tier-1 verify command (ROADMAP.md): cargo build --release && cargo test.
+# Run from anywhere; operates on the rust/ package.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+else
+    echo "== rustfmt not installed; skipping format check =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== clippy not installed; skipping lint =="
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== ci.sh OK =="

@@ -1,20 +1,49 @@
 //! Hot-path microbenchmarks — the L3 performance-pass instrument
-//! (EXPERIMENTS.md §Perf): bitmap algebra, WAH, query engine, the golden
-//! indexing core, the cycle simulator, and PJRT artifact dispatch.
+//! (EXPERIMENTS.md §Perf): bitmap algebra (incl. the fused multi-operand
+//! kernel), the 64x64 block transpose vs the scalar reference, packed CAM
+//! matching, WAH, the query engine, the golden indexing core, the
+//! thread-sharded coordinator path, the cycle simulator, and PJRT
+//! artifact dispatch.
+//!
+//! Results are also emitted machine-readable to `BENCH_hotpath.json`
+//! (one object per case) so the perf trajectory is tracked across PRs.
 
 use sotb_bic::baselines::SoftwareIndexer;
-use sotb_bic::bic::{BicConfig, BicCore, Bitmap, Query, WahBitmap};
+use sotb_bic::bic::transpose::{pack_rows, transpose, transpose_packed};
+use sotb_bic::bic::{BicConfig, BicCore, Bitmap, Cam, Query, WahBitmap};
+use sotb_bic::coordinator::{ContentDist, ShardedIndexer, WorkloadGen};
 use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
 use sotb_bic::sim::CoreSim;
-use sotb_bic::substrate::bench::{group, Bench};
+use sotb_bic::substrate::bench::{group, Bench, BenchResult};
+use sotb_bic::substrate::json::Json;
 use sotb_bic::substrate::rng::Xoshiro256;
 
 fn random_batch(rng: &mut Xoshiro256, n: usize, w: usize) -> Vec<Vec<i32>> {
     (0..n).map(|_| (0..w).map(|_| rng.next_below(256) as i32).collect()).collect()
 }
 
+fn result_json(r: &BenchResult) -> Json {
+    let mut j = Json::obj([
+        ("name", r.name.as_str().into()),
+        ("mean_s", r.per_iter.mean.into()),
+        ("stddev_s", r.per_iter.stddev.into()),
+        ("samples", r.per_iter.n.into()),
+        ("iters_per_sample", r.iters_per_sample.into()),
+    ]);
+    match r.bytes_per_iter {
+        Some(b) => j.set("bytes_per_iter", b),
+        None => j.set("bytes_per_iter", Json::Null),
+    }
+    match r.throughput() {
+        Some(tp) => j.set("throughput_bps", tp),
+        None => j.set("throughput_bps", Json::Null),
+    }
+    j
+}
+
 fn main() {
     let mut rng = Xoshiro256::seeded(0x1407);
+    let mut results: Vec<BenchResult> = Vec::new();
 
     group("bitmap algebra (1 Mbit rows)");
     let nbits = 1 << 20;
@@ -24,38 +53,144 @@ fn main() {
         a.set(rng.next_below(nbits as u64) as usize, true);
         b.set(rng.next_below(nbits as u64) as usize, true);
     }
-    Bench::new("bitmap/and-1Mbit").bytes((nbits / 8) as u64).run(|| a.and(&b));
+    results.push(
+        Bench::new("bitmap/and-1Mbit").bytes((nbits / 8) as u64).run(|| a.and(&b)),
+    );
     let mut acc = a.clone();
-    Bench::new("bitmap/and_assign-1Mbit")
-        .bytes((nbits / 8) as u64)
-        .run(|| acc.and_assign(&b));
-    Bench::new("bitmap/count_ones-1Mbit")
-        .bytes((nbits / 8) as u64)
-        .run(|| a.count_ones());
+    results.push(
+        Bench::new("bitmap/and_assign-1Mbit")
+            .bytes((nbits / 8) as u64)
+            .run(|| acc.and_assign(&b)),
+    );
+    // Fused 4-operand conjunction vs the chained pairwise equivalent, on
+    // ~50%-dense rows so essentially no block dies and the pair measures
+    // kernel fusion (fewer passes), not the zero-block skip.
+    let dense: Vec<Bitmap> = (0..4)
+        .map(|_| {
+            let bools: Vec<bool> =
+                (0..nbits).map(|_| rng.chance(0.5)).collect();
+            Bitmap::from_bools(&bools)
+        })
+        .collect();
+    let (d0, d1, d2, d3) = (&dense[0], &dense[1], &dense[2], &dense[3]);
+    results.push(
+        Bench::new("bitmap/and_all-4x1Mbit-dense")
+            .bytes((4 * nbits / 8) as u64)
+            .run(|| d0.and_all(&[d1, d2, d3])),
+    );
+    results.push(
+        Bench::new("bitmap/and-chained-4x1Mbit-dense")
+            .bytes((4 * nbits / 8) as u64)
+            .run(|| d0.and(d1).and(d2).and(d3)),
+    );
+    // Selective case: the sparse a & b kills most blocks early, so this
+    // measures the absorbing-zero skip path (bytes denominator omitted —
+    // the point is that most memory is deliberately never touched).
+    results.push(
+        Bench::new("bitmap/and_all-4x1Mbit-selective")
+            .run(|| a.and_all(&[&b, d0, d1])),
+    );
+    results.push(
+        Bench::new("bitmap/count_ones-1Mbit")
+            .bytes((nbits / 8) as u64)
+            .run(|| a.count_ones()),
+    );
+
+    group("transpose (4096 records x 64 keys)");
+    let (tn, tm) = (4096usize, 64usize);
+    let tbits: Vec<bool> =
+        (0..tn * tm).map(|_| rng.next_below(4) == 0).collect();
+    let tpacked = pack_rows(&tbits, tn, tm);
+    let tbytes = (tn * tm / 8) as u64;
+    results.push(
+        Bench::new("transpose/scalar-4096x64")
+            .bytes(tbytes)
+            .run(|| transpose(&tbits, tn, tm)),
+    );
+    results.push(
+        Bench::new("transpose/block64-4096x64")
+            .bytes(tbytes)
+            .run(|| transpose_packed(&tpacked, tn, tm)),
+    );
+
+    group("CAM matching (32-word record, 256 keys)");
+    let mut cam = Cam::new(32);
+    cam.load(&(0..32).map(|_| rng.next_below(256) as i32).collect::<Vec<_>>());
+    let many_keys: Vec<i32> =
+        (0..256).map(|_| rng.next_below(256) as i32).collect();
+    let mut match_row = vec![0u64; 4];
+    results.push(
+        Bench::new("cam/match_all-256keys")
+            .bytes(256)
+            .run(|| cam.match_all(&many_keys)),
+    );
+    results.push(
+        Bench::new("cam/match_packed-256keys")
+            .bytes(256)
+            .run(|| cam.match_packed_into(&many_keys, &mut match_row)),
+    );
 
     group("WAH compression (1 Mbit, sparse)");
     let wah_a = WahBitmap::compress(&a);
     let wah_b = WahBitmap::compress(&b);
     println!("compression ratio: {:.1}x", wah_a.ratio());
-    Bench::new("wah/compress").bytes((nbits / 8) as u64).run(|| WahBitmap::compress(&a));
-    Bench::new("wah/and-compressed").run(|| wah_a.and(&wah_b));
-    Bench::new("wah/count_ones").run(|| wah_a.count_ones());
+    results.push(
+        Bench::new("wah/compress").bytes((nbits / 8) as u64).run(|| WahBitmap::compress(&a)),
+    );
+    results.push(Bench::new("wah/and-compressed").run(|| wah_a.and(&wah_b)));
+    results.push(Bench::new("wah/count_ones").run(|| wah_a.count_ones()));
 
     group("indexing cores (chip geometry: 16x32, 8 keys)");
     let recs = random_batch(&mut rng, 16, 32);
     let keys: Vec<i32> = (0..8).map(|_| rng.next_below(256) as i32).collect();
     let mut golden = BicCore::new(BicConfig::CHIP);
-    Bench::new("index/golden-model")
-        .bytes(512)
-        .run(|| golden.index(&recs, &keys));
+    results.push(
+        Bench::new("index/golden-model")
+            .bytes(512)
+            .run(|| golden.index(&recs, &keys)),
+    );
+    results.push(
+        Bench::new("index/scalar-reference")
+            .bytes(512)
+            .run(|| golden.index_scalar(&recs, &keys)),
+    );
     let mut sim = CoreSim::new(BicConfig::CHIP);
-    Bench::new("index/cycle-simulator")
-        .bytes(512)
-        .run(|| sim.index_batch(&recs, &keys));
+    results.push(
+        Bench::new("index/cycle-simulator")
+            .bytes(512)
+            .run(|| sim.index_batch(&recs, &keys)),
+    );
     let sw = SoftwareIndexer::new(8);
-    Bench::new("index/software-baseline")
-        .bytes(512)
-        .run(|| sw.index(&recs, &keys));
+    results.push(
+        Bench::new("index/software-baseline")
+            .bytes(512)
+            .run(|| sw.index(&recs, &keys)),
+    );
+
+    group("sharded coordinator (256 chip batches)");
+    let mut wg = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 0x51AD);
+    let trace: Vec<_> = (0..256).map(|i| wg.batch_at(i as f64)).collect();
+    let trace_bytes: u64 =
+        trace.iter().map(|b| b.input_bytes() as u64).sum();
+    let serial = ShardedIndexer::new(BicConfig::CHIP, 1);
+    results.push(
+        Bench::new("index/sharded-1core-256batches")
+            .bytes(trace_bytes)
+            .run(|| serial.index_batches(&trace)),
+    );
+    let parallel = ShardedIndexer::with_host_parallelism(BicConfig::CHIP);
+    if parallel.shards() > 1 {
+        results.push(
+            Bench::new(format!(
+                "index/sharded-{}core-256batches",
+                parallel.shards()
+            ))
+            .bytes(trace_bytes)
+            .run(|| parallel.index_batches(&trace)),
+        );
+    } else {
+        println!("(single-core host: parallel shard case skipped)");
+    }
 
     group("query engine (64 attrs x 1M objects)");
     let mut qrng = Xoshiro256::seeded(7);
@@ -70,7 +205,7 @@ fn main() {
         .collect();
     let bi = sotb_bic::bic::BitmapIndex::from_rows(rows);
     let q = Query::attr(1).and(Query::attr(5)).and(Query::attr(9).not());
-    Bench::new("query/and-and-not-1Mobj").run(|| q.eval(&bi).unwrap());
+    results.push(Bench::new("query/and-and-not-1Mobj").run(|| q.eval(&bi).unwrap()));
 
     group("PJRT artifact dispatch");
     let dir = Manifest::default_dir();
@@ -84,11 +219,24 @@ fn main() {
             let recs = random_batch(&mut vrng, v.n, v.w);
             let keys: Vec<i32> =
                 (0..v.m).map(|_| vrng.next_below(256) as i32).collect();
-            Bench::new(format!("pjrt/index-{name} (n={} w={} m={})", v.n, v.w, v.m))
-                .bytes((v.n * v.w) as u64)
-                .run(|| exe.index(&recs, &keys).unwrap());
+            results.push(
+                Bench::new(format!("pjrt/index-{name} (n={} w={} m={})", v.n, v.w, v.m))
+                    .bytes((v.n * v.w) as u64)
+                    .run(|| exe.index(&recs, &keys).unwrap()),
+            );
         }
     } else {
         println!("(skipped: run `make artifacts` first)");
+    }
+
+    // Machine-readable dump for cross-PR perf tracking.
+    let json = Json::obj([(
+        "hotpath",
+        Json::Arr(results.iter().map(result_json).collect()),
+    )]);
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, json.render() + "\n") {
+        Ok(()) => println!("\nwrote {} results to {path}", results.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 }

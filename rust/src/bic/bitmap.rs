@@ -1,22 +1,86 @@
 //! Packed bitmap container + bitwise algebra.
 //!
-//! Layout contract (shared with `python/compile/kernels/ref.py` and the
-//! AOT artifacts): bit `j` of word `w` (LSB-first) is column `w*32 + j`.
+//! Internal storage is `u64` words — the widest unit the host ALU moves
+//! per instruction — processed in cache-block-sized chunks so the hot
+//! kernels autovectorize. The *interchange* layout shared with
+//! `python/compile/kernels/ref.py` and the AOT artifacts is unchanged:
+//! row-major `u32` words, LSB-first (bit `j` of packed word `w` is column
+//! `w*32 + j`), materialized only at the [`BitmapIndex::to_packed`] /
+//! [`BitmapIndex::from_packed`] boundary. A `u64` internal word is simply
+//! two consecutive interchange words (low half first), so conversion is a
+//! shift, never a bit shuffle.
+//!
 //! Trailing bits past `nbits` in the last word are always zero — every
 //! operation maintains that invariant so word-level comparisons are exact.
 
-pub const WORD_BITS: usize = 32;
+/// Internal word width (host-native).
+pub const WORD_BITS: usize = 64;
 
-/// A fixed-length bitmap packed into `u32` words.
+/// Interchange word width (the artifact format; fixed by the chip's
+/// 32-bit output port and the Python kernels).
+pub const PACKED_WORD_BITS: usize = 32;
+
+/// Words per cache block: 8 x 8 B = one 64-byte line. The bulk kernels
+/// walk block-by-block so the compiler sees fixed-trip-count inner loops.
+const BLOCK_WORDS: usize = 8;
+
+/// A fixed-length bitmap packed into `u64` words.
 #[derive(Clone, PartialEq, Eq, Debug, Hash)]
 pub struct Bitmap {
     nbits: usize,
-    words: Vec<u32>,
+    words: Vec<u64>,
 }
 
+/// Internal (`u64`) words needed for `nbits` bits.
 #[inline]
 pub fn words_for(nbits: usize) -> usize {
     nbits.div_ceil(WORD_BITS)
+}
+
+/// Interchange (`u32`) words needed for `nbits` bits — the `nw` of the
+/// artifact shapes and the chip's emit-cycle count.
+#[inline]
+pub fn packed_words_for(nbits: usize) -> usize {
+    nbits.div_ceil(PACKED_WORD_BITS)
+}
+
+/// Elementwise `op` over two word slices into a fresh vector, walked in
+/// cache-block chunks (fixed-size inner loops vectorize; the remainder
+/// tail is at most `BLOCK_WORDS - 1` words).
+#[inline]
+fn zip_map(a: &[u64], b: &[u64], op: impl Fn(u64, u64) -> u64 + Copy) -> Vec<u64> {
+    debug_assert_eq!(a.len(), b.len());
+    let mut out = vec![0u64; a.len()];
+    let ac = a.chunks_exact(BLOCK_WORDS);
+    let bc = b.chunks_exact(BLOCK_WORDS);
+    let (a_rem, b_rem) = (ac.remainder(), bc.remainder());
+    let mut oc = out.chunks_exact_mut(BLOCK_WORDS);
+    for ((o, x), y) in (&mut oc).zip(ac).zip(bc) {
+        for i in 0..BLOCK_WORDS {
+            o[i] = op(x[i], y[i]);
+        }
+    }
+    for ((o, &x), &y) in oc.into_remainder().iter_mut().zip(a_rem).zip(b_rem) {
+        *o = op(x, y);
+    }
+    out
+}
+
+/// In-place variant of [`zip_map`].
+#[inline]
+fn zip_assign(a: &mut [u64], b: &[u64], op: impl Fn(u64, u64) -> u64 + Copy) {
+    debug_assert_eq!(a.len(), b.len());
+    let bc = b.chunks_exact(BLOCK_WORDS);
+    let b_rem = bc.remainder();
+    let mut ac = a.chunks_exact_mut(BLOCK_WORDS);
+    for (x, y) in (&mut ac).zip(bc) {
+        for i in 0..BLOCK_WORDS {
+            x[i] = op(x[i], y[i]);
+        }
+    }
+    for (x, &y) in ac.into_remainder().iter_mut().zip(b_rem) {
+        *x = op(*x, y);
+    }
 }
 
 impl Bitmap {
@@ -27,29 +91,64 @@ impl Bitmap {
 
     /// All-one bitmap of `nbits` bits (trailing bits cleared).
     pub fn ones(nbits: usize) -> Self {
-        let mut b = Self { nbits, words: vec![u32::MAX; words_for(nbits)] };
+        let mut b = Self { nbits, words: vec![u64::MAX; words_for(nbits)] };
         b.mask_tail();
         b
     }
 
-    /// From a slice of bools, index order = column order.
+    /// From a slice of bools, index order = column order. Packs a whole
+    /// word per inner loop instead of calling the bounds-checked [`set`]
+    /// per bit (§Perf: the per-bit path dominated `from_bools` profiles).
+    ///
+    /// [`set`]: Bitmap::set
     pub fn from_bools(bits: &[bool]) -> Self {
-        let mut b = Self::zeros(bits.len());
-        for (i, &v) in bits.iter().enumerate() {
-            if v {
-                b.set(i, true);
+        let mut words = Vec::with_capacity(words_for(bits.len()));
+        for chunk in bits.chunks(WORD_BITS) {
+            let mut w = 0u64;
+            for (j, &v) in chunk.iter().enumerate() {
+                w |= (v as u64) << j;
             }
+            words.push(w);
         }
-        b
+        Self { nbits: bits.len(), words }
     }
 
-    /// From pre-packed words (must already satisfy the tail invariant, which
-    /// is re-enforced here defensively).
-    pub fn from_words(nbits: usize, words: Vec<u32>) -> Self {
+    /// From pre-packed internal words (must already satisfy the tail
+    /// invariant, which is re-enforced here defensively).
+    pub fn from_words(nbits: usize, words: Vec<u64>) -> Self {
         assert_eq!(words.len(), words_for(nbits), "word count mismatch");
         let mut b = Self { nbits, words };
         b.mask_tail();
         b
+    }
+
+    /// From interchange (`u32`, LSB-first) words — the artifact row format.
+    pub fn from_packed_words(nbits: usize, packed: &[u32]) -> Self {
+        assert_eq!(
+            packed.len(),
+            packed_words_for(nbits),
+            "packed word count mismatch"
+        );
+        let mut words = vec![0u64; words_for(nbits)];
+        for (k, &w) in packed.iter().enumerate() {
+            words[k / 2] |= (w as u64) << (PACKED_WORD_BITS * (k % 2));
+        }
+        let mut b = Self { nbits, words };
+        b.mask_tail();
+        b
+    }
+
+    /// To interchange (`u32`, LSB-first) words — byte-identical to the
+    /// pre-u64 layout: internal word `w` emits its low half as packed word
+    /// `2w` and its high half as packed word `2w + 1` (the latter dropped
+    /// when `nbits` needs an odd interchange count).
+    pub fn to_packed_words(&self) -> Vec<u32> {
+        let nw = packed_words_for(self.nbits);
+        let mut out = Vec::with_capacity(nw);
+        for k in 0..nw {
+            out.push((self.words[k / 2] >> (PACKED_WORD_BITS * (k % 2))) as u32);
+        }
+        out
     }
 
     #[inline]
@@ -63,14 +162,14 @@ impl Bitmap {
     }
 
     #[inline]
-    pub fn words(&self) -> &[u32] {
+    pub fn words(&self) -> &[u64] {
         &self.words
     }
 
     /// Mutable word access for word-level builders (WAH decompress); the
     /// caller must maintain the tail invariant.
     #[inline]
-    pub(crate) fn words_mut(&mut self) -> &mut [u32] {
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
         &mut self.words
     }
 
@@ -99,6 +198,15 @@ impl Bitmap {
         }
     }
 
+    /// Set bit `i` without the range check — for trusted crate-internal
+    /// builders (e.g. the scalar transpose reference) whose loop bounds
+    /// already guarantee `i < nbits`.
+    #[inline]
+    pub(crate) fn set_unchecked(&mut self, i: usize) {
+        debug_assert!(i < self.nbits, "bit index {i} out of range {}", self.nbits);
+        self.words[i / WORD_BITS] |= 1 << (i % WORD_BITS);
+    }
+
     /// Number of set bits.
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
@@ -115,7 +223,7 @@ impl Bitmap {
         let tail = self.nbits % WORD_BITS;
         if tail != 0 {
             if let Some(last) = self.words.last_mut() {
-                *last &= (1u32 << tail) - 1;
+                *last &= (1u64 << tail) - 1;
             }
         }
         if self.nbits == 0 {
@@ -134,49 +242,25 @@ impl Bitmap {
     /// `self & other`, elementwise.
     pub fn and(&self, other: &Self) -> Self {
         self.check_len(other);
-        let words = self
-            .words
-            .iter()
-            .zip(&other.words)
-            .map(|(a, b)| a & b)
-            .collect();
-        Self { nbits: self.nbits, words }
+        Self { nbits: self.nbits, words: zip_map(&self.words, &other.words, |a, b| a & b) }
     }
 
     /// `self | other`, elementwise.
     pub fn or(&self, other: &Self) -> Self {
         self.check_len(other);
-        let words = self
-            .words
-            .iter()
-            .zip(&other.words)
-            .map(|(a, b)| a | b)
-            .collect();
-        Self { nbits: self.nbits, words }
+        Self { nbits: self.nbits, words: zip_map(&self.words, &other.words, |a, b| a | b) }
     }
 
     /// `self ^ other`, elementwise.
     pub fn xor(&self, other: &Self) -> Self {
         self.check_len(other);
-        let words = self
-            .words
-            .iter()
-            .zip(&other.words)
-            .map(|(a, b)| a ^ b)
-            .collect();
-        Self { nbits: self.nbits, words }
+        Self { nbits: self.nbits, words: zip_map(&self.words, &other.words, |a, b| a ^ b) }
     }
 
     /// `self & !other` (the query engine's ANDNOT primitive).
     pub fn and_not(&self, other: &Self) -> Self {
         self.check_len(other);
-        let words = self
-            .words
-            .iter()
-            .zip(&other.words)
-            .map(|(a, b)| a & !b)
-            .collect();
-        Self { nbits: self.nbits, words }
+        Self { nbits: self.nbits, words: zip_map(&self.words, &other.words, |a, b| a & !b) }
     }
 
     /// Bitwise complement (trailing bits stay zero).
@@ -192,30 +276,60 @@ impl Bitmap {
     /// In-place AND — the allocation-free hot-path variant.
     pub fn and_assign(&mut self, other: &Self) {
         self.check_len(other);
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a &= b;
-        }
+        zip_assign(&mut self.words, &other.words, |a, b| a & b);
     }
 
     /// In-place OR.
     pub fn or_assign(&mut self, other: &Self) {
         self.check_len(other);
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a |= b;
-        }
+        zip_assign(&mut self.words, &other.words, |a, b| a | b);
     }
 
     /// In-place ANDNOT.
     pub fn and_not_assign(&mut self, other: &Self) {
         self.check_len(other);
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a &= !b;
+        zip_assign(&mut self.words, &other.words, |a, b| a & !b);
+    }
+
+    /// Fused multi-operand AND: `self & others[0] & others[1] & ...` in a
+    /// single pass over each cache block. A block that goes all-zero skips
+    /// every remaining operand (zero is absorbing), so highly selective
+    /// conjunctions touch far less memory than a chain of pairwise ANDs —
+    /// the software analogue of Buddy-RAM's bulk-bitwise framing.
+    pub fn and_all(&self, others: &[&Bitmap]) -> Bitmap {
+        for o in others {
+            self.check_len(o);
         }
+        let mut out = self.clone();
+        if others.is_empty() {
+            return out;
+        }
+        let nw = out.words.len();
+        let mut base = 0;
+        while base < nw {
+            let end = (base + BLOCK_WORDS).min(nw);
+            let blk = &mut out.words[base..end];
+            let mut live = blk.iter().fold(0u64, |acc, &w| acc | w) != 0;
+            for o in others {
+                if !live {
+                    break;
+                }
+                let ob = &o.words[base..end];
+                let mut any = 0u64;
+                for i in 0..blk.len() {
+                    blk[i] &= ob[i];
+                    any |= blk[i];
+                }
+                live = any != 0;
+            }
+            base = end;
+        }
+        out
     }
 }
 
 struct BitIter {
-    word: u32,
+    word: u64,
     base: usize,
 }
 
@@ -255,17 +369,23 @@ impl BitmapIndex {
     /// Rebuild from the packed words the AOT artifact returns
     /// (`u32[m, nw]`, row-major, `nw = ceil(n/32)`).
     pub fn from_packed(m: usize, n: usize, words: &[u32]) -> Self {
-        let nw = words_for(n);
+        let nw = packed_words_for(n);
         assert_eq!(words.len(), m * nw, "packed length mismatch");
         let rows = (0..m)
-            .map(|i| Bitmap::from_words(n, words[i * nw..(i + 1) * nw].to_vec()))
+            .map(|i| Bitmap::from_packed_words(n, &words[i * nw..(i + 1) * nw]))
             .collect();
         Self { n, rows }
     }
 
-    /// Flatten to the packed row-major word layout (the artifact format).
+    /// Flatten to the packed row-major `u32` word layout (the artifact
+    /// format) — byte-for-byte the pre-u64 encoding.
     pub fn to_packed(&self) -> Vec<u32> {
-        self.rows.iter().flat_map(|r| r.words().iter().copied()).collect()
+        let nw = packed_words_for(self.n);
+        let mut out = Vec::with_capacity(self.rows.len() * nw);
+        for r in &self.rows {
+            out.extend(r.to_packed_words());
+        }
+        out
     }
 
     #[inline]
@@ -322,21 +442,64 @@ mod tests {
         let mut b = Bitmap::zeros(64);
         b.set(0, true);
         b.set(33, true);
-        assert_eq!(b.words(), &[0x1, 0x2]);
+        assert_eq!(b.words(), &[0x2_0000_0001u64]);
+        // The interchange view splits it into the historical u32 pair.
+        assert_eq!(b.to_packed_words(), vec![0x1u32, 0x2]);
     }
 
     #[test]
     fn ones_masks_tail() {
         let b = Bitmap::ones(33);
-        assert_eq!(b.words(), &[u32::MAX, 0x1]);
+        assert_eq!(b.words(), &[(1u64 << 33) - 1]);
         assert_eq!(b.count_ones(), 33);
+        assert_eq!(b.to_packed_words(), vec![u32::MAX, 0x1]);
     }
 
     #[test]
     fn not_keeps_tail_invariant() {
         let b = Bitmap::zeros(33).not();
         assert_eq!(b.count_ones(), 33);
-        assert_eq!(b.words()[1], 0x1);
+        assert_eq!(b.words(), &[(1u64 << 33) - 1]);
+    }
+
+    #[test]
+    fn from_bools_matches_per_bit_set() {
+        for n in [0usize, 1, 31, 32, 33, 63, 64, 65, 127, 128, 130] {
+            let bits: Vec<bool> = (0..n).map(|i| (i * 7) % 3 == 0).collect();
+            let fast = Bitmap::from_bools(&bits);
+            let mut slow = Bitmap::zeros(n);
+            for (i, &v) in bits.iter().enumerate() {
+                slow.set(i, v);
+            }
+            assert_eq!(fast, slow, "n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_words_roundtrip_ragged_tails() {
+        for n in [1usize, 31, 32, 33, 63, 64, 65, 95, 96, 97, 129] {
+            let bits: Vec<bool> = (0..n).map(|i| (i * 13) % 5 < 2).collect();
+            let b = Bitmap::from_bools(&bits);
+            let packed = b.to_packed_words();
+            assert_eq!(packed.len(), packed_words_for(n), "n={n}");
+            assert_eq!(Bitmap::from_packed_words(n, &packed), b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_words_match_bit_positions() {
+        // Column w*32 + j must land in packed word w, bit j — the exact
+        // contract of the Python kernels and the AOT artifacts.
+        let mut b = Bitmap::zeros(100);
+        for i in [0, 31, 32, 40, 64, 99] {
+            b.set(i, true);
+        }
+        let packed = b.to_packed_words();
+        assert_eq!(packed.len(), 4);
+        assert_eq!(packed[0], (1 << 0) | (1u32 << 31));
+        assert_eq!(packed[1], (1 << 0) | (1 << 8));
+        assert_eq!(packed[2], 1 << 0);
+        assert_eq!(packed[3], 1 << 3);
     }
 
     #[test]
@@ -365,6 +528,30 @@ mod tests {
     }
 
     #[test]
+    fn and_all_matches_pairwise_chain() {
+        let n = 1000;
+        let a = Bitmap::from_bools(&(0..n).map(|i| i % 2 == 0).collect::<Vec<_>>());
+        let b = Bitmap::from_bools(&(0..n).map(|i| i % 3 == 0).collect::<Vec<_>>());
+        let c = Bitmap::from_bools(&(0..n).map(|i| i % 5 == 0).collect::<Vec<_>>());
+        let fused = a.and_all(&[&b, &c]);
+        let chained = a.and(&b).and(&c);
+        assert_eq!(fused, chained);
+        // No operands: identity.
+        assert_eq!(a.and_all(&[]), a);
+    }
+
+    #[test]
+    fn and_all_dead_blocks_stay_dead() {
+        // A disjoint pair zeroes every block; a third operand must not
+        // resurrect anything (the skip path must still be correct).
+        let n = 640;
+        let evens = Bitmap::from_bools(&(0..n).map(|i| i % 2 == 0).collect::<Vec<_>>());
+        let odds = evens.not();
+        let ones = Bitmap::ones(n);
+        assert!(evens.and_all(&[&odds, &ones]).is_zero());
+    }
+
+    #[test]
     fn iter_ones_ascending() {
         let mut b = Bitmap::zeros(100);
         for i in [3, 5, 31, 32, 64, 99] {
@@ -388,6 +575,8 @@ mod tests {
         bi.set(2, 32, true);
         let packed = bi.to_packed();
         assert_eq!(packed.len(), 3 * 2);
+        // Exact interchange words: row-major u32, LSB-first.
+        assert_eq!(packed, vec![0x1, 0x0, 0x0, 0x80, 0x0, 0x1]);
         let back = BitmapIndex::from_packed(3, 40, &packed);
         assert_eq!(back, bi);
     }
@@ -398,5 +587,8 @@ mod tests {
         assert!(b.is_empty());
         assert_eq!(b.count_ones(), 0);
         assert_eq!(b.not(), b);
+        assert!(b.to_packed_words().is_empty());
+        assert_eq!(Bitmap::from_packed_words(0, &[]), b);
+        assert_eq!(b.and_all(&[]), b);
     }
 }

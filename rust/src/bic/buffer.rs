@@ -7,19 +7,33 @@
 //! flips it to the key-major `M x N` BI. Dual-port behaviour (simultaneous
 //! read/write) is a timing property modelled in `sim`; here we model the
 //! contents and the fill/drain protocol.
+//!
+//! Storage is packed: record `j` occupies `ceil(m/64)` u64 words (key `i`
+//! at word `i/64`, bit `i%64`) — exactly the tile layout
+//! [`crate::bic::transpose::transpose_packed`] consumes, so the drain is
+//! a borrow, not a bit-by-bit copy. The serial `push` protocol is kept
+//! for the cycle-accurate callers; the golden hot path deposits whole
+//! packed match rows via [`RowBuffer::push_record_words`].
 
-/// `N x M` record-major match-bit buffer.
+use super::bitmap::words_for;
+
+/// `N x M` record-major match-bit buffer, packed 64 bits per word.
 #[derive(Clone, Debug)]
 pub struct RowBuffer {
     n: usize,
     m: usize,
-    bits: Vec<bool>, // row-major: bits[j*m + i] = match(record j, key i)
-    cursor: usize,   // next write position (sequential, like the chip)
+    /// Words per record row: `ceil(m/64)`.
+    mw: usize,
+    /// `n * mw` words, record-major.
+    words: Vec<u64>,
+    /// Next write position in bit units (sequential, like the chip).
+    cursor: usize,
 }
 
 impl RowBuffer {
     pub fn new(n: usize, m: usize) -> Self {
-        Self { n, m, bits: vec![false; n * m], cursor: 0 }
+        let mw = words_for(m);
+        Self { n, m, mw, words: vec![0; n * mw], cursor: 0 }
     }
 
     #[inline]
@@ -36,8 +50,15 @@ impl RowBuffer {
     /// `cursor / m`, key `cursor % m`). Panics when written past full,
     /// as the real control logic would never issue such a write.
     pub fn push(&mut self, bit: bool) {
-        assert!(self.cursor < self.bits.len(), "buffer overflow");
-        self.bits[self.cursor] = bit;
+        assert!(self.cursor < self.n * self.m, "buffer overflow");
+        let (rec, key) = (self.cursor / self.m, self.cursor % self.m);
+        let w = &mut self.words[rec * self.mw + key / 64];
+        let mask = 1u64 << (key % 64);
+        if bit {
+            *w |= mask;
+        } else {
+            *w &= !mask;
+        }
         self.cursor += 1;
     }
 
@@ -49,10 +70,37 @@ impl RowBuffer {
         }
     }
 
+    /// Deposit one record's pre-packed match row (`ceil(m/64)` words, as
+    /// produced by [`crate::bic::cam::Cam::match_packed_into`]) — the
+    /// allocation-free hot path. Must land on a record boundary; bits
+    /// past `m` in the last word must be zero.
+    pub fn push_record_words(&mut self, row: &[u64]) {
+        assert_eq!(row.len(), self.mw, "packed row width mismatch");
+        assert!(self.cursor % self.m == 0, "push_record_words mid-record");
+        let rec = self.cursor / self.m;
+        assert!(rec < self.n, "buffer overflow");
+        // When m % 64 != 0 there is always a last word to check.
+        debug_assert!(
+            self.m % 64 == 0 || row[self.mw - 1] >> (self.m % 64) == 0,
+            "tail bits past m must be zero"
+        );
+        self.words[rec * self.mw..(rec + 1) * self.mw].copy_from_slice(row);
+        self.cursor += self.m;
+    }
+
+    /// Zero-fill the remaining record rows (short-batch padding: the chip
+    /// clocks padding records with a cleared CAM, matching nothing).
+    pub fn pad_to_full(&mut self) {
+        assert!(self.cursor % self.m == 0, "pad_to_full mid-record");
+        let rec = self.cursor / self.m;
+        self.words[rec * self.mw..].fill(0);
+        self.cursor = self.n * self.m;
+    }
+
     /// True when all `N*M` bits have been written.
     #[inline]
     pub fn is_full(&self) -> bool {
-        self.cursor == self.bits.len()
+        self.cursor == self.n * self.m
     }
 
     /// Number of complete record rows currently resident.
@@ -65,14 +113,49 @@ impl RowBuffer {
     #[inline]
     pub fn get(&self, record: usize, key: usize) -> bool {
         assert!(record < self.n && key < self.m, "index out of range");
-        self.bits[record * self.m + key]
+        (self.words[record * self.mw + key / 64] >> (key % 64)) & 1 == 1
     }
 
-    /// Drain: hand the contents to the TM and reset for the next batch.
-    pub fn drain(&mut self) -> Vec<bool> {
+    /// Borrow the packed contents (record-major, `n * ceil(m/64)` words)
+    /// for the TM — the zero-copy drain the hot path uses.
+    pub fn packed(&self) -> &[u64] {
+        assert!(self.is_full(), "drain before full");
+        &self.words
+    }
+
+    /// Reset for the next batch, zeroing the storage in place (no
+    /// allocation; the chip's drain-complete control pulse).
+    pub fn reset(&mut self) {
+        self.words.fill(0);
+        self.cursor = 0;
+    }
+
+    /// Rewind the fill cursor without clearing storage — for word-level
+    /// writers that overwrite every row ([`RowBuffer::push_record_words`]
+    /// plus [`RowBuffer::pad_to_full`] cover every word, so the zero-fill
+    /// of [`RowBuffer::reset`] would be redundant write traffic).
+    pub fn rewind(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// Drain to owned packed words and reset for the next batch.
+    pub fn drain_packed(&mut self) -> Vec<u64> {
         assert!(self.is_full(), "drain before full");
         self.cursor = 0;
-        std::mem::replace(&mut self.bits, vec![false; self.n * self.m])
+        std::mem::replace(&mut self.words, vec![0; self.n * self.mw])
+    }
+
+    /// Drain to record-major bools (the scalar reference path).
+    pub fn drain_bools(&mut self) -> Vec<bool> {
+        assert!(self.is_full(), "drain before full");
+        let bits = (0..self.n * self.m)
+            .map(|c| (self.words[(c / self.m) * self.mw + (c % self.m) / 64]
+                >> ((c % self.m) % 64))
+                & 1
+                == 1)
+            .collect();
+        self.reset();
+        bits
     }
 }
 
@@ -91,6 +174,24 @@ mod tests {
         assert!(b.get(0, 0));
         assert!(!b.get(0, 1));
         assert!(b.get(1, 1));
+        assert_eq!(b.packed(), &[0b101, 0b010]);
+    }
+
+    #[test]
+    fn packed_rows_match_serial_pushes() {
+        let mut serial = RowBuffer::new(2, 70);
+        let mut word_wise = RowBuffer::new(2, 70);
+        for rec in 0..2u64 {
+            let bools: Vec<bool> =
+                (0..70).map(|i| (i + rec as usize) % 3 == 0).collect();
+            let mut packed = [0u64; 2];
+            for (i, &v) in bools.iter().enumerate() {
+                packed[i / 64] |= (v as u64) << (i % 64);
+            }
+            serial.push_record(&bools);
+            word_wise.push_record_words(&packed);
+        }
+        assert_eq!(serial.packed(), word_wise.packed());
     }
 
     #[test]
@@ -106,19 +207,51 @@ mod tests {
     fn early_drain_panics() {
         let mut b = RowBuffer::new(2, 2);
         b.push(true);
-        b.drain();
+        b.drain_packed();
+    }
+
+    #[test]
+    #[should_panic(expected = "mid-record")]
+    fn packed_push_mid_record_panics() {
+        let mut b = RowBuffer::new(2, 2);
+        b.push(true);
+        b.push_record_words(&[0]);
     }
 
     #[test]
     fn drain_resets() {
         let mut b = RowBuffer::new(1, 2);
         b.push_record(&[true, true]);
-        let bits = b.drain();
-        assert_eq!(bits, vec![true, true]);
+        let words = b.drain_packed();
+        assert_eq!(words, vec![0b11]);
         assert!(!b.is_full());
         assert_eq!(b.rows_filled(), 0);
         b.push_record(&[false, true]);
         assert!(!b.get(0, 0) && b.get(0, 1));
+    }
+
+    #[test]
+    fn drain_bools_roundtrips() {
+        let mut b = RowBuffer::new(2, 3);
+        b.push_record(&[true, false, true]);
+        b.push_record(&[false, true, false]);
+        assert_eq!(
+            b.drain_bools(),
+            vec![true, false, true, false, true, false]
+        );
+        assert_eq!(b.rows_filled(), 0, "drain_bools resets");
+    }
+
+    #[test]
+    fn pad_to_full_zeroes_remaining_rows() {
+        let mut b = RowBuffer::new(3, 2);
+        b.push_record(&[true, true]);
+        b.pad_to_full();
+        assert!(b.is_full());
+        assert!(b.get(0, 0) && b.get(0, 1));
+        for rec in 1..3 {
+            assert!(!b.get(rec, 0) && !b.get(rec, 1), "padding record {rec}");
+        }
     }
 
     #[test]

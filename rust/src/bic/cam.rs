@@ -90,9 +90,31 @@ impl Cam {
     }
 
     /// Convenience: stream all keys and collect the match bits
-    /// (the full per-record CAM pass).
+    /// (the full per-record CAM pass). Scalar reference path; the hot
+    /// path is [`Cam::match_packed_into`].
     pub fn match_all(&self, keys: &[i32]) -> Vec<bool> {
         keys.iter().map(|&k| self.matches(k)).collect()
+    }
+
+    /// Stream all keys and deposit the match bits packed LSB-first into
+    /// `out` (`ceil(keys.len()/64)` words, key `i` at word `i/64`, bit
+    /// `i%64` — the `RowBuffer`/`transpose_packed` row layout). Zero
+    /// allocations: the caller owns and reuses the scratch row, so the
+    /// per-record cost is exactly one presence lookup per key plus one
+    /// word store per 64 keys.
+    pub fn match_packed_into(&self, keys: &[i32], out: &mut [u64]) {
+        assert_eq!(
+            out.len(),
+            keys.len().div_ceil(64),
+            "match row width mismatch"
+        );
+        for (w, chunk) in out.iter_mut().zip(keys.chunks(64)) {
+            let mut bits = 0u64;
+            for (j, &k) in chunk.iter().enumerate() {
+                bits |= (self.matches(k) as u64) << j;
+            }
+            *w = bits;
+        }
     }
 }
 
@@ -153,6 +175,40 @@ mod tests {
             cam.match_all(&[9, 5, 1, 200]),
             vec![true, true, false, true]
         );
+    }
+
+    #[test]
+    fn packed_match_equals_scalar_match_all() {
+        let mut cam = Cam::new(16);
+        cam.load(&[3, 77, 200, 5, 9]);
+        // Key widths straddling the 64-bit word boundary, incl. ragged.
+        for mk in [1usize, 8, 63, 64, 65, 130] {
+            let keys: Vec<i32> = (0..mk).map(|i| (i * 7 % 256) as i32).collect();
+            let scalar = cam.match_all(&keys);
+            let mut packed = vec![0u64; mk.div_ceil(64)];
+            cam.match_packed_into(&keys, &mut packed);
+            for (i, &bit) in scalar.iter().enumerate() {
+                assert_eq!(
+                    (packed[i / 64] >> (i % 64)) & 1 == 1,
+                    bit,
+                    "m={mk} key {i}"
+                );
+            }
+            // Bits past the key count must be zero (RowBuffer contract).
+            if mk % 64 != 0 {
+                assert_eq!(packed[mk / 64] >> (mk % 64), 0, "m={mk} tail");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_match_reuses_dirty_scratch() {
+        // The scratch row is overwritten, not OR-ed: stale bits must die.
+        let mut cam = Cam::new(4);
+        cam.load(&[1, 2, 3, 4]);
+        let mut row = [u64::MAX; 1];
+        cam.match_packed_into(&[9, 9, 9], &mut row);
+        assert_eq!(row[0], 0, "stale scratch bits must be cleared");
     }
 
     #[test]

@@ -6,10 +6,10 @@
 //! (`sim::core_sim`), and the Python kernels (transitively, through the
 //! shared packed-word format).
 
-use super::bitmap::BitmapIndex;
+use super::bitmap::{words_for, BitmapIndex};
 use super::buffer::RowBuffer;
 use super::cam::{Cam, PAD};
-use super::transpose::transpose;
+use super::transpose::{transpose, transpose_packed};
 
 /// Static configuration of a BIC core: `n` records per batch, `w` words
 /// per record, `m` keys.
@@ -66,15 +66,28 @@ impl BicConfig {
 }
 
 /// One functional BIC core.
+///
+/// Owns its scratch state (CAM, row buffer, packed match row), so steady-
+/// state indexing performs **zero heap allocations per record**: each
+/// record costs one CAM load, one packed key pass, and one `ceil(m/64)`-
+/// word copy into the buffer; the TM drain is the 64x64 block transpose.
 #[derive(Debug)]
 pub struct BicCore {
     cfg: BicConfig,
     cam: Cam,
+    buffer: RowBuffer,
+    /// Reusable packed match row: `ceil(m/64)` words.
+    match_row: Vec<u64>,
 }
 
 impl BicCore {
     pub fn new(cfg: BicConfig) -> Self {
-        Self { cfg, cam: Cam::new(cfg.w_words) }
+        Self {
+            cfg,
+            cam: Cam::new(cfg.w_words),
+            buffer: RowBuffer::new(cfg.n_records, cfg.m_keys),
+            match_row: vec![0; words_for(cfg.m_keys)],
+        }
     }
 
     #[inline]
@@ -82,10 +95,7 @@ impl BicCore {
         &self.cfg
     }
 
-    /// Index one batch: `records` (up to `n` of up to `w` words each,
-    /// short batches padded) by `keys` (exactly `m`). Returns the
-    /// `M x N` bitmap index.
-    pub fn index(&mut self, records: &[Vec<i32>], keys: &[i32]) -> BitmapIndex {
+    fn check_batch(&self, records: &[Vec<i32>], keys: &[i32]) {
         let BicConfig { n_records: n, m_keys: m, .. } = self.cfg;
         assert!(
             records.len() <= n,
@@ -94,21 +104,49 @@ impl BicCore {
         );
         assert_eq!(keys.len(), m, "expected exactly {m} keys");
         assert!(keys.iter().all(|&k| k != PAD), "PAD is not a valid key");
+    }
 
-        let mut buffer = RowBuffer::new(n, m);
+    /// Index one batch: `records` (up to `n` of up to `w` words each,
+    /// short batches padded) by `keys` (exactly `m`). Returns the
+    /// `M x N` bitmap index.
+    ///
+    /// Word-parallel hot path: records stream through the CAM into the
+    /// packed row buffer with no intermediate `Vec<bool>`, then the TM
+    /// block-transposes 64x64 tiles.
+    pub fn index(&mut self, records: &[Vec<i32>], keys: &[i32]) -> BitmapIndex {
+        self.check_batch(records, keys);
+        let BicConfig { n_records: n, m_keys: m, .. } = self.cfg;
+        self.buffer.rewind();
         for record in records {
             // Step 1: record into the CAM.
             self.cam.load(record);
-            // Step 2+3: stream keys, write match bits into the buffer row.
-            buffer.push_record(&self.cam.match_all(keys));
+            // Step 2+3: stream keys; match bits land packed in the
+            // reusable scratch row, then copy word-wise into the buffer.
+            self.cam.match_packed_into(keys, &mut self.match_row);
+            self.buffer.push_record_words(&self.match_row);
         }
         // Short batch: remaining rows are all-zero (empty CAM semantics —
         // the chip would simply clock padding records through).
+        self.buffer.pad_to_full();
+        // Step 4: TM swaps rows to columns, one 64x64 tile at a time.
+        transpose_packed(self.buffer.packed(), n, m)
+    }
+
+    /// Scalar reference implementation — the pre-word-parallel pipeline
+    /// (bool rows, per-bit transpose), retained verbatim so differential
+    /// tests can pin [`BicCore::index`] to it bit-for-bit.
+    pub fn index_scalar(&mut self, records: &[Vec<i32>], keys: &[i32]) -> BitmapIndex {
+        self.check_batch(records, keys);
+        let BicConfig { n_records: n, m_keys: m, .. } = self.cfg;
+        let mut buffer = RowBuffer::new(n, m);
+        for record in records {
+            self.cam.load(record);
+            buffer.push_record(&self.cam.match_all(keys));
+        }
         for _ in records.len()..n {
             buffer.push_record(&vec![false; m]);
         }
-        // Step 4: TM swaps rows to columns.
-        transpose(&buffer.drain(), n, m)
+        transpose(&buffer.drain_bools(), n, m)
     }
 }
 
@@ -172,6 +210,22 @@ mod tests {
     fn wrong_key_count_rejected() {
         let cfg = BicConfig { n_records: 1, w_words: 1, m_keys: 2 };
         BicCore::new(cfg).index(&[rec(&[1])], &[1]);
+    }
+
+    #[test]
+    fn word_parallel_index_matches_scalar_reference() {
+        // Geometries straddling the 64-record/64-key tile boundaries.
+        for &(n, w, m) in &[(3usize, 2usize, 2usize), (16, 32, 8), (65, 4, 3), (70, 3, 66)] {
+            let cfg = BicConfig { n_records: n, w_words: w, m_keys: m };
+            let mut core = BicCore::new(cfg);
+            let records: Vec<Vec<i32>> = (0..n - 1)
+                .map(|j| (0..w).map(|i| ((j * 31 + i * 7) % 256) as i32).collect())
+                .collect();
+            let keys: Vec<i32> = (0..m).map(|i| ((i * 13) % 256) as i32).collect();
+            let fast = core.index(&records, &keys);
+            let slow = core.index_scalar(&records, &keys);
+            assert_eq!(fast, slow, "cfg {cfg:?}");
+        }
     }
 
     #[test]

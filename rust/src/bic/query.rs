@@ -102,27 +102,36 @@ impl Query {
         match self {
             Query::Attr(i) => bi.row(*i).clone(),
             Query::And(xs) => {
-                let mut acc = Bitmap::ones(n);
+                // Leaf rows borrow the index directly and run through the
+                // fused multi-operand kernel: one pass over each cache
+                // block, dead blocks skip all remaining operands (§Perf).
+                let mut leaf_rows: Vec<&Bitmap> = Vec::new();
+                let mut complex: Vec<&Query> = Vec::new();
                 for q in xs {
+                    match q {
+                        Query::Attr(i) => leaf_rows.push(bi.row(*i)),
+                        other => complex.push(other),
+                    }
+                }
+                let mut acc = match leaf_rows.split_first() {
+                    None => Bitmap::ones(n),
+                    Some((first, rest)) => first.and_all(rest),
+                };
+                for q in complex {
                     // Short-circuit: an empty accumulator stays empty.
                     // (`is_zero` exits on the first nonzero word; a full
                     // `count_ones` scan here cost ~15% of query time.)
                     if acc.is_zero() {
                         break;
                     }
-                    // Leaf fast paths borrow the index row directly —
-                    // no clone of the full row per term (§Perf).
-                    match q {
-                        Query::Attr(i) => acc.and_assign(bi.row(*i)),
-                        Query::Not(inner) => {
-                            if let Query::Attr(i) = **inner {
-                                acc.and_not_assign(bi.row(i));
-                            } else {
-                                acc.and_assign(&q.eval_unchecked(bi));
-                            }
+                    if let Query::Not(inner) = q {
+                        // ANDNOT leaf fast path: no clone of the row.
+                        if let Query::Attr(i) = **inner {
+                            acc.and_not_assign(bi.row(i));
+                            continue;
                         }
-                        _ => acc.and_assign(&q.eval_unchecked(bi)),
                     }
+                    acc.and_assign(&q.eval_unchecked(bi));
                 }
                 acc
             }
@@ -162,12 +171,17 @@ pub fn conjunctive(bi: &BitmapIndex, include: &[bool], exclude: &[bool]) -> Bitm
     assert_eq!(include.len(), bi.num_attrs(), "include mask width");
     assert_eq!(exclude.len(), bi.num_attrs(), "exclude mask width");
     let n = bi.num_objects();
-    let mut acc = Bitmap::ones(n);
-    for (i, &inc) in include.iter().enumerate() {
-        if inc {
-            acc.and_assign(bi.row(i));
-        }
-    }
+    // Fused include pass: one cache-block sweep over all selected rows.
+    let inc_rows: Vec<&Bitmap> = include
+        .iter()
+        .enumerate()
+        .filter(|(_, &inc)| inc)
+        .map(|(i, _)| bi.row(i))
+        .collect();
+    let mut acc = match inc_rows.split_first() {
+        None => Bitmap::ones(n),
+        Some((first, rest)) => first.and_all(rest),
+    };
     for (i, &exc) in exclude.iter().enumerate() {
         if exc {
             acc.and_not_assign(bi.row(i));

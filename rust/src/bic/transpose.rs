@@ -5,11 +5,20 @@
 //! read/write sequencing; transpose unit = the actual row/column swap).
 //! The packed-word output here is the same layout the AOT artifact
 //! produces, so all three implementations are word-for-word comparable.
+//!
+//! Two implementations:
+//! - [`transpose`] — the retained scalar reference: one bit per step,
+//!   structured exactly like the chip's serial datapath. Differential
+//!   tests pin the fast path to it.
+//! - [`transpose_packed`] — the hot path: a Hacker's-Delight-style 64x64
+//!   bit-matrix block transpose over the packed row buffer, 64 bits per
+//!   XOR (adapted to this crate's LSB-first bit order), skipping all-zero
+//!   blocks entirely.
 
-use super::bitmap::{Bitmap, BitmapIndex};
+use super::bitmap::{words_for, Bitmap, BitmapIndex};
 
-/// Transpose drained buffer contents (record-major `N x M`) into a
-/// key-major `M x N` [`BitmapIndex`].
+/// Transpose drained buffer contents (record-major `N x M` bools) into a
+/// key-major `M x N` [`BitmapIndex`]. Scalar reference path.
 pub fn transpose(bits: &[bool], n: usize, m: usize) -> BitmapIndex {
     assert_eq!(bits.len(), n * m, "bit count mismatch");
     let mut rows = Vec::with_capacity(m);
@@ -17,7 +26,7 @@ pub fn transpose(bits: &[bool], n: usize, m: usize) -> BitmapIndex {
         let mut row = Bitmap::zeros(n);
         for j in 0..n {
             if bits[j * m + i] {
-                row.set(j, true);
+                row.set_unchecked(j);
             }
         }
         rows.push(row);
@@ -36,6 +45,93 @@ pub fn untranspose(bi: &BitmapIndex) -> Vec<bool> {
         }
     }
     bits
+}
+
+/// In-place 64x64 bit-matrix transpose, LSB-first: bit `c` of `a[r]` on
+/// entry equals bit `r` of `a[c]` on exit. The classic recursive
+/// block-swap (Hacker's Delight 7-3) with the shift directions mirrored
+/// for LSB-first bit numbering: six rounds of masked XOR swaps, each
+/// exchanging the off-diagonal j x j sub-blocks.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    // Mask of bit positions p with (p & j) == 0 — the "low" half columns
+    // at the current recursion level.
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            // Swap element (row k, col p+j) with (row k+j, col p) for
+            // every masked position p, 64 positions per XOR.
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Pack record-major bools into the packed row-buffer layout consumed by
+/// [`transpose_packed`]: record `j` occupies `ceil(m/64)` u64 words, key
+/// `i` at word `i/64`, bit `i%64`. (Test/bench convenience; the hot path
+/// gets this layout directly from [`crate::bic::buffer::RowBuffer`].)
+pub fn pack_rows(bits: &[bool], n: usize, m: usize) -> Vec<u64> {
+    assert_eq!(bits.len(), n * m, "bit count mismatch");
+    let mw = words_for(m);
+    let mut rows = vec![0u64; n * mw];
+    for j in 0..n {
+        for i in 0..m {
+            if bits[j * m + i] {
+                rows[j * mw + i / 64] |= 1u64 << (i % 64);
+            }
+        }
+    }
+    rows
+}
+
+/// Word-parallel transpose of a packed record-major buffer (`n` records x
+/// `ceil(m/64)` u64 words each, as produced by `RowBuffer`) into the
+/// key-major `M x N` [`BitmapIndex`].
+///
+/// Works in 64x64 tiles: gather 64 record words for one key-word column,
+/// [`transpose64`] the tile, scatter the 64 resulting record-masks into
+/// the output rows. All-zero tiles (common for selective keys) are
+/// detected during the gather and skipped before the transpose.
+pub fn transpose_packed(rows: &[u64], n: usize, m: usize) -> BitmapIndex {
+    let mw = words_for(m);
+    assert_eq!(rows.len(), n * mw, "packed row-buffer shape mismatch");
+    let nw = words_for(n);
+    // Output: m rows of nw u64 words, row-major.
+    let mut out = vec![0u64; m * nw];
+    let mut tile = [0u64; 64];
+    for jb in 0..nw {
+        let rec_base = jb * 64;
+        let rec_count = 64.min(n - rec_base);
+        for ib in 0..mw {
+            let mut any = 0u64;
+            for r in 0..rec_count {
+                let w = rows[(rec_base + r) * mw + ib];
+                tile[r] = w;
+                any |= w;
+            }
+            if any == 0 {
+                continue; // tile contributes nothing; output is pre-zeroed
+            }
+            for t in tile.iter_mut().skip(rec_count) {
+                *t = 0;
+            }
+            transpose64(&mut tile);
+            let key_count = 64.min(m - ib * 64);
+            for (c, &w) in tile.iter().enumerate().take(key_count) {
+                out[(ib * 64 + c) * nw + jb] = w;
+            }
+        }
+    }
+    let row_bitmaps = (0..m)
+        .map(|i| Bitmap::from_words(n, out[i * nw..(i + 1) * nw].to_vec()))
+        .collect();
+    BitmapIndex::from_rows(row_bitmaps)
 }
 
 #[cfg(test)]
@@ -65,15 +161,83 @@ mod tests {
     }
 
     #[test]
+    fn transpose64_matches_definition() {
+        // Pseudo-random 64x64 tile; check B[c] bit r == A[r] bit c.
+        let mut a = [0u64; 64];
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        for w in a.iter_mut() {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *w = x;
+        }
+        let orig = a;
+        transpose64(&mut a);
+        for r in 0..64 {
+            for c in 0..64 {
+                assert_eq!(
+                    (a[c] >> r) & 1,
+                    (orig[r] >> c) & 1,
+                    "tile mismatch at ({r},{c})"
+                );
+            }
+        }
+        // Involution: transposing twice restores the original.
+        transpose64(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn packed_matches_scalar_reference() {
+        // Geometries straddling the 64-bit tile boundaries, including
+        // ragged tails on both axes.
+        for &(n, m) in &[
+            (1usize, 1usize),
+            (2, 3),
+            (16, 8),
+            (63, 64),
+            (64, 63),
+            (64, 64),
+            (65, 65),
+            (100, 130),
+            (130, 100),
+        ] {
+            let bits: Vec<bool> =
+                (0..n * m).map(|i| (i * 2654435761usize) % 7 < 3).collect();
+            let scalar = transpose(&bits, n, m);
+            let packed = transpose_packed(&pack_rows(&bits, n, m), n, m);
+            assert_eq!(packed, scalar, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn packed_skips_zero_tiles_correctly() {
+        // All-zero buffer: output must be all-zero rows of the right shape.
+        let (n, m) = (130, 70);
+        let bi = transpose_packed(&vec![0u64; n * words_for(m)], n, m);
+        assert_eq!(bi.num_attrs(), m);
+        assert_eq!(bi.num_objects(), n);
+        for i in 0..m {
+            assert!(bi.row(i).is_zero(), "row {i}");
+        }
+    }
+
+    #[test]
     fn empty_dimensions() {
         let bi = transpose(&[], 0, 0);
         assert_eq!(bi.num_attrs(), 0);
         assert_eq!(bi.num_objects(), 0);
+        let bi = transpose_packed(&[], 0, 0);
+        assert_eq!(bi.num_attrs(), 0);
     }
 
     #[test]
     #[should_panic(expected = "bit count mismatch")]
     fn wrong_size_panics() {
         transpose(&[true], 2, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn wrong_packed_size_panics() {
+        transpose_packed(&[0u64; 3], 2, 3);
     }
 }

@@ -261,51 +261,52 @@ impl WahBitmap {
 
 }
 
-/// Extract 31-bit group `g` of a bitmap (trailing bits zero) via a u64
-/// window over the two backing words — no per-bit probing.
+/// Extract 31-bit group `g` of a bitmap (trailing bits zero) from the u64
+/// backing words — no per-bit probing. A group spans at most two words.
 #[inline]
 fn extract_group(bm: &Bitmap, g: usize) -> u32 {
     let words = bm.words();
     let start = g * GROUP_BITS;
-    let wi = start / 32;
-    let off = start % 32;
-    let lo = words[wi] as u64;
-    let hi = *words.get(wi + 1).unwrap_or(&0) as u64;
-    ((((hi << 32) | lo) >> off) as u32) & ((1u32 << GROUP_BITS) - 1)
+    let wi = start / 64;
+    let off = start % 64;
+    let mut window = words[wi] >> off;
+    if off > 0 {
+        window |= words.get(wi + 1).copied().unwrap_or(0) << (64 - off);
+    }
+    (window as u32) & ((1u32 << GROUP_BITS) - 1)
 }
 
-/// OR a 31-bit group into packed words at bit offset `start`.
+/// OR a 31-bit group into packed u64 words at bit offset `start`.
 #[inline]
-fn or_group(words: &mut [u32], start: usize, group: u32) {
-    let wi = start / 32;
-    let off = start % 32;
-    words[wi] |= group << off;
-    // The group spills (off - 1) bits into the next word (absent for the
-    // trailing partial group, whose masked bits all fit).
-    if off > 1 && wi + 1 < words.len() {
-        words[wi + 1] |= group >> (32 - off);
+fn or_group(words: &mut [u64], start: usize, group: u32) {
+    let wi = start / 64;
+    let off = start % 64;
+    words[wi] |= (group as u64) << off;
+    // The group spills into the next word only when off + 31 > 64 (absent
+    // for the trailing partial group, whose masked bits all fit).
+    if off > 64 - GROUP_BITS && wi + 1 < words.len() {
+        words[wi + 1] |= (group as u64) >> (64 - off);
     }
 }
 
 /// Set `len` consecutive bits starting at `start`, word-at-a-time.
-fn set_ones_range(words: &mut [u32], start: usize, len: usize) {
+fn set_ones_range(words: &mut [u64], start: usize, len: usize) {
     if len == 0 {
         return;
     }
     let end = start + len; // exclusive
-    let (w0, b0) = (start / 32, start % 32);
-    let (w1, b1) = (end / 32, end % 32);
+    let (w0, b0) = (start / 64, start % 64);
+    let (w1, b1) = (end / 64, end % 64);
     if w0 == w1 {
-        let mask = (((1u64 << (b1 - b0)) - 1) << b0) as u32;
-        words[w0] |= mask;
+        words[w0] |= (((1u128 << (b1 - b0)) - 1) << b0) as u64;
         return;
     }
-    words[w0] |= u32::MAX << b0;
+    words[w0] |= u64::MAX << b0;
     for w in words.iter_mut().take(w1).skip(w0 + 1) {
-        *w = u32::MAX;
+        *w = u64::MAX;
     }
     if b1 > 0 {
-        words[w1] |= (1u32 << b1) - 1;
+        words[w1] |= (1u64 << b1) - 1;
     }
 }
 

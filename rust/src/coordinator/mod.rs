@@ -6,6 +6,10 @@
 //! models: compute time comes from `bic::BicConfig::cycles_per_batch` and
 //! the delay model, energy from `power`, and correctness from the golden
 //! model (or, on the PJRT path, the AOT artifact — see the examples).
+//!
+//! For real host-core scaling (as opposed to simulated chip cores), the
+//! [`sharding`] module fans a batch trace over scoped worker threads,
+//! one golden `BicCore` per shard, with a deterministic in-order merge.
 
 pub mod batch;
 pub mod extmem;
@@ -14,6 +18,7 @@ pub mod policy;
 pub mod power_mgr;
 pub mod scheduler;
 pub mod service;
+pub mod sharding;
 pub mod workload;
 
 pub use batch::{Batch, CompletedBatch};
@@ -23,4 +28,5 @@ pub use policy::Policy;
 pub use power_mgr::{CoreState, EnergyLedger, PowerManager};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use service::IndexService;
+pub use sharding::{index_batches_sharded, ShardedIndexer};
 pub use workload::{ArrivalProcess, ContentDist, WorkloadGen};

@@ -1,0 +1,157 @@
+//! Multi-core batch sharding: the host-side analogue of the paper's
+//! multi-core FPGA ancestor (Fig. 4's Z-core bank, arXiv:1803.11207) —
+//! real OS threads instead of simulated cores.
+//!
+//! A batch trace is split into contiguous shards, one scoped worker
+//! thread per shard, each owning a private [`BicCore`] (mirroring the
+//! chip's per-core CAM/buffer/TM — no shared mutable state, no locks on
+//! the hot path). The merge is deterministic: results are concatenated in
+//! shard order, so the output is byte-identical to a sequential run
+//! regardless of the shard count or thread interleaving.
+
+use std::thread;
+
+use super::batch::Batch;
+use crate::bic::bitmap::BitmapIndex;
+use crate::bic::{BicConfig, BicCore};
+
+/// A fixed-geometry indexer that fans batches out over host cores.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedIndexer {
+    cfg: BicConfig,
+    shards: usize,
+}
+
+impl ShardedIndexer {
+    /// `shards` worker threads (>= 1), each with its own [`BicCore`].
+    pub fn new(cfg: BicConfig, shards: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        Self { cfg, shards }
+    }
+
+    /// One shard per available host core.
+    pub fn with_host_parallelism(cfg: BicConfig) -> Self {
+        let shards = thread::available_parallelism().map_or(1, |n| n.get());
+        Self::new(cfg, shards)
+    }
+
+    #[inline]
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    #[inline]
+    pub fn config(&self) -> &BicConfig {
+        &self.cfg
+    }
+
+    /// Index a whole batch trace across the shard workers. Returns one
+    /// [`BitmapIndex`] per input batch, in input order (deterministic
+    /// merge). Panics on a batch that does not fit the core geometry,
+    /// exactly like [`super::Scheduler`].
+    pub fn index_batches(&self, batches: &[Batch]) -> Vec<BitmapIndex> {
+        for b in batches {
+            b.check(&self.cfg)
+                .unwrap_or_else(|e| panic!("invalid batch: {e}"));
+        }
+        if batches.is_empty() {
+            return Vec::new();
+        }
+        let cfg = self.cfg;
+        // Contiguous near-equal slices; never more shards than batches.
+        let shards = self.shards.min(batches.len());
+        let chunk = batches.len().div_ceil(shards);
+        let shard_results: Vec<Vec<BitmapIndex>> = thread::scope(|s| {
+            let handles: Vec<_> = batches
+                .chunks(chunk)
+                .map(|slice| {
+                    s.spawn(move || {
+                        let mut core = BicCore::new(cfg);
+                        slice
+                            .iter()
+                            .map(|b| core.index(&b.records, &b.keys))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        shard_results.into_iter().flatten().collect()
+    }
+}
+
+/// Convenience: shard `batches` over `shards` workers with geometry `cfg`.
+pub fn index_batches_sharded(
+    cfg: BicConfig,
+    batches: &[Batch],
+    shards: usize,
+) -> Vec<BitmapIndex> {
+    ShardedIndexer::new(cfg, shards).index_batches(batches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload::{ContentDist, WorkloadGen};
+
+    fn trace(n: usize, seed: u64) -> Vec<Batch> {
+        let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, seed);
+        (0..n).map(|i| g.batch_at(i as f64)).collect()
+    }
+
+    #[test]
+    fn matches_sequential_golden_model() {
+        let batches = trace(23, 11);
+        let mut core = BicCore::new(BicConfig::CHIP);
+        let expect: Vec<BitmapIndex> =
+            batches.iter().map(|b| core.index(&b.records, &b.keys)).collect();
+        for shards in [1, 2, 3, 8] {
+            let got = index_batches_sharded(BicConfig::CHIP, &batches, shards);
+            assert_eq!(got, expect, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn merge_is_deterministic_across_shard_counts() {
+        let batches = trace(17, 42);
+        let one = index_batches_sharded(BicConfig::CHIP, &batches, 1);
+        let four = index_batches_sharded(BicConfig::CHIP, &batches, 4);
+        let many = index_batches_sharded(BicConfig::CHIP, &batches, 64);
+        assert_eq!(one, four);
+        assert_eq!(one, many, "more shards than batches must still merge");
+    }
+
+    #[test]
+    fn empty_trace_is_empty() {
+        assert!(index_batches_sharded(BicConfig::CHIP, &[], 4).is_empty());
+    }
+
+    #[test]
+    fn host_parallelism_constructor_is_sane() {
+        let idx = ShardedIndexer::with_host_parallelism(BicConfig::CHIP);
+        assert!(idx.shards() >= 1);
+        let batches = trace(3, 7);
+        assert_eq!(idx.index_batches(&batches).len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid batch")]
+    fn rejects_misshapen_batches() {
+        let bad = Batch {
+            id: 0,
+            arrival: 0.0,
+            records: vec![vec![1; 99]],
+            keys: vec![1; 8],
+        };
+        index_batches_sharded(BicConfig::CHIP, &[bad], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected() {
+        ShardedIndexer::new(BicConfig::CHIP, 0);
+    }
+}

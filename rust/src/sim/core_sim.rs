@@ -12,7 +12,7 @@ use super::buffer_unit::BufferUnit;
 use super::cam_array::CamArray;
 use super::clock_gate::ClockGate;
 use super::transpose_unit::TransposeUnit;
-use crate::bic::bitmap::{words_for, BitmapIndex};
+use crate::bic::bitmap::{packed_words_for, BitmapIndex};
 use crate::bic::cam::PAD;
 use crate::bic::BicConfig;
 
@@ -142,7 +142,7 @@ impl CoreSim {
         let n = self.cfg.n_records;
         let w = self.cfg.w_words;
         let m = self.cfg.m_keys;
-        let nw = words_for(n);
+        let nw = packed_words_for(n);
         if !matches!(self.state, State::Idle | State::Done) {
             self.cycles_this_batch += 1;
             self.control_toggles += 1; // FSM state register clocks over

@@ -12,7 +12,7 @@
 
 use super::activity::BlockActivity;
 use super::buffer_unit::BufferUnit;
-use crate::bic::bitmap::{words_for, BitmapIndex};
+use crate::bic::bitmap::{packed_words_for, BitmapIndex};
 
 /// TM datapath for an `N x M` buffer.
 #[derive(Clone, Debug)]
@@ -27,7 +27,7 @@ pub struct TransposeUnit {
 impl TransposeUnit {
     pub fn new(n: usize, m: usize) -> Self {
         assert!(m >= 1 && m <= 64, "key count out of range");
-        Self { n, m, bank: vec![0; m * words_for(n)], activity: BlockActivity::default() }
+        Self { n, m, bank: vec![0; m * packed_words_for(n)], activity: BlockActivity::default() }
     }
 
     /// Register bits of the transpose bank (part of the Fig. 5 census on
@@ -38,7 +38,7 @@ impl TransposeUnit {
 
     /// Drain cycle count for this geometry.
     pub fn drain_cycles(&self) -> u64 {
-        (self.n + self.m * words_for(self.n)) as u64
+        (self.n + self.m * packed_words_for(self.n)) as u64
     }
 
     /// Clear the register bank — must precede each batch's phase 1, since
@@ -51,7 +51,7 @@ impl TransposeUnit {
     /// Phase 1, one cycle: absorb buffer row `j` (M bits) into the bank.
     pub fn absorb_row(&mut self, j: usize, row: u64) {
         assert!(j < self.n, "row {j} out of range");
-        let nw = words_for(self.n);
+        let nw = packed_words_for(self.n);
         for i in 0..self.m {
             if (row >> i) & 1 == 1 {
                 self.bank[i * nw + j / 32] |= 1u32 << (j % 32);
@@ -63,7 +63,7 @@ impl TransposeUnit {
 
     /// Phase 2, one cycle per word: emit packed word `k` (row-major).
     pub fn emit_word(&mut self, k: usize) -> u32 {
-        let nw = words_for(self.n);
+        let nw = packed_words_for(self.n);
         assert!(k < self.m * nw, "word index out of range");
         self.activity.reads += 1;
         self.bank[k]
@@ -80,7 +80,7 @@ impl TransposeUnit {
             let row = buffer.read_row(j);
             self.absorb_row(j, row);
         }
-        let nw = words_for(self.n);
+        let nw = packed_words_for(self.n);
         let mut packed = Vec::with_capacity(self.m * nw);
         for k in 0..self.m * nw {
             packed.push(self.emit_word(k));

@@ -1,8 +1,11 @@
 //! Property tests: bitmap algebra laws, WAH round-trips, transpose
-//! involution — the invariants the query engine's correctness rests on.
+//! involution — the invariants the query engine's correctness rests on —
+//! plus differential pins of the word-parallel kernels (`and_all`, the
+//! 64x64 block transpose, the packed u32 interchange) to their retained
+//! scalar reference paths, across ragged tail widths and empty bitmaps.
 
-use sotb_bic::bic::bitmap::{Bitmap, BitmapIndex};
-use sotb_bic::bic::transpose::{transpose, untranspose};
+use sotb_bic::bic::bitmap::{packed_words_for, Bitmap, BitmapIndex};
+use sotb_bic::bic::transpose::{pack_rows, transpose, transpose_packed, untranspose};
 use sotb_bic::bic::WahBitmap;
 use sotb_bic::substrate::proptest::{check, Gen};
 
@@ -162,6 +165,72 @@ fn wah_runs_compress_well() {
                 w.compressed_bytes(),
                 w.uncompressed_bytes()
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn and_all_matches_pairwise_chain_arbitrary() {
+    check("and-all-fused", 0xDA, 200, |g| {
+        // Lengths biased around the 512-bit cache-block boundary so the
+        // block-skip path and the remainder tail both get exercised.
+        let n = g.size(1_200) + 1;
+        let k = g.usize_in(0, 5);
+        let first = arb_bitmap(g, n);
+        let others: Vec<Bitmap> = (0..k).map(|_| arb_bitmap(g, n)).collect();
+        let refs: Vec<&Bitmap> = others.iter().collect();
+        let fused = first.and_all(&refs);
+        let mut chained = first.clone();
+        for o in &others {
+            chained.and_assign(o);
+        }
+        if fused != chained {
+            return Err(format!("and_all != chained ANDs at n={n} k={k}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_u32_interchange_roundtrip_arbitrary() {
+    check("u32-interchange", 0xDB, 200, |g| {
+        // Includes ragged tails (n % 64 != 0, n % 32 != 0) and n = 0.
+        let n = g.size(400);
+        let a = arb_bitmap(g, n);
+        let packed = a.to_packed_words();
+        if packed.len() != packed_words_for(n) {
+            return Err(format!("packed length {} at n={n}", packed.len()));
+        }
+        // Every bit must sit at the contract position: word i/32, bit i%32.
+        for i in 0..n {
+            let via_packed = (packed[i / 32] >> (i % 32)) & 1 == 1;
+            if via_packed != a.get(i) {
+                return Err(format!("bit {i} misplaced at n={n}"));
+            }
+        }
+        if Bitmap::from_packed_words(n, &packed) != a {
+            return Err(format!("roundtrip failed at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn block_transpose_matches_scalar_arbitrary() {
+    check("block-transpose", 0xDC, 150, |g| {
+        // Both axes straddle the 64-bit tile boundary, incl. ragged tails.
+        let n = g.size(150) + 1;
+        let m = g.size(150) + 1;
+        let bits: Vec<bool> = (0..n * m).map(|_| g.bool()).collect();
+        let scalar = transpose(&bits, n, m);
+        let fast = transpose_packed(&pack_rows(&bits, n, m), n, m);
+        if fast != scalar {
+            return Err(format!("packed transpose diverged at n={n} m={m}"));
+        }
+        // And the interchange words must agree too (layout, not just Eq).
+        if fast.to_packed() != scalar.to_packed() {
+            return Err(format!("packed words diverged at n={n} m={m}"));
         }
         Ok(())
     });

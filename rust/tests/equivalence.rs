@@ -4,6 +4,7 @@
 //! claim (DESIGN.md §3).
 
 use sotb_bic::bic::{conjunctive, BicConfig, BicCore, Query};
+use sotb_bic::coordinator::{index_batches_sharded, ContentDist, WorkloadGen};
 use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
 use sotb_bic::sim::CoreSim;
 use sotb_bic::substrate::proptest::{check, Gen};
@@ -49,6 +50,52 @@ fn golden_equals_cycle_simulator_arbitrary_geometry() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn word_parallel_index_equals_scalar_reference_arbitrary_geometry() {
+    // The word-parallel hot path (packed CAM rows + 64x64 block
+    // transpose) against the retained scalar reference pipeline, over
+    // geometries that straddle every tile boundary — including m > 64,
+    // which the cycle simulator's 64-key TM cannot reach.
+    check("word-parallel-vs-scalar", 0xE5, 40, |g| {
+        let cfg = BicConfig {
+            n_records: g.usize_in(1, 140),
+            w_words: g.usize_in(1, 48),
+            m_keys: g.usize_in(1, 140),
+        };
+        let mut core = BicCore::new(cfg);
+        let recs = arb_records(g, cfg.n_records, cfg.w_words);
+        let keys = arb_keys(g, cfg.m_keys);
+        let fast = core.index(&recs, &keys);
+        let slow = core.index_scalar(&recs, &keys);
+        if fast != slow {
+            return Err(format!("hot path diverged at cfg {cfg:?}"));
+        }
+        // The interchange artifact bytes must match too, not just Eq.
+        if fast.to_packed() != slow.to_packed() {
+            return Err(format!("packed artifact diverged at cfg {cfg:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_indexer_equals_scheduler_results() {
+    // The thread-sharded host path and the discrete-event scheduler must
+    // produce identical bitmaps for the same trace.
+    let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 0xE6);
+    let trace: Vec<_> = (0..24).map(|i| g.batch_at(i as f64 * 1e-5)).collect();
+    let sharded = index_batches_sharded(BicConfig::CHIP, &trace, 4);
+    let (_, completed) = sotb_bic::coordinator::Scheduler::new(
+        sotb_bic::coordinator::SchedulerConfig::chip_system(3),
+    )
+    .run_collect(trace);
+    assert_eq!(sharded.len(), completed.len());
+    for c in &completed {
+        let idx = c.index.as_ref().expect("compute_results defaults on");
+        assert_eq!(idx, &sharded[c.id as usize], "batch {}", c.id);
+    }
 }
 
 #[test]
@@ -108,7 +155,7 @@ fn query_three_way_equivalence() {
         let via_pjrt = qexe.eval(&bi, &include, &exclude).map_err(|e| format!("{e:#}"))?;
         // 2. Rust conjunctive engine.
         let via_conj = conjunctive(&bi, &include, &exclude);
-        if via_pjrt != via_conj.words() {
+        if via_pjrt != via_conj.to_packed_words() {
             return Err("pjrt != conjunctive".into());
         }
         // 3. Expression-tree engine.

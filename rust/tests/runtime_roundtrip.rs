@@ -124,7 +124,7 @@ fn query_artifact_matches_rust_engine() {
         // the index's invariant + exclude cannot set them).
         assert_eq!(
             via_pjrt,
-            via_rust.words(),
+            via_rust.to_packed_words(),
             "trial {trial}: query artifact != rust engine"
         );
     }
