@@ -1,9 +1,26 @@
 #!/usr/bin/env bash
-# Repo gate: format + lint (when the components are installed) and the
-# tier-1 verify command (ROADMAP.md): cargo build --release && cargo test.
-# Run from anywhere; operates on the rust/ package.
+# Repo gate: format + lint + doc (when the components are installed) and
+# the tier-1 verify command (ROADMAP.md): cargo build --release && cargo
+# test. Run from anywhere; operates on the rust/ package.
+#
+#   ci.sh           full gate (fmt, clippy, doc, build, test)
+#   ci.sh --bench   bench-smoke mode: short hotpath + compression benches,
+#                   BENCH_*.json emission, and the bench_gate regression
+#                   comparison against the committed BENCH_baseline.json
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== bench-smoke: hotpath =="
+    BENCH_SMOKE=1 cargo bench --bench hotpath
+    echo "== bench-smoke: compression ablation =="
+    BENCH_SMOKE=1 cargo bench --bench ablations
+    echo "== bench-gate: compare against BENCH_baseline.json =="
+    cargo run --release --quiet --bin bench_gate -- \
+        BENCH_baseline.json BENCH_hotpath.json BENCH_compression.json
+    echo "== ci.sh --bench OK =="
+    exit 0
+fi
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
@@ -18,6 +35,9 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
     echo "== clippy not installed; skipping lint =="
 fi
+
+echo "== cargo doc --no-deps (doc warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== tier-1: cargo build --release =="
 cargo build --release

@@ -1,26 +1,144 @@
 //! Design-choice ablations (DESIGN.md calls these out):
-//!   1. kernel fusion — fused match+pack vs the two-step artifact;
-//!   2. hardware formulation — VPU compare-reduce vs MXU one-hot matmul;
-//!   3. dispatch coalescing — 4 batches per PJRT call vs 4 calls;
-//!   4. compression — WAH vs roaring vs raw on the three content
-//!      distributions.
+//!   1. compression — WAH vs roaring vs raw vs the adaptive chooser on
+//!      the three content distributions, plus compressed-vs-decompress
+//!      execution of the AND kernel (runs without artifacts; this is the
+//!      measurement behind the codec-selection thresholds in PERF.md);
+//!   2. kernel fusion — fused match+pack vs the two-step artifact;
+//!   3. hardware formulation — VPU compare-reduce vs MXU one-hot matmul;
+//!   4. dispatch coalescing — 4 batches per PJRT call vs 4 calls.
+//!
+//! The compression section emits `BENCH_compression.json` (row stats,
+//! per-codec sizes, chosen codec, and the timed cases) for the CI
+//! bench-smoke gate; `BENCH_SMOKE=1` shrinks the corpus and the
+//! measurement budget. Ablations 2-4 need the AOT artifacts and are
+//! skipped gracefully when the manifest is absent.
 
-use sotb_bic::bic::{BicConfig, Bitmap, RoaringBitmap, WahBitmap};
+use sotb_bic::bic::{
+    BicConfig, Bitmap, CompressedIndex, Query, RoaringBitmap, RowStats, WahBitmap,
+};
 use sotb_bic::coordinator::{ContentDist, WorkloadGen};
 use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
-use sotb_bic::substrate::bench::{group, Bench};
+use sotb_bic::substrate::bench::{group, smoke_mode, Bench, BenchResult};
+use sotb_bic::substrate::json::Json;
 use sotb_bic::substrate::rng::Xoshiro256;
 
+/// A bench under the mode-appropriate measurement budget.
+fn bench(name: impl Into<String>) -> Bench {
+    Bench::auto(name)
+}
+
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut dists: Vec<Json> = Vec::new();
+
+    // --- Compression & compressed execution (no artifacts needed). ---
+    group("ablation: compression & compressed execution (per distribution)");
+    for (name, dist) in [
+        ("uniform", ContentDist::Uniform),
+        ("zipf", ContentDist::Zipf { s: 1.2 }),
+        ("clustered", ContentDist::Clustered { spread: 16 }),
+    ] {
+        let cfg = BicConfig { n_records: 256, w_words: 8, m_keys: 16 };
+        let nbatches = if smoke_mode() { 256 } else { 1024 };
+        let bi = WorkloadGen::new(cfg, dist, 3).attribute_rows(nbatches);
+        let row: &Bitmap = bi.row(0);
+        let stats = RowStats::analyze(row);
+        let wah = WahBitmap::compress(row);
+        let roar = RoaringBitmap::from_bitmap(row);
+        let raw_bytes = row.len().div_ceil(8);
+        let ci = CompressedIndex::from_index(&bi);
+        let h = ci.codec_histogram();
+        println!(
+            "{name}: raw {} B | WAH {} B ({:.2}x) | roaring {} B ({:.2}x) | \
+             density {:.4} | mean run {:.1} b -> chosen {:?}; index ratio {:.2}x \
+             (raw/wah/roaring rows {}/{}/{})",
+            raw_bytes,
+            wah.compressed_bytes(),
+            wah.ratio(),
+            roar.compressed_bytes(),
+            raw_bytes as f64 / roar.compressed_bytes().max(1) as f64,
+            stats.density(),
+            stats.mean_run_len(),
+            stats.choose(),
+            ci.ratio(),
+            h[0],
+            h[1],
+            h[2],
+        );
+        // The compressed planner must agree with the reference before
+        // anything here is worth timing.
+        let q = Query::attr(0).and(Query::attr(2)).and(Query::attr(4).not());
+        assert_eq!(
+            q.eval_compressed(&ci).unwrap(),
+            q.eval(&bi).unwrap(),
+            "{name}: compressed eval diverged"
+        );
+        results.push(
+            bench(format!("compress/wah-{name}"))
+                .bytes(raw_bytes as u64)
+                .run(|| WahBitmap::compress(row)),
+        );
+        results.push(
+            bench(format!("compress/roaring-{name}"))
+                .bytes(raw_bytes as u64)
+                .run(|| RoaringBitmap::from_bitmap(row)),
+        );
+        results.push(
+            bench(format!("compress/adaptive-index-{name}"))
+                .bytes((raw_bytes * cfg.m_keys) as u64)
+                .run(|| CompressedIndex::from_index(&bi)),
+        );
+        // Compressed execution vs decompress-then-execute on the AND
+        // kernel two WAH rows at a time.
+        let w0 = WahBitmap::compress(bi.row(0));
+        let w1 = WahBitmap::compress(bi.row(1));
+        results.push(
+            bench(format!("candop/and-compressed-{name}")).run(|| w0.and(&w1)),
+        );
+        results.push(
+            bench(format!("candop/and-via-decompress-{name}"))
+                .run(|| w0.decompress().and(&w1.decompress())),
+        );
+        dists.push(Json::obj([
+            ("dist", name.into()),
+            ("nbits", row.len().into()),
+            ("density", stats.density().into()),
+            ("mean_run_len", stats.mean_run_len().into()),
+            ("raw_bytes", raw_bytes.into()),
+            ("wah_bytes", wah.compressed_bytes().into()),
+            ("roaring_bytes", roar.compressed_bytes().into()),
+            ("chosen_codec", format!("{:?}", stats.choose()).into()),
+            ("index_ratio", ci.ratio().into()),
+            (
+                "codec_histogram",
+                vec![h[0], h[1], h[2]].into(),
+            ),
+        ]));
+    }
+
+    let json = Json::obj([
+        ("distributions", Json::Arr(dists)),
+        (
+            "compression",
+            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+        ),
+    ]);
+    let path = "BENCH_compression.json";
+    match std::fs::write(path, json.render() + "\n") {
+        Ok(()) => println!("\nwrote {} results to {path}", results.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    // --- PJRT-dependent ablations. ---
     let dir = Manifest::default_dir();
     if !dir.join("manifest.txt").exists() {
-        println!("run `make artifacts` first");
+        println!("(pjrt ablations skipped: run `make artifacts` first)");
         return;
     }
     let manifest = Manifest::load(&dir).expect("manifest");
     let rt = Runtime::cpu().expect("PJRT");
 
-    // --- 1+2: fusion & formulation, on the batch geometry. ---
+    // Fusion & formulation, on the batch geometry.
     group("ablation: kernel fusion & formulation (batch: 256x32, 16 keys)");
     let fused_v = manifest.find_bic("batch").unwrap();
     let twostep_v = manifest.find_twostep("batch").unwrap();
@@ -38,12 +156,12 @@ fn main() {
         let out = exe.index(&recs, &keys).unwrap();
         let fused_exe = BicExecutable::load(&rt, fused_v).unwrap();
         assert_eq!(out, fused_exe.index(&recs, &keys).unwrap(), "{label}");
-        Bench::new(format!("pjrt/{label}"))
+        bench(format!("pjrt/{label}"))
             .bytes(bytes)
             .run(|| exe.index(&recs, &keys).unwrap());
     }
 
-    // --- 3: dispatch coalescing. ---
+    // Dispatch coalescing.
     group("ablation: dispatch coalescing (4 batches)");
     let co_v = manifest.find_coalesce("batch").unwrap();
     let exe_one = BicExecutable::load(&rt, fused_v).unwrap();
@@ -56,7 +174,7 @@ fn main() {
         })
         .collect();
     let batch_refs: Vec<&[Vec<i32>]> = batches.iter().map(|b| b.as_slice()).collect();
-    Bench::new("dispatch/4-separate-calls")
+    bench("dispatch/4-separate-calls")
         .bytes(4 * bytes)
         .run(|| {
             batches
@@ -64,43 +182,7 @@ fn main() {
                 .map(|b| exe_one.index(b, &keys).unwrap())
                 .collect::<Vec<_>>()
         });
-    Bench::new("dispatch/1-coalesced-call")
+    bench("dispatch/1-coalesced-call")
         .bytes(4 * bytes)
         .run(|| exe_co.index_coalesced(&batch_refs, &keys).unwrap());
-
-    // --- 4: compression on the three content distributions. ---
-    group("ablation: compression (row of 262k objects)");
-    for (name, dist) in [
-        ("uniform", ContentDist::Uniform),
-        ("zipf", ContentDist::Zipf { s: 1.2 }),
-        ("clustered", ContentDist::Clustered { spread: 16 }),
-    ] {
-        // Build one attribute row by indexing generated batches.
-        let cfg = BicConfig { n_records: 256, w_words: 8, m_keys: 16 };
-        let mut gen = WorkloadGen::new(cfg, dist, 3);
-        let mut core = sotb_bic::bic::BicCore::new(cfg);
-        let mut bits = Vec::new();
-        for _ in 0..1024 {
-            let b = gen.batch_at(0.0);
-            let bi = core.index(&b.records, &b.keys);
-            for j in 0..256 {
-                bits.push(bi.get(0, j));
-            }
-        }
-        let row = Bitmap::from_bools(&bits);
-        let wah = WahBitmap::compress(&row);
-        let roar = RoaringBitmap::from_bitmap(&row);
-        println!(
-            "{name}: raw {} B | WAH {} B ({:.2}x) | roaring {} B ({:.2}x) | density {:.3}",
-            row.len() / 8,
-            wah.compressed_bytes(),
-            wah.ratio(),
-            roar.compressed_bytes(),
-            (row.len() / 8) as f64 / roar.compressed_bytes() as f64,
-            row.count_ones() as f64 / row.len() as f64,
-        );
-        Bench::new(format!("compress/wah-{name}")).run(|| WahBitmap::compress(&row));
-        Bench::new(format!("compress/roaring-{name}"))
-            .run(|| RoaringBitmap::from_bitmap(&row));
-    }
 }

@@ -7,38 +7,31 @@
 //!
 //! Results are also emitted machine-readable to `BENCH_hotpath.json`
 //! (one object per case) so the perf trajectory is tracked across PRs.
+//!
+//! `BENCH_SMOKE=1` switches to the short CI mode: identical cases and
+//! names, reduced warmup/sample budget, smaller compressed-query corpus —
+//! the bench-smoke CI job compares its output against the committed
+//! `BENCH_baseline.json` (see `ci.sh --bench`).
 
 use sotb_bic::baselines::SoftwareIndexer;
 use sotb_bic::bic::transpose::{pack_rows, transpose, transpose_packed};
-use sotb_bic::bic::{BicConfig, BicCore, Bitmap, Cam, Query, WahBitmap};
+use sotb_bic::bic::{
+    BicConfig, BicCore, Bitmap, Cam, CompressedIndex, Query, WahBitmap,
+};
 use sotb_bic::coordinator::{ContentDist, ShardedIndexer, WorkloadGen};
 use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
 use sotb_bic::sim::CoreSim;
-use sotb_bic::substrate::bench::{group, Bench, BenchResult};
+use sotb_bic::substrate::bench::{group, smoke_mode, Bench, BenchResult};
 use sotb_bic::substrate::json::Json;
 use sotb_bic::substrate::rng::Xoshiro256;
 
-fn random_batch(rng: &mut Xoshiro256, n: usize, w: usize) -> Vec<Vec<i32>> {
-    (0..n).map(|_| (0..w).map(|_| rng.next_below(256) as i32).collect()).collect()
+/// A bench under the mode-appropriate measurement budget.
+fn bench(name: impl Into<String>) -> Bench {
+    Bench::auto(name)
 }
 
-fn result_json(r: &BenchResult) -> Json {
-    let mut j = Json::obj([
-        ("name", r.name.as_str().into()),
-        ("mean_s", r.per_iter.mean.into()),
-        ("stddev_s", r.per_iter.stddev.into()),
-        ("samples", r.per_iter.n.into()),
-        ("iters_per_sample", r.iters_per_sample.into()),
-    ]);
-    match r.bytes_per_iter {
-        Some(b) => j.set("bytes_per_iter", b),
-        None => j.set("bytes_per_iter", Json::Null),
-    }
-    match r.throughput() {
-        Some(tp) => j.set("throughput_bps", tp),
-        None => j.set("throughput_bps", Json::Null),
-    }
-    j
+fn random_batch(rng: &mut Xoshiro256, n: usize, w: usize) -> Vec<Vec<i32>> {
+    (0..n).map(|_| (0..w).map(|_| rng.next_below(256) as i32).collect()).collect()
 }
 
 fn main() {
@@ -54,11 +47,11 @@ fn main() {
         b.set(rng.next_below(nbits as u64) as usize, true);
     }
     results.push(
-        Bench::new("bitmap/and-1Mbit").bytes((nbits / 8) as u64).run(|| a.and(&b)),
+        bench("bitmap/and-1Mbit").bytes((nbits / 8) as u64).run(|| a.and(&b)),
     );
     let mut acc = a.clone();
     results.push(
-        Bench::new("bitmap/and_assign-1Mbit")
+        bench("bitmap/and_assign-1Mbit")
             .bytes((nbits / 8) as u64)
             .run(|| acc.and_assign(&b)),
     );
@@ -74,12 +67,12 @@ fn main() {
         .collect();
     let (d0, d1, d2, d3) = (&dense[0], &dense[1], &dense[2], &dense[3]);
     results.push(
-        Bench::new("bitmap/and_all-4x1Mbit-dense")
+        bench("bitmap/and_all-4x1Mbit-dense")
             .bytes((4 * nbits / 8) as u64)
             .run(|| d0.and_all(&[d1, d2, d3])),
     );
     results.push(
-        Bench::new("bitmap/and-chained-4x1Mbit-dense")
+        bench("bitmap/and-chained-4x1Mbit-dense")
             .bytes((4 * nbits / 8) as u64)
             .run(|| d0.and(d1).and(d2).and(d3)),
     );
@@ -87,11 +80,11 @@ fn main() {
     // measures the absorbing-zero skip path (bytes denominator omitted —
     // the point is that most memory is deliberately never touched).
     results.push(
-        Bench::new("bitmap/and_all-4x1Mbit-selective")
+        bench("bitmap/and_all-4x1Mbit-selective")
             .run(|| a.and_all(&[&b, d0, d1])),
     );
     results.push(
-        Bench::new("bitmap/count_ones-1Mbit")
+        bench("bitmap/count_ones-1Mbit")
             .bytes((nbits / 8) as u64)
             .run(|| a.count_ones()),
     );
@@ -103,12 +96,12 @@ fn main() {
     let tpacked = pack_rows(&tbits, tn, tm);
     let tbytes = (tn * tm / 8) as u64;
     results.push(
-        Bench::new("transpose/scalar-4096x64")
+        bench("transpose/scalar-4096x64")
             .bytes(tbytes)
             .run(|| transpose(&tbits, tn, tm)),
     );
     results.push(
-        Bench::new("transpose/block64-4096x64")
+        bench("transpose/block64-4096x64")
             .bytes(tbytes)
             .run(|| transpose_packed(&tpacked, tn, tm)),
     );
@@ -120,12 +113,12 @@ fn main() {
         (0..256).map(|_| rng.next_below(256) as i32).collect();
     let mut match_row = vec![0u64; 4];
     results.push(
-        Bench::new("cam/match_all-256keys")
+        bench("cam/match_all-256keys")
             .bytes(256)
             .run(|| cam.match_all(&many_keys)),
     );
     results.push(
-        Bench::new("cam/match_packed-256keys")
+        bench("cam/match_packed-256keys")
             .bytes(256)
             .run(|| cam.match_packed_into(&many_keys, &mut match_row)),
     );
@@ -135,34 +128,34 @@ fn main() {
     let wah_b = WahBitmap::compress(&b);
     println!("compression ratio: {:.1}x", wah_a.ratio());
     results.push(
-        Bench::new("wah/compress").bytes((nbits / 8) as u64).run(|| WahBitmap::compress(&a)),
+        bench("wah/compress").bytes((nbits / 8) as u64).run(|| WahBitmap::compress(&a)),
     );
-    results.push(Bench::new("wah/and-compressed").run(|| wah_a.and(&wah_b)));
-    results.push(Bench::new("wah/count_ones").run(|| wah_a.count_ones()));
+    results.push(bench("wah/and-compressed").run(|| wah_a.and(&wah_b)));
+    results.push(bench("wah/count_ones").run(|| wah_a.count_ones()));
 
     group("indexing cores (chip geometry: 16x32, 8 keys)");
     let recs = random_batch(&mut rng, 16, 32);
     let keys: Vec<i32> = (0..8).map(|_| rng.next_below(256) as i32).collect();
     let mut golden = BicCore::new(BicConfig::CHIP);
     results.push(
-        Bench::new("index/golden-model")
+        bench("index/golden-model")
             .bytes(512)
             .run(|| golden.index(&recs, &keys)),
     );
     results.push(
-        Bench::new("index/scalar-reference")
+        bench("index/scalar-reference")
             .bytes(512)
             .run(|| golden.index_scalar(&recs, &keys)),
     );
     let mut sim = CoreSim::new(BicConfig::CHIP);
     results.push(
-        Bench::new("index/cycle-simulator")
+        bench("index/cycle-simulator")
             .bytes(512)
             .run(|| sim.index_batch(&recs, &keys)),
     );
     let sw = SoftwareIndexer::new(8);
     results.push(
-        Bench::new("index/software-baseline")
+        bench("index/software-baseline")
             .bytes(512)
             .run(|| sw.index(&recs, &keys)),
     );
@@ -174,14 +167,14 @@ fn main() {
         trace.iter().map(|b| b.input_bytes() as u64).sum();
     let serial = ShardedIndexer::new(BicConfig::CHIP, 1);
     results.push(
-        Bench::new("index/sharded-1core-256batches")
+        bench("index/sharded-1core-256batches")
             .bytes(trace_bytes)
             .run(|| serial.index_batches(&trace)),
     );
     let parallel = ShardedIndexer::with_host_parallelism(BicConfig::CHIP);
     if parallel.shards() > 1 {
         results.push(
-            Bench::new(format!(
+            bench(format!(
                 "index/sharded-{}core-256batches",
                 parallel.shards()
             ))
@@ -205,7 +198,53 @@ fn main() {
         .collect();
     let bi = sotb_bic::bic::BitmapIndex::from_rows(rows);
     let q = Query::attr(1).and(Query::attr(5)).and(Query::attr(9).not());
-    results.push(Bench::new("query/and-and-not-1Mobj").run(|| q.eval(&bi).unwrap()));
+    results.push(bench("query/and-and-not-1Mobj").run(|| q.eval(&bi).unwrap()));
+
+    // Compressed-execution tier: the same query class on an adaptively
+    // compressed index, paired against decompress-then-evaluate, across
+    // all three content distributions (the clustered one is WAH's home
+    // turf and the headline win).
+    group("compressed query tier (262k objects per distribution)");
+    let cq = Query::attr(1)
+        .and(Query::attr(3))
+        .and(Query::attr(7))
+        .and(Query::attr(5).not());
+    for (dist_name, dist) in [
+        ("uniform", ContentDist::Uniform),
+        ("zipf", ContentDist::Zipf { s: 1.2 }),
+        ("clustered", ContentDist::Clustered { spread: 16 }),
+    ] {
+        let cfg = BicConfig { n_records: 256, w_words: 8, m_keys: 16 };
+        let nbatches = if smoke_mode() { 256 } else { 1024 };
+        let cbi = WorkloadGen::new(cfg, dist, 0xC0DE).attribute_rows(nbatches);
+        let ci = CompressedIndex::from_index(&cbi);
+        let h = ci.codec_histogram();
+        println!(
+            "{dist_name}: ratio {:.2}x, codecs raw/wah/roaring {}/{}/{}",
+            ci.ratio(),
+            h[0],
+            h[1],
+            h[2]
+        );
+        // Differential pin before timing: the planner must match the
+        // uncompressed reference bit for bit.
+        assert_eq!(
+            cq.eval_compressed(&ci).unwrap(),
+            cq.eval(&cbi).unwrap(),
+            "{dist_name}: compressed eval diverged"
+        );
+        let row_bytes = (ci.num_attrs() * ci.num_objects() / 8) as u64;
+        results.push(
+            bench(format!("cquery/{dist_name}-decompress-then-eval"))
+                .bytes(row_bytes)
+                .run(|| cq.eval(&ci.to_index()).unwrap()),
+        );
+        results.push(
+            bench(format!("cquery/{dist_name}-compressed-eval"))
+                .bytes(row_bytes)
+                .run(|| cq.eval_compressed(&ci).unwrap()),
+        );
+    }
 
     group("PJRT artifact dispatch");
     let dir = Manifest::default_dir();
@@ -220,7 +259,7 @@ fn main() {
             let keys: Vec<i32> =
                 (0..v.m).map(|_| vrng.next_below(256) as i32).collect();
             results.push(
-                Bench::new(format!("pjrt/index-{name} (n={} w={} m={})", v.n, v.w, v.m))
+                bench(format!("pjrt/index-{name} (n={} w={} m={})", v.n, v.w, v.m))
                     .bytes((v.n * v.w) as u64)
                     .run(|| exe.index(&recs, &keys).unwrap()),
             );
@@ -232,7 +271,7 @@ fn main() {
     // Machine-readable dump for cross-PR perf tracking.
     let json = Json::obj([(
         "hotpath",
-        Json::Arr(results.iter().map(result_json).collect()),
+        Json::Arr(results.iter().map(BenchResult::to_json).collect()),
     )]);
     let path = "BENCH_hotpath.json";
     match std::fs::write(path, json.render() + "\n") {

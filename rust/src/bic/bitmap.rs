@@ -212,6 +212,22 @@ impl Bitmap {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Number of maximal runs of consecutive set bits — the run statistic
+    /// the adaptive codec chooser feeds on (WAH wins on few long runs,
+    /// roaring on many scattered singletons). Word-parallel: a run starts
+    /// at every position whose bit is set and whose predecessor is clear,
+    /// so `one_runs = popcount(w & !(w << 1 | carry))` summed over words
+    /// (the tail invariant keeps padding bits out of the count).
+    pub fn one_runs(&self) -> usize {
+        let mut carry = 0u64; // MSB of the previous word, in bit 0
+        let mut runs = 0usize;
+        for &w in &self.words {
+            runs += (w & !((w << 1) | carry)).count_ones() as usize;
+            carry = w >> (WORD_BITS - 1);
+        }
+        runs
+    }
+
     /// Indices of set bits, ascending.
     pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
         self.words.iter().enumerate().flat_map(|(wi, &w)| {
@@ -549,6 +565,23 @@ mod tests {
         let odds = evens.not();
         let ones = Bitmap::ones(n);
         assert!(evens.and_all(&[&odds, &ones]).is_zero());
+    }
+
+    #[test]
+    fn one_runs_matches_naive_scan() {
+        for n in [0usize, 1, 63, 64, 65, 200, 513] {
+            let bits: Vec<bool> = (0..n).map(|i| (i * 11) % 7 < 3).collect();
+            let b = Bitmap::from_bools(&bits);
+            let mut naive = 0;
+            for i in 0..n {
+                if bits[i] && (i == 0 || !bits[i - 1]) {
+                    naive += 1;
+                }
+            }
+            assert_eq!(b.one_runs(), naive, "n={n}");
+        }
+        assert_eq!(Bitmap::ones(130).one_runs(), 1);
+        assert_eq!(Bitmap::zeros(130).one_runs(), 0);
     }
 
     #[test]

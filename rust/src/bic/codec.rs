@@ -1,0 +1,607 @@
+//! Codec-polymorphic compressed rows and the adaptive compressed index —
+//! the storage tier the query planner executes on.
+//!
+//! Real bitmap-index deployments (the FastBit/WAH lineage the paper's
+//! FPGA predecessor cites) never materialize uncompressed rows for the
+//! bulk-bitwise workload: boolean algebra runs directly on compressed
+//! words. [`CodecBitmap`] is one row under one of three codecs — raw
+//! `u64` words, WAH fills, or roaring containers — with direct
+//! compressed kernels for same-codec pairs and materialize-the-denser-
+//! side fallbacks across codecs. [`CompressedIndex`] picks the codec per
+//! attribute row from measured density/run statistics ([`RowStats`]):
+//! clustered rows (few long runs) go to WAH, scattered-sparse rows to
+//! roaring arrays, dense rows stay raw. The decision is an argmin over
+//! estimated encoded sizes, so the thresholds are the codecs' measured
+//! cost model (validated by the `compression` ablation bench), not magic
+//! constants — see PERF.md §codec selection for the crossover points.
+
+use super::bitmap::{packed_words_for, Bitmap, BitmapIndex};
+use super::roaring::RoaringBitmap;
+use super::wah::WahBitmap;
+
+/// Which container encodes a row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Codec {
+    /// Plain `u64` words (dense rows; zero decode cost).
+    Raw,
+    /// Word-aligned hybrid fills (clustered rows; long runs).
+    Wah,
+    /// Roaring containers (scattered-sparse rows; cheap membership).
+    Roaring,
+}
+
+impl Codec {
+    pub const ALL: [Codec; 3] = [Codec::Raw, Codec::Wah, Codec::Roaring];
+}
+
+/// Density/run statistics of one bitmap row — everything the codec
+/// chooser needs, gathered in one word-parallel pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowStats {
+    pub nbits: usize,
+    /// Set bits (the row's cardinality).
+    pub ones: usize,
+    /// Maximal runs of consecutive set bits.
+    pub one_runs: usize,
+}
+
+impl RowStats {
+    pub fn analyze(bm: &Bitmap) -> Self {
+        Self { nbits: bm.len(), ones: bm.count_ones(), one_runs: bm.one_runs() }
+    }
+
+    /// Fraction of set bits.
+    pub fn density(&self) -> f64 {
+        if self.nbits == 0 {
+            return 0.0;
+        }
+        self.ones as f64 / self.nbits as f64
+    }
+
+    /// Mean length of a 1-run in bits (0 for an empty row).
+    pub fn mean_run_len(&self) -> f64 {
+        if self.one_runs == 0 {
+            return 0.0;
+        }
+        self.ones as f64 / self.one_runs as f64
+    }
+
+    /// Raw storage, in the interchange (`u32`) format a raw row moves
+    /// over the wire in — the same basis the extmem model charges, so
+    /// the chooser and the transfer accounting agree.
+    pub fn est_raw_bytes(&self) -> usize {
+        packed_words_for(self.nbits) * 4
+    }
+
+    /// WAH estimate: each 1-run costs at most two boundary literals plus
+    /// the zero fill separating it from the next run (~3 words), plus one
+    /// trailing fill; an all-literal encoding bounds it above.
+    pub fn est_wah_bytes(&self) -> usize {
+        let ngroups = self.nbits.div_ceil(31).max(1);
+        (3 * self.one_runs + 1).min(ngroups) * 4
+    }
+
+    /// Roaring estimate: 2 B per member plus per-chunk key overhead,
+    /// bounded above by the dense-container cap (8 KiB per 64-Kbit
+    /// chunk).
+    pub fn est_roaring_bytes(&self) -> usize {
+        let chunks = self.nbits.div_ceil(1 << 16).max(1);
+        (2 * self.ones + 4 * chunks).min(chunks * (8192 + 4))
+    }
+
+    /// Pick the codec with the smallest estimated encoding; ties break
+    /// toward the cheaper-to-decode codec (raw, then WAH).
+    pub fn choose(&self) -> Codec {
+        let (r, w, o) =
+            (self.est_raw_bytes(), self.est_wah_bytes(), self.est_roaring_bytes());
+        if r <= w && r <= o {
+            Codec::Raw
+        } else if w <= o {
+            Codec::Wah
+        } else {
+            Codec::Roaring
+        }
+    }
+}
+
+/// One bitmap row under one of the three codecs.
+///
+/// Equality is representational (same codec, same encoding); use
+/// [`CodecBitmap::to_bitmap`] for semantic comparison across codecs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecBitmap {
+    Raw(Bitmap),
+    Wah(WahBitmap),
+    Roaring { set: RoaringBitmap, nbits: usize },
+}
+
+impl CodecBitmap {
+    /// Encode adaptively: analyze the row and pick the cheapest codec.
+    pub fn from_bitmap(bm: &Bitmap) -> Self {
+        Self::from_bitmap_as(RowStats::analyze(bm).choose(), bm)
+    }
+
+    /// Encode under a specific codec (benches and differential tests).
+    pub fn from_bitmap_as(codec: Codec, bm: &Bitmap) -> Self {
+        match codec {
+            Codec::Raw => CodecBitmap::Raw(bm.clone()),
+            Codec::Wah => CodecBitmap::Wah(WahBitmap::compress(bm)),
+            Codec::Roaring => CodecBitmap::Roaring {
+                set: RoaringBitmap::from_bitmap(bm),
+                nbits: bm.len(),
+            },
+        }
+    }
+
+    pub fn codec(&self) -> Codec {
+        match self {
+            CodecBitmap::Raw(_) => Codec::Raw,
+            CodecBitmap::Wah(_) => Codec::Wah,
+            CodecBitmap::Roaring { .. } => Codec::Roaring,
+        }
+    }
+
+    /// Uncompressed length in bits.
+    pub fn len(&self) -> usize {
+        match self {
+            CodecBitmap::Raw(b) => b.len(),
+            CodecBitmap::Wah(w) => w.len(),
+            CodecBitmap::Roaring { nbits, .. } => *nbits,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Set bits, computed on the encoded form.
+    pub fn count_ones(&self) -> usize {
+        match self {
+            CodecBitmap::Raw(b) => b.count_ones(),
+            CodecBitmap::Wah(w) => w.count_ones(),
+            CodecBitmap::Roaring { set, .. } => set.len(),
+        }
+    }
+
+    /// Bytes the encoded row occupies on the wire (what the extmem model
+    /// charges). Raw rows count in the packed-`u32` interchange format —
+    /// the `u64` host padding is a compute-side layout, not data that
+    /// moves — so a raw-codec row never costs more than the uncompressed
+    /// transfer it replaces.
+    pub fn compressed_bytes(&self) -> usize {
+        match self {
+            CodecBitmap::Raw(b) => packed_words_for(b.len()) * 4,
+            CodecBitmap::Wah(w) => w.compressed_bytes(),
+            CodecBitmap::Roaring { set, .. } => set.compressed_bytes(),
+        }
+    }
+
+    /// Uncompressed row bytes, for ratio reporting.
+    pub fn uncompressed_bytes(&self) -> usize {
+        self.len().div_ceil(8)
+    }
+
+    /// Materialize the plain bitmap.
+    pub fn to_bitmap(&self) -> Bitmap {
+        match self {
+            CodecBitmap::Raw(b) => b.clone(),
+            CodecBitmap::Wah(w) => w.decompress(),
+            CodecBitmap::Roaring { set, nbits } => set.to_bitmap(*nbits),
+        }
+    }
+
+    /// Borrow the raw words when this row is stored uncompressed (lets
+    /// the planner route raw rows through the fused [`Bitmap::and_all`]).
+    pub fn as_raw(&self) -> Option<&Bitmap> {
+        match self {
+            CodecBitmap::Raw(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    fn check_len(&self, other: &Self) {
+        assert_eq!(
+            self.len(),
+            other.len(),
+            "codec bitmap length mismatch: {} vs {}",
+            self.len(),
+            other.len()
+        );
+    }
+
+    /// Compressed AND. Same-codec pairs run the direct compressed kernel;
+    /// cross-codec pairs keep a roaring side compressed (the intersection
+    /// is at most that sparse) and otherwise AND into a materialized copy
+    /// of the raw/WAH side.
+    pub fn and(&self, other: &Self) -> Self {
+        self.check_len(other);
+        match (self, other) {
+            (CodecBitmap::Raw(a), CodecBitmap::Raw(b)) => CodecBitmap::Raw(a.and(b)),
+            (CodecBitmap::Wah(a), CodecBitmap::Wah(b)) => CodecBitmap::Wah(a.and(b)),
+            (
+                CodecBitmap::Roaring { set: a, nbits },
+                CodecBitmap::Roaring { set: b, .. },
+            ) => CodecBitmap::Roaring { set: a.and(b), nbits: *nbits },
+            (CodecBitmap::Roaring { set, nbits }, o)
+            | (o, CodecBitmap::Roaring { set, nbits }) => {
+                // Probe the other side per member; a raw side is
+                // borrowed directly (no clone), only WAH materializes.
+                let materialized;
+                let ob = match o.as_raw() {
+                    Some(b) => b,
+                    None => {
+                        materialized = o.to_bitmap();
+                        &materialized
+                    }
+                };
+                let mut out = RoaringBitmap::new();
+                for x in set.iter() {
+                    if ob.get(x as usize) {
+                        out.insert(x);
+                    }
+                }
+                CodecBitmap::Roaring { set: out, nbits: *nbits }
+            }
+            (CodecBitmap::Raw(a), CodecBitmap::Wah(w))
+            | (CodecBitmap::Wah(w), CodecBitmap::Raw(a)) => {
+                let mut acc = a.clone();
+                w.and_into(&mut acc);
+                CodecBitmap::Raw(acc)
+            }
+        }
+    }
+
+    /// Compressed OR.
+    pub fn or(&self, other: &Self) -> Self {
+        self.check_len(other);
+        match (self, other) {
+            (CodecBitmap::Raw(a), CodecBitmap::Raw(b)) => CodecBitmap::Raw(a.or(b)),
+            (CodecBitmap::Wah(a), CodecBitmap::Wah(b)) => CodecBitmap::Wah(a.or(b)),
+            (
+                CodecBitmap::Roaring { set: a, nbits },
+                CodecBitmap::Roaring { set: b, .. },
+            ) => CodecBitmap::Roaring { set: a.or(b), nbits: *nbits },
+            (CodecBitmap::Roaring { set, .. }, o)
+            | (o, CodecBitmap::Roaring { set, .. }) => {
+                let mut acc = o.to_bitmap();
+                set.or_into(&mut acc);
+                CodecBitmap::Raw(acc)
+            }
+            (CodecBitmap::Raw(a), CodecBitmap::Wah(w))
+            | (CodecBitmap::Wah(w), CodecBitmap::Raw(a)) => {
+                let mut acc = a.clone();
+                w.or_into(&mut acc);
+                CodecBitmap::Raw(acc)
+            }
+        }
+    }
+
+    /// Compressed ANDNOT (`self & !other`). Not symmetric, so every
+    /// cross-codec pair is spelled out.
+    pub fn and_not(&self, other: &Self) -> Self {
+        self.check_len(other);
+        match (self, other) {
+            (CodecBitmap::Raw(a), CodecBitmap::Raw(b)) => {
+                CodecBitmap::Raw(a.and_not(b))
+            }
+            (CodecBitmap::Wah(a), CodecBitmap::Wah(b)) => {
+                CodecBitmap::Wah(a.and_not(b))
+            }
+            (
+                CodecBitmap::Roaring { set: a, nbits },
+                CodecBitmap::Roaring { set: b, .. },
+            ) => CodecBitmap::Roaring { set: a.and_not(b), nbits: *nbits },
+            (CodecBitmap::Roaring { set, nbits }, o) => {
+                let materialized;
+                let ob = match o.as_raw() {
+                    Some(b) => b,
+                    None => {
+                        materialized = o.to_bitmap();
+                        &materialized
+                    }
+                };
+                let mut out = RoaringBitmap::new();
+                for x in set.iter() {
+                    if !ob.get(x as usize) {
+                        out.insert(x);
+                    }
+                }
+                CodecBitmap::Roaring { set: out, nbits: *nbits }
+            }
+            (o, CodecBitmap::Roaring { set, .. }) => {
+                let mut acc = o.to_bitmap();
+                set.and_not_into(&mut acc);
+                CodecBitmap::Raw(acc)
+            }
+            (CodecBitmap::Raw(a), CodecBitmap::Wah(w)) => {
+                let mut acc = a.clone();
+                w.and_not_into(&mut acc);
+                CodecBitmap::Raw(acc)
+            }
+            (CodecBitmap::Wah(w), CodecBitmap::Raw(b)) => {
+                let mut acc = w.decompress();
+                acc.and_not_assign(b);
+                CodecBitmap::Raw(acc)
+            }
+        }
+    }
+
+    /// Compressed NOT. The complement of a sparse roaring row is dense,
+    /// so it materializes to raw; WAH complements in place (fills flip in
+    /// O(1)).
+    #[allow(clippy::should_implement_trait)]
+    pub fn not(&self) -> Self {
+        match self {
+            CodecBitmap::Raw(b) => CodecBitmap::Raw(b.not()),
+            CodecBitmap::Wah(w) => CodecBitmap::Wah(w.not()),
+            CodecBitmap::Roaring { set, nbits } => {
+                CodecBitmap::Raw(set.to_bitmap(*nbits).not())
+            }
+        }
+    }
+
+    /// AND this row into an uncompressed accumulator without
+    /// materializing (the planner's inner loop).
+    pub fn and_into(&self, acc: &mut Bitmap) {
+        match self {
+            CodecBitmap::Raw(b) => acc.and_assign(b),
+            CodecBitmap::Wah(w) => w.and_into(acc),
+            CodecBitmap::Roaring { set, .. } => set.and_into(acc),
+        }
+    }
+
+    /// `acc &= !self` without materializing.
+    pub fn and_not_into(&self, acc: &mut Bitmap) {
+        match self {
+            CodecBitmap::Raw(b) => acc.and_not_assign(b),
+            CodecBitmap::Wah(w) => w.and_not_into(acc),
+            CodecBitmap::Roaring { set, .. } => set.and_not_into(acc),
+        }
+    }
+
+    /// OR this row into an uncompressed accumulator.
+    pub fn or_into(&self, acc: &mut Bitmap) {
+        match self {
+            CodecBitmap::Raw(b) => acc.or_assign(b),
+            CodecBitmap::Wah(w) => w.or_into(acc),
+            CodecBitmap::Roaring { set, .. } => set.or_into(acc),
+        }
+    }
+}
+
+/// A bitmap index stored compressed, one adaptively chosen codec per
+/// attribute row, with cached per-row cardinalities for the planner's
+/// selectivity estimates. Equality is representational, like
+/// [`CodecBitmap`]'s — exact for two adaptively built indexes, since the
+/// codec choice is a pure function of each row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompressedIndex {
+    n: usize,
+    rows: Vec<CodecBitmap>,
+    cards: Vec<usize>,
+}
+
+impl CompressedIndex {
+    /// Compress adaptively, per row.
+    pub fn from_index(bi: &BitmapIndex) -> Self {
+        Self::build(bi, None)
+    }
+
+    /// Compress every row under one forced codec (differential tests and
+    /// the ablation bench).
+    pub fn from_index_forced(bi: &BitmapIndex, codec: Codec) -> Self {
+        Self::build(bi, Some(codec))
+    }
+
+    fn build(bi: &BitmapIndex, forced: Option<Codec>) -> Self {
+        let m = bi.num_attrs();
+        let mut rows = Vec::with_capacity(m);
+        let mut cards = Vec::with_capacity(m);
+        for i in 0..m {
+            let row = bi.row(i);
+            let stats = RowStats::analyze(row);
+            let codec = forced.unwrap_or_else(|| stats.choose());
+            rows.push(CodecBitmap::from_bitmap_as(codec, row));
+            cards.push(stats.ones);
+        }
+        Self { n: bi.num_objects(), rows, cards }
+    }
+
+    #[inline]
+    pub fn num_attrs(&self) -> usize {
+        self.rows.len()
+    }
+
+    #[inline]
+    pub fn num_objects(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &CodecBitmap {
+        &self.rows[i]
+    }
+
+    /// Set bits of row `i` (cached at build time — the planner's
+    /// selectivity estimate).
+    #[inline]
+    pub fn cardinality(&self, i: usize) -> usize {
+        self.cards[i]
+    }
+
+    /// Fraction of objects row `i` selects.
+    pub fn selectivity(&self, i: usize) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.cards[i] as f64 / self.n as f64
+    }
+
+    /// Decompress every row back to a plain index (the differential
+    /// reference path).
+    pub fn to_index(&self) -> BitmapIndex {
+        BitmapIndex::from_rows(self.rows.iter().map(CodecBitmap::to_bitmap).collect())
+    }
+
+    /// Total encoded bytes across rows.
+    pub fn compressed_bytes(&self) -> usize {
+        self.rows.iter().map(CodecBitmap::compressed_bytes).sum()
+    }
+
+    /// Total raw bytes the same rows would occupy.
+    pub fn uncompressed_bytes(&self) -> usize {
+        self.rows.len() * self.n.div_ceil(8)
+    }
+
+    /// Compression ratio (uncompressed / compressed); > 1 is a win.
+    pub fn ratio(&self) -> f64 {
+        let c = self.compressed_bytes();
+        if c == 0 {
+            return 1.0;
+        }
+        self.uncompressed_bytes() as f64 / c as f64
+    }
+
+    /// Rows per codec, in [`Codec::ALL`] order (raw, wah, roaring) — the
+    /// metrics layer reports this as the adaptive-choice histogram.
+    pub fn codec_histogram(&self) -> [usize; 3] {
+        let mut h = [0usize; 3];
+        for r in &self.rows {
+            match r.codec() {
+                Codec::Raw => h[0] += 1,
+                Codec::Wah => h[1] += 1,
+                Codec::Roaring => h[2] += 1,
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Xoshiro256;
+
+    fn dense_row(n: usize, seed: u64) -> Bitmap {
+        let mut rng = Xoshiro256::seeded(seed);
+        Bitmap::from_bools(&(0..n).map(|_| rng.chance(0.5)).collect::<Vec<_>>())
+    }
+
+    fn clustered_row(n: usize) -> Bitmap {
+        // A few long runs: WAH's best case.
+        let mut bm = Bitmap::zeros(n);
+        for start in [1_000usize, 40_000, 90_000] {
+            for i in start..(start + 5_000).min(n) {
+                bm.set(i, true);
+            }
+        }
+        bm
+    }
+
+    fn scattered_row(n: usize, seed: u64) -> Bitmap {
+        // Isolated bits far apart: roaring's best case.
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut bm = Bitmap::zeros(n);
+        for _ in 0..n / 4096 {
+            bm.set(rng.next_below(n as u64) as usize, true);
+        }
+        bm
+    }
+
+    #[test]
+    fn adaptive_choice_matches_row_shape() {
+        let n = 200_000;
+        assert_eq!(RowStats::analyze(&dense_row(n, 1)).choose(), Codec::Raw);
+        assert_eq!(RowStats::analyze(&clustered_row(n)).choose(), Codec::Wah);
+        assert_eq!(RowStats::analyze(&scattered_row(n, 2)).choose(), Codec::Roaring);
+    }
+
+    #[test]
+    fn adaptive_choice_never_loses_to_raw_badly() {
+        // Whatever the chooser picks must encode within the raw footprint
+        // plus the roaring per-chunk overhead.
+        for row in [dense_row(50_000, 3), clustered_row(50_000), scattered_row(50_000, 4)]
+        {
+            let cb = CodecBitmap::from_bitmap(&row);
+            let raw = packed_words_for(row.len()) * 4;
+            assert!(
+                cb.compressed_bytes() <= raw + 64,
+                "{:?} encoded {} B vs raw {} B",
+                cb.codec(),
+                cb.compressed_bytes(),
+                raw
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_codecs() {
+        for n in [0usize, 1, 63, 64, 65, 1000, 70_000] {
+            let row = dense_row(n, n as u64 + 10);
+            for codec in Codec::ALL {
+                let cb = CodecBitmap::from_bitmap_as(codec, &row);
+                assert_eq!(cb.to_bitmap(), row, "{codec:?} n={n}");
+                assert_eq!(cb.count_ones(), row.count_ones(), "{codec:?} n={n}");
+                assert_eq!(cb.len(), n, "{codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_codec_kernels_match_plain() {
+        let n = 70_001; // two chunks, ragged tail
+        let a = clustered_row(n);
+        let b = scattered_row(n, 7);
+        for ca in Codec::ALL {
+            for cb in Codec::ALL {
+                let x = CodecBitmap::from_bitmap_as(ca, &a);
+                let y = CodecBitmap::from_bitmap_as(cb, &b);
+                assert_eq!(x.and(&y).to_bitmap(), a.and(&b), "{ca:?}&{cb:?}");
+                assert_eq!(x.or(&y).to_bitmap(), a.or(&b), "{ca:?}|{cb:?}");
+                assert_eq!(
+                    x.and_not(&y).to_bitmap(),
+                    a.and_not(&b),
+                    "{ca:?}&!{cb:?}"
+                );
+                assert_eq!(x.not().to_bitmap(), a.not(), "!{ca:?}");
+                let mut acc = a.clone();
+                y.and_into(&mut acc);
+                assert_eq!(acc, a.and(&b), "{cb:?} and_into");
+                let mut acc = a.clone();
+                y.and_not_into(&mut acc);
+                assert_eq!(acc, a.and_not(&b), "{cb:?} and_not_into");
+                let mut acc = a.clone();
+                y.or_into(&mut acc);
+                assert_eq!(acc, a.or(&b), "{cb:?} or_into");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_index_roundtrip_and_accounting() {
+        let n = 30_000;
+        let rows = vec![dense_row(n, 21), clustered_row(n), scattered_row(n, 22)];
+        let bi = BitmapIndex::from_rows(rows);
+        let ci = CompressedIndex::from_index(&bi);
+        assert_eq!(ci.num_attrs(), 3);
+        assert_eq!(ci.num_objects(), n);
+        assert_eq!(ci.to_index(), bi);
+        for i in 0..3 {
+            assert_eq!(ci.cardinality(i), bi.row(i).count_ones());
+        }
+        assert!(ci.ratio() > 1.0, "mixed rows should net-compress: {}", ci.ratio());
+        let h = ci.codec_histogram();
+        assert_eq!(h.iter().sum::<usize>(), 3);
+        assert!(h[1] >= 1 && h[2] >= 1, "wah + roaring both chosen: {h:?}");
+    }
+
+    #[test]
+    fn empty_index() {
+        let bi = BitmapIndex::new(0, 0);
+        let ci = CompressedIndex::from_index(&bi);
+        assert_eq!(ci.num_attrs(), 0);
+        assert_eq!(ci.compressed_bytes(), 0);
+        assert_eq!(ci.ratio(), 1.0);
+        assert_eq!(ci.to_index(), bi);
+    }
+}

@@ -5,9 +5,14 @@
 //!   layout contract with the Python kernels and AOT artifacts);
 //! - [`cam`] / [`buffer`] / [`transpose`] — functional models of the three
 //!   chip blocks;
-//! - [`core`] — the three-step indexing pipeline stitched together;
-//! - [`query`] — multi-dimensional query engine (Fig. 1 use case);
-//! - [`wah`] — WAH compression for stored bitmap rows.
+//! - [`core`](mod@core) — the three-step indexing pipeline stitched
+//!   together;
+//! - [`query`] — multi-dimensional query engine (Fig. 1 use case), with a
+//!   selectivity-ordered planner over compressed rows;
+//! - [`wah`] / [`roaring`] — row compressors;
+//! - [`codec`] — codec-polymorphic rows ([`CodecBitmap`]) and the
+//!   adaptively compressed index ([`CompressedIndex`]) the planner
+//!   executes on.
 //!
 //! Timing/energy behaviour deliberately lives elsewhere (`crate::sim`,
 //! `crate::power`): this module answers only "what is the correct bitmap".
@@ -15,6 +20,7 @@
 pub mod bitmap;
 pub mod buffer;
 pub mod cam;
+pub mod codec;
 pub mod core;
 pub mod query;
 pub mod roaring;
@@ -23,6 +29,7 @@ pub mod wah;
 
 pub use bitmap::{Bitmap, BitmapIndex};
 pub use cam::{Cam, Record, PAD};
+pub use codec::{Codec, CodecBitmap, CompressedIndex, RowStats};
 pub use core::{BicConfig, BicCore};
 pub use query::{conjunctive, Query, QueryError};
 pub use roaring::RoaringBitmap;

@@ -2,14 +2,24 @@
 //! use case the paper motivates with Fig. 1 ("find all objects containing
 //! both A2 and A4, but not A5" = `A2 AND A4 AND (NOT A5)`).
 //!
-//! Two entry points:
+//! Three entry points:
 //! - [`Query`] — a general boolean expression tree over attribute rows,
 //!   evaluated with allocation-conscious word-level operations;
+//! - [`Query::eval_compressed`] — the same expressions planned and
+//!   executed directly on a [`CompressedIndex`]: per-attribute
+//!   selectivity (cached row cardinalities) orders `And` chains
+//!   cheapest-first, raw rows run through the fused [`Bitmap::and_all`]
+//!   early-exit kernel, and WAH/roaring rows fold into the accumulator
+//!   run by run without ever materializing;
 //! - [`conjunctive`] — the include/exclude-mask form that mirrors the AOT
 //!   `query_eval` artifact bit-for-bit (used for differential testing
 //!   against the PJRT path).
+//!
+//! The uncompressed [`Query::eval`] path is retained unchanged as the
+//! differential reference for the compressed planner.
 
 use super::bitmap::{Bitmap, BitmapIndex};
+use super::codec::CompressedIndex;
 
 /// A boolean query expression over attribute indices.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -150,6 +160,105 @@ impl Query {
         }
     }
 
+    /// Validate attribute ranges against a compressed index.
+    pub fn validate_compressed(&self, ci: &CompressedIndex) -> Result<(), QueryError> {
+        for a in self.attrs() {
+            if a >= ci.num_attrs() {
+                return Err(QueryError::AttrOutOfRange(a, ci.num_attrs()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate directly on compressed rows — the compressed-execution
+    /// tier. Differentially identical to [`Query::eval`] over the
+    /// decompressed index; the planner only changes the order and the
+    /// kernels, never the result.
+    pub fn eval_compressed(&self, ci: &CompressedIndex) -> Result<Bitmap, QueryError> {
+        self.validate_compressed(ci)?;
+        Ok(self.eval_compressed_unchecked(ci))
+    }
+
+    fn eval_compressed_unchecked(&self, ci: &CompressedIndex) -> Bitmap {
+        let n = ci.num_objects();
+        match self {
+            Query::Attr(i) => ci.row(*i).to_bitmap(),
+            Query::And(xs) => {
+                // Plan the conjunction: positive leaves ordered most-
+                // selective-first (smallest cached cardinality), so the
+                // accumulator collapses as early as possible; negated
+                // leaves next (ANDNOT folds without materializing any
+                // complement); complex subqueries last. AND is
+                // commutative, so reordering is result-invariant.
+                let mut pos: Vec<usize> = Vec::new();
+                let mut neg: Vec<usize> = Vec::new();
+                let mut complex: Vec<&Query> = Vec::new();
+                for q in xs {
+                    match q {
+                        Query::Attr(i) => pos.push(*i),
+                        Query::Not(inner) => match **inner {
+                            Query::Attr(i) => neg.push(i),
+                            _ => complex.push(q),
+                        },
+                        other => complex.push(other),
+                    }
+                }
+                pos.sort_by_key(|&i| ci.cardinality(i));
+                // A negated leaf clears `cardinality` bits: biggest first.
+                neg.sort_by_key(|&i| std::cmp::Reverse(ci.cardinality(i)));
+                // Raw rows fuse through `and_all` (one pass per cache
+                // block, dead blocks skip every remaining operand);
+                // compressed rows then fold into the accumulator run by
+                // run, with a whole-query early exit once it is empty.
+                let raw: Vec<&Bitmap> =
+                    pos.iter().filter_map(|&i| ci.row(i).as_raw()).collect();
+                let compressed: Vec<usize> = pos
+                    .iter()
+                    .copied()
+                    .filter(|&i| ci.row(i).as_raw().is_none())
+                    .collect();
+                let (mut acc, rest) = match raw.split_first() {
+                    Some((first, others)) => (first.and_all(others), &compressed[..]),
+                    None => match compressed.split_first() {
+                        Some((&first, rest)) => (ci.row(first).to_bitmap(), rest),
+                        None => (Bitmap::ones(n), &compressed[..]),
+                    },
+                };
+                for &i in rest {
+                    if acc.is_zero() {
+                        return acc;
+                    }
+                    ci.row(i).and_into(&mut acc);
+                }
+                for &i in &neg {
+                    if acc.is_zero() {
+                        return acc;
+                    }
+                    ci.row(i).and_not_into(&mut acc);
+                }
+                for q in complex {
+                    if acc.is_zero() {
+                        return acc;
+                    }
+                    acc.and_assign(&q.eval_compressed_unchecked(ci));
+                }
+                acc
+            }
+            Query::Or(xs) => {
+                let mut acc = Bitmap::zeros(n);
+                for q in xs {
+                    if let Query::Attr(i) = q {
+                        ci.row(*i).or_into(&mut acc);
+                    } else {
+                        acc.or_assign(&q.eval_compressed_unchecked(ci));
+                    }
+                }
+                acc
+            }
+            Query::Not(q) => q.eval_compressed_unchecked(ci).not(),
+        }
+    }
+
     /// Number of AND/OR/NOT operations — the "bitwise logical operations"
     /// count the paper's query model charges per query.
     pub fn op_count(&self) -> usize {
@@ -190,9 +299,38 @@ pub fn conjunctive(bi: &BitmapIndex, include: &[bool], exclude: &[bool]) -> Bitm
     acc
 }
 
+/// Compressed counterpart of [`conjunctive`]: the same include/exclude
+/// semantics, executed through the selectivity-ordered compressed
+/// planner.
+pub fn conjunctive_compressed(
+    ci: &CompressedIndex,
+    include: &[bool],
+    exclude: &[bool],
+) -> Bitmap {
+    assert_eq!(include.len(), ci.num_attrs(), "include mask width");
+    assert_eq!(exclude.len(), ci.num_attrs(), "exclude mask width");
+    let mut ops: Vec<Query> = include
+        .iter()
+        .enumerate()
+        .filter(|(_, &inc)| inc)
+        .map(|(i, _)| Query::Attr(i))
+        .collect();
+    ops.extend(
+        exclude
+            .iter()
+            .enumerate()
+            .filter(|(_, &exc)| exc)
+            .map(|(i, _)| Query::Attr(i).not()),
+    );
+    Query::And(ops)
+        .eval_compressed(ci)
+        .expect("masks are index-width by the asserts above")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bic::codec::Codec;
 
     /// The paper's Fig. 1 index: 9 objects x 5 attributes.
     fn fig1_index() -> BitmapIndex {
@@ -271,5 +409,70 @@ mod tests {
     fn attrs_are_sorted_unique() {
         let q = Query::attr(3).and(Query::attr(1)).or(Query::attr(3).not());
         assert_eq!(q.attrs(), vec![1, 3]);
+    }
+
+    #[test]
+    fn compressed_eval_matches_reference_per_codec() {
+        let bi = fig1_index();
+        let queries = [
+            Query::attr(1).and(Query::attr(3)).and(Query::attr(4).not()),
+            Query::attr(0).or(Query::attr(2).not()),
+            Query::And(vec![]),
+            Query::Or(vec![]),
+            Query::attr(2).not().not(),
+            Query::attr(0)
+                .and(Query::attr(1).or(Query::attr(2)))
+                .and(Query::attr(3).not()),
+        ];
+        for q in &queries {
+            let expect = q.eval(&bi).unwrap();
+            let adaptive = CompressedIndex::from_index(&bi);
+            assert_eq!(q.eval_compressed(&adaptive).unwrap(), expect, "adaptive");
+            for codec in Codec::ALL {
+                let ci = CompressedIndex::from_index_forced(&bi, codec);
+                assert_eq!(q.eval_compressed(&ci).unwrap(), expect, "{codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn planner_reordering_is_result_invariant() {
+        let bi = fig1_index();
+        let ci = CompressedIndex::from_index(&bi);
+        // Same conjunction, every operand order.
+        let ops = [Query::attr(1), Query::attr(3), Query::attr(4).not()];
+        let expect =
+            Query::And(ops.to_vec()).eval(&bi).unwrap();
+        for (a, b, c) in [(0, 1, 2), (0, 2, 1), (1, 0, 2), (1, 2, 0), (2, 0, 1), (2, 1, 0)]
+        {
+            let q = Query::And(vec![ops[a].clone(), ops[b].clone(), ops[c].clone()]);
+            assert_eq!(q.eval_compressed(&ci).unwrap(), expect, "order {a}{b}{c}");
+        }
+    }
+
+    #[test]
+    fn conjunctive_compressed_matches_uncompressed() {
+        let bi = fig1_index();
+        let ci = CompressedIndex::from_index(&bi);
+        let include = [false, true, false, true, false];
+        let exclude = [false, false, false, false, true];
+        assert_eq!(
+            conjunctive_compressed(&ci, &include, &exclude),
+            conjunctive(&bi, &include, &exclude)
+        );
+        // No include rows: the AND identity.
+        assert_eq!(
+            conjunctive_compressed(&ci, &[false; 5], &[false; 5]).count_ones(),
+            9
+        );
+    }
+
+    #[test]
+    fn compressed_out_of_range_attr_is_an_error() {
+        let ci = CompressedIndex::from_index(&fig1_index());
+        assert_eq!(
+            Query::attr(5).eval_compressed(&ci),
+            Err(QueryError::AttrOutOfRange(5, 5))
+        );
     }
 }

@@ -124,6 +124,52 @@ impl Container {
         out.normalize()
     }
 
+    fn and_not(&self, other: &Container) -> Option<Container> {
+        let out = match (self, other) {
+            (Container::Array(a), Container::Array(b)) => {
+                // Sorted-merge difference.
+                let (mut i, mut j) = (0, 0);
+                let mut v = Vec::new();
+                while i < a.len() {
+                    if j >= b.len() {
+                        v.extend_from_slice(&a[i..]);
+                        break;
+                    }
+                    match a[i].cmp(&b[j]) {
+                        std::cmp::Ordering::Less => {
+                            v.push(a[i]);
+                            i += 1;
+                        }
+                        std::cmp::Ordering::Greater => j += 1,
+                        std::cmp::Ordering::Equal => {
+                            i += 1;
+                            j += 1;
+                        }
+                    }
+                }
+                Container::Array(v)
+            }
+            (Container::Array(a), d @ Container::Dense(_)) => Container::Array(
+                a.iter().copied().filter(|&x| !d.contains(x)).collect(),
+            ),
+            (Container::Dense(a), Container::Array(b)) => {
+                let mut w = a.clone();
+                for &x in b {
+                    w[x as usize / 64] &= !(1u64 << (x as usize % 64));
+                }
+                Container::Dense(w)
+            }
+            (Container::Dense(a), Container::Dense(b)) => {
+                let mut w = Box::new([0u64; 1024]);
+                for i in 0..1024 {
+                    w[i] = a[i] & !b[i];
+                }
+                Container::Dense(w)
+            }
+        };
+        out.normalize()
+    }
+
     fn or(&self, other: &Container) -> Container {
         match (self, other) {
             (Container::Array(a), Container::Array(b)) => {
@@ -318,6 +364,123 @@ impl RoaringBitmap {
         out
     }
 
+    /// Difference: members of `self` not in `other` (chunk-keyed merge).
+    pub fn and_not(&self, other: &Self) -> Self {
+        let mut out = Self::new();
+        let mut j = 0;
+        for (key, c) in &self.chunks {
+            while j < other.chunks.len() && other.chunks[j].0 < *key {
+                j += 1;
+            }
+            if j < other.chunks.len() && other.chunks[j].0 == *key {
+                if let Some(d) = c.and_not(&other.chunks[j].1) {
+                    out.chunks.push((*key, d));
+                }
+            } else {
+                out.chunks.push((*key, c.clone()));
+            }
+        }
+        out
+    }
+
+    /// Words of one 64-Kbit chunk: 65536 / 64.
+    const CHUNK_WORDS: usize = 1024;
+
+    /// AND this compressed set into an uncompressed accumulator: words
+    /// outside any chunk are zeroed wholesale, dense chunks AND word-wise,
+    /// array chunks AND through a stack-built chunk mask. No per-member
+    /// bit probing of the accumulator.
+    pub(crate) fn and_into(&self, acc: &mut Bitmap) {
+        let words = acc.words_mut();
+        let mut done = 0usize;
+        for (key, c) in &self.chunks {
+            let base = (*key as usize) * Self::CHUNK_WORDS;
+            if base >= words.len() {
+                break;
+            }
+            for w in &mut words[done..base] {
+                *w = 0;
+            }
+            let end = (base + Self::CHUNK_WORDS).min(words.len());
+            match c {
+                Container::Dense(d) => {
+                    for (i, w) in words[base..end].iter_mut().enumerate() {
+                        *w &= d[i];
+                    }
+                }
+                Container::Array(v) => {
+                    let mut mask = [0u64; Self::CHUNK_WORDS];
+                    for &x in v {
+                        mask[x as usize / 64] |= 1u64 << (x as usize % 64);
+                    }
+                    for (i, w) in words[base..end].iter_mut().enumerate() {
+                        *w &= mask[i];
+                    }
+                }
+            }
+            done = end;
+        }
+        for w in &mut words[done..] {
+            *w = 0;
+        }
+    }
+
+    /// `acc &= !self`: members clear their accumulator bits; words outside
+    /// any chunk are untouched.
+    pub(crate) fn and_not_into(&self, acc: &mut Bitmap) {
+        let words = acc.words_mut();
+        for (key, c) in &self.chunks {
+            let base = (*key as usize) * Self::CHUNK_WORDS;
+            if base >= words.len() {
+                break;
+            }
+            let end = (base + Self::CHUNK_WORDS).min(words.len());
+            match c {
+                Container::Dense(d) => {
+                    for (i, w) in words[base..end].iter_mut().enumerate() {
+                        *w &= !d[i];
+                    }
+                }
+                Container::Array(v) => {
+                    for &x in v {
+                        let wi = base + x as usize / 64;
+                        if wi < end {
+                            words[wi] &= !(1u64 << (x as usize % 64));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// OR this compressed set into an uncompressed accumulator. Members
+    /// must lie below the accumulator's length (true for index rows).
+    pub(crate) fn or_into(&self, acc: &mut Bitmap) {
+        let words = acc.words_mut();
+        for (key, c) in &self.chunks {
+            let base = (*key as usize) * Self::CHUNK_WORDS;
+            if base >= words.len() {
+                break;
+            }
+            let end = (base + Self::CHUNK_WORDS).min(words.len());
+            match c {
+                Container::Dense(d) => {
+                    for (i, w) in words[base..end].iter_mut().enumerate() {
+                        *w |= d[i];
+                    }
+                }
+                Container::Array(v) => {
+                    for &x in v {
+                        let wi = base + x as usize / 64;
+                        if wi < end {
+                            words[wi] |= 1u64 << (x as usize % 64);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Heap bytes of the compressed representation.
     pub fn compressed_bytes(&self) -> usize {
         self.chunks
@@ -389,6 +552,36 @@ mod tests {
         assert_eq!(a.and(&b).to_bitmap(n), a_bm.and(&b_bm));
         assert_eq!(a.or(&b).to_bitmap(n), a_bm.or(&b_bm));
         assert_eq!(a.len(), a_bm.count_ones());
+    }
+
+    #[test]
+    fn and_not_and_into_kernels_match_plain() {
+        let mut rng = Xoshiro256::seeded(99);
+        // Universe straddles two chunks with a ragged tail (not % 64).
+        let n = 100_001;
+        let mut a_bm = Bitmap::zeros(n);
+        let mut b_bm = Bitmap::zeros(n);
+        for _ in 0..2_500 {
+            a_bm.set(rng.next_below(n as u64) as usize, true);
+            b_bm.set(rng.next_below(n as u64) as usize, true);
+        }
+        // One dense stretch so a Dense container participates too.
+        for i in 60_000..66_000 {
+            a_bm.set(i, true);
+        }
+        let a = RoaringBitmap::from_bitmap(&a_bm);
+        let b = RoaringBitmap::from_bitmap(&b_bm);
+        assert_eq!(a.and_not(&b).to_bitmap(n), a_bm.and_not(&b_bm));
+        assert_eq!(b.and_not(&a).to_bitmap(n), b_bm.and_not(&a_bm));
+        let mut acc = b_bm.clone();
+        a.and_into(&mut acc);
+        assert_eq!(acc, b_bm.and(&a_bm), "and_into");
+        let mut acc = b_bm.clone();
+        a.and_not_into(&mut acc);
+        assert_eq!(acc, b_bm.and_not(&a_bm), "and_not_into");
+        let mut acc = b_bm.clone();
+        a.or_into(&mut acc);
+        assert_eq!(acc, b_bm.or(&a_bm), "or_into");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 use super::bitmap::Bitmap;
 
 const GROUP_BITS: usize = 31;
+const GROUP_MASK: u32 = (1 << GROUP_BITS) - 1;
 const FILL_FLAG: u32 = 1 << 31;
 const FILL_BIT: u32 = 1 << 30;
 const MAX_RUN: u32 = (1 << 30) - 1;
@@ -210,6 +211,109 @@ impl WahBitmap {
         self.merge(other, |a, b| a | b)
     }
 
+    /// `self & !other` on the compressed form — the query engine's ANDNOT
+    /// primitive without decompressing either side. The complement is
+    /// masked to the 31-bit payload so fill words stay canonical.
+    pub fn and_not(&self, other: &Self) -> Self {
+        self.merge(other, |a, b| a & !b & GROUP_MASK)
+    }
+
+    /// Bitwise XOR on the compressed form.
+    pub fn xor(&self, other: &Self) -> Self {
+        self.merge(other, |a, b| a ^ b)
+    }
+
+    /// Bitwise complement on the compressed form: fills flip their fill
+    /// bit in O(1), literals flip their payload. The trailing partial
+    /// group is masked to `nbits` so padding bits stay zero.
+    #[allow(clippy::should_implement_trait)]
+    pub fn not(&self) -> Self {
+        let ngroups = self.nbits.div_ceil(GROUP_BITS);
+        let tail = self.nbits % GROUP_BITS;
+        let mut enc = GroupCompressor::with_capacity(self.words.len());
+        let mut cur = GroupCursor::new(&self.words);
+        let mut consumed = 0usize;
+        while consumed < ngroups {
+            let span = cur.fill_remaining as usize;
+            if span >= 1 {
+                enc.push_run(cur.fill_value == 0, span as u32);
+                cur.skip(span as u32);
+                consumed += span;
+                continue;
+            }
+            let is_partial = tail != 0 && consumed == ngroups - 1;
+            let mask = if is_partial { (1u32 << tail) - 1 } else { GROUP_MASK };
+            enc.push(!cur.next_group() & mask, is_partial);
+            consumed += 1;
+        }
+        Self { nbits: self.nbits, words: enc.finish() }
+    }
+
+    /// AND this compressed row into an uncompressed accumulator, run by
+    /// run: a zero fill clears the whole span in O(span/64), a one fill
+    /// is a no-op, a literal clears only the bits its group lacks. This
+    /// is the planner's workhorse — the accumulator never round-trips
+    /// through decompression.
+    pub fn and_into(&self, acc: &mut Bitmap) {
+        assert_eq!(self.nbits, acc.len(), "length mismatch");
+        let mut bit_pos = 0usize;
+        for &w in &self.words {
+            if w & FILL_FLAG != 0 {
+                let len = (w & MAX_RUN) as usize * GROUP_BITS;
+                if w & FILL_BIT == 0 {
+                    clear_range(acc.words_mut(), bit_pos, len);
+                }
+                bit_pos += len;
+            } else {
+                let take = GROUP_BITS.min(self.nbits - bit_pos);
+                let tmask = ((1u64 << take) - 1) as u32;
+                clear_group(acc.words_mut(), bit_pos, !w & tmask);
+                bit_pos += take;
+            }
+        }
+    }
+
+    /// `acc &= !self` without decompressing: a one fill clears the span,
+    /// a zero fill is a no-op, a literal clears its set bits.
+    pub fn and_not_into(&self, acc: &mut Bitmap) {
+        assert_eq!(self.nbits, acc.len(), "length mismatch");
+        let mut bit_pos = 0usize;
+        for &w in &self.words {
+            if w & FILL_FLAG != 0 {
+                let len = (w & MAX_RUN) as usize * GROUP_BITS;
+                if w & FILL_BIT != 0 {
+                    clear_range(acc.words_mut(), bit_pos, len);
+                }
+                bit_pos += len;
+            } else {
+                let take = GROUP_BITS.min(self.nbits - bit_pos);
+                let tmask = ((1u64 << take) - 1) as u32;
+                clear_group(acc.words_mut(), bit_pos, w & tmask);
+                bit_pos += take;
+            }
+        }
+    }
+
+    /// OR this compressed row into an uncompressed accumulator.
+    pub fn or_into(&self, acc: &mut Bitmap) {
+        assert_eq!(self.nbits, acc.len(), "length mismatch");
+        let mut bit_pos = 0usize;
+        for &w in &self.words {
+            if w & FILL_FLAG != 0 {
+                let len = (w & MAX_RUN) as usize * GROUP_BITS;
+                if w & FILL_BIT != 0 {
+                    set_ones_range(acc.words_mut(), bit_pos, len);
+                }
+                bit_pos += len;
+            } else {
+                let take = GROUP_BITS.min(self.nbits - bit_pos);
+                let tmask = ((1u64 << take) - 1) as u32;
+                or_group(acc.words_mut(), bit_pos, w & tmask);
+                bit_pos += take;
+            }
+        }
+    }
+
     fn merge(&self, other: &Self, op: impl Fn(u32, u32) -> u32) -> Self {
         assert_eq!(self.nbits, other.nbits, "length mismatch");
         let mut a = GroupCursor::new(&self.words);
@@ -286,6 +390,40 @@ fn or_group(words: &mut [u64], start: usize, group: u32) {
     // for the trailing partial group, whose masked bits all fit).
     if off > 64 - GROUP_BITS && wi + 1 < words.len() {
         words[wi + 1] |= (group as u64) >> (64 - off);
+    }
+}
+
+/// Clear the bits of a 31-bit mask at bit offset `start` (the AND-family
+/// counterpart of [`or_group`]: only zero bits are ever written, so the
+/// tail invariant is preserved by construction).
+#[inline]
+fn clear_group(words: &mut [u64], start: usize, mask: u32) {
+    let wi = start / 64;
+    let off = start % 64;
+    words[wi] &= !((mask as u64) << off);
+    if off > 64 - GROUP_BITS && wi + 1 < words.len() {
+        words[wi + 1] &= !((mask as u64) >> (64 - off));
+    }
+}
+
+/// Clear `len` consecutive bits starting at `start`, word-at-a-time.
+fn clear_range(words: &mut [u64], start: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    let end = start + len; // exclusive
+    let (w0, b0) = (start / 64, start % 64);
+    let (w1, b1) = (end / 64, end % 64);
+    if w0 == w1 {
+        words[w0] &= !((((1u128 << (b1 - b0)) - 1) << b0) as u64);
+        return;
+    }
+    words[w0] &= !(u64::MAX << b0);
+    for w in words.iter_mut().take(w1).skip(w0 + 1) {
+        *w = 0;
+    }
+    if b1 > 0 {
+        words[w1] &= !((1u64 << b1) - 1);
     }
 }
 
@@ -411,6 +549,77 @@ mod tests {
         let (wa, wb) = (WahBitmap::compress(&a), WahBitmap::compress(&b));
         assert_eq!(wa.and(&wb).decompress(), a.and(&b));
         assert_eq!(wa.or(&wb).decompress(), a.or(&b));
+    }
+
+    #[test]
+    fn compressed_and_not_xor_not_match_plain() {
+        // Ragged tail (400 % 31 != 0) plus long runs on both sides.
+        for n in [400usize, 31 * 40, 1000] {
+            let a = bm_from((0..n).map(|i| i % 5 == 0 || (100..300).contains(&i)));
+            let b = bm_from((0..n).map(|i| i % 3 == 0));
+            let (wa, wb) = (WahBitmap::compress(&a), WahBitmap::compress(&b));
+            assert_eq!(wa.and_not(&wb).decompress(), a.and_not(&b), "n={n}");
+            assert_eq!(wa.xor(&wb).decompress(), a.xor(&b), "n={n}");
+            assert_eq!(wa.not().decompress(), a.not(), "n={n}");
+            assert_eq!(wa.not().count_ones(), a.not().count_ones(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn into_kernels_match_plain() {
+        for n in [1usize, 62, 63, 64, 200, 31 * 50, 997] {
+            let a = bm_from((0..n).map(|i| i % 7 < 2 || (40..80).contains(&i)));
+            let acc0 = bm_from((0..n).map(|i| i % 2 == 0));
+            let wa = WahBitmap::compress(&a);
+            let mut acc = acc0.clone();
+            wa.and_into(&mut acc);
+            assert_eq!(acc, acc0.and(&a), "and_into n={n}");
+            let mut acc = acc0.clone();
+            wa.and_not_into(&mut acc);
+            assert_eq!(acc, acc0.and_not(&a), "and_not_into n={n}");
+            let mut acc = acc0.clone();
+            wa.or_into(&mut acc);
+            assert_eq!(acc, acc0.or(&a), "or_into n={n}");
+        }
+    }
+
+    #[test]
+    fn fill_runs_longer_than_max_run_split_not_truncate() {
+        // MAX_RUN is 2^30 - 1 groups (~33 Gbit), so the saturation path is
+        // exercised at the encoder level: a run of 3*MAX_RUN + 7 groups
+        // must come out as multiple fill words whose lengths sum exactly.
+        let total = 3u64 * MAX_RUN as u64 + 7;
+        let mut enc = GroupCompressor::new();
+        enc.push_run(true, MAX_RUN);
+        enc.push_run(true, MAX_RUN);
+        enc.push_run(true, MAX_RUN + 7);
+        let words = enc.finish();
+        assert_eq!(words.len(), 4, "saturated run must split: {words:?}");
+        let mut decoded = 0u64;
+        for &w in &words {
+            assert_ne!(w & FILL_FLAG, 0, "all words are fills");
+            assert_ne!(w & FILL_BIT, 0, "all fills are one-fills");
+            let len = w & MAX_RUN;
+            assert!((1..=MAX_RUN).contains(&len), "fill length in range");
+            decoded += len as u64;
+        }
+        assert_eq!(decoded, total, "no groups truncated");
+    }
+
+    #[test]
+    fn push_at_saturated_run_starts_new_fill() {
+        // The per-group push path at run_len == MAX_RUN: the full group
+        // must flush the saturated fill and begin a fresh run, not be
+        // dropped or wrapped into the length field.
+        let mut enc = GroupCompressor::new();
+        enc.push_run(true, MAX_RUN);
+        enc.push((1u32 << GROUP_BITS) - 1, false);
+        enc.push((1u32 << GROUP_BITS) - 1, false);
+        let words = enc.finish();
+        assert_eq!(
+            words,
+            vec![FILL_FLAG | FILL_BIT | MAX_RUN, FILL_FLAG | FILL_BIT | 2]
+        );
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! `bench_gate` — the CI bench-regression comparator.
+//!
+//! Reads the committed `BENCH_baseline.json` and one or more freshly
+//! emitted `BENCH_*.json` files (hotpath + compression, written by
+//! `cargo bench` under `BENCH_SMOKE=1`), matches cases by name, and fails
+//! (exit 1) when any tracked kernel's mean time regresses more than the
+//! tolerance (default 25%, `--tolerance` / `BENCH_GATE_TOLERANCE` / the
+//! baseline's own `tolerance` field).
+//!
+//! Baselines carry a `calibrated` flag: while it is `false` (a
+//! placeholder committed before the first pinned-host run), the gate
+//! reports every comparison but exits 0, so a fresh repo is not red on
+//! invented numbers. Calibrate and enforce with:
+//!
+//! ```text
+//! cd rust && BENCH_SMOKE=1 cargo bench --bench hotpath \
+//!         && BENCH_SMOKE=1 cargo bench --bench ablations \
+//!         && cargo run --release --bin bench_gate -- \
+//!            --update BENCH_baseline.json BENCH_hotpath.json BENCH_compression.json
+//! ```
+//!
+//! `--update` rewrites the baseline from the current files and sets
+//! `calibrated: true`.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use sotb_bic::substrate::json::Json;
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+/// Flatten every `{"name": ..., "mean_s": ...}` object found in any
+/// top-level array of the document — matches the layout of every
+/// `BENCH_*.json` this repo writes (and of the baseline's `cases`).
+fn means(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Json::Obj(map) = doc {
+        for v in map.values() {
+            let Some(cases) = v.as_arr() else { continue };
+            for c in cases {
+                if let (Some(name), Some(mean)) = (
+                    c.get("name").and_then(Json::as_str),
+                    c.get("mean_s").and_then(Json::as_f64),
+                ) {
+                    out.push((name.to_string(), mean));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: bench_gate [--tolerance X] <baseline.json> <current.json>...\n\
+         \u{20}      bench_gate --update <baseline.json> <current.json>..."
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let mut update = false;
+    let mut tolerance: Option<f64> = std::env::var("BENCH_GATE_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    while let Some(first) = args.first().cloned() {
+        match first.as_str() {
+            "--update" => {
+                update = true;
+                args.remove(0);
+            }
+            "--tolerance" => {
+                args.remove(0);
+                if args.is_empty() {
+                    return usage();
+                }
+                match args.remove(0).parse() {
+                    Ok(t) => tolerance = Some(t),
+                    Err(_) => return usage(),
+                }
+            }
+            _ => break,
+        }
+    }
+    if args.len() < 2 {
+        return usage();
+    }
+    let baseline_path = args.remove(0);
+
+    let mut current: BTreeMap<String, f64> = BTreeMap::new();
+    for path in &args {
+        let doc = match load(path) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("bench_gate: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        for (name, mean) in means(&doc) {
+            current.insert(name, mean);
+        }
+    }
+    if current.is_empty() {
+        eprintln!("bench_gate: no cases found in {args:?}");
+        return ExitCode::FAILURE;
+    }
+
+    if update {
+        let tol = tolerance.unwrap_or(0.25);
+        let cases: Vec<Json> = current
+            .iter()
+            .map(|(name, mean)| {
+                Json::obj([
+                    ("name", name.as_str().into()),
+                    ("mean_s", (*mean).into()),
+                ])
+            })
+            .collect();
+        let doc = Json::obj([
+            ("calibrated", true.into()),
+            ("tolerance", tol.into()),
+            ("cases", Json::Arr(cases)),
+        ]);
+        return match std::fs::write(&baseline_path, doc.render() + "\n") {
+            Ok(()) => {
+                println!(
+                    "bench_gate: wrote {} calibrated cases to {baseline_path}",
+                    current.len()
+                );
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("bench_gate: {baseline_path}: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let baseline_doc = match load(&baseline_path) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    // Absent flag means an already-calibrated baseline: enforce.
+    let calibrated = baseline_doc
+        .get("calibrated")
+        .and_then(Json::as_bool)
+        .unwrap_or(true);
+    let tol = tolerance
+        .or_else(|| baseline_doc.get("tolerance").and_then(Json::as_f64))
+        .unwrap_or(0.25);
+
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    let mut missing = 0usize;
+    for (name, base) in means(&baseline_doc) {
+        let Some(&cur) = current.get(&name) else {
+            // Smoke runs legitimately skip cases (no PJRT artifacts, a
+            // single-core host): warn, do not fail.
+            println!("  missing  {name} (baseline {base:.3e} s)");
+            missing += 1;
+            continue;
+        };
+        compared += 1;
+        let ratio = if base > 0.0 { cur / base } else { 1.0 };
+        let verdict = if ratio > 1.0 + tol {
+            regressions.push((name.clone(), base, cur, ratio));
+            "REGRESSED"
+        } else if ratio < 1.0 - tol {
+            "improved"
+        } else {
+            "ok"
+        };
+        println!("  {verdict:<9} {name}: {base:.3e} -> {cur:.3e} s ({ratio:.2}x)");
+    }
+    println!(
+        "bench_gate: {compared} compared, {missing} missing, {} regressed \
+         (tolerance {:.0}%)",
+        regressions.len(),
+        tol * 100.0
+    );
+    if compared == 0 {
+        eprintln!("bench_gate: baseline and current share no cases");
+        return ExitCode::FAILURE;
+    }
+    if !regressions.is_empty() {
+        for (name, base, cur, ratio) in &regressions {
+            eprintln!(
+                "bench_gate: REGRESSION {name}: {base:.3e} -> {cur:.3e} s \
+                 ({ratio:.2}x > {:.2}x)",
+                1.0 + tol
+            );
+        }
+        if calibrated {
+            return ExitCode::FAILURE;
+        }
+        println!(
+            "bench_gate: baseline is uncalibrated (calibrated: false) — \
+             reporting only; run with --update on a pinned host to enforce"
+        );
+    }
+    ExitCode::SUCCESS
+}

@@ -3,6 +3,7 @@
 //! memory in advance").
 
 use crate::bic::bitmap::BitmapIndex;
+use crate::bic::codec::CompressedIndex;
 use crate::bic::BicConfig;
 
 /// One unit of indexing work.
@@ -73,6 +74,10 @@ pub struct CompletedBatch {
     /// The index, when result computation was requested (None in
     /// timing-only simulations of very long traces).
     pub index: Option<BitmapIndex>,
+    /// The adaptively compressed form, when the scheduler runs the
+    /// compressed-execution tier (its byte count is what the extmem
+    /// channel was charged).
+    pub compressed: Option<CompressedIndex>,
 }
 
 impl CompletedBatch {
@@ -125,6 +130,7 @@ mod tests {
             core: 0,
             cycles: 10,
             index: None,
+            compressed: None,
         };
         assert!((c.latency() - 2.5).abs() < 1e-12);
     }

@@ -16,6 +16,9 @@ pub struct ExtMem {
     /// Totals for conservation checks + metrics.
     bytes_in: u64,
     bytes_out: u64,
+    /// Uncompressed size of the results behind compressed Out transfers
+    /// (the channel itself only ever carries `bytes_out`).
+    bytes_out_raw: u64,
     transfers: u64,
     /// Total time requests spent waiting for the channel.
     queue_wait: f64,
@@ -38,6 +41,7 @@ impl ExtMem {
             busy_until: 0.0,
             bytes_in: 0,
             bytes_out: 0,
+            bytes_out_raw: 0,
             transfers: 0,
             queue_wait: 0.0,
         }
@@ -63,12 +67,32 @@ impl ExtMem {
         self.busy_until
     }
 
+    /// Transfer a BI result stored compressed: the channel is occupied
+    /// for the *actual* compressed byte count (that is what moves over
+    /// the wire), while the uncompressed size is tracked so the metrics
+    /// layer can report the end-to-end compression ratio.
+    pub fn transfer_compressed_out(
+        &mut self,
+        now: f64,
+        raw_bytes: usize,
+        compressed_bytes: usize,
+    ) -> f64 {
+        self.bytes_out_raw += raw_bytes as u64;
+        self.transfer(now, compressed_bytes, Dir::Out)
+    }
+
     pub fn bytes_in(&self) -> u64 {
         self.bytes_in
     }
 
     pub fn bytes_out(&self) -> u64 {
         self.bytes_out
+    }
+
+    /// Uncompressed bytes behind compressed Out transfers (0 when every
+    /// result moved uncompressed).
+    pub fn bytes_out_raw(&self) -> u64 {
+        self.bytes_out_raw
     }
 
     pub fn transfers(&self) -> u64 {
@@ -124,8 +148,21 @@ mod tests {
         m.transfer(0.0, 200, Dir::Out);
         assert_eq!(m.bytes_in(), 300);
         assert_eq!(m.bytes_out(), 200);
+        assert_eq!(m.bytes_out_raw(), 0);
         assert_eq!(m.transfers(), 2);
         let u = m.utilization(1.0);
         assert!((u - 500e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compressed_transfer_charges_compressed_bytes() {
+        let mut m = ExtMem::new(100.0);
+        // 1000 raw bytes compressed 10x: the channel is busy for the
+        // 100 compressed bytes only.
+        let done = m.transfer_compressed_out(0.0, 1000, 100);
+        assert!((done - 1.0).abs() < 1e-12, "charged compressed bytes");
+        assert_eq!(m.bytes_out(), 100);
+        assert_eq!(m.bytes_out_raw(), 1000);
+        assert_eq!(m.transfers(), 1);
     }
 }

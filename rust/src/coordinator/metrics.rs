@@ -55,6 +55,12 @@ pub struct SimReport {
     pub extmem_queue_wait: f64,
     /// External-memory channel utilization.
     pub extmem_utilization: f64,
+    /// BI result bytes as produced (uncompressed form).
+    pub output_bytes_raw: u64,
+    /// BI result bytes actually transferred to external memory
+    /// (compressed when the compressed-execution tier is on; equal to
+    /// `output_bytes_raw` otherwise).
+    pub output_bytes_stored: u64,
 }
 
 impl SimReport {
@@ -74,6 +80,15 @@ impl SimReport {
     /// Average total power across the run [W].
     pub fn avg_power(&self) -> f64 {
         self.energy.total() / self.horizon
+    }
+
+    /// Result-compression ratio achieved on the output channel
+    /// (raw / stored); 1.0 when nothing moved or compression was off.
+    pub fn output_compression_ratio(&self) -> f64 {
+        if self.output_bytes_stored == 0 {
+            return 1.0;
+        }
+        self.output_bytes_raw as f64 / self.output_bytes_stored as f64
     }
 }
 
@@ -115,9 +130,33 @@ mod tests {
             },
             extmem_queue_wait: 0.0,
             extmem_utilization: 0.1,
+            output_bytes_raw: 4_000,
+            output_bytes_stored: 1_000,
         };
         assert!((r.throughput_mbps() - 2.0).abs() < 1e-12);
         assert!((r.energy_per_byte() - 0.5e-6).abs() < 1e-15);
         assert!((r.avg_power() - 1.0).abs() < 1e-12);
+        assert!((r.output_compression_ratio() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_ratio_defaults_to_one() {
+        let mut r = SimReport {
+            completed: 0,
+            offered: 0,
+            requeued: 0,
+            horizon: 1.0,
+            input_bytes: 0,
+            latency: LatencyStats::default(),
+            energy: EnergyLedger::default(),
+            extmem_queue_wait: 0.0,
+            extmem_utilization: 0.0,
+            output_bytes_raw: 0,
+            output_bytes_stored: 0,
+        };
+        assert_eq!(r.output_compression_ratio(), 1.0);
+        r.output_bytes_raw = 10;
+        r.output_bytes_stored = 10;
+        assert_eq!(r.output_compression_ratio(), 1.0);
     }
 }

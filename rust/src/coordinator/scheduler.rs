@@ -19,6 +19,8 @@ use super::extmem::{Dir, ExtMem};
 use super::metrics::{LatencyStats, SimReport};
 use super::policy::Policy;
 use super::power_mgr::{CoreState, PowerManager};
+use crate::bic::bitmap::BitmapIndex;
+use crate::bic::codec::CompressedIndex;
 use crate::bic::{BicConfig, BicCore};
 use crate::power::calibration::Hertz;
 use crate::power::{delay, Supply};
@@ -43,6 +45,11 @@ pub struct SchedulerConfig {
     /// Compute actual bitmap results via the golden model (off for pure
     /// timing studies of long traces).
     pub compute_results: bool,
+    /// Run the compressed-execution tier: results are adaptively
+    /// compressed on-core and the external-memory channel is charged the
+    /// *actual* compressed byte count instead of the packed-raw size.
+    /// Implies result computation (the bytes must exist to be counted).
+    pub compress_results: bool,
     /// Failure injection: (core, time) pairs — the core dies at `time`.
     pub core_failures: Vec<(usize, f64)>,
 }
@@ -60,8 +67,15 @@ impl SchedulerConfig {
             policy: Policy::CgThenRbb { idle_to_cg: 1e-3, cg_to_rbb: 0.1 },
             extmem_bandwidth: 400e6,
             compute_results: true,
+            compress_results: false,
             core_failures: Vec::new(),
         }
+    }
+
+    /// [`SchedulerConfig::chip_system`] with the compressed-execution
+    /// tier enabled.
+    pub fn compressed_system(cores: usize) -> Self {
+        Self { compress_results: true, ..Self::chip_system(cores) }
     }
 
     pub fn frequency(&self) -> Hertz {
@@ -107,6 +121,9 @@ struct Assignment {
     batch: Option<usize>,
     epoch: u64,
     compute_end: f64,
+    /// Result computed at ComputeDone when the compressed tier is on
+    /// (the compressed bytes decide the output transfer size).
+    pending: Option<(BitmapIndex, CompressedIndex)>,
 }
 
 /// The coordinator.
@@ -202,6 +219,15 @@ impl Scheduler {
             .iter()
             .map(|c| self.batches[c.id as usize].input_bytes() as u64)
             .sum();
+        // The only Out transfers are BI results, so the channel's totals
+        // are the output-side byte accounting; when compression was off,
+        // stored == raw by definition.
+        let output_bytes_stored = self.extmem.bytes_out();
+        let output_bytes_raw = if self.cfg.compress_results {
+            self.extmem.bytes_out_raw()
+        } else {
+            output_bytes_stored
+        };
         let report = SimReport {
             completed: self.completed.len(),
             offered,
@@ -212,6 +238,8 @@ impl Scheduler {
             energy,
             extmem_queue_wait: self.extmem.queue_wait(),
             extmem_utilization: self.extmem.utilization(horizon.max(f64::MIN_POSITIVE)),
+            output_bytes_raw,
+            output_bytes_stored,
         };
         (report, self.completed)
     }
@@ -234,7 +262,18 @@ impl Scheduler {
                 self.assignments[core].compute_end = now;
                 let batch = self.assignments[core].batch.expect("assignment");
                 let out_bytes = self.batches[batch].output_bytes(&self.cfg.core_cfg);
-                let done = self.extmem.transfer(now, out_bytes, Dir::Out);
+                let done = if self.cfg.compress_results {
+                    // The compressed tier moves the result in its actual
+                    // encoded size, so the index must exist now.
+                    let b = &self.batches[batch];
+                    let bi = self.golden.index(&b.records, &b.keys);
+                    let ci = CompressedIndex::from_index(&bi);
+                    let stored = ci.compressed_bytes();
+                    self.assignments[core].pending = Some((bi, ci));
+                    self.extmem.transfer_compressed_out(now, out_bytes, stored)
+                } else {
+                    self.extmem.transfer(now, out_bytes, Dir::Out)
+                };
                 self.push_event(done, EventKind::OutputDone { core, epoch });
             }
             EventKind::OutputDone { core, epoch } => {
@@ -242,11 +281,14 @@ impl Scheduler {
                     return;
                 }
                 let batch = self.assignments[core].batch.take().expect("assignment");
+                let pending = self.assignments[core].pending.take();
                 let b = &self.batches[batch];
-                let index = if self.cfg.compute_results {
-                    Some(self.golden.index(&b.records, &b.keys))
-                } else {
-                    None
+                let (index, compressed) = match pending {
+                    Some((bi, ci)) => (Some(bi), Some(ci)),
+                    None if self.cfg.compute_results => {
+                        (Some(self.golden.index(&b.records, &b.keys)), None)
+                    }
+                    None => (None, None),
                 };
                 self.completed.push(CompletedBatch {
                     id: b.id,
@@ -256,6 +298,7 @@ impl Scheduler {
                     core,
                     cycles: self.cfg.core_cfg.cycles_per_batch(),
                     index,
+                    compressed,
                 });
                 // Release the core: next batch or the demotion ladder.
                 if let Some(next) = self.queue.pop_front() {
@@ -284,6 +327,7 @@ impl Scheduler {
                 // Invalidate in-flight work and requeue its batch.
                 if let Some(batch) = self.assignments[core].batch.take() {
                     self.assignments[core].epoch += 1;
+                    self.assignments[core].pending = None;
                     self.queue.push_front(batch);
                     self.requeued += 1;
                 }
@@ -425,6 +469,37 @@ mod tests {
         // Average power over the mostly-idle run must be far below one
         // core's active power.
         assert!(report.avg_power() < 1e-4, "avg {}", report.avg_power());
+    }
+
+    #[test]
+    fn compressed_tier_matches_golden_and_charges_stored_bytes() {
+        let trace = steady_trace(12, 1000.0, 7);
+        let expect: Vec<_> = {
+            let mut core = BicCore::new(BicConfig::CHIP);
+            trace.iter().map(|b| core.index(&b.records, &b.keys)).collect()
+        };
+        let (report, completed) =
+            Scheduler::new(SchedulerConfig::compressed_system(2)).run_collect(trace);
+        assert_eq!(report.completed, 12);
+        // The raw side of the accounting is the packed-artifact size.
+        let per_batch =
+            BicConfig::CHIP.m_keys * BicConfig::CHIP.n_records.div_ceil(32) * 4;
+        assert_eq!(report.output_bytes_raw, 12 * per_batch as u64);
+        assert!(report.output_bytes_stored > 0);
+        // Raw-codec rows charge interchange bytes, so the compressed
+        // transfer never exceeds the uncompressed one it replaces.
+        assert!(report.output_bytes_stored <= report.output_bytes_raw);
+        assert!(report.output_compression_ratio() >= 1.0);
+        let mut stored_total = 0u64;
+        for c in &completed {
+            let ci = c.compressed.as_ref().expect("compressed tier result");
+            let bi = c.index.as_ref().expect("index retained");
+            assert_eq!(bi, &expect[c.id as usize], "batch {}", c.id);
+            assert_eq!(&ci.to_index(), bi, "compressed round-trip {}", c.id);
+            stored_total += ci.compressed_bytes() as u64;
+        }
+        // The channel was charged exactly the compressed bytes.
+        assert_eq!(report.output_bytes_stored, stored_total);
     }
 
     #[test]

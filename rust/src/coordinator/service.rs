@@ -16,13 +16,22 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::bic::bitmap::BitmapIndex;
+use crate::bic::codec::CompressedIndex;
 use crate::runtime::{BicExecutable, BicVariant, Runtime};
 
-/// One indexing request.
-struct Job {
-    records: Vec<Vec<i32>>,
-    keys: Vec<i32>,
-    reply: Sender<Result<BitmapIndex>>,
+/// One indexing request. Compressed jobs encode the result inside the
+/// worker thread, so codec analysis parallelizes with indexing.
+enum Job {
+    Plain {
+        records: Vec<Vec<i32>>,
+        keys: Vec<i32>,
+        reply: Sender<Result<BitmapIndex>>,
+    },
+    Compressed {
+        records: Vec<Vec<i32>>,
+        keys: Vec<i32>,
+        reply: Sender<Result<CompressedIndex>>,
+    },
 }
 
 /// Handle to a running service.
@@ -71,9 +80,20 @@ impl IndexService {
                     // Pull the next job; hold the lock only for the recv.
                     let job = { rx.lock().unwrap().recv() };
                     let Ok(job) = job else { break }; // queue closed
-                    let result = exe.index(&job.records, &job.keys);
-                    *counters[w].lock().unwrap() += 1;
-                    let _ = job.reply.send(result);
+                    match job {
+                        Job::Plain { records, keys, reply } => {
+                            let result = exe.index(&records, &keys);
+                            *counters[w].lock().unwrap() += 1;
+                            let _ = reply.send(result);
+                        }
+                        Job::Compressed { records, keys, reply } => {
+                            let result = exe
+                                .index(&records, &keys)
+                                .map(|bi| CompressedIndex::from_index(&bi));
+                            *counters[w].lock().unwrap() += 1;
+                            let _ = reply.send(result);
+                        }
+                    }
                 }
             }));
         }
@@ -92,7 +112,21 @@ impl IndexService {
     ) -> Receiver<Result<BitmapIndex>> {
         let (reply, rx) = channel();
         self.queue
-            .send(Job { records, keys, reply })
+            .send(Job::Plain { records, keys, reply })
+            .expect("service stopped");
+        rx
+    }
+
+    /// Submit a batch whose result comes back adaptively compressed; the
+    /// encoding runs on the worker thread.
+    pub fn submit_compressed(
+        &self,
+        records: Vec<Vec<i32>>,
+        keys: Vec<i32>,
+    ) -> Receiver<Result<CompressedIndex>> {
+        let (reply, rx) = channel();
+        self.queue
+            .send(Job::Compressed { records, keys, reply })
             .expect("service stopped");
         rx
     }
@@ -100,6 +134,17 @@ impl IndexService {
     /// Convenience: submit and block for the result.
     pub fn index(&self, records: Vec<Vec<i32>>, keys: Vec<i32>) -> Result<BitmapIndex> {
         self.submit(records, keys).recv().expect("worker dropped reply")
+    }
+
+    /// Convenience: submit and block for the compressed result.
+    pub fn index_compressed(
+        &self,
+        records: Vec<Vec<i32>>,
+        keys: Vec<i32>,
+    ) -> Result<CompressedIndex> {
+        self.submit_compressed(records, keys)
+            .recv()
+            .expect("worker dropped reply")
     }
 
     /// Jobs completed per worker (routing balance inspection).
@@ -165,6 +210,25 @@ mod tests {
             counts.iter().filter(|&&c| c > 0).count() >= 2,
             "burst should spread over workers: {counts:?}"
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn compressed_jobs_roundtrip_and_interleave_with_plain() {
+        let Some(variant) = chip_variant() else { return };
+        let svc = IndexService::start(2, &variant).expect("start");
+        let mut golden = BicCore::new(BicConfig::CHIP);
+        let mut rng = Xoshiro256::seeded(808);
+        for _ in 0..6 {
+            let (recs, keys) = random_batch(&mut rng);
+            let expect = golden.index(&recs, &keys);
+            let plain = svc.index(recs.clone(), keys.clone()).expect("plain");
+            let compressed =
+                svc.index_compressed(recs, keys).expect("compressed");
+            assert_eq!(plain, expect);
+            assert_eq!(compressed.to_index(), expect);
+            assert!(compressed.compressed_bytes() > 0);
+        }
         svc.shutdown();
     }
 

@@ -13,6 +13,7 @@ use std::thread;
 
 use super::batch::Batch;
 use crate::bic::bitmap::BitmapIndex;
+use crate::bic::codec::CompressedIndex;
 use crate::bic::{BicConfig, BicCore};
 
 /// A fixed-geometry indexer that fans batches out over host cores.
@@ -81,6 +82,48 @@ impl ShardedIndexer {
         });
         shard_results.into_iter().flatten().collect()
     }
+
+    /// Like [`ShardedIndexer::index_batches`], but every shard worker
+    /// also adaptively compresses its results, so row analysis and codec
+    /// encoding parallelize with the indexing itself. The merge stays
+    /// deterministic (shard order), and the adaptive choice is a pure
+    /// function of each row, so the output is identical to compressing a
+    /// sequential run.
+    pub fn index_batches_compressed(&self, batches: &[Batch]) -> Vec<CompressedIndex> {
+        for b in batches {
+            b.check(&self.cfg)
+                .unwrap_or_else(|e| panic!("invalid batch: {e}"));
+        }
+        if batches.is_empty() {
+            return Vec::new();
+        }
+        let cfg = self.cfg;
+        let shards = self.shards.min(batches.len());
+        let chunk = batches.len().div_ceil(shards);
+        let shard_results: Vec<Vec<CompressedIndex>> = thread::scope(|s| {
+            let handles: Vec<_> = batches
+                .chunks(chunk)
+                .map(|slice| {
+                    s.spawn(move || {
+                        let mut core = BicCore::new(cfg);
+                        slice
+                            .iter()
+                            .map(|b| {
+                                CompressedIndex::from_index(
+                                    &core.index(&b.records, &b.keys),
+                                )
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        shard_results.into_iter().flatten().collect()
+    }
 }
 
 /// Convenience: shard `batches` over `shards` workers with geometry `cfg`.
@@ -125,8 +168,29 @@ mod tests {
     }
 
     #[test]
+    fn compressed_shards_match_sequential_compression() {
+        let batches = trace(19, 33);
+        let mut core = BicCore::new(BicConfig::CHIP);
+        let expect: Vec<CompressedIndex> = batches
+            .iter()
+            .map(|b| CompressedIndex::from_index(&core.index(&b.records, &b.keys)))
+            .collect();
+        for shards in [1, 3, 8] {
+            let got = ShardedIndexer::new(BicConfig::CHIP, shards)
+                .index_batches_compressed(&batches);
+            assert_eq!(got.len(), expect.len(), "shards={shards}");
+            for (g, e) in got.iter().zip(&expect) {
+                assert_eq!(g, e, "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
     fn empty_trace_is_empty() {
         assert!(index_batches_sharded(BicConfig::CHIP, &[], 4).is_empty());
+        assert!(ShardedIndexer::new(BicConfig::CHIP, 4)
+            .index_batches_compressed(&[])
+            .is_empty());
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! energy proportionality only shows up under load variation.
 
 use super::batch::Batch;
-use crate::bic::BicConfig;
+use crate::bic::bitmap::{Bitmap, BitmapIndex};
+use crate::bic::{BicConfig, BicCore};
 use crate::substrate::rng::Xoshiro256;
 
 /// Record/key content distribution.
@@ -78,6 +79,30 @@ impl WorkloadGen {
         let id = self.next_id;
         self.next_id += 1;
         Batch { id, arrival, records, keys }
+    }
+
+    /// Build a long-row bitmap index by running the golden core over
+    /// `batches` generated batches and concatenating each attribute's
+    /// per-batch rows: `m_keys` rows over `batches * n_records` objects.
+    /// This is the shared row-shape instrument of the codec chooser, the
+    /// `compression` ablation, and the compressed-query bench — the
+    /// content distribution decides whether rows come out dense, runny,
+    /// or scattered-sparse.
+    pub fn attribute_rows(&mut self, batches: usize) -> BitmapIndex {
+        let cfg = self.cfg;
+        let mut core = BicCore::new(cfg);
+        let n = batches * cfg.n_records;
+        let mut rows = vec![Bitmap::zeros(n); cfg.m_keys];
+        for b in 0..batches {
+            let batch = self.batch_at(b as f64);
+            let bi = core.index(&batch.records, &batch.keys);
+            for (a, row) in rows.iter_mut().enumerate() {
+                for j in bi.row(a).iter_ones() {
+                    row.set_unchecked(b * cfg.n_records + j);
+                }
+            }
+        }
+        BitmapIndex::from_rows(rows)
     }
 
     /// Generate a whole arrival trace over `[0, duration)` seconds.
@@ -174,6 +199,55 @@ mod tests {
             assert!(b.check(&BicConfig::CHIP).is_ok());
             assert_eq!(b.id, i);
         }
+    }
+
+    #[test]
+    fn attribute_rows_concatenate_per_batch_results() {
+        let cfg = BicConfig { n_records: 8, w_words: 16, m_keys: 4 };
+        let batches = 5;
+        let bi = WorkloadGen::new(cfg, ContentDist::Uniform, 12).attribute_rows(batches);
+        assert_eq!(bi.num_attrs(), cfg.m_keys);
+        assert_eq!(bi.num_objects(), batches * cfg.n_records);
+        // Replay the same seed: object b*n + j must equal batch b's bit j.
+        let mut g = WorkloadGen::new(cfg, ContentDist::Uniform, 12);
+        let mut core = crate::bic::BicCore::new(cfg);
+        for b in 0..batches {
+            let batch = g.batch_at(b as f64);
+            let per = core.index(&batch.records, &batch.keys);
+            for a in 0..cfg.m_keys {
+                for j in 0..cfg.n_records {
+                    assert_eq!(
+                        bi.get(a, b * cfg.n_records + j),
+                        per.get(a, j),
+                        "attr {a} batch {b} bit {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_rows_are_runnier_than_uniform() {
+        // The clustered distribution exists to produce runny rows; the
+        // codec chooser depends on that signal being real.
+        let cfg = BicConfig { n_records: 64, w_words: 8, m_keys: 8 };
+        let uni = WorkloadGen::new(cfg, ContentDist::Uniform, 3).attribute_rows(64);
+        let clu = WorkloadGen::new(cfg, ContentDist::Clustered { spread: 8 }, 3)
+            .attribute_rows(64);
+        let mean_run = |bi: &BitmapIndex| {
+            let (mut ones, mut runs) = (0usize, 0usize);
+            for a in 0..bi.num_attrs() {
+                ones += bi.row(a).count_ones();
+                runs += bi.row(a).one_runs();
+            }
+            ones as f64 / runs.max(1) as f64
+        };
+        assert!(
+            mean_run(&clu) > mean_run(&uni),
+            "clustered {} vs uniform {}",
+            mean_run(&clu),
+            mean_run(&uni)
+        );
     }
 
     #[test]

@@ -5,7 +5,24 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::{format_si, Summary};
+
+/// True when `BENCH_SMOKE` selects the short CI measurement budget (the
+/// `bench-smoke` job via `ci.sh --bench`).
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// The bench-smoke measurement budget: same cases and names, ~10x less
+/// wall time per case.
+pub fn smoke_config() -> BenchConfig {
+    BenchConfig {
+        warmup: Duration::from_millis(20),
+        samples: 5,
+        min_sample_time: Duration::from_millis(2),
+    }
+}
 
 /// Harness configuration.
 #[derive(Clone, Copy, Debug)]
@@ -46,6 +63,28 @@ impl BenchResult {
         self.bytes_per_iter.map(|b| b as f64 / self.per_iter.mean)
     }
 
+    /// The `BENCH_*.json` case shape (`name`, `mean_s`, ...) that the
+    /// `bench_gate` regression comparator parses — one definition so the
+    /// emitting benches and the gate cannot drift apart.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj([
+            ("name", self.name.as_str().into()),
+            ("mean_s", self.per_iter.mean.into()),
+            ("stddev_s", self.per_iter.stddev.into()),
+            ("samples", self.per_iter.n.into()),
+            ("iters_per_sample", self.iters_per_sample.into()),
+        ]);
+        match self.bytes_per_iter {
+            Some(b) => j.set("bytes_per_iter", b),
+            None => j.set("bytes_per_iter", Json::Null),
+        }
+        match self.throughput() {
+            Some(tp) => j.set("throughput_bps", tp),
+            None => j.set("throughput_bps", Json::Null),
+        }
+        j
+    }
+
     /// One aligned report line.
     pub fn line(&self) -> String {
         let mut s = format!(
@@ -72,6 +111,17 @@ pub struct Bench {
 impl Bench {
     pub fn new(name: impl Into<String>) -> Self {
         Self { cfg: BenchConfig::default(), name: name.into(), bytes: None }
+    }
+
+    /// [`Bench::new`] under the environment-selected mode: the smoke
+    /// budget when [`smoke_mode`] is on, the default otherwise.
+    pub fn auto(name: impl Into<String>) -> Self {
+        let b = Self::new(name);
+        if smoke_mode() {
+            b.with_config(smoke_config())
+        } else {
+            b
+        }
     }
 
     pub fn with_config(mut self, cfg: BenchConfig) -> Self {
@@ -155,6 +205,20 @@ mod tests {
             .run(|| std::hint::black_box(42));
         let tp = r.throughput().unwrap();
         assert!(tp > 0.0);
+    }
+
+    #[test]
+    fn to_json_has_the_gate_fields() {
+        let r = BenchResult {
+            name: "x".into(),
+            per_iter: Summary::of(&[1e-6, 1e-6]),
+            iters_per_sample: 10,
+            bytes_per_iter: None,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("x"));
+        assert!(j.get("mean_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(j.get("bytes_per_iter"), Some(&Json::Null));
     }
 
     #[test]

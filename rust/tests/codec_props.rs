@@ -1,0 +1,223 @@
+//! Property tests for the compressed-execution tier: WAH/roaring/raw
+//! round-trip exactness, bit-identity of every compressed kernel
+//! (AND/OR/NOT/AND-NOT, same-codec and cross-codec, plus the
+//! into-accumulator forms) against the uncompressed reference, and
+//! differential equivalence of the selectivity-ordered compressed query
+//! planner — all over ragged tails (`n % 31 != 0`, `n % 64 != 0`),
+//! word-aligned sizes, and empty rows, and over indexes built from the
+//! three workload content distributions.
+
+use sotb_bic::bic::{
+    BicConfig, Bitmap, BitmapIndex, Codec, CodecBitmap, CompressedIndex, Query,
+};
+use sotb_bic::coordinator::{ContentDist, WorkloadGen};
+use sotb_bic::substrate::proptest::{check, Gen};
+
+fn arb_bitmap(g: &mut Gen, nbits: usize) -> Bitmap {
+    // Mix shapes: scattered-random, runny, and near-constant rows, so
+    // every codec sees both its best and worst case.
+    match g.usize_in(0, 2) {
+        0 => {
+            let density = g.f64_in(0.0, 1.0);
+            Bitmap::from_bools(&(0..nbits).map(|_| g.chance(density)).collect::<Vec<_>>())
+        }
+        1 => {
+            let mut bits = Vec::with_capacity(nbits);
+            let mut v = g.bool();
+            while bits.len() < nbits {
+                let len = (g.size(200) + 1).min(nbits - bits.len());
+                bits.extend(std::iter::repeat(v).take(len));
+                v = !v;
+            }
+            Bitmap::from_bools(&bits)
+        }
+        _ => {
+            if g.bool() {
+                Bitmap::zeros(nbits)
+            } else {
+                Bitmap::ones(nbits)
+            }
+        }
+    }
+}
+
+/// Sizes biased onto the codec word boundaries: ragged and exact
+/// multiples of the 31-bit WAH group and the 64-bit host word, plus 0.
+fn arb_len(g: &mut Gen) -> usize {
+    let base = g.size(1_800);
+    match g.usize_in(0, 3) {
+        0 => base,
+        1 => (base / 31) * 31,
+        2 => (base / 64) * 64,
+        _ => base + 1,
+    }
+}
+
+fn arb_codec(g: &mut Gen) -> Codec {
+    Codec::ALL[g.usize_in(0, 2)]
+}
+
+#[test]
+fn codec_roundtrip_exact_arbitrary() {
+    check("codec-roundtrip", 0xE0, 250, |g| {
+        let n = arb_len(g);
+        let a = arb_bitmap(g, n);
+        for codec in Codec::ALL {
+            let cb = CodecBitmap::from_bitmap_as(codec, &a);
+            if cb.to_bitmap() != a {
+                return Err(format!("{codec:?} roundtrip failed at n={n}"));
+            }
+            if cb.count_ones() != a.count_ones() {
+                return Err(format!("{codec:?} count_ones mismatch at n={n}"));
+            }
+            if cb.len() != n {
+                return Err(format!("{codec:?} len mismatch at n={n}"));
+            }
+        }
+        // The adaptive choice must also round-trip exactly.
+        let cb = CodecBitmap::from_bitmap(&a);
+        if cb.to_bitmap() != a {
+            return Err(format!("adaptive ({:?}) roundtrip failed at n={n}", cb.codec()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn codec_kernels_bit_identical_arbitrary() {
+    check("codec-kernels", 0xE1, 150, |g| {
+        let n = arb_len(g);
+        let a = arb_bitmap(g, n);
+        let b = arb_bitmap(g, n);
+        let (ca, cb) = (arb_codec(g), arb_codec(g));
+        let x = CodecBitmap::from_bitmap_as(ca, &a);
+        let y = CodecBitmap::from_bitmap_as(cb, &b);
+        let ctx = format!("{ca:?}x{cb:?} n={n}");
+        if x.and(&y).to_bitmap() != a.and(&b) {
+            return Err(format!("AND diverged ({ctx})"));
+        }
+        if x.or(&y).to_bitmap() != a.or(&b) {
+            return Err(format!("OR diverged ({ctx})"));
+        }
+        if x.and_not(&y).to_bitmap() != a.and_not(&b) {
+            return Err(format!("ANDNOT diverged ({ctx})"));
+        }
+        if x.not().to_bitmap() != a.not() {
+            return Err(format!("NOT diverged ({ctx})"));
+        }
+        let mut acc = a.clone();
+        y.and_into(&mut acc);
+        if acc != a.and(&b) {
+            return Err(format!("and_into diverged ({ctx})"));
+        }
+        let mut acc = a.clone();
+        y.and_not_into(&mut acc);
+        if acc != a.and_not(&b) {
+            return Err(format!("and_not_into diverged ({ctx})"));
+        }
+        let mut acc = a.clone();
+        y.or_into(&mut acc);
+        if acc != a.or(&b) {
+            return Err(format!("or_into diverged ({ctx})"));
+        }
+        Ok(())
+    });
+}
+
+fn arb_query(g: &mut Gen, m: usize, depth: usize) -> Query {
+    if depth == 0 || g.chance(0.4) {
+        return Query::Attr(g.usize_in(0, m - 1));
+    }
+    match g.usize_in(0, 2) {
+        0 => Query::And((0..g.usize_in(0, 3)).map(|_| arb_query(g, m, depth - 1)).collect()),
+        1 => Query::Or((0..g.usize_in(0, 3)).map(|_| arb_query(g, m, depth - 1)).collect()),
+        _ => Query::Not(Box::new(arb_query(g, m, depth - 1))),
+    }
+}
+
+#[test]
+fn compressed_planner_matches_reference_on_arbitrary_indexes() {
+    check("compressed-planner", 0xE2, 80, |g| {
+        let m = g.usize_in(1, 6);
+        let n = arb_len(g).max(1);
+        let rows: Vec<Bitmap> = (0..m).map(|_| arb_bitmap(g, n)).collect();
+        let bi = BitmapIndex::from_rows(rows);
+        let q = arb_query(g, m, 3);
+        let expect = q.eval(&bi).map_err(|e| e.to_string())?;
+        let adaptive = CompressedIndex::from_index(&bi);
+        if q.eval_compressed(&adaptive).map_err(|e| e.to_string())? != expect {
+            return Err(format!("adaptive planner diverged (m={m} n={n}): {q:?}"));
+        }
+        for codec in Codec::ALL {
+            let ci = CompressedIndex::from_index_forced(&bi, codec);
+            if q.eval_compressed(&ci).map_err(|e| e.to_string())? != expect {
+                return Err(format!("{codec:?} planner diverged (m={m} n={n}): {q:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn and_chain_order_never_changes_the_result() {
+    check("planner-order-invariance", 0xE3, 80, |g| {
+        let m = g.usize_in(2, 6);
+        let n = arb_len(g).max(1);
+        let rows: Vec<Bitmap> = (0..m).map(|_| arb_bitmap(g, n)).collect();
+        let bi = BitmapIndex::from_rows(rows);
+        let ci = CompressedIndex::from_index(&bi);
+        let mut ops: Vec<Query> = (0..m)
+            .map(|i| {
+                if g.bool() {
+                    Query::Attr(i)
+                } else {
+                    Query::Attr(i).not()
+                }
+            })
+            .collect();
+        let expect = Query::And(ops.clone()).eval(&bi).map_err(|e| e.to_string())?;
+        for _ in 0..3 {
+            g.rng().shuffle(&mut ops);
+            let got = Query::And(ops.clone())
+                .eval_compressed(&ci)
+                .map_err(|e| e.to_string())?;
+            if got != expect {
+                return Err(format!("shuffle changed the result (m={m} n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance differential: compressed execution is bit-identical to
+/// the uncompressed `Query` path on indexes built from all three content
+/// distributions (Uniform, Zipf, Clustered).
+#[test]
+fn compressed_query_differential_across_workloads() {
+    for (name, dist) in [
+        ("uniform", ContentDist::Uniform),
+        ("zipf", ContentDist::Zipf { s: 1.2 }),
+        ("clustered", ContentDist::Clustered { spread: 12 }),
+    ] {
+        let cfg = BicConfig { n_records: 64, w_words: 8, m_keys: 8 };
+        let bi = WorkloadGen::new(cfg, dist, 0x5EED).attribute_rows(96);
+        let adaptive = CompressedIndex::from_index(&bi);
+        let forced: Vec<CompressedIndex> = Codec::ALL
+            .iter()
+            .map(|&c| CompressedIndex::from_index_forced(&bi, c))
+            .collect();
+        check(&format!("workload-differential-{name}"), 0xE4, 40, |g| {
+            let q = arb_query(g, cfg.m_keys, 3);
+            let expect = q.eval(&bi).map_err(|e| e.to_string())?;
+            if q.eval_compressed(&adaptive).map_err(|e| e.to_string())? != expect {
+                return Err(format!("{name}: adaptive diverged on {q:?}"));
+            }
+            for (c, ci) in Codec::ALL.iter().zip(&forced) {
+                if q.eval_compressed(ci).map_err(|e| e.to_string())? != expect {
+                    return Err(format!("{name}: {c:?} diverged on {q:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
