@@ -3,7 +3,7 @@
 # the tier-1 verify command (ROADMAP.md): cargo build --release && cargo
 # test. Run from anywhere; operates on the rust/ package.
 #
-#   ci.sh           full gate (fmt, clippy, doc, build, test)
+#   ci.sh           full gate (fmt, clippy, doc, build, test, store smoke)
 #   ci.sh --bench   bench-smoke mode: short hotpath + compression benches,
 #                   BENCH_*.json emission, and the bench_gate regression
 #                   comparison against the committed BENCH_baseline.json
@@ -44,5 +44,8 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== store-smoke: tmpdir ingest -> kill -> recover -> query =="
+cargo run --release --quiet --bin store_smoke
 
 echo "== ci.sh OK =="

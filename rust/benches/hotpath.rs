@@ -246,6 +246,76 @@ fn main() {
         );
     }
 
+    // Durable segment store: full ingest pipeline (WAL append + fsync,
+    // memtable flush into a segment file) and the reader's cross-segment
+    // query path. Fresh tmpdir per ingest iteration so every run pays
+    // the real create/append/flush cost.
+    group("durable store (16 attrs x 64 batches of 256 objects)");
+    {
+        use sotb_bic::store::{Store, StoreConfig};
+        let scfg = BicConfig { n_records: 256, w_words: 8, m_keys: 16 };
+        let nbatches = if smoke_mode() { 16 } else { 64 };
+        let mut sg = WorkloadGen::new(scfg, ContentDist::Clustered { spread: 16 }, 0x57);
+        let mut score = BicCore::new(scfg);
+        let encoded: Vec<CompressedIndex> = (0..nbatches)
+            .map(|i| {
+                let b = sg.batch_at(i as f64);
+                CompressedIndex::from_index(&score.index(&b.records, &b.keys))
+            })
+            .collect();
+        let raw_bytes: u64 =
+            (nbatches * scfg.n_records / 8 * scfg.m_keys) as u64;
+        let bench_root = std::env::temp_dir()
+            .join(format!("bic-store-bench-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&bench_root);
+        std::fs::create_dir_all(&bench_root).expect("bench tmpdir");
+        let mut iter = 0u64;
+        // 12 divides neither batch count, so the query store always has
+        // both segments and a memtable tail to span.
+        let store_cfg =
+            StoreConfig { flush_batches: 12, ..StoreConfig::default() };
+        results.push(bench("store/ingest").bytes(raw_bytes).run(|| {
+            iter += 1;
+            let dir = bench_root.join(format!("ingest-{iter}"));
+            let mut store =
+                Store::create(&dir, scfg.m_keys, store_cfg).expect("create");
+            for ci in &encoded {
+                store.append_batch(ci).expect("append");
+            }
+            let bytes = store.segment_bytes_written();
+            drop(store);
+            let _ = std::fs::remove_dir_all(&dir);
+            bytes
+        }));
+        // Query path: a persisted store spanning several segments + a
+        // memtable tail, queried through the assembling reader.
+        let qdir = bench_root.join("query");
+        let mut qstore =
+            Store::create(&qdir, scfg.m_keys, store_cfg).expect("create");
+        for ci in &encoded {
+            qstore.append_batch(ci).expect("append");
+        }
+        let sq = Query::attr(1)
+            .and(Query::attr(3))
+            .and(Query::attr(7))
+            .and(Query::attr(5).not());
+        let reader = qstore.reader();
+        // Differential pin before timing.
+        assert_eq!(
+            reader.eval(&sq).unwrap(),
+            sq.eval(&reader.to_index()).unwrap(),
+            "store eval diverged"
+        );
+        results.push(
+            bench("store/query")
+                .bytes(raw_bytes)
+                .run(|| reader.eval(&sq).unwrap()),
+        );
+        drop(reader);
+        drop(qstore);
+        let _ = std::fs::remove_dir_all(&bench_root);
+    }
+
     group("PJRT artifact dispatch");
     let dir = Manifest::default_dir();
     if dir.join("manifest.txt").exists() {

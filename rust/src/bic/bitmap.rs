@@ -342,6 +342,42 @@ impl Bitmap {
         }
         out
     }
+
+    /// OR `other` into `self` with its bit 0 landing at bit `base` — the
+    /// row-assembly primitive of the durable store's reader (each segment
+    /// contributes its local row at the segment's global object offset).
+    /// Word-shifted, never per-bit: each source word touches at most two
+    /// destination words.
+    pub fn or_at(&mut self, other: &Bitmap, base: usize) {
+        assert!(
+            base + other.nbits <= self.nbits,
+            "or_at: {} bits at offset {base} exceed {}",
+            other.nbits,
+            self.nbits
+        );
+        if other.nbits == 0 {
+            return;
+        }
+        let (w0, off) = (base / WORD_BITS, base % WORD_BITS);
+        if off == 0 {
+            for (i, &w) in other.words.iter().enumerate() {
+                self.words[w0 + i] |= w;
+            }
+            return;
+        }
+        for (i, &w) in other.words.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            self.words[w0 + i] |= w << off;
+            let hi = w >> (WORD_BITS - off);
+            // `hi != 0` implies the spilled bits are real (below
+            // `base + other.nbits`), so the index is in range.
+            if hi != 0 {
+                self.words[w0 + i + 1] |= hi;
+            }
+        }
+    }
 }
 
 struct BitIter {
@@ -598,6 +634,41 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn and_length_mismatch_panics() {
         let _ = Bitmap::zeros(3).and(&Bitmap::zeros(4));
+    }
+
+    #[test]
+    fn or_at_matches_per_bit_placement() {
+        // Word-aligned, unaligned, spilling, and tail-exact offsets.
+        for (n_dst, n_src, base) in [
+            (200usize, 64usize, 0usize),
+            (200, 64, 64),
+            (200, 64, 1),
+            (200, 64, 63),
+            (200, 64, 136),  // ends exactly at n_dst
+            (130, 130, 0),
+            (300, 71, 97),
+            (64, 0, 64),     // empty source at the end
+        ] {
+            let src_bits: Vec<bool> = (0..n_src).map(|i| (i * 7) % 3 == 0).collect();
+            let src = Bitmap::from_bools(&src_bits);
+            let mut dst = Bitmap::zeros(n_dst);
+            dst.set(0, true); // pre-existing bit must survive
+            let mut expect = dst.clone();
+            for (i, &v) in src_bits.iter().enumerate() {
+                if v {
+                    expect.set(base + i, true);
+                }
+            }
+            dst.or_at(&src, base);
+            assert_eq!(dst, expect, "n_dst={n_dst} n_src={n_src} base={base}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "or_at")]
+    fn or_at_out_of_range_panics() {
+        let mut dst = Bitmap::zeros(100);
+        dst.or_at(&Bitmap::zeros(64), 40);
     }
 
     #[test]

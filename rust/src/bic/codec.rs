@@ -32,7 +32,27 @@ pub enum Codec {
 
 impl Codec {
     pub const ALL: [Codec; 3] = [Codec::Raw, Codec::Wah, Codec::Roaring];
+
+    /// Modeled encode cost on the simulated core, in cycles per
+    /// *uncompressed input* byte (every codec scans the raw row once;
+    /// what differs is the per-byte work). Raw is a copy (1), WAH runs
+    /// the group compressor (3), roaring inserts members into
+    /// containers (4). `SchedulerConfig::compressed_system` charges
+    /// these so the energy story includes compression — see PERF.md
+    /// §encode-cost model.
+    pub fn encode_cycles_per_byte(self) -> u64 {
+        match self {
+            Codec::Raw => 1,
+            Codec::Wah => 3,
+            Codec::Roaring => 4,
+        }
+    }
 }
+
+/// Cycles the codec chooser's one-pass row analysis (`RowStats::analyze`)
+/// costs per input byte, charged once per row on top of the per-codec
+/// encode constants.
+pub const ANALYZE_CYCLES_PER_BYTE: u64 = 1;
 
 /// Density/run statistics of one bitmap row — everything the codec
 /// chooser needs, gathered in one word-parallel pass.
@@ -367,6 +387,156 @@ impl CodecBitmap {
             CodecBitmap::Roaring { set, .. } => set.or_into(acc),
         }
     }
+
+    /// OR this row into `acc` with its bit 0 landing at bit `base` — the
+    /// store reader's cross-segment row assembly. Runs/words stream
+    /// directly into the shifted position; nothing is materialized in
+    /// between.
+    pub fn or_into_at(&self, acc: &mut Bitmap, base: usize) {
+        assert!(
+            base + self.len() <= acc.len(),
+            "or_into_at: {} bits at offset {base} exceed {}",
+            self.len(),
+            acc.len()
+        );
+        match self {
+            CodecBitmap::Raw(b) => acc.or_at(b, base),
+            CodecBitmap::Wah(w) => w.or_into_at(acc, base),
+            CodecBitmap::Roaring { set, .. } => set.or_into_at(acc, base),
+        }
+    }
+
+    /// Modeled cycles to encode this row from its raw form (analysis
+    /// pass + per-codec encode constant over the uncompressed bytes).
+    pub fn encode_cycles(&self) -> u64 {
+        let raw_bytes = self.len().div_ceil(8) as u64;
+        raw_bytes * (ANALYZE_CYCLES_PER_BYTE + self.codec().encode_cycles_per_byte())
+    }
+
+    /// Exact byte size [`CodecBitmap::write_bytes`] will emit, without
+    /// serializing (the scheduler's durable tier sizes segment charges
+    /// from this).
+    pub fn serialized_bytes(&self) -> usize {
+        1 + 8
+            + match self {
+                CodecBitmap::Raw(b) => packed_words_for(b.len()) * 4,
+                CodecBitmap::Wah(w) => 4 + w.compressed_bytes(),
+                CodecBitmap::Roaring { set, .. } => set.serialized_bytes(),
+            }
+    }
+
+    /// Serialize to the store's codec-tagged row format: `u8` codec tag,
+    /// `u64` uncompressed bit length, then the codec body (raw: packed
+    /// interchange words; WAH: word count + words; roaring: the chunk
+    /// stream). Everything little-endian.
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        out.push(match self {
+            CodecBitmap::Raw(_) => 0u8,
+            CodecBitmap::Wah(_) => 1,
+            CodecBitmap::Roaring { .. } => 2,
+        });
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        match self {
+            CodecBitmap::Raw(b) => {
+                for w in b.to_packed_words() {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            CodecBitmap::Wah(w) => {
+                let words = w.raw_words();
+                out.extend_from_slice(&(words.len() as u32).to_le_bytes());
+                for &word in words {
+                    out.extend_from_slice(&word.to_le_bytes());
+                }
+            }
+            CodecBitmap::Roaring { set, .. } => set.write_bytes(out),
+        }
+    }
+
+    /// Inverse of [`CodecBitmap::write_bytes`], advancing `*pos`.
+    /// Validates structure (and member ranges for roaring) so corrupt
+    /// bytes yield `Err`, never a panic in a downstream kernel.
+    pub fn read_bytes(buf: &[u8], pos: &mut usize) -> Result<Self, String> {
+        let tag = read_u8(buf, pos)?;
+        let nbits = read_u64(buf, pos)? as usize;
+        match tag {
+            0 => {
+                let nw = packed_words_for(nbits);
+                let need = nw.checked_mul(4).ok_or("raw row size overflow")?;
+                if buf.len().saturating_sub(*pos) < need {
+                    return Err("truncated raw row".to_string());
+                }
+                let mut words = Vec::with_capacity(nw);
+                for _ in 0..nw {
+                    words.push(read_u32(buf, pos)?);
+                }
+                // from_packed_words masks the tail defensively, so a
+                // corrupt-but-length-consistent payload cannot break the
+                // tail invariant.
+                Ok(CodecBitmap::Raw(Bitmap::from_packed_words(nbits, &words)))
+            }
+            1 => {
+                let nw = read_u32(buf, pos)? as usize;
+                // Every WAH word covers >= 1 group, so a valid stream
+                // never exceeds the group count (also caps the upfront
+                // allocation against corrupt counts).
+                if nw > nbits.div_ceil(31).max(1)
+                    || buf.len().saturating_sub(*pos) < nw.saturating_mul(4)
+                {
+                    return Err(format!("WAH word count {nw} implausible"));
+                }
+                let mut words = Vec::with_capacity(nw);
+                for _ in 0..nw {
+                    words.push(read_u32(buf, pos)?);
+                }
+                Ok(CodecBitmap::Wah(WahBitmap::from_raw_parts(nbits, words)?))
+            }
+            2 => {
+                let set = RoaringBitmap::read_bytes(buf, pos)?;
+                if let Some(m) = set.max() {
+                    if m as usize >= nbits {
+                        return Err(format!(
+                            "roaring member {m} outside row of {nbits} bits"
+                        ));
+                    }
+                }
+                Ok(CodecBitmap::Roaring { set, nbits })
+            }
+            t => Err(format!("unknown codec tag {t}")),
+        }
+    }
+}
+
+/// Little-endian byte-stream readers shared by the row/segment/WAL
+/// deserializers (`roaring.rs`, `store/*`). Each advances `*pos` past the
+/// consumed bytes or errors on truncation.
+pub(crate) fn read_u8(buf: &[u8], pos: &mut usize) -> Result<u8, String> {
+    let b = *buf.get(*pos).ok_or("truncated at u8")?;
+    *pos += 1;
+    Ok(b)
+}
+
+pub(crate) fn read_u16(buf: &[u8], pos: &mut usize) -> Result<u16, String> {
+    let end = pos.checked_add(2).ok_or("overflow")?;
+    let s = buf.get(*pos..end).ok_or("truncated at u16")?;
+    *pos = end;
+    Ok(u16::from_le_bytes([s[0], s[1]]))
+}
+
+pub(crate) fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32, String> {
+    let end = pos.checked_add(4).ok_or("overflow")?;
+    let s = buf.get(*pos..end).ok_or("truncated at u32")?;
+    *pos = end;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+pub(crate) fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let end = pos.checked_add(8).ok_or("overflow")?;
+    let s = buf.get(*pos..end).ok_or("truncated at u64")?;
+    *pos = end;
+    Ok(u64::from_le_bytes([
+        s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+    ]))
 }
 
 /// A bitmap index stored compressed, one adaptively chosen codec per
@@ -420,6 +590,20 @@ impl CompressedIndex {
     #[inline]
     pub fn row(&self, i: usize) -> &CodecBitmap {
         &self.rows[i]
+    }
+
+    /// All rows in attribute order (the store's ingest path serializes
+    /// these into WAL records and segment payloads).
+    #[inline]
+    pub fn rows(&self) -> &[CodecBitmap] {
+        &self.rows
+    }
+
+    /// Modeled cycles the on-core encoding of this index cost (analysis
+    /// + per-codec encode constants over each row's raw bytes) — what
+    /// the scheduler's compressed tier charges as extra compute time.
+    pub fn encode_cycles(&self) -> u64 {
+        self.rows.iter().map(CodecBitmap::encode_cycles).sum()
     }
 
     /// Set bits of row `i` (cached at build time — the planner's
@@ -603,5 +787,106 @@ mod tests {
         assert_eq!(ci.compressed_bytes(), 0);
         assert_eq!(ci.ratio(), 1.0);
         assert_eq!(ci.to_index(), bi);
+    }
+
+    #[test]
+    fn byte_roundtrip_all_codecs_is_representational() {
+        // Every codec, ragged tails, empty rows, zero-length rows: the
+        // decoded row must equal the original *representationally* (same
+        // codec, same encoding), not just semantically.
+        let mut rows: Vec<Bitmap> = vec![
+            Bitmap::zeros(0),
+            Bitmap::zeros(70_001),
+            Bitmap::ones(70_001),
+            dense_row(12_345, 42),
+            clustered_row(200_000),
+            scattered_row(200_000, 43),
+        ];
+        rows.push(dense_row(64, 44));
+        for row in &rows {
+            for codec in Codec::ALL {
+                let cb = CodecBitmap::from_bitmap_as(codec, row);
+                let mut buf = Vec::new();
+                cb.write_bytes(&mut buf);
+                assert_eq!(
+                    buf.len(),
+                    cb.serialized_bytes(),
+                    "{codec:?} size accounting n={}",
+                    row.len()
+                );
+                let mut pos = 0usize;
+                let back =
+                    CodecBitmap::read_bytes(&buf, &mut pos).expect("decode");
+                assert_eq!(pos, buf.len(), "{codec:?} consumed exactly");
+                assert_eq!(back, cb, "{codec:?} n={}", row.len());
+            }
+        }
+    }
+
+    #[test]
+    fn byte_decode_rejects_truncations_and_corruption() {
+        let row = clustered_row(50_000);
+        for codec in Codec::ALL {
+            let cb = CodecBitmap::from_bitmap_as(codec, &row);
+            let mut buf = Vec::new();
+            cb.write_bytes(&mut buf);
+            for cut in 0..buf.len() {
+                let mut pos = 0usize;
+                assert!(
+                    CodecBitmap::read_bytes(&buf[..cut], &mut pos).is_err(),
+                    "{codec:?} cut at {cut}"
+                );
+            }
+        }
+        // Unknown tag.
+        let mut pos = 0usize;
+        assert!(CodecBitmap::read_bytes(&[9u8; 16], &mut pos).is_err());
+    }
+
+    #[test]
+    fn or_into_at_assembles_concatenations_per_codec() {
+        let segs =
+            [dense_row(10_007, 50), clustered_row(20_000), scattered_row(8_193, 51)];
+        let total: usize = segs.iter().map(Bitmap::len).sum();
+        for codec in Codec::ALL {
+            let mut acc = Bitmap::zeros(total);
+            let mut expect = Bitmap::zeros(total);
+            let mut base = 0usize;
+            for seg in &segs {
+                CodecBitmap::from_bitmap_as(codec, seg)
+                    .or_into_at(&mut acc, base);
+                for i in seg.iter_ones() {
+                    expect.set(base + i, true);
+                }
+                base += seg.len();
+            }
+            assert_eq!(acc, expect, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn encode_cycles_scale_with_raw_bytes_and_codec() {
+        let bi = BitmapIndex::from_rows(vec![
+            dense_row(30_000, 60),
+            clustered_row(30_000),
+            scattered_row(30_000, 61),
+        ]);
+        let ci = CompressedIndex::from_index(&bi);
+        let expect: u64 = ci
+            .rows()
+            .iter()
+            .map(|r| {
+                r.len().div_ceil(8) as u64
+                    * (ANALYZE_CYCLES_PER_BYTE
+                        + r.codec().encode_cycles_per_byte())
+            })
+            .sum();
+        assert_eq!(ci.encode_cycles(), expect);
+        assert!(ci.encode_cycles() > 0);
+        // Rows under a pricier codec charge more than the same bytes raw.
+        assert!(
+            Codec::Roaring.encode_cycles_per_byte()
+                > Codec::Raw.encode_cycles_per_byte()
+        );
     }
 }

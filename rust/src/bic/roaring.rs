@@ -8,6 +8,7 @@
 //! trade on the three workload content distributions.
 
 use super::bitmap::Bitmap;
+use super::codec::{read_u16, read_u32, read_u64, read_u8};
 
 const ARRAY_MAX: usize = 4096;
 
@@ -168,6 +169,29 @@ impl Container {
             }
         };
         out.normalize()
+    }
+
+    /// In-place union: mutate `self` where the representation allows
+    /// (dense |= dense is a word loop, array-into-dense is per-member
+    /// inserts), falling back to a rebuilt container only when `self` is
+    /// an array (the merge may promote past `ARRAY_MAX`).
+    fn or_assign(&mut self, other: &Container) {
+        match (&mut *self, other) {
+            (Container::Dense(a), Container::Dense(b)) => {
+                for (x, y) in a.iter_mut().zip(b.iter()) {
+                    *x |= y;
+                }
+            }
+            (Container::Dense(a), Container::Array(v)) => {
+                for &x in v {
+                    a[x as usize / 64] |= 1 << (x as usize % 64);
+                }
+            }
+            (Container::Array(_), _) => {
+                let merged = Container::or(self, other);
+                *self = merged;
+            }
+        }
     }
 
     fn or(&self, other: &Container) -> Container {
@@ -335,33 +359,35 @@ impl RoaringBitmap {
         out
     }
 
-    /// Union.
+    /// Union. Allocates the merged set; [`RoaringBitmap::or_assign`] is
+    /// the primitive when the left side can be reused.
     pub fn or(&self, other: &Self) -> Self {
-        let mut out = Self::new();
-        let (mut i, mut j) = (0, 0);
-        while i < self.chunks.len() || j < other.chunks.len() {
-            let take_left = match (self.chunks.get(i), other.chunks.get(j)) {
-                (Some(a), Some(b)) => a.0 <= b.0,
-                (Some(_), None) => true,
-                _ => false,
-            };
-            if let (Some(a), Some(b)) = (self.chunks.get(i), other.chunks.get(j)) {
-                if a.0 == b.0 {
-                    out.chunks.push((a.0, a.1.or(&b.1)));
-                    i += 1;
-                    j += 1;
-                    continue;
-                }
-            }
-            if take_left {
-                out.chunks.push(self.chunks[i].clone());
-                i += 1;
-            } else {
-                out.chunks.push(other.chunks[j].clone());
-                j += 1;
-            }
-        }
+        let mut out = self.clone();
+        out.or_assign(other);
         out
+    }
+
+    /// In-place union: merge `other`'s chunks into `self`. Chunks of
+    /// `self` on keys `other` lacks are left untouched — no clone, where
+    /// the seed merge cloned every disjoint-key container on both sides
+    /// (ROADMAP open item). Colliding keys merge in place when the
+    /// representation allows; only `other`'s disjoint containers are
+    /// copied, which a shared reference cannot avoid.
+    pub fn or_assign(&mut self, other: &Self) {
+        // Both chunk lists are key-sorted, so a single forward cursor
+        // into `self` serves every key of `other`.
+        let mut i = 0usize;
+        for (key, oc) in &other.chunks {
+            while i < self.chunks.len() && self.chunks[i].0 < *key {
+                i += 1;
+            }
+            if i < self.chunks.len() && self.chunks[i].0 == *key {
+                self.chunks[i].1.or_assign(oc);
+            } else {
+                self.chunks.insert(i, (*key, oc.clone()));
+            }
+            i += 1;
+        }
     }
 
     /// Difference: members of `self` not in `other` (chunk-keyed merge).
@@ -479,6 +505,164 @@ impl RoaringBitmap {
                 }
             }
         }
+    }
+
+    /// OR this compressed set into `acc` with member 0 landing at bit
+    /// `base` — the store reader's row assembly for roaring segment
+    /// rows. Dense chunks move word-shifted (two destination words per
+    /// source word); array chunks set one bit per member. The caller
+    /// guarantees `base + row_nbits <= acc.len()` (the codec layer
+    /// validates member ranges at deserialization).
+    pub(crate) fn or_into_at(&self, acc: &mut Bitmap, base: usize) {
+        let words = acc.words_mut();
+        for (key, c) in &self.chunks {
+            let cbase = base + ((*key as usize) << 16);
+            match c {
+                Container::Dense(d) => {
+                    let (w0, off) = (cbase / 64, cbase % 64);
+                    if off == 0 {
+                        for (i, &dw) in d.iter().enumerate() {
+                            if dw != 0 {
+                                words[w0 + i] |= dw;
+                            }
+                        }
+                    } else {
+                        for (i, &dw) in d.iter().enumerate() {
+                            if dw == 0 {
+                                continue;
+                            }
+                            words[w0 + i] |= dw << off;
+                            let hi = dw >> (64 - off);
+                            if hi != 0 {
+                                words[w0 + i + 1] |= hi;
+                            }
+                        }
+                    }
+                }
+                Container::Array(v) => {
+                    for &x in v {
+                        let p = cbase + x as usize;
+                        words[p / 64] |= 1u64 << (p % 64);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Largest member, if any (the codec deserializer's range check).
+    pub(crate) fn max(&self) -> Option<u32> {
+        let (key, c) = self.chunks.last()?;
+        let base = (*key as u32) << 16;
+        match c {
+            Container::Array(v) => v.last().map(|&low| base | low as u32),
+            Container::Dense(w) => {
+                for (i, &word) in w.iter().enumerate().rev() {
+                    if word != 0 {
+                        let j = 63 - word.leading_zeros() as usize;
+                        return Some(base | (i * 64 + j) as u32);
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Exact byte size [`RoaringBitmap::write_bytes`] will emit.
+    pub(crate) fn serialized_bytes(&self) -> usize {
+        4 + self
+            .chunks
+            .iter()
+            .map(|(_, c)| {
+                3 + match c {
+                    Container::Array(v) => 2 + 2 * v.len(),
+                    Container::Dense(_) => 8192,
+                }
+            })
+            .sum::<usize>()
+    }
+
+    /// Serialize to the store's byte format: `u32` chunk count, then per
+    /// chunk `u16` key, `u8` kind tag, and the container body (`u16`
+    /// member count + sorted `u16` members for arrays, 8192 raw bytes
+    /// for dense). Everything little-endian.
+    pub(crate) fn write_bytes(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for (key, c) in &self.chunks {
+            out.extend_from_slice(&key.to_le_bytes());
+            match c {
+                Container::Array(v) => {
+                    out.push(0);
+                    out.extend_from_slice(&(v.len() as u16).to_le_bytes());
+                    for &x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Container::Dense(w) => {
+                    out.push(1);
+                    for &word in w.iter() {
+                        out.extend_from_slice(&word.to_le_bytes());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`RoaringBitmap::write_bytes`], advancing `*pos` past
+    /// the consumed bytes. Validates every structural invariant the
+    /// kernels rely on (keys strictly increasing, arrays sorted strictly
+    /// increasing and within `ARRAY_MAX`, no empty array containers) so
+    /// corruption that slips past a checksum cannot panic downstream.
+    pub(crate) fn read_bytes(
+        buf: &[u8],
+        pos: &mut usize,
+    ) -> Result<Self, String> {
+        let nchunks = read_u32(buf, pos)? as usize;
+        let mut chunks = Vec::with_capacity(nchunks.min(1 << 16));
+        let mut prev_key: Option<u16> = None;
+        for _ in 0..nchunks {
+            let key = read_u16(buf, pos)?;
+            if prev_key.is_some_and(|p| key <= p) {
+                return Err(format!("roaring keys not increasing at {key}"));
+            }
+            prev_key = Some(key);
+            let kind = read_u8(buf, pos)?;
+            let container = match kind {
+                0 => {
+                    let len = read_u16(buf, pos)? as usize;
+                    if len == 0 || len > ARRAY_MAX {
+                        return Err(format!("roaring array len {len}"));
+                    }
+                    let mut v: Vec<u16> = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        let x = read_u16(buf, pos)?;
+                        if v.last().is_some_and(|&p| x <= p) {
+                            return Err("roaring array not sorted".to_string());
+                        }
+                        v.push(x);
+                    }
+                    Container::Array(v)
+                }
+                1 => {
+                    let mut w = Box::new([0u64; 1024]);
+                    let mut any = 0u64;
+                    for word in w.iter_mut() {
+                        *word = read_u64(buf, pos)?;
+                        any |= *word;
+                    }
+                    if any == 0 {
+                        // Empty containers never exist in canonical sets;
+                        // accepting one would also let `max()` (which
+                        // inspects only the final chunk) miss members of
+                        // earlier chunks during range validation.
+                        return Err("empty roaring dense container".into());
+                    }
+                    Container::Dense(w)
+                }
+                k => return Err(format!("roaring container kind {k}")),
+            };
+            chunks.push((key, container));
+        }
+        Ok(Self { chunks })
     }
 
     /// Heap bytes of the compressed representation.
@@ -605,5 +789,116 @@ mod tests {
         one.insert(5);
         assert!(e.and(&one).is_empty());
         assert_eq!(e.or(&one).len(), 1);
+    }
+
+    #[test]
+    fn or_assign_matches_or_across_chunk_shapes() {
+        let mut rng = Xoshiro256::seeded(0x0A55);
+        // Disjoint keys, colliding arrays, array-into-dense, dense-dense,
+        // and promotion past ARRAY_MAX all appear in this corpus.
+        let n = 1 << 19;
+        let mut a_bm = Bitmap::zeros(n);
+        let mut b_bm = Bitmap::zeros(n);
+        for _ in 0..3_000 {
+            a_bm.set(rng.next_below(n as u64 / 2) as usize, true);
+            b_bm.set((n / 2 + rng.next_below(n as u64 / 2) as usize) % n, true);
+        }
+        for i in 100_000..104_500 {
+            a_bm.set(i, true); // dense container in a
+            if i % 2 == 0 {
+                b_bm.set(i, true); // colliding members in b
+            }
+        }
+        for i in 200_000..204_099 {
+            // Two colliding arrays whose union promotes to dense.
+            if i % 2 == 0 {
+                a_bm.set(i, true);
+            } else {
+                b_bm.set(i, true);
+            }
+        }
+        let a = RoaringBitmap::from_bitmap(&a_bm);
+        let b = RoaringBitmap::from_bitmap(&b_bm);
+        let mut assigned = a.clone();
+        assigned.or_assign(&b);
+        assert_eq!(assigned, a.or(&b));
+        assert_eq!(assigned.to_bitmap(n), a_bm.or(&b_bm));
+        // And symmetric.
+        let mut assigned = b.clone();
+        assigned.or_assign(&a);
+        assert_eq!(assigned.to_bitmap(n), a_bm.or(&b_bm));
+        // Union with an empty set in either direction is the identity.
+        let mut from_empty = RoaringBitmap::new();
+        from_empty.or_assign(&a);
+        assert_eq!(from_empty, a);
+        let mut into_empty = a.clone();
+        into_empty.or_assign(&RoaringBitmap::new());
+        assert_eq!(into_empty, a);
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_representation() {
+        let mut rng = Xoshiro256::seeded(0xB17E);
+        let mut r = RoaringBitmap::new();
+        for _ in 0..2_000 {
+            r.insert(rng.next_below(1 << 21) as u32);
+        }
+        for i in 300_000..306_000 {
+            r.insert(i); // force a dense container
+        }
+        let mut buf = Vec::new();
+        r.write_bytes(&mut buf);
+        let mut pos = 0usize;
+        let back = RoaringBitmap::read_bytes(&buf, &mut pos).expect("decode");
+        assert_eq!(pos, buf.len(), "consumed exactly");
+        assert_eq!(back, r, "representational equality");
+        assert_eq!(back.max(), r.max());
+        // Truncations at every byte boundary must error, never panic.
+        for cut in 0..buf.len() {
+            let mut pos = 0usize;
+            assert!(
+                RoaringBitmap::read_bytes(&buf[..cut], &mut pos).is_err(),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_across_container_kinds() {
+        assert_eq!(RoaringBitmap::new().max(), None);
+        let mut r = RoaringBitmap::new();
+        r.insert(7);
+        r.insert(70_000);
+        assert_eq!(r.max(), Some(70_000));
+        for i in 130_000..135_000 {
+            r.insert(i);
+        }
+        assert_eq!(r.max(), Some(134_999));
+    }
+
+    #[test]
+    fn or_into_at_places_members_at_offset() {
+        let n_seg = 100_001; // straddles chunks with a ragged tail
+        let mut rng = Xoshiro256::seeded(0x0FF5);
+        let mut seg = Bitmap::zeros(n_seg);
+        for _ in 0..2_000 {
+            seg.set(rng.next_below(n_seg as u64) as usize, true);
+        }
+        for i in 70_000..75_000 {
+            seg.set(i, true); // dense chunk content
+        }
+        let r = RoaringBitmap::from_bitmap(&seg);
+        for base in [0usize, 1, 63, 64, 65, 1000, 4096] {
+            let total = base + n_seg + 10;
+            let mut acc = Bitmap::zeros(total);
+            acc.set(0, true);
+            r.or_into_at(&mut acc, base);
+            let mut expect = Bitmap::zeros(total);
+            expect.set(0, true);
+            for i in seg.iter_ones() {
+                expect.set(base + i, true);
+            }
+            assert_eq!(acc, expect, "base={base}");
+        }
     }
 }

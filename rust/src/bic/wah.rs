@@ -223,11 +223,49 @@ impl WahBitmap {
         self.merge(other, |a, b| a ^ b)
     }
 
-    /// Bitwise complement on the compressed form: fills flip their fill
-    /// bit in O(1), literals flip their payload. The trailing partial
-    /// group is masked to `nbits` so padding bits stay zero.
+    /// Bitwise complement on the compressed form: one word-level pass
+    /// over the encoded words, **in place of the encoding** — a fill
+    /// flips its polarity bit (`fill(b, len)` -> `fill(!b, len)`), a
+    /// literal flips its 31-bit payload, and the trailing partial group
+    /// is masked to `nbits` so padding bits stay zero. No cursor, no
+    /// re-encoder: O(encoded words), allocation = the output vector.
+    ///
+    /// Complementation maps the canonical encoding onto itself — run
+    /// boundaries, saturation splits (`MAX_RUN`), and
+    /// single-group-run-as-literal choices are all polarity-symmetric —
+    /// so the output is word-identical to re-encoding the complemented
+    /// group stream ([`WahBitmap::not_reencode`] pins this).
     #[allow(clippy::should_implement_trait)]
     pub fn not(&self) -> Self {
+        let tail = self.nbits % GROUP_BITS;
+        let last = self.words.len().wrapping_sub(1);
+        let words = self
+            .words
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                if w & FILL_FLAG != 0 {
+                    w ^ FILL_BIT
+                } else if tail != 0 && i == last {
+                    // The final word is the partial group exactly when
+                    // nbits is not a multiple of 31 (a partial group is
+                    // always emitted as the last literal).
+                    !w & ((1u32 << tail) - 1)
+                } else {
+                    !w & GROUP_MASK
+                }
+            })
+            .collect();
+        Self { nbits: self.nbits, words }
+    }
+
+    /// The seed complement path — decode the group stream through a
+    /// cursor and re-encode the flipped groups word by word. Same
+    /// asymptotics but a cursor + run-length encoder of constant-factor
+    /// overhead per word that [`WahBitmap::not`]'s in-place flip avoids;
+    /// retained as the differential reference that pins the flip's
+    /// canonicality argument.
+    pub fn not_reencode(&self) -> Self {
         let ngroups = self.nbits.div_ceil(GROUP_BITS);
         let tail = self.nbits % GROUP_BITS;
         let mut enc = GroupCompressor::with_capacity(self.words.len());
@@ -297,7 +335,23 @@ impl WahBitmap {
     /// OR this compressed row into an uncompressed accumulator.
     pub fn or_into(&self, acc: &mut Bitmap) {
         assert_eq!(self.nbits, acc.len(), "length mismatch");
-        let mut bit_pos = 0usize;
+        self.or_into_at(acc, 0);
+    }
+
+    /// OR this row into `acc` with its bit 0 landing at bit `base` — the
+    /// store reader's run-by-run row assembly (a segment's WAH row lands
+    /// at the segment's global object offset without decompressing to an
+    /// intermediate). Fills write whole word spans; literals write one
+    /// 31-bit group at the shifted offset.
+    pub fn or_into_at(&self, acc: &mut Bitmap, base: usize) {
+        assert!(
+            base + self.nbits <= acc.len(),
+            "or_into_at: {} bits at offset {base} exceed {}",
+            self.nbits,
+            acc.len()
+        );
+        let end = base + self.nbits;
+        let mut bit_pos = base;
         for &w in &self.words {
             if w & FILL_FLAG != 0 {
                 let len = (w & MAX_RUN) as usize * GROUP_BITS;
@@ -306,7 +360,7 @@ impl WahBitmap {
                 }
                 bit_pos += len;
             } else {
-                let take = GROUP_BITS.min(self.nbits - bit_pos);
+                let take = GROUP_BITS.min(end - bit_pos);
                 let tmask = ((1u64 << take) - 1) as u32;
                 or_group(acc.words_mut(), bit_pos, w & tmask);
                 bit_pos += take;
@@ -363,6 +417,51 @@ impl WahBitmap {
         total
     }
 
+    /// The encoded words — the store's segment serializer writes these
+    /// verbatim (the encoding is already the wire format).
+    pub(crate) fn raw_words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Rebuild from serialized words, validating the structural
+    /// invariants the kernels rely on, so a length-consistent but
+    /// corrupt payload that slipped past the checksum yields an error
+    /// instead of an out-of-bounds panic: fills have nonzero length,
+    /// group counts cover `nbits` exactly, and the trailing partial
+    /// group (when `nbits % 31 != 0`) is a literal, never inside a fill.
+    pub(crate) fn from_raw_parts(
+        nbits: usize,
+        words: Vec<u32>,
+    ) -> Result<Self, String> {
+        let ngroups = nbits.div_ceil(GROUP_BITS);
+        let tail = nbits % GROUP_BITS;
+        let mut total = 0usize;
+        for &w in &words {
+            if total >= ngroups {
+                return Err(format!(
+                    "WAH stream longer than {ngroups} groups"
+                ));
+            }
+            if w & FILL_FLAG != 0 {
+                let len = (w & MAX_RUN) as usize;
+                if len == 0 {
+                    return Err("zero-length WAH fill".into());
+                }
+                total += len;
+                if tail != 0 && total >= ngroups {
+                    return Err("WAH fill covers the partial group".into());
+                }
+            } else {
+                total += 1;
+            }
+        }
+        if total != ngroups {
+            return Err(format!(
+                "WAH stream covers {total} of {ngroups} groups"
+            ));
+        }
+        Ok(Self { nbits, words })
+    }
 }
 
 /// Extract 31-bit group `g` of a bitmap (trailing bits zero) from the u64
@@ -626,6 +725,99 @@ mod tests {
     fn ratio_reports_win_on_runs() {
         let bm = Bitmap::zeros(31 * 1000);
         assert!(WahBitmap::compress(&bm).ratio() > 100.0);
+    }
+
+    #[test]
+    fn not_flip_is_word_identical_to_reencode() {
+        // The in-place polarity flip must equal the seed decode/re-encode
+        // path *representationally* (same words), not just semantically —
+        // across ragged tails, pure fills, literal boundaries, and
+        // dense/sparse mixes.
+        let cases: Vec<Bitmap> = vec![
+            Bitmap::zeros(0),
+            Bitmap::zeros(1),
+            Bitmap::ones(1),
+            Bitmap::zeros(31),
+            Bitmap::ones(31),
+            Bitmap::zeros(31 * 40),
+            Bitmap::ones(31 * 40 + 7),
+            bm_from((0..997).map(|i| i % 2 == 0)),
+            bm_from((0..31 * 50).map(|i| (200..1000).contains(&i))),
+            bm_from((0..1240).map(|i| i % 7 == 0 || (300..900).contains(&i))),
+            bm_from((0..62).map(|i| i < 31)), // fill + literal boundary
+        ];
+        for bm in &cases {
+            let wah = WahBitmap::compress(bm);
+            let flip = wah.not();
+            let reencode = wah.not_reencode();
+            assert_eq!(flip, reencode, "n={}", bm.len());
+            assert_eq!(flip.decompress(), bm.not(), "n={}", bm.len());
+            // Involution: double complement is the identity encoding.
+            assert_eq!(flip.not(), wah, "n={}", bm.len());
+        }
+    }
+
+    #[test]
+    fn not_flip_matches_reencode_on_random_rows() {
+        use crate::substrate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seeded(0xF11F);
+        for n in [63usize, 64, 310, 311, 1000, 4097] {
+            for density in [0.01, 0.3, 0.9] {
+                let bits: Vec<bool> =
+                    (0..n).map(|_| rng.chance(density)).collect();
+                let wah = WahBitmap::compress(&Bitmap::from_bools(&bits));
+                assert_eq!(
+                    wah.not(),
+                    wah.not_reencode(),
+                    "n={n} density={density}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn or_into_at_places_rows_at_offsets() {
+        // Assemble a 3-segment concatenation the way the store reader
+        // does and compare against per-bit placement.
+        let segs: Vec<Bitmap> = vec![
+            bm_from((0..100).map(|i| i % 3 == 0)),
+            bm_from((0..67).map(|i| (10..40).contains(&i))),
+            bm_from((0..250).map(|i| i % 2 == 1)),
+        ];
+        let total: usize = segs.iter().map(Bitmap::len).sum();
+        let mut acc = Bitmap::zeros(total);
+        let mut expect = Bitmap::zeros(total);
+        let mut base = 0usize;
+        for seg in &segs {
+            WahBitmap::compress(seg).or_into_at(&mut acc, base);
+            for i in seg.iter_ones() {
+                expect.set(base + i, true);
+            }
+            base += seg.len();
+        }
+        assert_eq!(acc, expect);
+    }
+
+    #[test]
+    fn from_raw_parts_rejects_corrupt_streams() {
+        let wah = WahBitmap::compress(&bm_from((0..400).map(|i| i % 5 == 0)));
+        let good = wah.raw_words().to_vec();
+        assert_eq!(
+            WahBitmap::from_raw_parts(400, good.clone()).unwrap(),
+            wah
+        );
+        // Truncated stream: group shortfall.
+        assert!(WahBitmap::from_raw_parts(400, good[..1].to_vec()).is_err());
+        // Extended stream: overrun.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(WahBitmap::from_raw_parts(400, long).is_err());
+        // Zero-length fill.
+        assert!(
+            WahBitmap::from_raw_parts(31, vec![FILL_FLAG | FILL_BIT]).is_err()
+        );
+        // Fill covering the partial group.
+        assert!(WahBitmap::from_raw_parts(40, vec![FILL_FLAG | 2]).is_err());
     }
 
     #[test]

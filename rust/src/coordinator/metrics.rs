@@ -61,6 +61,10 @@ pub struct SimReport {
     /// (compressed when the compressed-execution tier is on; equal to
     /// `output_bytes_raw` otherwise).
     pub output_bytes_stored: u64,
+    /// Extra compute cycles the on-core result encoding cost (0 when the
+    /// compressed tier is off) — the compression side of the energy
+    /// story, charged as active core time by the scheduler.
+    pub encode_cycles: u64,
 }
 
 impl SimReport {
@@ -132,6 +136,7 @@ mod tests {
             extmem_utilization: 0.1,
             output_bytes_raw: 4_000,
             output_bytes_stored: 1_000,
+            encode_cycles: 0,
         };
         assert!((r.throughput_mbps() - 2.0).abs() < 1e-12);
         assert!((r.energy_per_byte() - 0.5e-6).abs() < 1e-15);
@@ -153,6 +158,7 @@ mod tests {
             extmem_utilization: 0.0,
             output_bytes_raw: 0,
             output_bytes_stored: 0,
+            encode_cycles: 0,
         };
         assert_eq!(r.output_compression_ratio(), 1.0);
         r.output_bytes_raw = 10;

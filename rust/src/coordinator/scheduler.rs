@@ -49,7 +49,17 @@ pub struct SchedulerConfig {
     /// compressed on-core and the external-memory channel is charged the
     /// *actual* compressed byte count instead of the packed-raw size.
     /// Implies result computation (the bytes must exist to be counted).
+    /// Encoding is not free: the core stays active for the modeled
+    /// encode cycles (`CompressedIndex::encode_cycles`) before the
+    /// output transfer starts, and the total is surfaced as
+    /// `SimReport::encode_cycles`.
     pub compress_results: bool,
+    /// Model durable persistence: the output channel is charged the
+    /// *actual segment bytes* the store would write for each result
+    /// (checksummed header + row directory + codec-tagged payloads,
+    /// `store::segment::encoded_len`) instead of the bare compressed row
+    /// bytes. Only meaningful with `compress_results`.
+    pub persist_segments: bool,
     /// Failure injection: (core, time) pairs — the core dies at `time`.
     pub core_failures: Vec<(usize, f64)>,
 }
@@ -68,6 +78,7 @@ impl SchedulerConfig {
             extmem_bandwidth: 400e6,
             compute_results: true,
             compress_results: false,
+            persist_segments: false,
             core_failures: Vec::new(),
         }
     }
@@ -76,6 +87,13 @@ impl SchedulerConfig {
     /// tier enabled.
     pub fn compressed_system(cores: usize) -> Self {
         Self { compress_results: true, ..Self::chip_system(cores) }
+    }
+
+    /// [`SchedulerConfig::compressed_system`] with durable persistence
+    /// modeled: the channel moves full segment encodings (header +
+    /// directory + payload), not bare rows.
+    pub fn durable_system(cores: usize) -> Self {
+        Self { persist_segments: true, ..Self::compressed_system(cores) }
     }
 
     pub fn frequency(&self) -> Hertz {
@@ -140,6 +158,7 @@ pub struct Scheduler {
     batches: Vec<Batch>,
     completed: Vec<CompletedBatch>,
     requeued: u64,
+    encode_cycles: u64,
 }
 
 impl Scheduler {
@@ -160,6 +179,7 @@ impl Scheduler {
             batches: Vec::new(),
             completed: Vec::new(),
             requeued: 0,
+            encode_cycles: 0,
             cfg,
         }
     }
@@ -240,6 +260,7 @@ impl Scheduler {
             extmem_utilization: self.extmem.utilization(horizon.max(f64::MIN_POSITIVE)),
             output_bytes_raw,
             output_bytes_stored,
+            encode_cycles: self.encode_cycles,
         };
         (report, self.completed)
     }
@@ -264,13 +285,27 @@ impl Scheduler {
                 let out_bytes = self.batches[batch].output_bytes(&self.cfg.core_cfg);
                 let done = if self.cfg.compress_results {
                     // The compressed tier moves the result in its actual
-                    // encoded size, so the index must exist now.
+                    // encoded size, so the index must exist now. Encoding
+                    // costs modeled compute cycles: the core stays active
+                    // for `enc_time` before the output transfer starts.
                     let b = &self.batches[batch];
                     let bi = self.golden.index(&b.records, &b.keys);
                     let ci = CompressedIndex::from_index(&bi);
-                    let stored = ci.compressed_bytes();
+                    let enc = ci.encode_cycles();
+                    let enc_time = enc as f64 / self.cfg.frequency();
+                    self.encode_cycles += enc;
+                    let stored = if self.cfg.persist_segments {
+                        crate::store::segment::encoded_len(ci.rows())
+                    } else {
+                        ci.compressed_bytes()
+                    };
                     self.assignments[core].pending = Some((bi, ci));
-                    self.extmem.transfer_compressed_out(now, out_bytes, stored)
+                    self.assignments[core].compute_end = now + enc_time;
+                    self.extmem.transfer_compressed_out(
+                        now + enc_time,
+                        out_bytes,
+                        stored,
+                    )
                 } else {
                     self.extmem.transfer(now, out_bytes, Dir::Out)
                 };
@@ -500,6 +535,65 @@ mod tests {
         }
         // The channel was charged exactly the compressed bytes.
         assert_eq!(report.output_bytes_stored, stored_total);
+        // And the encoding cost cycles: the modeled per-row constants
+        // summed over every completed batch.
+        let expect_cycles: u64 = completed
+            .iter()
+            .map(|c| c.compressed.as_ref().unwrap().encode_cycles())
+            .sum();
+        assert_eq!(report.encode_cycles, expect_cycles);
+        assert!(report.encode_cycles > 0);
+    }
+
+    #[test]
+    fn plain_tier_charges_no_encode_cycles() {
+        let trace = steady_trace(8, 1000.0, 9);
+        let report = Scheduler::new(SchedulerConfig::chip_system(2)).run(trace);
+        assert_eq!(report.encode_cycles, 0);
+    }
+
+    #[test]
+    fn encode_cycles_stretch_the_compressed_run() {
+        // Same trace, same core count: the compressed tier's horizon must
+        // include the modeled encode time (it cannot be faster than the
+        // plain tier minus the transfer-size win; on a fat channel the
+        // encode tax dominates, so compressed is strictly slower).
+        let trace = steady_trace(20, 1e6, 10);
+        let mut plain = SchedulerConfig::chip_system(1);
+        plain.extmem_bandwidth = 1e12; // transfers ~free on both sides
+        let mut comp = plain.clone();
+        comp.compress_results = true;
+        let rp = Scheduler::new(plain).run(trace.clone());
+        let rc = Scheduler::new(comp).run(trace);
+        assert!(rc.encode_cycles > 0);
+        assert!(
+            rc.horizon > rp.horizon,
+            "encode tax must show: {} vs {}",
+            rc.horizon,
+            rp.horizon
+        );
+    }
+
+    #[test]
+    fn durable_tier_charges_segment_bytes() {
+        use crate::store::segment;
+        let trace = steady_trace(6, 1000.0, 11);
+        let (report, completed) =
+            Scheduler::new(SchedulerConfig::durable_system(2)).run_collect(trace);
+        assert_eq!(report.completed, 6);
+        let expect: u64 = completed
+            .iter()
+            .map(|c| {
+                segment::encoded_len(c.compressed.as_ref().unwrap().rows()) as u64
+            })
+            .sum();
+        assert_eq!(report.output_bytes_stored, expect);
+        // Segment framing costs more than the bare rows it wraps.
+        let bare: u64 = completed
+            .iter()
+            .map(|c| c.compressed.as_ref().unwrap().compressed_bytes() as u64)
+            .sum();
+        assert!(report.output_bytes_stored > bare);
     }
 
     #[test]

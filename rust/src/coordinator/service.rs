@@ -9,15 +9,17 @@
 //! `Runtime` + `BicExecutable` inside its thread — one compiled
 //! executable per core, exactly like the chip's per-core CAM/buffer/TM.
 
+use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::bic::bitmap::BitmapIndex;
 use crate::bic::codec::CompressedIndex;
 use crate::runtime::{BicExecutable, BicVariant, Runtime};
+use crate::store::{manifest, Store, StoreConfig};
 
 /// One indexing request. Compressed jobs encode the result inside the
 /// worker thread, so codec analysis parallelizes with indexing.
@@ -40,6 +42,9 @@ pub struct IndexService {
     workers: Vec<JoinHandle<()>>,
     /// Per-worker completed-job counters (for routing/balance tests).
     counters: Arc<Vec<Mutex<u64>>>,
+    /// Attached durable store ([`IndexService::open_store`]); encoding
+    /// happens on the worker threads, appends serialize through here.
+    store: Mutex<Option<Store>>,
 }
 
 impl IndexService {
@@ -100,7 +105,53 @@ impl IndexService {
         for _ in 0..workers {
             ready_rx.recv().expect("worker startup")?;
         }
-        Ok(Self { queue: tx, workers: handles, counters })
+        Ok(Self {
+            queue: tx,
+            workers: handles,
+            counters,
+            store: Mutex::new(None),
+        })
+    }
+
+    /// Attach a durable store at `dir` (opened with recovery when one
+    /// exists there, created with `num_attrs` rows otherwise).
+    /// Subsequent [`IndexService::persist_batch`] calls append to it.
+    pub fn open_store(
+        &self,
+        dir: impl AsRef<Path>,
+        num_attrs: usize,
+        cfg: StoreConfig,
+    ) -> Result<()> {
+        let dir = dir.as_ref();
+        let store = if manifest::exists(dir) {
+            Store::open(dir, cfg)?
+        } else {
+            Store::create(dir, num_attrs, cfg)?
+        };
+        *self.store.lock().unwrap() = Some(store);
+        Ok(())
+    }
+
+    /// Index + encode a batch on a worker thread, then append the result
+    /// to the attached store. Returns once the batch is durable (WAL
+    /// fsynced) — the service's acknowledged-write path.
+    pub fn persist_batch(
+        &self,
+        records: Vec<Vec<i32>>,
+        keys: Vec<i32>,
+    ) -> Result<CompressedIndex> {
+        let ci = self.index_compressed(records, keys)?;
+        let mut guard = self.store.lock().unwrap();
+        let store = guard
+            .as_mut()
+            .ok_or_else(|| anyhow!("no store attached (call open_store)"))?;
+        store.append_batch(&ci)?;
+        Ok(ci)
+    }
+
+    /// Detach and return the store (e.g. to flush/compact/close it).
+    pub fn close_store(&self) -> Option<Store> {
+        self.store.lock().unwrap().take()
     }
 
     /// Submit a batch; returns a receiver for the result (async-style
@@ -230,6 +281,44 @@ mod tests {
             assert!(compressed.compressed_bytes() > 0);
         }
         svc.shutdown();
+    }
+
+    #[test]
+    fn persist_batch_appends_durably_through_the_store() {
+        let Some(variant) = chip_variant() else { return };
+        let dir = std::env::temp_dir()
+            .join(format!("bic-service-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let svc = IndexService::start(2, &variant).expect("start");
+        // No store attached yet: persisting must fail cleanly.
+        let mut rng = Xoshiro256::seeded(515);
+        let (recs, keys) = random_batch(&mut rng);
+        assert!(svc.persist_batch(recs, keys).is_err());
+        svc.open_store(&dir, 8, crate::store::StoreConfig::default())
+            .expect("open store");
+        let mut golden = BicCore::new(BicConfig::CHIP);
+        let mut expects = Vec::new();
+        for _ in 0..5 {
+            let (recs, keys) = random_batch(&mut rng);
+            expects.push(golden.index(&recs, &keys));
+            svc.persist_batch(recs, keys).expect("persist");
+        }
+        let store = svc.close_store().expect("attached");
+        assert_eq!(store.num_objects(), 5 * 16);
+        let got = store.reader().to_index();
+        for (b, expect) in expects.iter().enumerate() {
+            for a in 0..8 {
+                for j in 0..16 {
+                    assert_eq!(
+                        got.get(a, b * 16 + j),
+                        expect.get(a, j),
+                        "attr {a} batch {b} bit {j}"
+                    );
+                }
+            }
+        }
+        svc.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

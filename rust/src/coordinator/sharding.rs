@@ -15,6 +15,7 @@ use super::batch::Batch;
 use crate::bic::bitmap::BitmapIndex;
 use crate::bic::codec::CompressedIndex;
 use crate::bic::{BicConfig, BicCore};
+use crate::store::Store;
 
 /// A fixed-geometry indexer that fans batches out over host cores.
 #[derive(Clone, Copy, Debug)]
@@ -123,6 +124,24 @@ impl ShardedIndexer {
                 .collect()
         });
         shard_results.into_iter().flatten().collect()
+    }
+
+    /// Index + encode a batch trace on the shard workers, then append
+    /// the shard-encoded results to a durable [`Store`] in input order
+    /// (the deterministic merge doubles as the durability order: batch
+    /// `i` is acknowledged before batch `i+1`). Returns the number of
+    /// batches persisted.
+    pub fn persist_batches(
+        &self,
+        batches: &[Batch],
+        store: &mut Store,
+    ) -> crate::store::Result<usize> {
+        let encoded = self.index_batches_compressed(batches);
+        let n = encoded.len();
+        for ci in &encoded {
+            store.append_batch(ci)?;
+        }
+        Ok(n)
     }
 }
 

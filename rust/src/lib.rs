@@ -11,6 +11,7 @@ pub mod experiments;
 pub mod power;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod substrate;
 
 pub use cli_app::cli_main;

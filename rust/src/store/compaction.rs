@@ -1,0 +1,152 @@
+//! Background compaction: merge small segments into larger ones so the
+//! live set (and per-query segment fan-in) stays bounded as ingest runs.
+//!
+//! A merge is crash-atomic the same way a flush is: the merged segment
+//! is fully written + fsynced first, then one manifest commit swaps it
+//! in for its inputs (tombstoning them — they stop being referenced),
+//! then the input files are unlinked. A crash anywhere leaves either the
+//! old set or the new set live; orphaned files are removed on recovery.
+
+use std::fs;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::manifest::{self, ManifestState, SegmentEntry};
+use super::segment::{self, Segment};
+use super::{Result, Store};
+use crate::bic::bitmap::Bitmap;
+use crate::bic::codec::CodecBitmap;
+
+/// When and what to merge.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactionPolicy {
+    /// Merge (one adjacent pair per round) while the live segment count
+    /// exceeds this.
+    pub max_segments: usize,
+}
+
+impl Default for CompactionPolicy {
+    fn default() -> Self {
+        Self { max_segments: 4 }
+    }
+}
+
+impl Store {
+    /// One compaction round: merge the adjacent segment pair with the
+    /// smallest combined on-disk size (adjacency keeps bases
+    /// contiguous). Returns whether a merge happened.
+    pub fn compact_once(&mut self) -> Result<bool> {
+        let max = self.cfg.compaction.max_segments.max(1);
+        if self.segments.len() <= max {
+            return Ok(false);
+        }
+        let mut pick = 0usize;
+        let mut pick_bytes = u64::MAX;
+        for (i, pair) in self.segments.windows(2).enumerate() {
+            let combined = pair[0].bytes + pair[1].bytes;
+            if combined < pick_bytes {
+                pick_bytes = combined;
+                pick = i;
+            }
+        }
+
+        // Assemble the merged rows: each input row streamed at its
+        // offset within the merged range, re-encoded adaptively.
+        let (left, right) = (&self.segments[pick], &self.segments[pick + 1]);
+        let nbits = left.nbits + right.nbits;
+        let base = left.base;
+        let rows: Vec<CodecBitmap> = (0..self.num_attrs)
+            .map(|a| {
+                let mut acc = Bitmap::zeros(nbits);
+                left.rows[a].or_into_at(&mut acc, 0);
+                right.rows[a].or_into_at(&mut acc, left.nbits);
+                CodecBitmap::from_bitmap(&acc)
+            })
+            .collect();
+        let old_files = [left.file.clone(), right.file.clone()];
+
+        let id = self.next_segment_id;
+        let (file, bytes) = segment::write(&self.dir, id, base, &rows)?;
+        let mut entries: Vec<SegmentEntry> = self.manifest_entries();
+        let merged_entry =
+            SegmentEntry { id, file: file.clone(), base, nbits, bytes };
+        entries.splice(pick..pick + 2, [merged_entry]);
+        manifest::commit(
+            &self.dir,
+            &ManifestState {
+                num_attrs: self.num_attrs,
+                next_segment_id: id + 1,
+                wal_gen: self.wal_gen,
+                segments: entries,
+            },
+        )?;
+
+        // Committed: the inputs are tombstoned (unreferenced); unlink
+        // them now, or recovery's orphan sweep will.
+        let merged = Segment { id, file, base, nbits, bytes, rows };
+        self.segments.splice(pick..pick + 2, [merged]);
+        self.next_segment_id = id + 1;
+        self.note_segment_bytes(bytes);
+        for f in old_files {
+            let _ = fs::remove_file(self.dir.join(f));
+        }
+        Ok(true)
+    }
+
+    /// Compact until the policy is satisfied; returns rounds run.
+    pub fn compact(&mut self) -> Result<usize> {
+        let mut rounds = 0usize;
+        while self.compact_once()? {
+            rounds += 1;
+        }
+        Ok(rounds)
+    }
+}
+
+/// A background compaction thread over a shared store handle. Runs one
+/// [`Store::compact_once`] round per tick; stops on [`Compactor::stop`]
+/// or drop.
+pub struct Compactor {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Compactor {
+    /// Spawn the compactor, polling every `interval`.
+    pub fn spawn(store: Arc<Mutex<Store>>, interval: Duration) -> Compactor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                {
+                    let mut guard = store.lock().expect("store lock");
+                    // I/O errors here are retried next tick; the
+                    // foreground path surfaces them on its own calls.
+                    let _ = guard.compact_once();
+                }
+                std::thread::sleep(interval);
+            }
+        });
+        Compactor { stop, handle: Some(handle) }
+    }
+
+    /// Stop and join the background thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Compactor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

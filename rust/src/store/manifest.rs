@@ -1,0 +1,211 @@
+//! The manifest: the atomically-replaced single source of truth for the
+//! live segment set, the next segment id, and the current WAL
+//! generation.
+//!
+//! Commit protocol: render to `MANIFEST.tmp`, fsync, `rename` over
+//! `MANIFEST.json`, fsync the directory. Rename is atomic on POSIX, so a
+//! crash at any byte leaves either the previous manifest or the new one
+//! — never a torn file. Every mutation of the live set (flush adds a
+//! segment + rotates the WAL generation; compaction swaps segments)
+//! happens through exactly one commit, which is what makes those
+//! operations crash-atomic.
+//!
+//! The format is the repo's own JSON (`substrate::json`), human-readable
+//! for operability:
+//!
+//! ```json
+//! {"version":1,"num_attrs":8,"next_segment_id":3,"wal_gen":2,
+//!  "segments":[{"id":0,"file":"seg-00000000.bic","base":0,
+//!               "nbits":4096,"bytes":1234}]}
+//! ```
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use super::{segment, Result, StoreError};
+use crate::substrate::json::Json;
+
+/// Manifest file name within a store directory.
+pub const MANIFEST: &str = "MANIFEST.json";
+
+const VERSION: f64 = 1.0;
+
+/// One live segment, as the manifest records it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentEntry {
+    pub id: u64,
+    pub file: String,
+    pub base: usize,
+    pub nbits: usize,
+    pub bytes: u64,
+}
+
+/// The full committed store state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestState {
+    pub num_attrs: usize,
+    pub next_segment_id: u64,
+    pub wal_gen: u64,
+    pub segments: Vec<SegmentEntry>,
+}
+
+/// Does `dir` hold a committed store?
+pub fn exists(dir: &Path) -> bool {
+    dir.join(MANIFEST).exists()
+}
+
+/// Atomically replace the manifest with `state`.
+pub fn commit(dir: &Path, state: &ManifestState) -> Result<()> {
+    let doc = Json::obj([
+        ("version", VERSION.into()),
+        ("num_attrs", state.num_attrs.into()),
+        ("next_segment_id", state.next_segment_id.into()),
+        ("wal_gen", state.wal_gen.into()),
+        (
+            "segments",
+            Json::Arr(
+                state
+                    .segments
+                    .iter()
+                    .map(|e| {
+                        Json::obj([
+                            ("id", e.id.into()),
+                            ("file", e.file.as_str().into()),
+                            ("base", e.base.into()),
+                            ("nbits", e.nbits.into()),
+                            ("bytes", e.bytes.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let tmp = dir.join("MANIFEST.tmp");
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(doc.render().as_bytes())?;
+        f.write_all(b"\n")?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, dir.join(MANIFEST))?;
+    segment::sync_dir(dir);
+    Ok(())
+}
+
+/// A manifest-corruption error naming the offending file.
+fn corrupt(path: &Path, detail: impl std::fmt::Display) -> StoreError {
+    StoreError::Corrupt {
+        what: "manifest",
+        detail: format!("{}: {detail}", path.display()),
+    }
+}
+
+/// Load and validate the manifest of `dir`.
+pub fn load(dir: &Path) -> Result<ManifestState> {
+    let path = dir.join(MANIFEST);
+    let text = fs::read_to_string(&path)?;
+    let doc =
+        Json::parse(text.trim_end()).map_err(|e| corrupt(&path, e))?;
+    let num = |key: &str| {
+        doc.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| corrupt(&path, format!("missing number '{key}'")))
+    };
+    let version = num("version")?;
+    if version != VERSION {
+        return Err(corrupt(&path, format!("unknown version {version}")));
+    }
+    let num_attrs = num("num_attrs")? as usize;
+    if num_attrs == 0 {
+        return Err(corrupt(&path, "zero attributes"));
+    }
+    let next_segment_id = num("next_segment_id")? as u64;
+    let wal_gen = num("wal_gen")? as u64;
+    let arr = doc
+        .get("segments")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| corrupt(&path, "missing 'segments' array"))?;
+    let mut segments = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let field = |key: &str| {
+            e.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                corrupt(&path, format!("segment {i}: missing '{key}'"))
+            })
+        };
+        let file = e
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| {
+                corrupt(&path, format!("segment {i}: missing 'file'"))
+            })?
+            .to_string();
+        segments.push(SegmentEntry {
+            id: field("id")? as u64,
+            file,
+            base: field("base")? as usize,
+            nbits: field("nbits")? as usize,
+            bytes: field("bytes")? as u64,
+        });
+    }
+    Ok(ManifestState { num_attrs, next_segment_id, wal_gen, segments })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commit_load_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-manifest-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        assert!(!exists(&dir));
+        let state = ManifestState {
+            num_attrs: 8,
+            next_segment_id: 3,
+            wal_gen: 2,
+            segments: vec![
+                SegmentEntry {
+                    id: 0,
+                    file: "seg-00000000.bic".into(),
+                    base: 0,
+                    nbits: 4096,
+                    bytes: 777,
+                },
+                SegmentEntry {
+                    id: 2,
+                    file: "seg-00000002.bic".into(),
+                    base: 4096,
+                    nbits: 128,
+                    bytes: 99,
+                },
+            ],
+        };
+        commit(&dir, &state).unwrap();
+        assert!(exists(&dir));
+        assert_eq!(load(&dir).unwrap(), state);
+        // Re-commit replaces atomically (no tmp residue).
+        let mut state2 = state.clone();
+        state2.wal_gen = 3;
+        state2.segments.pop();
+        commit(&dir, &state2).unwrap();
+        assert_eq!(load(&dir).unwrap(), state2);
+        assert!(!dir.join("MANIFEST.tmp").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-manifest-bad-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        for bad in ["", "{}", "{\"version\":9}", "not json"] {
+            fs::write(dir.join(MANIFEST), bad).unwrap();
+            assert!(load(&dir).is_err(), "{bad:?}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,391 @@
+//! Durable segment store: the crash-safe persistent home of the bitmap
+//! index — the missing piece between the in-memory
+//! [`CompressedIndex`](crate::bic::codec::CompressedIndex) tier and the
+//! paper's peak/off-peak story (index hard during peak hours, then hold
+//! state at near-zero power: state you lose on power-off is not held).
+//!
+//! Architecture (LSM-lite, append-only):
+//!
+//! - **WAL** ([`wal`]) — every acknowledged batch is first appended to a
+//!   checksummed write-ahead log and fsynced; the in-memory memtable is
+//!   always reconstructible from it.
+//! - **Segments** ([`segment`]) — the memtable flushes into immutable
+//!   segment files: checksummed header, per-attribute row directory with
+//!   offsets, then codec-tagged row payloads (the same adaptive
+//!   raw/WAH/roaring encodings the query tier executes on).
+//! - **Manifest** ([`manifest`]) — the single source of truth for the
+//!   live segment set, replaced atomically (temp file + rename), so a
+//!   crash at any byte leaves either the old or the new store view,
+//!   never a torn one. Each flush rotates the WAL generation through the
+//!   same commit, so replay can never double-count a flushed batch.
+//! - **Reader** ([`reader`]) — answers [`Query`](crate::bic::Query)
+//!   evaluations spanning memtable + segments by OR-merging each
+//!   referenced attribute row across segments run-by-run (the streaming
+//!   `or_into_at` kernels), never materializing a fully decompressed
+//!   index.
+//! - **Compaction** ([`compaction`]) — a background
+//!   [`Compactor`](compaction::Compactor) merges small segments into
+//!   larger ones, tombstoning superseded files through the manifest.
+//!
+//! Crash safety contract (property-tested in `rust/tests/store_props.rs`
+//! against truncation at every byte offset): after [`Store::recover`],
+//! the store is queryable and every row is bit-identical to the
+//! in-memory reference built from the prefix of batches whose
+//! [`Store::append_batch`] durably returned.
+
+pub mod compaction;
+pub mod manifest;
+pub mod reader;
+pub mod segment;
+pub mod wal;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::bic::bitmap::Bitmap;
+use crate::bic::codec::{CodecBitmap, CompressedIndex};
+use self::compaction::CompactionPolicy;
+pub use self::compaction::Compactor;
+use self::manifest::{ManifestState, SegmentEntry};
+pub use self::reader::StoreReader;
+use self::segment::Segment;
+use self::wal::Wal;
+
+/// Store-layer errors. I/O failures pass through; corruption found while
+/// reading (bad magic, checksum mismatch, structural violations) is
+/// reported with what was being read.
+#[derive(Debug, thiserror::Error)]
+pub enum StoreError {
+    #[error("store io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("corrupt {what}: {detail}")]
+    Corrupt { what: &'static str, detail: String },
+    #[error("store: {0}")]
+    Invalid(String),
+}
+
+pub type Result<T> = std::result::Result<T, StoreError>;
+
+/// Tuning knobs for a store instance.
+#[derive(Clone, Copy, Debug)]
+pub struct StoreConfig {
+    /// Flush the memtable into a segment once it holds this many
+    /// acknowledged batches (0 = manual flushes only).
+    pub flush_batches: usize,
+    /// When the background/foreground compactor merges segments.
+    pub compaction: CompactionPolicy,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self { flush_batches: 64, compaction: CompactionPolicy::default() }
+    }
+}
+
+/// A durable, crash-safe persistent bitmap index over one directory.
+pub struct Store {
+    pub(crate) dir: PathBuf,
+    pub(crate) cfg: StoreConfig,
+    pub(crate) num_attrs: usize,
+    /// Live segments, ordered by `base`; bases are contiguous.
+    pub(crate) segments: Vec<Segment>,
+    pub(crate) next_segment_id: u64,
+    pub(crate) wal_gen: u64,
+    wal: Wal,
+    /// Acknowledged batches not yet flushed (each: one row per attr).
+    pub(crate) memtable: Vec<Vec<CodecBitmap>>,
+    pub(crate) memtable_bits: usize,
+    segment_bytes_written: u64,
+}
+
+impl Store {
+    /// Create a fresh store in `dir` (created if missing; must not
+    /// already hold a store).
+    pub fn create(
+        dir: impl AsRef<Path>,
+        num_attrs: usize,
+        cfg: StoreConfig,
+    ) -> Result<Store> {
+        let dir = dir.as_ref().to_path_buf();
+        if num_attrs == 0 {
+            return Err(StoreError::Invalid("need at least one attribute".into()));
+        }
+        fs::create_dir_all(&dir)?;
+        if manifest::exists(&dir) {
+            return Err(StoreError::Invalid(format!(
+                "{} already holds a store (use open)",
+                dir.display()
+            )));
+        }
+        let state = ManifestState {
+            num_attrs,
+            next_segment_id: 0,
+            wal_gen: 0,
+            segments: Vec::new(),
+        };
+        manifest::commit(&dir, &state)?;
+        let wal = Wal::create(&dir, 0)?;
+        Ok(Store {
+            dir,
+            cfg,
+            num_attrs,
+            segments: Vec::new(),
+            next_segment_id: 0,
+            wal_gen: 0,
+            wal,
+            memtable: Vec::new(),
+            memtable_bits: 0,
+            segment_bytes_written: 0,
+        })
+    }
+
+    /// Open an existing store — always the recovery path, so a store
+    /// that last closed mid-crash opens exactly like a clean one.
+    pub fn open(dir: impl AsRef<Path>, cfg: StoreConfig) -> Result<Store> {
+        Self::recover(dir, cfg)
+    }
+
+    /// Recover the store in `dir`: load the manifest's live segment set
+    /// (verifying checksums), delete orphans (torn segment writes that
+    /// never reached a manifest commit, stale WAL generations), and
+    /// replay the current-generation WAL into the memtable, truncating
+    /// it to the last whole, checksum-valid record.
+    pub fn recover(dir: impl AsRef<Path>, cfg: StoreConfig) -> Result<Store> {
+        let dir = dir.as_ref().to_path_buf();
+        let state = manifest::load(&dir)?;
+
+        // Load the committed segment set; bases must tile contiguously.
+        let mut segments = Vec::with_capacity(state.segments.len());
+        let mut expected_base = 0usize;
+        for e in &state.segments {
+            let seg = Segment::load(&dir.join(&e.file))?;
+            if seg.id != e.id
+                || seg.base != e.base
+                || seg.nbits != e.nbits
+                || seg.rows.len() != state.num_attrs
+            {
+                return Err(StoreError::Corrupt {
+                    what: "segment",
+                    detail: format!(
+                        "{} disagrees with manifest entry (id {} base {} \
+                         nbits {} attrs {})",
+                        e.file, e.id, e.base, e.nbits, state.num_attrs
+                    ),
+                });
+            }
+            if seg.base != expected_base {
+                return Err(StoreError::Corrupt {
+                    what: "manifest",
+                    detail: format!(
+                        "segment {} at base {} expected {}",
+                        e.id, seg.base, expected_base
+                    ),
+                });
+            }
+            expected_base += seg.nbits;
+            segments.push(seg);
+        }
+
+        // Tombstone cleanup: anything with a store-owned name that the
+        // manifest does not reference is a leftover of an interrupted
+        // flush/compaction — a segment written but never committed, a
+        // temp file mid-write, a WAL of a rotated-away generation.
+        let live_wal = wal::file_name(state.wal_gen);
+        for entry in fs::read_dir(&dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name == manifest::MANIFEST || name == live_wal {
+                continue;
+            }
+            let committed = state.segments.iter().any(|e| e.file == name);
+            let ours = name.starts_with("seg-")
+                || name.starts_with("wal-")
+                || name.ends_with(".tmp");
+            if ours && !committed {
+                let _ = fs::remove_file(entry.path());
+            }
+        }
+
+        // Replay the WAL: the valid prefix is the durably-acknowledged
+        // batch set since the last flush.
+        let (memtable, valid_len) =
+            wal::replay(&dir, state.wal_gen, state.num_attrs)?;
+        let wal = Wal::open_truncated(&dir, state.wal_gen, valid_len)?;
+        let memtable_bits = memtable
+            .iter()
+            .map(|rows| rows.first().map_or(0, CodecBitmap::len))
+            .sum();
+
+        Ok(Store {
+            dir,
+            cfg,
+            num_attrs: state.num_attrs,
+            segments,
+            next_segment_id: state.next_segment_id,
+            wal_gen: state.wal_gen,
+            wal,
+            memtable,
+            memtable_bits,
+            segment_bytes_written: 0,
+        })
+    }
+
+    #[inline]
+    pub fn num_attrs(&self) -> usize {
+        self.num_attrs
+    }
+
+    /// Total objects across segments + memtable.
+    pub fn num_objects(&self) -> usize {
+        self.segment_bits() + self.memtable_bits
+    }
+
+    /// Objects covered by flushed segments.
+    pub(crate) fn segment_bits(&self) -> usize {
+        self.segments.last().map_or(0, |s| s.base + s.nbits)
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Acknowledged batches still in the memtable (WAL-covered).
+    pub fn memtable_batches(&self) -> usize {
+        self.memtable.len()
+    }
+
+    /// Cumulative segment bytes written by this handle (flushes +
+    /// compactions) — the extmem-side accounting quantity.
+    pub fn segment_bytes_written(&self) -> u64 {
+        self.segment_bytes_written
+    }
+
+    /// Append one encoded batch. Returns once the batch is durable in
+    /// the WAL (fsynced); may trigger an auto-flush.
+    pub fn append_batch(&mut self, ci: &CompressedIndex) -> Result<()> {
+        if ci.num_attrs() != self.num_attrs {
+            return Err(StoreError::Invalid(format!(
+                "batch has {} attrs, store has {}",
+                ci.num_attrs(),
+                self.num_attrs
+            )));
+        }
+        self.append_rows(ci.rows().to_vec())
+    }
+
+    /// [`Store::append_batch`] over pre-encoded rows (one per attribute,
+    /// all the same length).
+    pub fn append_rows(&mut self, rows: Vec<CodecBitmap>) -> Result<()> {
+        if rows.len() != self.num_attrs {
+            return Err(StoreError::Invalid(format!(
+                "batch has {} rows, store has {} attrs",
+                rows.len(),
+                self.num_attrs
+            )));
+        }
+        let nbits = rows[0].len();
+        if rows.iter().any(|r| r.len() != nbits) {
+            return Err(StoreError::Invalid("ragged batch rows".into()));
+        }
+        self.wal.append(&rows)?; // fsync: the durability point
+        self.memtable_bits += nbits;
+        self.memtable.push(rows);
+        if self.cfg.flush_batches > 0
+            && self.memtable.len() >= self.cfg.flush_batches
+        {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Flush the memtable into an immutable segment: concatenate each
+    /// attribute's batch rows (streamed at their object offsets, no
+    /// full-index materialization), re-encode adaptively, write the
+    /// segment file (temp + fsync + rename), commit the manifest with
+    /// the segment added and the WAL generation rotated, then drop the
+    /// old WAL. Returns the segment bytes written, or `None` when the
+    /// memtable was empty.
+    pub fn flush(&mut self) -> Result<Option<u64>> {
+        if self.memtable.is_empty() {
+            return Ok(None);
+        }
+        let base = self.segment_bits();
+        let nbits = self.memtable_bits;
+        let rows: Vec<CodecBitmap> = (0..self.num_attrs)
+            .map(|a| {
+                let mut acc = Bitmap::zeros(nbits);
+                let mut off = 0usize;
+                for batch in &self.memtable {
+                    batch[a].or_into_at(&mut acc, off);
+                    off += batch[a].len();
+                }
+                CodecBitmap::from_bitmap(&acc)
+            })
+            .collect();
+
+        let id = self.next_segment_id;
+        let (file, bytes) = segment::write(&self.dir, id, base, &rows)?;
+        let new_gen = self.wal_gen + 1;
+        // Open the next WAL generation *before* the commit: every
+        // fallible step happens while the old state is still the
+        // committed truth (an error here leaves the handle fully
+        // consistent, and the pre-created file is just an orphan the
+        // next recovery sweeps). After the commit the swap below is
+        // infallible, so the handle can never keep acknowledging
+        // appends into a generation the manifest has rotated away.
+        let new_wal = Wal::create(&self.dir, new_gen)?;
+        let mut entries = self.manifest_entries();
+        entries.push(SegmentEntry {
+            id,
+            file: file.clone(),
+            base,
+            nbits,
+            bytes,
+        });
+        manifest::commit(
+            &self.dir,
+            &ManifestState {
+                num_attrs: self.num_attrs,
+                next_segment_id: id + 1,
+                wal_gen: new_gen,
+                segments: entries,
+            },
+        )?;
+        // Committed: the segment is live and the old WAL generation is
+        // dead (recovery ignores it even if the unlink below never runs).
+        let old_wal = wal::path(&self.dir, self.wal_gen);
+        self.wal = new_wal;
+        let _ = fs::remove_file(old_wal);
+        self.wal_gen = new_gen;
+        self.next_segment_id = id + 1;
+        self.segments.push(Segment { id, file, base, nbits, bytes, rows });
+        self.memtable.clear();
+        self.memtable_bits = 0;
+        self.segment_bytes_written += bytes;
+        Ok(Some(bytes))
+    }
+
+    /// Snapshot view for query evaluation.
+    pub fn reader(&self) -> StoreReader<'_> {
+        StoreReader::new(self)
+    }
+
+    /// The manifest entries for the current live segment set.
+    pub(crate) fn manifest_entries(&self) -> Vec<SegmentEntry> {
+        self.segments
+            .iter()
+            .map(|s| SegmentEntry {
+                id: s.id,
+                file: s.file.clone(),
+                base: s.base,
+                nbits: s.nbits,
+                bytes: s.bytes,
+            })
+            .collect()
+    }
+
+    pub(crate) fn note_segment_bytes(&mut self, bytes: u64) {
+        self.segment_bytes_written += bytes;
+    }
+}

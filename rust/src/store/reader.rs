@@ -1,0 +1,117 @@
+//! Query evaluation over the durable store: memtable + segments, without
+//! ever materializing a fully decompressed index.
+//!
+//! Each attribute row the query references is assembled once into a
+//! global-length accumulator by OR-merging the per-segment rows at their
+//! object offsets — run by run, through the streaming `or_into_at`
+//! kernels (a WAH fill lands as one word-span write, roaring dense
+//! chunks move word-shifted). Rows the query never touches are never
+//! assembled; nothing else is decompressed.
+
+use std::collections::HashMap;
+
+use super::Store;
+use crate::bic::bitmap::{Bitmap, BitmapIndex};
+use crate::bic::query::{Query, QueryError};
+
+/// A read view over a [`Store`] (memtable + live segments at the time
+/// of the borrow).
+pub struct StoreReader<'a> {
+    store: &'a Store,
+}
+
+impl<'a> StoreReader<'a> {
+    pub(crate) fn new(store: &'a Store) -> Self {
+        Self { store }
+    }
+
+    #[inline]
+    pub fn num_attrs(&self) -> usize {
+        self.store.num_attrs
+    }
+
+    #[inline]
+    pub fn num_objects(&self) -> usize {
+        self.store.num_objects()
+    }
+
+    /// Assemble attribute `attr`'s global row: every segment's row OR'd
+    /// in at its base, then the memtable batches at theirs.
+    pub fn assemble_row(&self, attr: usize) -> Bitmap {
+        assert!(attr < self.num_attrs(), "attr {attr} out of range");
+        let mut acc = Bitmap::zeros(self.num_objects());
+        for seg in &self.store.segments {
+            seg.rows[attr].or_into_at(&mut acc, seg.base);
+        }
+        let mut off = self.store.segment_bits();
+        for batch in &self.store.memtable {
+            batch[attr].or_into_at(&mut acc, off);
+            off += batch[attr].len();
+        }
+        acc
+    }
+
+    /// Evaluate a query spanning memtable + segments. Result-identical
+    /// to `Query::eval` over [`StoreReader::to_index`] (the property
+    /// tests pin this), but only the referenced rows are assembled.
+    pub fn eval(&self, q: &Query) -> Result<Bitmap, QueryError> {
+        let m = self.num_attrs();
+        let attrs = q.attrs(); // sorted, deduplicated
+        for &a in &attrs {
+            if a >= m {
+                return Err(QueryError::AttrOutOfRange(a, m));
+            }
+        }
+        if attrs.is_empty() {
+            // No rows referenced: evaluation only needs the object
+            // count (And([]) = all, Or([]) = none, and compositions).
+            let bi =
+                BitmapIndex::from_rows(vec![Bitmap::zeros(self.num_objects())]);
+            return Ok(q.eval(&bi).expect("no attrs referenced"));
+        }
+        let map: HashMap<usize, usize> =
+            attrs.iter().enumerate().map(|(dense, &a)| (a, dense)).collect();
+        let rows: Vec<Bitmap> =
+            attrs.iter().map(|&a| self.assemble_row(a)).collect();
+        let bi = BitmapIndex::from_rows(rows);
+        let dense_q = remap(q, &map);
+        Ok(dense_q.eval(&bi).expect("remapped attrs are dense and in range"))
+    }
+
+    /// Materialize the whole index (every attribute assembled) — the
+    /// differential reference for tests; queries should go through
+    /// [`StoreReader::eval`].
+    pub fn to_index(&self) -> BitmapIndex {
+        let rows =
+            (0..self.num_attrs()).map(|a| self.assemble_row(a)).collect();
+        BitmapIndex::from_rows(rows)
+    }
+}
+
+/// Rewrite a query's attribute ids through `map` (total on the query's
+/// attrs by construction).
+fn remap(q: &Query, map: &HashMap<usize, usize>) -> Query {
+    match q {
+        Query::Attr(a) => Query::Attr(map[a]),
+        Query::And(xs) => Query::And(xs.iter().map(|x| remap(x, map)).collect()),
+        Query::Or(xs) => Query::Or(xs.iter().map(|x| remap(x, map)).collect()),
+        Query::Not(inner) => Query::Not(Box::new(remap(inner, map))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remap_rewrites_every_leaf() {
+        let q = Query::attr(7)
+            .and(Query::attr(3))
+            .or(Query::attr(7).not())
+            .and(Query::And(vec![]));
+        let map: HashMap<usize, usize> = [(3, 0), (7, 1)].into_iter().collect();
+        let r = remap(&q, &map);
+        assert_eq!(r.attrs(), vec![0, 1]);
+        assert_eq!(q.op_count(), r.op_count());
+    }
+}

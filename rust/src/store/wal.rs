@@ -1,0 +1,279 @@
+//! Write-ahead log: the durability of the memtable between segment
+//! flushes.
+//!
+//! One file per WAL *generation* (`wal-<gen>.log`); each flush commits a
+//! new generation through the manifest, so replay can never double-count
+//! a batch that already lives in a segment — the crash window between
+//! "manifest committed" and "old WAL deleted" leaves only an orphan file
+//! that recovery ignores.
+//!
+//! Record framing (little-endian):
+//!
+//! ```text
+//! u32 len | u32 crc32(payload) | payload[len]
+//! payload = u32 row_count, then row_count x CodecBitmap::write_bytes
+//! ```
+//!
+//! Replay walks records until the first short, checksum-invalid, or
+//! structurally invalid record and returns the prefix — exactly the set
+//! of appends whose fsync completed. Torn tails at *any* byte offset
+//! therefore recover to a prefix-consistent memtable (property-tested in
+//! `rust/tests/store_props.rs`).
+
+use std::fs;
+use std::io::{Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+
+use super::Result;
+use crate::bic::codec::{read_u32, CodecBitmap};
+use crate::substrate::crc::crc32;
+
+/// File name of WAL generation `gen`.
+pub(crate) fn file_name(gen: u64) -> String {
+    format!("wal-{gen:08}.log")
+}
+
+/// Path of WAL generation `gen` inside `dir`.
+pub(crate) fn path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(file_name(gen))
+}
+
+/// An open, append-only WAL handle.
+pub(crate) struct Wal {
+    file: fs::File,
+}
+
+impl Wal {
+    /// Create (or open for append) generation `gen`.
+    pub(crate) fn create(dir: &Path, gen: u64) -> Result<Wal> {
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path(dir, gen))?;
+        Ok(Wal { file })
+    }
+
+    /// Reopen generation `gen` truncated to its valid prefix (what
+    /// replay measured), positioned for appending.
+    pub(crate) fn open_truncated(
+        dir: &Path,
+        gen: u64,
+        valid_len: u64,
+    ) -> Result<Wal> {
+        let mut file = fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(path(dir, gen))?;
+        file.set_len(valid_len)?;
+        file.seek(SeekFrom::End(0))?;
+        file.sync_all()?;
+        Ok(Wal { file })
+    }
+
+    /// Append one batch record and fsync — returning `Ok` is the
+    /// store's durability acknowledgement.
+    pub(crate) fn append(&mut self, rows: &[CodecBitmap]) -> Result<()> {
+        let body: usize =
+            rows.iter().map(CodecBitmap::serialized_bytes).sum();
+        let mut payload = Vec::with_capacity(4 + body);
+        payload.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+        for r in rows {
+            r.write_bytes(&mut payload);
+        }
+        let mut record = Vec::with_capacity(8 + payload.len());
+        record.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        record.extend_from_slice(&crc32(&payload).to_le_bytes());
+        record.extend_from_slice(&payload);
+        self.file.write_all(&record)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Replay generation `gen`: returns the durably-acknowledged batch
+/// prefix and its byte length within the file. A missing file is an
+/// empty log. Never errors on a torn/corrupt tail — that is the crash
+/// case it exists for; only real I/O failures surface.
+pub(crate) fn replay(
+    dir: &Path,
+    gen: u64,
+    num_attrs: usize,
+) -> Result<(Vec<Vec<CodecBitmap>>, u64)> {
+    let buf = match fs::read(path(dir, gen)) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok((Vec::new(), 0));
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let mut batches = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let record_start = pos;
+        let Some(rest) = buf.get(pos..) else { break };
+        if rest.len() < 8 {
+            break; // torn header
+        }
+        let len = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+        let crc = u32::from_le_bytes([rest[4], rest[5], rest[6], rest[7]]);
+        let Some(payload) = rest.get(8..8 + len) else {
+            break; // torn payload
+        };
+        if crc32(payload) != crc {
+            break; // corrupt tail
+        }
+        let Some(rows) = decode_batch(payload, num_attrs) else {
+            break; // structurally invalid (treated like corruption)
+        };
+        batches.push(rows);
+        pos = record_start + 8 + len;
+    }
+    Ok((batches, pos as u64))
+}
+
+/// Decode one record payload; `None` on any structural violation.
+fn decode_batch(payload: &[u8], num_attrs: usize) -> Option<Vec<CodecBitmap>> {
+    let mut pos = 0usize;
+    let m = read_u32(payload, &mut pos).ok()? as usize;
+    if m != num_attrs {
+        return None;
+    }
+    let mut rows = Vec::with_capacity(m);
+    for _ in 0..m {
+        rows.push(CodecBitmap::read_bytes(payload, &mut pos).ok()?);
+    }
+    if pos != payload.len() {
+        return None;
+    }
+    let nbits = rows.first().map_or(0, CodecBitmap::len);
+    if rows.iter().any(|r| r.len() != nbits) {
+        return None;
+    }
+    Some(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bic::bitmap::Bitmap;
+    use crate::substrate::rng::Xoshiro256;
+
+    fn batch(n: usize, seed: u64) -> Vec<CodecBitmap> {
+        let mut rng = Xoshiro256::seeded(seed);
+        (0..3)
+            .map(|_| {
+                let bools: Vec<bool> =
+                    (0..n).map(|_| rng.chance(0.2)).collect();
+                CodecBitmap::from_bitmap(&Bitmap::from_bools(&bools))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn append_replay_roundtrip_and_torn_tails() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-wal-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let batches: Vec<_> = (0..4).map(|i| batch(500 + i, i as u64)).collect();
+        {
+            let mut wal = Wal::create(&dir, 5).unwrap();
+            for b in &batches {
+                wal.append(b).unwrap();
+            }
+        }
+        let (replayed, len) = replay(&dir, 5, 3).unwrap();
+        assert_eq!(replayed, batches);
+        let full = fs::read(path(&dir, 5)).unwrap();
+        assert_eq!(len, full.len() as u64);
+
+        // Truncate at every byte: replay must yield exactly the whole
+        // records that survive, in order.
+        let mut boundaries = vec![0u64];
+        {
+            let mut p = 0usize;
+            while p < full.len() {
+                let l = u32::from_le_bytes([
+                    full[p],
+                    full[p + 1],
+                    full[p + 2],
+                    full[p + 3],
+                ]) as usize;
+                p += 8 + l;
+                boundaries.push(p as u64);
+            }
+        }
+        for cut in 0..=full.len() {
+            fs::write(path(&dir, 5), &full[..cut]).unwrap();
+            let (got, valid) = replay(&dir, 5, 3).unwrap();
+            let expect_records =
+                boundaries.iter().filter(|&&b| b <= cut as u64).count() - 1;
+            assert_eq!(got.len(), expect_records, "cut at {cut}");
+            assert_eq!(got, batches[..expect_records], "cut at {cut}");
+            assert_eq!(valid, boundaries[expect_records], "cut at {cut}");
+        }
+
+        // Missing generation = empty log.
+        let (none, len0) = replay(&dir, 99, 3).unwrap();
+        assert!(none.is_empty());
+        assert_eq!(len0, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_middle_record_cuts_the_prefix_there() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-wal-corrupt-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let batches: Vec<_> = (0..3).map(|i| batch(400, 10 + i)).collect();
+        {
+            let mut wal = Wal::create(&dir, 0).unwrap();
+            for b in &batches {
+                wal.append(b).unwrap();
+            }
+        }
+        let mut bytes = fs::read(path(&dir, 0)).unwrap();
+        // Flip one payload byte of the second record.
+        let rec0_len =
+            u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+        let rec1_start = 8 + rec0_len;
+        bytes[rec1_start + 8 + 5] ^= 0xFF;
+        fs::write(path(&dir, 0), &bytes).unwrap();
+        let (got, valid) = replay(&dir, 0, 3).unwrap();
+        assert_eq!(got.len(), 1, "only the record before the corruption");
+        assert_eq!(got[0], batches[0]);
+        assert_eq!(valid as usize, rec1_start);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_truncated_resumes_appending() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-wal-resume-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let b0 = batch(300, 77);
+        let b1 = batch(301, 78);
+        {
+            let mut wal = Wal::create(&dir, 1).unwrap();
+            wal.append(&b0).unwrap();
+        }
+        // Simulate a torn tail, then recover + append.
+        let mut bytes = fs::read(path(&dir, 1)).unwrap();
+        let good_len = bytes.len();
+        bytes.extend_from_slice(&[1, 2, 3]); // garbage tail
+        fs::write(path(&dir, 1), &bytes).unwrap();
+        let (got, valid) = replay(&dir, 1, 3).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(valid as usize, good_len);
+        {
+            let mut wal = Wal::open_truncated(&dir, 1, valid).unwrap();
+            wal.append(&b1).unwrap();
+        }
+        let (got, _) = replay(&dir, 1, 3).unwrap();
+        assert_eq!(got, vec![b0, b1]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,75 @@
+//! CRC-32 (IEEE 802.3, reflected, polynomial 0xEDB88320) — the checksum
+//! the durable store stamps on WAL records and segment files. Vendored
+//! like the rest of the substrate (no `crc32fast` on the offline shelf);
+//! a 256-entry table built at compile time keeps the per-byte loop to one
+//! shift + one xor.
+
+/// Compile-time CRC-32 lookup table (one entry per byte value).
+const TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut n = 0usize;
+    while n < 256 {
+        let mut crc = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            k += 1;
+        }
+        table[n] = crc;
+        n += 1;
+    }
+    table
+};
+
+/// CRC-32 of `bytes` (init 0xFFFFFFFF, final xor 0xFFFFFFFF — the common
+/// zlib/PNG/Ethernet convention).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Streaming form: feed chunks through `update` starting from
+/// `0xFFFFFFFF`, xor with `0xFFFFFFFF` at the end.
+pub fn update(state: u32, bytes: &[u8]) -> u32 {
+    let mut crc = state;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The classic check value for this CRC variant.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        for split in 0..data.len() {
+            let s = update(0xFFFF_FFFF, &data[..split]);
+            let s = update(s, &data[split..]);
+            assert_eq!(s ^ 0xFFFF_FFFF, crc32(data), "split {split}");
+        }
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let data = b"segment payload bytes";
+        let base = crc32(data);
+        let mut copy = *data;
+        for i in 0..copy.len() {
+            for bit in 0..8 {
+                copy[i] ^= 1 << bit;
+                assert_ne!(crc32(&copy), base, "flip byte {i} bit {bit}");
+                copy[i] ^= 1 << bit;
+            }
+        }
+    }
+}
