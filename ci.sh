@@ -42,6 +42,13 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
+# The engine facade and bic::query carry #![deny(missing_docs)], so an
+# undocumented public item in either is a hard *compile* error — the
+# examples build doubles as the facade-API exercise (all four construct
+# the system through EngineBuilder).
+echo "== cargo build --release --examples =="
+cargo build --release --examples
+
 echo "== tier-1: cargo test -q =="
 cargo test -q
 

@@ -1,26 +1,28 @@
 //! End-to-end driver: index a *real* dataset (this repository's own
-//! source tree) through the full three-layer stack, then replay the same
-//! workload through the multi-core coordinator for timing + energy — and
-//! validate the index by answering content queries against a brute-force
-//! scan.
+//! source tree) through the engine facade with a durable store, then
+//! replay the same workload through the multi-core coordinator for
+//! timing + energy — and validate the index by answering content
+//! queries against a brute-force scan.
 //!
 //! Pipeline exercised:
 //!   - records: 32-byte chunks of real files (the chip's native shape)
-//!   - data path: AOT HLO artifact via PJRT (L1 Pallas kernel + L2 JAX
-//!     graph, compiled once at build time) — cross-checked per batch
-//!     against the pure-Rust golden model
+//!   - session path: `EngineBuilder` -> ingest (worker threads, adaptive
+//!     codecs) -> WAL-durable store -> flush -> planned queries + a
+//!     pinned snapshot
+//!   - data-path cross-check: when AOT artifacts exist, the PJRT
+//!     executable re-indexes a sample batch and must agree bit-for-bit
 //!   - system path: the Fig. 4 multi-core coordinator (router, standby
 //!     power manager, external-memory channel) over the same batches
-//!   - downstream: multi-dimensional queries on the assembled index
 //!
 //! ```sh
-//! make artifacts && cargo run --release --offline --example datacenter_indexing
+//! cargo run --release --offline --example datacenter_indexing
 //! ```
 
 use std::path::Path;
 
-use sotb_bic::bic::{BicConfig, BicCore, Bitmap, Query};
+use sotb_bic::bic::{BicConfig, BicCore, Query};
 use sotb_bic::coordinator::{Batch, Policy, Scheduler, SchedulerConfig};
+use sotb_bic::engine::{col, CompactionMode, Engine, PallasError, Result, Schema};
 use sotb_bic::power::{delay, Supply};
 use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
 use sotb_bic::substrate::stats::format_si;
@@ -66,11 +68,13 @@ fn collect_chunks(root: &Path, out: &mut Vec<(String, Vec<i32>)>) {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // -- 1. Real dataset: this repo's own sources, as 32-byte records. --
     let mut chunks = Vec::new();
     collect_chunks(Path::new("."), &mut chunks);
-    anyhow::ensure!(!chunks.is_empty(), "run from the repository root");
+    if chunks.is_empty() {
+        return Err(PallasError::Config("run from the repository root".into()));
+    }
     println!(
         "dataset: {} chunks (~{} KB) from the repository's own sources",
         chunks.len(),
@@ -80,58 +84,78 @@ fn main() -> anyhow::Result<()> {
     let cfg = BicConfig::CHIP;
     let keys: Vec<i32> = KEY_BYTES.iter().map(|&(_, b)| b as i32).collect();
 
-    // -- 2. Data path: PJRT artifact, verified per batch vs golden. --
-    let manifest = Manifest::load(&Manifest::default_dir())?;
-    let variant = manifest.find_bic("chip").expect("chip variant");
-    let rt = Runtime::cpu()?;
-    let exe = BicExecutable::load(&rt, variant)?;
-    let mut golden = BicCore::new(cfg);
+    // -- 2. Session path: the facade with a durable store. --
+    let store_dir = std::env::temp_dir()
+        .join(format!("bic-datacenter-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let engine = Engine::builder(Schema::single("byte", keys.clone())?)
+        .batch_records(cfg.n_records)
+        .record_words(cfg.w_words)
+        .durable(&store_dir)
+        .flush_batches(64)
+        .compaction(CompactionMode::Foreground)
+        .build()?;
 
     let n_batches = chunks.len().div_ceil(cfg.n_records);
-    let mut rows: Vec<Vec<bool>> = vec![Vec::with_capacity(chunks.len()); keys.len()];
+    let batches: Vec<Vec<Vec<i32>>> = (0..n_batches)
+        .map(|i| {
+            let lo = i * cfg.n_records;
+            let hi = (lo + cfg.n_records).min(chunks.len());
+            chunks[lo..hi].iter().map(|(_, r)| r.clone()).collect()
+        })
+        .collect();
     let t0 = std::time::Instant::now();
-    for bi_idx in 0..n_batches {
-        let lo = bi_idx * cfg.n_records;
-        let hi = (lo + cfg.n_records).min(chunks.len());
-        let records: Vec<Vec<i32>> =
-            chunks[lo..hi].iter().map(|(_, r)| r.clone()).collect();
-        let bi = exe.index(&records, &keys)?;
-        assert_eq!(bi, golden.index(&records, &keys), "batch {bi_idx}");
-        for (k, row) in rows.iter_mut().enumerate() {
-            for j in 0..hi - lo {
-                row.push(bi.get(k, j));
-            }
-        }
-    }
+    engine.ingest_batches(&batches)?;
+    engine.flush()?;
     let wall = t0.elapsed().as_secs_f64();
     let input_bytes = chunks.len() * 32;
+    let stats = engine.stats();
     println!(
-        "PJRT data path: {n_batches} batches in {:.2} ms ({}), verified vs golden ✓",
+        "engine ingest: {n_batches} batches in {:.2} ms ({}), {} segments + \
+         {} memtable batches, {} segment bytes (WAL-durable)",
         wall * 1e3,
         format_si(input_bytes as f64 / wall, "B/s"),
-    );
-    let full_index = sotb_bic::bic::BitmapIndex::from_rows(
-        rows.into_iter().map(|r| Bitmap::from_bools(&r)).collect(),
+        stats.segments,
+        stats.memtable_batches,
+        stats.segment_bytes_written,
     );
 
-    // -- 3. System path: the same workload through the Fig. 4 system. --
+    // -- 3. Optional data-path cross-check: PJRT artifact vs golden. --
+    let artifact_dir = Manifest::default_dir();
+    if artifact_dir.join("manifest.txt").exists() {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let variant = manifest.find_bic("chip").expect("chip variant");
+        let rt = Runtime::cpu()?;
+        let exe = BicExecutable::load(&rt, variant)?;
+        let sample: Vec<Vec<i32>> =
+            chunks[..cfg.n_records.min(chunks.len())]
+                .iter()
+                .map(|(_, r)| r.clone())
+                .collect();
+        let pjrt = exe.index(&sample, &keys)?;
+        let golden = BicCore::new(cfg).index(&sample, &keys);
+        assert_eq!(pjrt, golden, "PJRT and golden model must agree");
+        println!("PJRT data path: sample batch verified vs golden ✓");
+    } else {
+        println!("(PJRT cross-check skipped: run `make artifacts` first)");
+    }
+
+    // -- 4. System path: the same workload through the Fig. 4 system. --
     let mut sys = SchedulerConfig::chip_system(8);
     sys.policy = Policy::CgThenRbb { idle_to_cg: 1e-3, cg_to_rbb: 50e-3 };
     sys.compute_results = false;
     let f = sys.frequency();
-    let batches: Vec<Batch> = (0..n_batches)
-        .map(|i| {
-            let lo = i * cfg.n_records;
-            let hi = (lo + cfg.n_records).min(chunks.len());
-            Batch {
-                id: i as u64,
-                arrival: 0.0, // offered as one burst: peak-hour shape
-                records: chunks[lo..hi].iter().map(|(_, r)| r.clone()).collect(),
-                keys: keys.clone(),
-            }
+    let sim_batches: Vec<Batch> = batches
+        .iter()
+        .enumerate()
+        .map(|(i, records)| Batch {
+            id: i as u64,
+            arrival: 0.0, // offered as one burst: peak-hour shape
+            records: records.clone(),
+            keys: keys.clone(),
         })
         .collect();
-    let report = Scheduler::new(sys).run(batches);
+    let report = Scheduler::new(sys).run(sim_batches);
     println!(
         "coordinator (8 cores @1.2 V, {}): {:.2} MB/s, avg power {}, \
          E = {} ({} active / {} standby+idle), p99 latency {}",
@@ -145,29 +169,48 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "headline check: E/cycle @1.2 V = {} (paper: 162.9 pJ)",
-        format_si(
-            sotb_bic::power::e_cycle(Supply::new(1.2)),
-            "J"
-        ),
+        format_si(sotb_bic::power::e_cycle(Supply::new(1.2)), "J"),
     );
     let _ = delay::f_max_chip(Supply::new(1.2));
 
-    // -- 4. Downstream queries, validated against a brute-force scan. --
-    println!("\nqueries over the assembled index ({} objects):", chunks.len());
+    // -- 5. Planned queries, validated against a brute-force scan. --
+    // A pinned snapshot keeps the view consistent while the engine would
+    // keep ingesting in a live deployment.
+    let snap = engine.snapshot();
+    println!("\nqueries over the snapshot ({} objects):", snap.num_objects());
     let queries: Vec<(&str, Query)> = vec![
         (
             "code blocks: '{' AND '}' AND NOT '#'",
-            Query::attr(0).and(Query::attr(1)).and(Query::attr(2).not()),
+            col("byte")
+                .eq(b'{' as i32)
+                .and(col("byte").eq(b'}' as i32))
+                .and(col("byte").eq(b'#' as i32).not())
+                .lower(snap.schema())?,
         ),
         (
             "python-ish: '#' AND '=' AND NOT ';'",
-            Query::attr(2).and(Query::attr(4)).and(Query::attr(3).not()),
+            col("byte")
+                .eq(b'#' as i32)
+                .and(col("byte").eq(b'=' as i32))
+                .and(col("byte").eq(b';' as i32).not())
+                .lower(snap.schema())?,
         ),
-        ("negation-heavy: NOT '!' AND NOT tab", Query::attr(5).not().and(Query::attr(6).not())),
+        (
+            "negation-heavy: NOT '!' AND NOT tab",
+            col("byte")
+                .eq(b'!' as i32)
+                .not()
+                .and(col("byte").eq(b'\t' as i32).not())
+                .lower(snap.schema())?,
+        ),
     ];
     for (name, q) in queries {
-        let hits = q.eval(&full_index)?;
-        // Brute-force validation on the raw chunks.
+        let plan = engine.plan(&q);
+        let engine_hits = engine.query(&q)?;
+        let snap_hits = snap.query(&q)?;
+        assert_eq!(engine_hits, snap_hits, "snapshot view must agree");
+        // Brute-force validation on the raw chunks. Bits past the real
+        // chunk count are batch padding and must be 0.
         let brute = chunks
             .iter()
             .enumerate()
@@ -178,12 +221,19 @@ fn main() -> anyhow::Result<()> {
                     'p' => has(b'#') && has(b'=') && !has(b';'),
                     _ => !has(b'!') && !has(b'\t'),
                 };
-                assert_eq!(hits.get(*j), expect, "object {j} mismatch");
+                assert_eq!(engine_hits.get(*j), expect, "object {j} mismatch");
                 expect
             })
             .count();
-        println!("  {name}: {} hits (scan agrees ✓)", brute);
+        println!("  {name}: {brute} hits via {} tier (scan agrees ✓)", plan.path.label());
     }
-    println!("\nend-to-end: artifacts -> PJRT -> index -> queries all consistent ✓");
+
+    let final_stats = engine.close()?;
+    let _ = std::fs::remove_dir_all(&store_dir);
+    println!(
+        "\nend-to-end: facade -> durable store -> planned queries all \
+         consistent ✓ ({} queries served)",
+        final_stats.queries_total()
+    );
     Ok(())
 }

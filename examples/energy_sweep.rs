@@ -7,11 +7,12 @@
 //! cargo run --release --offline --example energy_sweep -- [--csv out/]
 //! ```
 
+use sotb_bic::engine::Result;
 use sotb_bic::experiments::{fig6, fig7, fig8, multicore};
 use sotb_bic::power::{i_stb, BackBias, StandbyMode, Supply};
 use sotb_bic::substrate::stats::format_si;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let csv_dir = std::env::args().skip_while(|a| a != "--csv").nth(1);
 
     for result in [fig6::run(), fig7::run(), fig8::run()] {

@@ -1,87 +1,81 @@
 //! Query-engine demo: the paper's Fig. 1 worked example, bit-for-bit,
-//! then the same machinery at data-warehouse scale with WAH-compressed
-//! rows — the workload BI systems exist for (§II-A).
+//! then the same machinery at data-warehouse scale — all through the
+//! `EngineBuilder` facade, with the planner choosing the execution tier
+//! (§II-A's workload is exactly what the compressed tier exists for).
 //!
 //! ```sh
 //! cargo run --release --offline --example query_demo
 //! ```
 
-use sotb_bic::bic::{BicConfig, BicCore, Query, WahBitmap};
+use sotb_bic::bic::BicConfig;
 use sotb_bic::coordinator::{ContentDist, WorkloadGen};
-use sotb_bic::substrate::rng::Xoshiro256;
+use sotb_bic::engine::{col, Engine, Result, Schema, ShardPolicy};
 use sotb_bic::substrate::stats::format_si;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // --- Fig. 1: nine objects, five attributes. ---
-    println!("### paper Fig. 1, reproduced through the BIC core\n");
+    println!("### paper Fig. 1, reproduced through the engine facade\n");
     let membership: [&[i32]; 9] = [
         &[2, 4], &[1], &[2, 5], &[3], &[2, 4], &[1, 5], &[4], &[2], &[3, 4],
     ];
-    let cfg = BicConfig { n_records: 9, w_words: 2, m_keys: 5 };
-    let mut core = BicCore::new(cfg);
+    let engine = Engine::builder(Schema::single("A", 1..=5)?)
+        .batch_records(9)
+        .record_words(2)
+        .build()?;
     let records: Vec<Vec<i32>> = membership.iter().map(|a| a.to_vec()).collect();
-    let keys: Vec<i32> = (1..=5).collect();
-    let bi = core.index(&records, &keys);
-    for i in 0..5 {
+    engine.ingest(&records)?;
+    let index = engine.snapshot().to_index();
+    for a in 0..5 {
         let row: String =
-            (0..9).map(|j| if bi.get(i, j) { '1' } else { '0' }).collect();
-        println!("  A{} : {row}", i + 1);
+            (0..9).map(|j| if index.get(a, j) { '1' } else { '0' }).collect();
+        println!("  A{} : {row}", a + 1);
     }
-    let q = Query::attr(1).and(Query::attr(3)).and(Query::attr(4).not());
-    let hits: Vec<usize> = q.eval(&bi)?.iter_ones().map(|j| j + 1).collect();
+    let pred = col("A").eq(2).and(col("A").eq(4)).and(col("A").eq(5).not());
+    let hits: Vec<usize> =
+        engine.select(&pred)?.iter_ones().map(|j| j + 1).collect();
     println!(
         "\n  \"objects containing A2 and A4 but not A5\" -> O{hits:?} \
          (paper: O1, O5) ✓\n"
     );
     assert_eq!(hits, vec![1, 5]);
 
-    // --- Warehouse scale: 1M objects, 3 content distributions. ---
-    println!("### WAH compression & query latency at warehouse scale\n");
+    // --- Warehouse scale: 3 content distributions, planned execution. ---
+    println!("### compression & planned query latency at warehouse scale\n");
     for (name, dist) in [
         ("uniform", ContentDist::Uniform),
         ("zipf(1.2)", ContentDist::Zipf { s: 1.2 }),
         ("clustered(16)", ContentDist::Clustered { spread: 16 }),
     ] {
-        // Build a 16-attr x 262k-object index from generated batches.
+        // 16 byte-valued attributes x 262k objects, ingested in 1024
+        // batches fanned over the worker threads.
         let cfg = BicConfig { n_records: 256, w_words: 8, m_keys: 16 };
+        let engine = Engine::builder(Schema::single("byte", 0..16)?)
+            .batch_records(cfg.n_records)
+            .record_words(cfg.w_words)
+            .shard_policy(ShardPolicy::Never)
+            .build()?;
         let mut gen = WorkloadGen::new(cfg, dist, 7);
-        let mut core = BicCore::new(cfg);
-        let mut rows: Vec<Vec<bool>> = vec![Vec::new(); 16];
-        for _ in 0..1024 {
-            let b = gen.batch_at(0.0);
-            let bi = core.index(&b.records, &b.keys);
-            for (i, row) in rows.iter_mut().enumerate() {
-                for j in 0..256 {
-                    row.push(bi.get(i, j));
-                }
-            }
-        }
-        let index = sotb_bic::bic::BitmapIndex::from_rows(
-            rows.into_iter()
-                .map(|r| sotb_bic::bic::Bitmap::from_bools(&r))
-                .collect(),
-        );
-        let n = index.num_objects();
+        let batches: Vec<Vec<Vec<i32>>> =
+            (0..1024).map(|_| gen.batch_at(0.0).records).collect();
+        engine.ingest_batches(&batches)?;
 
-        // Compression across all rows.
-        let (mut raw, mut packed) = (0usize, 0usize);
-        for i in 0..16 {
-            let w = WahBitmap::compress(index.row(i));
-            raw += w.uncompressed_bytes();
-            packed += w.compressed_bytes();
-        }
-
-        // A three-term query, timed.
-        let mut rng = Xoshiro256::seeded(5);
-        let q = Query::attr(rng.range(0, 16))
-            .and(Query::attr(rng.range(0, 16)))
-            .and(Query::attr(rng.range(0, 16)).not());
+        // A three-term conjunction: the planner routes it through the
+        // compressed tier (selectivity-ordered, codec-direct kernels).
+        let q = col("byte")
+            .eq(3)
+            .and(col("byte").eq(9))
+            .and(col("byte").eq(12).not());
+        let lowered = q.lower(engine.schema())?;
+        let plan = engine.plan(&lowered);
         let t0 = std::time::Instant::now();
-        let hits = q.eval(&index)?;
+        let hits = engine.query(&lowered)?;
         let dt = t0.elapsed().as_secs_f64();
+        let stats = engine.close()?;
+        let n = stats.objects;
         println!(
-            "  {name:<14} {n} objects | WAH {:>6.2}x | query {} -> {} hits ({} scanned)",
-            raw as f64 / packed as f64,
+            "  {name:<14} {n} objects | {:>10} tier | query {} -> {} hits \
+             ({} scanned)",
+            plan.path.label(),
             format_si(dt, "s"),
             hits.count_ones(),
             format_si((n as f64 / 8.0 * 3.0) / dt, "B/s"),

@@ -1,56 +1,82 @@
-//! Quickstart: load the AOT artifact, index a batch on the PJRT request
-//! path, cross-check against the golden model, and run a Fig. 1-style
-//! query — the 60-second tour of the public API.
+//! Quickstart: the 60-second tour of the public API — build an
+//! [`Engine`] from a schema, ingest a batch, and query it with the
+//! typed predicate builder (paper Fig. 1's use case).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --offline --example quickstart
+//! cargo run --release --offline --example quickstart
 //! ```
+//!
+//! Everything goes through the `EngineBuilder` facade; no artifacts are
+//! needed (the PJRT-verified path is toured in `datacenter_indexing`).
 
-use sotb_bic::bic::{BicConfig, BicCore, Query};
-use sotb_bic::runtime::{BicExecutable, Manifest, Runtime};
+use sotb_bic::bic::Query;
+use sotb_bic::engine::{col, Engine, Result, Schema};
 
-fn main() -> anyhow::Result<()> {
-    // 1. Artifacts: compiled once by `make artifacts`; Python never runs here.
-    let manifest = Manifest::load(&Manifest::default_dir())?;
-    let variant = manifest.find_bic("chip").expect("chip variant");
-    println!(
-        "artifact: {} ({} records x {} words, {} keys)",
-        variant.file.display(),
-        variant.n,
-        variant.w,
-        variant.m
-    );
+fn main() -> Result<()> {
+    // 1. Schema: named columns over the record alphabet. Records are
+    //    *sets* of 8-bit words; each (column, value) pair becomes one
+    //    bitmap row whose bit j says "record j contains this value".
+    let schema = Schema::builder()
+        .column("marker", [7, 13, 20, 33])
+        .column("tag", [91, 140, 200, 255])
+        .build()?;
 
-    // 2. PJRT: compile the HLO text and index a batch of records.
-    let rt = Runtime::cpu()?;
-    println!("PJRT backend: {} ({} devices)", rt.platform_name(), rt.device_count());
-    let exe = BicExecutable::load(&rt, variant)?;
+    // 2. Engine: one handle over ingest, memtable, and query planning.
+    let engine = Engine::builder(schema)
+        .batch_records(16)
+        .record_words(32)
+        .workers(2)
+        .build()?;
 
-    // Records are sets of 8-bit words; keys are the attributes to index.
+    // 3. Ingest one batch of records.
     let records: Vec<Vec<i32>> = (0..16)
         .map(|j| (0..32).map(|w| ((j * 7 + w * 13) % 256) as i32).collect())
         .collect();
-    let keys: Vec<i32> = vec![7, 13, 20, 33, 91, 140, 200, 255];
-    let bi = exe.index(&records, &keys)?;
-    println!("\nbitmap index ({} attrs x {} objects):", bi.num_attrs(), bi.num_objects());
-    for (i, &k) in keys.iter().enumerate() {
-        let row: String = (0..bi.num_objects())
-            .map(|j| if bi.get(i, j) { '1' } else { '.' })
+    let receipt = engine.ingest(&records)?;
+    println!(
+        "ingested batch {} -> {} objects ({} total, durable: {})",
+        receipt.batch, receipt.objects, receipt.total_objects, receipt.durable
+    );
+
+    // 4. Inspect the index through a snapshot.
+    let snap = engine.snapshot();
+    println!(
+        "\nbitmap index ({} attrs x {} objects):",
+        snap.num_attrs(),
+        snap.num_objects()
+    );
+    let index = snap.to_index();
+    for a in 0..snap.num_attrs() {
+        let (name, value) = snap.schema().describe_attr(a).expect("in range");
+        let row: String = (0..index.num_objects())
+            .map(|j| if index.get(a, j) { '1' } else { '.' })
             .collect();
-        println!("  key {k:>3}: {row}");
+        println!("  {name}={value:>3}: {row}");
     }
 
-    // 3. The golden model agrees bit-for-bit.
-    let golden = BicCore::new(BicConfig::CHIP).index(&records, &keys);
-    assert_eq!(bi, golden);
-    println!("\ngolden model agreement: OK");
-
-    // 4. Multi-dimensional query (paper Fig. 1): key0 AND key2 AND NOT key5.
-    let q = Query::attr(0).and(Query::attr(2)).and(Query::attr(5).not());
-    let hits = q.eval(&bi)?;
+    // 5. Query with the typed predicate builder (Fig. 1: "objects
+    //    containing A and B but not C"). The planner picks the execution
+    //    tier; the result is bit-identical on every tier.
+    let pred = col("marker").eq(7).and(col("tag").eq(91)).and(
+        col("marker").eq(20).not(),
+    );
+    let hits = engine.select(&pred)?;
     println!(
-        "query key[0] AND key[2] AND NOT key[5]: objects {:?}",
+        "\nmarker=7 AND tag=91 AND NOT marker=20 -> objects {:?}",
         hits.iter_ones().collect::<Vec<_>>()
+    );
+
+    // The same query as a raw AST, for comparison.
+    let q = Query::attr(0).and(Query::attr(4)).and(Query::attr(2).not());
+    assert_eq!(engine.query(&q)?, hits);
+    println!("raw Query AST agrees: OK (plan: {:?})", engine.plan(&q));
+
+    let stats = engine.close()?;
+    println!(
+        "\nstats: {} batches, {} objects, {} queries",
+        stats.batches_ingested,
+        stats.objects,
+        stats.queries_total()
     );
     Ok(())
 }

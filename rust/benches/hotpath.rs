@@ -165,11 +165,11 @@ fn main() {
     let trace: Vec<_> = (0..256).map(|i| wg.batch_at(i as f64)).collect();
     let trace_bytes: u64 =
         trace.iter().map(|b| b.input_bytes() as u64).sum();
-    let serial = ShardedIndexer::new(BicConfig::CHIP, 1);
+    let serial = ShardedIndexer::new(BicConfig::CHIP, 1).expect("one shard");
     results.push(
         bench("index/sharded-1core-256batches")
             .bytes(trace_bytes)
-            .run(|| serial.index_batches(&trace)),
+            .run(|| serial.index_batches(&trace).expect("valid trace")),
     );
     let parallel = ShardedIndexer::with_host_parallelism(BicConfig::CHIP);
     if parallel.shards() > 1 {
@@ -179,7 +179,7 @@ fn main() {
                 parallel.shards()
             ))
             .bytes(trace_bytes)
-            .run(|| parallel.index_batches(&trace)),
+            .run(|| parallel.index_batches(&trace).expect("valid trace")),
         );
     } else {
         println!("(single-core host: parallel shard case skipped)");
@@ -246,73 +246,96 @@ fn main() {
         );
     }
 
-    // Durable segment store: full ingest pipeline (WAL append + fsync,
-    // memtable flush into a segment file) and the reader's cross-segment
-    // query path. Fresh tmpdir per ingest iteration so every run pays
-    // the real create/append/flush cost.
-    group("durable store (16 attrs x 64 batches of 256 objects)");
+    // Engine facade end to end: the session-API ack path (index + codec
+    // encode + WAL fsync), the planned query path over a store spanning
+    // segments + a memtable tail, and the full
+    // ingest->flush->query lifecycle. Everything constructs through
+    // `EngineBuilder`; fresh tmpdir per ingest/e2e iteration so every
+    // run pays the real create/append/flush cost.
+    group("engine facade (16 attrs x 64 batches of 256 objects, durable)");
     {
-        use sotb_bic::store::{Store, StoreConfig};
-        let scfg = BicConfig { n_records: 256, w_words: 8, m_keys: 16 };
+        use sotb_bic::engine::{Engine, EngineBuilder, ExecPath, Schema};
+        let ecfg = BicConfig { n_records: 256, w_words: 8, m_keys: 16 };
         let nbatches = if smoke_mode() { 16 } else { 64 };
-        let mut sg = WorkloadGen::new(scfg, ContentDist::Clustered { spread: 16 }, 0x57);
-        let mut score = BicCore::new(scfg);
-        let encoded: Vec<CompressedIndex> = (0..nbatches)
-            .map(|i| {
-                let b = sg.batch_at(i as f64);
-                CompressedIndex::from_index(&score.index(&b.records, &b.keys))
-            })
-            .collect();
-        let raw_bytes: u64 =
-            (nbatches * scfg.n_records / 8 * scfg.m_keys) as u64;
+        let mut sg =
+            WorkloadGen::new(ecfg, ContentDist::Clustered { spread: 16 }, 0x57);
+        let batch_records: Vec<Vec<Vec<i32>>> =
+            (0..nbatches).map(|i| sg.batch_at(i as f64).records).collect();
+        let input_bytes: u64 =
+            (nbatches * ecfg.n_records * ecfg.w_words) as u64;
+        let index_bytes: u64 =
+            (nbatches * ecfg.n_records / 8 * ecfg.m_keys) as u64;
         let bench_root = std::env::temp_dir()
-            .join(format!("bic-store-bench-{}", std::process::id()));
+            .join(format!("bic-engine-bench-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&bench_root);
         std::fs::create_dir_all(&bench_root).expect("bench tmpdir");
-        let mut iter = 0u64;
-        // 12 divides neither batch count, so the query store always has
+        // 12 divides neither batch count, so the query engine always has
         // both segments and a memtable tail to span.
-        let store_cfg =
-            StoreConfig { flush_batches: 12, ..StoreConfig::default() };
-        results.push(bench("store/ingest").bytes(raw_bytes).run(|| {
+        let build = |dir: &std::path::Path| -> Engine {
+            EngineBuilder::new(
+                Schema::single("byte", 0..ecfg.m_keys as i32)
+                    .expect("schema"),
+            )
+            .batch_records(ecfg.n_records)
+            .record_words(ecfg.w_words)
+            .durable(dir)
+            .flush_batches(12)
+            .build()
+            .expect("engine")
+        };
+        let mut iter = 0u64;
+        results.push(bench("engine/ingest").bytes(input_bytes).run(|| {
             iter += 1;
             let dir = bench_root.join(format!("ingest-{iter}"));
-            let mut store =
-                Store::create(&dir, scfg.m_keys, store_cfg).expect("create");
-            for ci in &encoded {
-                store.append_batch(ci).expect("append");
+            let engine = build(&dir);
+            for records in &batch_records {
+                engine.ingest(records).expect("ingest");
             }
-            let bytes = store.segment_bytes_written();
-            drop(store);
+            let bytes = engine.stats().segment_bytes_written;
+            drop(engine);
             let _ = std::fs::remove_dir_all(&dir);
             bytes
         }));
-        // Query path: a persisted store spanning several segments + a
-        // memtable tail, queried through the assembling reader.
+        // Query path: segments + memtable tail, through the planner.
         let qdir = bench_root.join("query");
-        let mut qstore =
-            Store::create(&qdir, scfg.m_keys, store_cfg).expect("create");
-        for ci in &encoded {
-            qstore.append_batch(ci).expect("append");
+        let qengine = build(&qdir);
+        for records in &batch_records {
+            qengine.ingest(records).expect("ingest");
         }
         let sq = Query::attr(1)
             .and(Query::attr(3))
             .and(Query::attr(7))
             .and(Query::attr(5).not());
-        let reader = qstore.reader();
-        // Differential pin before timing.
-        assert_eq!(
-            reader.eval(&sq).unwrap(),
-            sq.eval(&reader.to_index()).unwrap(),
-            "store eval diverged"
-        );
+        // Differential pin before timing: all four tiers bit-identical.
+        let pin = qengine.query_via(&sq, ExecPath::Raw).expect("raw");
+        for path in ExecPath::ALL {
+            assert_eq!(
+                qengine.query_via(&sq, path).expect("query"),
+                pin,
+                "{path:?} diverged"
+            );
+        }
         results.push(
-            bench("store/query")
-                .bytes(raw_bytes)
-                .run(|| reader.eval(&sq).unwrap()),
+            bench("engine/query")
+                .bytes(index_bytes)
+                .run(|| qengine.query(&sq).unwrap()),
         );
-        drop(reader);
-        drop(qstore);
+        // Full lifecycle: build -> ingest -> flush -> query -> close.
+        let mut e2e_iter = 0u64;
+        results.push(bench("engine/e2e").bytes(input_bytes).run(|| {
+            e2e_iter += 1;
+            let dir = bench_root.join(format!("e2e-{e2e_iter}"));
+            let engine = build(&dir);
+            for records in &batch_records {
+                engine.ingest(records).expect("ingest");
+            }
+            engine.flush().expect("flush");
+            let hits = engine.query(&sq).expect("query").count_ones();
+            engine.close().expect("close");
+            let _ = std::fs::remove_dir_all(&dir);
+            hits
+        }));
+        drop(qengine);
         let _ = std::fs::remove_dir_all(&bench_root);
     }
 

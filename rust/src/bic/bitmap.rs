@@ -378,6 +378,109 @@ impl Bitmap {
             }
         }
     }
+
+    /// AND `other` into the window `[base, base + other.len())` of
+    /// `self`; bits outside the window are untouched. The conjunction
+    /// analogue of [`Bitmap::or_at`]: with chunks that tile the
+    /// accumulator contiguously (segments + memtable batches), folding
+    /// every chunk ANDs the whole row exactly once — the store reader's
+    /// segment-by-segment AND fold (ROADMAP follow-up).
+    pub fn and_at(&mut self, other: &Bitmap, base: usize) {
+        assert!(
+            base + other.nbits <= self.nbits,
+            "and_at: {} bits at offset {base} exceed {}",
+            other.nbits,
+            self.nbits
+        );
+        and_words_at(&mut self.words, &other.words, base, other.nbits);
+    }
+
+    /// `self[window] &= !other` over the window
+    /// `[base, base + other.len())`; bits outside are untouched.
+    pub fn and_not_at(&mut self, other: &Bitmap, base: usize) {
+        assert!(
+            base + other.nbits <= self.nbits,
+            "and_not_at: {} bits at offset {base} exceed {}",
+            other.nbits,
+            self.nbits
+        );
+        and_not_words_at(&mut self.words, &other.words, base, other.nbits);
+    }
+}
+
+/// Mask of bits `[lo, hi)` within one word (`lo < hi <= 64`).
+#[inline]
+fn word_mask(lo: usize, hi: usize) -> u64 {
+    let high = if hi == WORD_BITS { u64::MAX } else { (1u64 << hi) - 1 };
+    high & !((1u64 << lo) - 1)
+}
+
+/// `src`'s word contributing to destination word `j` of a window whose
+/// first destination word receives source bit 0 at bit offset `off`.
+#[inline]
+fn aligned_src(src: &[u64], j: usize, off: usize) -> u64 {
+    let get = |i: usize| src.get(i).copied().unwrap_or(0);
+    if off == 0 {
+        get(j)
+    } else if j == 0 {
+        get(0) << off
+    } else {
+        (get(j) << off) | (get(j - 1) >> (WORD_BITS - off))
+    }
+}
+
+/// `dst[start..start+len] &= src[0..len]` at the bit level (source bit 0
+/// lands at bit `start`); destination bits outside the window keep their
+/// value. Shared by [`Bitmap::and_at`] and the roaring chunk AND fold.
+pub(crate) fn and_words_at(dst: &mut [u64], src: &[u64], start: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    let end = start + len;
+    let (first, last) = (start / WORD_BITS, (end - 1) / WORD_BITS);
+    let off = start % WORD_BITS;
+    for (j, wi) in (first..=last).enumerate() {
+        let lo = if wi == first { off } else { 0 };
+        let hi = if wi == last { end - wi * WORD_BITS } else { WORD_BITS };
+        // Window bits take the aligned source; the rest pass through.
+        dst[wi] &= aligned_src(src, j, off) | !word_mask(lo, hi);
+    }
+}
+
+/// `dst[start..start+len] &= !src[0..len]` at the bit level; destination
+/// bits outside the window keep their value.
+pub(crate) fn and_not_words_at(dst: &mut [u64], src: &[u64], start: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    let end = start + len;
+    let (first, last) = (start / WORD_BITS, (end - 1) / WORD_BITS);
+    let off = start % WORD_BITS;
+    for (j, wi) in (first..=last).enumerate() {
+        let lo = if wi == first { off } else { 0 };
+        let hi = if wi == last { end - wi * WORD_BITS } else { WORD_BITS };
+        dst[wi] &= !(aligned_src(src, j, off) & word_mask(lo, hi));
+    }
+}
+
+/// Clear bits `[start, start + len)` of `dst` (whole words in the middle,
+/// masked edges) — the gap filler of the roaring AND fold.
+pub(crate) fn clear_bit_range(dst: &mut [u64], start: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    let end = start + len;
+    let (first, last) = (start / WORD_BITS, (end - 1) / WORD_BITS);
+    let off = start % WORD_BITS;
+    if first == last {
+        dst[first] &= !word_mask(off, end - first * WORD_BITS);
+        return;
+    }
+    dst[first] &= !word_mask(off, WORD_BITS);
+    for w in &mut dst[first + 1..last] {
+        *w = 0;
+    }
+    dst[last] &= !word_mask(0, end - last * WORD_BITS);
 }
 
 struct BitIter {
@@ -669,6 +772,92 @@ mod tests {
     fn or_at_out_of_range_panics() {
         let mut dst = Bitmap::zeros(100);
         dst.or_at(&Bitmap::zeros(64), 40);
+    }
+
+    #[test]
+    fn and_at_matches_per_bit_window_semantics() {
+        // Same offset zoo as or_at: aligned, unaligned, spilling, tail.
+        for (n_dst, n_src, base) in [
+            (200usize, 64usize, 0usize),
+            (200, 64, 64),
+            (200, 64, 1),
+            (200, 64, 63),
+            (200, 64, 136),
+            (130, 130, 0),
+            (300, 71, 97),
+            (64, 0, 64),
+        ] {
+            let src_bits: Vec<bool> =
+                (0..n_src).map(|i| (i * 7) % 3 == 0).collect();
+            let src = Bitmap::from_bools(&src_bits);
+            let dst_bits: Vec<bool> =
+                (0..n_dst).map(|i| (i * 5) % 4 != 0).collect();
+            let dst0 = Bitmap::from_bools(&dst_bits);
+
+            let mut and_expect = dst0.clone();
+            let mut andnot_expect = dst0.clone();
+            for (i, &v) in src_bits.iter().enumerate() {
+                // Window bits AND with the source; outside untouched.
+                and_expect.set(base + i, dst_bits[base + i] && v);
+                andnot_expect.set(base + i, dst_bits[base + i] && !v);
+            }
+
+            let mut dst = dst0.clone();
+            dst.and_at(&src, base);
+            assert_eq!(dst, and_expect, "and_at n_src={n_src} base={base}");
+
+            let mut dst = dst0.clone();
+            dst.and_not_at(&src, base);
+            assert_eq!(
+                dst, andnot_expect,
+                "and_not_at n_src={n_src} base={base}"
+            );
+        }
+    }
+
+    #[test]
+    fn and_at_chunk_fold_equals_whole_row_and() {
+        // Tiling a row with and_at over contiguous chunks must equal one
+        // whole-row AND — the store reader's fold contract.
+        let n = 517;
+        let acc_bits: Vec<bool> = (0..n).map(|i| i % 3 != 1).collect();
+        let row_bits: Vec<bool> = (0..n).map(|i| (i * 11) % 5 < 3).collect();
+        let whole = Bitmap::from_bools(&acc_bits)
+            .and(&Bitmap::from_bools(&row_bits));
+        let mut acc = Bitmap::from_bools(&acc_bits);
+        let mut base = 0usize;
+        for chunk_len in [64usize, 1, 190, 63, 199] {
+            let chunk =
+                Bitmap::from_bools(&row_bits[base..base + chunk_len]);
+            acc.and_at(&chunk, base);
+            base += chunk_len;
+        }
+        assert_eq!(base, n);
+        assert_eq!(acc, whole);
+    }
+
+    #[test]
+    fn clear_bit_range_clears_exactly_the_window() {
+        for (n, start, len) in
+            [(200usize, 3usize, 70usize), (128, 0, 128), (65, 64, 1), (64, 10, 0)]
+        {
+            let mut b = Bitmap::ones(n);
+            clear_bit_range(b.words_mut(), start, len);
+            for i in 0..n {
+                assert_eq!(
+                    b.get(i),
+                    !(start..start + len).contains(&i),
+                    "bit {i} (start={start} len={len})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "and_at")]
+    fn and_at_out_of_range_panics() {
+        let mut dst = Bitmap::zeros(100);
+        dst.and_at(&Bitmap::zeros(64), 40);
     }
 
     #[test]

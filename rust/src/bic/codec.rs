@@ -406,6 +406,45 @@ impl CodecBitmap {
         }
     }
 
+    /// AND this row into the window `[base, base + len())` of `acc` —
+    /// the store reader's conjunction fold. With rows that tile the
+    /// accumulator contiguously (segments, then memtable batches),
+    /// folding every chunk of an attribute ANDs the whole global row
+    /// without assembling it first. Bits outside the window are
+    /// untouched.
+    pub fn and_into_at(&self, acc: &mut Bitmap, base: usize) {
+        assert!(
+            base + self.len() <= acc.len(),
+            "and_into_at: {} bits at offset {base} exceed {}",
+            self.len(),
+            acc.len()
+        );
+        match self {
+            CodecBitmap::Raw(b) => acc.and_at(b, base),
+            CodecBitmap::Wah(w) => w.and_into_at(acc, base),
+            CodecBitmap::Roaring { set, nbits } => {
+                set.and_into_at(acc, base, *nbits)
+            }
+        }
+    }
+
+    /// `acc[window] &= !self` over `[base, base + len())` — the ANDNOT
+    /// side of the conjunction fold. Bits outside the window are
+    /// untouched.
+    pub fn and_not_into_at(&self, acc: &mut Bitmap, base: usize) {
+        assert!(
+            base + self.len() <= acc.len(),
+            "and_not_into_at: {} bits at offset {base} exceed {}",
+            self.len(),
+            acc.len()
+        );
+        match self {
+            CodecBitmap::Raw(b) => acc.and_not_at(b, base),
+            CodecBitmap::Wah(w) => w.and_not_into_at(acc, base),
+            CodecBitmap::Roaring { set, .. } => set.and_not_into_at(acc, base),
+        }
+    }
+
     /// Modeled cycles to encode this row from its raw form (analysis
     /// pass + per-codec encode constant over the uncompressed bytes).
     pub fn encode_cycles(&self) -> u64 {
@@ -597,6 +636,13 @@ impl CompressedIndex {
     #[inline]
     pub fn rows(&self) -> &[CodecBitmap] {
         &self.rows
+    }
+
+    /// Consume the index into its rows (the engine's in-memory memtable
+    /// stores batches this way without re-cloning every row).
+    #[inline]
+    pub fn into_rows(self) -> Vec<CodecBitmap> {
+        self.rows
     }
 
     /// Modeled cycles the on-core encoding of this index cost (analysis
@@ -861,6 +907,41 @@ mod tests {
                 base += seg.len();
             }
             assert_eq!(acc, expect, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn and_fold_at_offsets_matches_assembled_reference_per_codec() {
+        // The store reader's conjunction contract: tiling an accumulator
+        // with per-codec AND (resp. ANDNOT) folds must equal assembling
+        // the concatenated row first and ANDing it whole.
+        let segs =
+            [dense_row(10_007, 70), clustered_row(20_000), scattered_row(8_193, 71)];
+        let total: usize = segs.iter().map(Bitmap::len).sum();
+        let acc0 = dense_row(total, 72);
+        // Assemble-then-AND reference.
+        let mut assembled = Bitmap::zeros(total);
+        let mut base = 0usize;
+        for seg in &segs {
+            assembled.or_at(seg, base);
+            base += seg.len();
+        }
+        for codec in Codec::ALL {
+            let mut and_acc = acc0.clone();
+            let mut andnot_acc = acc0.clone();
+            let mut base = 0usize;
+            for seg in &segs {
+                let cb = CodecBitmap::from_bitmap_as(codec, seg);
+                cb.and_into_at(&mut and_acc, base);
+                cb.and_not_into_at(&mut andnot_acc, base);
+                base += seg.len();
+            }
+            assert_eq!(and_acc, acc0.and(&assembled), "{codec:?} and fold");
+            assert_eq!(
+                andnot_acc,
+                acc0.and_not(&assembled),
+                "{codec:?} and_not fold"
+            );
         }
     }
 

@@ -17,6 +17,18 @@
 //!
 //! The uncompressed [`Query::eval`] path is retained unchanged as the
 //! differential reference for the compressed planner.
+//!
+//! Most callers should not build [`Query`] trees by hand: the
+//! [`engine`](crate::engine) facade's [`Schema`](crate::engine::Schema)
+//! + predicate builder (`col("city").eq(3)`) lower to this AST, and
+//! [`Engine::query`](crate::engine::Engine::query) picks the execution
+//! tier (raw, compressed, sharded, store-backed) per call.
+
+// Public query items are documentation-gated: the facade's query surface
+// must stay fully documented (ci.sh relies on this being a hard error).
+#![deny(missing_docs)]
+
+use std::collections::HashMap;
 
 use super::bitmap::{Bitmap, BitmapIndex};
 use super::codec::CompressedIndex;
@@ -37,16 +49,18 @@ pub enum Query {
 /// Errors from query validation/evaluation.
 #[derive(Debug, thiserror::Error, PartialEq, Eq)]
 pub enum QueryError {
+    /// The query references attribute `.0` but the index has `.1` rows.
     #[error("attribute {0} out of range (index has {1} attributes)")]
     AttrOutOfRange(usize, usize),
 }
 
 impl Query {
-    /// Convenience constructors for fluent query building.
+    /// Leaf constructor: the bitmap row of attribute `i`.
     pub fn attr(i: usize) -> Self {
         Query::Attr(i)
     }
 
+    /// Fluent AND: appends to an existing `And` chain instead of nesting.
     pub fn and(self, other: Query) -> Self {
         match self {
             Query::And(mut xs) => {
@@ -57,6 +71,7 @@ impl Query {
         }
     }
 
+    /// Fluent OR: appends to an existing `Or` chain instead of nesting.
     pub fn or(self, other: Query) -> Self {
         match self {
             Query::Or(mut xs) => {
@@ -67,9 +82,26 @@ impl Query {
         }
     }
 
+    /// Fluent NOT.
     #[allow(clippy::should_implement_trait)]
     pub fn not(self) -> Self {
         Query::Not(Box::new(self))
+    }
+
+    /// Rewrite every attribute leaf through `map` (which must be total
+    /// on the query's attrs) — the dense-row remapping the store reader
+    /// and snapshot evaluators use to avoid assembling unreferenced rows.
+    pub(crate) fn remap(&self, map: &HashMap<usize, usize>) -> Query {
+        match self {
+            Query::Attr(a) => Query::Attr(map[a]),
+            Query::And(xs) => {
+                Query::And(xs.iter().map(|x| x.remap(map)).collect())
+            }
+            Query::Or(xs) => {
+                Query::Or(xs.iter().map(|x| x.remap(map)).collect())
+            }
+            Query::Not(inner) => Query::Not(Box::new(inner.remap(map))),
+        }
     }
 
     /// Every attribute referenced by the expression.

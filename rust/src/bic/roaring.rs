@@ -7,7 +7,7 @@
 //! engine pick per-row — the `compression` ablation bench quantifies the
 //! trade on the three workload content distributions.
 
-use super::bitmap::Bitmap;
+use super::bitmap::{and_words_at, clear_bit_range, Bitmap};
 use super::codec::{read_u16, read_u32, read_u64, read_u8};
 
 const ARRAY_MAX: usize = 4096;
@@ -549,6 +549,79 @@ impl RoaringBitmap {
         }
     }
 
+    /// AND this compressed set into the window `[base, base + nbits)` of
+    /// `acc` — the store reader's conjunction fold for roaring segment
+    /// rows. Window words outside any chunk are zeroed wholesale
+    /// (bit-range clear at the unaligned edges); dense chunks AND
+    /// word-shifted; array chunks AND through a stack-built chunk mask.
+    /// Bits outside the window are untouched.
+    pub(crate) fn and_into_at(&self, acc: &mut Bitmap, base: usize, nbits: usize) {
+        let end = base + nbits;
+        debug_assert!(end <= acc.len(), "window exceeds accumulator");
+        let words = acc.words_mut();
+        let mut cursor = base;
+        for (key, c) in &self.chunks {
+            let cstart = base + ((*key as usize) << 16);
+            if cstart >= end {
+                break;
+            }
+            let clen = (1usize << 16).min(end - cstart);
+            // The gap since the previous chunk holds no members: clear it.
+            clear_bit_range(words, cursor, cstart - cursor);
+            match c {
+                Container::Dense(d) => and_words_at(words, &d[..], cstart, clen),
+                Container::Array(v) => {
+                    let mut mask = [0u64; Self::CHUNK_WORDS];
+                    for &x in v {
+                        mask[x as usize / 64] |= 1u64 << (x as usize % 64);
+                    }
+                    and_words_at(words, &mask, cstart, clen);
+                }
+            }
+            cursor = cstart + clen;
+        }
+        clear_bit_range(words, cursor, end - cursor);
+    }
+
+    /// `acc[window] &= !self` over `[base, base + row bits)`: members
+    /// clear their (shifted) accumulator bits; everything else — inside
+    /// or outside the window — is untouched, so no row length is needed.
+    pub(crate) fn and_not_into_at(&self, acc: &mut Bitmap, base: usize) {
+        let words = acc.words_mut();
+        for (key, c) in &self.chunks {
+            let cbase = base + ((*key as usize) << 16);
+            match c {
+                Container::Dense(d) => {
+                    let (w0, off) = (cbase / 64, cbase % 64);
+                    if off == 0 {
+                        for (i, &dw) in d.iter().enumerate() {
+                            if dw != 0 {
+                                words[w0 + i] &= !dw;
+                            }
+                        }
+                    } else {
+                        for (i, &dw) in d.iter().enumerate() {
+                            if dw == 0 {
+                                continue;
+                            }
+                            words[w0 + i] &= !(dw << off);
+                            let hi = dw >> (64 - off);
+                            if hi != 0 {
+                                words[w0 + i + 1] &= !hi;
+                            }
+                        }
+                    }
+                }
+                Container::Array(v) => {
+                    for &x in v {
+                        let p = cbase + x as usize;
+                        words[p / 64] &= !(1u64 << (p % 64));
+                    }
+                }
+            }
+        }
+    }
+
     /// Largest member, if any (the codec deserializer's range check).
     pub(crate) fn max(&self) -> Option<u32> {
         let (key, c) = self.chunks.last()?;
@@ -899,6 +972,45 @@ mod tests {
                 expect.set(base + i, true);
             }
             assert_eq!(acc, expect, "base={base}");
+        }
+    }
+
+    #[test]
+    fn and_fold_at_offset_matches_windowed_reference() {
+        // Mixed sparse/dense content, straddling chunk boundaries, at
+        // aligned and unaligned bases — the window must AND (resp.
+        // ANDNOT) with the set and everything outside stay untouched.
+        let n_seg = 100_001;
+        let mut rng = Xoshiro256::seeded(0xA17D);
+        let mut seg = Bitmap::zeros(n_seg);
+        for _ in 0..2_000 {
+            seg.set(rng.next_below(n_seg as u64) as usize, true);
+        }
+        for i in 70_000..75_000 {
+            seg.set(i, true);
+        }
+        let r = RoaringBitmap::from_bitmap(&seg);
+        for base in [0usize, 1, 63, 64, 1000, 4096] {
+            let total = base + n_seg + 17;
+            let acc_bits: Vec<bool> =
+                (0..total).map(|i| (i * 7) % 11 < 6).collect();
+            let acc0 = Bitmap::from_bools(&acc_bits);
+
+            let mut and_acc = acc0.clone();
+            r.and_into_at(&mut and_acc, base, n_seg);
+            let mut expect = acc0.clone();
+            for i in 0..n_seg {
+                expect.set(base + i, acc0.get(base + i) && seg.get(i));
+            }
+            assert_eq!(and_acc, expect, "and base={base}");
+
+            let mut andnot_acc = acc0.clone();
+            r.and_not_into_at(&mut andnot_acc, base);
+            let mut expect = acc0.clone();
+            for i in seg.iter_ones() {
+                expect.set(base + i, false);
+            }
+            assert_eq!(andnot_acc, expect, "and_not base={base}");
         }
     }
 }

@@ -294,42 +294,14 @@ impl WahBitmap {
     /// through decompression.
     pub fn and_into(&self, acc: &mut Bitmap) {
         assert_eq!(self.nbits, acc.len(), "length mismatch");
-        let mut bit_pos = 0usize;
-        for &w in &self.words {
-            if w & FILL_FLAG != 0 {
-                let len = (w & MAX_RUN) as usize * GROUP_BITS;
-                if w & FILL_BIT == 0 {
-                    clear_range(acc.words_mut(), bit_pos, len);
-                }
-                bit_pos += len;
-            } else {
-                let take = GROUP_BITS.min(self.nbits - bit_pos);
-                let tmask = ((1u64 << take) - 1) as u32;
-                clear_group(acc.words_mut(), bit_pos, !w & tmask);
-                bit_pos += take;
-            }
-        }
+        self.and_into_at(acc, 0);
     }
 
     /// `acc &= !self` without decompressing: a one fill clears the span,
     /// a zero fill is a no-op, a literal clears its set bits.
     pub fn and_not_into(&self, acc: &mut Bitmap) {
         assert_eq!(self.nbits, acc.len(), "length mismatch");
-        let mut bit_pos = 0usize;
-        for &w in &self.words {
-            if w & FILL_FLAG != 0 {
-                let len = (w & MAX_RUN) as usize * GROUP_BITS;
-                if w & FILL_BIT != 0 {
-                    clear_range(acc.words_mut(), bit_pos, len);
-                }
-                bit_pos += len;
-            } else {
-                let take = GROUP_BITS.min(self.nbits - bit_pos);
-                let tmask = ((1u64 << take) - 1) as u32;
-                clear_group(acc.words_mut(), bit_pos, w & tmask);
-                bit_pos += take;
-            }
-        }
+        self.and_not_into_at(acc, 0);
     }
 
     /// OR this compressed row into an uncompressed accumulator.
@@ -363,6 +335,64 @@ impl WahBitmap {
                 let take = GROUP_BITS.min(end - bit_pos);
                 let tmask = ((1u64 << take) - 1) as u32;
                 or_group(acc.words_mut(), bit_pos, w & tmask);
+                bit_pos += take;
+            }
+        }
+    }
+
+    /// AND this row into the window `[base, base + len())` of `acc`, run
+    /// by run — [`WahBitmap::and_into`] at a segment offset (the store
+    /// reader's conjunction fold): a zero fill clears its span, a one
+    /// fill is a no-op, a literal clears the bits its group lacks. Bits
+    /// outside the window are untouched.
+    pub fn and_into_at(&self, acc: &mut Bitmap, base: usize) {
+        assert!(
+            base + self.nbits <= acc.len(),
+            "and_into_at: {} bits at offset {base} exceed {}",
+            self.nbits,
+            acc.len()
+        );
+        let end = base + self.nbits;
+        let mut bit_pos = base;
+        for &w in &self.words {
+            if w & FILL_FLAG != 0 {
+                let len = (w & MAX_RUN) as usize * GROUP_BITS;
+                if w & FILL_BIT == 0 {
+                    clear_range(acc.words_mut(), bit_pos, len);
+                }
+                bit_pos += len;
+            } else {
+                let take = GROUP_BITS.min(end - bit_pos);
+                let tmask = ((1u64 << take) - 1) as u32;
+                clear_group(acc.words_mut(), bit_pos, !w & tmask);
+                bit_pos += take;
+            }
+        }
+    }
+
+    /// `acc[window] &= !self` over `[base, base + len())`, run by run: a
+    /// one fill clears its span, a zero fill is a no-op, a literal clears
+    /// its set bits. Bits outside the window are untouched.
+    pub fn and_not_into_at(&self, acc: &mut Bitmap, base: usize) {
+        assert!(
+            base + self.nbits <= acc.len(),
+            "and_not_into_at: {} bits at offset {base} exceed {}",
+            self.nbits,
+            acc.len()
+        );
+        let end = base + self.nbits;
+        let mut bit_pos = base;
+        for &w in &self.words {
+            if w & FILL_FLAG != 0 {
+                let len = (w & MAX_RUN) as usize * GROUP_BITS;
+                if w & FILL_BIT != 0 {
+                    clear_range(acc.words_mut(), bit_pos, len);
+                }
+                bit_pos += len;
+            } else {
+                let take = GROUP_BITS.min(end - bit_pos);
+                let tmask = ((1u64 << take) - 1) as u32;
+                clear_group(acc.words_mut(), bit_pos, w & tmask);
                 bit_pos += take;
             }
         }
@@ -826,5 +856,44 @@ mod tests {
         let wah = WahBitmap::compress(&bm);
         assert_eq!(wah.decompress(), bm);
         assert_eq!(wah.count_ones(), 0);
+    }
+
+    #[test]
+    fn and_fold_at_offsets_matches_windowed_reference() {
+        // Tile an accumulator with 3 segments (runny, blocky, dense) and
+        // fold them with the offset AND/ANDNOT kernels; the result must
+        // equal the window-by-window uncompressed reference.
+        let segs: Vec<Bitmap> = vec![
+            bm_from((0..100).map(|i| i % 3 == 0)),
+            bm_from((0..67).map(|i| (10..40).contains(&i))),
+            bm_from((0..250).map(|i| i % 2 == 1)),
+        ];
+        let total: usize = segs.iter().map(Bitmap::len).sum();
+        let acc0 = bm_from((0..total).map(|i| (i * 13) % 7 < 5));
+
+        let mut and_acc = acc0.clone();
+        let mut andnot_acc = acc0.clone();
+        let mut and_expect = acc0.clone();
+        let mut andnot_expect = acc0.clone();
+        let mut base = 0usize;
+        for seg in &segs {
+            let wah = WahBitmap::compress(seg);
+            wah.and_into_at(&mut and_acc, base);
+            wah.and_not_into_at(&mut andnot_acc, base);
+            for i in 0..seg.len() {
+                and_expect.set(base + i, and_expect.get(base + i) && seg.get(i));
+                andnot_expect
+                    .set(base + i, andnot_expect.get(base + i) && !seg.get(i));
+            }
+            base += seg.len();
+        }
+        assert_eq!(and_acc, and_expect, "and fold");
+        assert_eq!(andnot_acc, andnot_expect, "and_not fold");
+        // A partial fold (only the middle segment) leaves the rest alone.
+        let mut partial = acc0.clone();
+        WahBitmap::compress(&segs[1]).and_into_at(&mut partial, segs[0].len());
+        for i in 0..segs[0].len() {
+            assert_eq!(partial.get(i), acc0.get(i), "prefix untouched at {i}");
+        }
     }
 }

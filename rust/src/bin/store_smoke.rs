@@ -1,17 +1,20 @@
-//! CI smoke for the durable store: ingest into a tmpdir, "kill" the
-//! store mid-write (simulated torn WAL tail), recover, query, and
-//! verify bit-identity against the in-memory reference. Exits nonzero
-//! on any divergence — wired into `ci.sh` as the store gate.
+//! CI smoke for the durable path of the engine facade: ingest through
+//! `EngineBuilder` into a tmpdir store, "kill" the session mid-write
+//! (simulated torn WAL tail), reopen through the builder (recovery),
+//! query, and verify bit-identity against the in-memory reference.
+//! Exits nonzero on any divergence — wired into `ci.sh` as the store
+//! gate.
 
 use std::fs;
 use std::process::ExitCode;
 
-use sotb_bic::bic::{BicConfig, BicCore, CompressedIndex, Query};
+use sotb_bic::bic::{BicConfig, BicCore, Bitmap, BitmapIndex, Query};
 use sotb_bic::coordinator::{ContentDist, WorkloadGen};
-use sotb_bic::store::{Store, StoreConfig};
+use sotb_bic::engine::{Engine, Schema};
 
 fn main() -> ExitCode {
     let cfg = BicConfig { n_records: 48, w_words: 8, m_keys: 8 };
+    let keys: Vec<i32> = vec![3, 7, 19, 42, 101, 160, 201, 250];
     let dist = ContentDist::Clustered { spread: 12 };
     let seed = 0x5770_4E5D;
     let total_batches = 11usize;
@@ -19,57 +22,75 @@ fn main() -> ExitCode {
         .join(format!("bic-store-smoke-{}", std::process::id()));
     let _ = fs::remove_dir_all(&dir);
 
-    // Ingest: flush every 4 batches -> 2 segments + 3 batches in the WAL.
-    let store_cfg = StoreConfig { flush_batches: 4, ..StoreConfig::default() };
-    let mut store =
-        Store::create(&dir, cfg.m_keys, store_cfg).expect("create store");
+    let build_engine = || {
+        Engine::builder(
+            Schema::single("byte", keys.clone()).expect("valid schema"),
+        )
+        .batch_records(cfg.n_records)
+        .record_words(cfg.w_words)
+        .durable(&dir)
+        .flush_batches(4) // 11 batches -> 2 segments + 3 in the WAL
+        .build()
+    };
+
+    // Ingest through the facade; every receipt must be WAL-durable.
+    let engine = build_engine().expect("create engine");
     let mut wg = WorkloadGen::new(cfg, dist, seed);
-    let mut core = BicCore::new(cfg);
-    for i in 0..total_batches {
-        let b = wg.batch_at(i as f64);
-        let ci = CompressedIndex::from_index(&core.index(&b.records, &b.keys));
-        store.append_batch(&ci).expect("append");
+    let batch_records: Vec<Vec<Vec<i32>>> =
+        (0..total_batches).map(|i| wg.batch_at(i as f64).records).collect();
+    for records in &batch_records {
+        let receipt = engine.ingest(records).expect("ingest");
+        assert!(receipt.durable, "durable engine must ack through the WAL");
     }
+    let stats = engine.stats();
     println!(
         "store-smoke: ingested {total_batches} batches -> {} segments + {} \
          memtable batches, {} segment bytes",
-        store.num_segments(),
-        store.memtable_batches(),
-        store.segment_bytes_written()
+        stats.segments, stats.memtable_batches, stats.segment_bytes_written
     );
 
-    // Kill: drop the handle without flushing, then tear the WAL tail so
+    // Kill: drop the handle without close(), then tear the WAL tail so
     // the last acknowledged batch's record is cut mid-payload.
-    drop(store);
+    drop(engine);
     let wal_path = dir.join("wal-00000002.log");
     let wal = fs::read(&wal_path).expect("wal exists");
     let torn = wal.len() - 5;
     fs::write(&wal_path, &wal[..torn]).expect("tear wal");
     println!("store-smoke: tore the WAL at byte {torn} of {}", wal.len());
 
-    // Recover: the torn record's batch (the last one) is gone; every
-    // durably-complete record survives.
-    let store = Store::recover(&dir, store_cfg).expect("recover");
-    let survived = 8 + store.memtable_batches();
+    // Reopen through the builder: always the recovery path. The torn
+    // record's batch (the last one) is gone; every durably-complete
+    // record survives.
+    let engine = build_engine().expect("recover engine");
+    let stats = engine.stats();
     println!(
         "store-smoke: recovered {} segments + {} memtable batches",
-        store.num_segments(),
-        store.memtable_batches()
+        stats.segments, stats.memtable_batches
     );
-    if store.memtable_batches() != 2 {
+    if stats.memtable_batches != 2 {
         eprintln!(
             "store-smoke: FAIL expected 2 surviving memtable batches, got {}",
-            store.memtable_batches()
+            stats.memtable_batches
         );
         return ExitCode::FAILURE;
     }
+    let survived = 4 * 2 + stats.memtable_batches;
 
-    // Verify: bit-identical to the in-memory reference over the
-    // surviving prefix, and queries agree with the uncompressed path.
-    let reference =
-        WorkloadGen::new(cfg, dist, seed).attribute_rows(survived);
-    let reader = store.reader();
-    if reader.to_index() != reference {
+    // Rebuild the in-memory reference over the surviving prefix.
+    let mut core = BicCore::new(cfg);
+    let n = survived * cfg.n_records;
+    let mut rows = vec![Bitmap::zeros(n); cfg.m_keys];
+    for (b, records) in batch_records[..survived].iter().enumerate() {
+        let bi = core.index(records, &keys);
+        for (a, row) in rows.iter_mut().enumerate() {
+            row.or_at(bi.row(a), b * cfg.n_records);
+        }
+    }
+    let reference = BitmapIndex::from_rows(rows);
+
+    // Verify: bit-identical to the reference, and planned queries agree
+    // with the uncompressed eval.
+    if engine.snapshot().to_index() != reference {
         eprintln!("store-smoke: FAIL recovered index diverges from reference");
         return ExitCode::FAILURE;
     }
@@ -79,7 +100,7 @@ fn main() -> ExitCode {
         Query::attr(2).not(),
     ];
     for (i, q) in queries.iter().enumerate() {
-        let got = reader.eval(q).expect("store eval");
+        let got = engine.query(q).expect("engine query");
         let want = q.eval(&reference).expect("reference eval");
         if got != want {
             eprintln!("store-smoke: FAIL query {i} diverges");
@@ -91,6 +112,7 @@ fn main() -> ExitCode {
             reference.num_objects()
         );
     }
+    engine.close().expect("close");
     let _ = fs::remove_dir_all(&dir);
     println!("store-smoke: OK (ingest -> kill -> recover -> query)");
     ExitCode::SUCCESS

@@ -14,10 +14,9 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
-
 use crate::bic::bitmap::BitmapIndex;
 use crate::bic::codec::CompressedIndex;
+use crate::engine::error::{PallasError, Result};
 use crate::runtime::{BicExecutable, BicVariant, Runtime};
 use crate::store::{manifest, Store, StoreConfig};
 
@@ -50,9 +49,12 @@ pub struct IndexService {
 impl IndexService {
     /// Spawn `workers` threads, each compiling `variant` on its own PJRT
     /// client. Returns once every worker is ready (or the first
-    /// compilation error).
+    /// compilation error). [`PallasError::Config`] when `workers` is
+    /// zero — no panics reachable from the public API.
     pub fn start(workers: usize, variant: &BicVariant) -> Result<Self> {
-        assert!(workers >= 1, "need at least one worker");
+        if workers == 0 {
+            return Err(PallasError::Config("need at least one worker".into()));
+        }
         let (tx, rx) = channel::<Job>();
         // A single shared pull queue is the router: idle workers steal
         // the next batch, which is exactly the paper's "batch i is sent
@@ -142,9 +144,9 @@ impl IndexService {
     ) -> Result<CompressedIndex> {
         let ci = self.index_compressed(records, keys)?;
         let mut guard = self.store.lock().unwrap();
-        let store = guard
-            .as_mut()
-            .ok_or_else(|| anyhow!("no store attached (call open_store)"))?;
+        let store = guard.as_mut().ok_or_else(|| {
+            PallasError::Config("no store attached (call open_store)".into())
+        })?;
         store.append_batch(&ci)?;
         Ok(ci)
     }
@@ -234,6 +236,26 @@ mod tests {
             .collect();
         let keys = (0..8).map(|_| rng.next_below(256) as i32).collect();
         (recs, keys)
+    }
+
+    #[test]
+    fn zero_workers_is_a_typed_config_error() {
+        // Validation fires before any PJRT work, so this needs no
+        // artifacts — the typed error is part of the public contract.
+        let variant = BicVariant {
+            name: "chip".into(),
+            file: std::path::PathBuf::from("unused.hlo.txt"),
+            n: 16,
+            w: 32,
+            m: 8,
+            nw: 1,
+            b: 1,
+        };
+        let err = match IndexService::start(0, &variant) {
+            Err(e) => e,
+            Ok(_) => panic!("zero workers must be rejected"),
+        };
+        assert!(matches!(err, PallasError::Config(_)), "{err}");
     }
 
     #[test]

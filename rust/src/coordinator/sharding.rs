@@ -8,13 +8,21 @@
 //! the hot path). The merge is deterministic: results are concatenated in
 //! shard order, so the output is byte-identical to a sequential run
 //! regardless of the shard count or thread interleaving.
+//!
+//! This is internal plumbing of the [`Engine`](crate::engine::Engine)
+//! facade (its ingest fan-out and worker pool); construct the system
+//! through [`EngineBuilder`](crate::engine::EngineBuilder) unless you
+//! are testing this layer itself. All entry points return the typed
+//! [`PallasError`] — invalid shard counts are [`PallasError::Config`],
+//! misshapen batches [`PallasError::Ingest`]; no panics on caller input.
 
 use std::thread;
 
 use super::batch::Batch;
 use crate::bic::bitmap::BitmapIndex;
 use crate::bic::codec::CompressedIndex;
-use crate::bic::{BicConfig, BicCore};
+use crate::bic::{BicConfig, BicCore, Codec};
+use crate::engine::error::{PallasError, Result};
 use crate::store::Store;
 
 /// A fixed-geometry indexer that fans batches out over host cores.
@@ -26,15 +34,18 @@ pub struct ShardedIndexer {
 
 impl ShardedIndexer {
     /// `shards` worker threads (>= 1), each with its own [`BicCore`].
-    pub fn new(cfg: BicConfig, shards: usize) -> Self {
-        assert!(shards >= 1, "need at least one shard");
-        Self { cfg, shards }
+    /// [`PallasError::Config`] when `shards` is zero.
+    pub fn new(cfg: BicConfig, shards: usize) -> Result<Self> {
+        if shards == 0 {
+            return Err(PallasError::Config("need at least one shard".into()));
+        }
+        Ok(Self { cfg, shards })
     }
 
     /// One shard per available host core.
     pub fn with_host_parallelism(cfg: BicConfig) -> Self {
         let shards = thread::available_parallelism().map_or(1, |n| n.get());
-        Self::new(cfg, shards)
+        Self { cfg, shards }
     }
 
     #[inline]
@@ -47,32 +58,37 @@ impl ShardedIndexer {
         &self.cfg
     }
 
-    /// Index a whole batch trace across the shard workers. Returns one
-    /// [`BitmapIndex`] per input batch, in input order (deterministic
-    /// merge). Panics on a batch that does not fit the core geometry,
-    /// exactly like [`super::Scheduler`].
-    pub fn index_batches(&self, batches: &[Batch]) -> Vec<BitmapIndex> {
+    fn check_batches(&self, batches: &[Batch]) -> Result<()> {
         for b in batches {
             b.check(&self.cfg)
-                .unwrap_or_else(|e| panic!("invalid batch: {e}"));
+                .map_err(|e| PallasError::Ingest(format!("invalid batch: {e}")))?;
         }
-        if batches.is_empty() {
+        Ok(())
+    }
+
+    /// The one fan-out body every entry point shares: contiguous
+    /// near-equal item slices (never more shards than items), one scoped
+    /// worker per slice with a private [`BicCore`], deterministic
+    /// in-order merge of the per-slice results.
+    fn fan_out<I: Sync, T: Send>(
+        &self,
+        items: &[I],
+        work: impl Fn(&mut BicCore, &I) -> T + Sync,
+    ) -> Vec<T> {
+        if items.is_empty() {
             return Vec::new();
         }
         let cfg = self.cfg;
-        // Contiguous near-equal slices; never more shards than batches.
-        let shards = self.shards.min(batches.len());
-        let chunk = batches.len().div_ceil(shards);
-        let shard_results: Vec<Vec<BitmapIndex>> = thread::scope(|s| {
-            let handles: Vec<_> = batches
+        let work = &work;
+        let shards = self.shards.min(items.len());
+        let chunk = items.len().div_ceil(shards);
+        let shard_results: Vec<Vec<T>> = thread::scope(|s| {
+            let handles: Vec<_> = items
                 .chunks(chunk)
                 .map(|slice| {
                     s.spawn(move || {
                         let mut core = BicCore::new(cfg);
-                        slice
-                            .iter()
-                            .map(|b| core.index(&b.records, &b.keys))
-                            .collect::<Vec<_>>()
+                        slice.iter().map(|it| work(&mut core, it)).collect::<Vec<_>>()
                     })
                 })
                 .collect();
@@ -84,46 +100,50 @@ impl ShardedIndexer {
         shard_results.into_iter().flatten().collect()
     }
 
+    /// Index a whole batch trace across the shard workers. Returns one
+    /// [`BitmapIndex`] per input batch, in input order (deterministic
+    /// merge). [`PallasError::Ingest`] on a batch that does not fit the
+    /// core geometry, exactly like [`super::Scheduler`]'s validation.
+    pub fn index_batches(&self, batches: &[Batch]) -> Result<Vec<BitmapIndex>> {
+        self.check_batches(batches)?;
+        Ok(self.fan_out(batches, |core, b| core.index(&b.records, &b.keys)))
+    }
+
     /// Like [`ShardedIndexer::index_batches`], but every shard worker
     /// also adaptively compresses its results, so row analysis and codec
     /// encoding parallelize with the indexing itself. The merge stays
     /// deterministic (shard order), and the adaptive choice is a pure
     /// function of each row, so the output is identical to compressing a
     /// sequential run.
-    pub fn index_batches_compressed(&self, batches: &[Batch]) -> Vec<CompressedIndex> {
-        for b in batches {
-            b.check(&self.cfg)
-                .unwrap_or_else(|e| panic!("invalid batch: {e}"));
-        }
-        if batches.is_empty() {
-            return Vec::new();
-        }
-        let cfg = self.cfg;
-        let shards = self.shards.min(batches.len());
-        let chunk = batches.len().div_ceil(shards);
-        let shard_results: Vec<Vec<CompressedIndex>> = thread::scope(|s| {
-            let handles: Vec<_> = batches
-                .chunks(chunk)
-                .map(|slice| {
-                    s.spawn(move || {
-                        let mut core = BicCore::new(cfg);
-                        slice
-                            .iter()
-                            .map(|b| {
-                                CompressedIndex::from_index(
-                                    &core.index(&b.records, &b.keys),
-                                )
-                            })
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard worker panicked"))
-                .collect()
-        });
-        shard_results.into_iter().flatten().collect()
+    pub fn index_batches_compressed(
+        &self,
+        batches: &[Batch],
+    ) -> Result<Vec<CompressedIndex>> {
+        self.check_batches(batches)?;
+        Ok(self.fan_out(batches, |core, b| {
+            CompressedIndex::from_index(&core.index(&b.records, &b.keys))
+        }))
+    }
+
+    /// Internal facade entry: index + encode borrowed record batches
+    /// under one shared key vector, without wrapping them in owned
+    /// [`Batch`]es — the engine's zero-copy ingest fan-out. Encoding
+    /// (adaptive, or forced when `forced` is `Some`) runs on the worker
+    /// threads alongside the indexing. Record shapes must have been
+    /// validated by the caller (the engine's `check_records`).
+    pub(crate) fn index_record_batches_compressed(
+        &self,
+        batches: &[Vec<Vec<i32>>],
+        keys: &[i32],
+        forced: Option<Codec>,
+    ) -> Vec<CompressedIndex> {
+        self.fan_out(batches, move |core, records| {
+            let bi = core.index(records, keys);
+            match forced {
+                None => CompressedIndex::from_index(&bi),
+                Some(c) => CompressedIndex::from_index_forced(&bi, c),
+            }
+        })
     }
 
     /// Index + encode a batch trace on the shard workers, then append
@@ -135,8 +155,8 @@ impl ShardedIndexer {
         &self,
         batches: &[Batch],
         store: &mut Store,
-    ) -> crate::store::Result<usize> {
-        let encoded = self.index_batches_compressed(batches);
+    ) -> Result<usize> {
+        let encoded = self.index_batches_compressed(batches)?;
         let n = encoded.len();
         for ci in &encoded {
             store.append_batch(ci)?;
@@ -150,8 +170,8 @@ pub fn index_batches_sharded(
     cfg: BicConfig,
     batches: &[Batch],
     shards: usize,
-) -> Vec<BitmapIndex> {
-    ShardedIndexer::new(cfg, shards).index_batches(batches)
+) -> Result<Vec<BitmapIndex>> {
+    ShardedIndexer::new(cfg, shards)?.index_batches(batches)
 }
 
 #[cfg(test)]
@@ -171,7 +191,8 @@ mod tests {
         let expect: Vec<BitmapIndex> =
             batches.iter().map(|b| core.index(&b.records, &b.keys)).collect();
         for shards in [1, 2, 3, 8] {
-            let got = index_batches_sharded(BicConfig::CHIP, &batches, shards);
+            let got = index_batches_sharded(BicConfig::CHIP, &batches, shards)
+                .expect("valid trace");
             assert_eq!(got, expect, "shards={shards}");
         }
     }
@@ -179,9 +200,12 @@ mod tests {
     #[test]
     fn merge_is_deterministic_across_shard_counts() {
         let batches = trace(17, 42);
-        let one = index_batches_sharded(BicConfig::CHIP, &batches, 1);
-        let four = index_batches_sharded(BicConfig::CHIP, &batches, 4);
-        let many = index_batches_sharded(BicConfig::CHIP, &batches, 64);
+        let one =
+            index_batches_sharded(BicConfig::CHIP, &batches, 1).unwrap();
+        let four =
+            index_batches_sharded(BicConfig::CHIP, &batches, 4).unwrap();
+        let many =
+            index_batches_sharded(BicConfig::CHIP, &batches, 64).unwrap();
         assert_eq!(one, four);
         assert_eq!(one, many, "more shards than batches must still merge");
     }
@@ -196,7 +220,9 @@ mod tests {
             .collect();
         for shards in [1, 3, 8] {
             let got = ShardedIndexer::new(BicConfig::CHIP, shards)
-                .index_batches_compressed(&batches);
+                .unwrap()
+                .index_batches_compressed(&batches)
+                .unwrap();
             assert_eq!(got.len(), expect.len(), "shards={shards}");
             for (g, e) in got.iter().zip(&expect) {
                 assert_eq!(g, e, "shards={shards}");
@@ -206,9 +232,13 @@ mod tests {
 
     #[test]
     fn empty_trace_is_empty() {
-        assert!(index_batches_sharded(BicConfig::CHIP, &[], 4).is_empty());
+        assert!(index_batches_sharded(BicConfig::CHIP, &[], 4)
+            .unwrap()
+            .is_empty());
         assert!(ShardedIndexer::new(BicConfig::CHIP, 4)
+            .unwrap()
             .index_batches_compressed(&[])
+            .unwrap()
             .is_empty());
     }
 
@@ -217,24 +247,62 @@ mod tests {
         let idx = ShardedIndexer::with_host_parallelism(BicConfig::CHIP);
         assert!(idx.shards() >= 1);
         let batches = trace(3, 7);
-        assert_eq!(idx.index_batches(&batches).len(), 3);
+        assert_eq!(idx.index_batches(&batches).unwrap().len(), 3);
     }
 
     #[test]
-    #[should_panic(expected = "invalid batch")]
-    fn rejects_misshapen_batches() {
+    fn record_batch_entry_matches_sequential_golden_model() {
+        // The engine's zero-copy entry (shared key vector, borrowed
+        // records) must merge deterministically and match a sequential
+        // run — adaptively encoded and under every forced codec.
+        let records: Vec<Vec<Vec<i32>>> =
+            trace(11, 99).into_iter().map(|b| b.records).collect();
+        let keys: Vec<i32> = (1..=8).collect();
+        let mut core = BicCore::new(BicConfig::CHIP);
+        let expect: Vec<BitmapIndex> =
+            records.iter().map(|r| core.index(r, &keys)).collect();
+        for shards in [1, 3, 16] {
+            let idx = ShardedIndexer::new(BicConfig::CHIP, shards).unwrap();
+            for forced in
+                [None, Some(Codec::Raw), Some(Codec::Wah), Some(Codec::Roaring)]
+            {
+                let got = idx
+                    .index_record_batches_compressed(&records, &keys, forced);
+                assert_eq!(got.len(), expect.len());
+                for (c, e) in got.iter().zip(&expect) {
+                    assert_eq!(
+                        &c.to_index(),
+                        e,
+                        "shards={shards} forced={forced:?}"
+                    );
+                    if let Some(codec) = forced {
+                        assert!(c
+                            .rows()
+                            .iter()
+                            .all(|r| r.codec() == codec));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn misshapen_batches_are_typed_ingest_errors() {
         let bad = Batch {
             id: 0,
             arrival: 0.0,
             records: vec![vec![1; 99]],
             keys: vec![1; 8],
         };
-        index_batches_sharded(BicConfig::CHIP, &[bad], 2);
+        let err = index_batches_sharded(BicConfig::CHIP, &[bad], 2)
+            .expect_err("99-word record cannot fit the chip geometry");
+        assert!(matches!(err, PallasError::Ingest(_)), "{err}");
     }
 
     #[test]
-    #[should_panic(expected = "at least one shard")]
-    fn zero_shards_rejected() {
-        ShardedIndexer::new(BicConfig::CHIP, 0);
+    fn zero_shards_is_a_typed_config_error() {
+        let err = ShardedIndexer::new(BicConfig::CHIP, 0)
+            .expect_err("zero shards is invalid");
+        assert!(matches!(err, PallasError::Config(_)), "{err}");
     }
 }

@@ -1,0 +1,97 @@
+//! Engine configuration: everything [`EngineBuilder`] assembles before
+//! [`build`] validates it into a running [`Engine`].
+//!
+//! [`EngineBuilder`]: crate::engine::EngineBuilder
+//! [`build`]: crate::engine::EngineBuilder::build
+//! [`Engine`]: crate::engine::Engine
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use super::planner::ExecPolicy;
+use crate::bic::Codec;
+
+/// How ingested rows are encoded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecPolicy {
+    /// Per-row argmin over measured size estimates (raw/WAH/roaring) —
+    /// the default; see PERF.md §codec selection.
+    Adaptive,
+    /// Every row under one codec (differential testing, ablations).
+    Forced(Codec),
+}
+
+/// When the planner may pick the thread-sharded query path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Shard when the index spans multiple chunks and is large enough to
+    /// amortize the thread fan-out (the default).
+    Auto,
+    /// Never shard queries (single-threaded evaluation only).
+    Never,
+    /// Shard whenever the chunk layout allows it (benchmarking).
+    Always,
+}
+
+/// Segment-merge maintenance for the durable store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompactionMode {
+    /// No compaction; the live segment set only grows.
+    Off,
+    /// Compact inline after flushes, on the calling thread, until the
+    /// `max_segments` policy is satisfied.
+    Foreground,
+    /// A background thread runs one merge round per `interval`.
+    Background {
+        /// Poll interval between merge rounds.
+        interval: Duration,
+    },
+}
+
+/// Full engine configuration. Constructed through
+/// [`EngineBuilder`](crate::engine::EngineBuilder); the defaults are the
+/// chip geometry with host-parallel workers, adaptive codecs, and no
+/// durable store.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Records per ingested batch (the core geometry's `n`). Short
+    /// batches are zero-padded to this capacity, exactly like the chip.
+    pub batch_records: usize,
+    /// Alphabet words per record (the core geometry's `w`).
+    pub record_words: usize,
+    /// Ingest/query worker threads; `0` = one per host core.
+    pub workers: usize,
+    /// When queries may use the thread-sharded path.
+    pub shard: ShardPolicy,
+    /// Row encoding policy.
+    pub codec: CodecPolicy,
+    /// Directory of the durable store; `None` = in-memory only.
+    pub durable_path: Option<PathBuf>,
+    /// Auto-flush the store memtable every this many batches
+    /// (`0` = manual [`flush`](crate::engine::Engine::flush) only).
+    pub flush_batches: usize,
+    /// Compaction trigger: merge while more than this many segments are
+    /// live.
+    pub max_segments: usize,
+    /// Compaction scheduling.
+    pub compaction: CompactionMode,
+    /// Execution-path policy for [`query`](crate::engine::Engine::query).
+    pub exec: ExecPolicy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            batch_records: 16,
+            record_words: 32,
+            workers: 0,
+            shard: ShardPolicy::Auto,
+            codec: CodecPolicy::Adaptive,
+            durable_path: None,
+            flush_batches: 64,
+            max_segments: 4,
+            compaction: CompactionMode::Off,
+            exec: ExecPolicy::Auto,
+        }
+    }
+}

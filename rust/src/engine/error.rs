@@ -1,0 +1,122 @@
+//! The crate-wide typed error: every public boundary of the engine, the
+//! store, the runtime, and the coordinator returns [`PallasError`], so
+//! callers can match on failure *classes* instead of string-matching an
+//! opaque boxed error chain.
+//!
+//! Taxonomy (PERF.md §engine-api has the full table):
+//!
+//! - [`PallasError::Io`] — an OS-level I/O failure (WAL fsync, segment
+//!   write, manifest rename). Retryable at the caller's discretion.
+//! - [`PallasError::Corrupt`] — durable bytes failed validation (bad
+//!   magic, checksum mismatch, structural violation). Not retryable;
+//!   names what was being read.
+//! - [`PallasError::Ingest`] — a batch that does not fit the configured
+//!   core geometry (too many records, wrong key count, over-wide record).
+//! - [`PallasError::InvalidQuery`] — a query referencing attributes or
+//!   columns the schema does not have.
+//! - [`PallasError::Config`] — an invalid engine/store/service
+//!   configuration caught at construction time (zero workers, schema
+//!   mismatch with an existing store, forced store execution without a
+//!   durable path).
+//! - [`PallasError::Runtime`] — a PJRT/artifact failure on the
+//!   accelerator path (client creation, HLO compilation, dispatch).
+
+use crate::bic::query::QueryError;
+use crate::store::StoreError;
+
+/// Every failure class a `rust_pallas` public API can return.
+#[derive(Debug, thiserror::Error)]
+pub enum PallasError {
+    /// OS-level I/O failure (durable-store reads/writes, artifact files).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    /// Durable bytes failed validation while being read.
+    #[error("corrupt {what}: {detail}")]
+    Corrupt {
+        /// What was being read (segment, manifest, WAL record, ...).
+        what: &'static str,
+        /// Human-readable description of the violation.
+        detail: String,
+    },
+    /// A batch that does not fit the configured core geometry.
+    #[error("ingest: {0}")]
+    Ingest(String),
+    /// A query referencing attributes/columns outside the schema.
+    #[error("invalid query: {0}")]
+    InvalidQuery(String),
+    /// Invalid configuration, rejected at construction time.
+    #[error("config: {0}")]
+    Config(String),
+    /// PJRT/artifact failure on the accelerator path.
+    #[error("runtime: {0}")]
+    Runtime(String),
+}
+
+/// Crate-wide result alias over [`PallasError`].
+pub type Result<T> = std::result::Result<T, PallasError>;
+
+impl From<StoreError> for PallasError {
+    fn from(e: StoreError) -> Self {
+        match e {
+            StoreError::Io(io) => PallasError::Io(io),
+            StoreError::Corrupt { what, detail } => {
+                PallasError::Corrupt { what, detail }
+            }
+            StoreError::Invalid(msg) => PallasError::Config(msg),
+        }
+    }
+}
+
+impl From<QueryError> for PallasError {
+    fn from(e: QueryError) -> Self {
+        PallasError::InvalidQuery(e.to_string())
+    }
+}
+
+impl From<xla::Error> for PallasError {
+    fn from(e: xla::Error) -> Self {
+        PallasError::Runtime(e.to_string())
+    }
+}
+
+impl PallasError {
+    /// Short class name for stats/log labels (`io`, `corrupt`, ...).
+    pub fn class(&self) -> &'static str {
+        match self {
+            PallasError::Io(_) => "io",
+            PallasError::Corrupt { .. } => "corrupt",
+            PallasError::Ingest(_) => "ingest",
+            PallasError::InvalidQuery(_) => "invalid-query",
+            PallasError::Config(_) => "config",
+            PallasError::Runtime(_) => "runtime",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_errors_map_to_their_classes() {
+        let io: PallasError = StoreError::Io(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "disk gone",
+        ))
+        .into();
+        assert!(matches!(io, PallasError::Io(_)));
+        let corrupt: PallasError =
+            StoreError::Corrupt { what: "segment", detail: "crc".into() }.into();
+        assert!(matches!(corrupt, PallasError::Corrupt { what: "segment", .. }));
+        let cfg: PallasError = StoreError::Invalid("zero attrs".into()).into();
+        assert!(matches!(cfg, PallasError::Config(_)));
+    }
+
+    #[test]
+    fn query_errors_become_invalid_query() {
+        let e: PallasError = QueryError::AttrOutOfRange(9, 4).into();
+        assert!(matches!(e, PallasError::InvalidQuery(_)));
+        assert_eq!(e.class(), "invalid-query");
+        assert!(e.to_string().contains("attribute 9"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Chunk-tiled query execution — the one evaluator behind the store
+//! reader, the engine's in-memory backend, and [`Snapshot`] queries.
+//!
+//! The persistent index is physically a sequence of *chunks* (immutable
+//! segments, then memtable batches), each holding one codec-compressed
+//! row per attribute at a global object offset; the chunks tile
+//! `[0, num_objects)` contiguously. Evaluation never materializes rows
+//! the query does not reference:
+//!
+//! - `Or` / leaf rows assemble by OR-folding each chunk's row at its
+//!   offset (`or_into_at` — a WAH fill lands as one word-span write);
+//! - top-level `And` chains fold chunk-by-chunk through the offset
+//!   conjunction kernels (`and_into_at` / `and_not_into_at`, the ROADMAP
+//!   follow-up): the accumulator starts as the first positive leaf's
+//!   assembled row and every further leaf ANDs straight off its
+//!   compressed chunks — the assemble-then-AND intermediate rows are
+//!   never built. An accumulator that empties short-circuits the rest.
+//!
+//! Result-identical to `Query::eval` over the fully assembled index (the
+//! engine property suite pins this bit-for-bit across execution paths).
+//!
+//! [`Snapshot`]: crate::engine::Snapshot
+
+use crate::bic::bitmap::Bitmap;
+use crate::bic::codec::CodecBitmap;
+use crate::bic::query::Query;
+
+/// One contiguous slice of the global object space: `rows[attr]` holds
+/// this chunk's bits for `attr`, with local bit 0 at global bit `base`.
+#[derive(Clone, Copy)]
+pub(crate) struct RowChunk<'a> {
+    /// First global object id this chunk covers.
+    pub base: usize,
+    /// One compressed row per attribute.
+    pub rows: &'a [CodecBitmap],
+}
+
+/// OR attribute `attr` of every chunk into `acc` at its offset.
+pub(crate) fn or_row_into(chunks: &[RowChunk<'_>], attr: usize, acc: &mut Bitmap) {
+    for c in chunks {
+        c.rows[attr].or_into_at(acc, c.base);
+    }
+}
+
+/// Assemble attribute `attr`'s global row over `nbits` objects.
+pub(crate) fn assemble_row(
+    chunks: &[RowChunk<'_>],
+    attr: usize,
+    nbits: usize,
+) -> Bitmap {
+    let mut acc = Bitmap::zeros(nbits);
+    or_row_into(chunks, attr, &mut acc);
+    acc
+}
+
+/// AND attribute `attr` into `acc`, chunk by chunk. Correct because the
+/// chunks tile the accumulator: every window is ANDed exactly once.
+pub(crate) fn and_row_into(chunks: &[RowChunk<'_>], attr: usize, acc: &mut Bitmap) {
+    for c in chunks {
+        c.rows[attr].and_into_at(acc, c.base);
+    }
+}
+
+/// `acc &= !row(attr)`, chunk by chunk.
+pub(crate) fn and_not_row_into(
+    chunks: &[RowChunk<'_>],
+    attr: usize,
+    acc: &mut Bitmap,
+) {
+    for c in chunks {
+        c.rows[attr].and_not_into_at(acc, c.base);
+    }
+}
+
+/// Evaluate `q` over the chunk-tiled index. Attribute ranges must have
+/// been validated by the caller (all referenced attrs < row count).
+pub(crate) fn eval_chunks(
+    chunks: &[RowChunk<'_>],
+    nbits: usize,
+    q: &Query,
+) -> Bitmap {
+    debug_assert!(
+        chunks
+            .iter()
+            .zip(chunks.iter().skip(1))
+            .all(|(a, b)| a.base + a.rows.first().map_or(0, CodecBitmap::len)
+                == b.base),
+        "chunks must tile contiguously"
+    );
+    match q {
+        Query::Attr(i) => assemble_row(chunks, *i, nbits),
+        Query::Not(inner) => eval_chunks(chunks, nbits, inner).not(),
+        Query::Or(xs) => {
+            let mut acc = Bitmap::zeros(nbits);
+            for x in xs {
+                if let Query::Attr(i) = x {
+                    or_row_into(chunks, *i, &mut acc);
+                } else {
+                    acc.or_assign(&eval_chunks(chunks, nbits, x));
+                }
+            }
+            acc
+        }
+        Query::And(xs) => {
+            // Split the conjunction like the compressed planner: positive
+            // leaves fold with AND, negated leaves with ANDNOT, complex
+            // subqueries evaluate recursively. AND is commutative, so the
+            // grouping is result-invariant.
+            let mut pos: Vec<usize> = Vec::new();
+            let mut neg: Vec<usize> = Vec::new();
+            let mut complex: Vec<&Query> = Vec::new();
+            for x in xs {
+                match x {
+                    Query::Attr(i) => pos.push(*i),
+                    Query::Not(inner) => match **inner {
+                        Query::Attr(i) => neg.push(i),
+                        _ => complex.push(x),
+                    },
+                    other => complex.push(other),
+                }
+            }
+            let mut acc = match pos.split_first() {
+                Some((&first, _)) => assemble_row(chunks, first, nbits),
+                None => Bitmap::ones(nbits),
+            };
+            for &i in pos.iter().skip(1) {
+                if acc.is_zero() {
+                    return acc;
+                }
+                and_row_into(chunks, i, &mut acc);
+            }
+            for &i in &neg {
+                if acc.is_zero() {
+                    return acc;
+                }
+                and_not_row_into(chunks, i, &mut acc);
+            }
+            for x in complex {
+                if acc.is_zero() {
+                    return acc;
+                }
+                acc.and_assign(&eval_chunks(chunks, nbits, x));
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bic::bitmap::BitmapIndex;
+    use crate::bic::codec::Codec;
+    use crate::substrate::rng::Xoshiro256;
+
+    /// Chop a reference index into codec-compressed chunks of the given
+    /// lengths and evaluate both ways.
+    fn differential(q: &Query, bi: &BitmapIndex, cuts: &[usize]) {
+        assert_eq!(cuts.iter().sum::<usize>(), bi.num_objects());
+        for codec in Codec::ALL {
+            let mut owned: Vec<(usize, Vec<CodecBitmap>)> = Vec::new();
+            let mut base = 0usize;
+            for &len in cuts {
+                let rows: Vec<CodecBitmap> = (0..bi.num_attrs())
+                    .map(|a| {
+                        let mut seg = Bitmap::zeros(len);
+                        for j in 0..len {
+                            if bi.get(a, base + j) {
+                                seg.set(j, true);
+                            }
+                        }
+                        CodecBitmap::from_bitmap_as(codec, &seg)
+                    })
+                    .collect();
+                owned.push((base, rows));
+                base += len;
+            }
+            let chunks: Vec<RowChunk<'_>> = owned
+                .iter()
+                .map(|(base, rows)| RowChunk { base: *base, rows })
+                .collect();
+            let got = eval_chunks(&chunks, bi.num_objects(), q);
+            let expect = q.eval(bi).expect("reference eval");
+            assert_eq!(got, expect, "{codec:?} cuts={cuts:?}");
+        }
+    }
+
+    #[test]
+    fn chunked_eval_matches_whole_index_eval() {
+        let (m, n) = (6usize, 700usize);
+        let mut rng = Xoshiro256::seeded(0xE7A1);
+        let mut bi = BitmapIndex::new(m, n);
+        for a in 0..m {
+            for j in 0..n {
+                if rng.chance(0.3) {
+                    bi.set(a, j, true);
+                }
+            }
+        }
+        let queries = [
+            Query::attr(0).and(Query::attr(2)).and(Query::attr(4).not()),
+            Query::And(vec![
+                Query::attr(1).not(),
+                Query::attr(3).not(),
+            ]),
+            Query::attr(5).or(Query::attr(0).and(Query::attr(1))),
+            Query::attr(2)
+                .and(Query::attr(0).or(Query::attr(3)))
+                .and(Query::attr(1).not()),
+            Query::And(vec![]),
+            Query::Or(vec![]),
+            Query::attr(3).not().not(),
+        ];
+        for q in &queries {
+            differential(q, &bi, &[n]);
+            differential(q, &bi, &[64, 256, 380]);
+            differential(q, &bi, &[1, 63, 65, 571]);
+        }
+    }
+}

@@ -1,0 +1,827 @@
+//! The unified engine facade — one typed session API over ingest, the
+//! durable store, and query execution.
+//!
+//! The paper's BIC chip is a single device-level command surface:
+//! batches in, bitmap index out. This module is that surface for the
+//! whole repro — one [`Engine`] handle, built by [`EngineBuilder`], owns
+//! every subsystem that previously had its own front door:
+//!
+//! ```text
+//!                         EngineBuilder::build()
+//!                                  |
+//!   +------------------------------v-------------------------------+
+//!   |  Engine                                                      |
+//!   |                                                              |
+//!   |  ingest(batch) --> BicCore / ShardedIndexer (worker threads) |
+//!   |                     |  codec policy (adaptive / forced)      |
+//!   |                     v                                        |
+//!   |            [memtable | durable Store (WAL -> segments)]      |
+//!   |                     |                 |      ^               |
+//!   |  flush() ----------- \----------------+      | Compactor     |
+//!   |                                       v      | (off/fg/bg)   |
+//!   |  query(q) --> planner --> raw | compressed | sharded | store |
+//!   |  select(pred) -> Schema lowering -> query(q)                 |
+//!   |  snapshot() -> pinned segment set + memtable clone           |
+//!   |  stats() / close()                                           |
+//!   +--------------------------------------------------------------+
+//! ```
+//!
+//! Every public boundary returns the typed [`PallasError`] (no opaque
+//! error chains, no panics on caller input), queries can be written
+//! against named
+//! columns (`col("city").eq(3)` — see [`schema`]), and the [`planner`]
+//! picks the execution tier per call instead of the caller choosing a
+//! method. The pre-facade entry points (`IndexService`,
+//! `ShardedIndexer`, `Store`) remain as internal plumbing for subsystem
+//! property tests; new code should construct the system exclusively
+//! through [`EngineBuilder`]. PERF.md §engine-api has the full design
+//! note.
+
+#![deny(missing_docs)]
+
+pub mod config;
+pub mod error;
+pub(crate) mod exec;
+pub mod planner;
+pub mod schema;
+pub mod snapshot;
+
+pub use config::{CodecPolicy, CompactionMode, EngineConfig, ShardPolicy};
+pub use error::{PallasError, Result};
+pub use planner::{ExecPath, ExecPolicy, Plan};
+pub use schema::{col, CmpOp, ColRef, Column, Predicate, Schema, SchemaBuilder};
+pub use snapshot::Snapshot;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::bic::bitmap::{Bitmap, BitmapIndex};
+use crate::bic::codec::{CodecBitmap, CompressedIndex};
+use crate::bic::query::{Query, QueryError};
+use crate::bic::{BicConfig, BicCore};
+use crate::coordinator::sharding::ShardedIndexer;
+use crate::store::compaction::{CompactionPolicy, Compactor};
+use crate::store::{manifest, Store, StoreConfig};
+use crate::substrate::json::Json;
+use exec::RowChunk;
+use planner::PlanInputs;
+use snapshot::PinnedView;
+
+/// Sidecar file recording the schema a durable store was created under
+/// (column names + key values). The attribute count alone cannot catch a
+/// same-width schema swap, which would silently misinterpret the stored
+/// rows; [`EngineBuilder::build`] validates this on reopen. Pre-facade
+/// stores without the file are adopted (count check only) and the file
+/// is written for the next session. The name deliberately avoids the
+/// store's `seg-`/`wal-`/`.tmp` prefixes so recovery's orphan sweep
+/// never touches it.
+const SCHEMA_FILE: &str = "ENGINE_SCHEMA.json";
+
+fn schema_json(schema: &Schema) -> String {
+    Json::obj([(
+        "columns",
+        Json::Arr(
+            schema
+                .columns()
+                .iter()
+                .map(|c| {
+                    Json::obj([
+                        ("name", c.name().into()),
+                        (
+                            "values",
+                            Json::Arr(
+                                c.values().iter().map(|&v| v.into()).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+    .render()
+        + "\n"
+}
+
+fn schema_matches(doc: &Json, schema: &Schema) -> bool {
+    let Some(cols) = doc.get("columns").and_then(Json::as_arr) else {
+        return false;
+    };
+    if cols.len() != schema.num_columns() {
+        return false;
+    }
+    for (j, c) in cols.iter().zip(schema.columns()) {
+        if j.get("name").and_then(Json::as_str) != Some(c.name()) {
+            return false;
+        }
+        let Some(vals) = j.get("values").and_then(Json::as_arr) else {
+            return false;
+        };
+        if vals.len() != c.values().len() {
+            return false;
+        }
+        for (v, &want) in vals.iter().zip(c.values()) {
+            if v.as_f64() != Some(want as f64) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Builder for [`Engine`]: schema first, then tuning knobs, then
+/// [`EngineBuilder::build`] validates everything at once.
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    schema: Schema,
+    cfg: EngineConfig,
+}
+
+impl EngineBuilder {
+    /// Start from a schema (defines the key vector and the geometry `m`).
+    pub fn new(schema: Schema) -> Self {
+        Self { schema, cfg: EngineConfig::default() }
+    }
+
+    /// Records per batch (geometry `n`; short batches are zero-padded).
+    pub fn batch_records(mut self, n: usize) -> Self {
+        self.cfg.batch_records = n;
+        self
+    }
+
+    /// Alphabet words per record (geometry `w`).
+    pub fn record_words(mut self, w: usize) -> Self {
+        self.cfg.record_words = w;
+        self
+    }
+
+    /// Worker threads for ingest/sharded-query fan-out (`0` = one per
+    /// host core).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// When queries may take the thread-sharded path.
+    pub fn shard_policy(mut self, p: ShardPolicy) -> Self {
+        self.cfg.shard = p;
+        self
+    }
+
+    /// Row-encoding policy.
+    pub fn codec(mut self, c: CodecPolicy) -> Self {
+        self.cfg.codec = c;
+        self
+    }
+
+    /// Attach a durable store at `path` (created if absent, recovered if
+    /// present).
+    pub fn durable(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.cfg.durable_path = Some(path.into());
+        self
+    }
+
+    /// Auto-flush the memtable every `n` batches (`0` = manual only).
+    pub fn flush_batches(mut self, n: usize) -> Self {
+        self.cfg.flush_batches = n;
+        self
+    }
+
+    /// Compaction trigger: merge while more than `n` segments are live.
+    pub fn max_segments(mut self, n: usize) -> Self {
+        self.cfg.max_segments = n;
+        self
+    }
+
+    /// Compaction scheduling (off / foreground / background).
+    pub fn compaction(mut self, mode: CompactionMode) -> Self {
+        self.cfg.compaction = mode;
+        self
+    }
+
+    /// Execution-path policy (`Auto`, or `Force` a tier for testing).
+    pub fn exec_policy(mut self, p: ExecPolicy) -> Self {
+        self.cfg.exec = p;
+        self
+    }
+
+    /// The configuration as assembled so far.
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Validate and start the engine. [`PallasError::Config`] on a
+    /// degenerate geometry, a schema mismatch with an existing store,
+    /// compaction without a durable path, or `Force(Store)` without one.
+    pub fn build(self) -> Result<Engine> {
+        let EngineBuilder { schema, cfg } = self;
+        if cfg.batch_records == 0 {
+            return Err(PallasError::Config("batch_records must be >= 1".into()));
+        }
+        if cfg.record_words == 0 {
+            return Err(PallasError::Config("record_words must be >= 1".into()));
+        }
+        let m = schema.num_attrs();
+        let geometry = BicConfig {
+            n_records: cfg.batch_records,
+            w_words: cfg.record_words,
+            m_keys: m,
+        };
+        if cfg.durable_path.is_none() {
+            if cfg.exec == ExecPolicy::Force(ExecPath::Store) {
+                return Err(PallasError::Config(
+                    "exec policy Force(Store) requires a durable path".into(),
+                ));
+            }
+            if cfg.compaction != CompactionMode::Off {
+                return Err(PallasError::Config(
+                    "compaction requires a durable path".into(),
+                ));
+            }
+        }
+        let indexer = if cfg.workers == 0 {
+            ShardedIndexer::with_host_parallelism(geometry)
+        } else {
+            ShardedIndexer::new(geometry, cfg.workers)?
+        };
+        let mut compactor = None;
+        let backend = match &cfg.durable_path {
+            Some(path) => {
+                let scfg = StoreConfig {
+                    flush_batches: cfg.flush_batches,
+                    compaction: CompactionPolicy {
+                        max_segments: cfg.max_segments,
+                    },
+                };
+                let store = if manifest::exists(path) {
+                    let store = Store::open(path, scfg)?;
+                    if store.num_attrs() != m {
+                        return Err(PallasError::Config(format!(
+                            "store at {} has {} attribute rows, schema has {m}",
+                            path.display(),
+                            store.num_attrs()
+                        )));
+                    }
+                    // Same width is not enough: the stored rows were
+                    // indexed under specific (column, value) keys.
+                    let sidecar = path.join(SCHEMA_FILE);
+                    match std::fs::read_to_string(&sidecar) {
+                        Ok(text) => {
+                            let doc = Json::parse(&text).map_err(|e| {
+                                PallasError::Corrupt {
+                                    what: "engine schema sidecar",
+                                    detail: format!(
+                                        "{}: {e}",
+                                        sidecar.display()
+                                    ),
+                                }
+                            })?;
+                            if !schema_matches(&doc, &schema) {
+                                return Err(PallasError::Config(format!(
+                                    "store at {} was created under a \
+                                     different schema (see {})",
+                                    path.display(),
+                                    sidecar.display()
+                                )));
+                            }
+                        }
+                        // Pre-facade store: adopt it and record the
+                        // schema for the next session. Only a genuinely
+                        // absent sidecar counts — any other read error
+                        // must not silently re-stamp the schema.
+                        Err(e)
+                            if e.kind() == std::io::ErrorKind::NotFound =>
+                        {
+                            std::fs::write(&sidecar, schema_json(&schema))?
+                        }
+                        Err(e) => return Err(PallasError::Io(e)),
+                    }
+                    store
+                } else {
+                    let store = Store::create(path, m, scfg)?;
+                    std::fs::write(path.join(SCHEMA_FILE), schema_json(&schema))?;
+                    store
+                };
+                let store = Arc::new(Mutex::new(store));
+                if let CompactionMode::Background { interval } = cfg.compaction {
+                    compactor =
+                        Some(Compactor::spawn(Arc::clone(&store), interval));
+                }
+                Backend::Durable(store)
+            }
+            None => Backend::Memory(Mutex::new(MemTable::default())),
+        };
+        let keys = schema.keys();
+        Ok(Engine {
+            geometry,
+            keys,
+            schema: Arc::new(schema),
+            core: Mutex::new(BicCore::new(geometry)),
+            indexer,
+            backend,
+            compactor,
+            cache: Mutex::new(None),
+            counters: Mutex::new(Counters::default()),
+            next_batch: AtomicU64::new(0),
+            cfg,
+        })
+    }
+}
+
+/// Acknowledgment of one ingested batch.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestReceipt {
+    /// Engine-assigned batch id (monotonic per handle).
+    pub batch: u64,
+    /// Objects this batch contributed (= batch capacity; short batches
+    /// are zero-padded like the chip pads records).
+    pub objects: usize,
+    /// Total objects in the index after this batch.
+    pub total_objects: usize,
+    /// `true` when the batch is durable (WAL fsynced) on return.
+    pub durable: bool,
+}
+
+/// A point-in-time census of the engine.
+#[derive(Clone, Debug)]
+pub struct EngineStats {
+    /// Attribute rows per object (schema width).
+    pub attrs: usize,
+    /// Declared schema columns.
+    pub columns: usize,
+    /// Worker threads serving ingest/sharded queries.
+    pub workers: usize,
+    /// Batches acknowledged through this handle.
+    pub batches_ingested: u64,
+    /// Objects currently indexed (segments + memtable).
+    pub objects: usize,
+    /// A durable store is attached.
+    pub durable: bool,
+    /// Flushed live segments (0 without a store).
+    pub segments: usize,
+    /// Acknowledged batches not yet flushed.
+    pub memtable_batches: usize,
+    /// Cumulative segment bytes written (flushes + compactions).
+    pub segment_bytes_written: u64,
+    /// A compressed query view is currently cached.
+    pub compressed_cache: bool,
+    /// Queries served by the raw tier.
+    pub queries_raw: u64,
+    /// Queries served by the compressed tier.
+    pub queries_compressed: u64,
+    /// Queries served by the thread-sharded tier.
+    pub queries_sharded: u64,
+    /// Queries served by the store reader.
+    pub queries_store: u64,
+}
+
+impl EngineStats {
+    /// Queries served across all tiers.
+    pub fn queries_total(&self) -> u64 {
+        self.queries_raw
+            + self.queries_compressed
+            + self.queries_sharded
+            + self.queries_store
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    queries: [u64; 4],
+}
+
+/// In-memory backend state. Batches are `Arc`-shared so pinning a view
+/// for a query or snapshot is O(batches) pointer bumps, not a copy.
+#[derive(Default)]
+struct MemTable {
+    batches: Vec<Arc<Vec<CodecBitmap>>>,
+    bits: usize,
+}
+
+enum Backend {
+    Durable(Arc<Mutex<Store>>),
+    Memory(Mutex<MemTable>),
+}
+
+/// The session handle: ingest, flush, query, snapshot, stats, close.
+/// All methods take `&self` (internal locking), so one handle can serve
+/// concurrent ingesting and querying threads.
+pub struct Engine {
+    cfg: EngineConfig,
+    geometry: BicConfig,
+    schema: Arc<Schema>,
+    keys: Vec<i32>,
+    core: Mutex<BicCore>,
+    indexer: ShardedIndexer,
+    backend: Backend,
+    compactor: Option<Compactor>,
+    cache: Mutex<Option<Arc<CompressedIndex>>>,
+    counters: Mutex<Counters>,
+    next_batch: AtomicU64,
+}
+
+impl Engine {
+    /// Start building an engine over `schema`.
+    pub fn builder(schema: Schema) -> EngineBuilder {
+        EngineBuilder::new(schema)
+    }
+
+    /// The schema this engine indexes against.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// The key vector handed to the indexing core (one per attribute).
+    pub fn keys(&self) -> &[i32] {
+        &self.keys
+    }
+
+    /// The resolved configuration.
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// The core geometry (`n` records x `w` words x `m` keys).
+    pub fn geometry(&self) -> &BicConfig {
+        &self.geometry
+    }
+
+    /// Attribute rows per object.
+    pub fn num_attrs(&self) -> usize {
+        self.schema.num_attrs()
+    }
+
+    /// Objects currently indexed.
+    pub fn num_objects(&self) -> usize {
+        match &self.backend {
+            Backend::Durable(store) => store.lock().unwrap().num_objects(),
+            Backend::Memory(mem) => mem.lock().unwrap().bits,
+        }
+    }
+
+    fn check_records(&self, records: &[Vec<i32>]) -> Result<()> {
+        if records.len() > self.geometry.n_records {
+            return Err(PallasError::Ingest(format!(
+                "batch of {} records exceeds capacity {}",
+                records.len(),
+                self.geometry.n_records
+            )));
+        }
+        if let Some((j, r)) =
+            records.iter().enumerate().find(|(_, r)| r.len() > self.geometry.w_words)
+        {
+            return Err(PallasError::Ingest(format!(
+                "record {j} has {} words, record width is {}",
+                r.len(),
+                self.geometry.w_words
+            )));
+        }
+        Ok(())
+    }
+
+    fn encode(&self, bi: &BitmapIndex) -> CompressedIndex {
+        match self.cfg.codec {
+            CodecPolicy::Adaptive => CompressedIndex::from_index(bi),
+            CodecPolicy::Forced(c) => CompressedIndex::from_index_forced(bi, c),
+        }
+    }
+
+    /// Ingest one batch of records (each a set of alphabet words, up to
+    /// the configured width). Indexes on the calling thread, encodes per
+    /// the codec policy, and appends to the memtable — durably (WAL
+    /// fsynced before return) when a store is attached.
+    pub fn ingest(&self, records: &[Vec<i32>]) -> Result<IngestReceipt> {
+        self.check_records(records)?;
+        let bi = self.core.lock().unwrap().index(records, &self.keys);
+        self.append(self.encode(&bi))
+    }
+
+    /// Ingest a whole trace of batches, fanned over the worker threads
+    /// (indexing and codec encoding parallelize; appends keep input
+    /// order, so batch `i` is acknowledged before batch `i + 1`).
+    pub fn ingest_batches(
+        &self,
+        batches: &[Vec<Vec<i32>>],
+    ) -> Result<Vec<IngestReceipt>> {
+        for records in batches {
+            self.check_records(records)?;
+        }
+        // Zero-copy fan-out: workers borrow the caller's records and the
+        // engine's key vector directly (no per-batch `Batch` wrapping),
+        // and encode — adaptive or forced — on the worker threads.
+        let forced = match self.cfg.codec {
+            CodecPolicy::Adaptive => None,
+            CodecPolicy::Forced(c) => Some(c),
+        };
+        let encoded =
+            self.indexer.index_record_batches_compressed(batches, &self.keys, forced);
+        encoded.into_iter().map(|ci| self.append(ci)).collect()
+    }
+
+    fn append(&self, ci: CompressedIndex) -> Result<IngestReceipt> {
+        let objects = ci.num_objects();
+        // The batch id is taken while the backend lock is held, so ids
+        // agree with append (and WAL durability) order under concurrent
+        // ingest: batch `i`'s objects sit below batch `i + 1`'s.
+        let (batch, durable, total_objects) = match &self.backend {
+            Backend::Durable(store) => {
+                let mut g = store.lock().unwrap();
+                g.append_batch(&ci)?;
+                if self.cfg.compaction == CompactionMode::Foreground {
+                    g.compact()?;
+                }
+                let batch = self.next_batch.fetch_add(1, Ordering::Relaxed);
+                (batch, true, g.num_objects())
+            }
+            Backend::Memory(mem) => {
+                let mut g = mem.lock().unwrap();
+                g.bits += objects;
+                g.batches.push(Arc::new(ci.into_rows()));
+                let batch = self.next_batch.fetch_add(1, Ordering::Relaxed);
+                (batch, false, g.bits)
+            }
+        };
+        *self.cache.lock().unwrap() = None;
+        Ok(IngestReceipt { batch, objects, total_objects, durable })
+    }
+
+    /// Flush the store memtable into an immutable segment. Returns the
+    /// segment bytes written, `None` when the memtable was empty or no
+    /// store is attached (the in-memory backend has nothing to flush).
+    pub fn flush(&self) -> Result<Option<u64>> {
+        match &self.backend {
+            Backend::Durable(store) => {
+                let mut g = store.lock().unwrap();
+                let written = g.flush()?;
+                if self.cfg.compaction == CompactionMode::Foreground {
+                    g.compact()?;
+                }
+                Ok(written)
+            }
+            Backend::Memory(_) => Ok(None),
+        }
+    }
+
+    fn validate(&self, q: &Query) -> Result<()> {
+        let m = self.num_attrs();
+        for a in q.attrs() {
+            if a >= m {
+                return Err(QueryError::AttrOutOfRange(a, m).into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Capture the current chunk tiling as an owned [`PinnedView`]. The
+    /// backend lock is held only for the capture (O(chunks) `Arc` bumps
+    /// plus, on the durable backend, a memtable clone bounded by
+    /// `flush_batches`) — queries then evaluate with no lock held, so a
+    /// long query never stalls ingest acknowledgment.
+    fn pin(&self) -> PinnedView {
+        match &self.backend {
+            Backend::Durable(store) => {
+                let g = store.lock().unwrap();
+                PinnedView {
+                    segs: g.segments.clone(),
+                    mem: g
+                        .memtable
+                        .iter()
+                        .map(|b| Arc::new(b.clone()))
+                        .collect(),
+                    mem_base: g.segment_bits(),
+                    nbits: g.num_objects(),
+                }
+            }
+            Backend::Memory(mem) => {
+                let g = mem.lock().unwrap();
+                PinnedView {
+                    segs: Vec::new(),
+                    mem: g.batches.clone(),
+                    mem_base: 0,
+                    nbits: g.bits,
+                }
+            }
+        }
+    }
+
+    /// Run `f` over the current chunk tiling (captured, not locked).
+    fn eval_with<R>(&self, f: impl FnOnce(&[RowChunk<'_>], usize) -> R) -> R {
+        let pinned = self.pin();
+        f(&pinned.views(), pinned.nbits)
+    }
+
+    /// Get (building on first use) the cached compressed view.
+    fn compressed_view(&self) -> Arc<CompressedIndex> {
+        let mut guard = self.cache.lock().unwrap();
+        if let Some(ci) = guard.as_ref() {
+            return Arc::clone(ci);
+        }
+        let m = self.num_attrs();
+        let ci = self.eval_with(|chunks, nbits| {
+            let bi = BitmapIndex::from_rows(
+                (0..m).map(|a| exec::assemble_row(chunks, a, nbits)).collect(),
+            );
+            self.encode(&bi)
+        });
+        let arc = Arc::new(ci);
+        *guard = Some(Arc::clone(&arc));
+        arc
+    }
+
+    fn plan_inputs(&self, q: &Query) -> PlanInputs {
+        let conjunctive = matches!(q, Query::And(xs) if xs.len() >= 2);
+        let (durable, segments, chunks, total_bits) = match &self.backend {
+            Backend::Durable(store) => {
+                let g = store.lock().unwrap();
+                (
+                    true,
+                    g.num_segments(),
+                    g.num_segments() + g.memtable_batches(),
+                    g.num_objects(),
+                )
+            }
+            Backend::Memory(mem) => {
+                let g = mem.lock().unwrap();
+                (false, 0, g.batches.len(), g.bits)
+            }
+        };
+        PlanInputs {
+            durable,
+            segments,
+            chunks,
+            total_bits,
+            workers: self.indexer.shards(),
+            compressed_cached: self.cache.lock().unwrap().is_some(),
+            shard: self.cfg.shard,
+            conjunctive,
+        }
+    }
+
+    /// What the planner would do with `q` right now (introspection; the
+    /// decision table lives in [`planner`]).
+    pub fn plan(&self, q: &Query) -> Plan {
+        planner::plan(self.cfg.exec, &self.plan_inputs(q))
+    }
+
+    /// Evaluate a query; the planner picks the execution tier. Every
+    /// tier returns a bit-identical object bitmap.
+    pub fn query(&self, q: &Query) -> Result<Bitmap> {
+        self.validate(q)?;
+        let plan = self.plan(q);
+        self.run(q, plan.path)
+    }
+
+    /// Evaluate on a specific tier (differential testing, benches).
+    /// [`PallasError::Config`] for [`ExecPath::Store`] without a durable
+    /// store.
+    pub fn query_via(&self, q: &Query, path: ExecPath) -> Result<Bitmap> {
+        self.validate(q)?;
+        self.run(q, path)
+    }
+
+    /// Lower a predicate against the schema and [`Engine::query`] it.
+    pub fn select(&self, p: &Predicate) -> Result<Bitmap> {
+        self.query(&p.lower(&self.schema)?)
+    }
+
+    fn run(&self, q: &Query, path: ExecPath) -> Result<Bitmap> {
+        let m = self.num_attrs();
+        let out = match path {
+            ExecPath::Raw => self.eval_with(|chunks, nbits| {
+                let bi = BitmapIndex::from_rows(
+                    (0..m)
+                        .map(|a| exec::assemble_row(chunks, a, nbits))
+                        .collect(),
+                );
+                q.eval(&bi).expect("attrs validated")
+            }),
+            ExecPath::Compressed => {
+                let ci = self.compressed_view();
+                q.eval_compressed(&ci).expect("attrs validated")
+            }
+            ExecPath::Sharded => self.eval_with(|chunks, nbits| {
+                sharded_eval(chunks, nbits, q, self.indexer.shards())
+            }),
+            ExecPath::Store => {
+                if !matches!(self.backend, Backend::Durable(_)) {
+                    return Err(PallasError::Config(
+                        "store execution requires a durable store path".into(),
+                    ));
+                }
+                // The reader's fold evaluation over the pinned segment
+                // set — semantically `StoreReader::eval`, but on the
+                // captured view so the store lock is not held while the
+                // query runs.
+                self.eval_with(|chunks, nbits| exec::eval_chunks(chunks, nbits, q))
+            }
+        };
+        let slot = ExecPath::ALL.iter().position(|&p| p == path).unwrap();
+        self.counters.lock().unwrap().queries[slot] += 1;
+        Ok(out)
+    }
+
+    /// Take a consistent snapshot: the flushed segment set is pinned
+    /// (`Arc`), the memtable batches shared or cloned compressed. Later
+    /// ingest/flush/compaction cannot change what the snapshot reads.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot { schema: Arc::clone(&self.schema), view: self.pin() }
+    }
+
+    /// Current engine census.
+    pub fn stats(&self) -> EngineStats {
+        let (durable, objects, segments, memtable_batches, segment_bytes) =
+            match &self.backend {
+                Backend::Durable(store) => {
+                    let g = store.lock().unwrap();
+                    (
+                        true,
+                        g.num_objects(),
+                        g.num_segments(),
+                        g.memtable_batches(),
+                        g.segment_bytes_written(),
+                    )
+                }
+                Backend::Memory(mem) => {
+                    let g = mem.lock().unwrap();
+                    (false, g.bits, 0, g.batches.len(), 0)
+                }
+            };
+        let counters = self.counters.lock().unwrap();
+        EngineStats {
+            attrs: self.num_attrs(),
+            columns: self.schema.num_columns(),
+            workers: self.indexer.shards(),
+            batches_ingested: self.next_batch.load(Ordering::Relaxed),
+            objects,
+            durable,
+            segments,
+            memtable_batches,
+            segment_bytes_written: segment_bytes,
+            compressed_cache: self.cache.lock().unwrap().is_some(),
+            queries_raw: counters.queries[0],
+            queries_compressed: counters.queries[1],
+            queries_sharded: counters.queries[2],
+            queries_store: counters.queries[3],
+        }
+    }
+
+    /// Graceful shutdown: stop the background compactor (if any), flush
+    /// the store memtable, and return the final census. Dropping the
+    /// engine without `close` is safe (the WAL covers the memtable) but
+    /// leaves the last segment unflushed.
+    pub fn close(mut self) -> Result<EngineStats> {
+        if let Some(c) = self.compactor.take() {
+            c.stop();
+        }
+        if let Backend::Durable(store) = &self.backend {
+            store.lock().unwrap().flush()?;
+        }
+        Ok(self.stats())
+    }
+}
+
+/// Evaluate per chunk-slice on scoped worker threads and concatenate in
+/// slice order. Correct because query semantics are pointwise per
+/// object, so evaluation distributes over the chunk concatenation; the
+/// merge is deterministic (slice order), making the result bit-identical
+/// to the other tiers regardless of thread interleaving. Each worker
+/// runs the fold evaluator over its slice rebased to 0, so only the rows
+/// a query references are ever touched — no whole-chunk decompression.
+fn sharded_eval(
+    chunks: &[RowChunk<'_>],
+    nbits: usize,
+    q: &Query,
+    workers: usize,
+) -> Bitmap {
+    if chunks.len() < 2 || workers < 2 {
+        return exec::eval_chunks(chunks, nbits, q);
+    }
+    let groups = workers.min(chunks.len());
+    let per = chunks.len().div_ceil(groups);
+    let results: Vec<(usize, Bitmap)> = std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .chunks(per)
+            .map(|slice| {
+                s.spawn(move || {
+                    let base = slice[0].base;
+                    let local: Vec<RowChunk<'_>> = slice
+                        .iter()
+                        .map(|c| RowChunk { base: c.base - base, rows: c.rows })
+                        .collect();
+                    let last = slice.last().expect("slice is non-empty");
+                    let len = last.base - base
+                        + last.rows.first().map_or(0, CodecBitmap::len);
+                    (base, exec::eval_chunks(&local, len, q))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    });
+    let mut out = Bitmap::zeros(nbits);
+    for (base, bm) in results {
+        out.or_at(&bm, base);
+    }
+    out
+}

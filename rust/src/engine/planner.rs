@@ -1,0 +1,212 @@
+//! The query planner: picks the execution tier per call, so callers
+//! never choose between `Query::eval`, `eval_compressed`, sharded
+//! evaluation, or the store reader by hand.
+//!
+//! The decision table (PERF.md §engine-api reproduces it with the
+//! rationale):
+//!
+//! | # | condition                                               | path       |
+//! |---|---------------------------------------------------------|------------|
+//! | 1 | policy is `Force(p)`                                    | `p`        |
+//! | 2 | durable store with ≥ 1 flushed segment                  | Store      |
+//! | 3 | `ShardPolicy::Always`, ≥ 2 chunks, > 1 worker           | Sharded    |
+//! | 4 | compressed view already cached                          | Compressed |
+//! | 5 | `ShardPolicy::Auto`, ≥ 2 chunks, > 1 worker, ≥ 256 Kbit | Sharded    |
+//! | 6 | conjunctive query, ≥ 64 Kbit                            | Compressed |
+//! | 7 | otherwise                                               | Raw        |
+//!
+//! Rule 2 dominates because the store reader assembles only the rows a
+//! query references and folds conjunctions segment-by-segment through
+//! the offset AND/ANDNOT kernels — every other tier starts by touching
+//! whole rows. Rules 5/6 gate the heavier setups (thread fan-out,
+//! one-time compressed encode) behind index sizes where they pay off.
+//! Every tier returns a bit-identical result; the planner only changes
+//! cost (`rust/tests/engine_props.rs` pins this across all four).
+
+use super::config::ShardPolicy;
+
+/// Minimum total index bits before the sharded fan-out pays for itself.
+pub const SHARD_MIN_BITS: usize = 1 << 18;
+
+/// Minimum total index bits before building the compressed view pays.
+pub const COMPRESS_MIN_BITS: usize = 1 << 16;
+
+/// One of the four query execution tiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExecPath {
+    /// Assemble the full index and run `Query::eval` (the reference).
+    Raw,
+    /// Selectivity-ordered planning over codec-compressed rows
+    /// (`Query::eval_compressed`).
+    Compressed,
+    /// Evaluate per chunk on worker threads, concatenate in chunk order
+    /// (deterministic merge).
+    Sharded,
+    /// The durable store's reader: segment-by-segment fold kernels,
+    /// memtable included. Requires a durable path.
+    Store,
+}
+
+impl ExecPath {
+    /// All paths, in stats order.
+    pub const ALL: [ExecPath; 4] =
+        [ExecPath::Raw, ExecPath::Compressed, ExecPath::Sharded, ExecPath::Store];
+
+    /// Stable lowercase label (stats keys, bench case names).
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecPath::Raw => "raw",
+            ExecPath::Compressed => "compressed",
+            ExecPath::Sharded => "sharded",
+            ExecPath::Store => "store",
+        }
+    }
+}
+
+/// Whether the planner decides, or the caller has pinned a tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPolicy {
+    /// Planner picks per query (the table above).
+    Auto,
+    /// Every query runs on the given tier (differential tests, benches).
+    Force(ExecPath),
+}
+
+/// The planner's verdict, with the matched rule for introspection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Plan {
+    /// Chosen execution tier.
+    pub path: ExecPath,
+    /// Which table rule fired (human-readable, stable for tests).
+    pub reason: &'static str,
+}
+
+/// Everything the decision table looks at, gathered by the engine under
+/// its state lock.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct PlanInputs {
+    /// A durable store is attached.
+    pub durable: bool,
+    /// Flushed live segments in the store (0 without a store).
+    pub segments: usize,
+    /// Chunks tiling the object space (segments + memtable batches).
+    pub chunks: usize,
+    /// Total objects.
+    pub total_bits: usize,
+    /// Worker threads available to the sharded path.
+    pub workers: usize,
+    /// A compressed view is already cached.
+    pub compressed_cached: bool,
+    /// The configured shard policy.
+    pub shard: ShardPolicy,
+    /// Query is a top-level `And` of ≥ 2 terms.
+    pub conjunctive: bool,
+}
+
+pub(crate) fn plan(policy: ExecPolicy, i: &PlanInputs) -> Plan {
+    if let ExecPolicy::Force(path) = policy {
+        return Plan { path, reason: "forced by policy" };
+    }
+    if i.durable && i.segments >= 1 {
+        return Plan {
+            path: ExecPath::Store,
+            reason: "flushed segments: reader folds per segment",
+        };
+    }
+    let can_shard = i.chunks >= 2 && i.workers > 1;
+    if i.shard == ShardPolicy::Always && can_shard {
+        return Plan { path: ExecPath::Sharded, reason: "shard policy: always" };
+    }
+    if i.compressed_cached {
+        return Plan {
+            path: ExecPath::Compressed,
+            reason: "compressed view cached",
+        };
+    }
+    if i.shard == ShardPolicy::Auto && can_shard && i.total_bits >= SHARD_MIN_BITS
+    {
+        return Plan {
+            path: ExecPath::Sharded,
+            reason: "large multi-chunk index",
+        };
+    }
+    if i.conjunctive && i.total_bits >= COMPRESS_MIN_BITS {
+        return Plan {
+            path: ExecPath::Compressed,
+            reason: "conjunctive query over a large index",
+        };
+    }
+    Plan { path: ExecPath::Raw, reason: "small in-memory index" }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> PlanInputs {
+        PlanInputs {
+            durable: false,
+            segments: 0,
+            chunks: 1,
+            total_bits: 1 << 10,
+            workers: 8,
+            compressed_cached: false,
+            shard: ShardPolicy::Auto,
+            conjunctive: false,
+        }
+    }
+
+    #[test]
+    fn force_overrides_everything() {
+        let i = PlanInputs { durable: true, segments: 5, ..inputs() };
+        for p in ExecPath::ALL {
+            assert_eq!(plan(ExecPolicy::Force(p), &i).path, p);
+        }
+    }
+
+    #[test]
+    fn flushed_segments_go_to_the_store_reader() {
+        let i = PlanInputs { durable: true, segments: 1, ..inputs() };
+        assert_eq!(plan(ExecPolicy::Auto, &i).path, ExecPath::Store);
+        // Durable but nothing flushed yet: not the store path.
+        let i = PlanInputs { durable: true, segments: 0, ..inputs() };
+        assert_ne!(plan(ExecPolicy::Auto, &i).path, ExecPath::Store);
+    }
+
+    #[test]
+    fn sharding_needs_chunks_workers_and_size() {
+        let big = PlanInputs {
+            chunks: 8,
+            total_bits: SHARD_MIN_BITS,
+            ..inputs()
+        };
+        assert_eq!(plan(ExecPolicy::Auto, &big).path, ExecPath::Sharded);
+        let small = PlanInputs { total_bits: SHARD_MIN_BITS - 1, ..big };
+        assert_ne!(plan(ExecPolicy::Auto, &small).path, ExecPath::Sharded);
+        let one_worker = PlanInputs { workers: 1, ..big };
+        assert_ne!(plan(ExecPolicy::Auto, &one_worker).path, ExecPath::Sharded);
+        let never = PlanInputs { shard: ShardPolicy::Never, ..big };
+        assert_ne!(plan(ExecPolicy::Auto, &never).path, ExecPath::Sharded);
+        let always_small = PlanInputs {
+            shard: ShardPolicy::Always,
+            total_bits: 64,
+            chunks: 2,
+            ..inputs()
+        };
+        assert_eq!(plan(ExecPolicy::Auto, &always_small).path, ExecPath::Sharded);
+    }
+
+    #[test]
+    fn conjunctions_over_large_indexes_compress() {
+        let i = PlanInputs {
+            conjunctive: true,
+            total_bits: COMPRESS_MIN_BITS,
+            ..inputs()
+        };
+        assert_eq!(plan(ExecPolicy::Auto, &i).path, ExecPath::Compressed);
+        let cached = PlanInputs { compressed_cached: true, ..inputs() };
+        assert_eq!(plan(ExecPolicy::Auto, &cached).path, ExecPath::Compressed);
+        let small = PlanInputs { conjunctive: true, ..inputs() };
+        assert_eq!(plan(ExecPolicy::Auto, &small).path, ExecPath::Raw);
+    }
+}

@@ -1,0 +1,498 @@
+//! Named-attribute schema + predicate builder — the typed query
+//! front-end of the [`Engine`](crate::engine::Engine).
+//!
+//! A bitmap index is equality-encoded: each *column* owns one bitmap row
+//! per value in its domain, and row `(col, v)` has bit `j` set iff
+//! record `j` **contains** `v` (records are sets of alphabet words — the
+//! chip's CAM-match semantics, paper Fig. 1). The schema names those
+//! rows, and the predicate builder lowers named comparisons to the
+//! existing [`Query`] AST:
+//!
+//! ```text
+//! col("city").eq(3).and(col("age").ge(7).not())
+//!   -> And([Attr(row(city,3)), Not(Or([Attr(row(age,7)), ...]))])
+//! ```
+//!
+//! Containment semantics, spelled out: `eq(v)` selects records that
+//! contain `v` (a record can match `eq` for several values of the same
+//! column); `ne(v)` selects records that do *not* contain `v`. Range
+//! comparisons (`ge`, `lt`, ...) OR the rows of every in-domain value
+//! satisfying the comparison — an empty match set lowers to `Or([])`
+//! (no objects), which is correct, while `eq`/`ne` on a value outside
+//! the column's declared domain is a typo until proven otherwise and
+//! returns [`PallasError::InvalidQuery`].
+
+use super::error::{PallasError, Result};
+use crate::bic::query::Query;
+use crate::bic::PAD;
+
+/// One named column: a contiguous block of attribute rows, one per
+/// domain value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Column {
+    name: String,
+    values: Vec<i32>,
+    /// Global attribute index of `values[0]`.
+    offset: usize,
+}
+
+impl Column {
+    /// The column's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The declared domain, in declaration order.
+    pub fn values(&self) -> &[i32] {
+        &self.values
+    }
+
+    /// Global attribute index of the row for `value`, if in the domain.
+    pub fn attr_of(&self, value: i32) -> Option<usize> {
+        self.values.iter().position(|&v| v == value).map(|p| self.offset + p)
+    }
+
+    /// Global attribute indices of every row whose value satisfies `f`.
+    fn attrs_where(&self, f: impl Fn(i32) -> bool) -> Vec<usize> {
+        self.values
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| f(v))
+            .map(|(p, _)| self.offset + p)
+            .collect()
+    }
+}
+
+/// An ordered set of named columns over the record alphabet. Built once
+/// via [`Schema::builder`]; the engine derives its key vector (and the
+/// core geometry's `m`) from it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    cols: Vec<Column>,
+}
+
+impl Schema {
+    /// Start building a schema.
+    pub fn builder() -> SchemaBuilder {
+        SchemaBuilder { cols: Vec::new() }
+    }
+
+    /// Shorthand for a single anonymous-domain column (the common
+    /// "index these key bytes" case).
+    pub fn single(name: impl Into<String>, values: impl IntoIterator<Item = i32>) -> Result<Schema> {
+        Self::builder().column(name, values).build()
+    }
+
+    /// Total attribute rows (the core geometry's `m`).
+    pub fn num_attrs(&self) -> usize {
+        self.cols.iter().map(|c| c.values.len()).sum()
+    }
+
+    /// Number of declared columns.
+    pub fn num_columns(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// The columns, in declaration order.
+    pub fn columns(&self) -> &[Column] {
+        &self.cols
+    }
+
+    /// Look a column up by name.
+    pub fn column(&self, name: &str) -> Option<&Column> {
+        self.cols.iter().find(|c| c.name == name)
+    }
+
+    /// The key vector handed to the indexing core: every column's domain
+    /// values, concatenated in declaration order. Attribute row `i` of
+    /// the built index corresponds to `keys()[i]`.
+    pub fn keys(&self) -> Vec<i32> {
+        self.cols.iter().flat_map(|c| c.values.iter().copied()).collect()
+    }
+
+    /// `(column name, value)` of attribute row `attr` — for labeling
+    /// results and stats.
+    pub fn describe_attr(&self, attr: usize) -> Option<(&str, i32)> {
+        let col = self
+            .cols
+            .iter()
+            .find(|c| (c.offset..c.offset + c.values.len()).contains(&attr))?;
+        Some((col.name.as_str(), col.values[attr - col.offset]))
+    }
+}
+
+/// Builder for [`Schema`]; validation happens at [`SchemaBuilder::build`].
+#[derive(Clone, Debug, Default)]
+pub struct SchemaBuilder {
+    cols: Vec<Column>,
+}
+
+impl SchemaBuilder {
+    /// Declare a column with the given value domain.
+    pub fn column(
+        mut self,
+        name: impl Into<String>,
+        values: impl IntoIterator<Item = i32>,
+    ) -> Self {
+        let offset = self.cols.iter().map(|c| c.values.len()).sum();
+        self.cols.push(Column {
+            name: name.into(),
+            values: values.into_iter().collect(),
+            offset,
+        });
+        self
+    }
+
+    /// Validate and freeze the schema. [`PallasError::Config`] on an
+    /// empty schema, a duplicate column name, an empty or duplicated
+    /// value domain, or a reserved `PAD` value.
+    pub fn build(self) -> Result<Schema> {
+        if self.cols.is_empty() {
+            return Err(PallasError::Config(
+                "schema needs at least one column".into(),
+            ));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for c in &self.cols {
+            if !seen.insert(c.name.as_str()) {
+                return Err(PallasError::Config(format!(
+                    "duplicate column name {:?}",
+                    c.name
+                )));
+            }
+            if c.values.is_empty() {
+                return Err(PallasError::Config(format!(
+                    "column {:?} has an empty value domain",
+                    c.name
+                )));
+            }
+            let mut vals = std::collections::HashSet::new();
+            for &v in &c.values {
+                if v == PAD {
+                    return Err(PallasError::Config(format!(
+                        "column {:?}: {PAD} is the record pad word, not a \
+                         valid key",
+                        c.name
+                    )));
+                }
+                if !vals.insert(v) {
+                    return Err(PallasError::Config(format!(
+                        "column {:?} declares value {v} twice",
+                        c.name
+                    )));
+                }
+            }
+        }
+        Ok(Schema { cols: self.cols })
+    }
+}
+
+/// Start a predicate on the named column: `col("city").eq(3)`.
+pub fn col(name: impl Into<String>) -> ColRef {
+    ColRef { name: name.into() }
+}
+
+/// A named column reference awaiting its comparison.
+#[derive(Clone, Debug)]
+pub struct ColRef {
+    name: String,
+}
+
+impl ColRef {
+    /// Records containing `value` (strict: `value` must be in the
+    /// column's declared domain).
+    pub fn eq(self, value: i32) -> Predicate {
+        Predicate::Eq { col: self.name, value }
+    }
+
+    /// Records *not* containing `value` (strict, like [`ColRef::eq`]).
+    pub fn ne(self, value: i32) -> Predicate {
+        Predicate::Eq { col: self.name, value }.not()
+    }
+
+    /// Records containing any domain value `< value`.
+    pub fn lt(self, value: i32) -> Predicate {
+        Predicate::Cmp { col: self.name, op: CmpOp::Lt, value }
+    }
+
+    /// Records containing any domain value `<= value`.
+    pub fn le(self, value: i32) -> Predicate {
+        Predicate::Cmp { col: self.name, op: CmpOp::Le, value }
+    }
+
+    /// Records containing any domain value `> value`.
+    pub fn gt(self, value: i32) -> Predicate {
+        Predicate::Cmp { col: self.name, op: CmpOp::Gt, value }
+    }
+
+    /// Records containing any domain value `>= value`.
+    pub fn ge(self, value: i32) -> Predicate {
+        Predicate::Cmp { col: self.name, op: CmpOp::Ge, value }
+    }
+
+    /// Records containing any of `values` (values outside the domain
+    /// contribute nothing).
+    pub fn in_set(self, values: impl IntoIterator<Item = i32>) -> Predicate {
+        Predicate::In { col: self.name, values: values.into_iter().collect() }
+    }
+
+    /// Records containing *any* value of this column.
+    pub fn any(self) -> Predicate {
+        Predicate::Any { col: self.name }
+    }
+}
+
+/// Comparison operator of a range predicate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    /// Strictly less than.
+    Lt,
+    /// Less than or equal.
+    Le,
+    /// Strictly greater than.
+    Gt,
+    /// Greater than or equal.
+    Ge,
+}
+
+impl CmpOp {
+    fn matches(self, domain_value: i32, operand: i32) -> bool {
+        match self {
+            CmpOp::Lt => domain_value < operand,
+            CmpOp::Le => domain_value <= operand,
+            CmpOp::Gt => domain_value > operand,
+            CmpOp::Ge => domain_value >= operand,
+        }
+    }
+}
+
+/// A typed boolean predicate over schema columns. Built fluently from
+/// [`col`], lowered to the [`Query`] AST by [`Predicate::lower`] (the
+/// engine does this for you in
+/// [`Engine::select`](crate::engine::Engine::select)).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Predicate {
+    /// Records containing the value (strict domain membership).
+    Eq {
+        /// Column name.
+        col: String,
+        /// The value (must be in the column's domain).
+        value: i32,
+    },
+    /// Records containing any domain value satisfying the comparison.
+    Cmp {
+        /// Column name.
+        col: String,
+        /// Comparison operator.
+        op: CmpOp,
+        /// Right-hand operand.
+        value: i32,
+    },
+    /// Records containing any of the listed values.
+    In {
+        /// Column name.
+        col: String,
+        /// Candidate values (out-of-domain entries contribute nothing).
+        values: Vec<i32>,
+    },
+    /// Records containing any value of the column.
+    Any {
+        /// Column name.
+        col: String,
+    },
+    /// Conjunction (empty = all objects).
+    And(Vec<Predicate>),
+    /// Disjunction (empty = no objects).
+    Or(Vec<Predicate>),
+    /// Negation.
+    Not(Box<Predicate>),
+}
+
+impl Predicate {
+    /// All objects (`And([])`).
+    pub fn all() -> Predicate {
+        Predicate::And(Vec::new())
+    }
+
+    /// No objects (`Or([])`).
+    pub fn none() -> Predicate {
+        Predicate::Or(Vec::new())
+    }
+
+    /// Fluent AND: appends to an existing `And` chain instead of nesting.
+    pub fn and(self, other: Predicate) -> Predicate {
+        match self {
+            Predicate::And(mut xs) => {
+                xs.push(other);
+                Predicate::And(xs)
+            }
+            s => Predicate::And(vec![s, other]),
+        }
+    }
+
+    /// Fluent OR: appends to an existing `Or` chain instead of nesting.
+    pub fn or(self, other: Predicate) -> Predicate {
+        match self {
+            Predicate::Or(mut xs) => {
+                xs.push(other);
+                Predicate::Or(xs)
+            }
+            s => Predicate::Or(vec![s, other]),
+        }
+    }
+
+    /// Fluent NOT.
+    #[allow(clippy::should_implement_trait)]
+    pub fn not(self) -> Predicate {
+        Predicate::Not(Box::new(self))
+    }
+
+    /// Lower to the [`Query`] AST against `schema`.
+    /// [`PallasError::InvalidQuery`] on an unknown column, or on an
+    /// `eq`/`ne` value outside the column's declared domain.
+    pub fn lower(&self, schema: &Schema) -> Result<Query> {
+        let column = |name: &str| -> Result<&Column> {
+            schema.column(name).ok_or_else(|| {
+                PallasError::InvalidQuery(format!(
+                    "unknown column {name:?} (schema has {})",
+                    schema
+                        .columns()
+                        .iter()
+                        .map(Column::name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+        };
+        Ok(match self {
+            Predicate::Eq { col, value } => {
+                let c = column(col)?;
+                let attr = c.attr_of(*value).ok_or_else(|| {
+                    PallasError::InvalidQuery(format!(
+                        "column {col:?} has no value {value} (domain {:?})",
+                        c.values()
+                    ))
+                })?;
+                Query::Attr(attr)
+            }
+            Predicate::Cmp { col, op, value } => {
+                or_of(column(col)?.attrs_where(|v| op.matches(v, *value)))
+            }
+            Predicate::In { col, values } => {
+                or_of(column(col)?.attrs_where(|v| values.contains(&v)))
+            }
+            Predicate::Any { col } => or_of(column(col)?.attrs_where(|_| true)),
+            Predicate::And(xs) => Query::And(
+                xs.iter().map(|p| p.lower(schema)).collect::<Result<_>>()?,
+            ),
+            Predicate::Or(xs) => Query::Or(
+                xs.iter().map(|p| p.lower(schema)).collect::<Result<_>>()?,
+            ),
+            Predicate::Not(inner) => Query::Not(Box::new(inner.lower(schema)?)),
+        })
+    }
+}
+
+/// `Or` of attribute leaves; a single leaf lowers without the wrapper.
+fn or_of(attrs: Vec<usize>) -> Query {
+    if attrs.len() == 1 {
+        Query::Attr(attrs[0])
+    } else {
+        Query::Or(attrs.into_iter().map(Query::Attr).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema::builder()
+            .column("city", [1, 3, 9])
+            .column("age", [0, 7, 12, 30])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn schema_layout_is_contiguous() {
+        let s = schema();
+        assert_eq!(s.num_attrs(), 7);
+        assert_eq!(s.keys(), vec![1, 3, 9, 0, 7, 12, 30]);
+        assert_eq!(s.column("city").unwrap().attr_of(9), Some(2));
+        assert_eq!(s.column("age").unwrap().attr_of(0), Some(3));
+        assert_eq!(s.describe_attr(5), Some(("age", 12)));
+        assert_eq!(s.describe_attr(7), None);
+    }
+
+    #[test]
+    fn builder_rejects_bad_schemas() {
+        let empty = Schema::builder().build();
+        assert!(matches!(empty, Err(PallasError::Config(_))));
+        let dup_col = Schema::builder()
+            .column("a", [1])
+            .column("a", [2])
+            .build();
+        assert!(matches!(dup_col, Err(PallasError::Config(_))));
+        let empty_domain = Schema::builder().column("a", []).build();
+        assert!(matches!(empty_domain, Err(PallasError::Config(_))));
+        let dup_value = Schema::builder().column("a", [5, 5]).build();
+        assert!(matches!(dup_value, Err(PallasError::Config(_))));
+        let pad = Schema::builder().column("a", [PAD]).build();
+        assert!(matches!(pad, Err(PallasError::Config(_))));
+    }
+
+    #[test]
+    fn predicates_lower_to_expected_queries() {
+        let s = schema();
+        // The ISSUE's canonical example shape.
+        let p = col("city").eq(3).and(col("age").ge(7).not());
+        let q = p.lower(&s).unwrap();
+        assert_eq!(
+            q,
+            Query::And(vec![
+                Query::Attr(1),
+                Query::Not(Box::new(Query::Or(vec![
+                    Query::Attr(4),
+                    Query::Attr(5),
+                    Query::Attr(6),
+                ]))),
+            ])
+        );
+        // Single-match ranges drop the Or wrapper.
+        assert_eq!(
+            col("age").lt(7).lower(&s).unwrap(),
+            Query::Attr(3)
+        );
+        // Empty ranges are "no objects", not errors.
+        assert_eq!(
+            col("city").gt(100).lower(&s).unwrap(),
+            Query::Or(vec![])
+        );
+        assert_eq!(
+            col("age").in_set([0, 30, 999]).lower(&s).unwrap(),
+            Query::Or(vec![Query::Attr(3), Query::Attr(6)])
+        );
+        assert_eq!(
+            col("city").any().lower(&s).unwrap(),
+            Query::Or(vec![Query::Attr(0), Query::Attr(1), Query::Attr(2)])
+        );
+        assert_eq!(
+            col("city").ne(1).lower(&s).unwrap(),
+            Query::Not(Box::new(Query::Attr(0)))
+        );
+    }
+
+    #[test]
+    fn strict_lowering_errors_are_invalid_query() {
+        let s = schema();
+        assert!(matches!(
+            col("country").eq(1).lower(&s),
+            Err(PallasError::InvalidQuery(_))
+        ));
+        assert!(matches!(
+            col("city").eq(2).lower(&s),
+            Err(PallasError::InvalidQuery(_))
+        ));
+    }
+}

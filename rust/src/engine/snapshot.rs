@@ -1,0 +1,107 @@
+//! Consistent point-in-time read views.
+//!
+//! `PinnedView` (crate-internal) is the owned chunk capture every
+//! engine query tier evaluates over: taken under the backend lock in
+//! O(chunks), then read
+//! without any lock — flushed segments are *pinned* by `Arc` (a later
+//! flush or compaction replaces the store's live list but cannot touch
+//! the pinned files' in-memory rows), and memtable batches are shared
+//! (in-memory backend) or cloned compressed (durable backend, bounded
+//! by `flush_batches`). This keeps ingest acks from ever waiting on a
+//! long query.
+//!
+//! [`Snapshot`] is that capture plus the schema, handed to the user:
+//! queries against it see exactly the objects that were acknowledged at
+//! capture time, no matter how much the engine ingests, flushes, or
+//! compacts afterwards.
+
+use std::sync::Arc;
+
+use super::error::Result;
+use super::exec::{self, RowChunk};
+use super::schema::{Predicate, Schema};
+use crate::bic::bitmap::{Bitmap, BitmapIndex};
+use crate::bic::codec::CodecBitmap;
+use crate::bic::query::{Query, QueryError};
+use crate::store::segment::Segment;
+
+/// An owned capture of the chunk tiling at one instant: pinned segments
+/// first, then memtable batches. Mirrors `Store::chunks` (the borrowed
+/// tiling rule) with ownership instead of borrows.
+pub(crate) struct PinnedView {
+    /// Pinned flushed segments (rows stay codec-compressed).
+    pub segs: Vec<Arc<Segment>>,
+    /// Memtable batches, shared or cloned in their compressed encoding.
+    pub mem: Vec<Arc<Vec<CodecBitmap>>>,
+    /// First global object id of `mem[0]` (= flushed segment bits).
+    pub mem_base: usize,
+    /// Total objects covered.
+    pub nbits: usize,
+}
+
+impl PinnedView {
+    /// The chunk tiling as borrow views into the pinned data.
+    pub fn views(&self) -> Vec<RowChunk<'_>> {
+        let mut out: Vec<RowChunk<'_>> = self
+            .segs
+            .iter()
+            .map(|s| RowChunk { base: s.base, rows: &s.rows })
+            .collect();
+        let mut off = self.mem_base;
+        for batch in &self.mem {
+            out.push(RowChunk { base: off, rows: batch });
+            off += batch.first().map_or(0, CodecBitmap::len);
+        }
+        out
+    }
+}
+
+/// An immutable, consistent view over the engine's index at capture
+/// time. Create with [`Engine::snapshot`](crate::engine::Engine::snapshot).
+pub struct Snapshot {
+    pub(crate) schema: Arc<Schema>,
+    pub(crate) view: PinnedView,
+}
+
+impl Snapshot {
+    /// Attribute rows per object.
+    pub fn num_attrs(&self) -> usize {
+        self.schema.num_attrs()
+    }
+
+    /// Objects acknowledged at capture time.
+    pub fn num_objects(&self) -> usize {
+        self.view.nbits
+    }
+
+    /// The schema the snapshot answers predicates against.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Evaluate a [`Query`] over the snapshot.
+    pub fn query(&self, q: &Query) -> Result<Bitmap> {
+        let m = self.num_attrs();
+        for a in q.attrs() {
+            if a >= m {
+                return Err(QueryError::AttrOutOfRange(a, m).into());
+            }
+        }
+        Ok(exec::eval_chunks(&self.view.views(), self.view.nbits, q))
+    }
+
+    /// Lower a [`Predicate`] against the snapshot's schema and evaluate.
+    pub fn select(&self, p: &Predicate) -> Result<Bitmap> {
+        self.query(&p.lower(&self.schema)?)
+    }
+
+    /// Materialize the whole index at capture time (testing/reference).
+    pub fn to_index(&self) -> BitmapIndex {
+        let chunks = self.view.views();
+        BitmapIndex::from_rows(
+            (0..self.num_attrs())
+                .map(|a| exec::assemble_row(&chunks, a, self.view.nbits))
+                .collect(),
+        )
+    }
+}

@@ -7,6 +7,7 @@ pub mod baselines;
 pub mod bic;
 pub mod cli_app;
 pub mod coordinator;
+pub mod engine;
 pub mod experiments;
 pub mod power;
 pub mod runtime;
@@ -15,3 +16,4 @@ pub mod store;
 pub mod substrate;
 
 pub use cli_app::cli_main;
+pub use engine::{Engine, EngineBuilder, PallasError};

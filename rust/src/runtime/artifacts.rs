@@ -15,7 +15,12 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::engine::error::{PallasError, Result};
+
+/// A malformed manifest is corrupt artifact metadata.
+fn corrupt(detail: String) -> PallasError {
+    PallasError::Corrupt { what: "artifact manifest", detail }
+}
 
 /// One BIC model artifact (fused or two-step): shapes + file.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -67,11 +72,11 @@ impl Manifest {
     /// relative to `dir`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&path).with_context(|| {
-            format!(
-                "reading {} (run `make artifacts` first?)",
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            PallasError::Runtime(format!(
+                "reading {} (run `make artifacts` first?): {e}",
                 path.display()
-            )
+            ))
         })?;
         Self::parse(&text, dir)
     }
@@ -88,19 +93,28 @@ impl Manifest {
             let kind = parts.next().unwrap();
             let kv: HashMap<&str, &str> = parts
                 .map(|p| {
-                    p.split_once('=').with_context(|| {
-                        format!("manifest line {}: bad token {p:?}", lineno + 1)
+                    p.split_once('=').ok_or_else(|| {
+                        corrupt(format!(
+                            "manifest line {}: bad token {p:?}",
+                            lineno + 1
+                        ))
                     })
                 })
                 .collect::<Result<_>>()?;
             let get = |k: &str| -> Result<&str> {
-                kv.get(k).copied().with_context(|| {
-                    format!("manifest line {}: missing {k}=", lineno + 1)
+                kv.get(k).copied().ok_or_else(|| {
+                    corrupt(format!(
+                        "manifest line {}: missing {k}=",
+                        lineno + 1
+                    ))
                 })
             };
             let get_num = |k: &str| -> Result<usize> {
-                get(k)?.parse::<usize>().with_context(|| {
-                    format!("manifest line {}: bad number for {k}", lineno + 1)
+                get(k)?.parse::<usize>().map_err(|_| {
+                    corrupt(format!(
+                        "manifest line {}: bad number for {k}",
+                        lineno + 1
+                    ))
                 })
             };
             match kind {
@@ -115,12 +129,12 @@ impl Manifest {
                         b: if kind == "coalesce" { get_num("b")? } else { 1 },
                     };
                     if v.nw != v.n.div_ceil(32) {
-                        bail!(
+                        return Err(corrupt(format!(
                             "manifest line {}: nw={} inconsistent with n={}",
                             lineno + 1,
                             v.nw,
                             v.n
-                        );
+                        )));
                     }
                     match kind {
                         "bic" => out.bic.push(v),
@@ -135,10 +149,12 @@ impl Manifest {
                     m: get_num("m")?,
                     nw: get_num("nw")?,
                 }),
-                other => bail!(
-                    "manifest line {}: unknown artifact kind {other:?}",
-                    lineno + 1
-                ),
+                other => {
+                    return Err(corrupt(format!(
+                        "manifest line {}: unknown artifact kind {other:?}",
+                        lineno + 1
+                    )))
+                }
             }
         }
         Ok(out)

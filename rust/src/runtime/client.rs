@@ -3,10 +3,14 @@
 //! Interchange is HLO *text* — jax >= 0.5 serialized protos carry 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+//!
+//! All entry points return the typed
+//! [`PallasError`](crate::engine::PallasError): PJRT/compilation
+//! failures are `Runtime` errors.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::engine::error::{PallasError, Result};
 
 /// Thin wrapper over [`xla::PjRtClient`] that owns artifact compilation.
 pub struct Runtime {
@@ -17,7 +21,9 @@ impl Runtime {
     /// Create a CPU PJRT client (the only backend in this environment;
     /// TPU execution of the Mosaic path is compile-only — DESIGN.md §6).
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| {
+            PallasError::Runtime(format!("creating PJRT CPU client: {e}"))
+        })?;
         Ok(Self { client })
     }
 
@@ -34,14 +40,24 @@ impl Runtime {
         &self,
         path: &Path,
     ) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let path_str = path.to_str().ok_or_else(|| {
+            PallasError::Runtime(format!(
+                "non-utf8 artifact path {}",
+                path.display()
+            ))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(
+            |e| {
+                PallasError::Runtime(format!(
+                    "parsing HLO text {}: {e}",
+                    path.display()
+                ))
+            },
+        )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))
+        self.client.compile(&comp).map_err(|e| {
+            PallasError::Runtime(format!("compiling {}: {e}", path.display()))
+        })
     }
 }
 

@@ -1,13 +1,20 @@
 //! Typed executables over the raw PJRT interface: marshal records/keys in,
 //! packed bitmap words out. This is the entire request-path surface of the
 //! AOT compute artifacts — no Python anywhere.
-
-use anyhow::{ensure, Context, Result};
+//!
+//! Errors are typed ([`PallasError`]): batch-shape violations are
+//! `Ingest`, variant misuse is `Config`, PJRT dispatch failures are
+//! `Runtime`.
 
 use super::artifacts::{BicVariant, QueryVariant};
 use super::client::Runtime;
 use crate::bic::bitmap::BitmapIndex;
 use crate::bic::PAD;
+use crate::engine::error::{PallasError, Result};
+
+fn runtime_err(what: &str, e: impl std::fmt::Display) -> PallasError {
+    PallasError::Runtime(format!("{what}: {e}"))
+}
 
 /// A compiled BIC model (fused, two-step, or coalesced variant).
 pub struct BicExecutable {
@@ -30,7 +37,11 @@ impl BicExecutable {
     /// (padded here); `keys`: exactly `m`. Returns the `M x N` bitmap index
     /// decoded from the artifact's packed `u32[m, nw]` output.
     pub fn index(&self, records: &[Vec<i32>], keys: &[i32]) -> Result<BitmapIndex> {
-        ensure!(self.variant.b == 1, "coalesced variant: use index_coalesced");
+        if self.variant.b != 1 {
+            return Err(PallasError::Config(
+                "coalesced variant: use index_coalesced".into(),
+            ));
+        }
         let packed = self.run_raw(&self.flatten_records(records)?, keys)?;
         Ok(BitmapIndex::from_packed(self.variant.m, self.variant.n, &packed))
     }
@@ -42,8 +53,15 @@ impl BicExecutable {
         keys: &[i32],
     ) -> Result<Vec<BitmapIndex>> {
         let b = self.variant.b;
-        ensure!(b > 1, "not a coalesced variant");
-        ensure!(batches.len() == b, "expected exactly {b} batches");
+        if b <= 1 {
+            return Err(PallasError::Config("not a coalesced variant".into()));
+        }
+        if batches.len() != b {
+            return Err(PallasError::Ingest(format!(
+                "expected exactly {b} batches, got {}",
+                batches.len()
+            )));
+        }
         let mut flat = Vec::with_capacity(b * self.variant.n * self.variant.w);
         for batch in batches {
             flat.extend_from_slice(&self.flatten_records(batch)?);
@@ -64,18 +82,20 @@ impl BicExecutable {
     /// Flatten + pad records to the artifact's static `[n, w]` shape.
     fn flatten_records(&self, records: &[Vec<i32>]) -> Result<Vec<i32>> {
         let (n, w) = (self.variant.n, self.variant.w);
-        ensure!(
-            records.len() <= n,
-            "batch of {} records exceeds variant capacity {n}",
-            records.len()
-        );
+        if records.len() > n {
+            return Err(PallasError::Ingest(format!(
+                "batch of {} records exceeds variant capacity {n}",
+                records.len()
+            )));
+        }
         let mut flat = vec![PAD; n * w];
         for (j, rec) in records.iter().enumerate() {
-            ensure!(
-                rec.len() <= w,
-                "record {j} has {} words, variant width is {w}",
-                rec.len()
-            );
+            if rec.len() > w {
+                return Err(PallasError::Ingest(format!(
+                    "record {j} has {} words, variant width is {w}",
+                    rec.len()
+                )));
+            }
             flat[j * w..j * w + rec.len()].copy_from_slice(rec);
         }
         Ok(flat)
@@ -84,8 +104,18 @@ impl BicExecutable {
     /// Raw dispatch: flat records + keys -> flat packed words.
     fn run_raw(&self, flat_records: &[i32], keys: &[i32]) -> Result<Vec<u32>> {
         let v = &self.variant;
-        ensure!(keys.len() == v.m, "expected {} keys, got {}", v.m, keys.len());
-        ensure!(keys.iter().all(|&k| k != PAD), "PAD is not a valid key");
+        if keys.len() != v.m {
+            return Err(PallasError::Ingest(format!(
+                "expected {} keys, got {}",
+                v.m,
+                keys.len()
+            )));
+        }
+        if keys.iter().any(|&k| k == PAD) {
+            return Err(PallasError::Ingest(
+                "PAD is not a valid key".into(),
+            ));
+        }
         let rec_dims: Vec<i64> = if v.b == 1 {
             vec![v.n as i64, v.w as i64]
         } else {
@@ -93,23 +123,28 @@ impl BicExecutable {
         };
         let recs = xla::Literal::vec1(flat_records)
             .reshape(&rec_dims)
-            .context("reshaping records literal")?;
+            .map_err(|e| runtime_err("reshaping records literal", e))?;
         let keys_lit = xla::Literal::vec1(keys);
         let result = self
             .exe
             .execute::<xla::Literal>(&[recs, keys_lit])
-            .context("PJRT execute")?[0][0]
+            .map_err(|e| runtime_err("PJRT execute", e))?[0][0]
             .to_literal_sync()
-            .context("fetching result literal")?;
+            .map_err(|e| runtime_err("fetching result literal", e))?;
         // Artifacts are lowered with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let words = out.to_vec::<u32>().context("decoding u32 output")?;
-        ensure!(
-            words.len() == v.b * v.m * v.nw,
-            "output length {} != b*m*nw = {}",
-            words.len(),
-            v.b * v.m * v.nw
-        );
+        let out = result
+            .to_tuple1()
+            .map_err(|e| runtime_err("unwrapping result tuple", e))?;
+        let words = out
+            .to_vec::<u32>()
+            .map_err(|e| runtime_err("decoding u32 output", e))?;
+        if words.len() != v.b * v.m * v.nw {
+            return Err(PallasError::Runtime(format!(
+                "output length {} != b*m*nw = {}",
+                words.len(),
+                v.b * v.m * v.nw
+            )));
+        }
         Ok(words)
     }
 }
@@ -144,13 +179,30 @@ impl QueryExecutable {
         exclude: &[bool],
     ) -> Result<Vec<u32>> {
         let v = &self.variant;
-        ensure!(bi.num_attrs() == v.m, "index has {} attrs, variant {}", bi.num_attrs(), v.m);
-        ensure!(include.len() == v.m && exclude.len() == v.m, "mask width");
+        if bi.num_attrs() != v.m {
+            return Err(PallasError::InvalidQuery(format!(
+                "index has {} attrs, variant {}",
+                bi.num_attrs(),
+                v.m
+            )));
+        }
+        if include.len() != v.m || exclude.len() != v.m {
+            return Err(PallasError::InvalidQuery(format!(
+                "mask width must be {} (include {}, exclude {})",
+                v.m,
+                include.len(),
+                exclude.len()
+            )));
+        }
         let packed = bi.to_packed();
-        ensure!(packed.len() == v.m * v.nw, "packed index shape mismatch");
+        if packed.len() != v.m * v.nw {
+            return Err(PallasError::Runtime(
+                "packed index shape mismatch".into(),
+            ));
+        }
         let bi_lit = xla::Literal::vec1(&packed)
             .reshape(&[v.m as i64, v.nw as i64])
-            .context("reshaping index literal")?;
+            .map_err(|e| runtime_err("reshaping index literal", e))?;
         let to_mask = |mask: &[bool]| -> xla::Literal {
             let v: Vec<i32> = mask.iter().map(|&b| b as i32).collect();
             xla::Literal::vec1(&v)
@@ -158,10 +210,17 @@ impl QueryExecutable {
         let result = self
             .exe
             .execute::<xla::Literal>(&[bi_lit, to_mask(include), to_mask(exclude)])
-            .context("PJRT execute")?[0][0]
-            .to_literal_sync()?;
+            .map_err(|e| runtime_err("PJRT execute", e))?[0][0]
+            .to_literal_sync()
+            .map_err(PallasError::from)?;
         let out = result.to_tuple1()?.to_vec::<u32>()?;
-        ensure!(out.len() == v.nw, "query output length");
+        if out.len() != v.nw {
+            return Err(PallasError::Runtime(format!(
+                "query output length {} != nw = {}",
+                out.len(),
+                v.nw
+            )));
+        }
         Ok(out)
     }
 }

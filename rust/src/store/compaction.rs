@@ -84,8 +84,9 @@ impl Store {
         )?;
 
         // Committed: the inputs are tombstoned (unreferenced); unlink
-        // them now, or recovery's orphan sweep will.
-        let merged = Segment { id, file, base, nbits, bytes, rows };
+        // them now, or recovery's orphan sweep will. Pinned snapshots
+        // holding the old `Arc<Segment>`s keep reading them from memory.
+        let merged = Arc::new(Segment { id, file, base, nbits, bytes, rows });
         self.segments.splice(pick..pick + 2, [merged]);
         self.next_segment_id = id + 1;
         self.note_segment_bytes(bytes);

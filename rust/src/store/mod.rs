@@ -41,6 +41,7 @@ pub mod wal;
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::bic::bitmap::Bitmap;
 use crate::bic::codec::{CodecBitmap, CompressedIndex};
@@ -87,8 +88,10 @@ pub struct Store {
     pub(crate) dir: PathBuf,
     pub(crate) cfg: StoreConfig,
     pub(crate) num_attrs: usize,
-    /// Live segments, ordered by `base`; bases are contiguous.
-    pub(crate) segments: Vec<Segment>,
+    /// Live segments, ordered by `base`; bases are contiguous. `Arc` so
+    /// an [`crate::engine::Snapshot`] can pin the segment set it was
+    /// taken over while flushes/compactions replace the live list.
+    pub(crate) segments: Vec<Arc<Segment>>,
     pub(crate) next_segment_id: u64,
     pub(crate) wal_gen: u64,
     wal: Wal,
@@ -183,7 +186,7 @@ impl Store {
                 });
             }
             expected_base += seg.nbits;
-            segments.push(seg);
+            segments.push(Arc::new(seg));
         }
 
         // Tombstone cleanup: anything with a store-owned name that the
@@ -359,7 +362,8 @@ impl Store {
         let _ = fs::remove_file(old_wal);
         self.wal_gen = new_gen;
         self.next_segment_id = id + 1;
-        self.segments.push(Segment { id, file, base, nbits, bytes, rows });
+        self.segments
+            .push(Arc::new(Segment { id, file, base, nbits, bytes, rows }));
         self.memtable.clear();
         self.memtable_bits = 0;
         self.segment_bytes_written += bytes;
@@ -369,6 +373,27 @@ impl Store {
     /// Snapshot view for query evaluation.
     pub fn reader(&self) -> StoreReader<'_> {
         StoreReader::new(self)
+    }
+
+    /// The chunk tiling of the global object space: every live segment
+    /// at its base, then the memtable batches at theirs. This is the
+    /// *single source* of the tiling rule — the reader and every engine
+    /// query tier consume it, and `Engine::snapshot` pins the same
+    /// layout with `Arc` clones. Change the rule here (e.g. zone maps,
+    /// non-contiguous bases) and every consumer follows.
+    pub(crate) fn chunks(&self) -> Vec<crate::engine::exec::RowChunk<'_>> {
+        use crate::engine::exec::RowChunk;
+        let mut out: Vec<RowChunk<'_>> = self
+            .segments
+            .iter()
+            .map(|s| RowChunk { base: s.base, rows: &s.rows })
+            .collect();
+        let mut off = self.segment_bits();
+        for batch in &self.memtable {
+            out.push(RowChunk { base: off, rows: batch });
+            off += batch.first().map_or(0, CodecBitmap::len);
+        }
+        out
     }
 
     /// The manifest entries for the current live segment set.

@@ -1,18 +1,23 @@
 //! Query evaluation over the durable store: memtable + segments, without
 //! ever materializing a fully decompressed index.
 //!
-//! Each attribute row the query references is assembled once into a
-//! global-length accumulator by OR-merging the per-segment rows at their
-//! object offsets — run by run, through the streaming `or_into_at`
-//! kernels (a WAH fill lands as one word-span write, roaring dense
-//! chunks move word-shifted). Rows the query never touches are never
-//! assembled; nothing else is decompressed.
+//! Rows the query only references inside a top-level conjunction are
+//! never assembled at all: the AND/ANDNOT offset kernels
+//! (`CodecBitmap::and_into_at` / `and_not_into_at`) fold each segment's
+//! compressed row into the accumulator at the segment's object offset —
+//! a WAH fill lands as one word-span write, roaring dense chunks move
+//! word-shifted. Rows that must be assembled (`Or` terms, single leaves)
+//! OR-merge per segment through the streaming `or_into_at` kernels. The
+//! assemble-then-AND path is retained as
+//! [`StoreReader::eval_assembled`], the differential reference the
+//! property tests pin [`StoreReader::eval`] against bit-for-bit.
 
 use std::collections::HashMap;
 
 use super::Store;
 use crate::bic::bitmap::{Bitmap, BitmapIndex};
 use crate::bic::query::{Query, QueryError};
+use crate::engine::exec::{self, RowChunk};
 
 /// A read view over a [`Store`] (memtable + live segments at the time
 /// of the borrow).
@@ -25,36 +30,52 @@ impl<'a> StoreReader<'a> {
         Self { store }
     }
 
+    /// Attribute rows per object (the store's schema width).
     #[inline]
     pub fn num_attrs(&self) -> usize {
         self.store.num_attrs
     }
 
+    /// Total objects across segments + memtable.
     #[inline]
     pub fn num_objects(&self) -> usize {
         self.store.num_objects()
     }
 
+    /// The chunk tiling of the global object space (the store's single
+    /// tiling rule — see [`Store`]'s `chunks`).
+    fn chunks(&self) -> Vec<RowChunk<'_>> {
+        self.store.chunks()
+    }
+
     /// Assemble attribute `attr`'s global row: every segment's row OR'd
     /// in at its base, then the memtable batches at theirs.
-    pub fn assemble_row(&self, attr: usize) -> Bitmap {
-        assert!(attr < self.num_attrs(), "attr {attr} out of range");
-        let mut acc = Bitmap::zeros(self.num_objects());
-        for seg in &self.store.segments {
-            seg.rows[attr].or_into_at(&mut acc, seg.base);
+    pub fn assemble_row(&self, attr: usize) -> Result<Bitmap, QueryError> {
+        if attr >= self.num_attrs() {
+            return Err(QueryError::AttrOutOfRange(attr, self.num_attrs()));
         }
-        let mut off = self.store.segment_bits();
-        for batch in &self.store.memtable {
-            batch[attr].or_into_at(&mut acc, off);
-            off += batch[attr].len();
-        }
-        acc
+        Ok(exec::assemble_row(&self.chunks(), attr, self.num_objects()))
     }
 
     /// Evaluate a query spanning memtable + segments. Result-identical
-    /// to `Query::eval` over [`StoreReader::to_index`] (the property
-    /// tests pin this), but only the referenced rows are assembled.
+    /// to [`StoreReader::eval_assembled`] (the property tests pin this),
+    /// but conjunction terms fold segment-by-segment through the offset
+    /// AND/ANDNOT kernels and only `Or`/leaf rows are assembled.
     pub fn eval(&self, q: &Query) -> Result<Bitmap, QueryError> {
+        let m = self.num_attrs();
+        for a in q.attrs() {
+            if a >= m {
+                return Err(QueryError::AttrOutOfRange(a, m));
+            }
+        }
+        Ok(exec::eval_chunks(&self.chunks(), self.num_objects(), q))
+    }
+
+    /// The assemble-then-AND reference path: every referenced row is
+    /// assembled to full length first, then the query evaluates over the
+    /// assembled rows. Retained as the differential baseline for
+    /// [`StoreReader::eval`]; queries should use `eval`.
+    pub fn eval_assembled(&self, q: &Query) -> Result<Bitmap, QueryError> {
         let m = self.num_attrs();
         let attrs = q.attrs(); // sorted, deduplicated
         for &a in &attrs {
@@ -71,10 +92,13 @@ impl<'a> StoreReader<'a> {
         }
         let map: HashMap<usize, usize> =
             attrs.iter().enumerate().map(|(dense, &a)| (a, dense)).collect();
-        let rows: Vec<Bitmap> =
-            attrs.iter().map(|&a| self.assemble_row(a)).collect();
+        let chunks = self.chunks();
+        let rows: Vec<Bitmap> = attrs
+            .iter()
+            .map(|&a| exec::assemble_row(&chunks, a, self.num_objects()))
+            .collect();
         let bi = BitmapIndex::from_rows(rows);
-        let dense_q = remap(q, &map);
+        let dense_q = q.remap(&map);
         Ok(dense_q.eval(&bi).expect("remapped attrs are dense and in range"))
     }
 
@@ -82,20 +106,11 @@ impl<'a> StoreReader<'a> {
     /// differential reference for tests; queries should go through
     /// [`StoreReader::eval`].
     pub fn to_index(&self) -> BitmapIndex {
-        let rows =
-            (0..self.num_attrs()).map(|a| self.assemble_row(a)).collect();
+        let chunks = self.chunks();
+        let rows = (0..self.num_attrs())
+            .map(|a| exec::assemble_row(&chunks, a, self.num_objects()))
+            .collect();
         BitmapIndex::from_rows(rows)
-    }
-}
-
-/// Rewrite a query's attribute ids through `map` (total on the query's
-/// attrs by construction).
-fn remap(q: &Query, map: &HashMap<usize, usize>) -> Query {
-    match q {
-        Query::Attr(a) => Query::Attr(map[a]),
-        Query::And(xs) => Query::And(xs.iter().map(|x| remap(x, map)).collect()),
-        Query::Or(xs) => Query::Or(xs.iter().map(|x| remap(x, map)).collect()),
-        Query::Not(inner) => Query::Not(Box::new(remap(inner, map))),
     }
 }
 
@@ -110,7 +125,7 @@ mod tests {
             .or(Query::attr(7).not())
             .and(Query::And(vec![]));
         let map: HashMap<usize, usize> = [(3, 0), (7, 1)].into_iter().collect();
-        let r = remap(&q, &map);
+        let r = q.remap(&map);
         assert_eq!(r.attrs(), vec![0, 1]);
         assert_eq!(q.op_count(), r.op_count());
     }

@@ -1,0 +1,372 @@
+//! Engine facade properties: the whole session API — ingest, flush,
+//! durable reopen, planned queries, snapshots, typed errors — driven
+//! exclusively through `EngineBuilder`.
+//!
+//! The headline property: `Engine::query` is **bit-identical** across
+//! all four execution choices (raw, compressed, sharded, store-backed)
+//! on all three workload content distributions, so the planner can pick
+//! any tier on cost alone.
+
+use std::fs;
+use std::path::PathBuf;
+
+use sotb_bic::bic::{BicConfig, BicCore, Bitmap, BitmapIndex, Codec, Query};
+use sotb_bic::coordinator::{ContentDist, WorkloadGen};
+use sotb_bic::engine::{
+    col, CodecPolicy, CompactionMode, Engine, EngineBuilder, ExecPath,
+    ExecPolicy, PallasError, Schema, ShardPolicy,
+};
+
+const CFG: BicConfig = BicConfig { n_records: 64, w_words: 8, m_keys: 8 };
+const KEYS: [i32; 8] = [2, 5, 11, 23, 77, 130, 200, 251];
+
+fn schema() -> Schema {
+    Schema::single("byte", KEYS).expect("valid schema")
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("bic-engine-props-{}-{tag}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn builder() -> EngineBuilder {
+    Engine::builder(schema())
+        .batch_records(CFG.n_records)
+        .record_words(CFG.w_words)
+}
+
+/// `k` batches of records under `dist` (keys come from the schema, not
+/// the workload generator).
+fn batches(dist: ContentDist, seed: u64, k: usize) -> Vec<Vec<Vec<i32>>> {
+    let mut g = WorkloadGen::new(CFG, dist, seed);
+    (0..k).map(|i| g.batch_at(i as f64).records).collect()
+}
+
+/// Golden-model replay of the engine's ingest: index every batch with
+/// the schema keys and concatenate.
+fn reference(batch_records: &[Vec<Vec<i32>>]) -> BitmapIndex {
+    let mut core = BicCore::new(CFG);
+    let n = batch_records.len() * CFG.n_records;
+    let mut rows = vec![Bitmap::zeros(n); CFG.m_keys];
+    for (b, records) in batch_records.iter().enumerate() {
+        let bi = core.index(records, &KEYS);
+        for (a, row) in rows.iter_mut().enumerate() {
+            row.or_at(bi.row(a), b * CFG.n_records);
+        }
+    }
+    BitmapIndex::from_rows(rows)
+}
+
+fn query_corpus() -> Vec<Query> {
+    vec![
+        Query::attr(1).and(Query::attr(3)).and(Query::attr(4).not()),
+        Query::attr(0).or(Query::attr(2).not()),
+        Query::And(vec![]),
+        Query::Or(vec![]),
+        Query::attr(5).not().not(),
+        Query::attr(0)
+            .and(Query::attr(1).or(Query::attr(2)))
+            .and(Query::attr(3).not()),
+        Query::Or(vec![
+            Query::attr(4),
+            Query::And(vec![Query::attr(0), Query::attr(5)]),
+        ]),
+        Query::And(vec![Query::attr(6).not(), Query::attr(7).not()]),
+    ]
+}
+
+#[test]
+fn query_is_bit_identical_across_all_four_paths() {
+    for (tag, dist) in [
+        ("uniform", ContentDist::Uniform),
+        ("zipf", ContentDist::Zipf { s: 1.2 }),
+        ("clustered", ContentDist::Clustered { spread: 8 }),
+    ] {
+        let dir = tmpdir(&format!("paths-{tag}"));
+        let engine = builder()
+            .durable(&dir)
+            .flush_batches(3) // 10 batches -> 3 segments + 1 memtable
+            .build()
+            .expect("build");
+        let data = batches(dist, 0xBEEF + tag.len() as u64, 10);
+        engine.ingest_batches(&data).expect("ingest");
+        let expect = reference(&data);
+
+        for (qi, q) in query_corpus().iter().enumerate() {
+            let want = q.eval(&expect).expect("reference eval");
+            for path in ExecPath::ALL {
+                assert_eq!(
+                    engine.query_via(q, path).expect("query"),
+                    want,
+                    "{tag}: query {qi} on {path:?}"
+                );
+            }
+            // The planner's own choice must agree too.
+            assert_eq!(
+                engine.query(q).expect("planned query"),
+                want,
+                "{tag}: query {qi} planned"
+            );
+        }
+        let stats = engine.close().expect("close");
+        assert!(stats.queries_total() > 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn forced_codecs_stay_bit_identical_across_paths() {
+    for codec in Codec::ALL {
+        let dir = tmpdir(&format!("codec-{codec:?}"));
+        let engine = builder()
+            .durable(&dir)
+            .flush_batches(2)
+            .codec(CodecPolicy::Forced(codec))
+            .build()
+            .expect("build");
+        let data = batches(ContentDist::Clustered { spread: 16 }, 0xC0, 7);
+        engine.ingest_batches(&data).expect("ingest");
+        let expect = reference(&data);
+        let q = Query::attr(1).and(Query::attr(3)).and(Query::attr(5).not());
+        let want = q.eval(&expect).unwrap();
+        for path in ExecPath::ALL {
+            assert_eq!(
+                engine.query_via(&q, path).unwrap(),
+                want,
+                "{codec:?} on {path:?}"
+            );
+        }
+        engine.close().expect("close");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn ingest_flush_reopen_roundtrip_through_the_facade_only() {
+    let dir = tmpdir("roundtrip");
+    let data = batches(ContentDist::Zipf { s: 1.3 }, 0x5EED, 11);
+    let expect = reference(&data);
+
+    // Session 1: ingest one batch at a time, auto-flush every 4, close
+    // (which flushes the tail).
+    let engine =
+        builder().durable(&dir).flush_batches(4).build().expect("create");
+    for records in &data {
+        let receipt = engine.ingest(records).expect("ingest");
+        assert!(receipt.durable);
+        assert_eq!(receipt.objects, CFG.n_records);
+    }
+    let stats = engine.close().expect("close");
+    assert_eq!(stats.batches_ingested, 11);
+
+    // Session 2: reopen the same directory through the builder; the
+    // close-flush means everything is in segments.
+    let engine =
+        builder().durable(&dir).flush_batches(4).build().expect("reopen");
+    let stats = engine.stats();
+    assert_eq!(stats.objects, 11 * CFG.n_records);
+    assert_eq!(stats.memtable_batches, 0);
+    assert!(stats.segments >= 1);
+    assert_eq!(engine.snapshot().to_index(), expect, "recovered index");
+    for (qi, q) in query_corpus().iter().enumerate() {
+        assert_eq!(
+            engine.query(q).expect("query"),
+            q.eval(&expect).expect("reference"),
+            "reopened query {qi}"
+        );
+    }
+    engine.close().expect("close 2");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_pins_its_world_against_ingest_flush_and_compaction() {
+    let dir = tmpdir("snapshot");
+    let engine = builder()
+        .durable(&dir)
+        .flush_batches(1) // every batch becomes a segment
+        .max_segments(2)
+        .compaction(CompactionMode::Foreground)
+        .build()
+        .expect("build");
+    let head = batches(ContentDist::Uniform, 0xA0, 3);
+    engine.ingest_batches(&head).expect("ingest head");
+    let snap = engine.snapshot();
+    let frozen = snap.to_index();
+    assert_eq!(frozen, reference(&head));
+
+    // Later ingest triggers flushes and foreground compactions that
+    // tombstone + unlink the very segment files the snapshot pinned.
+    let tail = batches(ContentDist::Uniform, 0xA1, 5);
+    engine.ingest_batches(&tail).expect("ingest tail");
+    assert_eq!(engine.num_objects(), 8 * CFG.n_records);
+    assert_eq!(snap.num_objects(), 3 * CFG.n_records);
+    assert_eq!(snap.to_index(), frozen, "snapshot view must not move");
+    let q = Query::attr(2).and(Query::attr(6).not());
+    assert_eq!(
+        snap.query(&q).expect("snapshot query"),
+        q.eval(&frozen).expect("reference"),
+    );
+    engine.close().expect("close");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn in_memory_engine_matches_reference_and_shards_deterministically() {
+    let engine = builder()
+        .workers(4)
+        .shard_policy(ShardPolicy::Always)
+        .build()
+        .expect("build");
+    let data = batches(ContentDist::Clustered { spread: 12 }, 0x11, 6);
+    engine.ingest_batches(&data).expect("ingest");
+    let expect = reference(&data);
+    for (qi, q) in query_corpus().iter().enumerate() {
+        let want = q.eval(&expect).unwrap();
+        for path in [ExecPath::Raw, ExecPath::Compressed, ExecPath::Sharded] {
+            assert_eq!(
+                engine.query_via(q, path).unwrap(),
+                want,
+                "memory query {qi} on {path:?}"
+            );
+        }
+    }
+    // The in-memory backend has no store tier.
+    let err = engine
+        .query_via(&Query::attr(0), ExecPath::Store)
+        .expect_err("no durable store");
+    assert!(matches!(err, PallasError::Config(_)), "{err}");
+    engine.close().expect("close");
+}
+
+#[test]
+fn predicates_flow_through_the_facade() {
+    let engine = builder().build().expect("build");
+    let data = batches(ContentDist::Uniform, 0x77, 4);
+    engine.ingest_batches(&data).expect("ingest");
+    let expect = reference(&data);
+
+    // col("byte").eq(KEYS[1]) is exactly attribute row 1.
+    let pred = col("byte")
+        .eq(KEYS[1])
+        .and(col("byte").eq(KEYS[3]))
+        .and(col("byte").eq(KEYS[4]).not());
+    let q = Query::attr(1).and(Query::attr(3)).and(Query::attr(4).not());
+    assert_eq!(
+        engine.select(&pred).expect("select"),
+        q.eval(&expect).expect("reference")
+    );
+    // Range predicates lower to ORs over the domain.
+    let ge = col("byte").ge(100).lower(engine.schema()).expect("lower");
+    assert_eq!(ge.attrs(), vec![5, 6, 7]);
+    assert_eq!(
+        engine.query(&ge).expect("query"),
+        ge.eval(&expect).expect("reference")
+    );
+    engine.close().expect("close");
+}
+
+#[test]
+fn typed_errors_cover_the_public_surface() {
+    // Config: degenerate geometry.
+    assert!(matches!(
+        builder().batch_records(0).build(),
+        Err(PallasError::Config(_))
+    ));
+    // Config: forcing the store tier without a durable path.
+    assert!(matches!(
+        builder().exec_policy(ExecPolicy::Force(ExecPath::Store)).build(),
+        Err(PallasError::Config(_))
+    ));
+    // Config: compaction without a durable path.
+    assert!(matches!(
+        builder().compaction(CompactionMode::Foreground).build(),
+        Err(PallasError::Config(_))
+    ));
+
+    let engine = builder().build().expect("build");
+    // Ingest: too many records.
+    let too_many = vec![vec![1i32; 4]; CFG.n_records + 1];
+    assert!(matches!(
+        engine.ingest(&too_many),
+        Err(PallasError::Ingest(_))
+    ));
+    // Ingest: over-wide record.
+    let too_wide = vec![vec![1i32; CFG.w_words + 1]];
+    assert!(matches!(
+        engine.ingest(&too_wide),
+        Err(PallasError::Ingest(_))
+    ));
+    // InvalidQuery: attribute out of range.
+    assert!(matches!(
+        engine.query(&Query::attr(99)),
+        Err(PallasError::InvalidQuery(_))
+    ));
+    // InvalidQuery: unknown column / out-of-domain value.
+    assert!(matches!(
+        engine.select(&col("nope").eq(1)),
+        Err(PallasError::InvalidQuery(_))
+    ));
+    assert!(matches!(
+        engine.select(&col("byte").eq(999)),
+        Err(PallasError::InvalidQuery(_))
+    ));
+    engine.close().expect("close");
+
+    // Config: reopening a store under a narrower schema.
+    let dir = tmpdir("mismatch");
+    let eight = builder().durable(&dir).build().expect("create");
+    eight.close().expect("close");
+    let four = Engine::builder(
+        Schema::single("byte", [1, 2, 3, 4]).expect("schema"),
+    )
+    .batch_records(CFG.n_records)
+    .record_words(CFG.w_words)
+    .durable(&dir)
+    .build();
+    assert!(matches!(four, Err(PallasError::Config(_))));
+    // Config: a *same-width* schema with different key values (or a
+    // renamed column) must be rejected too — the sidecar catches what
+    // the attribute count cannot, so stored rows are never silently
+    // reinterpreted under the wrong keys.
+    let swapped = Engine::builder(
+        Schema::single("byte", [91, 92, 93, 94, 95, 96, 97, 98])
+            .expect("schema"),
+    )
+    .batch_records(CFG.n_records)
+    .record_words(CFG.w_words)
+    .durable(&dir)
+    .build();
+    assert!(matches!(swapped, Err(PallasError::Config(_))), "key swap");
+    let renamed = Engine::builder(
+        Schema::single("bytes2", KEYS).expect("schema"),
+    )
+    .batch_records(CFG.n_records)
+    .record_words(CFG.w_words)
+    .durable(&dir)
+    .build();
+    assert!(matches!(renamed, Err(PallasError::Config(_))), "rename");
+    // The original schema still reopens cleanly.
+    let same = builder().durable(&dir).build().expect("same schema reopens");
+    same.close().expect("close");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn planner_prefers_the_store_tier_once_segments_exist() {
+    let dir = tmpdir("planner");
+    let engine =
+        builder().durable(&dir).flush_batches(2).build().expect("build");
+    let data = batches(ContentDist::Uniform, 0x99, 5);
+    engine.ingest_batches(&data).expect("ingest");
+    let q = Query::attr(0).and(Query::attr(1));
+    assert_eq!(engine.plan(&q).path, ExecPath::Store);
+    engine.query(&q).expect("query");
+    let stats = engine.stats();
+    assert_eq!(stats.queries_store, 1);
+    assert_eq!(stats.queries_total(), 1);
+    engine.close().expect("close");
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -86,7 +86,8 @@ fn sharded_indexer_equals_scheduler_results() {
     // produce identical bitmaps for the same trace.
     let mut g = WorkloadGen::new(BicConfig::CHIP, ContentDist::Uniform, 0xE6);
     let trace: Vec<_> = (0..24).map(|i| g.batch_at(i as f64 * 1e-5)).collect();
-    let sharded = index_batches_sharded(BicConfig::CHIP, &trace, 4);
+    let sharded = index_batches_sharded(BicConfig::CHIP, &trace, 4)
+        .expect("valid trace");
     let (_, completed) = sotb_bic::coordinator::Scheduler::new(
         sotb_bic::coordinator::SchedulerConfig::chip_system(3),
     )

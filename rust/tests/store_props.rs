@@ -87,13 +87,27 @@ fn assert_store_matches(store: &Store, expect: &BitmapIndex, ctx: &str) {
         // identically on both paths; in-range queries must match bitwise.
         match q.eval(expect) {
             Ok(e) => {
-                assert_eq!(reader.eval(q).unwrap(), e, "{ctx}: query {qi}")
+                assert_eq!(reader.eval(q).unwrap(), e, "{ctx}: query {qi}");
+                // The segment-by-segment AND/ANDNOT fold must stay
+                // bit-identical to the assemble-then-AND reference path.
+                assert_eq!(
+                    reader.eval_assembled(q).unwrap(),
+                    e,
+                    "{ctx}: query {qi} assembled reference"
+                );
             }
-            Err(e) => assert_eq!(
-                reader.eval(q).unwrap_err(),
-                e,
-                "{ctx}: query {qi} error"
-            ),
+            Err(e) => {
+                assert_eq!(
+                    reader.eval(q).unwrap_err(),
+                    e,
+                    "{ctx}: query {qi} error"
+                );
+                assert_eq!(
+                    reader.eval_assembled(q).unwrap_err(),
+                    e,
+                    "{ctx}: query {qi} assembled error"
+                );
+            }
         }
     }
 }
@@ -414,6 +428,7 @@ fn sharded_persist_matches_reference() {
     let cfg = StoreConfig { flush_batches: 3, ..StoreConfig::default() };
     let mut store = Store::create(&dir, CFG.m_keys, cfg).unwrap();
     let n = ShardedIndexer::new(CFG, 3)
+        .expect("shards")
         .persist_batches(&batches, &mut store)
         .unwrap();
     assert_eq!(n, k);
