@@ -15,6 +15,12 @@ if [[ "${1:-}" == "--bench" ]]; then
     BENCH_SMOKE=1 cargo bench --bench hotpath
     echo "== bench-smoke: compression ablation =="
     BENCH_SMOKE=1 cargo bench --bench ablations
+    # The pipelined-ingest and pruned-query pairs must be present in the
+    # emitted results (they run inside the hotpath bench above).
+    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query; do
+        grep -q "\"$bench_case\"" BENCH_hotpath.json \
+            || { echo "missing bench case $bench_case in BENCH_hotpath.json"; exit 1; }
+    done
     echo "== bench-gate: compare against BENCH_baseline.json =="
     cargo run --release --quiet --bin bench_gate -- \
         BENCH_baseline.json BENCH_hotpath.json BENCH_compression.json

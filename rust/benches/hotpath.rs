@@ -296,7 +296,34 @@ fn main() {
             let _ = std::fs::remove_dir_all(&dir);
             bytes
         }));
-        // Query path: segments + memtable tail, through the planner.
+        // Paired async case: the same trace through the pipelined
+        // ingest stage — encode workers overlap the appender, and runs
+        // of batches share one WAL group-commit fsync instead of one
+        // fsync per batch.
+        let mut aiter = 0u64;
+        results.push(bench("engine/ingest_async").bytes(input_bytes).run(
+            || {
+                aiter += 1;
+                let dir = bench_root.join(format!("ingest-async-{aiter}"));
+                let engine = build(&dir);
+                let tickets = engine
+                    .ingest_batches_async(batch_records.clone())
+                    .expect("submit");
+                for t in tickets {
+                    t.wait().expect("receipt");
+                }
+                let bytes = engine.stats().segment_bytes_written;
+                drop(engine);
+                let _ = std::fs::remove_dir_all(&dir);
+                bytes
+            },
+        ));
+        // Query pair: segments + memtable tail through the planner,
+        // zone maps on (`engine/query_pruned`) vs the same store
+        // reopened with pruning off (`engine/query`, the historical
+        // baseline semantics). Clustered content means most segments
+        // carry provably-zero rows for the queried keys, so pruning
+        // skips them; the byte counters make the difference exact.
         let qdir = bench_root.join("query");
         let qengine = build(&qdir);
         for records in &batch_records {
@@ -316,10 +343,46 @@ fn main() {
             );
         }
         results.push(
-            bench("engine/query")
+            bench("engine/query_pruned")
                 .bytes(index_bytes)
                 .run(|| qengine.query(&sq).unwrap()),
         );
+        let pruned_stats = qengine.stats();
+        drop(qengine);
+        let qengine_noskip = EngineBuilder::new(
+            Schema::single("byte", 0..ecfg.m_keys as i32).expect("schema"),
+        )
+        .batch_records(ecfg.n_records)
+        .record_words(ecfg.w_words)
+        .durable(&qdir)
+        .flush_batches(12)
+        .zone_maps(false)
+        .build()
+        .expect("reopen without pruning");
+        let noskip_pin =
+            qengine_noskip.query_via(&sq, ExecPath::Raw).expect("raw");
+        assert_eq!(noskip_pin, pin, "pruning off must not change bits");
+        for path in ExecPath::ALL {
+            assert_eq!(
+                qengine_noskip.query_via(&sq, path).expect("query"),
+                pin,
+                "{path:?} diverged with pruning off"
+            );
+        }
+        results.push(
+            bench("engine/query")
+                .bytes(index_bytes)
+                .run(|| qengine_noskip.query(&sq).unwrap()),
+        );
+        let noskip_stats = qengine_noskip.stats();
+        println!(
+            "zone pruning: {} row bytes folded / {} windows skipped \
+             (pruned) vs {} row bytes folded (noskip)",
+            pruned_stats.store_row_bytes_read,
+            pruned_stats.store_chunks_skipped,
+            noskip_stats.store_row_bytes_read
+        );
+        drop(qengine_noskip);
         // Full lifecycle: build -> ingest -> flush -> query -> close.
         let mut e2e_iter = 0u64;
         results.push(bench("engine/e2e").bytes(input_bytes).run(|| {
@@ -335,7 +398,6 @@ fn main() {
             let _ = std::fs::remove_dir_all(&dir);
             hits
         }));
-        drop(qengine);
         let _ = std::fs::remove_dir_all(&bench_root);
     }
 

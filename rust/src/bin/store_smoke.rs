@@ -1,16 +1,44 @@
-//! CI smoke for the durable path of the engine facade: ingest through
-//! `EngineBuilder` into a tmpdir store, "kill" the session mid-write
-//! (simulated torn WAL tail), reopen through the builder (recovery),
-//! query, and verify bit-identity against the in-memory reference.
+//! CI smoke for the durable path of the engine facade, two phases:
+//!
+//! 1. ingest through `EngineBuilder` into a tmpdir store, "kill" the
+//!    session mid-write (simulated torn WAL tail), reopen through the
+//!    builder (recovery), query, and verify bit-identity against the
+//!    in-memory reference;
+//! 2. the **group-commit crash window**: ingest through the pipelined
+//!    async path (appends ride group commits), kill after the last ack
+//!    with a torn half-written group appended to the WAL — i.e. a crash
+//!    between a group's `write` and its `fsync` — and verify every
+//!    acked batch survives recovery while the unacked tail vanishes
+//!    without double-counting.
+//!
 //! Exits nonzero on any divergence — wired into `ci.sh` as the store
 //! gate.
 
 use std::fs;
+use std::path::Path;
 use std::process::ExitCode;
 
 use sotb_bic::bic::{BicConfig, BicCore, Bitmap, BitmapIndex, Query};
 use sotb_bic::coordinator::{ContentDist, WorkloadGen};
 use sotb_bic::engine::{Engine, Schema};
+
+/// Golden-model replay: index every batch with `keys` and concatenate.
+fn reference(
+    cfg: BicConfig,
+    keys: &[i32],
+    batch_records: &[Vec<Vec<i32>>],
+) -> BitmapIndex {
+    let mut core = BicCore::new(cfg);
+    let n = batch_records.len() * cfg.n_records;
+    let mut rows = vec![Bitmap::zeros(n); cfg.m_keys];
+    for (b, records) in batch_records.iter().enumerate() {
+        let bi = core.index(records, keys);
+        for (a, row) in rows.iter_mut().enumerate() {
+            row.or_at(bi.row(a), b * cfg.n_records);
+        }
+    }
+    BitmapIndex::from_rows(rows)
+}
 
 fn main() -> ExitCode {
     let cfg = BicConfig { n_records: 48, w_words: 8, m_keys: 8 };
@@ -22,19 +50,20 @@ fn main() -> ExitCode {
         .join(format!("bic-store-smoke-{}", std::process::id()));
     let _ = fs::remove_dir_all(&dir);
 
-    let build_engine = || {
+    let build_engine = |dir: &Path, flush_batches: usize| {
         Engine::builder(
             Schema::single("byte", keys.clone()).expect("valid schema"),
         )
         .batch_records(cfg.n_records)
         .record_words(cfg.w_words)
-        .durable(&dir)
-        .flush_batches(4) // 11 batches -> 2 segments + 3 in the WAL
+        .durable(dir)
+        .flush_batches(flush_batches)
         .build()
     };
 
-    // Ingest through the facade; every receipt must be WAL-durable.
-    let engine = build_engine().expect("create engine");
+    // ---- Phase 1: torn-tail kill on the synchronous path. ----
+    // 11 batches, flush every 4 -> 2 segments + 3 in the WAL.
+    let engine = build_engine(&dir, 4).expect("create engine");
     let mut wg = WorkloadGen::new(cfg, dist, seed);
     let batch_records: Vec<Vec<Vec<i32>>> =
         (0..total_batches).map(|i| wg.batch_at(i as f64).records).collect();
@@ -61,7 +90,7 @@ fn main() -> ExitCode {
     // Reopen through the builder: always the recovery path. The torn
     // record's batch (the last one) is gone; every durably-complete
     // record survives.
-    let engine = build_engine().expect("recover engine");
+    let engine = build_engine(&dir, 4).expect("recover engine");
     let stats = engine.stats();
     println!(
         "store-smoke: recovered {} segments + {} memtable batches",
@@ -76,21 +105,10 @@ fn main() -> ExitCode {
     }
     let survived = 4 * 2 + stats.memtable_batches;
 
-    // Rebuild the in-memory reference over the surviving prefix.
-    let mut core = BicCore::new(cfg);
-    let n = survived * cfg.n_records;
-    let mut rows = vec![Bitmap::zeros(n); cfg.m_keys];
-    for (b, records) in batch_records[..survived].iter().enumerate() {
-        let bi = core.index(records, &keys);
-        for (a, row) in rows.iter_mut().enumerate() {
-            row.or_at(bi.row(a), b * cfg.n_records);
-        }
-    }
-    let reference = BitmapIndex::from_rows(rows);
-
-    // Verify: bit-identical to the reference, and planned queries agree
-    // with the uncompressed eval.
-    if engine.snapshot().to_index() != reference {
+    // Verify: bit-identical to the reference over the surviving prefix,
+    // and planned queries agree with the uncompressed eval.
+    let expect = reference(cfg, &keys, &batch_records[..survived]);
+    if engine.snapshot().to_index() != expect {
         eprintln!("store-smoke: FAIL recovered index diverges from reference");
         return ExitCode::FAILURE;
     }
@@ -101,7 +119,7 @@ fn main() -> ExitCode {
     ];
     for (i, q) in queries.iter().enumerate() {
         let got = engine.query(q).expect("engine query");
-        let want = q.eval(&reference).expect("reference eval");
+        let want = q.eval(&expect).expect("reference eval");
         if got != want {
             eprintln!("store-smoke: FAIL query {i} diverges");
             return ExitCode::FAILURE;
@@ -109,11 +127,95 @@ fn main() -> ExitCode {
         println!(
             "store-smoke: query {i} matches ({} of {} objects)",
             got.count_ones(),
-            reference.num_objects()
+            expect.num_objects()
         );
     }
     engine.close().expect("close");
     let _ = fs::remove_dir_all(&dir);
-    println!("store-smoke: OK (ingest -> kill -> recover -> query)");
+    println!("store-smoke: phase 1 OK (ingest -> kill -> recover -> query)");
+
+    // ---- Phase 2: the group-commit crash window. ----
+    // Async-pipelined ingest (appends ride group commits), no
+    // auto-flush so every acked batch lives in WAL generation 0.
+    let dir2 = std::env::temp_dir()
+        .join(format!("bic-store-smoke-gc-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir2);
+    let acked = 7usize;
+    let engine = build_engine(&dir2, 0).expect("create gc engine");
+    let tickets = engine
+        .ingest_batches_async(batch_records[..acked].to_vec())
+        .expect("submit");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().expect("receipt");
+        if !r.durable || r.batch != i as u64 {
+            eprintln!(
+                "store-smoke: FAIL async receipt {i} (batch {}, durable {})",
+                r.batch, r.durable
+            );
+            return ExitCode::FAILURE;
+        }
+    }
+    println!("store-smoke: async-acked {acked} batches through group commit");
+
+    // Kill between a group's append and its fsync: drop the handle,
+    // then append a half-written record — bytes the next group's
+    // `write` put in the file before the crash stole its `fsync`. No
+    // ticket for it ever acknowledged.
+    drop(engine);
+    let wal2 = dir2.join("wal-00000000.log");
+    let mut bytes = fs::read(&wal2).expect("gc wal exists");
+    let acked_len = bytes.len();
+    bytes.extend_from_slice(&4096u32.to_le_bytes()); // claimed length
+    bytes.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes()); // bogus crc
+    bytes.extend_from_slice(&[0x5A; 7]); // 7 of the claimed 4096 bytes
+    fs::write(&wal2, &bytes).expect("append torn group");
+    println!(
+        "store-smoke: appended a torn group tail ({} -> {} bytes)",
+        acked_len,
+        bytes.len()
+    );
+
+    // Recovery: every acked batch survives, the torn group vanishes,
+    // nothing double-counts.
+    let engine = build_engine(&dir2, 0).expect("recover gc engine");
+    let stats = engine.stats();
+    if stats.memtable_batches != acked || stats.segments != 0 {
+        eprintln!(
+            "store-smoke: FAIL expected {acked} memtable batches + 0 \
+             segments, got {} + {}",
+            stats.memtable_batches, stats.segments
+        );
+        return ExitCode::FAILURE;
+    }
+    if stats.objects != acked * cfg.n_records {
+        eprintln!(
+            "store-smoke: FAIL expected {} objects, got {}",
+            acked * cfg.n_records,
+            stats.objects
+        );
+        return ExitCode::FAILURE;
+    }
+    let expect = reference(cfg, &keys, &batch_records[..acked]);
+    if engine.snapshot().to_index() != expect {
+        eprintln!(
+            "store-smoke: FAIL group-commit recovery diverges from the \
+             acked prefix"
+        );
+        return ExitCode::FAILURE;
+    }
+    for (i, q) in queries.iter().enumerate() {
+        let got = engine.query(q).expect("engine query");
+        if got != q.eval(&expect).expect("reference eval") {
+            eprintln!("store-smoke: FAIL gc query {i} diverges");
+            return ExitCode::FAILURE;
+        }
+    }
+    engine.close().expect("close gc engine");
+    let _ = fs::remove_dir_all(&dir2);
+    println!(
+        "store-smoke: phase 2 OK (async acks survive the group-commit \
+         crash window)"
+    );
+    println!("store-smoke: OK");
     ExitCode::SUCCESS
 }

@@ -136,18 +136,24 @@ impl IndexService {
 
     /// Index + encode a batch on a worker thread, then append the result
     /// to the attached store. Returns once the batch is durable (WAL
-    /// fsynced) — the service's acknowledged-write path.
+    /// fsynced) — the service's acknowledged-write path. The append is
+    /// *submitted* under the store lock and *waited on* outside it, so
+    /// concurrent `persist_batch` callers share one group-commit fsync
+    /// instead of serializing their syncs behind the lock.
     pub fn persist_batch(
         &self,
         records: Vec<Vec<i32>>,
         keys: Vec<i32>,
     ) -> Result<CompressedIndex> {
         let ci = self.index_compressed(records, keys)?;
-        let mut guard = self.store.lock().unwrap();
-        let store = guard.as_mut().ok_or_else(|| {
-            PallasError::Config("no store attached (call open_store)".into())
-        })?;
-        store.append_batch(&ci)?;
+        let ticket = {
+            let mut guard = self.store.lock().unwrap();
+            let store = guard.as_mut().ok_or_else(|| {
+                PallasError::Config("no store attached (call open_store)".into())
+            })?;
+            store.begin_append_batch(&ci)?
+        };
+        ticket.wait()?;
         Ok(ci)
     }
 

@@ -149,8 +149,11 @@ impl ShardedIndexer {
     /// Index + encode a batch trace on the shard workers, then append
     /// the shard-encoded results to a durable [`Store`] in input order
     /// (the deterministic merge doubles as the durability order: batch
-    /// `i` is acknowledged before batch `i+1`). Returns the number of
-    /// batches persisted.
+    /// `i` is acknowledged before batch `i+1`). All appends are
+    /// submitted first and their durability tickets waited afterwards,
+    /// so the whole trace rides as few WAL group commits as the flush
+    /// cadence allows instead of one fsync per batch. Returns the
+    /// number of batches persisted.
     pub fn persist_batches(
         &self,
         batches: &[Batch],
@@ -158,10 +161,27 @@ impl ShardedIndexer {
     ) -> Result<usize> {
         let encoded = self.index_batches_compressed(batches)?;
         let n = encoded.len();
+        let mut tickets = Vec::with_capacity(n);
+        let mut first_err: Option<PallasError> = None;
         for ci in &encoded {
-            store.append_batch(ci)?;
+            match store.begin_append_batch(ci) {
+                Ok(t) => tickets.push(t),
+                Err(e) => {
+                    first_err = Some(e.into());
+                    break;
+                }
+            }
         }
-        Ok(n)
+        // Even on a mid-trace submit error, drive the already-submitted
+        // prefix durable before surfacing it — a submitted batch must
+        // never stay memtable-visible without its durability resolved.
+        for ticket in tickets {
+            ticket.wait()?;
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(n),
+        }
     }
 }
 

@@ -77,6 +77,18 @@ pub struct EngineConfig {
     pub compaction: CompactionMode,
     /// Execution-path policy for [`query`](crate::engine::Engine::query).
     pub exec: ExecPolicy,
+    /// Use segment zone maps to skip segments at query time (writing
+    /// the maps is unconditional; this gates only the read side — the
+    /// differential off-switch for skip-vs-noskip testing).
+    pub zone_maps: bool,
+    /// Group-commit batching window for the durable WAL: how long an
+    /// append may wait for co-travellers before leading a sync itself
+    /// (bounds the added ack latency; zero syncs immediately).
+    pub group_commit_window: Duration,
+    /// Bounded depth of the async-ingest stage's submission queue
+    /// ([`ingest_async`](crate::engine::Engine::ingest_async) blocks —
+    /// backpressure — once this many batches are in flight).
+    pub ingest_queue: usize,
 }
 
 impl Default for EngineConfig {
@@ -92,6 +104,9 @@ impl Default for EngineConfig {
             max_segments: 4,
             compaction: CompactionMode::Off,
             exec: ExecPolicy::Auto,
+            zone_maps: true,
+            group_commit_window: Duration::ZERO,
+            ingest_queue: 64,
         }
     }
 }

@@ -10,20 +10,41 @@
 //! - `Or` / leaf rows assemble by OR-folding each chunk's row at its
 //!   offset (`or_into_at` — a WAH fill lands as one word-span write);
 //! - top-level `And` chains fold chunk-by-chunk through the offset
-//!   conjunction kernels (`and_into_at` / `and_not_into_at`, the ROADMAP
-//!   follow-up): the accumulator starts as the first positive leaf's
-//!   assembled row and every further leaf ANDs straight off its
-//!   compressed chunks — the assemble-then-AND intermediate rows are
-//!   never built. An accumulator that empties short-circuits the rest.
+//!   conjunction kernels (`and_into_at` / `and_not_into_at`): for each
+//!   chunk, the cheapest positive leaf assembles the window and every
+//!   further leaf ANDs straight off its compressed row — the
+//!   assemble-then-AND intermediate rows are never built. An
+//!   accumulator that empties short-circuits the rest.
 //!
-//! Result-identical to `Query::eval` over the fully assembled index (the
-//! engine property suite pins this bit-for-bit across execution paths).
+//! Two cost-only refinements ride on segment [`ZoneMap`]s (exact
+//! per-row cardinalities carried by chunks that have them):
+//!
+//! - **zone pruning** — a chunk whose zone proves a term cannot
+//!   contribute is skipped outright: OR and ANDNOT of a zero row are
+//!   no-ops, and a conjunction with any zero positive leaf leaves the
+//!   chunk's window at its all-zeros starting state without reading a
+//!   single row. Chunks without a map ("unknown": memtable batches,
+//!   pre-zone-map segment files) are never skipped.
+//! - **cardinality ordering** — a conjunction's positive leaves fold
+//!   cheapest-first (smallest summed cardinality), so the accumulator
+//!   empties as early as possible. AND is commutative, so the order is
+//!   result-invariant; the tie-break on attribute id keeps it
+//!   deterministic.
+//!
+//! Both are pinned result-identical to `Query::eval` over the fully
+//! assembled index — and to this evaluator with pruning disabled —
+//! by the engine property suite. [`EvalStats`] counts the rows (and
+//! their serialized bytes) a query actually folded versus the chunk
+//! windows it skipped, which is how the pruning win is asserted rather
+//! than just timed.
 //!
 //! [`Snapshot`]: crate::engine::Snapshot
+//! [`ZoneMap`]: crate::store::zone::ZoneMap
 
 use crate::bic::bitmap::Bitmap;
 use crate::bic::codec::CodecBitmap;
 use crate::bic::query::Query;
+use crate::store::zone::ZoneMap;
 
 /// One contiguous slice of the global object space: `rows[attr]` holds
 /// this chunk's bits for `attr`, with local bit 0 at global bit `base`.
@@ -33,11 +54,60 @@ pub(crate) struct RowChunk<'a> {
     pub base: usize,
     /// One compressed row per attribute.
     pub rows: &'a [CodecBitmap],
+    /// Exact per-row cardinalities when known (`None` = never skip).
+    pub zone: Option<&'a ZoneMap>,
+}
+
+impl RowChunk<'_> {
+    /// Objects this chunk covers.
+    #[inline]
+    fn nbits(&self) -> usize {
+        self.rows.first().map_or(0, CodecBitmap::len)
+    }
+
+    /// Whether the zone map proves row `attr` is all zeros here.
+    #[inline]
+    fn known_zero(&self, attr: usize) -> bool {
+        self.zone.is_some_and(|z| z.is_zero(attr))
+    }
+}
+
+/// What a query evaluation actually touched — the counters behind the
+/// zone-pruning acceptance ("strictly fewer segment bytes", asserted in
+/// tests, not just timed).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct EvalStats {
+    /// Compressed rows folded into an accumulator.
+    pub rows_folded: u64,
+    /// Serialized (on-disk) bytes of those rows.
+    pub row_bytes: u64,
+    /// Chunk windows skipped or bulk-cleared via zone maps instead of
+    /// folding a row.
+    pub chunks_skipped: u64,
+}
+
+impl EvalStats {
+    #[inline]
+    fn fold(&mut self, row: &CodecBitmap) {
+        self.rows_folded += 1;
+        self.row_bytes += row.serialized_bytes() as u64;
+    }
 }
 
 /// OR attribute `attr` of every chunk into `acc` at its offset.
-pub(crate) fn or_row_into(chunks: &[RowChunk<'_>], attr: usize, acc: &mut Bitmap) {
+/// Zone-zero chunks contribute nothing and are skipped.
+pub(crate) fn or_row_into(
+    chunks: &[RowChunk<'_>],
+    attr: usize,
+    acc: &mut Bitmap,
+    stats: &mut EvalStats,
+) {
     for c in chunks {
+        if c.known_zero(attr) {
+            stats.chunks_skipped += 1;
+            continue;
+        }
+        stats.fold(&c.rows[attr]);
         c.rows[attr].or_into_at(acc, c.base);
     }
 }
@@ -49,27 +119,40 @@ pub(crate) fn assemble_row(
     nbits: usize,
 ) -> Bitmap {
     let mut acc = Bitmap::zeros(nbits);
-    or_row_into(chunks, attr, &mut acc);
+    or_row_into(chunks, attr, &mut acc, &mut EvalStats::default());
     acc
 }
 
-/// AND attribute `attr` into `acc`, chunk by chunk. Correct because the
-/// chunks tile the accumulator: every window is ANDed exactly once.
-pub(crate) fn and_row_into(chunks: &[RowChunk<'_>], attr: usize, acc: &mut Bitmap) {
-    for c in chunks {
-        c.rows[attr].and_into_at(acc, c.base);
-    }
-}
-
-/// `acc &= !row(attr)`, chunk by chunk.
+/// `acc &= !row(attr)`, chunk by chunk. ANDNOT of a zone-zero row is a
+/// no-op, so those chunks are skipped.
 pub(crate) fn and_not_row_into(
     chunks: &[RowChunk<'_>],
     attr: usize,
     acc: &mut Bitmap,
+    stats: &mut EvalStats,
 ) {
     for c in chunks {
+        if c.known_zero(attr) {
+            stats.chunks_skipped += 1;
+            continue;
+        }
+        stats.fold(&c.rows[attr]);
         c.rows[attr].and_not_into_at(acc, c.base);
     }
+}
+
+/// Summed known cardinality of `attr` across chunks — the conjunction
+/// ordering key. Chunks without a zone map contribute their full width
+/// (the safe upper bound), so unknown rows sort after provably sparse
+/// ones.
+fn est_card(chunks: &[RowChunk<'_>], attr: usize) -> u64 {
+    chunks
+        .iter()
+        .map(|c| match c.zone {
+            Some(z) => z.card(attr),
+            None => c.nbits() as u64,
+        })
+        .sum()
 }
 
 /// Evaluate `q` over the chunk-tiled index. Attribute ranges must have
@@ -79,24 +162,37 @@ pub(crate) fn eval_chunks(
     nbits: usize,
     q: &Query,
 ) -> Bitmap {
+    eval_chunks_with(chunks, nbits, q, &mut EvalStats::default())
+}
+
+/// [`eval_chunks`] with touch accounting in `stats`.
+pub(crate) fn eval_chunks_with(
+    chunks: &[RowChunk<'_>],
+    nbits: usize,
+    q: &Query,
+    stats: &mut EvalStats,
+) -> Bitmap {
     debug_assert!(
         chunks
             .iter()
             .zip(chunks.iter().skip(1))
-            .all(|(a, b)| a.base + a.rows.first().map_or(0, CodecBitmap::len)
-                == b.base),
+            .all(|(a, b)| a.base + a.nbits() == b.base),
         "chunks must tile contiguously"
     );
     match q {
-        Query::Attr(i) => assemble_row(chunks, *i, nbits),
-        Query::Not(inner) => eval_chunks(chunks, nbits, inner).not(),
+        Query::Attr(i) => {
+            let mut acc = Bitmap::zeros(nbits);
+            or_row_into(chunks, *i, &mut acc, stats);
+            acc
+        }
+        Query::Not(inner) => eval_chunks_with(chunks, nbits, inner, stats).not(),
         Query::Or(xs) => {
             let mut acc = Bitmap::zeros(nbits);
             for x in xs {
                 if let Query::Attr(i) = x {
-                    or_row_into(chunks, *i, &mut acc);
+                    or_row_into(chunks, *i, &mut acc, stats);
                 } else {
-                    acc.or_assign(&eval_chunks(chunks, nbits, x));
+                    acc.or_assign(&eval_chunks_with(chunks, nbits, x, stats));
                 }
             }
             acc
@@ -105,7 +201,8 @@ pub(crate) fn eval_chunks(
             // Split the conjunction like the compressed planner: positive
             // leaves fold with AND, negated leaves with ANDNOT, complex
             // subqueries evaluate recursively. AND is commutative, so the
-            // grouping is result-invariant.
+            // grouping — and the cardinality ordering below — is
+            // result-invariant.
             let mut pos: Vec<usize> = Vec::new();
             let mut neg: Vec<usize> = Vec::new();
             let mut complex: Vec<&Query> = Vec::new();
@@ -119,27 +216,43 @@ pub(crate) fn eval_chunks(
                     other => complex.push(other),
                 }
             }
-            let mut acc = match pos.split_first() {
-                Some((&first, _)) => assemble_row(chunks, first, nbits),
-                None => Bitmap::ones(nbits),
-            };
-            for &i in pos.iter().skip(1) {
-                if acc.is_zero() {
-                    return acc;
+            // Cheapest-first: fold the sparsest positive leaf first so
+            // the accumulator (and its dead windows) empty early.
+            pos.sort_by_key(|&a| (est_card(chunks, a), a));
+            let mut acc = if pos.is_empty() {
+                Bitmap::ones(nbits)
+            } else {
+                // Fold the whole positive chain chunk by chunk: the
+                // chunks tile `acc`, every window sees every leaf
+                // exactly once, and a chunk whose zone proves *any*
+                // positive leaf zero leaves its window zero without
+                // reading a single row — the segment-skipping payoff.
+                let mut acc = Bitmap::zeros(nbits);
+                for c in chunks {
+                    if pos.iter().any(|&a| c.known_zero(a)) {
+                        stats.chunks_skipped += 1;
+                        continue;
+                    }
+                    stats.fold(&c.rows[pos[0]]);
+                    c.rows[pos[0]].or_into_at(&mut acc, c.base);
+                    for &a in &pos[1..] {
+                        stats.fold(&c.rows[a]);
+                        c.rows[a].and_into_at(&mut acc, c.base);
+                    }
                 }
-                and_row_into(chunks, i, &mut acc);
-            }
+                acc
+            };
             for &i in &neg {
                 if acc.is_zero() {
                     return acc;
                 }
-                and_not_row_into(chunks, i, &mut acc);
+                and_not_row_into(chunks, i, &mut acc, stats);
             }
             for x in complex {
                 if acc.is_zero() {
                     return acc;
                 }
-                acc.and_assign(&eval_chunks(chunks, nbits, x));
+                acc.and_assign(&eval_chunks_with(chunks, nbits, x, stats));
             }
             acc
         }
@@ -151,14 +264,16 @@ mod tests {
     use super::*;
     use crate::bic::bitmap::BitmapIndex;
     use crate::bic::codec::Codec;
+    use crate::store::zone::ZoneMap;
     use crate::substrate::rng::Xoshiro256;
 
     /// Chop a reference index into codec-compressed chunks of the given
-    /// lengths and evaluate both ways.
+    /// lengths and evaluate with and without zone maps; both must match
+    /// the whole-index reference.
     fn differential(q: &Query, bi: &BitmapIndex, cuts: &[usize]) {
         assert_eq!(cuts.iter().sum::<usize>(), bi.num_objects());
         for codec in Codec::ALL {
-            let mut owned: Vec<(usize, Vec<CodecBitmap>)> = Vec::new();
+            let mut owned: Vec<(usize, Vec<CodecBitmap>, ZoneMap)> = Vec::new();
             let mut base = 0usize;
             for &len in cuts {
                 let rows: Vec<CodecBitmap> = (0..bi.num_attrs())
@@ -172,16 +287,31 @@ mod tests {
                         CodecBitmap::from_bitmap_as(codec, &seg)
                     })
                     .collect();
-                owned.push((base, rows));
+                let zone = ZoneMap::from_rows(&rows);
+                owned.push((base, rows, zone));
                 base += len;
             }
-            let chunks: Vec<RowChunk<'_>> = owned
-                .iter()
-                .map(|(base, rows)| RowChunk { base: *base, rows })
-                .collect();
-            let got = eval_chunks(&chunks, bi.num_objects(), q);
             let expect = q.eval(bi).expect("reference eval");
-            assert_eq!(got, expect, "{codec:?} cuts={cuts:?}");
+            for zoned in [false, true] {
+                let chunks: Vec<RowChunk<'_>> = owned
+                    .iter()
+                    .map(|(base, rows, zone)| RowChunk {
+                        base: *base,
+                        rows,
+                        zone: zoned.then_some(zone),
+                    })
+                    .collect();
+                let mut stats = EvalStats::default();
+                let got =
+                    eval_chunks_with(&chunks, bi.num_objects(), q, &mut stats);
+                assert_eq!(got, expect, "{codec:?} cuts={cuts:?} zoned={zoned}");
+                if !zoned {
+                    assert_eq!(
+                        stats.chunks_skipped, 0,
+                        "nothing skips without zone maps"
+                    );
+                }
+            }
         }
     }
 
@@ -216,5 +346,70 @@ mod tests {
             differential(q, &bi, &[64, 256, 380]);
             differential(q, &bi, &[1, 63, 65, 571]);
         }
+    }
+
+    #[test]
+    fn zone_sparse_index_prunes_and_stays_exact() {
+        // Rows live in disjoint chunk bands: attr `a` is nonzero only in
+        // chunk `a % 3`, so zone maps prove most windows dead.
+        let (m, n) = (6usize, 3 * 192usize);
+        let mut rng = Xoshiro256::seeded(0x20E);
+        let mut bi = BitmapIndex::new(m, n);
+        for a in 0..m {
+            let band = a % 3;
+            for j in band * 192..(band + 1) * 192 {
+                if rng.chance(0.4) {
+                    bi.set(a, j, true);
+                }
+            }
+        }
+        let queries = [
+            // attrs 0 and 1 live in different bands: provably empty.
+            Query::attr(0).and(Query::attr(1)),
+            // same band: a real conjunction.
+            Query::attr(0).and(Query::attr(3)),
+            Query::attr(2).or(Query::attr(5)),
+            Query::attr(1).and(Query::attr(4)).and(Query::attr(0).not()),
+        ];
+        for q in &queries {
+            differential(q, &bi, &[192, 192, 192]);
+        }
+        // And the pruning actually fires: the cross-band conjunction
+        // reads zero row bytes when every chunk carries a zone map.
+        let rows_by_chunk: Vec<(usize, Vec<CodecBitmap>, ZoneMap)> = (0..3)
+            .map(|c| {
+                let rows: Vec<CodecBitmap> = (0..m)
+                    .map(|a| {
+                        let mut seg = Bitmap::zeros(192);
+                        for j in 0..192 {
+                            if bi.get(a, c * 192 + j) {
+                                seg.set(j, true);
+                            }
+                        }
+                        CodecBitmap::from_bitmap(&seg)
+                    })
+                    .collect();
+                let zone = ZoneMap::from_rows(&rows);
+                (c * 192, rows, zone)
+            })
+            .collect();
+        let chunks: Vec<RowChunk<'_>> = rows_by_chunk
+            .iter()
+            .map(|(base, rows, zone)| RowChunk {
+                base: *base,
+                rows,
+                zone: Some(zone),
+            })
+            .collect();
+        let mut stats = EvalStats::default();
+        let out = eval_chunks_with(
+            &chunks,
+            n,
+            &Query::attr(0).and(Query::attr(1)),
+            &mut stats,
+        );
+        assert!(out.is_zero());
+        assert_eq!(stats.rows_folded, 0, "no row is ever read");
+        assert_eq!(stats.chunks_skipped, 3, "every chunk window skipped");
     }
 }

@@ -1,0 +1,258 @@
+//! Pipelined asynchronous ingest: overlap record generation with
+//! indexing, encoding, and the WAL group commit.
+//!
+//! [`Engine::ingest_async`] hands a batch to a bounded submission queue
+//! and returns an [`IngestTicket`] immediately; the caller keeps
+//! producing records while the pipeline works. Three stages:
+//!
+//! ```text
+//! submit ──bounded queue──> encode workers ──reorder──> appender
+//!  (seq)                    (own BicCore,    (by seq)   (one store lock
+//!                            codec policy)              per ready run,
+//!                                                       one group commit
+//!                                                       per run)
+//! ```
+//!
+//! - **Submission** assigns a pipeline sequence number and blocks only
+//!   when the queue is full (backpressure, `ingest_queue` deep).
+//! - **Encode workers** (one per engine worker thread, each owning a
+//!   private `BicCore` like the chip's per-core CAM/buffer) index and
+//!   codec-encode batches in parallel, out of order.
+//! - The **appender** restores submission order through a reorder
+//!   buffer, applies each contiguous ready run under one backend lock
+//!   (cheap: WAL submit + memtable push per batch), then waits the
+//!   run's durability tickets — the first wait leads **one** WAL group
+//!   commit covering the whole run, so `k` pipelined batches cost one
+//!   fsync instead of `k`.
+//!
+//! Receipts therefore resolve in batch-id order (pinned by
+//! `rust/tests/engine_props.rs`), and an acknowledged ticket carries
+//! exactly the durability meaning of the synchronous
+//! [`Engine::ingest`] — which remains the differential reference path.
+//!
+//! The encode stage deliberately does *not* reuse `ShardedIndexer`:
+//! that fan-out is scoped/batch-shaped (split a known slice, join all
+//! workers), while this stage streams unbounded submissions through
+//! long-lived workers — the two lifetimes do not compose without
+//! making the indexer's scoped threads permanent.
+//!
+//! [`Engine::ingest`]: crate::engine::Engine::ingest
+//! [`Engine::ingest_async`]: crate::engine::Engine::ingest_async
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::error::{PallasError, Result};
+use super::{Inner, IngestReceipt};
+use crate::bic::codec::CompressedIndex;
+use crate::bic::BicCore;
+
+/// A submitted-but-not-yet-acknowledged asynchronous ingest.
+/// [`IngestTicket::wait`] blocks until the batch is applied (and, on a
+/// durable engine, WAL-fsynced) and returns its receipt.
+#[must_use = "await the ticket to learn the batch's receipt (and durability)"]
+pub struct IngestTicket {
+    rx: Receiver<Result<IngestReceipt>>,
+}
+
+impl IngestTicket {
+    /// Block until the batch is acknowledged. On a durable engine an
+    /// `Ok` receipt means the batch is WAL-durable, exactly like the
+    /// synchronous [`ingest`](crate::engine::Engine::ingest) returning.
+    pub fn wait(self) -> Result<IngestReceipt> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(PallasError::Ingest(
+                "async ingest pipeline shut down before the batch was applied"
+                    .into(),
+            )),
+        }
+    }
+}
+
+/// One batch travelling the pipeline.
+struct Job {
+    seq: u64,
+    records: Vec<Vec<i32>>,
+    done: Sender<Result<IngestReceipt>>,
+}
+
+/// The appender's reorder buffer: encoded batches keyed by sequence,
+/// drained contiguously from `next`. A `None` payload marks a batch
+/// whose encode panicked — it occupies its sequence slot (so the drain
+/// never stalls on a gap) and resolves its ticket with an error.
+struct Reorder {
+    next: u64,
+    ready: BTreeMap<u64, (Option<CompressedIndex>, Sender<Result<IngestReceipt>>)>,
+    live_encoders: usize,
+}
+
+/// The running stage threads. Owned by the engine; dropping (or
+/// [`IngestPipeline::shutdown`]) closes the queue, drains every
+/// submitted batch, and joins the threads.
+pub(super) struct IngestPipeline {
+    tx: Option<SyncSender<Job>>,
+    next_seq: u64,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl IngestPipeline {
+    /// Spawn `workers` encode threads plus the appender over a
+    /// `queue`-deep submission channel.
+    pub(super) fn spawn(
+        inner: &Arc<Inner>,
+        workers: usize,
+        queue: usize,
+    ) -> IngestPipeline {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let reorder = Arc::new((
+            Mutex::new(Reorder {
+                next: 0,
+                ready: BTreeMap::new(),
+                live_encoders: workers,
+            }),
+            Condvar::new(),
+        ));
+        let mut threads = Vec::with_capacity(workers + 1);
+        /// Decrements `live_encoders` on every encoder exit path —
+        /// including an unwind — so a panicking encoder can never wedge
+        /// the appender (its gap drops trailing batches, whose tickets
+        /// then error on the closed channel).
+        struct EncoderExit(Arc<(Mutex<Reorder>, Condvar)>);
+        impl Drop for EncoderExit {
+            fn drop(&mut self) {
+                let (lock, cv) = &*self.0;
+                lock.lock().unwrap().live_encoders -= 1;
+                cv.notify_all();
+            }
+        }
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let reorder = Arc::clone(&reorder);
+            let inner = Arc::clone(inner);
+            threads.push(std::thread::spawn(move || {
+                let _exit = EncoderExit(Arc::clone(&reorder));
+                let mut core = BicCore::new(inner.geometry);
+                loop {
+                    // Pull the next job; hold the lock only for the recv.
+                    let job = { rx.lock().unwrap().recv() };
+                    let Ok(job) = job else { break }; // queue closed
+                    // A panic inside index/encode must not leave a
+                    // sequence gap (the appender would stall on it and
+                    // every later ticket with it): catch it, file the
+                    // slot as failed, and rebuild the core.
+                    let encoded = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            let bi = core.index(&job.records, &inner.keys);
+                            inner.encode(&bi)
+                        }),
+                    );
+                    let slot = match encoded {
+                        Ok(ci) => Some(ci),
+                        Err(_) => {
+                            core = BicCore::new(inner.geometry);
+                            None
+                        }
+                    };
+                    let (lock, cv) = &*reorder;
+                    let mut g = lock.lock().unwrap();
+                    g.ready.insert(job.seq, (slot, job.done));
+                    cv.notify_all();
+                }
+            }));
+        }
+        {
+            let reorder = Arc::clone(&reorder);
+            let inner = Arc::clone(inner);
+            threads.push(std::thread::spawn(move || {
+                let (lock, cv) = &*reorder;
+                let mut g = lock.lock().unwrap();
+                loop {
+                    // Take the contiguous ready run starting at `next`.
+                    let mut run = Vec::new();
+                    while let Some(item) = g.ready.remove(&g.next) {
+                        run.push(item);
+                        g.next += 1;
+                    }
+                    if !run.is_empty() {
+                        drop(g);
+                        // Apply maximal groups of successfully encoded
+                        // batches; a failed slot resolves its ticket
+                        // with an error in sequence position, so acks
+                        // stay ordered around it.
+                        let mut group = Vec::new();
+                        for (slot, done) in run {
+                            match slot {
+                                Some(ci) => group.push((ci, done)),
+                                None => {
+                                    if !group.is_empty() {
+                                        inner.apply_run(std::mem::take(
+                                            &mut group,
+                                        ));
+                                    }
+                                    let _ = done.send(Err(
+                                        PallasError::Ingest(
+                                            "async ingest batch dropped: its \
+                                             encode worker panicked"
+                                                .into(),
+                                        ),
+                                    ));
+                                }
+                            }
+                        }
+                        if !group.is_empty() {
+                            inner.apply_run(group);
+                        }
+                        g = lock.lock().unwrap();
+                        continue;
+                    }
+                    if g.live_encoders == 0 {
+                        // Queue closed and every encoder drained. A
+                        // non-contiguous leftover would mean a dead
+                        // encoder; dropping it errors its ticket.
+                        break;
+                    }
+                    g = cv.wait(g).unwrap();
+                }
+            }));
+        }
+        IngestPipeline { tx: Some(tx), next_seq: 0, threads }
+    }
+
+    /// Enqueue one validated batch; blocks while the submission queue
+    /// is full (backpressure).
+    pub(super) fn submit(&mut self, records: Vec<Vec<i32>>) -> IngestTicket {
+        let (done, rx) = mpsc::channel();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        // A send can only fail if every stage thread died (a panic took
+        // the queue down); the dropped `done` sender then surfaces as a
+        // pipeline-shutdown error on the ticket's wait.
+        let _ = self
+            .tx
+            .as_ref()
+            .expect("pipeline is running")
+            .send(Job { seq, records, done });
+        IngestTicket { rx }
+    }
+
+    /// Close the queue, apply every batch already submitted, and join
+    /// the stage threads. Outstanding tickets resolve before this
+    /// returns.
+    pub(super) fn shutdown(&mut self) {
+        self.tx = None; // disconnect: encoders drain the queue and exit
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for IngestPipeline {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

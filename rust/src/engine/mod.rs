@@ -13,6 +13,8 @@
 //!   |  Engine                                                      |
 //!   |                                                              |
 //!   |  ingest(batch) --> BicCore / ShardedIndexer (worker threads) |
+//!   |  ingest_async(batch) -> bounded queue -> encode workers      |
+//!   |                     |     -> in-order appender (group commit)|
 //!   |                     |  codec policy (adaptive / forced)      |
 //!   |                     v                                        |
 //!   |            [memtable | durable Store (WAL -> segments)]      |
@@ -20,6 +22,7 @@
 //!   |  flush() ----------- \----------------+      | Compactor     |
 //!   |                                       v      | (off/fg/bg)   |
 //!   |  query(q) --> planner --> raw | compressed | sharded | store |
+//!   |               (cardinality cost model + zone-map skipping)   |
 //!   |  select(pred) -> Schema lowering -> query(q)                 |
 //!   |  snapshot() -> pinned segment set + memtable clone           |
 //!   |  stats() / close()                                           |
@@ -42,18 +45,22 @@
 pub mod config;
 pub mod error;
 pub(crate) mod exec;
+pub mod ingest;
 pub mod planner;
 pub mod schema;
 pub mod snapshot;
 
 pub use config::{CodecPolicy, CompactionMode, EngineConfig, ShardPolicy};
 pub use error::{PallasError, Result};
+pub use ingest::IngestTicket;
 pub use planner::{ExecPath, ExecPolicy, Plan};
 pub use schema::{col, CmpOp, ColRef, Column, Predicate, Schema, SchemaBuilder};
 pub use snapshot::Snapshot;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::bic::bitmap::{Bitmap, BitmapIndex};
 use crate::bic::codec::{CodecBitmap, CompressedIndex};
@@ -63,7 +70,8 @@ use crate::coordinator::sharding::ShardedIndexer;
 use crate::store::compaction::{CompactionPolicy, Compactor};
 use crate::store::{manifest, Store, StoreConfig};
 use crate::substrate::json::Json;
-use exec::RowChunk;
+use exec::{EvalStats, RowChunk};
+use ingest::IngestPipeline;
 use planner::PlanInputs;
 use snapshot::PinnedView;
 
@@ -204,14 +212,39 @@ impl EngineBuilder {
         self
     }
 
+    /// Use segment zone maps to skip segments at query time (default
+    /// on; the maps are always written — this gates only the read
+    /// side, the skip-vs-noskip differential switch).
+    pub fn zone_maps(mut self, on: bool) -> Self {
+        self.cfg.zone_maps = on;
+        self
+    }
+
+    /// Group-commit batching window for the durable WAL: bound on the
+    /// extra latency an append spends waiting for co-travellers before
+    /// leading a sync itself (zero, the default, syncs immediately).
+    pub fn group_commit_window(mut self, window: Duration) -> Self {
+        self.cfg.group_commit_window = window;
+        self
+    }
+
+    /// Bounded depth of the async-ingest submission queue
+    /// ([`Engine::ingest_async`] blocks once this many batches are in
+    /// flight).
+    pub fn ingest_queue(mut self, depth: usize) -> Self {
+        self.cfg.ingest_queue = depth;
+        self
+    }
+
     /// The configuration as assembled so far.
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
     }
 
     /// Validate and start the engine. [`PallasError::Config`] on a
-    /// degenerate geometry, a schema mismatch with an existing store,
-    /// compaction without a durable path, or `Force(Store)` without one.
+    /// degenerate geometry or queue depth, a schema mismatch with an
+    /// existing store, compaction without a durable path, or
+    /// `Force(Store)` without one.
     pub fn build(self) -> Result<Engine> {
         let EngineBuilder { schema, cfg } = self;
         if cfg.batch_records == 0 {
@@ -219,6 +252,9 @@ impl EngineBuilder {
         }
         if cfg.record_words == 0 {
             return Err(PallasError::Config("record_words must be >= 1".into()));
+        }
+        if cfg.ingest_queue == 0 {
+            return Err(PallasError::Config("ingest_queue must be >= 1".into()));
         }
         let m = schema.num_attrs();
         let geometry = BicConfig {
@@ -250,7 +286,10 @@ impl EngineBuilder {
                     flush_batches: cfg.flush_batches,
                     compaction: CompactionPolicy {
                         max_segments: cfg.max_segments,
+                        ..CompactionPolicy::default()
                     },
+                    group_window: cfg.group_commit_window,
+                    zone_pruning: cfg.zone_maps,
                 };
                 let store = if manifest::exists(path) {
                     let store = Store::open(path, scfg)?;
@@ -308,21 +347,25 @@ impl EngineBuilder {
                 }
                 Backend::Durable(store)
             }
-            None => Backend::Memory(Mutex::new(MemTable::default())),
+            None => Backend::Memory(Mutex::new(MemTable::new(m))),
         };
         let keys = schema.keys();
         Ok(Engine {
-            geometry,
-            keys,
-            schema: Arc::new(schema),
-            core: Mutex::new(BicCore::new(geometry)),
+            inner: Arc::new(Inner {
+                cfg,
+                geometry,
+                schema: Arc::new(schema),
+                keys,
+                core: Mutex::new(BicCore::new(geometry)),
+                backend,
+                cache: Mutex::new(None),
+                cards: Mutex::new(None),
+                counters: Mutex::new(Counters::default()),
+                next_batch: AtomicU64::new(0),
+            }),
             indexer,
-            backend,
             compactor,
-            cache: Mutex::new(None),
-            counters: Mutex::new(Counters::default()),
-            next_batch: AtomicU64::new(0),
-            cfg,
+            pipeline: Mutex::new(None),
         })
     }
 }
@@ -372,6 +415,14 @@ pub struct EngineStats {
     pub queries_sharded: u64,
     /// Queries served by the store reader.
     pub queries_store: u64,
+    /// Compressed rows folded by store-tier queries.
+    pub store_rows_folded: u64,
+    /// Serialized (on-disk) bytes of the rows store-tier queries folded
+    /// — the quantity zone-map pruning shrinks.
+    pub store_row_bytes_read: u64,
+    /// Chunk windows store-tier queries skipped (or bulk-cleared) via
+    /// zone maps instead of reading a row.
+    pub store_chunks_skipped: u64,
 }
 
 impl EngineStats {
@@ -387,14 +438,36 @@ impl EngineStats {
 #[derive(Default)]
 struct Counters {
     queries: [u64; 4],
+    fold: EvalStats,
 }
 
 /// In-memory backend state. Batches are `Arc`-shared so pinning a view
 /// for a query or snapshot is O(batches) pointer bumps, not a copy.
-#[derive(Default)]
 struct MemTable {
     batches: Vec<Arc<Vec<CodecBitmap>>>,
     bits: usize,
+    /// Exact per-attribute cardinalities, maintained at push — atomic
+    /// with the batch append under the same lock, so the planner's
+    /// cost input never needs a recount over the whole backend.
+    cards: Vec<u64>,
+}
+
+impl MemTable {
+    fn new(num_attrs: usize) -> MemTable {
+        MemTable { batches: Vec::new(), bits: 0, cards: vec![0; num_attrs] }
+    }
+
+    /// Append one encoded batch, folding its (build-time cached) row
+    /// cardinalities into the running totals. Returns its object count.
+    fn push(&mut self, ci: CompressedIndex) -> usize {
+        let objects = ci.num_objects();
+        self.bits += objects;
+        for (a, card) in self.cards.iter_mut().enumerate() {
+            *card += ci.cardinality(a) as u64;
+        }
+        self.batches.push(Arc::new(ci.into_rows()));
+        objects
+    }
 }
 
 enum Backend {
@@ -402,63 +475,25 @@ enum Backend {
     Memory(Mutex<MemTable>),
 }
 
-/// The session handle: ingest, flush, query, snapshot, stats, close.
-/// All methods take `&self` (internal locking), so one handle can serve
-/// concurrent ingesting and querying threads.
-pub struct Engine {
+/// The engine's shared core: everything the session methods and the
+/// async-ingest pipeline threads both touch, behind one `Arc`.
+pub(crate) struct Inner {
     cfg: EngineConfig,
     geometry: BicConfig,
     schema: Arc<Schema>,
-    keys: Vec<i32>,
+    pub(crate) keys: Vec<i32>,
     core: Mutex<BicCore>,
-    indexer: ShardedIndexer,
     backend: Backend,
-    compactor: Option<Compactor>,
     cache: Mutex<Option<Arc<CompressedIndex>>>,
+    /// Cached exact per-attribute cardinalities (zone maps + memtable
+    /// counts); the planner's cost model. Invalidated on ingest.
+    cards: Mutex<Option<Arc<Vec<u64>>>>,
     counters: Mutex<Counters>,
     next_batch: AtomicU64,
 }
 
-impl Engine {
-    /// Start building an engine over `schema`.
-    pub fn builder(schema: Schema) -> EngineBuilder {
-        EngineBuilder::new(schema)
-    }
-
-    /// The schema this engine indexes against.
-    pub fn schema(&self) -> &Schema {
-        &self.schema
-    }
-
-    /// The key vector handed to the indexing core (one per attribute).
-    pub fn keys(&self) -> &[i32] {
-        &self.keys
-    }
-
-    /// The resolved configuration.
-    pub fn config(&self) -> &EngineConfig {
-        &self.cfg
-    }
-
-    /// The core geometry (`n` records x `w` words x `m` keys).
-    pub fn geometry(&self) -> &BicConfig {
-        &self.geometry
-    }
-
-    /// Attribute rows per object.
-    pub fn num_attrs(&self) -> usize {
-        self.schema.num_attrs()
-    }
-
-    /// Objects currently indexed.
-    pub fn num_objects(&self) -> usize {
-        match &self.backend {
-            Backend::Durable(store) => store.lock().unwrap().num_objects(),
-            Backend::Memory(mem) => mem.lock().unwrap().bits,
-        }
-    }
-
-    fn check_records(&self, records: &[Vec<i32>]) -> Result<()> {
+impl Inner {
+    pub(crate) fn check_records(&self, records: &[Vec<i32>]) -> Result<()> {
         if records.len() > self.geometry.n_records {
             return Err(PallasError::Ingest(format!(
                 "batch of {} records exceeds capacity {}",
@@ -466,8 +501,10 @@ impl Engine {
                 self.geometry.n_records
             )));
         }
-        if let Some((j, r)) =
-            records.iter().enumerate().find(|(_, r)| r.len() > self.geometry.w_words)
+        if let Some((j, r)) = records
+            .iter()
+            .enumerate()
+            .find(|(_, r)| r.len() > self.geometry.w_words)
         {
             return Err(PallasError::Ingest(format!(
                 "record {j} has {} words, record width is {}",
@@ -478,81 +515,372 @@ impl Engine {
         Ok(())
     }
 
-    fn encode(&self, bi: &BitmapIndex) -> CompressedIndex {
+    pub(crate) fn encode(&self, bi: &BitmapIndex) -> CompressedIndex {
         match self.cfg.codec {
             CodecPolicy::Adaptive => CompressedIndex::from_index(bi),
             CodecPolicy::Forced(c) => CompressedIndex::from_index_forced(bi, c),
         }
     }
 
+    /// Derived read views (compressed cache, cardinality cache) go
+    /// stale on every append.
+    fn invalidate_views(&self) {
+        *self.cache.lock().unwrap() = None;
+        *self.cards.lock().unwrap() = None;
+    }
+
+    /// Append one encoded batch — [`Inner::append_group`] of one. On
+    /// the durable backend the WAL record is *submitted* under the
+    /// store lock and *waited on* outside it, so concurrent appenders
+    /// (sync callers, the async appender) share one group-commit fsync
+    /// instead of serializing them.
+    fn append(&self, ci: CompressedIndex) -> Result<IngestReceipt> {
+        let mut receipts = self.append_group(vec![ci])?;
+        Ok(receipts.pop().expect("one batch in, one receipt out"))
+    }
+
+    /// Append a whole trace of encoded batches as **one group**: every
+    /// WAL record is submitted under a single backend-lock acquisition
+    /// and the durability waits ride one group commit — `k` batches,
+    /// one fsync, instead of the `k` serial fsyncs of per-batch
+    /// appends. On an error the durably-acknowledged prefix keeps its
+    /// receipts' meaning (they were waited before the error returns).
+    fn append_group(
+        &self,
+        encoded: Vec<CompressedIndex>,
+    ) -> Result<Vec<IngestReceipt>> {
+        match &self.backend {
+            Backend::Durable(store) => {
+                let mut acked = Vec::with_capacity(encoded.len());
+                let mut first_err: Option<PallasError> = None;
+                {
+                    let mut g = store.lock().unwrap();
+                    for ci in &encoded {
+                        match g.begin_append_batch(ci) {
+                            Ok(ticket) => {
+                                let batch = self
+                                    .next_batch
+                                    .fetch_add(1, Ordering::Relaxed);
+                                let receipt = IngestReceipt {
+                                    batch,
+                                    objects: ci.num_objects(),
+                                    total_objects: g.num_objects(),
+                                    durable: true,
+                                };
+                                acked.push((ticket, receipt));
+                            }
+                            Err(e) => {
+                                first_err = Some(e.into());
+                                break;
+                            }
+                        }
+                    }
+                    if first_err.is_none()
+                        && self.cfg.compaction == CompactionMode::Foreground
+                    {
+                        if let Err(e) = g.compact() {
+                            first_err = Some(e.into());
+                        }
+                    }
+                }
+                self.invalidate_views();
+                // Drive the submitted prefix durable even when a later
+                // begin failed: the first wait leads one group commit
+                // covering every pending record.
+                let mut receipts = Vec::with_capacity(acked.len());
+                for (ticket, receipt) in acked {
+                    ticket.wait()?;
+                    receipts.push(receipt);
+                }
+                match first_err {
+                    Some(e) => Err(e),
+                    None => Ok(receipts),
+                }
+            }
+            Backend::Memory(mem) => {
+                let receipts = {
+                    let mut g = mem.lock().unwrap();
+                    encoded
+                        .into_iter()
+                        .map(|ci| {
+                            let objects = g.push(ci);
+                            let batch = self
+                                .next_batch
+                                .fetch_add(1, Ordering::Relaxed);
+                            IngestReceipt {
+                                batch,
+                                objects,
+                                total_objects: g.bits,
+                                durable: false,
+                            }
+                        })
+                        .collect()
+                };
+                self.invalidate_views();
+                Ok(receipts)
+            }
+        }
+    }
+
+    /// The async appender's batched variant of [`Inner::append`]: apply
+    /// a contiguous run of encoded batches under **one** backend lock
+    /// acquisition, then resolve their durability tickets — the first
+    /// wait leads one WAL group commit covering the whole run. Each
+    /// batch's result is delivered through its `done` channel.
+    pub(crate) fn apply_run(
+        &self,
+        run: Vec<(CompressedIndex, Sender<Result<IngestReceipt>>)>,
+    ) {
+        match &self.backend {
+            Backend::Durable(store) => {
+                let mut acked = Vec::with_capacity(run.len());
+                {
+                    let mut g = store.lock().unwrap();
+                    for (ci, done) in run {
+                        let objects = ci.num_objects();
+                        match g.begin_append_batch(&ci) {
+                            Ok(ticket) => {
+                                let batch = self
+                                    .next_batch
+                                    .fetch_add(1, Ordering::Relaxed);
+                                let receipt = IngestReceipt {
+                                    batch,
+                                    objects,
+                                    total_objects: g.num_objects(),
+                                    durable: true,
+                                };
+                                acked.push((ticket, receipt, done));
+                            }
+                            Err(e) => {
+                                let _ = done.send(Err(e.into()));
+                            }
+                        }
+                    }
+                    if self.cfg.compaction == CompactionMode::Foreground {
+                        // A merge failure here has no batch to blame it
+                        // on; it is retried on the next append round
+                        // (where the synchronous path also propagates
+                        // it), exactly like the background compactor's
+                        // per-tick retry.
+                        let _ = g.compact();
+                    }
+                }
+                self.invalidate_views();
+                for (ticket, receipt, done) in acked {
+                    let result =
+                        ticket.wait().map(|()| receipt).map_err(Into::into);
+                    let _ = done.send(result);
+                }
+            }
+            Backend::Memory(mem) => {
+                // Stale views must be invalidated before any ack goes
+                // out: a caller that waits a ticket and immediately
+                // queries must never be served a cached view missing
+                // its acknowledged batch.
+                let mut acked = Vec::with_capacity(run.len());
+                {
+                    let mut g = mem.lock().unwrap();
+                    for (ci, done) in run {
+                        let objects = g.push(ci);
+                        let batch =
+                            self.next_batch.fetch_add(1, Ordering::Relaxed);
+                        let receipt = IngestReceipt {
+                            batch,
+                            objects,
+                            total_objects: g.bits,
+                            durable: false,
+                        };
+                        acked.push((receipt, done));
+                    }
+                }
+                self.invalidate_views();
+                for (receipt, done) in acked {
+                    let _ = done.send(Ok(receipt));
+                }
+            }
+        }
+    }
+
+    /// Capture the current chunk tiling as an owned [`PinnedView`]. The
+    /// backend lock is held only for the capture (O(chunks) `Arc` bumps
+    /// plus, on the durable backend, a memtable clone bounded by
+    /// `flush_batches`) — queries then evaluate with no lock held, so a
+    /// long query never stalls ingest acknowledgment.
+    fn pin(&self) -> PinnedView {
+        let prune = self.cfg.zone_maps;
+        match &self.backend {
+            Backend::Durable(store) => {
+                let g = store.lock().unwrap();
+                PinnedView {
+                    segs: g.segments.clone(),
+                    mem: g
+                        .memtable
+                        .iter()
+                        .map(|b| Arc::new(b.clone()))
+                        .collect(),
+                    mem_base: g.segment_bits(),
+                    nbits: g.num_objects(),
+                    prune,
+                }
+            }
+            Backend::Memory(mem) => {
+                let g = mem.lock().unwrap();
+                PinnedView {
+                    segs: Vec::new(),
+                    mem: g.batches.clone(),
+                    mem_base: 0,
+                    nbits: g.bits,
+                    prune,
+                }
+            }
+        }
+    }
+}
+
+/// The session handle: ingest (sync or pipelined), flush, query,
+/// snapshot, stats, close. All methods take `&self` (internal locking),
+/// so one handle can serve concurrent ingesting and querying threads.
+pub struct Engine {
+    inner: Arc<Inner>,
+    indexer: ShardedIndexer,
+    compactor: Option<Compactor>,
+    /// The async-ingest stage, spawned lazily on the first
+    /// [`Engine::ingest_async`] call.
+    pipeline: Mutex<Option<IngestPipeline>>,
+}
+
+impl Engine {
+    /// Start building an engine over `schema`.
+    pub fn builder(schema: Schema) -> EngineBuilder {
+        EngineBuilder::new(schema)
+    }
+
+    /// The schema this engine indexes against.
+    pub fn schema(&self) -> &Schema {
+        &self.inner.schema
+    }
+
+    /// The key vector handed to the indexing core (one per attribute).
+    pub fn keys(&self) -> &[i32] {
+        &self.inner.keys
+    }
+
+    /// The resolved configuration.
+    pub fn config(&self) -> &EngineConfig {
+        &self.inner.cfg
+    }
+
+    /// The core geometry (`n` records x `w` words x `m` keys).
+    pub fn geometry(&self) -> &BicConfig {
+        &self.inner.geometry
+    }
+
+    /// Attribute rows per object.
+    pub fn num_attrs(&self) -> usize {
+        self.inner.schema.num_attrs()
+    }
+
+    /// Objects currently indexed.
+    pub fn num_objects(&self) -> usize {
+        match &self.inner.backend {
+            Backend::Durable(store) => store.lock().unwrap().num_objects(),
+            Backend::Memory(mem) => mem.lock().unwrap().bits,
+        }
+    }
+
     /// Ingest one batch of records (each a set of alphabet words, up to
     /// the configured width). Indexes on the calling thread, encodes per
     /// the codec policy, and appends to the memtable — durably (WAL
-    /// fsynced before return) when a store is attached.
+    /// fsynced before return) when a store is attached. This is the
+    /// synchronous differential reference for
+    /// [`Engine::ingest_async`].
     pub fn ingest(&self, records: &[Vec<i32>]) -> Result<IngestReceipt> {
-        self.check_records(records)?;
-        let bi = self.core.lock().unwrap().index(records, &self.keys);
-        self.append(self.encode(&bi))
+        self.inner.check_records(records)?;
+        let bi = self.inner.core.lock().unwrap().index(records, &self.inner.keys);
+        self.inner.append(self.inner.encode(&bi))
     }
 
     /// Ingest a whole trace of batches, fanned over the worker threads
-    /// (indexing and codec encoding parallelize; appends keep input
-    /// order, so batch `i` is acknowledged before batch `i + 1`).
+    /// (indexing and codec encoding parallelize) and appended as one
+    /// group: batch order is preserved (batch `i`'s objects sit below
+    /// batch `i + 1`'s) and on a durable engine the whole trace rides
+    /// as few WAL group-commit fsyncs as the flush cadence allows,
+    /// instead of one fsync per batch. All receipts return durable; on
+    /// an error, the batches already submitted were driven durable
+    /// before the error surfaces.
     pub fn ingest_batches(
         &self,
         batches: &[Vec<Vec<i32>>],
     ) -> Result<Vec<IngestReceipt>> {
         for records in batches {
-            self.check_records(records)?;
+            self.inner.check_records(records)?;
         }
         // Zero-copy fan-out: workers borrow the caller's records and the
         // engine's key vector directly (no per-batch `Batch` wrapping),
         // and encode — adaptive or forced — on the worker threads.
-        let forced = match self.cfg.codec {
+        let forced = match self.inner.cfg.codec {
             CodecPolicy::Adaptive => None,
             CodecPolicy::Forced(c) => Some(c),
         };
-        let encoded =
-            self.indexer.index_record_batches_compressed(batches, &self.keys, forced);
-        encoded.into_iter().map(|ci| self.append(ci)).collect()
+        let encoded = self.indexer.index_record_batches_compressed(
+            batches,
+            &self.inner.keys,
+            forced,
+        );
+        self.inner.append_group(encoded)
     }
 
-    fn append(&self, ci: CompressedIndex) -> Result<IngestReceipt> {
-        let objects = ci.num_objects();
-        // The batch id is taken while the backend lock is held, so ids
-        // agree with append (and WAL durability) order under concurrent
-        // ingest: batch `i`'s objects sit below batch `i + 1`'s.
-        let (batch, durable, total_objects) = match &self.backend {
-            Backend::Durable(store) => {
-                let mut g = store.lock().unwrap();
-                g.append_batch(&ci)?;
-                if self.cfg.compaction == CompactionMode::Foreground {
-                    g.compact()?;
-                }
-                let batch = self.next_batch.fetch_add(1, Ordering::Relaxed);
-                (batch, true, g.num_objects())
-            }
-            Backend::Memory(mem) => {
-                let mut g = mem.lock().unwrap();
-                g.bits += objects;
-                g.batches.push(Arc::new(ci.into_rows()));
-                let batch = self.next_batch.fetch_add(1, Ordering::Relaxed);
-                (batch, false, g.bits)
-            }
-        };
-        *self.cache.lock().unwrap() = None;
-        Ok(IngestReceipt { batch, objects, total_objects, durable })
+    /// Hand one batch to the pipelined ingest stage and return
+    /// immediately with an awaitable [`IngestTicket`] — the caller
+    /// overlaps record generation with indexing, encoding, and the WAL
+    /// group commit (see [`ingest`](self::ingest) for the stage
+    /// diagram). Validation still happens here, synchronously; blocks
+    /// only when `ingest_queue` batches are already in flight
+    /// (backpressure). Receipts resolve in batch-id order and carry the
+    /// same durability meaning as the synchronous path.
+    pub fn ingest_async(&self, records: Vec<Vec<i32>>) -> Result<IngestTicket> {
+        self.inner.check_records(&records)?;
+        let mut slot = self.pipeline.lock().unwrap();
+        let pipeline = slot.get_or_insert_with(|| {
+            IngestPipeline::spawn(
+                &self.inner,
+                self.indexer.shards(),
+                self.inner.cfg.ingest_queue,
+            )
+        });
+        Ok(pipeline.submit(records))
+    }
+
+    /// [`Engine::ingest_async`] over a whole trace: every batch is
+    /// validated up front, then submitted in order. The returned
+    /// tickets resolve in the same order.
+    pub fn ingest_batches_async(
+        &self,
+        batches: Vec<Vec<Vec<i32>>>,
+    ) -> Result<Vec<IngestTicket>> {
+        for records in &batches {
+            self.inner.check_records(records)?;
+        }
+        let mut slot = self.pipeline.lock().unwrap();
+        let pipeline = slot.get_or_insert_with(|| {
+            IngestPipeline::spawn(
+                &self.inner,
+                self.indexer.shards(),
+                self.inner.cfg.ingest_queue,
+            )
+        });
+        Ok(batches.into_iter().map(|b| pipeline.submit(b)).collect())
     }
 
     /// Flush the store memtable into an immutable segment. Returns the
     /// segment bytes written, `None` when the memtable was empty or no
     /// store is attached (the in-memory backend has nothing to flush).
     pub fn flush(&self) -> Result<Option<u64>> {
-        match &self.backend {
+        match &self.inner.backend {
             Backend::Durable(store) => {
                 let mut g = store.lock().unwrap();
                 let written = g.flush()?;
-                if self.cfg.compaction == CompactionMode::Foreground {
+                if self.inner.cfg.compaction == CompactionMode::Foreground {
                     g.compact()?;
                 }
                 Ok(written)
@@ -571,47 +899,15 @@ impl Engine {
         Ok(())
     }
 
-    /// Capture the current chunk tiling as an owned [`PinnedView`]. The
-    /// backend lock is held only for the capture (O(chunks) `Arc` bumps
-    /// plus, on the durable backend, a memtable clone bounded by
-    /// `flush_batches`) — queries then evaluate with no lock held, so a
-    /// long query never stalls ingest acknowledgment.
-    fn pin(&self) -> PinnedView {
-        match &self.backend {
-            Backend::Durable(store) => {
-                let g = store.lock().unwrap();
-                PinnedView {
-                    segs: g.segments.clone(),
-                    mem: g
-                        .memtable
-                        .iter()
-                        .map(|b| Arc::new(b.clone()))
-                        .collect(),
-                    mem_base: g.segment_bits(),
-                    nbits: g.num_objects(),
-                }
-            }
-            Backend::Memory(mem) => {
-                let g = mem.lock().unwrap();
-                PinnedView {
-                    segs: Vec::new(),
-                    mem: g.batches.clone(),
-                    mem_base: 0,
-                    nbits: g.bits,
-                }
-            }
-        }
-    }
-
     /// Run `f` over the current chunk tiling (captured, not locked).
     fn eval_with<R>(&self, f: impl FnOnce(&[RowChunk<'_>], usize) -> R) -> R {
-        let pinned = self.pin();
+        let pinned = self.inner.pin();
         f(&pinned.views(), pinned.nbits)
     }
 
     /// Get (building on first use) the cached compressed view.
     fn compressed_view(&self) -> Arc<CompressedIndex> {
-        let mut guard = self.cache.lock().unwrap();
+        let mut guard = self.inner.cache.lock().unwrap();
         if let Some(ci) = guard.as_ref() {
             return Arc::clone(ci);
         }
@@ -620,16 +916,61 @@ impl Engine {
             let bi = BitmapIndex::from_rows(
                 (0..m).map(|a| exec::assemble_row(chunks, a, nbits)).collect(),
             );
-            self.encode(&bi)
+            self.inner.encode(&bi)
         });
         let arc = Arc::new(ci);
         *guard = Some(Arc::clone(&arc));
         arc
     }
 
+    /// Exact per-attribute cardinalities over the whole index — the
+    /// planner's cost-model input. The in-memory backend keeps running
+    /// totals (maintained at push, O(attrs) to read); the durable
+    /// backend sums segment zone maps and counts only zone-less chunks
+    /// (memtable batches bounded by `flush_batches`, pre-zone-map
+    /// segments), cached until the next ingest.
+    fn row_cards(&self) -> Arc<Vec<u64>> {
+        if let Backend::Memory(mem) = &self.inner.backend {
+            return Arc::new(mem.lock().unwrap().cards.clone());
+        }
+        // Hold the cache slot across the computation (like
+        // `compressed_view`): an append that lands mid-count blocks on
+        // this lock to invalidate, so a stale vector can never be
+        // published over a fresher index.
+        let mut guard = self.inner.cards.lock().unwrap();
+        if let Some(c) = guard.as_ref() {
+            return Arc::clone(c);
+        }
+        let m = self.num_attrs();
+        let pinned = self.inner.pin();
+        let mut cards = vec![0u64; m];
+        for seg in &pinned.segs {
+            match &seg.zone {
+                Some(z) => {
+                    for (a, card) in cards.iter_mut().enumerate() {
+                        *card += z.card(a);
+                    }
+                }
+                None => {
+                    for (a, card) in cards.iter_mut().enumerate() {
+                        *card += seg.rows[a].count_ones() as u64;
+                    }
+                }
+            }
+        }
+        for batch in &pinned.mem {
+            for (a, card) in cards.iter_mut().enumerate() {
+                *card += batch[a].count_ones() as u64;
+            }
+        }
+        let arc = Arc::new(cards);
+        *guard = Some(Arc::clone(&arc));
+        arc
+    }
+
     fn plan_inputs(&self, q: &Query) -> PlanInputs {
         let conjunctive = matches!(q, Query::And(xs) if xs.len() >= 2);
-        let (durable, segments, chunks, total_bits) = match &self.backend {
+        let (durable, segments, chunks, total_bits) = match &self.inner.backend {
             Backend::Durable(store) => {
                 let g = store.lock().unwrap();
                 (
@@ -644,22 +985,48 @@ impl Engine {
                 (false, 0, g.batches.len(), g.bits)
             }
         };
+        // The cardinality cost model: a referenced row costs about a
+        // word of fold work per set bit, capped at its raw width. The
+        // cards are only consulted when a cost rule can actually fire:
+        // under a forced policy (rule 1) or with flushed segments
+        // (rule 2 — the planner's dominant durable case) the decision
+        // never reads `est_cost`, so skip the (cached, but
+        // invalidated-per-append) counting work on those hot paths.
+        let attrs = q.attrs();
+        let decided_early = matches!(self.inner.cfg.exec, ExecPolicy::Force(_))
+            || (durable && segments >= 1);
+        let est_cost = if attrs.is_empty() || decided_early {
+            0
+        } else {
+            let cards = self.row_cards();
+            attrs
+                .iter()
+                .filter(|&&a| a < cards.len())
+                .map(|&a| {
+                    (cards[a] as usize)
+                        .saturating_mul(planner::COST_BITS_PER_SET_BIT)
+                        .min(total_bits)
+                })
+                .sum()
+        };
         PlanInputs {
             durable,
             segments,
             chunks,
             total_bits,
+            est_cost,
             workers: self.indexer.shards(),
-            compressed_cached: self.cache.lock().unwrap().is_some(),
-            shard: self.cfg.shard,
+            compressed_cached: self.inner.cache.lock().unwrap().is_some(),
+            shard: self.inner.cfg.shard,
             conjunctive,
         }
     }
 
     /// What the planner would do with `q` right now (introspection; the
-    /// decision table lives in [`planner`]).
+    /// decision table and the cardinality cost model live in
+    /// [`planner`]).
     pub fn plan(&self, q: &Query) -> Plan {
-        planner::plan(self.cfg.exec, &self.plan_inputs(q))
+        planner::plan(self.inner.cfg.exec, &self.plan_inputs(q))
     }
 
     /// Evaluate a query; the planner picks the execution tier. Every
@@ -680,11 +1047,12 @@ impl Engine {
 
     /// Lower a predicate against the schema and [`Engine::query`] it.
     pub fn select(&self, p: &Predicate) -> Result<Bitmap> {
-        self.query(&p.lower(&self.schema)?)
+        self.query(&p.lower(&self.inner.schema)?)
     }
 
     fn run(&self, q: &Query, path: ExecPath) -> Result<Bitmap> {
         let m = self.num_attrs();
+        let mut fold = EvalStats::default();
         let out = match path {
             ExecPath::Raw => self.eval_with(|chunks, nbits| {
                 let bi = BitmapIndex::from_rows(
@@ -699,10 +1067,19 @@ impl Engine {
                 q.eval_compressed(&ci).expect("attrs validated")
             }
             ExecPath::Sharded => self.eval_with(|chunks, nbits| {
-                sharded_eval(chunks, nbits, q, self.indexer.shards())
+                // `Never` means single-threaded evaluation only: cap
+                // the worker count so the fold never fans out, while
+                // the tier (planner rule 7) stays available for
+                // touch-only-referenced-rows execution.
+                let workers = if self.inner.cfg.shard == ShardPolicy::Never {
+                    1
+                } else {
+                    self.indexer.shards()
+                };
+                sharded_eval(chunks, nbits, q, workers)
             }),
             ExecPath::Store => {
-                if !matches!(self.backend, Backend::Durable(_)) {
+                if !matches!(self.inner.backend, Backend::Durable(_)) {
                     return Err(PallasError::Config(
                         "store execution requires a durable store path".into(),
                     ));
@@ -710,12 +1087,20 @@ impl Engine {
                 // The reader's fold evaluation over the pinned segment
                 // set — semantically `StoreReader::eval`, but on the
                 // captured view so the store lock is not held while the
-                // query runs.
-                self.eval_with(|chunks, nbits| exec::eval_chunks(chunks, nbits, q))
+                // query runs. Touch accounting feeds the stats counters
+                // (the zone-pruning win is asserted, not just timed).
+                self.eval_with(|chunks, nbits| {
+                    exec::eval_chunks_with(chunks, nbits, q, &mut fold)
+                })
             }
         };
         let slot = ExecPath::ALL.iter().position(|&p| p == path).unwrap();
-        self.counters.lock().unwrap().queries[slot] += 1;
+        let mut counters = self.inner.counters.lock().unwrap();
+        counters.queries[slot] += 1;
+        counters.fold.rows_folded += fold.rows_folded;
+        counters.fold.row_bytes += fold.row_bytes;
+        counters.fold.chunks_skipped += fold.chunks_skipped;
+        drop(counters);
         Ok(out)
     }
 
@@ -723,13 +1108,13 @@ impl Engine {
     /// (`Arc`), the memtable batches shared or cloned compressed. Later
     /// ingest/flush/compaction cannot change what the snapshot reads.
     pub fn snapshot(&self) -> Snapshot {
-        Snapshot { schema: Arc::clone(&self.schema), view: self.pin() }
+        Snapshot { schema: Arc::clone(&self.inner.schema), view: self.inner.pin() }
     }
 
     /// Current engine census.
     pub fn stats(&self) -> EngineStats {
         let (durable, objects, segments, memtable_batches, segment_bytes) =
-            match &self.backend {
+            match &self.inner.backend {
                 Backend::Durable(store) => {
                     let g = store.lock().unwrap();
                     (
@@ -745,34 +1130,42 @@ impl Engine {
                     (false, g.bits, 0, g.batches.len(), 0)
                 }
             };
-        let counters = self.counters.lock().unwrap();
+        let counters = self.inner.counters.lock().unwrap();
         EngineStats {
             attrs: self.num_attrs(),
-            columns: self.schema.num_columns(),
+            columns: self.inner.schema.num_columns(),
             workers: self.indexer.shards(),
-            batches_ingested: self.next_batch.load(Ordering::Relaxed),
+            batches_ingested: self.inner.next_batch.load(Ordering::Relaxed),
             objects,
             durable,
             segments,
             memtable_batches,
             segment_bytes_written: segment_bytes,
-            compressed_cache: self.cache.lock().unwrap().is_some(),
+            compressed_cache: self.inner.cache.lock().unwrap().is_some(),
             queries_raw: counters.queries[0],
             queries_compressed: counters.queries[1],
             queries_sharded: counters.queries[2],
             queries_store: counters.queries[3],
+            store_rows_folded: counters.fold.rows_folded,
+            store_row_bytes_read: counters.fold.row_bytes,
+            store_chunks_skipped: counters.fold.chunks_skipped,
         }
     }
 
-    /// Graceful shutdown: stop the background compactor (if any), flush
-    /// the store memtable, and return the final census. Dropping the
-    /// engine without `close` is safe (the WAL covers the memtable) but
-    /// leaves the last segment unflushed.
+    /// Graceful shutdown: drain the async-ingest pipeline (every
+    /// submitted batch is applied and its ticket resolved), stop the
+    /// background compactor (if any), flush the store memtable, and
+    /// return the final census. Dropping the engine without `close` is
+    /// safe — the pipeline drains on drop too and the WAL covers the
+    /// memtable — but leaves the last segment unflushed.
     pub fn close(mut self) -> Result<EngineStats> {
+        if let Some(mut p) = self.pipeline.lock().unwrap().take() {
+            p.shutdown();
+        }
         if let Some(c) = self.compactor.take() {
             c.stop();
         }
-        if let Backend::Durable(store) = &self.backend {
+        if let Backend::Durable(store) = &self.inner.backend {
             store.lock().unwrap().flush()?;
         }
         Ok(self.stats())
@@ -784,8 +1177,9 @@ impl Engine {
 /// object, so evaluation distributes over the chunk concatenation; the
 /// merge is deterministic (slice order), making the result bit-identical
 /// to the other tiers regardless of thread interleaving. Each worker
-/// runs the fold evaluator over its slice rebased to 0, so only the rows
-/// a query references are ever touched — no whole-chunk decompression.
+/// runs the fold evaluator over its slice rebased to 0 (zone maps ride
+/// along), so only the rows a query references are ever touched — no
+/// whole-chunk decompression.
 fn sharded_eval(
     chunks: &[RowChunk<'_>],
     nbits: usize,
@@ -805,7 +1199,11 @@ fn sharded_eval(
                     let base = slice[0].base;
                     let local: Vec<RowChunk<'_>> = slice
                         .iter()
-                        .map(|c| RowChunk { base: c.base - base, rows: c.rows })
+                        .map(|c| RowChunk {
+                            base: c.base - base,
+                            rows: c.rows,
+                            zone: c.zone,
+                        })
                         .collect();
                     let last = slice.last().expect("slice is non-empty");
                     let len = last.base - base

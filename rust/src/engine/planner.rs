@@ -2,34 +2,65 @@
 //! never choose between `Query::eval`, `eval_compressed`, sharded
 //! evaluation, or the store reader by hand.
 //!
+//! Since the pruned-query PR the size gates are **cardinality-costed**
+//! instead of shape-heuristic: the engine keeps exact per-attribute
+//! cardinalities cached (summed from segment zone maps plus memtable
+//! row counts, invalidated on ingest) and estimates a query's work as
+//!
+//! ```text
+//! est_cost = Σ over referenced attrs a of min(total_bits, 64 · card(a))
+//! ```
+//!
+//! — a sparse row costs roughly a word per set bit to fold compressed,
+//! capped at the row's raw width for dense rows. A conjunction over
+//! provably sparse rows therefore stays on the cheap tiers no matter
+//! how many objects the index holds, and only queries whose referenced
+//! rows genuinely carry work cross the fan-out/encode thresholds.
+//!
 //! The decision table (PERF.md §engine-api reproduces it with the
 //! rationale):
 //!
-//! | # | condition                                               | path       |
-//! |---|---------------------------------------------------------|------------|
-//! | 1 | policy is `Force(p)`                                    | `p`        |
-//! | 2 | durable store with ≥ 1 flushed segment                  | Store      |
-//! | 3 | `ShardPolicy::Always`, ≥ 2 chunks, > 1 worker           | Sharded    |
-//! | 4 | compressed view already cached                          | Compressed |
-//! | 5 | `ShardPolicy::Auto`, ≥ 2 chunks, > 1 worker, ≥ 256 Kbit | Sharded    |
-//! | 6 | conjunctive query, ≥ 64 Kbit                            | Compressed |
-//! | 7 | otherwise                                               | Raw        |
+//! | # | condition                                                 | path       |
+//! |---|-----------------------------------------------------------|------------|
+//! | 1 | policy is `Force(p)`                                      | `p`        |
+//! | 2 | durable store with ≥ 1 flushed segment                    | Store      |
+//! | 3 | `ShardPolicy::Always`, ≥ 2 chunks, > 1 worker             | Sharded    |
+//! | 4 | compressed view already cached                            | Compressed |
+//! | 5 | `ShardPolicy::Auto`, ≥ 2 chunks, > 1 worker, cost ≥ 256 Kb | Sharded   |
+//! | 6 | conjunctive query, cost ≥ 64 Kb                           | Compressed |
+//! | 7 | index ≥ 64 Kbit (sparse query over a large index)         | Sharded*   |
+//! | 8 | otherwise                                                 | Raw        |
+//!
+//! \* under `ShardPolicy::Never` the sharded tier runs as a
+//! single-threaded chunk fold (the engine caps its worker count to 1),
+//! so rule 7 never violates the policy. The rule exists because the
+//! raw tier materializes *every* attribute row to answer anything —
+//! fine for a small index, pathological for a sparse query over a
+//! large one, which the fold evaluator answers touching only the
+//! referenced rows.
 //!
 //! Rule 2 dominates because the store reader assembles only the rows a
-//! query references and folds conjunctions segment-by-segment through
-//! the offset AND/ANDNOT kernels — every other tier starts by touching
-//! whole rows. Rules 5/6 gate the heavier setups (thread fan-out,
-//! one-time compressed encode) behind index sizes where they pay off.
-//! Every tier returns a bit-identical result; the planner only changes
-//! cost (`rust/tests/engine_props.rs` pins this across all four).
+//! query references, folds conjunctions segment-by-segment through the
+//! offset AND/ANDNOT kernels, and — with zone maps — skips segments
+//! that cannot contribute at all. Rules 5/6 gate the heavier setups
+//! (thread fan-out, one-time compressed encode) behind estimated work
+//! where they pay off. Every tier returns a bit-identical result; the
+//! planner only changes cost (`rust/tests/engine_props.rs` pins this
+//! across all four).
 
 use super::config::ShardPolicy;
 
-/// Minimum total index bits before the sharded fan-out pays for itself.
+/// Minimum estimated row-work bits before the sharded fan-out pays for
+/// itself.
 pub const SHARD_MIN_BITS: usize = 1 << 18;
 
-/// Minimum total index bits before building the compressed view pays.
+/// Minimum estimated row-work bits before building the compressed view
+/// pays.
 pub const COMPRESS_MIN_BITS: usize = 1 << 16;
+
+/// Approximate bits of fold work per set bit in a compressed row (a
+/// run/container touch costs about a word).
+pub const COST_BITS_PER_SET_BIT: usize = 64;
 
 /// One of the four query execution tiers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -42,8 +73,8 @@ pub enum ExecPath {
     /// Evaluate per chunk on worker threads, concatenate in chunk order
     /// (deterministic merge).
     Sharded,
-    /// The durable store's reader: segment-by-segment fold kernels,
-    /// memtable included. Requires a durable path.
+    /// The durable store's reader: segment-by-segment fold kernels with
+    /// zone-map skipping, memtable included. Requires a durable path.
     Store,
 }
 
@@ -91,8 +122,12 @@ pub(crate) struct PlanInputs {
     pub segments: usize,
     /// Chunks tiling the object space (segments + memtable batches).
     pub chunks: usize,
-    /// Total objects.
+    /// Total objects (the raw tier's per-row cost scale).
     pub total_bits: usize,
+    /// Estimated row-work bits for this query: the cardinality cost
+    /// model above, computed by the engine from its cached per-row
+    /// cardinalities.
+    pub est_cost: usize,
     /// Worker threads available to the sharded path.
     pub workers: usize,
     /// A compressed view is already cached.
@@ -123,20 +158,33 @@ pub(crate) fn plan(policy: ExecPolicy, i: &PlanInputs) -> Plan {
             reason: "compressed view cached",
         };
     }
-    if i.shard == ShardPolicy::Auto && can_shard && i.total_bits >= SHARD_MIN_BITS
+    if i.shard == ShardPolicy::Auto && can_shard && i.est_cost >= SHARD_MIN_BITS
     {
         return Plan {
             path: ExecPath::Sharded,
-            reason: "large multi-chunk index",
+            reason: "multi-chunk query with heavy estimated row work",
         };
     }
-    if i.conjunctive && i.total_bits >= COMPRESS_MIN_BITS {
+    if i.conjunctive && i.est_cost >= COMPRESS_MIN_BITS {
         return Plan {
             path: ExecPath::Compressed,
-            reason: "conjunctive query over a large index",
+            reason: "conjunction with heavy estimated row work",
         };
     }
-    Plan { path: ExecPath::Raw, reason: "small in-memory index" }
+    // Light estimated work over a *large* index must still avoid the
+    // raw tier, which assembles every attribute row regardless of the
+    // query: the fold evaluator touches only referenced rows. The
+    // sharded entry degrades to a single-threaded fold when the layout
+    // does not allow fan-out — or when `ShardPolicy::Never` forbids it
+    // (the engine caps its worker count to 1 for this tier then), so
+    // picking it never violates the policy.
+    if i.total_bits >= COMPRESS_MIN_BITS {
+        return Plan {
+            path: ExecPath::Sharded,
+            reason: "sparse query over a large index: fold referenced rows",
+        };
+    }
+    Plan { path: ExecPath::Raw, reason: "small index" }
 }
 
 #[cfg(test)]
@@ -149,6 +197,7 @@ mod tests {
             segments: 0,
             chunks: 1,
             total_bits: 1 << 10,
+            est_cost: 1 << 10,
             workers: 8,
             compressed_cached: false,
             shard: ShardPolicy::Auto,
@@ -174,14 +223,14 @@ mod tests {
     }
 
     #[test]
-    fn sharding_needs_chunks_workers_and_size() {
+    fn sharding_needs_chunks_workers_and_estimated_work() {
         let big = PlanInputs {
             chunks: 8,
-            total_bits: SHARD_MIN_BITS,
+            est_cost: SHARD_MIN_BITS,
             ..inputs()
         };
         assert_eq!(plan(ExecPolicy::Auto, &big).path, ExecPath::Sharded);
-        let small = PlanInputs { total_bits: SHARD_MIN_BITS - 1, ..big };
+        let small = PlanInputs { est_cost: SHARD_MIN_BITS - 1, ..big };
         assert_ne!(plan(ExecPolicy::Auto, &small).path, ExecPath::Sharded);
         let one_worker = PlanInputs { workers: 1, ..big };
         assert_ne!(plan(ExecPolicy::Auto, &one_worker).path, ExecPath::Sharded);
@@ -189,7 +238,7 @@ mod tests {
         assert_ne!(plan(ExecPolicy::Auto, &never).path, ExecPath::Sharded);
         let always_small = PlanInputs {
             shard: ShardPolicy::Always,
-            total_bits: 64,
+            est_cost: 64,
             chunks: 2,
             ..inputs()
         };
@@ -197,16 +246,41 @@ mod tests {
     }
 
     #[test]
-    fn conjunctions_over_large_indexes_compress() {
+    fn heavy_conjunctions_compress_and_sparse_ones_stay_raw() {
         let i = PlanInputs {
             conjunctive: true,
-            total_bits: COMPRESS_MIN_BITS,
+            est_cost: COMPRESS_MIN_BITS,
             ..inputs()
         };
         assert_eq!(plan(ExecPolicy::Auto, &i).path, ExecPath::Compressed);
         let cached = PlanInputs { compressed_cached: true, ..inputs() };
         assert_eq!(plan(ExecPolicy::Auto, &cached).path, ExecPath::Compressed);
-        let small = PlanInputs { conjunctive: true, ..inputs() };
+        // A conjunction over provably sparse rows — tiny estimated cost
+        // on a *small* index — stays on the raw tier.
+        let sparse = PlanInputs {
+            conjunctive: true,
+            est_cost: COMPRESS_MIN_BITS - 1,
+            ..inputs()
+        };
+        assert_eq!(plan(ExecPolicy::Auto, &sparse).path, ExecPath::Raw);
+    }
+
+    #[test]
+    fn sparse_queries_over_large_indexes_never_go_raw() {
+        // Tiny estimated work, huge index: the raw tier would assemble
+        // every row — the fold evaluator wins.
+        let i = PlanInputs {
+            total_bits: 1 << 24,
+            est_cost: 64,
+            ..inputs()
+        };
+        assert_eq!(plan(ExecPolicy::Auto, &i).path, ExecPath::Sharded);
+        // Under ShardPolicy::Never the same tier is picked but runs as
+        // a single-threaded fold (the engine caps its workers to 1).
+        let never = PlanInputs { shard: ShardPolicy::Never, ..i };
+        assert_eq!(plan(ExecPolicy::Auto, &never).path, ExecPath::Sharded);
+        // A genuinely small index still takes the raw reference tier.
+        let small = PlanInputs { total_bits: 1 << 10, est_cost: 64, ..inputs() };
         assert_eq!(plan(ExecPolicy::Auto, &small).path, ExecPath::Raw);
     }
 }

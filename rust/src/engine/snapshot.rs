@@ -37,6 +37,9 @@ pub(crate) struct PinnedView {
     pub mem_base: usize,
     /// Total objects covered.
     pub nbits: usize,
+    /// Expose segment zone maps to the evaluator (the engine's
+    /// `zone_maps` knob; memtable batches are always zone-unknown).
+    pub prune: bool,
 }
 
 impl PinnedView {
@@ -45,11 +48,15 @@ impl PinnedView {
         let mut out: Vec<RowChunk<'_>> = self
             .segs
             .iter()
-            .map(|s| RowChunk { base: s.base, rows: &s.rows })
+            .map(|s| RowChunk {
+                base: s.base,
+                rows: &s.rows,
+                zone: if self.prune { s.zone.as_ref() } else { None },
+            })
             .collect();
         let mut off = self.mem_base;
         for batch in &self.mem {
-            out.push(RowChunk { base: off, rows: batch });
+            out.push(RowChunk { base: off, rows: batch, zone: None });
             off += batch.first().map_or(0, CodecBitmap::len);
         }
         out

@@ -1,11 +1,25 @@
 //! Background compaction: merge small segments into larger ones so the
 //! live set (and per-query segment fan-in) stays bounded as ingest runs.
 //!
+//! The picker is **size-tiered**: segments are bucketed by the power of
+//! two of their on-disk size, and one round merges a whole adjacent run
+//! of at least `tier_width` same-class segments — preferring the
+//! *smallest* size class, so freshly flushed small segments coalesce
+//! long before anything rewrites a large one (write amplification stays
+//! logarithmic instead of quadratic, unlike the old adjacent-pair
+//! heuristic that re-merged its own output). Adjacency is required
+//! because segment bases must keep tiling the object space
+//! contiguously. When the live set exceeds `max_segments` but no tier
+//! has a wide-enough run, the smallest-combined adjacent pair merges as
+//! a fallback, so compaction always makes progress.
+//!
 //! A merge is crash-atomic the same way a flush is: the merged segment
-//! is fully written + fsynced first, then one manifest commit swaps it
-//! in for its inputs (tombstoning them — they stop being referenced),
-//! then the input files are unlinked. A crash anywhere leaves either the
-//! old set or the new set live; orphaned files are removed on recovery.
+//! is fully written + fsynced first (its zone map recomputed over the
+//! merged rows, so pruning survives compaction), then one manifest
+//! commit swaps it in for its inputs (tombstoning them — they stop
+//! being referenced), then the input files are unlinked. A crash
+//! anywhere leaves either the old set or the new set live; orphaned
+//! files are removed on recovery.
 
 use std::fs;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -22,57 +36,114 @@ use crate::bic::codec::CodecBitmap;
 /// When and what to merge.
 #[derive(Clone, Copy, Debug)]
 pub struct CompactionPolicy {
-    /// Merge (one adjacent pair per round) while the live segment count
-    /// exceeds this.
+    /// Merge (one tier run or fallback pair per round) while the live
+    /// segment count exceeds this.
     pub max_segments: usize,
+    /// Minimum adjacent same-size-class run length that merges as a
+    /// tier (values below 2 behave as 2).
+    pub tier_width: usize,
 }
 
 impl Default for CompactionPolicy {
     fn default() -> Self {
-        Self { max_segments: 4 }
+        Self { max_segments: 4, tier_width: 2 }
     }
 }
 
-impl Store {
-    /// One compaction round: merge the adjacent segment pair with the
-    /// smallest combined on-disk size (adjacency keeps bases
-    /// contiguous). Returns whether a merge happened.
-    pub fn compact_once(&mut self) -> Result<bool> {
-        let max = self.cfg.compaction.max_segments.max(1);
-        if self.segments.len() <= max {
-            return Ok(false);
-        }
-        let mut pick = 0usize;
-        let mut pick_bytes = u64::MAX;
-        for (i, pair) in self.segments.windows(2).enumerate() {
-            let combined = pair[0].bytes + pair[1].bytes;
-            if combined < pick_bytes {
-                pick_bytes = combined;
-                pick = i;
-            }
-        }
+/// Size class: the power-of-two bucket of a segment's on-disk bytes.
+fn size_class(bytes: u64) -> u32 {
+    64 - bytes.max(1).leading_zeros()
+}
 
-        // Assemble the merged rows: each input row streamed at its
-        // offset within the merged range, re-encoded adaptively.
-        let (left, right) = (&self.segments[pick], &self.segments[pick + 1]);
-        let nbits = left.nbits + right.nbits;
-        let base = left.base;
+/// The range `[start, end)` one compaction round merges, or `None` when
+/// the live set is within policy. Pure so the picker is unit-testable:
+/// the smallest size class with an adjacent run of `>= tier_width`
+/// members wins (leftmost run on ties); with no such run, the
+/// smallest-combined adjacent pair keeps compaction progressing.
+fn pick_range(
+    sizes: &[u64],
+    max_segments: usize,
+    tier_width: usize,
+) -> Option<(usize, usize)> {
+    if sizes.len() <= max_segments.max(1) {
+        return None;
+    }
+    let k = tier_width.max(2);
+    let classes: Vec<u32> = sizes.iter().map(|&b| size_class(b)).collect();
+    let mut pick: Option<(usize, usize, u32)> = None;
+    let mut i = 0usize;
+    while i < classes.len() {
+        let mut j = i + 1;
+        while j < classes.len() && classes[j] == classes[i] {
+            j += 1;
+        }
+        let better = match pick {
+            None => true,
+            Some((_, _, c)) => classes[i] < c,
+        };
+        if j - i >= k && better {
+            pick = Some((i, j, classes[i]));
+        }
+        i = j;
+    }
+    if let Some((s, e, _)) = pick {
+        return Some((s, e));
+    }
+    // Fallback: smallest-combined adjacent pair.
+    let mut best = 0usize;
+    let mut best_bytes = u64::MAX;
+    for (i, pair) in sizes.windows(2).enumerate() {
+        let combined = pair[0] + pair[1];
+        if combined < best_bytes {
+            best_bytes = combined;
+            best = i;
+        }
+    }
+    Some((best, best + 2))
+}
+
+impl Store {
+    /// One compaction round: merge the segment range the size-tiered
+    /// picker chose (see module docs). Returns whether a merge happened.
+    pub fn compact_once(&mut self) -> Result<bool> {
+        let sizes: Vec<u64> = self.segments.iter().map(|s| s.bytes).collect();
+        let policy = self.cfg.compaction;
+        let Some((start, end)) =
+            pick_range(&sizes, policy.max_segments, policy.tier_width)
+        else {
+            return Ok(false);
+        };
+        self.merge_range(start, end)?;
+        Ok(true)
+    }
+
+    /// Merge segments `[start, end)` into one: each input row streamed
+    /// at its offset within the merged range, re-encoded adaptively,
+    /// with the zone map recomputed at write.
+    fn merge_range(&mut self, start: usize, end: usize) -> Result<()> {
+        let span = &self.segments[start..end];
+        let base = span[0].base;
+        let nbits: usize = span.iter().map(|s| s.nbits).sum();
         let rows: Vec<CodecBitmap> = (0..self.num_attrs)
             .map(|a| {
                 let mut acc = Bitmap::zeros(nbits);
-                left.rows[a].or_into_at(&mut acc, 0);
-                right.rows[a].or_into_at(&mut acc, left.nbits);
+                let mut off = 0usize;
+                for s in span {
+                    s.rows[a].or_into_at(&mut acc, off);
+                    off += s.nbits;
+                }
                 CodecBitmap::from_bitmap(&acc)
             })
             .collect();
-        let old_files = [left.file.clone(), right.file.clone()];
+        let old_files: Vec<String> =
+            span.iter().map(|s| s.file.clone()).collect();
 
         let id = self.next_segment_id;
-        let (file, bytes) = segment::write(&self.dir, id, base, &rows)?;
+        let (file, bytes, zone) = segment::write(&self.dir, id, base, &rows)?;
         let mut entries: Vec<SegmentEntry> = self.manifest_entries();
         let merged_entry =
             SegmentEntry { id, file: file.clone(), base, nbits, bytes };
-        entries.splice(pick..pick + 2, [merged_entry]);
+        entries.splice(start..end, [merged_entry]);
         manifest::commit(
             &self.dir,
             &ManifestState {
@@ -86,14 +157,22 @@ impl Store {
         // Committed: the inputs are tombstoned (unreferenced); unlink
         // them now, or recovery's orphan sweep will. Pinned snapshots
         // holding the old `Arc<Segment>`s keep reading them from memory.
-        let merged = Arc::new(Segment { id, file, base, nbits, bytes, rows });
-        self.segments.splice(pick..pick + 2, [merged]);
+        let merged = Arc::new(Segment {
+            id,
+            file,
+            base,
+            nbits,
+            bytes,
+            rows,
+            zone: Some(zone),
+        });
+        self.segments.splice(start..end, [merged]);
         self.next_segment_id = id + 1;
         self.note_segment_bytes(bytes);
         for f in old_files {
             let _ = fs::remove_file(self.dir.join(f));
         }
-        Ok(true)
+        Ok(())
     }
 
     /// Compact until the policy is satisfied; returns rounds run.
@@ -149,5 +228,52 @@ impl Compactor {
 impl Drop for Compactor {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picker_prefers_the_smallest_tier_run() {
+        // Two tiers: four same-class small segments (all within the
+        // 512..1024 bucket — class boundaries matter) then two ~1MB
+        // ones. The small tier merges first even though the large pair
+        // is adjacent too.
+        let sizes = [600, 700, 650, 620, 1 << 20, (1 << 20) + 4096];
+        assert_eq!(pick_range(&sizes, 3, 2), Some((0, 4)));
+        // Within policy: nothing to do.
+        assert_eq!(pick_range(&sizes, 6, 2), None);
+    }
+
+    #[test]
+    fn picker_falls_back_to_the_smallest_adjacent_pair() {
+        // Strictly geometric sizes: no two adjacent share a class, so
+        // the fallback merges the smallest-combined adjacent pair.
+        let sizes = [100, 1_000, 10_000, 100_000, 1_000_000];
+        assert_eq!(pick_range(&sizes, 2, 2), Some((0, 2)));
+    }
+
+    #[test]
+    fn picker_honours_tier_width() {
+        // A run of three equal-class segments is not enough for k = 4;
+        // the fallback pair (the two smallest adjacents) fires instead.
+        let sizes = [700, 720, 710, 1 << 19, 1 << 25];
+        assert_eq!(pick_range(&sizes, 2, 4), Some((0, 2)));
+        // With k = 2 the whole small run merges at once.
+        assert_eq!(pick_range(&sizes, 2, 2), Some((0, 3)));
+    }
+
+    #[test]
+    fn size_classes_are_power_of_two_buckets() {
+        assert_eq!(size_class(1), 1);
+        assert_eq!(size_class(2), 2);
+        assert_eq!(size_class(3), 2);
+        assert_eq!(size_class(1024), 11);
+        assert_eq!(size_class(1025), 11);
+        assert_eq!(size_class(2047), 11);
+        assert_eq!(size_class(2048), 12);
+        assert_eq!(size_class(0), 1, "zero-byte guard");
     }
 }

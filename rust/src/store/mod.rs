@@ -38,10 +38,12 @@ pub mod manifest;
 pub mod reader;
 pub mod segment;
 pub mod wal;
+pub mod zone;
 
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::bic::bitmap::Bitmap;
 use crate::bic::codec::{CodecBitmap, CompressedIndex};
@@ -50,7 +52,9 @@ pub use self::compaction::Compactor;
 use self::manifest::{ManifestState, SegmentEntry};
 pub use self::reader::StoreReader;
 use self::segment::Segment;
+pub use self::wal::AppendTicket;
 use self::wal::Wal;
+pub use self::zone::ZoneMap;
 
 /// Store-layer errors. I/O failures pass through; corruption found while
 /// reading (bad magic, checksum mismatch, structural violations) is
@@ -75,11 +79,24 @@ pub struct StoreConfig {
     pub flush_batches: usize,
     /// When the background/foreground compactor merges segments.
     pub compaction: CompactionPolicy,
+    /// Group-commit batching window: how long an append may wait for
+    /// co-travellers before leading a WAL sync itself (bounds the added
+    /// ack latency; zero syncs immediately). See [`wal`].
+    pub group_window: Duration,
+    /// Use segment zone maps to skip segments at query time. Writing
+    /// the maps is unconditional; this gates only the read side (the
+    /// differential off-switch for skip-vs-noskip testing).
+    pub zone_pruning: bool,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        Self { flush_batches: 64, compaction: CompactionPolicy::default() }
+        Self {
+            flush_batches: 64,
+            compaction: CompactionPolicy::default(),
+            group_window: Duration::ZERO,
+            zone_pruning: true,
+        }
     }
 }
 
@@ -127,7 +144,7 @@ impl Store {
             segments: Vec::new(),
         };
         manifest::commit(&dir, &state)?;
-        let wal = Wal::create(&dir, 0)?;
+        let wal = Wal::create(&dir, 0, cfg.group_window)?;
         Ok(Store {
             dir,
             cfg,
@@ -214,7 +231,12 @@ impl Store {
         // batch set since the last flush.
         let (memtable, valid_len) =
             wal::replay(&dir, state.wal_gen, state.num_attrs)?;
-        let wal = Wal::open_truncated(&dir, state.wal_gen, valid_len)?;
+        let wal = Wal::open_truncated(
+            &dir,
+            state.wal_gen,
+            valid_len,
+            cfg.group_window,
+        )?;
         let memtable_bits = memtable
             .iter()
             .map(|rows| rows.first().map_or(0, CodecBitmap::len))
@@ -267,6 +289,14 @@ impl Store {
     /// Append one encoded batch. Returns once the batch is durable in
     /// the WAL (fsynced); may trigger an auto-flush.
     pub fn append_batch(&mut self, ci: &CompressedIndex) -> Result<()> {
+        self.begin_append_batch(ci)?.wait()
+    }
+
+    /// [`Store::begin_append`] over an encoded batch.
+    pub fn begin_append_batch(
+        &mut self,
+        ci: &CompressedIndex,
+    ) -> Result<AppendTicket> {
         if ci.num_attrs() != self.num_attrs {
             return Err(StoreError::Invalid(format!(
                 "batch has {} attrs, store has {}",
@@ -274,12 +304,39 @@ impl Store {
                 self.num_attrs
             )));
         }
-        self.append_rows(ci.rows().to_vec())
+        self.begin_append(ci.rows().to_vec())
     }
 
     /// [`Store::append_batch`] over pre-encoded rows (one per attribute,
     /// all the same length).
     pub fn append_rows(&mut self, rows: Vec<CodecBitmap>) -> Result<()> {
+        self.begin_append(rows)?.wait()
+    }
+
+    /// Submit one batch for append and return its durability ticket:
+    /// the rows are validated, framed into the WAL's pending buffer,
+    /// and applied to the memtable — all cheap — and
+    /// [`AppendTicket::wait`] then blocks until the record is fsynced,
+    /// riding a **group commit** when other appends are in flight.
+    /// Callers holding a lock around the store (the engine, the index
+    /// service) submit under the lock and wait outside it, so `k`
+    /// concurrent appenders share one fsync instead of serializing `k`.
+    ///
+    /// May trigger an auto-flush, which drives every pending submission
+    /// durable first (a returned ticket is then already acknowledged —
+    /// its `wait` is free).
+    ///
+    /// Failure contract: the rows become memtable-visible at submit
+    /// time. If the group sync later fails, the ticket's `wait` errors
+    /// and the WAL generation is poisoned — every further append *and*
+    /// flush on this handle errors, so the unacknowledged rows can
+    /// never be persisted, but a live handle may still serve reads
+    /// that include them. Reopen the store to recover exactly the
+    /// acknowledged prefix.
+    pub fn begin_append(
+        &mut self,
+        rows: Vec<CodecBitmap>,
+    ) -> Result<AppendTicket> {
         if rows.len() != self.num_attrs {
             return Err(StoreError::Invalid(format!(
                 "batch has {} rows, store has {} attrs",
@@ -291,7 +348,7 @@ impl Store {
         if rows.iter().any(|r| r.len() != nbits) {
             return Err(StoreError::Invalid("ragged batch rows".into()));
         }
-        self.wal.append(&rows)?; // fsync: the durability point
+        let ticket = self.wal.submit(&rows)?;
         self.memtable_bits += nbits;
         self.memtable.push(rows);
         if self.cfg.flush_batches > 0
@@ -299,7 +356,7 @@ impl Store {
         {
             self.flush()?;
         }
-        Ok(())
+        Ok(ticket)
     }
 
     /// Flush the memtable into an immutable segment: concatenate each
@@ -313,6 +370,10 @@ impl Store {
         if self.memtable.is_empty() {
             return Ok(None);
         }
+        // Drive every outstanding group-commit submission durable before
+        // the generation rotates: a ticket must never be stranded behind
+        // a WAL the manifest no longer references.
+        self.wal.sync_pending()?;
         let base = self.segment_bits();
         let nbits = self.memtable_bits;
         let rows: Vec<CodecBitmap> = (0..self.num_attrs)
@@ -328,7 +389,7 @@ impl Store {
             .collect();
 
         let id = self.next_segment_id;
-        let (file, bytes) = segment::write(&self.dir, id, base, &rows)?;
+        let (file, bytes, zone) = segment::write(&self.dir, id, base, &rows)?;
         let new_gen = self.wal_gen + 1;
         // Open the next WAL generation *before* the commit: every
         // fallible step happens while the old state is still the
@@ -337,7 +398,7 @@ impl Store {
         // next recovery sweeps). After the commit the swap below is
         // infallible, so the handle can never keep acknowledging
         // appends into a generation the manifest has rotated away.
-        let new_wal = Wal::create(&self.dir, new_gen)?;
+        let new_wal = Wal::create(&self.dir, new_gen, self.cfg.group_window)?;
         let mut entries = self.manifest_entries();
         entries.push(SegmentEntry {
             id,
@@ -362,8 +423,15 @@ impl Store {
         let _ = fs::remove_file(old_wal);
         self.wal_gen = new_gen;
         self.next_segment_id = id + 1;
-        self.segments
-            .push(Arc::new(Segment { id, file, base, nbits, bytes, rows }));
+        self.segments.push(Arc::new(Segment {
+            id,
+            file,
+            base,
+            nbits,
+            bytes,
+            rows,
+            zone: Some(zone),
+        }));
         self.memtable.clear();
         self.memtable_bits = 0;
         self.segment_bytes_written += bytes;
@@ -376,21 +444,27 @@ impl Store {
     }
 
     /// The chunk tiling of the global object space: every live segment
-    /// at its base, then the memtable batches at theirs. This is the
-    /// *single source* of the tiling rule — the reader and every engine
-    /// query tier consume it, and `Engine::snapshot` pins the same
-    /// layout with `Arc` clones. Change the rule here (e.g. zone maps,
-    /// non-contiguous bases) and every consumer follows.
+    /// at its base (carrying its zone map when `zone_pruning` is on),
+    /// then the memtable batches at theirs (always zone-unknown). This
+    /// is the *single source* of the tiling rule — the reader and every
+    /// engine query tier consume it, and `Engine::snapshot` pins the
+    /// same layout with `Arc` clones. Change the rule here and every
+    /// consumer follows.
     pub(crate) fn chunks(&self) -> Vec<crate::engine::exec::RowChunk<'_>> {
         use crate::engine::exec::RowChunk;
+        let prune = self.cfg.zone_pruning;
         let mut out: Vec<RowChunk<'_>> = self
             .segments
             .iter()
-            .map(|s| RowChunk { base: s.base, rows: &s.rows })
+            .map(|s| RowChunk {
+                base: s.base,
+                rows: &s.rows,
+                zone: if prune { s.zone.as_ref() } else { None },
+            })
             .collect();
         let mut off = self.segment_bits();
         for batch in &self.memtable {
-            out.push(RowChunk { base: off, rows: batch });
+            out.push(RowChunk { base: off, rows: batch, zone: None });
             off += batch.first().map_or(0, CodecBitmap::len);
         }
         out

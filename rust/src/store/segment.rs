@@ -1,18 +1,27 @@
 //! Immutable segment files — the durable unit of the store.
 //!
-//! Layout (all little-endian):
+//! Current layout, version 2 (all little-endian):
 //!
 //! ```text
-//! [ 0.. 8)  magic  b"BICSEG1\0"
+//! [ 0.. 8)  magic  b"BICSEG2\0"
 //! [ 8..16)  id     u64   segment id (manifest cross-check)
 //! [16..24)  base   u64   first global object id this segment covers
 //! [24..32)  nbits  u64   objects (bits per row)
 //! [32..36)  m      u32   attribute row count
-//! [36..36+12m)    row directory: m x { offset u64, len u32 }
-//!                 (absolute file offset + byte length of each payload)
+//! [36..36+20m)    row directory: m x { offset u64, len u32, card u64 }
+//!                 (absolute file offset + byte length of each payload,
+//!                  plus the row's exact cardinality — the zone map)
 //! [.. ]     payloads: m codec-tagged rows (CodecBitmap::write_bytes)
 //! [-4..]    crc32 over every preceding byte
 //! ```
+//!
+//! The per-row `card` column is the segment's [`ZoneMap`]: queries use
+//! it to skip segments that cannot contribute (see [`super::zone`]).
+//! Version-1 files (`b"BICSEG1\0"`, 12-byte directory entries, no
+//! cards) still load — they just carry no zone map, which the
+//! evaluator treats as "unknown, never skip". Loading a v2 file
+//! re-verifies every stored cardinality against the decoded row, so a
+//! zone map can never silently disagree with the bits it summarizes.
 //!
 //! Write protocol: serialize fully in memory, write to `<name>.tmp`,
 //! fsync, rename into place, fsync the directory. A segment file is
@@ -25,13 +34,18 @@ use std::fs;
 use std::io::Write as _;
 use std::path::Path;
 
+use super::zone::ZoneMap;
 use super::{Result, StoreError};
 use crate::bic::codec::{read_u32, read_u64, CodecBitmap};
 use crate::substrate::crc::crc32;
 
-pub(crate) const MAGIC: &[u8; 8] = b"BICSEG1\0";
+/// Version-2 magic (zone-mapped directory).
+pub(crate) const MAGIC: &[u8; 8] = b"BICSEG2\0";
+/// Version-1 magic (pre-zone-map files; still loadable).
+pub(crate) const MAGIC_V1: &[u8; 8] = b"BICSEG1\0";
 const HEADER_LEN: usize = 36;
-const DIR_ENTRY_LEN: usize = 12;
+const DIR_ENTRY_LEN: usize = 20;
+const DIR_ENTRY_LEN_V1: usize = 12;
 
 /// A loaded (or just-written) segment: metadata + compressed rows in
 /// memory. Rows stay in their codec encodings; the reader streams them
@@ -48,6 +62,9 @@ pub struct Segment {
     pub(crate) bytes: u64,
     /// One compressed row per attribute.
     pub(crate) rows: Vec<CodecBitmap>,
+    /// Per-row cardinalities (`None` for version-1 files — unknown,
+    /// never used to skip).
+    pub(crate) zone: Option<ZoneMap>,
 }
 
 /// File name for segment `id`.
@@ -65,10 +82,17 @@ pub fn encoded_len(rows: &[CodecBitmap]) -> usize {
         + 4
 }
 
-/// Serialize a segment to its byte image.
-pub(crate) fn encode(id: u64, base: usize, rows: &[CodecBitmap]) -> Vec<u8> {
+/// Serialize a segment to its byte image; `zone` must have been
+/// measured over exactly these `rows`.
+pub(crate) fn encode(
+    id: u64,
+    base: usize,
+    rows: &[CodecBitmap],
+    zone: &ZoneMap,
+) -> Vec<u8> {
     let nbits = rows.first().map_or(0, CodecBitmap::len);
     debug_assert!(rows.iter().all(|r| r.len() == nbits), "ragged rows");
+    debug_assert_eq!(zone.num_attrs(), rows.len(), "zone map width");
     let total = encoded_len(rows);
     let mut out = Vec::with_capacity(total);
     out.extend_from_slice(MAGIC);
@@ -78,10 +102,11 @@ pub(crate) fn encode(id: u64, base: usize, rows: &[CodecBitmap]) -> Vec<u8> {
     out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
     // Directory: payloads start right after it.
     let mut offset = HEADER_LEN + rows.len() * DIR_ENTRY_LEN;
-    for r in rows {
+    for (a, r) in rows.iter().enumerate() {
         let len = r.serialized_bytes();
         out.extend_from_slice(&(offset as u64).to_le_bytes());
         out.extend_from_slice(&(len as u32).to_le_bytes());
+        out.extend_from_slice(&zone.card(a).to_le_bytes());
         offset += len;
     }
     for r in rows {
@@ -93,14 +118,17 @@ pub(crate) fn encode(id: u64, base: usize, rows: &[CodecBitmap]) -> Vec<u8> {
     out
 }
 
-/// Write a segment file durably into `dir`; returns `(file_name, bytes)`.
+/// Write a segment file durably into `dir`; returns
+/// `(file_name, bytes, zone_map)` — the zone map is measured here so
+/// the in-memory [`Segment`] and the on-disk directory always agree.
 pub(crate) fn write(
     dir: &Path,
     id: u64,
     base: usize,
     rows: &[CodecBitmap],
-) -> Result<(String, u64)> {
-    let bytes = encode(id, base, rows);
+) -> Result<(String, u64, ZoneMap)> {
+    let zone = ZoneMap::from_rows(rows);
+    let bytes = encode(id, base, rows, &zone);
     let name = file_name(id);
     let tmp = dir.join(format!("{name}.tmp"));
     let final_path = dir.join(&name);
@@ -111,7 +139,7 @@ pub(crate) fn write(
     }
     fs::rename(&tmp, &final_path)?;
     sync_dir(dir);
-    Ok((name, bytes.len() as u64))
+    Ok((name, bytes.len() as u64, zone))
 }
 
 /// Best-effort directory fsync (makes the rename itself durable; not
@@ -131,9 +159,11 @@ fn corrupt(path: &Path, detail: impl std::fmt::Display) -> StoreError {
 }
 
 impl Segment {
-    /// Load and fully validate a segment file: magic, whole-file CRC,
-    /// directory consistency, then every row payload (which re-checks
-    /// the codec-level structural invariants).
+    /// Load and fully validate a segment file: magic (v1 or v2),
+    /// whole-file CRC, directory consistency, then every row payload
+    /// (which re-checks the codec-level structural invariants). For v2
+    /// files the stored cardinalities are re-verified against the
+    /// decoded rows, so a loaded zone map is always exact.
     pub(crate) fn load(path: &Path) -> Result<Segment> {
         let buf = fs::read(path)?;
         if buf.len() < HEADER_LEN + 4 {
@@ -142,9 +172,12 @@ impl Segment {
                 format!("{} bytes is too short", buf.len()),
             ));
         }
-        if &buf[..8] != MAGIC {
-            return Err(corrupt(path, "bad magic"));
-        }
+        let zoned = match &buf[..8] {
+            m if m == MAGIC => true,
+            m if m == MAGIC_V1 => false,
+            _ => return Err(corrupt(path, "bad magic")),
+        };
+        let entry_len = if zoned { DIR_ENTRY_LEN } else { DIR_ENTRY_LEN_V1 };
         let (body, tail) = buf.split_at(buf.len() - 4);
         let stored_crc = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
         if crc32(body) != stored_crc {
@@ -158,19 +191,25 @@ impl Segment {
             read_u64(body, &mut pos).map_err(|e| corrupt(path, e))? as usize;
         let m = read_u32(body, &mut pos).map_err(|e| corrupt(path, e))? as usize;
         let dir_bytes = m
-            .checked_mul(DIR_ENTRY_LEN)
+            .checked_mul(entry_len)
             .and_then(|d| HEADER_LEN.checked_add(d))
             .ok_or_else(|| corrupt(path, format!("row count {m} overflows")))?;
         if dir_bytes > body.len() {
             return Err(corrupt(path, format!("directory of {m} rows truncated")));
         }
         let mut rows = Vec::with_capacity(m);
+        let mut cards = Vec::with_capacity(if zoned { m } else { 0 });
         let mut expected_offset = dir_bytes;
         for i in 0..m {
             let offset =
                 read_u64(body, &mut pos).map_err(|e| corrupt(path, e))? as usize;
             let len =
                 read_u32(body, &mut pos).map_err(|e| corrupt(path, e))? as usize;
+            if zoned {
+                cards.push(
+                    read_u64(body, &mut pos).map_err(|e| corrupt(path, e))?,
+                );
+            }
             if offset != expected_offset {
                 return Err(corrupt(
                     path,
@@ -201,6 +240,17 @@ impl Segment {
                     format!("row {i} is {} bits, segment holds {nbits}", row.len()),
                 ));
             }
+            if zoned && cards[i] != row.count_ones() as u64 {
+                return Err(corrupt(
+                    path,
+                    format!(
+                        "row {i} zone cardinality {} disagrees with the row \
+                         ({} set bits)",
+                        cards[i],
+                        row.count_ones()
+                    ),
+                ));
+            }
             rows.push(row);
             expected_offset = end;
         }
@@ -218,7 +268,8 @@ impl Segment {
             .and_then(|n| n.to_str())
             .unwrap_or_default()
             .to_string();
-        Ok(Segment { id, file, base, nbits, bytes: buf.len() as u64, rows })
+        let zone = zoned.then(|| ZoneMap::from_cards(cards));
+        Ok(Segment { id, file, base, nbits, bytes: buf.len() as u64, rows, zone })
     }
 }
 
@@ -251,6 +302,31 @@ mod tests {
         ]
     }
 
+    /// Hand-encode the version-1 layout (12-byte directory entries, no
+    /// cards) — the compatibility corpus for pre-zone-map stores.
+    fn encode_v1(id: u64, base: usize, rows: &[CodecBitmap]) -> Vec<u8> {
+        let nbits = rows.first().map_or(0, CodecBitmap::len);
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V1);
+        out.extend_from_slice(&id.to_le_bytes());
+        out.extend_from_slice(&(base as u64).to_le_bytes());
+        out.extend_from_slice(&(nbits as u64).to_le_bytes());
+        out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+        let mut offset = HEADER_LEN + rows.len() * DIR_ENTRY_LEN_V1;
+        for r in rows {
+            let len = r.serialized_bytes();
+            out.extend_from_slice(&(offset as u64).to_le_bytes());
+            out.extend_from_slice(&(len as u32).to_le_bytes());
+            offset += len;
+        }
+        for r in rows {
+            r.write_bytes(&mut out);
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
     #[test]
     fn write_load_roundtrip_and_exact_length() {
         let dir = std::env::temp_dir()
@@ -259,7 +335,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         for n in [0usize, 65, 10_007, 70_000] {
             let rows = rows_for(n, n as u64 + 1);
-            let (name, bytes) = write(&dir, 7, 1234, &rows).unwrap();
+            let (name, bytes, zone) = write(&dir, 7, 1234, &rows).unwrap();
             assert_eq!(bytes as usize, encoded_len(&rows), "n={n}");
             let seg = Segment::load(&dir.join(&name)).unwrap();
             assert_eq!(seg.id, 7);
@@ -267,14 +343,39 @@ mod tests {
             assert_eq!(seg.nbits, n);
             assert_eq!(seg.bytes, bytes);
             assert_eq!(seg.rows, rows, "representational row equality n={n}");
+            // The zone map round-trips exactly and matches the rows.
+            assert_eq!(seg.zone.as_ref(), Some(&zone), "n={n}");
+            for (a, r) in rows.iter().enumerate() {
+                assert_eq!(zone.card(a), r.count_ones() as u64, "n={n} row {a}");
+            }
+            assert!(zone.is_zero(3), "the all-zeros row is zone-zero");
         }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_files_load_without_a_zone_map() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-seg-v1-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let rows = rows_for(3_000, 42);
+        let image = encode_v1(9, 512, &rows);
+        let path = dir.join("seg-v1.bic");
+        fs::write(&path, &image).unwrap();
+        let seg = Segment::load(&path).unwrap();
+        assert_eq!(seg.id, 9);
+        assert_eq!(seg.base, 512);
+        assert_eq!(seg.nbits, 3_000);
+        assert_eq!(seg.rows, rows, "v1 rows decode identically");
+        assert!(seg.zone.is_none(), "pre-zone-map file carries no map");
         let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn load_rejects_corruption_at_every_byte() {
         let rows = rows_for(2_000, 99);
-        let image = encode(3, 0, &rows);
+        let image = encode(3, 0, &rows, &ZoneMap::from_rows(&rows));
         let dir = std::env::temp_dir()
             .join(format!("bic-seg-corrupt-{}", std::process::id()));
         let _ = fs::remove_dir_all(&dir);
@@ -296,6 +397,30 @@ mod tests {
         // The pristine image still loads.
         fs::write(&path, &image).unwrap();
         assert!(Segment::load(&path).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_a_lying_zone_map_even_with_a_valid_crc() {
+        let rows = rows_for(1_500, 7);
+        let mut image = encode(1, 0, &rows, &ZoneMap::from_rows(&rows));
+        // Patch row 0's stored cardinality (directory entry bytes
+        // 36+8+4 .. 36+20) and re-stamp the CRC so only the semantic
+        // check can catch the lie.
+        let card_at = HEADER_LEN + 12;
+        let lied = (rows[0].count_ones() as u64 + 1).to_le_bytes();
+        image[card_at..card_at + 8].copy_from_slice(&lied);
+        let body_len = image.len() - 4;
+        let crc = crc32(&image[..body_len]).to_le_bytes();
+        image[body_len..].copy_from_slice(&crc);
+        let dir = std::env::temp_dir()
+            .join(format!("bic-seg-zonelie-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg-lie.bic");
+        fs::write(&path, &image).unwrap();
+        let err = Segment::load(&path).expect_err("lying zone map");
+        assert!(err.to_string().contains("zone"), "{err}");
         let _ = fs::remove_dir_all(&dir);
     }
 }

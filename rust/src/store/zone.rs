@@ -1,0 +1,113 @@
+//! Per-segment zone maps: the cheapest AND is the segment you never
+//! read.
+//!
+//! A [`ZoneMap`] records each attribute row's cardinality (set-bit
+//! count) for one chunk of the object space. Segments write it into
+//! their directory at flush/compaction time; the chunk-fold evaluator
+//! uses it to prove a segment cannot contribute to a query term:
+//!
+//! - ORing or AND-NOT-ing a zero-cardinality row is a no-op — skip the
+//!   segment;
+//! - a conjunction whose positive leaf is zero in a segment yields a
+//!   zero window for that whole segment — skip every term there (the
+//!   fold's accumulator starts all-zeros, so skipping *is* the clear).
+//!
+//! The map is *exact* (recomputed from the rows at write, re-verified
+//! against them at load), so pruning is a pure cost optimization:
+//! results stay bit-identical with zone maps on or off, which the
+//! engine property tests pin differentially. Chunks without a map
+//! (pre-zone-map segment files, memtable batches) report "unknown" and
+//! are never skipped.
+
+use crate::bic::bitmap::Bitmap;
+use crate::bic::codec::CodecBitmap;
+
+/// Exact per-row cardinalities for one chunk, plus the derived
+/// all-zero-rows bitmap (bit `a` set when row `a` has no set bits).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ZoneMap {
+    cards: Vec<u64>,
+    zero_rows: Bitmap,
+}
+
+impl ZoneMap {
+    /// Measure `rows` (one per attribute).
+    pub fn from_rows(rows: &[CodecBitmap]) -> ZoneMap {
+        Self::from_cards(
+            rows.iter().map(|r| r.count_ones() as u64).collect(),
+        )
+    }
+
+    /// Wrap pre-measured cardinalities (the segment loader's path).
+    pub(crate) fn from_cards(cards: Vec<u64>) -> ZoneMap {
+        let mut zero_rows = Bitmap::zeros(cards.len());
+        for (a, &c) in cards.iter().enumerate() {
+            if c == 0 {
+                zero_rows.set(a, true);
+            }
+        }
+        ZoneMap { cards, zero_rows }
+    }
+
+    /// Attribute rows covered.
+    #[inline]
+    pub fn num_attrs(&self) -> usize {
+        self.cards.len()
+    }
+
+    /// Set bits in attribute `attr`'s row of this chunk.
+    #[inline]
+    pub fn card(&self, attr: usize) -> u64 {
+        self.cards[attr]
+    }
+
+    /// Whether attribute `attr`'s row is all zeros in this chunk.
+    #[inline]
+    pub fn is_zero(&self, attr: usize) -> bool {
+        self.zero_rows.get(attr)
+    }
+
+    /// The raw cardinality vector (directory serialization order).
+    #[inline]
+    pub fn cards(&self) -> &[u64] {
+        &self.cards
+    }
+
+    /// The all-zero-rows bitmap (bit `a` set iff `card(a) == 0`).
+    #[inline]
+    pub fn zero_rows(&self) -> &Bitmap {
+        &self.zero_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cards_and_zero_rows_agree_with_the_rows() {
+        let mk = |bools: &[bool]| {
+            CodecBitmap::from_bitmap(&Bitmap::from_bools(bools))
+        };
+        let rows = vec![
+            mk(&[true, false, true, false]),
+            mk(&[false, false, false, false]),
+            mk(&[true, true, true, true]),
+        ];
+        let z = ZoneMap::from_rows(&rows);
+        assert_eq!(z.num_attrs(), 3);
+        assert_eq!(z.cards(), &[2, 0, 4]);
+        assert!(!z.is_zero(0));
+        assert!(z.is_zero(1));
+        assert!(!z.is_zero(2));
+        assert_eq!(z.zero_rows().count_ones(), 1);
+        assert_eq!(z, ZoneMap::from_cards(vec![2, 0, 4]));
+    }
+
+    #[test]
+    fn empty_map_is_degenerate_but_valid() {
+        let z = ZoneMap::from_rows(&[]);
+        assert_eq!(z.num_attrs(), 0);
+        assert!(z.cards().is_empty());
+    }
+}

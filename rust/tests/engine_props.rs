@@ -354,6 +354,243 @@ fn typed_errors_cover_the_public_surface() {
     let _ = fs::remove_dir_all(&dir);
 }
 
+/// The skip-vs-noskip differential: zone-map pruning must never change
+/// a result, on any tier, under any content distribution — it may only
+/// shrink what the store tier reads.
+#[test]
+fn zone_pruning_never_changes_results() {
+    for (tag, dist) in [
+        ("uniform", ContentDist::Uniform),
+        ("zipf", ContentDist::Zipf { s: 1.2 }),
+        ("clustered", ContentDist::Clustered { spread: 8 }),
+    ] {
+        let data = batches(dist, 0x2E0 + tag.len() as u64, 10);
+        let expect = reference(&data);
+        let dir_on = tmpdir(&format!("zone-on-{tag}"));
+        let dir_off = tmpdir(&format!("zone-off-{tag}"));
+        let on = builder()
+            .durable(&dir_on)
+            .flush_batches(3) // segments + a memtable tail
+            .build()
+            .expect("build zones-on");
+        let off = builder()
+            .durable(&dir_off)
+            .flush_batches(3)
+            .zone_maps(false)
+            .build()
+            .expect("build zones-off");
+        on.ingest_batches(&data).expect("ingest on");
+        off.ingest_batches(&data).expect("ingest off");
+        for (qi, q) in query_corpus().iter().enumerate() {
+            let want = q.eval(&expect).expect("reference eval");
+            for path in ExecPath::ALL {
+                assert_eq!(
+                    on.query_via(q, path).expect("query"),
+                    want,
+                    "{tag}: query {qi} on {path:?} with zone maps"
+                );
+                assert_eq!(
+                    off.query_via(q, path).expect("query"),
+                    want,
+                    "{tag}: query {qi} on {path:?} without zone maps"
+                );
+            }
+        }
+        // Identical query streams: pruning can only reduce the bytes
+        // the store tier folds, and only the pruned engine ever skips.
+        let (s_on, s_off) = (on.stats(), off.stats());
+        assert_eq!(s_off.store_chunks_skipped, 0, "{tag}: noskip engine");
+        assert!(
+            s_on.store_row_bytes_read <= s_off.store_row_bytes_read,
+            "{tag}: pruning must not read more ({} > {})",
+            s_on.store_row_bytes_read,
+            s_off.store_row_bytes_read
+        );
+        on.close().expect("close on");
+        off.close().expect("close off");
+        let _ = fs::remove_dir_all(&dir_on);
+        let _ = fs::remove_dir_all(&dir_off);
+    }
+}
+
+/// The acceptance counter: on a clustered workload whose batches each
+/// cluster on a single key, a conjunction over rows that never share a
+/// segment reads **strictly fewer** segment bytes with zone maps on —
+/// here, zero bytes, every segment window proven dead.
+#[test]
+fn pruned_store_queries_read_strictly_fewer_segment_bytes() {
+    let k = 8usize;
+    // Extreme clustered content: batch `b`'s records all carry the key
+    // of attribute `b % m`, so each one-batch segment holds exactly one
+    // nonzero row.
+    let data: Vec<Vec<Vec<i32>>> =
+        (0..k).map(|b| vec![vec![KEYS[b % KEYS.len()]; 4]; 16]).collect();
+    let dir_on = tmpdir("prune-bytes-on");
+    let dir_off = tmpdir("prune-bytes-off");
+    let on = builder()
+        .durable(&dir_on)
+        .flush_batches(1) // every batch becomes a segment
+        .build()
+        .expect("build on");
+    let off = builder()
+        .durable(&dir_off)
+        .flush_batches(1)
+        .zone_maps(false)
+        .build()
+        .expect("build off");
+    on.ingest_batches(&data).expect("ingest on");
+    off.ingest_batches(&data).expect("ingest off");
+
+    // Rows 0 and 1 never share a segment: provably empty conjunction.
+    let q = Query::attr(0).and(Query::attr(1));
+    assert_eq!(on.plan(&q).path, ExecPath::Store, "segments exist");
+    let got_on = on.query(&q).expect("pruned query");
+    let got_off = off.query(&q).expect("unpruned query");
+    assert_eq!(got_on, got_off, "pruning is cost-only");
+    assert!(got_on.is_zero(), "the bands are disjoint");
+
+    let (s_on, s_off) = (on.stats(), off.stats());
+    assert_eq!(
+        s_on.store_row_bytes_read, 0,
+        "every segment window was zone-skipped"
+    );
+    assert_eq!(s_on.store_chunks_skipped, k as u64);
+    assert!(s_off.store_row_bytes_read > 0, "noskip engine reads rows");
+    assert!(
+        s_on.store_row_bytes_read < s_off.store_row_bytes_read,
+        "strictly fewer segment bytes"
+    );
+    on.close().expect("close on");
+    off.close().expect("close off");
+    let _ = fs::remove_dir_all(&dir_on);
+    let _ = fs::remove_dir_all(&dir_off);
+}
+
+/// Compaction merges must preserve zone maps: after foreground merges
+/// rewrite the segments, a dead conjunction still skips every window.
+#[test]
+fn zone_maps_survive_compaction_merges() {
+    let dir = tmpdir("zone-compact");
+    let engine = builder()
+        .durable(&dir)
+        .flush_batches(1)
+        .max_segments(2)
+        .compaction(CompactionMode::Foreground)
+        .build()
+        .expect("build");
+    // Batches alternate between the first two keys: rows 2..8 are zero
+    // in every segment, merged or not.
+    let data: Vec<Vec<Vec<i32>>> =
+        (0..8).map(|b| vec![vec![KEYS[b % 2]; 4]; 16]).collect();
+    engine.ingest_batches(&data).expect("ingest");
+    let stats = engine.stats();
+    assert!(stats.segments <= 2, "compaction ran");
+    let q = Query::attr(0).and(Query::attr(2));
+    let got = engine.query(&q).expect("query");
+    assert!(got.is_zero());
+    let stats = engine.stats();
+    assert_eq!(stats.store_rows_folded, 0, "merged zone maps still skip");
+    assert!(stats.store_chunks_skipped > 0);
+    engine.close().expect("close");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Pipelined ingest: receipts resolve in batch-id order with the same
+/// durability meaning as the synchronous path, and the resulting index
+/// is bit-identical to the synchronous reference.
+#[test]
+fn async_ingest_receipts_drain_in_batch_order_and_match_sync() {
+    let dir = tmpdir("async");
+    let data = batches(ContentDist::Zipf { s: 1.2 }, 0xA51C, 9);
+    let expect = reference(&data);
+    let engine =
+        builder().durable(&dir).flush_batches(4).build().expect("build");
+    // Submit the whole trace before waiting on anything: the pipeline
+    // overlaps encode with append and group-commits runs of batches.
+    let tickets =
+        engine.ingest_batches_async(data.clone()).expect("submit");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().expect("receipt");
+        assert_eq!(r.batch, i as u64, "receipts drain in batch-id order");
+        assert!(r.durable, "durable engine acks through the WAL");
+        assert_eq!(r.objects, CFG.n_records);
+        assert_eq!(
+            r.total_objects,
+            (i + 1) * CFG.n_records,
+            "appends happen in submission order"
+        );
+    }
+    assert_eq!(engine.snapshot().to_index(), expect, "async == sync bits");
+    for (qi, q) in query_corpus().iter().enumerate() {
+        assert_eq!(
+            engine.query(q).expect("query"),
+            q.eval(&expect).expect("reference"),
+            "async-built index query {qi}"
+        );
+    }
+    let stats = engine.close().expect("close");
+    assert_eq!(stats.batches_ingested, 9);
+
+    // Reopen: everything the tickets acknowledged is durable.
+    let engine =
+        builder().durable(&dir).flush_batches(4).build().expect("reopen");
+    assert_eq!(engine.snapshot().to_index(), expect, "recovered bits");
+    engine.close().expect("close 2");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// `close` drains the pipeline: tickets never waited on still resolve,
+/// and every submitted batch is applied before close returns.
+#[test]
+fn close_drains_the_async_pipeline() {
+    let data = batches(ContentDist::Uniform, 0xD0A1, 6);
+    let expect = reference(&data);
+    let engine = builder().build().expect("build");
+    let tickets =
+        engine.ingest_batches_async(data.clone()).expect("submit");
+    let stats = engine.close().expect("close");
+    assert_eq!(stats.batches_ingested, 6, "close applied every batch");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().expect("ticket resolved after close");
+        assert_eq!(r.batch, i as u64);
+        assert!(!r.durable, "in-memory engine never claims durability");
+    }
+    // And a fresh engine over the same data agrees bit-for-bit.
+    let engine = builder().build().expect("rebuild");
+    let mut tickets = Vec::new();
+    for records in &data {
+        tickets.push(engine.ingest_async(records.clone()).expect("submit"));
+    }
+    for t in tickets {
+        t.wait().expect("receipt");
+    }
+    assert_eq!(engine.snapshot().to_index(), expect);
+    engine.close().expect("close 2");
+}
+
+/// Async submission validates records synchronously, exactly like the
+/// synchronous path.
+#[test]
+fn async_ingest_validates_before_queueing() {
+    let engine = builder().build().expect("build");
+    let too_many = vec![vec![1i32; 4]; CFG.n_records + 1];
+    assert!(matches!(
+        engine.ingest_async(too_many),
+        Err(PallasError::Ingest(_))
+    ));
+    let too_wide = vec![vec![1i32; CFG.w_words + 1]];
+    assert!(matches!(
+        engine.ingest_batches_async(vec![too_wide]),
+        Err(PallasError::Ingest(_))
+    ));
+    // A zero-depth queue is a construction-time config error.
+    assert!(matches!(
+        builder().ingest_queue(0).build(),
+        Err(PallasError::Config(_))
+    ));
+    engine.close().expect("close");
+}
+
 #[test]
 fn planner_prefers_the_store_tier_once_segments_exist() {
     let dir = tmpdir("planner");

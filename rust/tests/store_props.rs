@@ -339,12 +339,16 @@ fn compaction_preserves_queries_and_tombstones_files() {
     let seed = 0xC0DE;
     let k = 12;
     let dir = tmpdir("compact");
-    // Flush every batch: 12 one-batch segments.
+    // Flush every batch: 12 one-batch segments. The size-tiered picker
+    // sees one run of similar-size segments and merges it wholesale, so
+    // the live count lands at or under the policy bound.
     let cfg = StoreConfig {
         flush_batches: 1,
         compaction: sotb_bic::store::compaction::CompactionPolicy {
             max_segments: 3,
+            ..Default::default()
         },
+        ..StoreConfig::default()
     };
     let mut store = Store::create(&dir, CFG.m_keys, cfg).unwrap();
     for ci in &encoded_batches(dist, seed, k) {
@@ -356,7 +360,8 @@ fn compaction_preserves_queries_and_tombstones_files() {
 
     let rounds = store.compact().unwrap();
     assert!(rounds > 0);
-    assert_eq!(store.num_segments(), 3, "policy bound reached");
+    let live_count = store.num_segments();
+    assert!(live_count <= 3, "policy bound reached (got {live_count})");
     assert_store_matches(&store, &expect, "post-compaction");
 
     // Superseded files are gone; exactly the live set remains on disk.
@@ -365,12 +370,12 @@ fn compaction_preserves_queries_and_tombstones_files() {
         .filter_map(|e| e.unwrap().file_name().into_string().ok())
         .filter(|n| n.starts_with("seg-"))
         .collect();
-    assert_eq!(live.len(), 3, "tombstoned files unlinked: {live:?}");
+    assert_eq!(live.len(), live_count, "tombstoned files unlinked: {live:?}");
 
     // And the compacted store recovers identically.
     drop(store);
     let store = Store::open(&dir, cfg).unwrap();
-    assert_eq!(store.num_segments(), 3);
+    assert_eq!(store.num_segments(), live_count);
     assert_store_matches(&store, &expect, "recovered post-compaction");
     let _ = fs::remove_dir_all(&dir);
 }
@@ -388,7 +393,9 @@ fn background_compactor_converges_under_ingest() {
         flush_batches: 1,
         compaction: sotb_bic::store::compaction::CompactionPolicy {
             max_segments: 2,
+            ..Default::default()
         },
+        ..StoreConfig::default()
     };
     let store =
         Arc::new(Mutex::new(Store::create(&dir, CFG.m_keys, cfg).unwrap()));
@@ -412,6 +419,155 @@ fn background_compactor_converges_under_ingest() {
     assert!(guard.num_segments() <= 2);
     assert_store_matches(&guard, &reference(dist, seed, k), "background");
     drop(guard);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Group-commit ordering: concurrent appenders submit under the store
+/// lock and wait outside it; after every ticket acknowledges, the WAL
+/// (replayed by recovery) must hold exactly the submitted batches in
+/// submission order — ack order can never disagree with record order.
+#[test]
+fn group_commit_ack_order_matches_wal_order() {
+    use std::sync::{Arc, Mutex};
+
+    let threads = 4usize;
+    let per_thread = 6usize;
+    let dir = tmpdir("group-order");
+    let store = Arc::new(Mutex::new(
+        Store::create(&dir, CFG.m_keys, no_autoflush()).unwrap(),
+    ));
+    // Unique batch content per (thread, index) so the final index pins
+    // the exact interleaving.
+    let batches: Vec<Vec<CompressedIndex>> = (0..threads)
+        .map(|t| {
+            encoded_batches(ContentDist::Uniform, 0x9_0000 + t as u64, per_thread)
+        })
+        .collect();
+    // Submission order, recorded while the store lock is held — by
+    // construction identical to memtable (and WAL submit) order.
+    let order: Arc<Mutex<Vec<(usize, usize)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+
+    std::thread::scope(|s| {
+        for (t, thread_batches) in batches.iter().enumerate() {
+            let store = Arc::clone(&store);
+            let order = Arc::clone(&order);
+            s.spawn(move || {
+                for (i, ci) in thread_batches.iter().enumerate() {
+                    let ticket = {
+                        let mut g = store.lock().unwrap();
+                        let ticket = g.begin_append_batch(ci).unwrap();
+                        order.lock().unwrap().push((t, i));
+                        ticket
+                    };
+                    // The durability wait happens outside the store
+                    // lock: concurrent waiters ride one group commit.
+                    ticket.wait().unwrap();
+                }
+            });
+        }
+    });
+
+    let order = order.lock().unwrap().clone();
+    assert_eq!(order.len(), threads * per_thread);
+    let n = CFG.n_records;
+    let total = order.len() * n;
+    let mut rows = vec![sotb_bic::bic::Bitmap::zeros(total); CFG.m_keys];
+    for (pos, &(t, i)) in order.iter().enumerate() {
+        for (a, row) in rows.iter_mut().enumerate() {
+            batches[t][i].rows()[a].or_into_at(row, pos * n);
+        }
+    }
+    let expect = BitmapIndex::from_rows(rows);
+
+    // Every ticket acknowledged; the live handle agrees with the
+    // recorded order...
+    assert_store_matches(&store.lock().unwrap(), &expect, "live interleaving");
+    // ...and so does recovery, which reads the WAL records in file
+    // order: ack order == WAL order.
+    drop(store);
+    let store = Store::recover(&dir, no_autoflush()).unwrap();
+    assert_eq!(store.memtable_batches(), threads * per_thread);
+    assert_store_matches(&store, &expect, "recovered interleaving");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Pre-zone-map (version 1) segment files still open and query
+/// bit-identically: rewrite a flushed v2 segment into the v1 layout
+/// (same payload bytes, 12-byte directory entries, no cardinalities)
+/// and recover over it.
+#[test]
+fn pre_zone_map_v1_segments_reopen_and_query_correctly() {
+    use sotb_bic::substrate::crc::crc32;
+
+    let dist = ContentDist::Clustered { spread: 8 };
+    let seed = 0x51E6;
+    let (k, k2) = (4usize, 3usize);
+    let dir = tmpdir("v1-compat");
+    let all = encoded_batches(dist, seed, k + k2);
+    let mut store = Store::create(&dir, CFG.m_keys, no_autoflush()).unwrap();
+    for ci in &all[..k] {
+        store.append_batch(ci).unwrap();
+    }
+    store.flush().unwrap().expect("non-empty flush");
+    drop(store);
+
+    // Transcode seg-00000000.bic to the v1 layout byte-for-byte: keep
+    // the header fields and row payloads, drop the per-row cardinality
+    // column from the directory, restamp the CRC.
+    let seg_path = dir.join("seg-00000000.bic");
+    let v2 = fs::read(&seg_path).unwrap();
+    assert_eq!(&v2[..8], b"BICSEG2\0", "flush writes the zoned format");
+    let m = u32::from_le_bytes([v2[32], v2[33], v2[34], v2[35]]) as usize;
+    assert_eq!(m, CFG.m_keys);
+    let body = &v2[..v2.len() - 4];
+    let v2_dir_end = 36 + 20 * m;
+    let mut v1 = Vec::with_capacity(v2.len());
+    v1.extend_from_slice(b"BICSEG1\0");
+    v1.extend_from_slice(&v2[8..36]); // id, base, nbits, m
+    let mut offset = 36 + 12 * m;
+    for i in 0..m {
+        let e = 36 + 20 * i;
+        let len =
+            u32::from_le_bytes([v2[e + 8], v2[e + 9], v2[e + 10], v2[e + 11]]);
+        v1.extend_from_slice(&(offset as u64).to_le_bytes());
+        v1.extend_from_slice(&len.to_le_bytes());
+        offset += len as usize;
+    }
+    v1.extend_from_slice(&body[v2_dir_end..]);
+    let crc = crc32(&v1);
+    v1.extend_from_slice(&crc.to_le_bytes());
+    fs::write(&seg_path, &v1).unwrap();
+
+    // Recovery loads the v1 file (zone-unknown) and queries exactly.
+    let mut store = Store::open(&dir, no_autoflush()).unwrap();
+    assert_eq!(store.num_segments(), 1);
+    assert_store_matches(&store, &reference(dist, seed, k), "v1 reopened");
+
+    // Later writes upgrade naturally: more batches, a flush, and a
+    // compaction down to one segment rewrite everything zoned, still
+    // bit-identical.
+    for ci in &all[k..] {
+        store.append_batch(ci).unwrap();
+    }
+    store.flush().unwrap();
+    drop(store);
+    let compact_cfg = StoreConfig {
+        flush_batches: 0,
+        compaction: sotb_bic::store::compaction::CompactionPolicy {
+            max_segments: 1,
+            ..Default::default()
+        },
+        ..StoreConfig::default()
+    };
+    let mut store = Store::open(&dir, compact_cfg).unwrap();
+    store.compact().unwrap();
+    assert_eq!(store.num_segments(), 1);
+    assert_store_matches(
+        &store,
+        &reference(dist, seed, k + k2),
+        "v1 + v2 merged",
+    );
     let _ = fs::remove_dir_all(&dir);
 }
 
