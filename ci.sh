@@ -7,8 +7,36 @@
 #   ci.sh --bench   bench-smoke mode: short hotpath + compression benches,
 #                   BENCH_*.json emission, and the bench_gate regression
 #                   comparison against the committed BENCH_baseline.json
+#   ci.sh --chaos   chaos mode: the seeded fault-injection matrix
+#                   (store_props chaos tests + store_smoke) under
+#                   CHAOS_RUNS random seeds (default 5). Every seed is
+#                   printed; replay one deterministically with
+#                   CHAOS_SEED=<seed> ./ci.sh --chaos (runs once).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+if [[ "${1:-}" == "--chaos" ]]; then
+    echo "== chaos: cargo build --release =="
+    cargo build --release --tests --bins
+    if [[ -n "${CHAOS_SEED:-}" ]]; then
+        seeds=("$CHAOS_SEED")
+        echo "== chaos: replaying CHAOS_SEED=$CHAOS_SEED =="
+    else
+        seeds=()
+        for _ in $(seq "${CHAOS_RUNS:-5}"); do
+            seeds+=("$(od -An -N8 -tu8 /dev/urandom | tr -d ' ')")
+        done
+    fi
+    for seed in "${seeds[@]}"; do
+        echo "== chaos: CHAOS_SEED=$seed (fault matrix) =="
+        CHAOS_SEED="$seed" cargo test --release -q --test store_props \
+            chaos -- --nocapture
+        echo "== chaos: CHAOS_SEED=$seed (store smoke) =="
+        CHAOS_SEED="$seed" cargo run --release --quiet --bin store_smoke
+    done
+    echo "== ci.sh --chaos OK (${#seeds[@]} seed(s)) =="
+    exit 0
+fi
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== bench-smoke: hotpath =="
@@ -40,6 +68,25 @@ if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "== clippy not installed; skipping lint =="
+fi
+
+# Robustness cap: non-test code in the durable store, the engine
+# facade, and the coordinator service must not panic on lock poisoning
+# or I/O — those are typed StoreError/PallasError returns (see PERF.md
+# "Fault model"). The awk stops at the first #[cfg(test)] marker, so
+# test modules may still unwrap freely.
+echo "== unwrap/expect cap (non-test store + engine + service code) =="
+unwrap_bad=0
+for f in src/store/*.rs src/engine/*.rs src/coordinator/service.rs; do
+    n=$(awk '/#\[cfg\(test\)\]/{exit} /\.unwrap\(\)|\.expect\(/{c++} END{print c+0}' "$f")
+    if [[ "$n" -gt 0 ]]; then
+        echo "   $f: $n panicking unwrap()/expect() call(s) outside tests"
+        unwrap_bad=1
+    fi
+done
+if [[ "$unwrap_bad" -ne 0 ]]; then
+    echo "convert panicking calls to typed errors (PallasError/StoreError)"
+    exit 1
 fi
 
 echo "== cargo doc --no-deps (doc warnings are errors) =="

@@ -9,10 +9,15 @@
 //!    with a torn half-written group appended to the WAL — i.e. a crash
 //!    between a group's `write` and its `fsync` — and verify every
 //!    acked batch survives recovery while the unacked tail vanishes
-//!    without double-counting.
+//!    without double-counting;
+//! 3. a **seeded chaos crash**: crash the whole VFS (torn write + every
+//!    later op failing, via `FaultVfs`) at one seeded operation of the
+//!    workload, recover over the real filesystem, and verify the acked
+//!    batch prefix is bit-identical on all four query execution tiers.
+//!    The seed comes from `CHAOS_SEED` (printed; set it to replay).
 //!
 //! Exits nonzero on any divergence — wired into `ci.sh` as the store
-//! gate.
+//! gate (`ci.sh --chaos` re-runs it under many random seeds).
 
 use std::fs;
 use std::path::Path;
@@ -20,7 +25,9 @@ use std::process::ExitCode;
 
 use sotb_bic::bic::{BicConfig, BicCore, Bitmap, BitmapIndex, Query};
 use sotb_bic::coordinator::{ContentDist, WorkloadGen};
-use sotb_bic::engine::{Engine, Schema};
+use sotb_bic::engine::{Engine, ExecPath, Schema};
+use sotb_bic::store::vfs::FaultVfs;
+use sotb_bic::substrate::rng::Xoshiro256;
 
 /// Golden-model replay: index every batch with `keys` and concatenate.
 fn reference(
@@ -215,6 +222,128 @@ fn main() -> ExitCode {
     println!(
         "store-smoke: phase 2 OK (async acks survive the group-commit \
          crash window)"
+    );
+
+    // ---- Phase 3: seeded chaos crash at one random VFS operation. ----
+    let chaos_seed: u64 = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC405_0A05);
+    println!("store-smoke: CHAOS_SEED={chaos_seed} (set the env var to replay)");
+    let dir3 = std::env::temp_dir()
+        .join(format!("bic-store-smoke-chaos-{}", std::process::id()));
+    let chaos_batches = &batch_records[..8];
+    let build_chaos = |vfs: Option<std::sync::Arc<FaultVfs>>| {
+        let mut b = Engine::builder(
+            Schema::single("byte", keys.clone()).expect("valid schema"),
+        )
+        .batch_records(cfg.n_records)
+        .record_words(cfg.w_words)
+        .durable(&dir3)
+        .flush_batches(3);
+        if let Some(v) = vfs {
+            b = b.vfs(v);
+        }
+        b.build()
+    };
+
+    // Measure the workload's op count fault-free, then pick the crash
+    // point from the seed.
+    let _ = fs::remove_dir_all(&dir3);
+    let probe = FaultVfs::counting(chaos_seed);
+    let engine =
+        build_chaos(Some(std::sync::Arc::clone(&probe))).expect("measure");
+    for records in chaos_batches {
+        engine.ingest(records).expect("measure ingest");
+    }
+    engine.close().expect("measure close");
+    let total = probe.ops();
+    let crash_op = Xoshiro256::seeded(chaos_seed).next_below(total);
+    println!(
+        "store-smoke: chaos crash at vfs op {crash_op} of {total} \
+         (create -> ingest x{} -> close)",
+        chaos_batches.len()
+    );
+
+    // Crashed run: count the batches that acknowledged before death.
+    let _ = fs::remove_dir_all(&dir3);
+    let mut acked = 0usize;
+    if let Ok(engine) = build_chaos(Some(FaultVfs::crash_at(chaos_seed, crash_op)))
+    {
+        for records in chaos_batches {
+            match engine.ingest(records) {
+                Ok(_) => acked += 1,
+                Err(_) => break, // the vfs is dead from here on
+            }
+        }
+        let _ = engine.close();
+    }
+    println!("store-smoke: {acked} of {} batches acked", chaos_batches.len());
+
+    // Recover over the real filesystem and hold the durability line:
+    // a whole number of batches, at least every acked one, bit-identical
+    // to the reference prefix on every execution tier.
+    let engine = match build_chaos(None) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!(
+                "store-smoke: FAIL CHAOS_SEED={chaos_seed} recovery: {e}"
+            );
+            return ExitCode::FAILURE;
+        }
+    };
+    let objects = engine.num_objects();
+    if objects % cfg.n_records != 0 {
+        eprintln!(
+            "store-smoke: FAIL CHAOS_SEED={chaos_seed}: {objects} objects \
+             is a partial batch"
+        );
+        return ExitCode::FAILURE;
+    }
+    let recovered = objects / cfg.n_records;
+    if recovered < acked || recovered > chaos_batches.len() {
+        eprintln!(
+            "store-smoke: FAIL CHAOS_SEED={chaos_seed}: recovered \
+             {recovered} batches, acked {acked}, submitted {}",
+            chaos_batches.len()
+        );
+        return ExitCode::FAILURE;
+    }
+    let expect = reference(cfg, &keys, &chaos_batches[..recovered]);
+    if engine.snapshot().to_index() != expect {
+        eprintln!(
+            "store-smoke: FAIL CHAOS_SEED={chaos_seed}: recovered index \
+             diverges from the {recovered}-batch reference"
+        );
+        return ExitCode::FAILURE;
+    }
+    for (i, q) in queries.iter().enumerate() {
+        let want = q.eval(&expect).expect("reference eval");
+        for path in ExecPath::ALL {
+            match engine.query_via(q, path) {
+                Ok(got) if got == want => {}
+                Ok(_) => {
+                    eprintln!(
+                        "store-smoke: FAIL CHAOS_SEED={chaos_seed}: query \
+                         {i} via {path:?} diverges"
+                    );
+                    return ExitCode::FAILURE;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "store-smoke: FAIL CHAOS_SEED={chaos_seed}: query \
+                         {i} via {path:?}: {e}"
+                    );
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+    }
+    engine.close().expect("close chaos engine");
+    let _ = fs::remove_dir_all(&dir3);
+    println!(
+        "store-smoke: phase 3 OK (crash at op {crash_op}: acked prefix \
+         held on all tiers)"
     );
     println!("store-smoke: OK");
     ExitCode::SUCCESS

@@ -11,12 +11,12 @@
 
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 use crate::bic::bitmap::BitmapIndex;
 use crate::bic::codec::CompressedIndex;
-use crate::engine::error::{PallasError, Result};
+use crate::engine::error::{lock, PallasError, Result};
 use crate::runtime::{BicExecutable, BicVariant, Runtime};
 use crate::store::{manifest, Store, StoreConfig};
 
@@ -84,20 +84,31 @@ impl IndexService {
                     }
                 };
                 loop {
-                    // Pull the next job; hold the lock only for the recv.
-                    let job = { rx.lock().unwrap().recv() };
+                    // Pull the next job; hold the lock only for the
+                    // recv. Poison (a sibling panicked holding the
+                    // queue) exits like a closed queue.
+                    let job = match rx.lock() {
+                        Ok(g) => g.recv(),
+                        Err(_) => break,
+                    };
                     let Ok(job) = job else { break }; // queue closed
+                    // Counter bumps tolerate poison: a plain integer
+                    // add cannot observe torn state.
                     match job {
                         Job::Plain { records, keys, reply } => {
                             let result = exe.index(&records, &keys);
-                            *counters[w].lock().unwrap() += 1;
+                            *counters[w]
+                                .lock()
+                                .unwrap_or_else(PoisonError::into_inner) += 1;
                             let _ = reply.send(result);
                         }
                         Job::Compressed { records, keys, reply } => {
                             let result = exe
                                 .index(&records, &keys)
                                 .map(|bi| CompressedIndex::from_index(&bi));
-                            *counters[w].lock().unwrap() += 1;
+                            *counters[w]
+                                .lock()
+                                .unwrap_or_else(PoisonError::into_inner) += 1;
                             let _ = reply.send(result);
                         }
                     }
@@ -105,7 +116,11 @@ impl IndexService {
             }));
         }
         for _ in 0..workers {
-            ready_rx.recv().expect("worker startup")?;
+            ready_rx.recv().map_err(|_| {
+                PallasError::Internal(
+                    "worker died during startup without reporting".into(),
+                )
+            })??;
         }
         Ok(Self {
             queue: tx,
@@ -130,7 +145,7 @@ impl IndexService {
         } else {
             Store::create(dir, num_attrs, cfg)?
         };
-        *self.store.lock().unwrap() = Some(store);
+        *lock(&self.store, "service store")? = Some(store);
         Ok(())
     }
 
@@ -147,7 +162,7 @@ impl IndexService {
     ) -> Result<CompressedIndex> {
         let ci = self.index_compressed(records, keys)?;
         let ticket = {
-            let mut guard = self.store.lock().unwrap();
+            let mut guard = lock(&self.store, "service store")?;
             let store = guard.as_mut().ok_or_else(|| {
                 PallasError::Config("no store attached (call open_store)".into())
             })?;
@@ -159,7 +174,7 @@ impl IndexService {
 
     /// Detach and return the store (e.g. to flush/compact/close it).
     pub fn close_store(&self) -> Option<Store> {
-        self.store.lock().unwrap().take()
+        self.store.lock().unwrap_or_else(PoisonError::into_inner).take()
     }
 
     /// Submit a batch; returns a receiver for the result (async-style
@@ -170,9 +185,9 @@ impl IndexService {
         keys: Vec<i32>,
     ) -> Receiver<Result<BitmapIndex>> {
         let (reply, rx) = channel();
-        self.queue
-            .send(Job::Plain { records, keys, reply })
-            .expect("service stopped");
+        // A failed send means every worker died; the dropped `reply`
+        // sender surfaces as a recv error on the returned channel.
+        let _ = self.queue.send(Job::Plain { records, keys, reply });
         rx
     }
 
@@ -184,15 +199,15 @@ impl IndexService {
         keys: Vec<i32>,
     ) -> Receiver<Result<CompressedIndex>> {
         let (reply, rx) = channel();
-        self.queue
-            .send(Job::Compressed { records, keys, reply })
-            .expect("service stopped");
+        let _ = self.queue.send(Job::Compressed { records, keys, reply });
         rx
     }
 
     /// Convenience: submit and block for the result.
     pub fn index(&self, records: Vec<Vec<i32>>, keys: Vec<i32>) -> Result<BitmapIndex> {
-        self.submit(records, keys).recv().expect("worker dropped reply")
+        self.submit(records, keys).recv().map_err(|_| {
+            PallasError::Internal("indexing worker dropped its reply".into())
+        })?
     }
 
     /// Convenience: submit and block for the compressed result.
@@ -201,14 +216,17 @@ impl IndexService {
         records: Vec<Vec<i32>>,
         keys: Vec<i32>,
     ) -> Result<CompressedIndex> {
-        self.submit_compressed(records, keys)
-            .recv()
-            .expect("worker dropped reply")
+        self.submit_compressed(records, keys).recv().map_err(|_| {
+            PallasError::Internal("indexing worker dropped its reply".into())
+        })?
     }
 
     /// Jobs completed per worker (routing balance inspection).
     pub fn per_worker_counts(&self) -> Vec<u64> {
-        self.counters.iter().map(|c| *c.lock().unwrap()).collect()
+        self.counters
+            .iter()
+            .map(|c| *c.lock().unwrap_or_else(PoisonError::into_inner))
+            .collect()
     }
 
     /// Graceful shutdown: close the queue and join the workers.

@@ -6,10 +6,12 @@
 //! [`Engine`]: crate::engine::Engine
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use super::planner::ExecPolicy;
 use crate::bic::Codec;
+use crate::store::{DegradedPolicy, RealVfs, Vfs};
 
 /// How ingested rows are encoded.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,6 +91,16 @@ pub struct EngineConfig {
     /// ([`ingest_async`](crate::engine::Engine::ingest_async) blocks —
     /// backpressure — once this many batches are in flight).
     pub ingest_queue: usize,
+    /// What durable reads do when segments are quarantined: refuse with
+    /// a typed error (the default) or serve the healthy subset.
+    pub degraded: DegradedPolicy,
+    /// Background scrubbing cadence for the durable store (`None`, the
+    /// default, scrubs only on [`scrub`](crate::engine::Engine::scrub)).
+    pub scrub_interval: Option<Duration>,
+    /// The filesystem the durable store runs on — [`RealVfs`] in
+    /// production; a fault-injecting
+    /// [`FaultVfs`](crate::store::vfs::FaultVfs) under test.
+    pub vfs: Arc<dyn Vfs>,
 }
 
 impl Default for EngineConfig {
@@ -107,6 +119,9 @@ impl Default for EngineConfig {
             zone_maps: true,
             group_commit_window: Duration::ZERO,
             ingest_queue: 64,
+            degraded: DegradedPolicy::default(),
+            scrub_interval: None,
+            vfs: Arc::new(RealVfs),
         }
     }
 }

@@ -20,6 +20,12 @@
 //!   durable path).
 //! - [`PallasError::Runtime`] — a PJRT/artifact failure on the
 //!   accelerator path (client creation, HLO compilation, dispatch).
+//! - [`PallasError::Internal`] — an engine invariant broke at runtime
+//!   (a lock poisoned by a panicking thread, a dead worker). Not caused
+//!   by caller input and not retryable on the same handle; surfaced as
+//!   a typed error instead of propagating the panic.
+
+use std::sync::{Mutex, MutexGuard};
 
 use crate::bic::query::QueryError;
 use crate::store::StoreError;
@@ -50,10 +56,25 @@ pub enum PallasError {
     /// PJRT/artifact failure on the accelerator path.
     #[error("runtime: {0}")]
     Runtime(String),
+    /// An engine invariant broke at runtime (poisoned lock, dead
+    /// worker thread) — not caused by caller input.
+    #[error("internal: {0}")]
+    Internal(String),
 }
 
 /// Crate-wide result alias over [`PallasError`].
 pub type Result<T> = std::result::Result<T, PallasError>;
+
+/// Acquire `m`, mapping a poisoned lock (some thread panicked while
+/// holding it) to a typed [`PallasError::Internal`] naming the lock
+/// instead of propagating the panic to this caller.
+pub(crate) fn lock<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> Result<MutexGuard<'a, T>> {
+    m.lock()
+        .map_err(|_| PallasError::Internal(format!("poisoned lock: {what}")))
+}
 
 impl From<StoreError> for PallasError {
     fn from(e: StoreError) -> Self {
@@ -63,6 +84,9 @@ impl From<StoreError> for PallasError {
                 PallasError::Corrupt { what, detail }
             }
             StoreError::Invalid(msg) => PallasError::Config(msg),
+            StoreError::Poisoned(what) => {
+                PallasError::Internal(format!("poisoned lock: {what}"))
+            }
         }
     }
 }
@@ -89,6 +113,7 @@ impl PallasError {
             PallasError::InvalidQuery(_) => "invalid-query",
             PallasError::Config(_) => "config",
             PallasError::Runtime(_) => "runtime",
+            PallasError::Internal(_) => "internal",
         }
     }
 }
@@ -110,6 +135,27 @@ mod tests {
         assert!(matches!(corrupt, PallasError::Corrupt { what: "segment", .. }));
         let cfg: PallasError = StoreError::Invalid("zero attrs".into()).into();
         assert!(matches!(cfg, PallasError::Config(_)));
+        let poisoned: PallasError =
+            StoreError::Poisoned("wal commit state").into();
+        assert!(matches!(poisoned, PallasError::Internal(_)));
+        assert_eq!(poisoned.class(), "internal");
+        assert!(poisoned.to_string().contains("wal commit state"));
+    }
+
+    #[test]
+    fn lock_helper_returns_typed_error_on_poison() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(0u32));
+        assert_eq!(*lock(&m, "counter").unwrap(), 0);
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let err = lock(&m, "counter").unwrap_err();
+        assert!(matches!(err, PallasError::Internal(_)));
+        assert!(err.to_string().contains("counter"));
     }
 
     #[test]

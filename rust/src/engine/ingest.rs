@@ -41,7 +41,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 use super::error::{PallasError, Result};
@@ -126,7 +126,12 @@ impl IngestPipeline {
         impl Drop for EncoderExit {
             fn drop(&mut self) {
                 let (lock, cv) = &*self.0;
-                lock.lock().unwrap().live_encoders -= 1;
+                // Runs during unwinds too, so it must tolerate poison —
+                // a plain decrement cannot observe torn state, and
+                // skipping it would wedge the appender forever.
+                lock.lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .live_encoders -= 1;
                 cv.notify_all();
             }
         }
@@ -138,8 +143,13 @@ impl IngestPipeline {
                 let _exit = EncoderExit(Arc::clone(&reorder));
                 let mut core = BicCore::new(inner.geometry);
                 loop {
-                    // Pull the next job; hold the lock only for the recv.
-                    let job = { rx.lock().unwrap().recv() };
+                    // Pull the next job; hold the lock only for the
+                    // recv. Poison (a sibling panicked holding the
+                    // receiver) exits like a closed queue.
+                    let job = match rx.lock() {
+                        Ok(g) => g.recv(),
+                        Err(_) => break,
+                    };
                     let Ok(job) = job else { break }; // queue closed
                     // A panic inside index/encode must not leave a
                     // sequence gap (the appender would stall on it and
@@ -159,7 +169,8 @@ impl IngestPipeline {
                         }
                     };
                     let (lock, cv) = &*reorder;
-                    let mut g = lock.lock().unwrap();
+                    let mut g =
+                        lock.lock().unwrap_or_else(PoisonError::into_inner);
                     g.ready.insert(job.seq, (slot, job.done));
                     cv.notify_all();
                 }
@@ -170,7 +181,7 @@ impl IngestPipeline {
             let inner = Arc::clone(inner);
             threads.push(std::thread::spawn(move || {
                 let (lock, cv) = &*reorder;
-                let mut g = lock.lock().unwrap();
+                let mut g = lock.lock().unwrap_or_else(PoisonError::into_inner);
                 loop {
                     // Take the contiguous ready run starting at `next`.
                     let mut run = Vec::new();
@@ -207,7 +218,7 @@ impl IngestPipeline {
                         if !group.is_empty() {
                             inner.apply_run(group);
                         }
-                        g = lock.lock().unwrap();
+                        g = lock.lock().unwrap_or_else(PoisonError::into_inner);
                         continue;
                     }
                     if g.live_encoders == 0 {
@@ -216,7 +227,7 @@ impl IngestPipeline {
                         // encoder; dropping it errors its ticket.
                         break;
                     }
-                    g = cv.wait(g).unwrap();
+                    g = cv.wait(g).unwrap_or_else(PoisonError::into_inner);
                 }
             }));
         }
@@ -230,13 +241,12 @@ impl IngestPipeline {
         let seq = self.next_seq;
         self.next_seq += 1;
         // A send can only fail if every stage thread died (a panic took
-        // the queue down); the dropped `done` sender then surfaces as a
-        // pipeline-shutdown error on the ticket's wait.
-        let _ = self
-            .tx
-            .as_ref()
-            .expect("pipeline is running")
-            .send(Job { seq, records, done });
+        // the queue down); likewise `tx` is only `None` mid-shutdown.
+        // Either way the dropped `done` sender surfaces as a
+        // pipeline-shutdown error on the ticket's wait — no panic here.
+        if let Some(tx) = self.tx.as_ref() {
+            let _ = tx.send(Job { seq, records, done });
+        }
         IngestTicket { rx }
     }
 

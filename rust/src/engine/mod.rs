@@ -51,15 +51,17 @@ pub mod schema;
 pub mod snapshot;
 
 pub use config::{CodecPolicy, CompactionMode, EngineConfig, ShardPolicy};
+pub use crate::store::{DegradedPolicy, ScrubReport};
 pub use error::{PallasError, Result};
 pub use ingest::IngestTicket;
 pub use planner::{ExecPath, ExecPolicy, Plan};
 pub use schema::{col, CmpOp, ColRef, Column, Predicate, Schema, SchemaBuilder};
 pub use snapshot::Snapshot;
 
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Duration;
 
 use crate::bic::bitmap::{Bitmap, BitmapIndex};
@@ -68,8 +70,9 @@ use crate::bic::query::{Query, QueryError};
 use crate::bic::{BicConfig, BicCore};
 use crate::coordinator::sharding::ShardedIndexer;
 use crate::store::compaction::{CompactionPolicy, Compactor};
-use crate::store::{manifest, Store, StoreConfig};
+use crate::store::{manifest, Scrubber, Store, StoreConfig, Vfs};
 use crate::substrate::json::Json;
+use error::lock;
 use exec::{EvalStats, RowChunk};
 use ingest::IngestPipeline;
 use planner::PlanInputs;
@@ -108,6 +111,27 @@ fn schema_json(schema: &Schema) -> String {
     )])
     .render()
         + "\n"
+}
+
+/// Write the schema sidecar through the engine's VFS (so fault
+/// injection covers it like every store file). Write-fsync-rename, like
+/// every other committed store file: a crash mid-write must leave
+/// either no sidecar (recovery re-stamps it from the builder's schema)
+/// or the whole file — a torn JSON would read back as permanent
+/// corruption on an otherwise healthy store. The temp name ends in
+/// `.tmp`, so recovery's orphan sweep removes a crashed leftover.
+fn write_schema_sidecar(
+    vfs: &dyn Vfs,
+    path: &Path,
+    schema: &Schema,
+) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    let mut f = vfs.create(&tmp)?;
+    f.write_all(schema_json(schema).as_bytes())?;
+    f.sync()?;
+    drop(f);
+    vfs.rename(&tmp, path)?;
+    Ok(())
 }
 
 fn schema_matches(doc: &Json, schema: &Schema) -> bool {
@@ -236,6 +260,34 @@ impl EngineBuilder {
         self
     }
 
+    /// What durable reads do when segments are quarantined:
+    /// [`DegradedPolicy::FailClosed`] (the default) refuses queries
+    /// with a typed [`PallasError::Corrupt`] naming a quarantined
+    /// segment; [`DegradedPolicy::ServeHealthy`] serves the healthy
+    /// subset and reports the gap through [`EngineStats`].
+    pub fn degraded(mut self, p: DegradedPolicy) -> Self {
+        self.cfg.degraded = p;
+        self
+    }
+
+    /// Scrub the durable store in the background every `interval`:
+    /// re-read every live segment from disk, re-verify checksums and
+    /// structural invariants, and quarantine what fails (see
+    /// [`Engine::scrub`] for the on-demand form).
+    pub fn scrub_every(mut self, interval: Duration) -> Self {
+        self.cfg.scrub_interval = Some(interval);
+        self
+    }
+
+    /// Run all durable-store I/O through `vfs`. The default is the real
+    /// filesystem ([`crate::store::RealVfs`]); tests inject a
+    /// [`FaultVfs`](crate::store::vfs::FaultVfs) here to rehearse
+    /// crashes, torn writes, full disks, and bit rot deterministically.
+    pub fn vfs(mut self, vfs: Arc<dyn Vfs>) -> Self {
+        self.cfg.vfs = vfs;
+        self
+    }
+
     /// The configuration as assembled so far.
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
@@ -273,6 +325,11 @@ impl EngineBuilder {
                     "compaction requires a durable path".into(),
                 ));
             }
+            if cfg.scrub_interval.is_some() {
+                return Err(PallasError::Config(
+                    "background scrubbing requires a durable path".into(),
+                ));
+            }
         }
         let indexer = if cfg.workers == 0 {
             ShardedIndexer::with_host_parallelism(geometry)
@@ -280,6 +337,7 @@ impl EngineBuilder {
             ShardedIndexer::new(geometry, cfg.workers)?
         };
         let mut compactor = None;
+        let mut scrubber = None;
         let backend = match &cfg.durable_path {
             Some(path) => {
                 let scfg = StoreConfig {
@@ -290,6 +348,8 @@ impl EngineBuilder {
                     },
                     group_window: cfg.group_commit_window,
                     zone_pruning: cfg.zone_maps,
+                    degraded: cfg.degraded,
+                    vfs: Arc::clone(&cfg.vfs),
                 };
                 let store = if manifest::exists(path) {
                     let store = Store::open(path, scfg)?;
@@ -303,17 +363,29 @@ impl EngineBuilder {
                     // Same width is not enough: the stored rows were
                     // indexed under specific (column, value) keys.
                     let sidecar = path.join(SCHEMA_FILE);
-                    match std::fs::read_to_string(&sidecar) {
-                        Ok(text) => {
-                            let doc = Json::parse(&text).map_err(|e| {
+                    match cfg.vfs.read(&sidecar) {
+                        Ok(bytes) => {
+                            let corrupt = |detail: String| {
                                 PallasError::Corrupt {
                                     what: "engine schema sidecar",
-                                    detail: format!(
+                                    detail,
+                                }
+                            };
+                            let text =
+                                String::from_utf8(bytes).map_err(|_| {
+                                    corrupt(format!(
+                                        "{}: not UTF-8",
+                                        sidecar.display()
+                                    ))
+                                })?;
+                            let doc = Json::parse(text.trim_end()).map_err(
+                                |e| {
+                                    corrupt(format!(
                                         "{}: {e}",
                                         sidecar.display()
-                                    ),
-                                }
-                            })?;
+                                    ))
+                                },
+                            )?;
                             if !schema_matches(&doc, &schema) {
                                 return Err(PallasError::Config(format!(
                                     "store at {} was created under a \
@@ -330,20 +402,32 @@ impl EngineBuilder {
                         Err(e)
                             if e.kind() == std::io::ErrorKind::NotFound =>
                         {
-                            std::fs::write(&sidecar, schema_json(&schema))?
+                            write_schema_sidecar(
+                                cfg.vfs.as_ref(),
+                                &sidecar,
+                                &schema,
+                            )?;
                         }
                         Err(e) => return Err(PallasError::Io(e)),
                     }
                     store
                 } else {
                     let store = Store::create(path, m, scfg)?;
-                    std::fs::write(path.join(SCHEMA_FILE), schema_json(&schema))?;
+                    write_schema_sidecar(
+                        cfg.vfs.as_ref(),
+                        &path.join(SCHEMA_FILE),
+                        &schema,
+                    )?;
                     store
                 };
                 let store = Arc::new(Mutex::new(store));
                 if let CompactionMode::Background { interval } = cfg.compaction {
                     compactor =
                         Some(Compactor::spawn(Arc::clone(&store), interval));
+                }
+                if let Some(interval) = cfg.scrub_interval {
+                    scrubber =
+                        Some(Scrubber::spawn(Arc::clone(&store), interval));
                 }
                 Backend::Durable(store)
             }
@@ -365,6 +449,7 @@ impl EngineBuilder {
             }),
             indexer,
             compactor,
+            scrubber,
             pipeline: Mutex::new(None),
         })
     }
@@ -423,6 +508,14 @@ pub struct EngineStats {
     /// Chunk windows store-tier queries skipped (or bulk-cleared) via
     /// zone maps instead of reading a row.
     pub store_chunks_skipped: u64,
+    /// Quarantined (scrub- or recovery-tombstoned) segments. Non-zero
+    /// means reads are refused ([`DegradedPolicy::FailClosed`]) or
+    /// partial ([`DegradedPolicy::ServeHealthy`]).
+    pub degraded_segments: usize,
+    /// Objects inside quarantined ranges — rows a
+    /// [`DegradedPolicy::ServeHealthy`] query cannot see (they read as
+    /// zeros).
+    pub rows_unavailable: usize,
 }
 
 impl EngineStats {
@@ -523,10 +616,12 @@ impl Inner {
     }
 
     /// Derived read views (compressed cache, cardinality cache) go
-    /// stale on every append.
+    /// stale on every append. Must succeed even when a panicking reader
+    /// poisoned a cache lock — clearing an `Option` cannot observe torn
+    /// state, so poison is ignored here.
     fn invalidate_views(&self) {
-        *self.cache.lock().unwrap() = None;
-        *self.cards.lock().unwrap() = None;
+        *self.cache.lock().unwrap_or_else(PoisonError::into_inner) = None;
+        *self.cards.lock().unwrap_or_else(PoisonError::into_inner) = None;
     }
 
     /// Append one encoded batch — [`Inner::append_group`] of one. On
@@ -536,7 +631,9 @@ impl Inner {
     /// instead of serializing them.
     fn append(&self, ci: CompressedIndex) -> Result<IngestReceipt> {
         let mut receipts = self.append_group(vec![ci])?;
-        Ok(receipts.pop().expect("one batch in, one receipt out"))
+        receipts.pop().ok_or_else(|| {
+            PallasError::Internal("one batch in, no receipt out".into())
+        })
     }
 
     /// Append a whole trace of encoded batches as **one group**: every
@@ -554,7 +651,7 @@ impl Inner {
                 let mut acked = Vec::with_capacity(encoded.len());
                 let mut first_err: Option<PallasError> = None;
                 {
-                    let mut g = store.lock().unwrap();
+                    let mut g = lock(store, "store")?;
                     for ci in &encoded {
                         match g.begin_append_batch(ci) {
                             Ok(ticket) => {
@@ -599,7 +696,7 @@ impl Inner {
             }
             Backend::Memory(mem) => {
                 let receipts = {
-                    let mut g = mem.lock().unwrap();
+                    let mut g = lock(mem, "memtable")?;
                     encoded
                         .into_iter()
                         .map(|ci| {
@@ -635,7 +732,17 @@ impl Inner {
             Backend::Durable(store) => {
                 let mut acked = Vec::with_capacity(run.len());
                 {
-                    let mut g = store.lock().unwrap();
+                    // A poisoned store lock fails the whole run with a
+                    // typed error on each ticket instead of panicking
+                    // the appender thread (which would wedge callers).
+                    let Ok(mut g) = store.lock() else {
+                        for (_, done) in run {
+                            let _ = done.send(Err(PallasError::Internal(
+                                "poisoned lock: store".into(),
+                            )));
+                        }
+                        return;
+                    };
                     for (ci, done) in run {
                         let objects = ci.num_objects();
                         match g.begin_append_batch(&ci) {
@@ -679,7 +786,14 @@ impl Inner {
                 // its acknowledged batch.
                 let mut acked = Vec::with_capacity(run.len());
                 {
-                    let mut g = mem.lock().unwrap();
+                    let Ok(mut g) = mem.lock() else {
+                        for (_, done) in run {
+                            let _ = done.send(Err(PallasError::Internal(
+                                "poisoned lock: memtable".into(),
+                            )));
+                        }
+                        return;
+                    };
                     for (ci, done) in run {
                         let objects = g.push(ci);
                         let batch =
@@ -710,7 +824,10 @@ impl Inner {
         let prune = self.cfg.zone_maps;
         match &self.backend {
             Backend::Durable(store) => {
-                let g = store.lock().unwrap();
+                // Capture tolerates a poisoned lock (the capture only
+                // clones `Arc`s; fallible paths surface poison as
+                // [`PallasError::Internal`] before evaluating).
+                let g = store.lock().unwrap_or_else(PoisonError::into_inner);
                 PinnedView {
                     segs: g.segments.clone(),
                     mem: g
@@ -721,16 +838,24 @@ impl Inner {
                     mem_base: g.segment_bits(),
                     nbits: g.num_objects(),
                     prune,
+                    policy: g.degraded_policy(),
+                    quarantined: g
+                        .quarantined_entries()
+                        .iter()
+                        .map(|e| e.file.clone())
+                        .collect(),
                 }
             }
             Backend::Memory(mem) => {
-                let g = mem.lock().unwrap();
+                let g = mem.lock().unwrap_or_else(PoisonError::into_inner);
                 PinnedView {
                     segs: Vec::new(),
                     mem: g.batches.clone(),
                     mem_base: 0,
                     nbits: g.bits,
                     prune,
+                    policy: DegradedPolicy::default(),
+                    quarantined: Vec::new(),
                 }
             }
         }
@@ -744,6 +869,7 @@ pub struct Engine {
     inner: Arc<Inner>,
     indexer: ShardedIndexer,
     compactor: Option<Compactor>,
+    scrubber: Option<Scrubber>,
     /// The async-ingest stage, spawned lazily on the first
     /// [`Engine::ingest_async`] call.
     pipeline: Mutex<Option<IngestPipeline>>,
@@ -783,8 +909,13 @@ impl Engine {
     /// Objects currently indexed.
     pub fn num_objects(&self) -> usize {
         match &self.inner.backend {
-            Backend::Durable(store) => store.lock().unwrap().num_objects(),
-            Backend::Memory(mem) => mem.lock().unwrap().bits,
+            Backend::Durable(store) => store
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .num_objects(),
+            Backend::Memory(mem) => {
+                mem.lock().unwrap_or_else(PoisonError::into_inner).bits
+            }
         }
     }
 
@@ -796,7 +927,8 @@ impl Engine {
     /// [`Engine::ingest_async`].
     pub fn ingest(&self, records: &[Vec<i32>]) -> Result<IngestReceipt> {
         self.inner.check_records(records)?;
-        let bi = self.inner.core.lock().unwrap().index(records, &self.inner.keys);
+        let bi =
+            lock(&self.inner.core, "core")?.index(records, &self.inner.keys);
         self.inner.append(self.inner.encode(&bi))
     }
 
@@ -840,7 +972,7 @@ impl Engine {
     /// same durability meaning as the synchronous path.
     pub fn ingest_async(&self, records: Vec<Vec<i32>>) -> Result<IngestTicket> {
         self.inner.check_records(&records)?;
-        let mut slot = self.pipeline.lock().unwrap();
+        let mut slot = lock(&self.pipeline, "ingest pipeline")?;
         let pipeline = slot.get_or_insert_with(|| {
             IngestPipeline::spawn(
                 &self.inner,
@@ -861,7 +993,7 @@ impl Engine {
         for records in &batches {
             self.inner.check_records(records)?;
         }
-        let mut slot = self.pipeline.lock().unwrap();
+        let mut slot = lock(&self.pipeline, "ingest pipeline")?;
         let pipeline = slot.get_or_insert_with(|| {
             IngestPipeline::spawn(
                 &self.inner,
@@ -878,7 +1010,7 @@ impl Engine {
     pub fn flush(&self) -> Result<Option<u64>> {
         match &self.inner.backend {
             Backend::Durable(store) => {
-                let mut g = store.lock().unwrap();
+                let mut g = lock(store, "store")?;
                 let written = g.flush()?;
                 if self.inner.cfg.compaction == CompactionMode::Foreground {
                     g.compact()?;
@@ -887,6 +1019,43 @@ impl Engine {
             }
             Backend::Memory(_) => Ok(None),
         }
+    }
+
+    /// Run one scrub pass now: re-read every live segment from disk,
+    /// re-verify checksums and structural invariants, and quarantine
+    /// what fails (manifest tombstone + move to `quarantined/`). The
+    /// in-memory backend has nothing to scrub and returns an empty
+    /// report. See [`EngineBuilder::scrub_every`] for the scheduled
+    /// form.
+    pub fn scrub(&self) -> Result<ScrubReport> {
+        match &self.inner.backend {
+            Backend::Durable(store) => Ok(lock(store, "store")?.scrub()?),
+            Backend::Memory(_) => Ok(ScrubReport::default()),
+        }
+    }
+
+    /// The FailClosed degraded-read guard: with quarantined segments
+    /// present, refuse the query with a typed error naming one of them
+    /// instead of silently serving holes. [`DegradedPolicy::ServeHealthy`]
+    /// engines skip this and report the gap through [`Engine::stats`].
+    fn check_degraded(&self) -> Result<()> {
+        if let Backend::Durable(store) = &self.inner.backend {
+            let g = lock(store, "store")?;
+            if g.degraded_policy() == DegradedPolicy::FailClosed {
+                if let Some(e) = g.quarantined_entries().first() {
+                    return Err(PallasError::Corrupt {
+                        what: "segment",
+                        detail: format!(
+                            "{}: quarantined ({} segments degraded); \
+                             refusing reads under DegradedPolicy::FailClosed",
+                            e.file,
+                            g.degraded_segments()
+                        ),
+                    });
+                }
+            }
+        }
+        Ok(())
     }
 
     fn validate(&self, q: &Query) -> Result<()> {
@@ -907,7 +1076,8 @@ impl Engine {
 
     /// Get (building on first use) the cached compressed view.
     fn compressed_view(&self) -> Arc<CompressedIndex> {
-        let mut guard = self.inner.cache.lock().unwrap();
+        let mut guard =
+            self.inner.cache.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(ci) = guard.as_ref() {
             return Arc::clone(ci);
         }
@@ -931,13 +1101,19 @@ impl Engine {
     /// segments), cached until the next ingest.
     fn row_cards(&self) -> Arc<Vec<u64>> {
         if let Backend::Memory(mem) = &self.inner.backend {
-            return Arc::new(mem.lock().unwrap().cards.clone());
+            return Arc::new(
+                mem.lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .cards
+                    .clone(),
+            );
         }
         // Hold the cache slot across the computation (like
         // `compressed_view`): an append that lands mid-count blocks on
         // this lock to invalidate, so a stale vector can never be
         // published over a fresher index.
-        let mut guard = self.inner.cards.lock().unwrap();
+        let mut guard =
+            self.inner.cards.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(c) = guard.as_ref() {
             return Arc::clone(c);
         }
@@ -972,7 +1148,7 @@ impl Engine {
         let conjunctive = matches!(q, Query::And(xs) if xs.len() >= 2);
         let (durable, segments, chunks, total_bits) = match &self.inner.backend {
             Backend::Durable(store) => {
-                let g = store.lock().unwrap();
+                let g = store.lock().unwrap_or_else(PoisonError::into_inner);
                 (
                     true,
                     g.num_segments(),
@@ -981,7 +1157,7 @@ impl Engine {
                 )
             }
             Backend::Memory(mem) => {
-                let g = mem.lock().unwrap();
+                let g = mem.lock().unwrap_or_else(PoisonError::into_inner);
                 (false, 0, g.batches.len(), g.bits)
             }
         };
@@ -1016,7 +1192,12 @@ impl Engine {
             total_bits,
             est_cost,
             workers: self.indexer.shards(),
-            compressed_cached: self.inner.cache.lock().unwrap().is_some(),
+            compressed_cached: self
+                .inner
+                .cache
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .is_some(),
             shard: self.inner.cfg.shard,
             conjunctive,
         }
@@ -1051,6 +1232,7 @@ impl Engine {
     }
 
     fn run(&self, q: &Query, path: ExecPath) -> Result<Bitmap> {
+        self.check_degraded()?;
         let m = self.num_attrs();
         let mut fold = EvalStats::default();
         let out = match path {
@@ -1060,11 +1242,11 @@ impl Engine {
                         .map(|a| exec::assemble_row(chunks, a, nbits))
                         .collect(),
                 );
-                q.eval(&bi).expect("attrs validated")
-            }),
+                q.eval(&bi)
+            })?,
             ExecPath::Compressed => {
                 let ci = self.compressed_view();
-                q.eval_compressed(&ci).expect("attrs validated")
+                q.eval_compressed(&ci)?
             }
             ExecPath::Sharded => self.eval_with(|chunks, nbits| {
                 // `Never` means single-threaded evaluation only: cap
@@ -1077,7 +1259,7 @@ impl Engine {
                     self.indexer.shards()
                 };
                 sharded_eval(chunks, nbits, q, workers)
-            }),
+            })?,
             ExecPath::Store => {
                 if !matches!(self.inner.backend, Backend::Durable(_)) {
                     return Err(PallasError::Config(
@@ -1094,8 +1276,18 @@ impl Engine {
                 })
             }
         };
-        let slot = ExecPath::ALL.iter().position(|&p| p == path).unwrap();
-        let mut counters = self.inner.counters.lock().unwrap();
+        let slot =
+            ExecPath::ALL.iter().position(|&p| p == path).ok_or_else(|| {
+                PallasError::Internal("exec path missing from ALL".into())
+            })?;
+        // Counter bumps tolerate poison: plain integer adds cannot
+        // observe torn state, and a successful query result must not be
+        // discarded over bookkeeping.
+        let mut counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
         counters.queries[slot] += 1;
         counters.fold.rows_folded += fold.rows_folded;
         counters.fold.row_bytes += fold.row_bytes;
@@ -1113,24 +1305,34 @@ impl Engine {
 
     /// Current engine census.
     pub fn stats(&self) -> EngineStats {
-        let (durable, objects, segments, memtable_batches, segment_bytes) =
-            match &self.inner.backend {
-                Backend::Durable(store) => {
-                    let g = store.lock().unwrap();
-                    (
-                        true,
-                        g.num_objects(),
-                        g.num_segments(),
-                        g.memtable_batches(),
-                        g.segment_bytes_written(),
-                    )
-                }
-                Backend::Memory(mem) => {
-                    let g = mem.lock().unwrap();
-                    (false, g.bits, 0, g.batches.len(), 0)
-                }
-            };
-        let counters = self.inner.counters.lock().unwrap();
+        let (
+            durable,
+            objects,
+            segments,
+            memtable_batches,
+            segment_bytes,
+            degraded_segments,
+            rows_unavailable,
+        ) = match &self.inner.backend {
+            Backend::Durable(store) => {
+                let g = store.lock().unwrap_or_else(PoisonError::into_inner);
+                (
+                    true,
+                    g.num_objects(),
+                    g.num_segments(),
+                    g.memtable_batches(),
+                    g.segment_bytes_written(),
+                    g.degraded_segments(),
+                    g.rows_unavailable(),
+                )
+            }
+            Backend::Memory(mem) => {
+                let g = mem.lock().unwrap_or_else(PoisonError::into_inner);
+                (false, g.bits, 0, g.batches.len(), 0, 0, 0)
+            }
+        };
+        let counters =
+            self.inner.counters.lock().unwrap_or_else(PoisonError::into_inner);
         EngineStats {
             attrs: self.num_attrs(),
             columns: self.inner.schema.num_columns(),
@@ -1141,7 +1343,12 @@ impl Engine {
             segments,
             memtable_batches,
             segment_bytes_written: segment_bytes,
-            compressed_cache: self.inner.cache.lock().unwrap().is_some(),
+            compressed_cache: self
+                .inner
+                .cache
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .is_some(),
             queries_raw: counters.queries[0],
             queries_compressed: counters.queries[1],
             queries_sharded: counters.queries[2],
@@ -1149,24 +1356,30 @@ impl Engine {
             store_rows_folded: counters.fold.rows_folded,
             store_row_bytes_read: counters.fold.row_bytes,
             store_chunks_skipped: counters.fold.chunks_skipped,
+            degraded_segments,
+            rows_unavailable,
         }
     }
 
     /// Graceful shutdown: drain the async-ingest pipeline (every
     /// submitted batch is applied and its ticket resolved), stop the
-    /// background compactor (if any), flush the store memtable, and
-    /// return the final census. Dropping the engine without `close` is
-    /// safe — the pipeline drains on drop too and the WAL covers the
-    /// memtable — but leaves the last segment unflushed.
+    /// background compactor and scrubber (if any), flush the store
+    /// memtable, and return the final census. Dropping the engine
+    /// without `close` is safe — the pipeline drains on drop too and
+    /// the WAL covers the memtable — but leaves the last segment
+    /// unflushed.
     pub fn close(mut self) -> Result<EngineStats> {
-        if let Some(mut p) = self.pipeline.lock().unwrap().take() {
+        if let Some(mut p) = lock(&self.pipeline, "ingest pipeline")?.take() {
             p.shutdown();
         }
         if let Some(c) = self.compactor.take() {
             c.stop();
         }
+        if let Some(s) = self.scrubber.take() {
+            s.stop();
+        }
         if let Backend::Durable(store) = &self.inner.backend {
-            store.lock().unwrap().flush()?;
+            lock(store, "store")?.flush()?;
         }
         Ok(self.stats())
     }
@@ -1185,13 +1398,13 @@ fn sharded_eval(
     nbits: usize,
     q: &Query,
     workers: usize,
-) -> Bitmap {
+) -> Result<Bitmap> {
     if chunks.len() < 2 || workers < 2 {
-        return exec::eval_chunks(chunks, nbits, q);
+        return Ok(exec::eval_chunks(chunks, nbits, q));
     }
     let groups = workers.min(chunks.len());
     let per = chunks.len().div_ceil(groups);
-    let results: Vec<(usize, Bitmap)> = std::thread::scope(|s| {
+    let results: Result<Vec<(usize, Bitmap)>> = std::thread::scope(|s| {
         let handles: Vec<_> = chunks
             .chunks(per)
             .map(|slice| {
@@ -1205,21 +1418,27 @@ fn sharded_eval(
                             zone: c.zone,
                         })
                         .collect();
-                    let last = slice.last().expect("slice is non-empty");
+                    let last = &slice[slice.len() - 1];
                     let len = last.base - base
                         + last.rows.first().map_or(0, CodecBitmap::len);
                     (base, exec::eval_chunks(&local, len, q))
                 })
             })
             .collect();
+        // A panicked worker becomes a typed error, not a propagated
+        // panic: the scope still joins every other worker first.
         handles
             .into_iter()
-            .map(|h| h.join().expect("shard worker panicked"))
+            .map(|h| {
+                h.join().map_err(|_| {
+                    PallasError::Internal("query shard worker panicked".into())
+                })
+            })
             .collect()
     });
     let mut out = Bitmap::zeros(nbits);
-    for (base, bm) in results {
+    for (base, bm) in results? {
         out.or_at(&bm, base);
     }
-    out
+    Ok(out)
 }

@@ -17,13 +17,14 @@
 
 use std::sync::Arc;
 
-use super::error::Result;
+use super::error::{PallasError, Result};
 use super::exec::{self, RowChunk};
 use super::schema::{Predicate, Schema};
 use crate::bic::bitmap::{Bitmap, BitmapIndex};
 use crate::bic::codec::CodecBitmap;
 use crate::bic::query::{Query, QueryError};
 use crate::store::segment::Segment;
+use crate::store::DegradedPolicy;
 
 /// An owned capture of the chunk tiling at one instant: pinned segments
 /// first, then memtable batches. Mirrors `Store::chunks` (the borrowed
@@ -40,9 +41,34 @@ pub(crate) struct PinnedView {
     /// Expose segment zone maps to the evaluator (the engine's
     /// `zone_maps` knob; memtable batches are always zone-unknown).
     pub prune: bool,
+    /// The degraded-read policy at capture time: under `FailClosed` a
+    /// non-empty `quarantined` list makes evaluation refuse.
+    pub policy: DegradedPolicy,
+    /// Files quarantined at capture time. Their object ranges are holes
+    /// in the tiling (absent from `segs`, reading as zeros).
+    pub quarantined: Vec<String>,
 }
 
 impl PinnedView {
+    /// The FailClosed degraded guard over this capture — same contract
+    /// as the engine's live query path: quarantined segments present
+    /// means refuse with a typed error naming one, unless the policy
+    /// opts into serving the healthy subset.
+    pub fn check_degraded(&self) -> Result<()> {
+        if self.policy == DegradedPolicy::FailClosed {
+            if let Some(f) = self.quarantined.first() {
+                return Err(PallasError::Corrupt {
+                    what: "segment",
+                    detail: format!(
+                        "{f}: quarantined ({} segments degraded); refusing \
+                         reads under DegradedPolicy::FailClosed",
+                        self.quarantined.len()
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
     /// The chunk tiling as borrow views into the pinned data.
     pub fn views(&self) -> Vec<RowChunk<'_>> {
         let mut out: Vec<RowChunk<'_>> = self
@@ -86,8 +112,12 @@ impl Snapshot {
         &self.schema
     }
 
-    /// Evaluate a [`Query`] over the snapshot.
+    /// Evaluate a [`Query`] over the snapshot. Refuses with a typed
+    /// [`PallasError::Corrupt`] if segments were quarantined at capture
+    /// time and the engine runs
+    /// [`DegradedPolicy::FailClosed`].
     pub fn query(&self, q: &Query) -> Result<Bitmap> {
+        self.view.check_degraded()?;
         let m = self.num_attrs();
         for a in q.attrs() {
             if a >= m {

@@ -20,8 +20,14 @@
 //! being referenced), then the input files are unlinked. A crash
 //! anywhere leaves either the old set or the new set live; orphaned
 //! files are removed on recovery.
+//!
+//! Quarantined segments are never merged across: a merged segment
+//! claims the whole object range `[base, base + Σnbits)`, so merging
+//! over a hole would silently resurrect unavailable rows as zeros.
+//! The picker therefore runs inside each maximal *object-contiguous*
+//! run of healthy segments (a store with no quarantine is one run, and
+//! the behavior is exactly the pre-quarantine picker's).
 
-use std::fs;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -102,15 +108,52 @@ fn pick_range(
     Some((best, best + 2))
 }
 
+/// Maximal runs of object-contiguous segments, as `[start, end)` index
+/// ranges — merge candidates never span a quarantine hole.
+fn contiguous_runs(spans: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    let mut runs = Vec::new();
+    let mut start = 0usize;
+    for i in 1..spans.len() {
+        let (prev_base, prev_nbits) = spans[i - 1];
+        if spans[i].0 != prev_base + prev_nbits {
+            runs.push((start, i));
+            start = i;
+        }
+    }
+    if !spans.is_empty() {
+        runs.push((start, spans.len()));
+    }
+    runs
+}
+
 impl Store {
     /// One compaction round: merge the segment range the size-tiered
     /// picker chose (see module docs). Returns whether a merge happened.
     pub fn compact_once(&mut self) -> Result<bool> {
-        let sizes: Vec<u64> = self.segments.iter().map(|s| s.bytes).collect();
         let policy = self.cfg.compaction;
-        let Some((start, end)) =
-            pick_range(&sizes, policy.max_segments, policy.tier_width)
-        else {
+        if self.segments.len() <= policy.max_segments.max(1) {
+            return Ok(false);
+        }
+        let spans: Vec<(usize, usize)> =
+            self.segments.iter().map(|s| (s.base, s.nbits)).collect();
+        let sizes: Vec<u64> = self.segments.iter().map(|s| s.bytes).collect();
+        // Pick within each contiguous run (the policy's count trigger
+        // already fired globally, so the per-run bound is 1: any run of
+        // two or more may merge); the cheapest pick across runs wins.
+        let mut best: Option<(usize, usize, u64)> = None;
+        for (rs, re) in contiguous_runs(&spans) {
+            let Some((s, e)) =
+                pick_range(&sizes[rs..re], 1, policy.tier_width)
+            else {
+                continue;
+            };
+            let (start, end) = (rs + s, rs + e);
+            let combined: u64 = sizes[start..end].iter().sum();
+            if best.is_none_or(|(_, _, b)| combined < b) {
+                best = Some((start, end, combined));
+            }
+        }
+        let Some((start, end, _)) = best else {
             return Ok(false);
         };
         self.merge_range(start, end)?;
@@ -124,6 +167,10 @@ impl Store {
         let span = &self.segments[start..end];
         let base = span[0].base;
         let nbits: usize = span.iter().map(|s| s.nbits).sum();
+        debug_assert!(
+            span.windows(2).all(|w| w[1].base == w[0].base + w[0].nbits),
+            "merge range must be object-contiguous (no quarantine holes)"
+        );
         let rows: Vec<CodecBitmap> = (0..self.num_attrs)
             .map(|a| {
                 let mut acc = Bitmap::zeros(nbits);
@@ -139,12 +186,36 @@ impl Store {
             span.iter().map(|s| s.file.clone()).collect();
 
         let id = self.next_segment_id;
-        let (file, bytes, zone) = segment::write(&self.dir, id, base, &rows)?;
-        let mut entries: Vec<SegmentEntry> = self.manifest_entries();
-        let merged_entry =
-            SegmentEntry { id, file: file.clone(), base, nbits, bytes };
+        let (file, bytes, zone) =
+            segment::write(self.vfs(), &self.dir, id, base, &rows)?;
+        // `start..end` indexes the healthy list; build the committed
+        // entry set by splicing there, then re-interleaving the
+        // quarantine tombstones by base.
+        let mut entries: Vec<SegmentEntry> = self
+            .segments
+            .iter()
+            .map(|s| SegmentEntry {
+                id: s.id,
+                file: s.file.clone(),
+                base: s.base,
+                nbits: s.nbits,
+                bytes: s.bytes,
+                quarantined: false,
+            })
+            .collect();
+        let merged_entry = SegmentEntry {
+            id,
+            file: file.clone(),
+            base,
+            nbits,
+            bytes,
+            quarantined: false,
+        };
         entries.splice(start..end, [merged_entry]);
+        entries.extend(self.quarantined.iter().cloned());
+        entries.sort_by_key(|e| e.base);
         manifest::commit(
+            self.vfs(),
             &self.dir,
             &ManifestState {
                 num_attrs: self.num_attrs,
@@ -170,7 +241,7 @@ impl Store {
         self.next_segment_id = id + 1;
         self.note_segment_bytes(bytes);
         for f in old_files {
-            let _ = fs::remove_file(self.dir.join(f));
+            let _ = self.vfs().remove_file(&self.dir.join(f));
         }
         Ok(())
     }
@@ -201,7 +272,10 @@ impl Compactor {
         let handle = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 {
-                    let mut guard = store.lock().expect("store lock");
+                    // A poisoned store lock means a writer panicked
+                    // mid-mutation: stop compacting rather than merge
+                    // over possibly-torn state.
+                    let Ok(mut guard) = store.lock() else { break };
                     // I/O errors here are retried next tick; the
                     // foreground path surfaces them on its own calls.
                     let _ = guard.compact_once();
@@ -263,6 +337,18 @@ mod tests {
         assert_eq!(pick_range(&sizes, 2, 4), Some((0, 2)));
         // With k = 2 the whole small run merges at once.
         assert_eq!(pick_range(&sizes, 2, 2), Some((0, 3)));
+    }
+
+    #[test]
+    fn contiguous_runs_split_at_quarantine_holes() {
+        // Three segments tiling [0,30), a hole [30,40), two more
+        // tiling [40,60): two runs, never one candidate across the gap.
+        let spans = [(0, 10), (10, 10), (20, 10), (40, 10), (50, 10)];
+        assert_eq!(contiguous_runs(&spans), vec![(0, 3), (3, 5)]);
+        // No hole: one run (the pre-quarantine behavior).
+        let solid = [(0, 10), (10, 20), (30, 5)];
+        assert_eq!(contiguous_runs(&solid), vec![(0, 3)]);
+        assert!(contiguous_runs(&[]).is_empty());
     }
 
     #[test]

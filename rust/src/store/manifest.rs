@@ -19,10 +19,9 @@
 //!               "nbits":4096,"bytes":1234}]}
 //! ```
 
-use std::fs;
-use std::io::Write as _;
 use std::path::Path;
 
+use super::vfs::Vfs;
 use super::{segment, Result, StoreError};
 use crate::substrate::json::Json;
 
@@ -31,7 +30,11 @@ pub const MANIFEST: &str = "MANIFEST.json";
 
 const VERSION: f64 = 1.0;
 
-/// One live segment, as the manifest records it.
+/// One segment, as the manifest records it. A `quarantined` entry is a
+/// tombstone: the scrubber (or degraded-mode recovery) found the file
+/// corrupt or missing, moved anything salvageable to `quarantined/`,
+/// and queries serve the remaining healthy set — the entry keeps its
+/// object range reserved so bases never shift underneath readers.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SegmentEntry {
     pub id: u64,
@@ -39,6 +42,7 @@ pub struct SegmentEntry {
     pub base: usize,
     pub nbits: usize,
     pub bytes: u64,
+    pub quarantined: bool,
 }
 
 /// The full committed store state.
@@ -56,7 +60,7 @@ pub fn exists(dir: &Path) -> bool {
 }
 
 /// Atomically replace the manifest with `state`.
-pub fn commit(dir: &Path, state: &ManifestState) -> Result<()> {
+pub fn commit(vfs: &dyn Vfs, dir: &Path, state: &ManifestState) -> Result<()> {
     let doc = Json::obj([
         ("version", VERSION.into()),
         ("num_attrs", state.num_attrs.into()),
@@ -75,6 +79,7 @@ pub fn commit(dir: &Path, state: &ManifestState) -> Result<()> {
                             ("base", e.base.into()),
                             ("nbits", e.nbits.into()),
                             ("bytes", e.bytes.into()),
+                            ("quarantined", e.quarantined.into()),
                         ])
                     })
                     .collect(),
@@ -83,13 +88,13 @@ pub fn commit(dir: &Path, state: &ManifestState) -> Result<()> {
     ]);
     let tmp = dir.join("MANIFEST.tmp");
     {
-        let mut f = fs::File::create(&tmp)?;
+        let mut f = vfs.create(&tmp)?;
         f.write_all(doc.render().as_bytes())?;
         f.write_all(b"\n")?;
-        f.sync_all()?;
+        f.sync()?;
     }
-    fs::rename(&tmp, dir.join(MANIFEST))?;
-    segment::sync_dir(dir);
+    vfs.rename(&tmp, &dir.join(MANIFEST))?;
+    segment::sync_dir(vfs, dir);
     Ok(())
 }
 
@@ -102,9 +107,11 @@ fn corrupt(path: &Path, detail: impl std::fmt::Display) -> StoreError {
 }
 
 /// Load and validate the manifest of `dir`.
-pub fn load(dir: &Path) -> Result<ManifestState> {
+pub fn load(vfs: &dyn Vfs, dir: &Path) -> Result<ManifestState> {
     let path = dir.join(MANIFEST);
-    let text = fs::read_to_string(&path)?;
+    let bytes = vfs.read(&path)?;
+    let text = String::from_utf8(bytes)
+        .map_err(|_| corrupt(&path, "manifest is not UTF-8"))?;
     let doc =
         Json::parse(text.trim_end()).map_err(|e| corrupt(&path, e))?;
     let num = |key: &str| {
@@ -140,12 +147,19 @@ pub fn load(dir: &Path) -> Result<ManifestState> {
                 corrupt(&path, format!("segment {i}: missing 'file'"))
             })?
             .to_string();
+        // Manifests written before the quarantine machinery carry no
+        // flag: absent means healthy.
+        let quarantined = e
+            .get("quarantined")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
         segments.push(SegmentEntry {
             id: field("id")? as u64,
             file,
             base: field("base")? as usize,
             nbits: field("nbits")? as usize,
             bytes: field("bytes")? as u64,
+            quarantined,
         });
     }
     Ok(ManifestState { num_attrs, next_segment_id, wal_gen, segments })
@@ -153,7 +167,9 @@ pub fn load(dir: &Path) -> Result<ManifestState> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::vfs::RealVfs;
     use super::*;
+    use std::fs;
 
     #[test]
     fn commit_load_roundtrip() {
@@ -173,6 +189,7 @@ mod tests {
                     base: 0,
                     nbits: 4096,
                     bytes: 777,
+                    quarantined: false,
                 },
                 SegmentEntry {
                     id: 2,
@@ -180,19 +197,41 @@ mod tests {
                     base: 4096,
                     nbits: 128,
                     bytes: 99,
+                    quarantined: true,
                 },
             ],
         };
-        commit(&dir, &state).unwrap();
+        commit(&RealVfs, &dir, &state).unwrap();
         assert!(exists(&dir));
-        assert_eq!(load(&dir).unwrap(), state);
+        assert_eq!(load(&RealVfs, &dir).unwrap(), state);
         // Re-commit replaces atomically (no tmp residue).
         let mut state2 = state.clone();
         state2.wal_gen = 3;
         state2.segments.pop();
-        commit(&dir, &state2).unwrap();
-        assert_eq!(load(&dir).unwrap(), state2);
+        commit(&RealVfs, &dir, &state2).unwrap();
+        assert_eq!(load(&RealVfs, &dir).unwrap(), state2);
         assert!(!dir.join("MANIFEST.tmp").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pre_quarantine_manifests_load_as_healthy() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-manifest-compat-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        // The exact shape `commit` produced before the flag existed.
+        fs::write(
+            dir.join(MANIFEST),
+            "{\"version\":1,\"num_attrs\":4,\"next_segment_id\":1,\
+             \"wal_gen\":1,\"segments\":[{\"id\":0,\
+             \"file\":\"seg-00000000.bic\",\"base\":0,\"nbits\":64,\
+             \"bytes\":10}]}\n",
+        )
+        .unwrap();
+        let state = load(&RealVfs, &dir).unwrap();
+        assert_eq!(state.segments.len(), 1);
+        assert!(!state.segments[0].quarantined, "absent flag = healthy");
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -204,7 +243,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         for bad in ["", "{}", "{\"version\":9}", "not json"] {
             fs::write(dir.join(MANIFEST), bad).unwrap();
-            assert!(load(&dir).is_err(), "{bad:?}");
+            assert!(load(&RealVfs, &dir).is_err(), "{bad:?}");
         }
         let _ = fs::remove_dir_all(&dir);
     }

@@ -26,21 +26,38 @@
 //! - **Compaction** ([`compaction`]) — a background
 //!   [`Compactor`](compaction::Compactor) merges small segments into
 //!   larger ones, tombstoning superseded files through the manifest.
+//! - **VFS** ([`vfs`]) — every byte of store I/O flows through the
+//!   [`Vfs`] seam: [`RealVfs`] in production,
+//!   [`FaultVfs`](vfs::FaultVfs) injecting seeded crashes / torn writes
+//!   / fsync failures / bit-flips in the chaos tests.
+//! - **Scrubber** ([`scrub`]) — re-verifies segment checksums and zone
+//!   invariants from disk on demand or on a schedule, quarantining
+//!   corrupt files (manifest tombstone + move to `quarantined/`)
+//!   instead of letting them fail queries later.
+//!
+//! A quarantined segment leaves a *hole* in the object space: healthy
+//! chunks keep their bases (the evaluators already tolerate
+//! non-contiguous tilings — missing ranges read as zeros), and
+//! [`DegradedPolicy`] decides whether reads over a holed store fail
+//! closed or serve the healthy subset with the gap surfaced through
+//! counters.
 //!
 //! Crash safety contract (property-tested in `rust/tests/store_props.rs`
-//! against truncation at every byte offset): after [`Store::recover`],
-//! the store is queryable and every row is bit-identical to the
-//! in-memory reference built from the prefix of batches whose
-//! [`Store::append_batch`] durably returned.
+//! against truncation at every byte offset *and* a seeded fault matrix
+//! over every VFS call): after [`Store::recover`], the store is
+//! queryable and every row is bit-identical to the in-memory reference
+//! built from the prefix of batches whose [`Store::append_batch`]
+//! durably returned.
 
 pub mod compaction;
 pub mod manifest;
 pub mod reader;
+pub mod scrub;
 pub mod segment;
+pub mod vfs;
 pub mod wal;
 pub mod zone;
 
-use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
@@ -51,7 +68,9 @@ use self::compaction::CompactionPolicy;
 pub use self::compaction::Compactor;
 use self::manifest::{ManifestState, SegmentEntry};
 pub use self::reader::StoreReader;
+pub use self::scrub::{ScrubReport, Scrubber};
 use self::segment::Segment;
+pub use self::vfs::{RealVfs, Vfs, VfsFile};
 pub use self::wal::AppendTicket;
 use self::wal::Wal;
 pub use self::zone::ZoneMap;
@@ -67,12 +86,35 @@ pub enum StoreError {
     Corrupt { what: &'static str, detail: String },
     #[error("store: {0}")]
     Invalid(String),
+    /// A lock guarding shared store state was poisoned by a panic on
+    /// another thread — the state may be torn, so the operation refuses
+    /// instead of propagating the panic.
+    #[error("poisoned lock: {0}")]
+    Poisoned(&'static str),
 }
 
 pub type Result<T> = std::result::Result<T, StoreError>;
 
+/// What reads do when part of the store is quarantined (corrupt or
+/// missing segments tombstoned by the scrubber or degraded recovery).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DegradedPolicy {
+    /// Refuse: opening a store with a corrupt committed segment errors,
+    /// and queries over a store that degraded while open return a typed
+    /// `Corrupt` naming a quarantined segment. Nothing is served unless
+    /// everything is servable.
+    #[default]
+    FailClosed,
+    /// Serve the healthy subset: corrupt segments quarantine (manifest
+    /// tombstone + `quarantined/` move), their object ranges read as
+    /// all-zero holes, and the gap is surfaced via
+    /// [`Store::degraded_segments`] / [`Store::rows_unavailable`] (and
+    /// the engine's stats counters).
+    ServeHealthy,
+}
+
 /// Tuning knobs for a store instance.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct StoreConfig {
     /// Flush the memtable into a segment once it holds this many
     /// acknowledged batches (0 = manual flushes only).
@@ -87,6 +129,12 @@ pub struct StoreConfig {
     /// the maps is unconditional; this gates only the read side (the
     /// differential off-switch for skip-vs-noskip testing).
     pub zone_pruning: bool,
+    /// Behavior of reads over a partially-quarantined store.
+    pub degraded: DegradedPolicy,
+    /// The I/O layer every store read/write goes through. [`RealVfs`]
+    /// (the default) is the plain filesystem; tests select
+    /// [`vfs::FaultVfs`] to inject seeded faults.
+    pub vfs: Arc<dyn Vfs>,
 }
 
 impl Default for StoreConfig {
@@ -96,6 +144,8 @@ impl Default for StoreConfig {
             compaction: CompactionPolicy::default(),
             group_window: Duration::ZERO,
             zone_pruning: true,
+            degraded: DegradedPolicy::default(),
+            vfs: Arc::new(RealVfs),
         }
     }
 }
@@ -109,6 +159,10 @@ pub struct Store {
     /// an [`crate::engine::Snapshot`] can pin the segment set it was
     /// taken over while flushes/compactions replace the live list.
     pub(crate) segments: Vec<Arc<Segment>>,
+    /// Tombstoned entries: segments found corrupt/missing and moved to
+    /// `quarantined/`. Their object ranges stay reserved (holes in the
+    /// tiling) so healthy bases never shift.
+    pub(crate) quarantined: Vec<SegmentEntry>,
     pub(crate) next_segment_id: u64,
     pub(crate) wal_gen: u64,
     wal: Wal,
@@ -116,6 +170,22 @@ pub struct Store {
     pub(crate) memtable: Vec<Vec<CodecBitmap>>,
     pub(crate) memtable_bits: usize,
     segment_bytes_written: u64,
+}
+
+/// Subdirectory quarantined segment files are moved into (kept, not
+/// deleted — an operator may still salvage rows from them).
+pub(crate) const QUARANTINE_DIR: &str = "quarantined";
+
+/// Move `file` into `dir/quarantined/`, best-effort: the entry is
+/// tombstoned in the manifest regardless, so a failed move only leaves
+/// a dead file behind (swept as an orphan is *not* safe here — the name
+/// is still referenced — so it simply stays until the move succeeds on
+/// a later scrub).
+fn move_to_quarantine(vfs: &dyn Vfs, dir: &Path, file: &str) {
+    let qdir = dir.join(QUARANTINE_DIR);
+    if vfs.create_dir_all(&qdir).is_ok() {
+        let _ = vfs.rename(&dir.join(file), &qdir.join(file));
+    }
 }
 
 impl Store {
@@ -130,7 +200,7 @@ impl Store {
         if num_attrs == 0 {
             return Err(StoreError::Invalid("need at least one attribute".into()));
         }
-        fs::create_dir_all(&dir)?;
+        cfg.vfs.create_dir_all(&dir)?;
         if manifest::exists(&dir) {
             return Err(StoreError::Invalid(format!(
                 "{} already holds a store (use open)",
@@ -143,13 +213,14 @@ impl Store {
             wal_gen: 0,
             segments: Vec::new(),
         };
-        manifest::commit(&dir, &state)?;
-        let wal = Wal::create(&dir, 0, cfg.group_window)?;
+        manifest::commit(cfg.vfs.as_ref(), &dir, &state)?;
+        let wal = Wal::create(cfg.vfs.as_ref(), &dir, 0, cfg.group_window)?;
         Ok(Store {
             dir,
             cfg,
             num_attrs,
             segments: Vec::new(),
+            quarantined: Vec::new(),
             next_segment_id: 0,
             wal_gen: 0,
             wal,
@@ -170,15 +241,106 @@ impl Store {
     /// never reached a manifest commit, stale WAL generations), and
     /// replay the current-generation WAL into the memtable, truncating
     /// it to the last whole, checksum-valid record.
+    ///
+    /// Every damaged-state shape recovery can meet is a *typed*
+    /// outcome, never a panic:
+    ///
+    /// - no manifest → `Invalid` ("no store here");
+    /// - manifest entry whose file is missing or fails its CRC →
+    ///   `Corrupt` naming the path under
+    ///   [`DegradedPolicy::FailClosed`], or a quarantine tombstone
+    ///   (manifest re-committed, file moved to `quarantined/`) under
+    ///   [`DegradedPolicy::ServeHealthy`];
+    /// - duplicate segment ids or non-contiguous bases in the manifest
+    ///   → `Corrupt` naming the manifest;
+    /// - a crash mid-rename (temp files, uncommitted segments, stale
+    ///   WAL generations) → swept as orphans, by construction never
+    ///   referenced by the committed manifest.
     pub fn recover(dir: impl AsRef<Path>, cfg: StoreConfig) -> Result<Store> {
         let dir = dir.as_ref().to_path_buf();
-        let state = manifest::load(&dir)?;
+        let vfs = Arc::clone(&cfg.vfs);
+        if !manifest::exists(&dir) {
+            return Err(StoreError::Invalid(format!(
+                "{} holds no store (no {})",
+                dir.display(),
+                manifest::MANIFEST
+            )));
+        }
+        let state = manifest::load(vfs.as_ref(), &dir)?;
 
-        // Load the committed segment set; bases must tile contiguously.
+        // Manifest-level invariants first: a malformed committed state
+        // is manifest corruption, reported as such before any segment
+        // I/O happens.
+        let mut ids: Vec<u64> = state.segments.iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        if ids.windows(2).any(|w| w[0] == w[1]) {
+            return Err(StoreError::Corrupt {
+                what: "manifest",
+                detail: format!(
+                    "{}: duplicate segment id in committed state",
+                    dir.join(manifest::MANIFEST).display()
+                ),
+            });
+        }
+
+        // Load the committed segment set; bases must tile contiguously
+        // (quarantined tombstones keep their ranges reserved as holes).
         let mut segments = Vec::with_capacity(state.segments.len());
+        let mut quarantined: Vec<SegmentEntry> = Vec::new();
+        let mut newly_quarantined = false;
         let mut expected_base = 0usize;
         for e in &state.segments {
-            let seg = Segment::load(&dir.join(&e.file))?;
+            if e.base != expected_base {
+                return Err(StoreError::Corrupt {
+                    what: "manifest",
+                    detail: format!(
+                        "segment {} at base {} expected {}",
+                        e.id, e.base, expected_base
+                    ),
+                });
+            }
+            expected_base += e.nbits;
+            if e.quarantined {
+                quarantined.push(e.clone());
+                continue;
+            }
+            let path = dir.join(&e.file);
+            let seg = match Segment::load(vfs.as_ref(), &path) {
+                Ok(seg) => seg,
+                Err(err) => {
+                    let err = match err {
+                        StoreError::Io(io)
+                            if io.kind() == std::io::ErrorKind::NotFound =>
+                        {
+                            StoreError::Corrupt {
+                                what: "segment",
+                                detail: format!(
+                                    "{}: missing file referenced by the \
+                                     manifest",
+                                    path.display()
+                                ),
+                            }
+                        }
+                        other => other,
+                    };
+                    match (cfg.degraded, &err) {
+                        // Damage (not e.g. a permission failure) under
+                        // ServeHealthy: tombstone and keep going.
+                        (
+                            DegradedPolicy::ServeHealthy,
+                            StoreError::Corrupt { .. },
+                        ) => {
+                            move_to_quarantine(vfs.as_ref(), &dir, &e.file);
+                            let mut entry = e.clone();
+                            entry.quarantined = true;
+                            quarantined.push(entry);
+                            newly_quarantined = true;
+                            continue;
+                        }
+                        _ => return Err(err),
+                    }
+                }
+            };
             if seg.id != e.id
                 || seg.base != e.base
                 || seg.nbits != e.nbits
@@ -193,17 +355,35 @@ impl Store {
                     ),
                 });
             }
-            if seg.base != expected_base {
-                return Err(StoreError::Corrupt {
-                    what: "manifest",
-                    detail: format!(
-                        "segment {} at base {} expected {}",
-                        e.id, seg.base, expected_base
-                    ),
-                });
-            }
-            expected_base += seg.nbits;
             segments.push(Arc::new(seg));
+        }
+
+        // Anything quarantined during this recovery becomes part of the
+        // committed truth before the store serves a single read.
+        if newly_quarantined {
+            let mut entries: Vec<SegmentEntry> = segments
+                .iter()
+                .map(|s| SegmentEntry {
+                    id: s.id,
+                    file: s.file.clone(),
+                    base: s.base,
+                    nbits: s.nbits,
+                    bytes: s.bytes,
+                    quarantined: false,
+                })
+                .chain(quarantined.iter().cloned())
+                .collect();
+            entries.sort_by_key(|e| e.base);
+            manifest::commit(
+                vfs.as_ref(),
+                &dir,
+                &ManifestState {
+                    num_attrs: state.num_attrs,
+                    next_segment_id: state.next_segment_id,
+                    wal_gen: state.wal_gen,
+                    segments: entries,
+                },
+            )?;
         }
 
         // Tombstone cleanup: anything with a store-owned name that the
@@ -211,11 +391,11 @@ impl Store {
         // flush/compaction — a segment written but never committed, a
         // temp file mid-write, a WAL of a rotated-away generation.
         let live_wal = wal::file_name(state.wal_gen);
-        for entry in fs::read_dir(&dir)? {
-            let entry = entry?;
-            let name = entry.file_name();
-            let Some(name) = name.to_str() else { continue };
-            if name == manifest::MANIFEST || name == live_wal {
+        for name in vfs.list(&dir)? {
+            if name == manifest::MANIFEST
+                || name == live_wal
+                || name == QUARANTINE_DIR
+            {
                 continue;
             }
             let committed = state.segments.iter().any(|e| e.file == name);
@@ -223,15 +403,16 @@ impl Store {
                 || name.starts_with("wal-")
                 || name.ends_with(".tmp");
             if ours && !committed {
-                let _ = fs::remove_file(entry.path());
+                let _ = vfs.remove_file(&dir.join(&name));
             }
         }
 
         // Replay the WAL: the valid prefix is the durably-acknowledged
         // batch set since the last flush.
         let (memtable, valid_len) =
-            wal::replay(&dir, state.wal_gen, state.num_attrs)?;
+            wal::replay(vfs.as_ref(), &dir, state.wal_gen, state.num_attrs)?;
         let wal = Wal::open_truncated(
+            vfs.as_ref(),
             &dir,
             state.wal_gen,
             valid_len,
@@ -247,6 +428,7 @@ impl Store {
             cfg,
             num_attrs: state.num_attrs,
             segments,
+            quarantined,
             next_segment_id: state.next_segment_id,
             wal_gen: state.wal_gen,
             wal,
@@ -266,13 +448,45 @@ impl Store {
         self.segment_bits() + self.memtable_bits
     }
 
-    /// Objects covered by flushed segments.
+    /// Objects covered by flushed segments — including quarantined
+    /// ranges, whose bases stay reserved so the next flush can never
+    /// overlap a hole.
     pub(crate) fn segment_bits(&self) -> usize {
-        self.segments.last().map_or(0, |s| s.base + s.nbits)
+        let healthy = self.segments.last().map_or(0, |s| s.base + s.nbits);
+        let holed = self
+            .quarantined
+            .iter()
+            .map(|e| e.base + e.nbits)
+            .max()
+            .unwrap_or(0);
+        healthy.max(holed)
     }
 
     pub fn num_segments(&self) -> usize {
         self.segments.len()
+    }
+
+    /// Quarantined (tombstoned) segments — the degraded-read gap.
+    pub fn degraded_segments(&self) -> usize {
+        self.quarantined.len()
+    }
+
+    /// Objects inside quarantined ranges: rows a query cannot see.
+    /// Under [`DegradedPolicy::ServeHealthy`] those ranges read as
+    /// zeros; this counter is how callers know results are partial.
+    pub fn rows_unavailable(&self) -> usize {
+        self.quarantined.iter().map(|e| e.nbits).sum()
+    }
+
+    /// The quarantined manifest entries (file names still referenced as
+    /// tombstones; the files themselves live under `quarantined/`).
+    pub fn quarantined_entries(&self) -> &[SegmentEntry] {
+        &self.quarantined
+    }
+
+    /// The reads-over-holes policy this store was opened with.
+    pub fn degraded_policy(&self) -> DegradedPolicy {
+        self.cfg.degraded
     }
 
     /// Acknowledged batches still in the memtable (WAL-covered).
@@ -389,7 +603,8 @@ impl Store {
             .collect();
 
         let id = self.next_segment_id;
-        let (file, bytes, zone) = segment::write(&self.dir, id, base, &rows)?;
+        let (file, bytes, zone) =
+            segment::write(self.vfs(), &self.dir, id, base, &rows)?;
         let new_gen = self.wal_gen + 1;
         // Open the next WAL generation *before* the commit: every
         // fallible step happens while the old state is still the
@@ -398,7 +613,8 @@ impl Store {
         // next recovery sweeps). After the commit the swap below is
         // infallible, so the handle can never keep acknowledging
         // appends into a generation the manifest has rotated away.
-        let new_wal = Wal::create(&self.dir, new_gen, self.cfg.group_window)?;
+        let new_wal =
+            Wal::create(self.vfs(), &self.dir, new_gen, self.cfg.group_window)?;
         let mut entries = self.manifest_entries();
         entries.push(SegmentEntry {
             id,
@@ -406,8 +622,10 @@ impl Store {
             base,
             nbits,
             bytes,
+            quarantined: false,
         });
         manifest::commit(
+            self.vfs(),
             &self.dir,
             &ManifestState {
                 num_attrs: self.num_attrs,
@@ -420,7 +638,7 @@ impl Store {
         // dead (recovery ignores it even if the unlink below never runs).
         let old_wal = wal::path(&self.dir, self.wal_gen);
         self.wal = new_wal;
-        let _ = fs::remove_file(old_wal);
+        let _ = self.cfg.vfs.remove_file(&old_wal);
         self.wal_gen = new_gen;
         self.next_segment_id = id + 1;
         self.segments.push(Arc::new(Segment {
@@ -450,6 +668,10 @@ impl Store {
     /// engine query tier consume it, and `Engine::snapshot` pins the
     /// same layout with `Arc` clones. Change the rule here and every
     /// consumer follows.
+    ///
+    /// Quarantined ranges are simply absent: the evaluators OR/fold
+    /// each chunk at its own base into a zeroed accumulator, so a hole
+    /// reads as all-zero rows — the ServeHealthy degraded semantics.
     pub(crate) fn chunks(&self) -> Vec<crate::engine::exec::RowChunk<'_>> {
         use crate::engine::exec::RowChunk;
         let prune = self.cfg.zone_pruning;
@@ -470,9 +692,11 @@ impl Store {
         out
     }
 
-    /// The manifest entries for the current live segment set.
+    /// The manifest entries for the current committed set: live
+    /// segments plus quarantine tombstones, ordered by base.
     pub(crate) fn manifest_entries(&self) -> Vec<SegmentEntry> {
-        self.segments
+        let mut entries: Vec<SegmentEntry> = self
+            .segments
             .iter()
             .map(|s| SegmentEntry {
                 id: s.id,
@@ -480,8 +704,17 @@ impl Store {
                 base: s.base,
                 nbits: s.nbits,
                 bytes: s.bytes,
+                quarantined: false,
             })
-            .collect()
+            .chain(self.quarantined.iter().cloned())
+            .collect();
+        entries.sort_by_key(|e| e.base);
+        entries
+    }
+
+    /// The store's I/O layer.
+    pub(crate) fn vfs(&self) -> &dyn Vfs {
+        self.cfg.vfs.as_ref()
     }
 
     pub(crate) fn note_segment_bytes(&mut self, bytes: u64) {

@@ -88,7 +88,7 @@ impl<'a> StoreReader<'a> {
             // count (And([]) = all, Or([]) = none, and compositions).
             let bi =
                 BitmapIndex::from_rows(vec![Bitmap::zeros(self.num_objects())]);
-            return Ok(q.eval(&bi).expect("no attrs referenced"));
+            return q.eval(&bi);
         }
         let map: HashMap<usize, usize> =
             attrs.iter().enumerate().map(|(dense, &a)| (a, dense)).collect();
@@ -99,7 +99,7 @@ impl<'a> StoreReader<'a> {
             .collect();
         let bi = BitmapIndex::from_rows(rows);
         let dense_q = q.remap(&map);
-        Ok(dense_q.eval(&bi).expect("remapped attrs are dense and in range"))
+        dense_q.eval(&bi)
     }
 
     /// Materialize the whole index (every attribute assembled) — the

@@ -1,0 +1,178 @@
+//! The scrubber: proactive re-verification of segments *from disk*.
+//!
+//! Loading a segment runs the full validation stack (magic, whole-file
+//! CRC, directory consistency, codec structural invariants, zone-map
+//! cardinality cross-checks) — but only at open time. A store that runs
+//! for weeks serves queries from memory while the files underneath rot
+//! silently. [`Store::scrub`] re-reads every live segment through the
+//! store's [`Vfs`](super::Vfs), re-runs that whole stack, and
+//! **quarantines** what fails (manifest tombstone + move to
+//! `quarantined/`) instead of leaving the damage to ambush the next
+//! recovery. [`Scrubber`] runs the same pass on a schedule, mirroring
+//! the background [`Compactor`](super::Compactor).
+//!
+//! Quarantining is the *detection* half of degraded operation; what
+//! reads do about it is the [`DegradedPolicy`](super::DegradedPolicy)
+//! knob — the scrubber itself always prefers tombstoning to panicking,
+//! under either policy. Real I/O failures that are not damage verdicts
+//! (e.g. permissions) abort the pass with a typed error instead of
+//! quarantining good data.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::manifest::{self, ManifestState, SegmentEntry};
+use super::segment::Segment;
+use super::{move_to_quarantine, Result, Store, StoreError};
+
+/// What one scrub pass found and did.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Live segments re-verified from disk this pass.
+    pub segments_checked: usize,
+    /// Bytes read and checksum-verified.
+    pub bytes_verified: u64,
+    /// Files quarantined *by this pass* (manifest tombstoned + moved).
+    pub quarantined: Vec<String>,
+    /// Total quarantined segments after the pass (incl. prior passes).
+    pub degraded_segments: usize,
+    /// Total objects inside quarantined ranges after the pass.
+    pub rows_unavailable: usize,
+}
+
+impl Store {
+    /// One scrub pass: re-load every live segment from disk, verify it
+    /// end to end, and quarantine the ones that fail (or vanished).
+    /// Returns what was checked and what was tombstoned; the store
+    /// keeps serving throughout — a quarantined segment's range simply
+    /// becomes a hole under [`super::DegradedPolicy::ServeHealthy`],
+    /// or a typed refusal under
+    /// [`super::DegradedPolicy::FailClosed`].
+    pub fn scrub(&mut self) -> Result<ScrubReport> {
+        let mut report = ScrubReport::default();
+        let mut bad: Vec<usize> = Vec::new();
+        for (i, seg) in self.segments.iter().enumerate() {
+            let path = self.dir.join(&seg.file);
+            match Segment::load(self.vfs(), &path) {
+                Ok(on_disk) => {
+                    // The disk copy must be the segment the manifest
+                    // committed — same identity *and* same bits.
+                    if on_disk.id == seg.id
+                        && on_disk.base == seg.base
+                        && on_disk.nbits == seg.nbits
+                        && on_disk.rows == seg.rows
+                    {
+                        report.segments_checked += 1;
+                        report.bytes_verified += on_disk.bytes;
+                    } else {
+                        bad.push(i);
+                    }
+                }
+                // Damage verdicts quarantine; real I/O trouble aborts.
+                Err(StoreError::Corrupt { .. }) => bad.push(i),
+                Err(StoreError::Io(e))
+                    if e.kind() == std::io::ErrorKind::NotFound =>
+                {
+                    bad.push(i)
+                }
+                Err(other) => return Err(other),
+            }
+        }
+        if bad.is_empty() {
+            report.degraded_segments = self.degraded_segments();
+            report.rows_unavailable = self.rows_unavailable();
+            return Ok(report);
+        }
+
+        // Tombstone the failures: move files aside, flip the entries,
+        // and commit the new truth in one manifest replace. The live
+        // list shrinks only after the commit succeeds, so an error
+        // leaves the in-memory store agreeing with the old manifest.
+        let mut entries = self.manifest_entries();
+        for &i in &bad {
+            let seg = &self.segments[i];
+            move_to_quarantine(self.vfs(), &self.dir, &seg.file);
+            if let Some(e) = entries.iter_mut().find(|e| e.id == seg.id) {
+                e.quarantined = true;
+            }
+            report.quarantined.push(seg.file.clone());
+        }
+        manifest::commit(
+            self.vfs(),
+            &self.dir,
+            &ManifestState {
+                num_attrs: self.num_attrs,
+                next_segment_id: self.next_segment_id,
+                wal_gen: self.wal_gen,
+                segments: entries,
+            },
+        )?;
+        for &i in bad.iter().rev() {
+            let seg = self.segments.remove(i);
+            self.quarantined.push(SegmentEntry {
+                id: seg.id,
+                file: seg.file.clone(),
+                base: seg.base,
+                nbits: seg.nbits,
+                bytes: seg.bytes,
+                quarantined: true,
+            });
+        }
+        self.quarantined.sort_by_key(|e| e.base);
+        report.degraded_segments = self.degraded_segments();
+        report.rows_unavailable = self.rows_unavailable();
+        Ok(report)
+    }
+}
+
+/// A background scrubbing thread over a shared store handle — one
+/// [`Store::scrub`] pass per tick; stops on [`Scrubber::stop`] or drop.
+pub struct Scrubber {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Scrubber {
+    /// Spawn the scrubber, running a pass every `interval`.
+    pub fn spawn(store: Arc<Mutex<Store>>, interval: Duration) -> Scrubber {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                // A poisoned store lock means a writer panicked
+                // mid-mutation: stop scrubbing rather than judge
+                // possibly-torn state.
+                let Ok(mut guard) = store.lock() else { break };
+                // Damage found is handled (quarantined) inside scrub;
+                // an abort (real I/O failure) retries next tick — the
+                // foreground surfaces such errors on its own calls.
+                let _ = guard.scrub();
+            }
+        });
+        Scrubber { stop, handle: Some(handle) }
+    }
+
+    /// Stop and join the background thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scrubber {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

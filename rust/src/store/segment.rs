@@ -30,10 +30,9 @@
 //! the WAL still covers its batches. The trailing CRC additionally
 //! catches in-place corruption of committed files at load time.
 
-use std::fs;
-use std::io::Write as _;
 use std::path::Path;
 
+use super::vfs::Vfs;
 use super::zone::ZoneMap;
 use super::{Result, StoreError};
 use crate::bic::codec::{read_u32, read_u64, CodecBitmap};
@@ -122,6 +121,7 @@ pub(crate) fn encode(
 /// `(file_name, bytes, zone_map)` — the zone map is measured here so
 /// the in-memory [`Segment`] and the on-disk directory always agree.
 pub(crate) fn write(
+    vfs: &dyn Vfs,
     dir: &Path,
     id: u64,
     base: usize,
@@ -133,21 +133,19 @@ pub(crate) fn write(
     let tmp = dir.join(format!("{name}.tmp"));
     let final_path = dir.join(&name);
     {
-        let mut f = fs::File::create(&tmp)?;
+        let mut f = vfs.create(&tmp)?;
         f.write_all(&bytes)?;
-        f.sync_all()?;
+        f.sync()?;
     }
-    fs::rename(&tmp, &final_path)?;
-    sync_dir(dir);
+    vfs.rename(&tmp, &final_path)?;
+    sync_dir(vfs, dir);
     Ok((name, bytes.len() as u64, zone))
 }
 
 /// Best-effort directory fsync (makes the rename itself durable; not
 /// supported on every platform, and recovery tolerates its absence).
-pub(crate) fn sync_dir(dir: &Path) {
-    if let Ok(f) = fs::File::open(dir) {
-        let _ = f.sync_all();
-    }
+pub(crate) fn sync_dir(vfs: &dyn Vfs, dir: &Path) {
+    let _ = vfs.sync_dir(dir);
 }
 
 /// A segment-corruption error naming the offending file.
@@ -164,8 +162,8 @@ impl Segment {
     /// (which re-checks the codec-level structural invariants). For v2
     /// files the stored cardinalities are re-verified against the
     /// decoded rows, so a loaded zone map is always exact.
-    pub(crate) fn load(path: &Path) -> Result<Segment> {
-        let buf = fs::read(path)?;
+    pub(crate) fn load(vfs: &dyn Vfs, path: &Path) -> Result<Segment> {
+        let buf = vfs.read(path)?;
         if buf.len() < HEADER_LEN + 4 {
             return Err(corrupt(
                 path,
@@ -275,9 +273,11 @@ impl Segment {
 
 #[cfg(test)]
 mod tests {
+    use super::super::vfs::RealVfs;
     use super::*;
     use crate::bic::bitmap::Bitmap;
     use crate::substrate::rng::Xoshiro256;
+    use std::fs;
 
     fn rows_for(n: usize, seed: u64) -> Vec<CodecBitmap> {
         let mut rng = Xoshiro256::seeded(seed);
@@ -335,9 +335,10 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         for n in [0usize, 65, 10_007, 70_000] {
             let rows = rows_for(n, n as u64 + 1);
-            let (name, bytes, zone) = write(&dir, 7, 1234, &rows).unwrap();
+            let (name, bytes, zone) =
+                write(&RealVfs, &dir, 7, 1234, &rows).unwrap();
             assert_eq!(bytes as usize, encoded_len(&rows), "n={n}");
-            let seg = Segment::load(&dir.join(&name)).unwrap();
+            let seg = Segment::load(&RealVfs, &dir.join(&name)).unwrap();
             assert_eq!(seg.id, 7);
             assert_eq!(seg.base, 1234);
             assert_eq!(seg.nbits, n);
@@ -363,7 +364,7 @@ mod tests {
         let image = encode_v1(9, 512, &rows);
         let path = dir.join("seg-v1.bic");
         fs::write(&path, &image).unwrap();
-        let seg = Segment::load(&path).unwrap();
+        let seg = Segment::load(&RealVfs, &path).unwrap();
         assert_eq!(seg.id, 9);
         assert_eq!(seg.base, 512);
         assert_eq!(seg.nbits, 3_000);
@@ -384,19 +385,19 @@ mod tests {
         // Truncations: every proper prefix must fail cleanly.
         for cut in (0..image.len()).step_by(7).chain([image.len() - 1]) {
             fs::write(&path, &image[..cut]).unwrap();
-            assert!(Segment::load(&path).is_err(), "cut at {cut}");
+            assert!(Segment::load(&RealVfs, &path).is_err(), "cut at {cut}");
         }
         // Bit flips: every byte is covered by the CRC.
         let mut copy = image.clone();
         for i in (0..copy.len()).step_by(11) {
             copy[i] ^= 0x40;
             fs::write(&path, &copy).unwrap();
-            assert!(Segment::load(&path).is_err(), "flip at {i}");
+            assert!(Segment::load(&RealVfs, &path).is_err(), "flip at {i}");
             copy[i] ^= 0x40;
         }
         // The pristine image still loads.
         fs::write(&path, &image).unwrap();
-        assert!(Segment::load(&path).is_ok());
+        assert!(Segment::load(&RealVfs, &path).is_ok());
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -419,7 +420,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let path = dir.join("seg-lie.bic");
         fs::write(&path, &image).unwrap();
-        let err = Segment::load(&path).expect_err("lying zone map");
+        let err = Segment::load(&RealVfs, &path).expect_err("lying zone map");
         assert!(err.to_string().contains("zone"), "{err}");
         let _ = fs::remove_dir_all(&dir);
     }

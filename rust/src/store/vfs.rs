@@ -1,0 +1,594 @@
+//! The store's virtual filesystem seam — every byte the durable store
+//! reads or writes goes through a [`Vfs`], so the full failure taxonomy
+//! (torn writes, fsync failures, rename failures, ENOSPC, read
+//! bit-flips, crash points) can be injected **deterministically** in
+//! tests instead of hoping the three scenarios we thought of are the
+//! three that matter.
+//!
+//! - [`RealVfs`] is the zero-cost default: thin forwarding onto
+//!   `std::fs`, the exact calls the store made before the seam existed.
+//! - [`FaultVfs`] wraps the real filesystem and injects **seeded,
+//!   reproducible** faults: every VFS call ticks a global operation
+//!   counter, and a [`FaultSpec`] plan says what breaks at which op.
+//!   Re-running with the same seed and plan replays the identical
+//!   failure — which is what turns "a chaos test failed" into "a
+//!   regression test exists".
+//!
+//! ## Fault classes ([`FaultKind`])
+//!
+//! | kind                    | applies to      | effect                                  |
+//! |-------------------------|-----------------|-----------------------------------------|
+//! | `Crash`                 | every op        | torn (seeded-prefix) write, then every later op fails — process death |
+//! | `SyncFail{transient}`   | `sync`          | one fsync fails (`Interrupted` when transient, `Other` when hard) |
+//! | `WriteNoSpace`          | `write_all`     | ENOSPC-style failure, nothing written    |
+//! | `RenameFail`            | `rename`        | the rename never happens                 |
+//! | `ReadFlip`              | `read`          | one seeded bit of the returned buffer flips (silent media corruption) |
+//!
+//! A kind that fires at an op it does not apply to is recorded in the
+//! injection log and skipped — the op counter keeps ticking, so a crash
+//! sweep over `0..ops` still visits every site.
+//!
+//! The typical crash-matrix workflow (see `rust/tests/store_props.rs`
+//! and `store_smoke` phase 3): run the workload once over a
+//! fault-free `FaultVfs` to *measure* its op count, then re-run it once
+//! per crash point, recovering with [`RealVfs`] each time and asserting
+//! acked-prefix durability.
+
+use std::fmt;
+use std::fs;
+use std::io::{self, Seek, SeekFrom, Write as _};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::substrate::rng::Xoshiro256;
+
+/// An open file handle behind the VFS seam. The store only ever appends
+/// and syncs through a handle; reads go through [`Vfs::read`] (whole
+/// files — segments and WAL replay both validate full images).
+pub trait VfsFile: Send {
+    /// Append `buf` at the current position (end of file for the
+    /// store's append-only handles).
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()>;
+    /// Durably sync file data to the medium (fsync).
+    fn sync(&mut self) -> io::Result<()>;
+}
+
+/// The filesystem operations the durable store performs, as one
+/// injectable seam. `Send + Sync` so one instance serves the store, the
+/// background compactor, and the scrubber concurrently.
+pub trait Vfs: Send + Sync + fmt::Debug {
+    /// Create `dir` and any missing parents.
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()>;
+    /// Create (or truncate) a file for writing — the temp-file side of
+    /// the write-fsync-rename protocol.
+    fn create(&self, path: &Path) -> io::Result<Box<dyn VfsFile>>;
+    /// Open a file for appending, creating it if missing (WAL handles).
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn VfsFile>>;
+    /// Open a file truncated to `len` bytes and positioned at its end —
+    /// recovery resuming a WAL at its valid prefix.
+    fn open_truncated(&self, path: &Path, len: u64)
+        -> io::Result<Box<dyn VfsFile>>;
+    /// Read a whole file.
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Atomically rename `from` onto `to` (commit point of segment and
+    /// manifest writes).
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// Unlink a file.
+    fn remove_file(&self, path: &Path) -> io::Result<()>;
+    /// File names (not paths) directly inside `dir`.
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>>;
+    /// Fsync the directory itself (makes renames durable). Callers
+    /// treat failure as best-effort, matching platform support.
+    fn sync_dir(&self, dir: &Path) -> io::Result<()>;
+}
+
+/// The production VFS: direct `std::fs` calls, no indirection cost
+/// beyond one vtable hop per (already syscall-priced) operation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealVfs;
+
+struct RealFile(fs::File);
+
+impl VfsFile for RealFile {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.0.write_all(buf)
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.0.sync_data()
+    }
+}
+
+impl Vfs for RealVfs {
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        fs::create_dir_all(dir)
+    }
+
+    fn create(&self, path: &Path) -> io::Result<Box<dyn VfsFile>> {
+        Ok(Box::new(RealFile(fs::File::create(path)?)))
+    }
+
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn VfsFile>> {
+        let f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Box::new(RealFile(f)))
+    }
+
+    fn open_truncated(
+        &self,
+        path: &Path,
+        len: u64,
+    ) -> io::Result<Box<dyn VfsFile>> {
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(path)?;
+        f.set_len(len)?;
+        f.seek(SeekFrom::End(0))?;
+        f.sync_all()?;
+        Ok(Box::new(RealFile(f)))
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        fs::read(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        fs::remove_file(path)
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(dir)? {
+            if let Some(name) = entry?.file_name().to_str() {
+                out.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> io::Result<()> {
+        fs::File::open(dir)?.sync_all()
+    }
+}
+
+/// One injectable fault class. See the module table for which
+/// operations each applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Process death at this op: a write lands as a seeded torn prefix,
+    /// any other op never happens, and every subsequent VFS call fails.
+    Crash,
+    /// The fsync at this op fails. `transient: true` reports
+    /// [`io::ErrorKind::Interrupted`] (the WAL retries those with
+    /// backoff); `false` reports a hard error (poisons the generation).
+    SyncFail {
+        /// Whether the failure is of a retryable class.
+        transient: bool,
+    },
+    /// The write at this op fails with [`io::ErrorKind::StorageFull`]
+    /// and writes nothing (disk-full).
+    WriteNoSpace,
+    /// The rename at this op fails and does not happen.
+    RenameFail,
+    /// The read at this op returns its bytes with one seeded bit
+    /// flipped — silent media corruption for the CRCs to catch.
+    ReadFlip,
+}
+
+/// A planned fault: `kind` fires when the global op counter reaches
+/// `at_op` (ops are numbered from 0 in call order).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// The operation index the fault fires at.
+    pub at_op: u64,
+    /// What breaks there.
+    pub kind: FaultKind,
+}
+
+struct FaultState {
+    rng: Xoshiro256,
+    next_op: u64,
+    plan: Vec<FaultSpec>,
+    crashed: bool,
+    injected: Vec<String>,
+}
+
+/// A deterministic fault-injecting VFS over the real filesystem.
+/// Construction fixes a seed and a fault plan; identical (seed, plan,
+/// workload) triples replay identical failures. Also usable with an
+/// empty plan purely to *count* the operations a workload performs —
+/// the measurement half of a crash-point sweep.
+pub struct FaultVfs {
+    inner: RealVfs,
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl fmt::Debug for FaultVfs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        f.debug_struct("FaultVfs")
+            .field("ops", &st.next_op)
+            .field("plan", &st.plan)
+            .field("crashed", &st.crashed)
+            .finish()
+    }
+}
+
+impl FaultVfs {
+    /// A fault-free instance that only counts operations — run the
+    /// workload over it once to learn how many injection points exist.
+    pub fn counting(seed: u64) -> Arc<FaultVfs> {
+        Self::with_plan(seed, Vec::new())
+    }
+
+    /// Crash (torn write + total failure afterwards) at operation `op`.
+    pub fn crash_at(seed: u64, op: u64) -> Arc<FaultVfs> {
+        Self::with_plan(seed, vec![FaultSpec { at_op: op, kind: FaultKind::Crash }])
+    }
+
+    /// An instance executing an explicit fault plan.
+    pub fn with_plan(seed: u64, plan: Vec<FaultSpec>) -> Arc<FaultVfs> {
+        Arc::new(FaultVfs {
+            inner: RealVfs,
+            state: Arc::new(Mutex::new(FaultState {
+                rng: Xoshiro256::seeded(seed),
+                next_op: 0,
+                plan,
+                crashed: false,
+                injected: Vec::new(),
+            })),
+        })
+    }
+
+    /// Operations performed so far (the next op index).
+    pub fn ops(&self) -> u64 {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).next_op
+    }
+
+    /// Human-readable log of every fault actually injected (and every
+    /// planned fault skipped for applying to an incompatible op).
+    pub fn injected(&self) -> Vec<String> {
+        self.state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .injected
+            .clone()
+    }
+}
+
+fn crashed_err() -> io::Error {
+    io::Error::other("injected crash: vfs is dead until recovery")
+}
+
+impl FaultState {
+    /// Advance the op counter and return the fault (if any) firing at
+    /// this op. `None` after a crash means "already dead" is handled by
+    /// the caller via `crashed`.
+    fn tick(&mut self, what: &str, path: &Path) -> Option<FaultKind> {
+        let op = self.next_op;
+        self.next_op += 1;
+        let kind = self
+            .plan
+            .iter()
+            .find(|s| s.at_op == op)
+            .map(|s| s.kind)?;
+        self.injected
+            .push(format!("op {op}: {kind:?} at {what} {}", path.display()));
+        Some(kind)
+    }
+}
+
+/// Applies `kind` when it matches the op class; returns the error to
+/// inject, `None` to proceed normally (mismatched kind, logged already).
+macro_rules! fault_gate {
+    ($state:expr, $what:expr, $path:expr, { $($kind:pat => $effect:expr),+ $(,)? }) => {{
+        let mut st = $state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.crashed {
+            return Err(crashed_err());
+        }
+        match st.tick($what, $path) {
+            None => None,
+            $(Some($kind) => $effect(&mut st),)+
+            Some(_) => None, // kind does not apply to this op class
+        }
+    }};
+}
+
+fn crash(st: &mut FaultState) -> Option<io::Error> {
+    st.crashed = true;
+    Some(crashed_err())
+}
+
+struct FaultFile {
+    inner: Box<dyn VfsFile>,
+    path: std::path::PathBuf,
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl VfsFile for FaultFile {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        let torn: Option<usize> = {
+            let fault = fault_gate!(self.state, "write", &self.path, {
+                FaultKind::Crash => |st: &mut FaultState| {
+                    // Torn write: a seeded prefix reaches the file, the
+                    // rest (and the ack) never does.
+                    let cut = st.rng.next_below(buf.len() as u64 + 1) as usize;
+                    st.crashed = true;
+                    Some(cut)
+                },
+                FaultKind::WriteNoSpace => |_: &mut FaultState| {
+                    Some(usize::MAX) // marker: fail without writing
+                },
+            });
+            match fault {
+                None => None,
+                Some(cut) => Some(cut),
+            }
+        };
+        match torn {
+            None => self.inner.write_all(buf),
+            Some(usize::MAX) => Err(io::Error::new(
+                io::ErrorKind::StorageFull,
+                "injected ENOSPC",
+            )),
+            Some(cut) => {
+                let _ = self.inner.write_all(&buf[..cut]);
+                let _ = self.inner.sync();
+                Err(crashed_err())
+            }
+        }
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        let fault = fault_gate!(self.state, "sync", &self.path, {
+            FaultKind::Crash => crash,
+            FaultKind::SyncFail { transient } => move |_: &mut FaultState| {
+                Some(if transient {
+                    io::Error::new(
+                        io::ErrorKind::Interrupted,
+                        "injected transient fsync failure",
+                    )
+                } else {
+                    io::Error::other("injected hard fsync failure")
+                })
+            },
+        });
+        match fault {
+            Some(e) => Err(e),
+            None => self.inner.sync(),
+        }
+    }
+}
+
+impl FaultVfs {
+    fn wrap(
+        &self,
+        path: &Path,
+        inner: Box<dyn VfsFile>,
+    ) -> Box<dyn VfsFile> {
+        Box::new(FaultFile {
+            inner,
+            path: path.to_path_buf(),
+            state: Arc::clone(&self.state),
+        })
+    }
+
+    /// Trait-object-friendly gate for whole-VFS ops (open/rename/...).
+    fn gate(&self, what: &str, path: &Path) -> io::Result<()> {
+        let fault = fault_gate!(self.state, what, path, {
+            FaultKind::Crash => crash,
+            FaultKind::RenameFail => |_: &mut FaultState| {
+                (what == "rename")
+                    .then(|| io::Error::other("injected rename failure"))
+            },
+        });
+        match fault {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Vfs for FaultVfs {
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        self.gate("create_dir_all", dir)?;
+        self.inner.create_dir_all(dir)
+    }
+
+    fn create(&self, path: &Path) -> io::Result<Box<dyn VfsFile>> {
+        self.gate("create", path)?;
+        Ok(self.wrap(path, self.inner.create(path)?))
+    }
+
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn VfsFile>> {
+        self.gate("open_append", path)?;
+        Ok(self.wrap(path, self.inner.open_append(path)?))
+    }
+
+    fn open_truncated(
+        &self,
+        path: &Path,
+        len: u64,
+    ) -> io::Result<Box<dyn VfsFile>> {
+        self.gate("open_truncated", path)?;
+        Ok(self.wrap(path, self.inner.open_truncated(path, len)?))
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        let flip: Option<io::Error> = {
+            let fault = fault_gate!(self.state, "read", path, {
+                FaultKind::Crash => crash,
+                FaultKind::ReadFlip => |_: &mut FaultState| None,
+            });
+            fault
+        };
+        if let Some(e) = flip {
+            return Err(e);
+        }
+        let mut buf = self.inner.read(path)?;
+        // A ReadFlip planned for the op we just ticked: find it in the
+        // log (last entry names this op) and apply the seeded bit flip.
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let flipped = st
+            .injected
+            .last()
+            .is_some_and(|l| l.contains("ReadFlip") && l.contains("read"));
+        if flipped && !buf.is_empty() {
+            let bit = st.rng.next_below(buf.len() as u64 * 8);
+            buf[(bit / 8) as usize] ^= 1 << (bit % 8);
+        }
+        Ok(buf)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.gate("rename", from)?;
+        self.inner.rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        self.gate("remove_file", path)?;
+        self.inner.remove_file(path)
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>> {
+        self.gate("list", dir)?;
+        self.inner.list(dir)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> io::Result<()> {
+        self.gate("sync_dir", dir)?;
+        self.inner.sync_dir(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("bic-vfs-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn real_vfs_roundtrips_files() {
+        let d = tmp("real");
+        let vfs = RealVfs;
+        let p = d.join("a.tmp");
+        {
+            let mut f = vfs.create(&p).unwrap();
+            f.write_all(b"hello ").unwrap();
+            f.write_all(b"world").unwrap();
+            f.sync().unwrap();
+        }
+        vfs.rename(&p, &d.join("a")).unwrap();
+        assert_eq!(vfs.read(&d.join("a")).unwrap(), b"hello world");
+        let names = vfs.list(&d).unwrap();
+        assert_eq!(names, vec!["a".to_string()]);
+        vfs.remove_file(&d.join("a")).unwrap();
+        assert!(vfs.read(&d.join("a")).is_err());
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn crash_tears_the_write_and_kills_every_later_op() {
+        let d = tmp("crash");
+        // op 0 = create, op 1 = the write (crash here), later ops dead.
+        let vfs = FaultVfs::with_plan(
+            7,
+            vec![FaultSpec { at_op: 1, kind: FaultKind::Crash }],
+        );
+        let p = d.join("x.tmp");
+        let mut f = vfs.create(&p).unwrap();
+        let err = f.write_all(&[0xAA; 64]).unwrap_err();
+        assert!(err.to_string().contains("injected crash"), "{err}");
+        // The torn prefix is on disk and strictly shorter than the buf.
+        let on_disk = fs::read(&p).unwrap();
+        assert!(on_disk.len() <= 64, "torn prefix, got {}", on_disk.len());
+        // Everything after the crash fails, files and vfs ops alike.
+        assert!(f.sync().is_err());
+        assert!(vfs.read(&p).is_err());
+        assert!(vfs.rename(&p, &d.join("y")).is_err());
+        assert!(vfs.injected().iter().any(|l| l.contains("Crash")));
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn crash_sweep_is_deterministic_per_seed() {
+        // The same (seed, op) pair must tear the same number of bytes.
+        let lens: Vec<usize> = (0..2)
+            .map(|_| {
+                let d = tmp("det");
+                let vfs = FaultVfs::crash_at(42, 1);
+                let mut f = vfs.create(&d.join("x")).unwrap();
+                let _ = f.write_all(&[1u8; 256]);
+                let n = fs::read(d.join("x")).unwrap().len();
+                let _ = fs::remove_dir_all(&d);
+                n
+            })
+            .collect();
+        assert_eq!(lens[0], lens[1], "same seed, same torn length");
+    }
+
+    #[test]
+    fn sync_and_rename_and_enospc_faults_fire_once() {
+        let d = tmp("faults");
+        let vfs = FaultVfs::with_plan(
+            3,
+            vec![
+                FaultSpec {
+                    at_op: 2,
+                    kind: FaultKind::SyncFail { transient: true },
+                },
+                FaultSpec { at_op: 4, kind: FaultKind::WriteNoSpace },
+                FaultSpec { at_op: 6, kind: FaultKind::RenameFail },
+            ],
+        );
+        let p = d.join("f.tmp");
+        let mut f = vfs.create(&p).unwrap(); // op 0
+        f.write_all(b"abc").unwrap(); // op 1
+        let e = f.sync().unwrap_err(); // op 2: transient
+        assert_eq!(e.kind(), io::ErrorKind::Interrupted);
+        f.sync().unwrap(); // op 3: retry succeeds
+        let e = f.write_all(b"def").unwrap_err(); // op 4: ENOSPC
+        assert_eq!(e.kind(), io::ErrorKind::StorageFull);
+        f.write_all(b"def").unwrap(); // op 5
+        let e = vfs.rename(&p, &d.join("f")).unwrap_err(); // op 6
+        assert!(e.to_string().contains("rename"), "{e}");
+        vfs.rename(&p, &d.join("f")).unwrap(); // op 7
+        assert_eq!(fs::read(d.join("f")).unwrap(), b"abcdef");
+        assert_eq!(vfs.ops(), 8);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn read_flip_corrupts_exactly_one_bit() {
+        let d = tmp("flip");
+        let vfs = FaultVfs::with_plan(
+            11,
+            vec![FaultSpec { at_op: 3, kind: FaultKind::ReadFlip }],
+        );
+        let p = d.join("blob");
+        let payload = vec![0u8; 128];
+        let mut f = vfs.create(&p).unwrap(); // op 0
+        f.write_all(&payload).unwrap(); // op 1
+        assert_eq!(vfs.read(&p).unwrap(), payload); // op 2: clean
+        let flipped = vfs.read(&p).unwrap(); // op 3: one bit flips
+        let diff: u32 = flipped
+            .iter()
+            .zip(&payload)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(diff, 1, "exactly one flipped bit");
+        assert_eq!(vfs.read(&p).unwrap(), payload); // op 4: clean again
+        let _ = fs::remove_dir_all(&d);
+    }
+}

@@ -33,11 +33,22 @@
 //! position in the pending buffer, **ack order always matches WAL
 //! record order** (property-tested in `rust/tests/store_props.rs`).
 //!
-//! A failed group write poisons the handle: the file may now hold a
-//! torn record mid-stream, and appending behind it would silently lose
-//! acknowledged data at replay (replay stops at the first bad record).
-//! Every subsequent submit/wait errors until the store is reopened
-//! (recovery truncates the torn tail).
+//! ## Failure semantics
+//!
+//! A failed group **write** poisons the handle immediately: an unknown
+//! prefix of the batch may be in the file, the tail is untrustworthy,
+//! and re-writing would duplicate records — every subsequent
+//! submit/wait errors until the store is reopened (recovery truncates
+//! the torn tail). A failed **fsync** is retried while the failure
+//! class is transient ([`io::ErrorKind::Interrupted`] / `WouldBlock` /
+//! `TimedOut`), with bounded doubling backoff — the batch bytes are
+//! already staged in order, only the durability barrier failed, so a
+//! retry cannot reorder or duplicate anything. Retries exhausted (or a
+//! hard failure class) poisons the generation like a failed write.
+//!
+//! All file I/O goes through the store's [`Vfs`] seam, so every one of
+//! these failure paths is exercised deterministically by `FaultVfs`
+//! plans (see `store::vfs`).
 //!
 //! Replay walks records until the first short, checksum-invalid, or
 //! structurally invalid record and returns the prefix — exactly the set
@@ -45,15 +56,34 @@
 //! therefore recover to a prefix-consistent memtable (property-tested in
 //! `rust/tests/store_props.rs`).
 
-use std::fs;
-use std::io::{Seek, SeekFrom, Write as _};
+use std::io;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
+use super::vfs::{Vfs, VfsFile};
 use super::{Result, StoreError};
 use crate::bic::codec::{read_u32, CodecBitmap};
 use crate::substrate::crc::crc32;
+
+/// How many times a transiently-failing group fsync is retried before
+/// the generation is poisoned.
+const SYNC_RETRIES: u32 = 3;
+
+/// First retry backoff (doubles per attempt).
+const SYNC_BACKOFF: Duration = Duration::from_millis(1);
+
+/// Fsync failure classes worth retrying: the call may simply be
+/// re-issued. Anything else (I/O error, ENOSPC, injected hard failure)
+/// is treated as media/filesystem trouble and poisons the generation.
+fn transient(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::Interrupted
+            | io::ErrorKind::WouldBlock
+            | io::ErrorKind::TimedOut
+    )
+}
 
 /// File name of WAL generation `gen`.
 pub(crate) fn file_name(gen: u64) -> String {
@@ -78,7 +108,7 @@ struct Shared {
     window: Duration,
     /// The log file. Separate from `state` so submissions keep landing
     /// in the pending buffer while the leader is inside `fsync`.
-    file: Mutex<fs::File>,
+    file: Mutex<Box<dyn VfsFile>>,
     state: Mutex<CommitState>,
     cv: Condvar,
 }
@@ -116,12 +146,18 @@ impl AppendTicket {
 }
 
 impl Shared {
+    /// The commit-state lock, with panic-poisoning mapped to a typed
+    /// error instead of a propagated panic.
+    fn state(&self) -> Result<MutexGuard<'_, CommitState>> {
+        self.state.lock().map_err(|_| StoreError::Poisoned("wal commit state"))
+    }
+
     /// Block until `seq` is durable. `allow_window` enables the
     /// batching wait; drains that already know no co-traveller can
     /// arrive (`sync_pending` under `&mut Store`) pass `false` and
     /// lead immediately.
     fn wait_durable(&self, seq: u64, allow_window: bool) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state()?;
         // Batching window: before leading a sync ourselves, give other
         // writers up to `window` to join it (bounded added latency).
         if allow_window
@@ -130,8 +166,10 @@ impl Shared {
             && st.poisoned.is_none()
             && !st.syncing
         {
-            let (guard, _timeout) =
-                self.cv.wait_timeout(st, self.window).unwrap();
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(st, self.window)
+                .map_err(|_| StoreError::Poisoned("wal commit state"))?;
             st = guard;
         }
         loop {
@@ -144,7 +182,10 @@ impl Shared {
                 )));
             }
             if st.syncing {
-                st = self.cv.wait(st).unwrap();
+                st = self
+                    .cv
+                    .wait(st)
+                    .map_err(|_| StoreError::Poisoned("wal commit state"))?;
                 continue;
             }
             // Leader: take everything pending and sync it in one shot.
@@ -155,11 +196,8 @@ impl Shared {
             let high = st.next_seq - 1;
             st.syncing = true;
             drop(st);
-            let res = {
-                let mut f = self.file.lock().unwrap();
-                f.write_all(&batch).and_then(|()| f.sync_data())
-            };
-            st = self.state.lock().unwrap();
+            let res = self.write_and_sync(&batch);
+            st = self.state()?;
             st.syncing = false;
             match res {
                 Ok(()) => {
@@ -172,6 +210,33 @@ impl Shared {
                     self.cv.notify_all();
                     return Err(e.into());
                 }
+            }
+        }
+    }
+
+    /// One group write + fsync. The write phase never retries — after
+    /// a failed `write_all` an unknown prefix of the batch is already
+    /// in the file, and re-writing would duplicate records. The sync
+    /// phase retries transient failure classes with bounded doubling
+    /// backoff: the bytes are staged, only the barrier failed, so
+    /// re-issuing the fsync is safe.
+    fn write_and_sync(&self, batch: &[u8]) -> io::Result<()> {
+        let mut f = self
+            .file
+            .lock()
+            .map_err(|_| io::Error::other("wal file lock poisoned"))?;
+        f.write_all(batch)?;
+        let mut delay = SYNC_BACKOFF;
+        let mut attempt = 0u32;
+        loop {
+            match f.sync() {
+                Ok(()) => return Ok(()),
+                Err(e) if attempt < SYNC_RETRIES && transient(e.kind()) => {
+                    attempt += 1;
+                    std::thread::sleep(delay);
+                    delay = delay.saturating_mul(2);
+                }
+                Err(e) => return Err(e),
             }
         }
     }
@@ -193,7 +258,7 @@ fn encode_record(rows: &[CodecBitmap]) -> Vec<u8> {
 }
 
 impl Wal {
-    fn from_file(file: fs::File, window: Duration) -> Wal {
+    fn from_file(file: Box<dyn VfsFile>, window: Duration) -> Wal {
         Wal {
             shared: Arc::new(Shared {
                 window,
@@ -211,30 +276,26 @@ impl Wal {
     }
 
     /// Create (or open for append) generation `gen`.
-    pub(crate) fn create(dir: &Path, gen: u64, window: Duration) -> Result<Wal> {
-        let file = fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path(dir, gen))?;
+    pub(crate) fn create(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        gen: u64,
+        window: Duration,
+    ) -> Result<Wal> {
+        let file = vfs.open_append(&path(dir, gen))?;
         Ok(Wal::from_file(file, window))
     }
 
     /// Reopen generation `gen` truncated to its valid prefix (what
     /// replay measured), positioned for appending.
     pub(crate) fn open_truncated(
+        vfs: &dyn Vfs,
         dir: &Path,
         gen: u64,
         valid_len: u64,
         window: Duration,
     ) -> Result<Wal> {
-        let mut file = fs::OpenOptions::new()
-            .create(true)
-            .read(true)
-            .write(true)
-            .open(path(dir, gen))?;
-        file.set_len(valid_len)?;
-        file.seek(SeekFrom::End(0))?;
-        file.sync_all()?;
+        let file = vfs.open_truncated(&path(dir, gen), valid_len)?;
         Ok(Wal::from_file(file, window))
     }
 
@@ -243,7 +304,7 @@ impl Wal {
     /// durability point. Submit order = WAL record order = ack order.
     pub(crate) fn submit(&self, rows: &[CodecBitmap]) -> Result<AppendTicket> {
         let record = encode_record(rows);
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state()?;
         if let Some(e) = &st.poisoned {
             return Err(StoreError::Invalid(format!(
                 "wal unusable after a group-sync failure: {e}"
@@ -271,7 +332,7 @@ impl Wal {
     /// strand an un-synced ticket.
     pub(crate) fn sync_pending(&self) -> Result<()> {
         let target = {
-            let st = self.shared.state.lock().unwrap();
+            let st = self.shared.state()?;
             st.next_seq - 1
         };
         self.shared.wait_durable(target, false)
@@ -283,13 +344,14 @@ impl Wal {
 /// empty log. Never errors on a torn/corrupt tail — that is the crash
 /// case it exists for; only real I/O failures surface.
 pub(crate) fn replay(
+    vfs: &dyn Vfs,
     dir: &Path,
     gen: u64,
     num_attrs: usize,
 ) -> Result<(Vec<Vec<CodecBitmap>>, u64)> {
-    let buf = match fs::read(path(dir, gen)) {
+    let buf = match vfs.read(&path(dir, gen)) {
         Ok(b) => b,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
             return Ok((Vec::new(), 0));
         }
         Err(e) => return Err(e.into()),
@@ -342,9 +404,11 @@ fn decode_batch(payload: &[u8], num_attrs: usize) -> Option<Vec<CodecBitmap>> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::vfs::{FaultKind, FaultSpec, FaultVfs, RealVfs};
     use super::*;
     use crate::bic::bitmap::Bitmap;
     use crate::substrate::rng::Xoshiro256;
+    use std::fs;
 
     fn batch(n: usize, seed: u64) -> Vec<CodecBitmap> {
         let mut rng = Xoshiro256::seeded(seed);
@@ -365,12 +429,12 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let batches: Vec<_> = (0..4).map(|i| batch(500 + i, i as u64)).collect();
         {
-            let wal = Wal::create(&dir, 5, Duration::ZERO).unwrap();
+            let wal = Wal::create(&RealVfs, &dir, 5, Duration::ZERO).unwrap();
             for b in &batches {
                 wal.append(b).unwrap();
             }
         }
-        let (replayed, len) = replay(&dir, 5, 3).unwrap();
+        let (replayed, len) = replay(&RealVfs, &dir, 5, 3).unwrap();
         assert_eq!(replayed, batches);
         let full = fs::read(path(&dir, 5)).unwrap();
         assert_eq!(len, full.len() as u64);
@@ -393,7 +457,7 @@ mod tests {
         }
         for cut in 0..=full.len() {
             fs::write(path(&dir, 5), &full[..cut]).unwrap();
-            let (got, valid) = replay(&dir, 5, 3).unwrap();
+            let (got, valid) = replay(&RealVfs, &dir, 5, 3).unwrap();
             let expect_records =
                 boundaries.iter().filter(|&&b| b <= cut as u64).count() - 1;
             assert_eq!(got.len(), expect_records, "cut at {cut}");
@@ -402,7 +466,7 @@ mod tests {
         }
 
         // Missing generation = empty log.
-        let (none, len0) = replay(&dir, 99, 3).unwrap();
+        let (none, len0) = replay(&RealVfs, &dir, 99, 3).unwrap();
         assert!(none.is_empty());
         assert_eq!(len0, 0);
         let _ = fs::remove_dir_all(&dir);
@@ -416,7 +480,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let batches: Vec<_> = (0..3).map(|i| batch(400, 10 + i)).collect();
         {
-            let wal = Wal::create(&dir, 0, Duration::ZERO).unwrap();
+            let wal = Wal::create(&RealVfs, &dir, 0, Duration::ZERO).unwrap();
             for b in &batches {
                 wal.append(b).unwrap();
             }
@@ -428,7 +492,7 @@ mod tests {
         let rec1_start = 8 + rec0_len;
         bytes[rec1_start + 8 + 5] ^= 0xFF;
         fs::write(path(&dir, 0), &bytes).unwrap();
-        let (got, valid) = replay(&dir, 0, 3).unwrap();
+        let (got, valid) = replay(&RealVfs, &dir, 0, 3).unwrap();
         assert_eq!(got.len(), 1, "only the record before the corruption");
         assert_eq!(got[0], batches[0]);
         assert_eq!(valid as usize, rec1_start);
@@ -444,7 +508,7 @@ mod tests {
         let b0 = batch(300, 77);
         let b1 = batch(301, 78);
         {
-            let wal = Wal::create(&dir, 1, Duration::ZERO).unwrap();
+            let wal = Wal::create(&RealVfs, &dir, 1, Duration::ZERO).unwrap();
             wal.append(&b0).unwrap();
         }
         // Simulate a torn tail, then recover + append.
@@ -452,15 +516,16 @@ mod tests {
         let good_len = bytes.len();
         bytes.extend_from_slice(&[1, 2, 3]); // garbage tail
         fs::write(path(&dir, 1), &bytes).unwrap();
-        let (got, valid) = replay(&dir, 1, 3).unwrap();
+        let (got, valid) = replay(&RealVfs, &dir, 1, 3).unwrap();
         assert_eq!(got.len(), 1);
         assert_eq!(valid as usize, good_len);
         {
             let wal =
-                Wal::open_truncated(&dir, 1, valid, Duration::ZERO).unwrap();
+                Wal::open_truncated(&RealVfs, &dir, 1, valid, Duration::ZERO)
+                    .unwrap();
             wal.append(&b1).unwrap();
         }
-        let (got, _) = replay(&dir, 1, 3).unwrap();
+        let (got, _) = replay(&RealVfs, &dir, 1, 3).unwrap();
         assert_eq!(got, vec![b0, b1]);
         let _ = fs::remove_dir_all(&dir);
     }
@@ -473,7 +538,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let batches: Vec<_> = (0..6).map(|i| batch(200 + i, 50 + i as u64)).collect();
         {
-            let wal = Wal::create(&dir, 2, Duration::ZERO).unwrap();
+            let wal = Wal::create(&RealVfs, &dir, 2, Duration::ZERO).unwrap();
             // Submit everything first (buffered, un-synced), then wait
             // the tickets out of order: the file must still hold the
             // records in submit order, and one leader sync covers all.
@@ -483,7 +548,7 @@ mod tests {
                 t.wait().unwrap();
             }
         }
-        let (replayed, _) = replay(&dir, 2, 3).unwrap();
+        let (replayed, _) = replay(&RealVfs, &dir, 2, 3).unwrap();
         assert_eq!(replayed, batches, "WAL order == submit order");
         let _ = fs::remove_dir_all(&dir);
     }
@@ -496,14 +561,14 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let b0 = batch(128, 1);
         let b1 = batch(128, 2);
-        let wal = Wal::create(&dir, 3, Duration::ZERO).unwrap();
+        let wal = Wal::create(&RealVfs, &dir, 3, Duration::ZERO).unwrap();
         let t0 = wal.submit(&b0).unwrap();
         let t1 = wal.submit(&b1).unwrap();
         wal.sync_pending().unwrap();
         // Both tickets are already durable: waits return immediately.
         t0.wait().unwrap();
         t1.wait().unwrap();
-        let (replayed, _) = replay(&dir, 3, 3).unwrap();
+        let (replayed, _) = replay(&RealVfs, &dir, 3, 3).unwrap();
         assert_eq!(replayed, vec![b0, b1]);
         let _ = fs::remove_dir_all(&dir);
     }
@@ -514,13 +579,104 @@ mod tests {
             .join(format!("bic-wal-window-{}", std::process::id()));
         let _ = fs::remove_dir_all(&dir);
         fs::create_dir_all(&dir).unwrap();
-        let wal = Wal::create(&dir, 4, Duration::from_millis(2)).unwrap();
+        let wal =
+            Wal::create(&RealVfs, &dir, 4, Duration::from_millis(2)).unwrap();
         let batches: Vec<_> = (0..3).map(|i| batch(64, 90 + i)).collect();
         for b in &batches {
             wal.append(b).unwrap();
         }
-        let (replayed, _) = replay(&dir, 4, 3).unwrap();
+        let (replayed, _) = replay(&RealVfs, &dir, 4, 3).unwrap();
         assert_eq!(replayed, batches);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn transient_sync_failures_retry_then_ack() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-wal-retry-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        // Ops: 0 = open_append, 1 = group write, 2 = first fsync
+        // (injected transient failure), 3 = the retry (succeeds).
+        let fv = FaultVfs::with_plan(
+            9,
+            vec![FaultSpec {
+                at_op: 2,
+                kind: FaultKind::SyncFail { transient: true },
+            }],
+        );
+        let b = batch(128, 5);
+        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO).unwrap();
+        wal.append(&b).unwrap(); // retried fsync, no poison
+        let b2 = batch(128, 6);
+        wal.append(&b2).unwrap(); // generation still usable
+        let (replayed, _) = replay(&RealVfs, &dir, 0, 3).unwrap();
+        assert_eq!(replayed, vec![b, b2]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exhausted_transient_retries_poison_the_generation() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-wal-exhaust-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        // Four consecutive transient fsync failures > SYNC_RETRIES.
+        let plan = (2..=5)
+            .map(|op| FaultSpec {
+                at_op: op,
+                kind: FaultKind::SyncFail { transient: true },
+            })
+            .collect();
+        let fv = FaultVfs::with_plan(10, plan);
+        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO).unwrap();
+        assert!(wal.append(&batch(128, 7)).is_err());
+        // Poisoned: later submits refuse.
+        let err = wal.submit(&batch(128, 8)).unwrap_err();
+        assert!(err.to_string().contains("group-sync failure"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hard_sync_failure_poisons_without_retry() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-wal-hard-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let fv = FaultVfs::with_plan(
+            11,
+            vec![FaultSpec {
+                at_op: 2,
+                kind: FaultKind::SyncFail { transient: false },
+            }],
+        );
+        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO).unwrap();
+        assert!(wal.append(&batch(128, 9)).is_err());
+        assert!(wal.submit(&batch(128, 10)).is_err());
+        // The acked prefix (nothing) is what replay yields even though
+        // the group's bytes may be fully in the file.
+        let (replayed, _) = replay(&RealVfs, &dir, 0, 3).unwrap();
+        assert!(replayed.len() <= 1, "at most the un-acked record");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn enospc_on_group_write_poisons_the_generation() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-wal-enospc-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let fv = FaultVfs::with_plan(
+            12,
+            vec![FaultSpec { at_op: 1, kind: FaultKind::WriteNoSpace }],
+        );
+        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO).unwrap();
+        let err = wal.append(&batch(128, 11)).unwrap_err();
+        assert!(err.to_string().contains("ENOSPC"), "{err}");
+        assert!(wal.submit(&batch(128, 12)).is_err());
+        // Nothing was written: replay over the real file is empty.
+        let (replayed, _) = replay(&RealVfs, &dir, 0, 3).unwrap();
+        assert!(replayed.is_empty());
         let _ = fs::remove_dir_all(&dir);
     }
 }

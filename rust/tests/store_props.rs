@@ -5,13 +5,26 @@
 //! without manifest, committed manifest with a stale WAL), compaction
 //! equivalence + tombstoning, and query equivalence of the store reader
 //! against `Query::eval` over the equivalent uncompressed index.
+//!
+//! The fault-injection half (seeded, reproducible — see
+//! `store::vfs::FaultVfs`): damaged committed segments as typed
+//! outcomes under both degraded policies, scrubber quarantine, rename/
+//! ENOSPC faults at every operation of a flush, and the chaos crux — a
+//! crash-point sweep over every VFS operation of a full engine
+//! workload, recovering to exactly the acked batch prefix with all four
+//! query execution tiers bit-identical. Failures print `CHAOS_SEED=<n>`;
+//! re-running with that env var replays the identical fault.
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-use sotb_bic::bic::{BicConfig, BicCore, BitmapIndex, CompressedIndex, Query};
+use sotb_bic::bic::{
+    BicConfig, BicCore, Bitmap, BitmapIndex, CompressedIndex, Query,
+};
 use sotb_bic::coordinator::{ContentDist, ShardedIndexer, WorkloadGen};
-use sotb_bic::store::{Store, StoreConfig};
+use sotb_bic::store::vfs::{FaultKind, FaultSpec, FaultVfs};
+use sotb_bic::store::{DegradedPolicy, Store, StoreConfig, StoreError};
 
 /// Small, ragged geometry: 24-bit batch rows (not a multiple of 64, 32,
 /// or 31), 6 attributes.
@@ -123,7 +136,7 @@ fn ingest_flush_recover_roundtrip_across_distributions() {
         let k = 9;
         let seed = 0xD15 + tag.len() as u64;
         let cfg = StoreConfig { flush_batches: 4, ..StoreConfig::default() };
-        let mut store = Store::create(&dir, CFG.m_keys, cfg).unwrap();
+        let mut store = Store::create(&dir, CFG.m_keys, cfg.clone()).unwrap();
         for ci in &encoded_batches(dist, seed, k) {
             store.append_batch(ci).unwrap();
         }
@@ -350,7 +363,7 @@ fn compaction_preserves_queries_and_tombstones_files() {
         },
         ..StoreConfig::default()
     };
-    let mut store = Store::create(&dir, CFG.m_keys, cfg).unwrap();
+    let mut store = Store::create(&dir, CFG.m_keys, cfg.clone()).unwrap();
     for ci in &encoded_batches(dist, seed, k) {
         store.append_batch(ci).unwrap();
     }
@@ -590,4 +603,488 @@ fn sharded_persist_matches_reference() {
     assert_eq!(n, k);
     assert_store_matches(&store, &reference(dist, seed, k), "sharded");
     let _ = fs::remove_dir_all(&dir);
+}
+
+// --- fault injection ----------------------------------------------------
+
+/// The expected index when some batches sit inside quarantined
+/// segments: their ranges read as all-zero holes, everything else keeps
+/// its reference bits.
+fn reference_with_holes(
+    batches: &[CompressedIndex],
+    hole: impl Fn(usize) -> bool,
+) -> BitmapIndex {
+    let n = CFG.n_records;
+    let mut rows = vec![Bitmap::zeros(batches.len() * n); CFG.m_keys];
+    for (b, ci) in batches.iter().enumerate() {
+        if hole(b) {
+            continue;
+        }
+        for (a, row) in rows.iter_mut().enumerate() {
+            ci.rows()[a].or_into_at(row, b * n);
+        }
+    }
+    BitmapIndex::from_rows(rows)
+}
+
+/// Build a store with two 3-batch segments plus one memtable batch from
+/// `batches` (which must hold 7), then drop the handle.
+fn build_two_segment_store(dir: &Path, batches: &[CompressedIndex]) {
+    let mut store = Store::create(dir, CFG.m_keys, no_autoflush()).unwrap();
+    for ci in &batches[..3] {
+        store.append_batch(ci).unwrap();
+    }
+    store.flush().unwrap().expect("segment 0");
+    for ci in &batches[3..6] {
+        store.append_batch(ci).unwrap();
+    }
+    store.flush().unwrap().expect("segment 1");
+    store.append_batch(&batches[6]).unwrap();
+}
+
+/// A committed segment that is missing or fails its checksum must be a
+/// *typed* outcome at open, never a panic or a silent skip: `Corrupt`
+/// naming the path under `FailClosed`, a quarantine tombstone (file
+/// moved to `quarantined/`, its range served as zeros) under
+/// `ServeHealthy`.
+#[test]
+fn damaged_committed_segment_is_typed_under_both_policies() {
+    let dist = ContentDist::Zipf { s: 1.2 };
+    let seed = 0xBAD_5E6;
+    let k = 7;
+    let batches = encoded_batches(dist, seed, k);
+    let src = tmpdir("damage-src");
+    build_two_segment_store(&src, &batches);
+    // Segment 0 (batches 0..3) is the victim; 3..7 stay healthy.
+    let expect = reference_with_holes(&batches, |b| b < 3);
+
+    for damage in ["missing", "crc"] {
+        let work = tmpdir(&format!("damage-{damage}"));
+        copy_dir(&src, &work);
+        let victim = work.join("seg-00000000.bic");
+        match damage {
+            "missing" => fs::remove_file(&victim).unwrap(),
+            _ => {
+                let mut bytes = fs::read(&victim).unwrap();
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x40;
+                fs::write(&victim, &bytes).unwrap();
+            }
+        }
+
+        // FailClosed (the default): a typed Corrupt naming the path.
+        match Store::open(&work, no_autoflush()) {
+            Err(StoreError::Corrupt { what: "segment", detail }) => {
+                assert!(
+                    detail.contains("seg-00000000.bic"),
+                    "{damage}: error names the file, got: {detail}"
+                );
+            }
+            Err(other) => panic!("{damage}: expected Corrupt, got {other}"),
+            Ok(_) => panic!("{damage}: damaged store opened fail-closed"),
+        }
+
+        // ServeHealthy: open succeeds, the victim is tombstoned, its
+        // range reads as zeros, and the gap is surfaced in counters.
+        let serve = StoreConfig {
+            degraded: DegradedPolicy::ServeHealthy,
+            flush_batches: 0,
+            ..StoreConfig::default()
+        };
+        let store = Store::open(&work, serve).unwrap();
+        assert_eq!(store.degraded_segments(), 1, "{damage}");
+        assert_eq!(store.rows_unavailable(), 3 * CFG.n_records, "{damage}");
+        assert_eq!(store.num_segments(), 1, "{damage}: healthy survivor");
+        assert_eq!(store.memtable_batches(), 1, "{damage}: WAL replayed");
+        assert_eq!(store.quarantined_entries().len(), 1, "{damage}");
+        assert_eq!(
+            store.quarantined_entries()[0].file, "seg-00000000.bic",
+            "{damage}"
+        );
+        assert!(!victim.exists(), "{damage}: no longer live");
+        if damage == "crc" {
+            // The bytes were moved aside, not deleted — salvageable.
+            assert!(
+                work.join("quarantined").join("seg-00000000.bic").exists(),
+                "crc: quarantined copy kept"
+            );
+        }
+        assert_store_matches(&store, &expect, &format!("{damage} degraded"));
+        drop(store);
+
+        // The tombstone was committed: even a FailClosed reopen now
+        // succeeds (refusing reads is the engine's job) and agrees.
+        let store = Store::open(&work, no_autoflush()).unwrap();
+        assert_eq!(store.degraded_segments(), 1, "{damage}: durable");
+        assert_store_matches(
+            &store,
+            &expect,
+            &format!("{damage} tombstone reopened"),
+        );
+        let _ = fs::remove_dir_all(&work);
+    }
+    let _ = fs::remove_dir_all(&src);
+}
+
+/// The scrubber catches rot that happens *behind* a live store: a
+/// flushed segment corrupted on disk is quarantined by the next pass
+/// (manifest tombstone + `quarantined/` move) while the handle keeps
+/// serving the healthy remainder.
+#[test]
+fn scrub_quarantines_rotten_segment_and_keeps_serving() {
+    let dist = ContentDist::Uniform;
+    let seed = 0x5C0B;
+    let k = 6;
+    let dir = tmpdir("scrub");
+    let batches = encoded_batches(dist, seed, k);
+    let mut store = Store::create(&dir, CFG.m_keys, no_autoflush()).unwrap();
+    for ci in &batches[..3] {
+        store.append_batch(ci).unwrap();
+    }
+    store.flush().unwrap().expect("segment 0");
+    for ci in &batches[3..] {
+        store.append_batch(ci).unwrap();
+    }
+    store.flush().unwrap().expect("segment 1");
+
+    // A clean pass verifies everything and quarantines nothing.
+    let report = store.scrub().unwrap();
+    assert_eq!(report.segments_checked, 2);
+    assert!(report.bytes_verified > 0);
+    assert!(report.quarantined.is_empty());
+    assert_eq!(report.degraded_segments, 0);
+    assert_eq!(report.rows_unavailable, 0);
+
+    // Rot segment 1 on disk behind the store's back.
+    let path = dir.join("seg-00000001.bic");
+    let mut bytes = fs::read(&path).unwrap();
+    let at = bytes.len() - 5;
+    bytes[at] ^= 1;
+    fs::write(&path, &bytes).unwrap();
+
+    let report = store.scrub().unwrap();
+    assert_eq!(report.segments_checked, 1, "only the healthy one verifies");
+    assert_eq!(report.quarantined, vec!["seg-00000001.bic".to_string()]);
+    assert_eq!(report.degraded_segments, 1);
+    assert_eq!(report.rows_unavailable, 3 * CFG.n_records);
+    assert!(dir.join("quarantined").join("seg-00000001.bic").exists());
+    assert!(!path.exists());
+
+    // The healthy remainder still serves; the hole reads as zeros.
+    let expect = reference_with_holes(&batches, |b| b >= 3);
+    assert_store_matches(&store, &expect, "post-scrub");
+
+    // A second pass is a no-op over the degraded-but-stable store.
+    let report = store.scrub().unwrap();
+    assert_eq!(report.segments_checked, 1);
+    assert!(report.quarantined.is_empty());
+    assert_eq!(report.degraded_segments, 1);
+
+    // The tombstone is durable: recovery agrees bit-for-bit.
+    drop(store);
+    let store = Store::open(&dir, no_autoflush()).unwrap();
+    assert_eq!(store.degraded_segments(), 1);
+    assert_store_matches(&store, &expect, "post-scrub reopened");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Injected rename failures and ENOSPC at *every* operation of a flush:
+/// the flush fails typed, the live handle keeps serving the pre-flush
+/// state, and recovery over the real filesystem sees a consistent store
+/// — either the old WAL state or the completed flush, never in between.
+#[test]
+fn flush_faults_leave_store_consistent_at_every_op() {
+    let dist = ContentDist::Clustered { spread: 8 };
+    let seed = 0xF417;
+    let k = 4;
+    let src = tmpdir("flush-fault-src");
+    let mut store = Store::create(&src, CFG.m_keys, no_autoflush()).unwrap();
+    for ci in &encoded_batches(dist, seed, k) {
+        store.append_batch(ci).unwrap();
+    }
+    drop(store);
+    let expect = reference(dist, seed, k);
+
+    // Measure how many VFS operations one open + flush performs.
+    let work = tmpdir("flush-fault-measure");
+    copy_dir(&src, &work);
+    let probe = FaultVfs::counting(seed);
+    let probe_vfs: Arc<dyn sotb_bic::store::Vfs> = Arc::clone(&probe);
+    let cfg = StoreConfig {
+        flush_batches: 0,
+        vfs: probe_vfs,
+        ..StoreConfig::default()
+    };
+    let mut store = Store::open(&work, cfg).unwrap();
+    store.flush().unwrap().expect("non-empty");
+    drop(store);
+    let total = probe.ops();
+    assert!(total > 0);
+    let _ = fs::remove_dir_all(&work);
+
+    for kind in [FaultKind::RenameFail, FaultKind::WriteNoSpace] {
+        for op in 0..total {
+            let ctx = format!("{kind:?} at op {op}");
+            let work = tmpdir("flush-fault-work");
+            copy_dir(&src, &work);
+            let vfs: Arc<dyn sotb_bic::store::Vfs> =
+                FaultVfs::with_plan(seed, vec![FaultSpec { at_op: op, kind }]);
+            let cfg = StoreConfig {
+                flush_batches: 0,
+                vfs,
+                ..StoreConfig::default()
+            };
+            // Neither kind applies to the read-only ops recovery
+            // performs, so the open itself always succeeds.
+            let mut store = Store::open(&work, cfg).unwrap();
+            match store.flush() {
+                Ok(_) => {} // the fault landed on an inapplicable op
+                Err(StoreError::Io(_)) => {
+                    // The failed flush must not lose the memtable: the
+                    // live handle still serves the whole prefix.
+                    assert_store_matches(
+                        &store,
+                        &expect,
+                        &format!("{ctx}: live after failed flush"),
+                    );
+                }
+                Err(other) => panic!("{ctx}: unexpected {other}"),
+            }
+            drop(store);
+            let store = Store::open(&work, no_autoflush()).unwrap();
+            assert_store_matches(&store, &expect, &format!("{ctx}: recovered"));
+            let _ = fs::remove_dir_all(&work);
+        }
+    }
+    let _ = fs::remove_dir_all(&src);
+}
+
+// --- engine-level fault injection ---------------------------------------
+
+/// Schema keys for the engine-level tests: 6 values (the store
+/// geometry's attribute count) drawn from the workload's byte range.
+const EKEYS: [i32; 6] = [2, 5, 23, 77, 130, 251];
+
+fn engine_builder() -> sotb_bic::engine::EngineBuilder {
+    sotb_bic::engine::Engine::builder(
+        sotb_bic::engine::Schema::single("byte", EKEYS).expect("schema"),
+    )
+    .batch_records(CFG.n_records)
+    .record_words(CFG.w_words)
+}
+
+/// Raw record batches for engine ingest (the engine indexes them under
+/// the schema keys, not the workload's).
+fn engine_batches(dist: ContentDist, seed: u64, k: usize) -> Vec<Vec<Vec<i32>>> {
+    let mut g = WorkloadGen::new(CFG, dist, seed);
+    (0..k).map(|i| g.batch_at(i as f64).records).collect()
+}
+
+/// Golden-model replay of the engine's ingest: index every batch under
+/// the schema keys and concatenate, zeroing batches `hole` marks.
+fn engine_reference(
+    batch_records: &[Vec<Vec<i32>>],
+    hole: impl Fn(usize) -> bool,
+) -> BitmapIndex {
+    let mut core = BicCore::new(CFG);
+    let n = batch_records.len() * CFG.n_records;
+    let mut rows = vec![Bitmap::zeros(n); CFG.m_keys];
+    for (b, records) in batch_records.iter().enumerate() {
+        if hole(b) {
+            continue;
+        }
+        let bi = core.index(records, &EKEYS);
+        for (a, row) in rows.iter_mut().enumerate() {
+            row.or_at(bi.row(a), b * CFG.n_records);
+        }
+    }
+    BitmapIndex::from_rows(rows)
+}
+
+/// Engine-level degraded reads: a store that degrades refuses queries
+/// with a typed `Corrupt` under `FailClosed` (reopen *and* live query
+/// path), and under `ServeHealthy` serves the healthy subset on all
+/// four execution tiers while surfacing the gap in `EngineStats`.
+#[test]
+fn engine_degraded_reads_fail_closed_or_serve_healthy() {
+    use sotb_bic::engine::{ExecPath, PallasError};
+
+    let dist = ContentDist::Zipf { s: 1.1 };
+    let seed = 0xDE64;
+    let k = 6;
+    let dir = tmpdir("engine-degraded");
+    let records = engine_batches(dist, seed, k);
+    let engine = engine_builder()
+        .durable(&dir)
+        .flush_batches(3)
+        .build()
+        .expect("create");
+    for r in &records {
+        engine.ingest(r).expect("ingest");
+    }
+    engine.close().expect("close");
+
+    // Rot segment 0 (batches 0..3) on disk.
+    let victim = dir.join("seg-00000000.bic");
+    let mut bytes = fs::read(&victim).unwrap();
+    bytes[40] ^= 0x10;
+    fs::write(&victim, &bytes).unwrap();
+
+    // FailClosed (default): the reopen itself refuses, typed.
+    match engine_builder().durable(&dir).build() {
+        Err(PallasError::Corrupt { what: "segment", detail }) => {
+            assert!(detail.contains("seg-00000000.bic"), "{detail}");
+        }
+        other => panic!("expected Corrupt, got {:?}", other.err()),
+    }
+
+    // ServeHealthy: opens, quarantines, serves the rest with counters.
+    let engine = engine_builder()
+        .durable(&dir)
+        .degraded(DegradedPolicy::ServeHealthy)
+        .build()
+        .expect("degraded open");
+    let stats = engine.stats();
+    assert_eq!(stats.degraded_segments, 1);
+    assert_eq!(stats.rows_unavailable, 3 * CFG.n_records);
+    // An on-demand scrub over the already-tombstoned store is a no-op.
+    let report = engine.scrub().expect("scrub");
+    assert!(report.quarantined.is_empty());
+    assert_eq!(report.degraded_segments, 1);
+    let expect = engine_reference(&records, |b| b < 3);
+    let snap = engine.snapshot();
+    for (qi, q) in query_corpus().iter().enumerate() {
+        let want = q.eval(&expect).unwrap();
+        for path in ExecPath::ALL {
+            assert_eq!(
+                engine.query_via(q, path).expect("degraded query"),
+                want,
+                "query {qi} via {path:?}"
+            );
+        }
+        assert_eq!(snap.query(q).expect("snapshot query"), want, "q {qi}");
+    }
+    drop(snap);
+    engine.close().expect("close degraded");
+
+    // FailClosed over the committed tombstone: the store opens (the
+    // damage is already quarantined truth), but every read path refuses
+    // with a typed Corrupt naming the segment.
+    let engine = engine_builder().durable(&dir).build().expect("reopen");
+    let q = Query::attr(0);
+    for path in ExecPath::ALL {
+        match engine.query_via(&q, path) {
+            Err(PallasError::Corrupt { what: "segment", detail }) => {
+                assert!(detail.contains("seg-00000000.bic"), "{detail}");
+                assert!(detail.contains("FailClosed"), "{detail}");
+            }
+            other => panic!("{path:?}: expected Corrupt, got {other:?}"),
+        }
+    }
+    let snap = engine.snapshot();
+    assert!(matches!(
+        snap.query(&q),
+        Err(PallasError::Corrupt { what: "segment", .. })
+    ));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The chaos crux: crash the engine at every VFS operation of a full
+/// create → ingest → auto-flush workload, recover over the real
+/// filesystem, and require (a) the recovered object count to be a whole
+/// number of batches inside the acked..=submitted window and (b) all
+/// four query execution tiers bit-identical to the reference prefix.
+/// Seeded and reproducible: failures print the seed; set `CHAOS_SEED`
+/// to replay one.
+#[test]
+fn chaos_crash_matrix_recovers_acked_prefix_on_all_tiers() {
+    use sotb_bic::engine::ExecPath;
+
+    let seed: u64 = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC4A0_5EED);
+    println!("CHAOS_SEED={seed} (set the env var to replay)");
+    let dist = ContentDist::Zipf { s: 1.2 };
+    let k = 5;
+    let records = engine_batches(dist, seed, k);
+
+    // Measure the op count of one fault-free run of the workload.
+    let dir = tmpdir("chaos-measure");
+    let probe = FaultVfs::counting(seed);
+    let engine = engine_builder()
+        .durable(&dir)
+        .flush_batches(2)
+        .vfs(Arc::clone(&probe))
+        .build()
+        .expect("measure build");
+    for r in &records {
+        engine.ingest(r).expect("measure ingest");
+    }
+    engine.close().expect("measure close");
+    let total = probe.ops();
+    assert!(total > 0, "the workload must touch the vfs");
+    let _ = fs::remove_dir_all(&dir);
+
+    // Sweep every op as a crash point (strided only if the workload
+    // ever grows past ~2x its current op count).
+    let stride = (total / 128).max(1) as usize;
+    for op in (0..total).step_by(stride) {
+        let dir = tmpdir("chaos-crash");
+        let mut acked = 0usize;
+        if let Ok(engine) = engine_builder()
+            .durable(&dir)
+            .flush_batches(2)
+            .vfs(FaultVfs::crash_at(seed, op))
+            .build()
+        {
+            for r in &records {
+                match engine.ingest(r) {
+                    Ok(_) => acked += 1,
+                    Err(_) => break, // the vfs is dead from here on
+                }
+            }
+            let _ = engine.close();
+        }
+
+        // Recover over the real filesystem (a crash before the store
+        // commit recovers to an empty store via the create path).
+        let engine = engine_builder()
+            .durable(&dir)
+            .flush_batches(2)
+            .build()
+            .unwrap_or_else(|e| {
+                panic!("CHAOS_SEED={seed} op {op}: recovery failed: {e}")
+            });
+        let objects = engine.num_objects();
+        assert_eq!(
+            objects % CFG.n_records,
+            0,
+            "CHAOS_SEED={seed} op {op}: a partial batch survived"
+        );
+        let recovered = objects / CFG.n_records;
+        assert!(
+            (acked..=k).contains(&recovered),
+            "CHAOS_SEED={seed} op {op}: recovered {recovered} batches, \
+             acked {acked}, submitted {k}"
+        );
+        let expect = engine_reference(&records[..recovered], |_| false);
+        for (qi, q) in query_corpus().iter().enumerate() {
+            let want = q.eval(&expect).unwrap();
+            for path in ExecPath::ALL {
+                let got = engine.query_via(q, path).unwrap_or_else(|e| {
+                    panic!(
+                        "CHAOS_SEED={seed} op {op}: query {qi} via \
+                         {path:?}: {e}"
+                    )
+                });
+                assert_eq!(
+                    got, want,
+                    "CHAOS_SEED={seed} op {op}: query {qi} via {path:?}"
+                );
+            }
+        }
+        drop(engine);
+        let _ = fs::remove_dir_all(&dir);
+    }
 }
