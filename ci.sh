@@ -12,8 +12,56 @@
 #                   CHAOS_RUNS random seeds (default 5). Every seed is
 #                   printed; replay one deterministically with
 #                   CHAOS_SEED=<seed> ./ci.sh --chaos (runs once).
+#   ci.sh --serve   service-tier smoke: spawn bic_server, drive it with
+#                   concurrent bic_client sessions (smoke + two hammer
+#                   fleets), then kill the server, restart it over the
+#                   same root, and re-query everything (PERF.md
+#                   §service-tier).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+if [[ "${1:-}" == "--serve" ]]; then
+    echo "== serve-smoke: cargo build --release --bins =="
+    cargo build --release --bins
+    root=$(mktemp -d)
+    server_pid=""
+    cleanup() {
+        [[ -n "$server_pid" ]] && kill "$server_pid" 2>/dev/null || true
+        rm -rf "$root"
+    }
+    trap cleanup EXIT
+    start_server() {
+        rm -f "$root/ADDR"
+        target/release/bic_server --root "$root" --addr 127.0.0.1:0 &
+        server_pid=$!
+        for _ in $(seq 100); do
+            [[ -s "$root/ADDR" ]] && break
+            sleep 0.1
+        done
+        [[ -s "$root/ADDR" ]] || { echo "server never wrote ADDR"; exit 1; }
+        addr=$(<"$root/ADDR")
+        echo "   bic_server at $addr (pid $server_pid, root $root)"
+    }
+    echo "== serve-smoke: start bic_server =="
+    start_server
+    target/release/bic_client ping --addr "$addr"
+    echo "== serve-smoke: deterministic data set + concurrent hammers =="
+    target/release/bic_client smoke --addr "$addr"
+    target/release/bic_client hammer --addr "$addr" --tenant hammer-a \
+        --workers 4 --iters 16 &
+    hammer_pid=$!
+    target/release/bic_client hammer --addr "$addr" --tenant hammer-b \
+        --workers 2 --iters 16
+    wait "$hammer_pid"
+    echo "== serve-smoke: kill -> restart -> re-query =="
+    kill "$server_pid"
+    wait "$server_pid" 2>/dev/null || true
+    server_pid=""
+    start_server
+    target/release/bic_client verify --addr "$addr"
+    echo "== ci.sh --serve OK =="
+    exit 0
+fi
 
 if [[ "${1:-}" == "--chaos" ]]; then
     echo "== chaos: cargo build --release =="
@@ -45,7 +93,7 @@ if [[ "${1:-}" == "--bench" ]]; then
     BENCH_SMOKE=1 cargo bench --bench ablations
     # The pipelined-ingest and pruned-query pairs must be present in the
     # emitted results (they run inside the hotpath bench above).
-    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query; do
+    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query engine/contention; do
         grep -q "\"$bench_case\"" BENCH_hotpath.json \
             || { echo "missing bench case $bench_case in BENCH_hotpath.json"; exit 1; }
     done
@@ -71,13 +119,14 @@ else
 fi
 
 # Robustness cap: non-test code in the durable store, the engine
-# facade, and the coordinator service must not panic on lock poisoning
-# or I/O — those are typed StoreError/PallasError returns (see PERF.md
-# "Fault model"). The awk stops at the first #[cfg(test)] marker, so
-# test modules may still unwrap freely.
-echo "== unwrap/expect cap (non-test store + engine + service code) =="
+# facade, the coordinator service, and the network service tier must
+# not panic on lock poisoning or I/O — those are typed
+# StoreError/PallasError returns (see PERF.md "Fault model"). The awk
+# stops at the first #[cfg(test)] marker, so test modules may still
+# unwrap freely.
+echo "== unwrap/expect cap (non-test store + engine + service + server code) =="
 unwrap_bad=0
-for f in src/store/*.rs src/engine/*.rs src/coordinator/service.rs; do
+for f in src/store/*.rs src/engine/*.rs src/coordinator/service.rs src/server/*.rs; do
     n=$(awk '/#\[cfg\(test\)\]/{exit} /\.unwrap\(\)|\.expect\(/{c++} END{print c+0}' "$f")
     if [[ "$n" -gt 0 ]]; then
         echo "   $f: $n panicking unwrap()/expect() call(s) outside tests"

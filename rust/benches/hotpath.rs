@@ -2,8 +2,9 @@
 //! (EXPERIMENTS.md §Perf): bitmap algebra (incl. the fused multi-operand
 //! kernel), the 64x64 block transpose vs the scalar reference, packed CAM
 //! matching, WAH, the query engine, the golden indexing core, the
-//! thread-sharded coordinator path, the cycle simulator, and PJRT
-//! artifact dispatch.
+//! thread-sharded coordinator path, the cycle simulator, the
+//! multi-tenant service tier under contention, and PJRT artifact
+//! dispatch.
 //!
 //! Results are also emitted machine-readable to `BENCH_hotpath.json`
 //! (one object per case) so the perf trajectory is tracked across PRs.
@@ -399,6 +400,127 @@ fn main() {
             hits
         }));
         let _ = std::fs::remove_dir_all(&bench_root);
+    }
+
+    // Service-tier contention: one in-process server, N worker threads
+    // with persistent line-protocol clients over loopback, each doing
+    // sync-ingest + query rounds against a shared tenant. The sample
+    // clock wraps a whole concurrent round (barrier to barrier), so
+    // `per_iter` is the aggregate per-op latency under contention —
+    // registry lookups, per-tenant engine locking, and the socket round
+    // trip included. `busy` answers are retried and counted, never
+    // fatal (with a sync client per worker the in-flight bound is never
+    // the limiter; the count proves it).
+    group("service tier (4 workers, ingest+query over loopback)");
+    {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::time::Instant;
+
+        use sotb_bic::server::client::Client;
+        use sotb_bic::server::protocol::{response_error_code, response_ok};
+        use sotb_bic::server::Server;
+        use sotb_bic::substrate::stats::Summary;
+
+        const WORKERS: usize = 4;
+        let rounds = if smoke_mode() { 8 } else { 48 };
+        let nsamples = if smoke_mode() { 3 } else { 8 };
+        let root = std::env::temp_dir()
+            .join(format!("bic-serve-bench-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let handle = Server::bind(&root, "127.0.0.1:0", WORKERS + 4)
+            .expect("bind")
+            .spawn();
+        let addr = handle.local_addr();
+        let mut admin = Client::connect(addr).expect("admin connect");
+        let schema = Json::obj([(
+            "columns",
+            Json::Arr(vec![Json::obj([
+                ("name", "k".into()),
+                ("values", (0..16).collect::<Vec<i32>>().into()),
+            ])]),
+        )]);
+        let tcfg = Json::obj([
+            ("batch_records", 64.into()),
+            ("record_words", 8.into()),
+            ("flush_batches", 8.into()),
+        ]);
+        let resp = admin
+            .create_tenant("bench", &schema, Some(&tcfg))
+            .expect("create_tenant");
+        assert!(response_ok(&resp), "create_tenant: {}", resp.render());
+        let batch: Vec<Vec<i32>> = (0..64)
+            .map(|r| (0..8).map(|w| ((r + w) % 16) as i32).collect())
+            .collect();
+        let predicate =
+            Json::obj([("col", "k".into()), ("eq", 3.into())]);
+        let total_ops = (WORKERS * rounds * 2) as u64;
+        let busy_retries = AtomicU64::new(0);
+        let barrier = std::sync::Barrier::new(WORKERS + 1);
+        let mut sample_times: Vec<f64> = Vec::with_capacity(nsamples);
+        std::thread::scope(|s| {
+            for _ in 0..WORKERS {
+                let (barrier, busy) = (&barrier, &busy_retries);
+                let (batch, predicate) = (&batch, &predicate);
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).expect("worker");
+                    for _ in 0..nsamples {
+                        barrier.wait();
+                        for _ in 0..rounds {
+                            loop {
+                                let r = c
+                                    .ingest("bench", batch, true)
+                                    .expect("ingest transport");
+                                if response_ok(&r) {
+                                    break;
+                                }
+                                assert_eq!(
+                                    response_error_code(&r),
+                                    Some("busy"),
+                                    "ingest: {}",
+                                    r.render()
+                                );
+                                busy.fetch_add(1, Ordering::Relaxed);
+                                std::thread::yield_now();
+                            }
+                            let r = c
+                                .query("bench", predicate)
+                                .expect("query transport");
+                            assert!(response_ok(&r), "query: {}", r.render());
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+            for _ in 0..nsamples {
+                barrier.wait();
+                let t0 = Instant::now();
+                barrier.wait();
+                sample_times.push(t0.elapsed().as_secs_f64());
+            }
+        });
+        let per_op: Vec<f64> =
+            sample_times.iter().map(|t| t / total_ops as f64).collect();
+        let contention = BenchResult {
+            name: "engine/contention".into(),
+            per_iter: Summary::of(&per_op),
+            iters_per_sample: total_ops,
+            // Bytes in per op pair, averaged over the ingest+query mix.
+            bytes_per_iter: Some((64 * 8 * 4) / 2),
+        };
+        println!("{}", contention.line());
+        let mean_round = sample_times.iter().sum::<f64>()
+            / sample_times.len().max(1) as f64;
+        println!(
+            "contention: {WORKERS} workers x {rounds} rounds, \
+             {:.0} ops/sec/worker, {:.0} ops/sec total, {} busy retries",
+            (rounds * 2) as f64 / mean_round,
+            total_ops as f64 / mean_round,
+            busy_retries.load(Ordering::Relaxed)
+        );
+        results.push(contention);
+        drop(admin);
+        handle.stop();
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     group("PJRT artifact dispatch");

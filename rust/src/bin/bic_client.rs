@@ -1,0 +1,304 @@
+//! `bic_client` — line-protocol driver for `bic_server`, used by
+//! `ci.sh --serve` and by hand.
+//!
+//! ```text
+//! bic_client ping   --addr HOST:PORT
+//! bic_client smoke  --addr HOST:PORT [--tenant NAME]
+//! bic_client verify --addr HOST:PORT [--tenant NAME]
+//! bic_client hammer --addr HOST:PORT [--tenant NAME]
+//!                   [--workers N] [--iters K]
+//! ```
+//!
+//! `smoke` creates a tenant and ingests a fixed deterministic data set;
+//! `verify` re-queries that data set and checks the exact counts —
+//! running `smoke`, killing the server, restarting it, and running
+//! `verify` pins crash recovery plus lazy tenant reopen end to end.
+//! `hammer` drives N concurrent ingest+query workers over one socket
+//! each and reports per-worker and total ops/sec (`busy` responses are
+//! retried after backoff and counted, never fatal).
+
+use std::process::ExitCode;
+
+use sotb_bic::server::client::Client;
+use sotb_bic::server::protocol::{response_error_code, response_ok};
+use sotb_bic::substrate::cli::Args;
+use sotb_bic::substrate::json::Json;
+
+/// Key universe for the smoke tenant's single column.
+const KEYS: [i32; 8] = [1, 2, 3, 4, 5, 6, 7, 8];
+/// Batches in the smoke data set.
+const SMOKE_BATCHES: usize = 6;
+/// Records per smoke batch.
+const SMOKE_RECORDS: usize = 4;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("bic_client: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<(), String> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw)?;
+    let addr = args.require("addr")?.to_string();
+    let tenant = args.get("tenant").unwrap_or("smoke").to_string();
+    match args.subcommand.as_deref() {
+        Some("ping") => ping(&addr),
+        Some("smoke") => smoke(&addr, &tenant),
+        Some("verify") => verify(&addr, &tenant),
+        Some("hammer") => {
+            let workers = args.get_parsed("workers", 4usize)?;
+            let iters = args.get_parsed("iters", 32usize)?;
+            hammer(&addr, &tenant, workers, iters)
+        }
+        other => Err(format!(
+            "unknown subcommand {other:?}; expected ping|smoke|verify|hammer"
+        )),
+    }
+}
+
+fn connect(addr: &str) -> Result<Client, String> {
+    Client::connect(addr).map_err(|e| format!("connect {addr}: {e}"))
+}
+
+/// Expect an `ok` response; surface `{code, what, detail}` otherwise.
+fn expect_ok(what: &str, resp: Json) -> Result<Json, String> {
+    if response_ok(&resp) {
+        return Ok(resp);
+    }
+    let err = resp.get("error");
+    let field = |k| {
+        err.and_then(|e| e.get(k))
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string()
+    };
+    Err(format!(
+        "{what}: server error code={} what={} detail={}",
+        field("code"),
+        field("what"),
+        field("detail")
+    ))
+}
+
+fn count_of(resp: &Json) -> Option<f64> {
+    resp.get("count").and_then(Json::as_f64)
+}
+
+/// The fixed smoke data set: `SMOKE_BATCHES` batches of `SMOKE_RECORDS`
+/// one-word records cycling through `KEYS`, so every key matches
+/// exactly `SMOKE_BATCHES * SMOKE_RECORDS / KEYS.len()` records.
+fn smoke_batch(i: usize) -> Vec<Vec<i32>> {
+    (0..SMOKE_RECORDS)
+        .map(|j| vec![KEYS[(i * SMOKE_RECORDS + j) % KEYS.len()]])
+        .collect()
+}
+
+fn expected_per_key() -> f64 {
+    (SMOKE_BATCHES * SMOKE_RECORDS / KEYS.len()) as f64
+}
+
+fn eq_predicate(key: i32) -> Json {
+    Json::obj([("col", "k".into()), ("eq", key.into())])
+}
+
+fn ping(addr: &str) -> Result<(), String> {
+    let mut c = connect(addr)?;
+    match c.ping() {
+        Ok(true) => {
+            println!("PONG {addr}");
+            Ok(())
+        }
+        Ok(false) => Err(format!("ping {addr}: server answered an error")),
+        Err(e) => Err(format!("ping {addr}: {e}")),
+    }
+}
+
+fn smoke(addr: &str, tenant: &str) -> Result<(), String> {
+    let mut c = connect(addr)?;
+    let schema = Json::obj([(
+        "columns",
+        Json::Arr(vec![Json::obj([
+            ("name", "k".into()),
+            ("values", KEYS.to_vec().into()),
+        ])]),
+    )]);
+    // Small flush cadence so the smoke pass crosses the memtable ->
+    // segment boundary (and the restart in `ci.sh --serve` replays a
+    // WAL tail, not just reopens segments).
+    let cfg = Json::obj([("flush_batches", 2.into())]);
+    let resp = c
+        .create_tenant(tenant, &schema, Some(&cfg))
+        .map_err(|e| format!("create_tenant: {e}"))?;
+    expect_ok("create_tenant", resp)?;
+    for i in 0..SMOKE_BATCHES {
+        let resp = c
+            .ingest(tenant, &smoke_batch(i), true)
+            .map_err(|e| format!("ingest batch {i}: {e}"))?;
+        let resp = expect_ok("ingest", resp)?;
+        if resp.get("durable").and_then(Json::as_bool) != Some(true) {
+            return Err(format!("ingest batch {i}: receipt not durable"));
+        }
+    }
+    check_counts(&mut c, tenant)?;
+    let resp = c.scrub(tenant).map_err(|e| format!("scrub: {e}"))?;
+    let resp = expect_ok("scrub", resp)?;
+    if resp.get("quarantined").and_then(Json::as_arr).map(<[Json]>::len)
+        != Some(0)
+    {
+        return Err("scrub: quarantined segments on a fresh store".into());
+    }
+    let stats = c.stats(tenant).map_err(|e| format!("stats: {e}"))?;
+    let stats = expect_ok("stats", stats)?;
+    let ingested = stats
+        .get("engine")
+        .and_then(|e| e.get("batches_ingested"))
+        .and_then(Json::as_f64);
+    if ingested != Some(SMOKE_BATCHES as f64) {
+        return Err(format!(
+            "stats: batches_ingested = {ingested:?}, want {SMOKE_BATCHES}"
+        ));
+    }
+    println!(
+        "SMOKE OK tenant={tenant} batches={SMOKE_BATCHES} \
+         per_key={}",
+        expected_per_key()
+    );
+    Ok(())
+}
+
+fn verify(addr: &str, tenant: &str) -> Result<(), String> {
+    let mut c = connect(addr)?;
+    check_counts(&mut c, tenant)?;
+    let metrics = c.metrics().map_err(|e| format!("metrics: {e}"))?;
+    let metrics = expect_ok("metrics", metrics)?;
+    let per_tenant = metrics
+        .get("tenants")
+        .and_then(|t| t.get(tenant))
+        .ok_or_else(|| format!("metrics: tenant {tenant} missing"))?;
+    if per_tenant
+        .get("engine")
+        .and_then(|e| e.get("batches_ingested"))
+        .and_then(Json::as_f64)
+        .is_none()
+    {
+        return Err("metrics: engine.batches_ingested missing".into());
+    }
+    println!("VERIFY OK tenant={tenant} per_key={}", expected_per_key());
+    Ok(())
+}
+
+/// Query every key and check the exact deterministic count.
+fn check_counts(c: &mut Client, tenant: &str) -> Result<(), String> {
+    for key in KEYS {
+        let resp = c
+            .query(tenant, &eq_predicate(key))
+            .map_err(|e| format!("query k=={key}: {e}"))?;
+        let resp = expect_ok("query", resp)?;
+        let got = count_of(&resp);
+        if got != Some(expected_per_key()) {
+            return Err(format!(
+                "query k=={key}: count {got:?}, want {}",
+                expected_per_key()
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn hammer(
+    addr: &str,
+    tenant: &str,
+    workers: usize,
+    iters: usize,
+) -> Result<(), String> {
+    let mut c = connect(addr)?;
+    let schema = Json::obj([(
+        "columns",
+        Json::Arr(vec![Json::obj([
+            ("name", "k".into()),
+            ("values", KEYS.to_vec().into()),
+        ])]),
+    )]);
+    // Racing `hammer` after `smoke` is fine: an existing tenant is a
+    // config error here, not a failure.
+    if let Ok(resp) = c.create_tenant(tenant, &schema, None) {
+        if !response_ok(&resp)
+            && response_error_code(&resp) != Some("config")
+        {
+            expect_ok("create_tenant", resp)?;
+        }
+    }
+    let start = std::time::Instant::now();
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let addr = addr.to_string();
+                let tenant = tenant.to_string();
+                s.spawn(move || hammer_worker(&addr, &tenant, w, iters))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+    let mut total_ops = 0u64;
+    let mut total_busy = 0u64;
+    for (w, r) in results.into_iter().enumerate() {
+        let (ops, busy) = r
+            .map_err(|_| format!("worker {w} panicked"))?
+            .map_err(|e| format!("worker {w}: {e}"))?;
+        println!(
+            "worker {w}: {ops} ops, {busy} busy retries, {:.0} ops/sec",
+            ops as f64 / elapsed
+        );
+        total_ops += ops;
+        total_busy += busy;
+    }
+    println!(
+        "HAMMER OK workers={workers} total_ops={total_ops} \
+         busy_retries={total_busy} total_ops_per_sec={:.0}",
+        total_ops as f64 / elapsed
+    );
+    Ok(())
+}
+
+/// One hammer worker: `iters` rounds of (sync ingest + query) on its
+/// own connection; `busy` answers back off and retry.
+fn hammer_worker(
+    addr: &str,
+    tenant: &str,
+    w: usize,
+    iters: usize,
+) -> Result<(u64, u64), String> {
+    let mut c = connect(addr)?;
+    let mut ops = 0u64;
+    let mut busy = 0u64;
+    for i in 0..iters {
+        let batch = smoke_batch(w * iters + i);
+        loop {
+            let resp = c
+                .ingest(tenant, &batch, true)
+                .map_err(|e| format!("ingest: {e}"))?;
+            if response_ok(&resp) {
+                break;
+            }
+            if response_error_code(&resp) == Some("busy") {
+                busy += 1;
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            expect_ok("ingest", resp)?;
+        }
+        ops += 1;
+        let resp = c
+            .query(tenant, &eq_predicate(KEYS[i % KEYS.len()]))
+            .map_err(|e| format!("query: {e}"))?;
+        expect_ok("query", resp)?;
+        ops += 1;
+    }
+    Ok((ops, busy))
+}

@@ -1,0 +1,45 @@
+//! `bic_server` — the multi-tenant line-protocol indexing service.
+//!
+//! ```text
+//! bic_server --root DIR [--addr HOST:PORT] [--max-conns N]
+//! ```
+//!
+//! Binds the listener, writes the resolved address to `<root>/ADDR`
+//! (so drivers started with `--addr 127.0.0.1:0` can find the port),
+//! and serves until killed. Tenants live under `<root>/<tenant>/` and
+//! reopen lazily after a restart — `ci.sh --serve` kills and restarts
+//! this binary mid-session and re-queries to pin that.
+
+use std::process::ExitCode;
+
+use sotb_bic::server::Server;
+use sotb_bic::substrate::cli::Args;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("bic_server: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<(), String> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw)?;
+    let root = std::path::PathBuf::from(args.require("root")?);
+    let addr = args.get("addr").unwrap_or("127.0.0.1:0").to_string();
+    let max_conns = args.get_parsed("max-conns", 64usize)?;
+    let server = Server::bind(&root, addr.as_str(), max_conns)
+        .map_err(|e| e.to_string())?;
+    let local = server.local_addr().map_err(|e| e.to_string())?;
+    std::fs::write(root.join("ADDR"), format!("{local}\n"))
+        .map_err(|e| format!("writing ADDR: {e}"))?;
+    println!(
+        "bic_server listening on {local} (root {}, max {max_conns} conns)",
+        root.display()
+    );
+    server.serve_forever();
+    Ok(())
+}

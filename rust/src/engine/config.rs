@@ -9,9 +9,11 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::planner::ExecPolicy;
+use super::error::{PallasError, Result};
+use super::planner::{ExecPath, ExecPolicy};
 use crate::bic::Codec;
 use crate::store::{DegradedPolicy, RealVfs, Vfs};
+use crate::substrate::json::Json;
 
 /// How ingested rows are encoded.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,6 +124,342 @@ impl Default for EngineConfig {
             degraded: DegradedPolicy::default(),
             scrub_interval: None,
             vfs: Arc::new(RealVfs),
+        }
+    }
+}
+
+/// Parse a JSON number as a non-negative integer, naming the offending
+/// key in the error.
+fn uint(v: &Json, key: &str) -> Result<u64> {
+    v.as_f64()
+        .filter(|f| f.fract() == 0.0 && *f >= 0.0 && *f < u64::MAX as f64)
+        .map(|f| f as u64)
+        .ok_or_else(|| {
+            PallasError::Config(format!(
+                "config key {key:?}: expected a non-negative integer"
+            ))
+        })
+}
+
+/// Parse a JSON string, naming the offending key in the error.
+fn strv<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.as_str().ok_or_else(|| {
+        PallasError::Config(format!("config key {key:?}: expected a string"))
+    })
+}
+
+impl EngineConfig {
+    /// Serialize every knob except [`vfs`](EngineConfig::vfs) (a live
+    /// trait object — process-local by nature, never part of the wire
+    /// form; deserialized configs always get [`RealVfs`]).
+    ///
+    /// Wire names are stable and documented in PERF.md §service-tier:
+    /// `batch_records`, `record_words`, `workers`, `shard`
+    /// (`"auto"|"never"|"always"`), `codec`
+    /// (`"adaptive"|"raw"|"wah"|"roaring"`), `durable_path`
+    /// (string or `null`), `flush_batches`, `max_segments`, `compaction`
+    /// (`"off"|"foreground"|{"background_ms":N}`), `exec`
+    /// (`"auto"|"raw"|"compressed"|"sharded"|"store"`), `zone_maps`,
+    /// `group_commit_window_us`, `ingest_queue`, `degraded`
+    /// (`"fail_closed"|"serve_healthy"`), `scrub_interval_ms`
+    /// (number or `null`). Durations serialize at the resolution their
+    /// suffix names; sub-resolution remainders truncate.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("batch_records", self.batch_records.into()),
+            ("record_words", self.record_words.into()),
+            ("workers", self.workers.into()),
+            (
+                "shard",
+                match self.shard {
+                    ShardPolicy::Auto => "auto",
+                    ShardPolicy::Never => "never",
+                    ShardPolicy::Always => "always",
+                }
+                .into(),
+            ),
+            (
+                "codec",
+                match self.codec {
+                    CodecPolicy::Adaptive => "adaptive",
+                    CodecPolicy::Forced(Codec::Raw) => "raw",
+                    CodecPolicy::Forced(Codec::Wah) => "wah",
+                    CodecPolicy::Forced(Codec::Roaring) => "roaring",
+                }
+                .into(),
+            ),
+            (
+                "durable_path",
+                match &self.durable_path {
+                    Some(p) => p.to_string_lossy().into_owned().into(),
+                    None => Json::Null,
+                },
+            ),
+            ("flush_batches", self.flush_batches.into()),
+            ("max_segments", self.max_segments.into()),
+            (
+                "compaction",
+                match self.compaction {
+                    CompactionMode::Off => "off".into(),
+                    CompactionMode::Foreground => "foreground".into(),
+                    CompactionMode::Background { interval } => Json::obj([(
+                        "background_ms",
+                        (interval.as_millis() as u64).into(),
+                    )]),
+                },
+            ),
+            (
+                "exec",
+                match self.exec {
+                    ExecPolicy::Auto => "auto",
+                    ExecPolicy::Force(p) => p.label(),
+                }
+                .into(),
+            ),
+            ("zone_maps", self.zone_maps.into()),
+            (
+                "group_commit_window_us",
+                (self.group_commit_window.as_micros() as u64).into(),
+            ),
+            ("ingest_queue", self.ingest_queue.into()),
+            (
+                "degraded",
+                match self.degraded {
+                    DegradedPolicy::FailClosed => "fail_closed",
+                    DegradedPolicy::ServeHealthy => "serve_healthy",
+                }
+                .into(),
+            ),
+            (
+                "scrub_interval_ms",
+                match self.scrub_interval {
+                    Some(d) => (d.as_millis() as u64).into(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Rebuild a config from its [`to_json`](EngineConfig::to_json)
+    /// form. Partial documents are fine — absent keys keep their
+    /// [`Default`] values — but unknown keys are a typed
+    /// [`PallasError::Config`] (a misspelled knob silently meaning
+    /// "default" is how production configs rot). `vfs` is always
+    /// [`RealVfs`]; swap it afterwards for fault injection.
+    pub fn from_json(doc: &Json) -> Result<EngineConfig> {
+        let map = match doc {
+            Json::Obj(map) => map,
+            _ => {
+                return Err(PallasError::Config(
+                    "engine config must be a JSON object".into(),
+                ))
+            }
+        };
+        let mut cfg = EngineConfig::default();
+        for (key, v) in map {
+            match key.as_str() {
+                "batch_records" => cfg.batch_records = uint(v, key)? as usize,
+                "record_words" => cfg.record_words = uint(v, key)? as usize,
+                "workers" => cfg.workers = uint(v, key)? as usize,
+                "shard" => {
+                    cfg.shard = match strv(v, key)? {
+                        "auto" => ShardPolicy::Auto,
+                        "never" => ShardPolicy::Never,
+                        "always" => ShardPolicy::Always,
+                        s => {
+                            return Err(PallasError::Config(format!(
+                                "config key \"shard\": unknown policy {s:?}"
+                            )))
+                        }
+                    }
+                }
+                "codec" => {
+                    cfg.codec = match strv(v, key)? {
+                        "adaptive" => CodecPolicy::Adaptive,
+                        "raw" => CodecPolicy::Forced(Codec::Raw),
+                        "wah" => CodecPolicy::Forced(Codec::Wah),
+                        "roaring" => CodecPolicy::Forced(Codec::Roaring),
+                        s => {
+                            return Err(PallasError::Config(format!(
+                                "config key \"codec\": unknown codec {s:?}"
+                            )))
+                        }
+                    }
+                }
+                "durable_path" => {
+                    cfg.durable_path = match v {
+                        Json::Null => None,
+                        _ => Some(PathBuf::from(strv(v, key)?)),
+                    }
+                }
+                "flush_batches" => cfg.flush_batches = uint(v, key)? as usize,
+                "max_segments" => cfg.max_segments = uint(v, key)? as usize,
+                "compaction" => {
+                    cfg.compaction = match v {
+                        Json::Str(s) if s == "off" => CompactionMode::Off,
+                        Json::Str(s) if s == "foreground" => {
+                            CompactionMode::Foreground
+                        }
+                        Json::Obj(_) => {
+                            let ms = v
+                                .get("background_ms")
+                                .ok_or_else(|| {
+                                    PallasError::Config(
+                                        "config key \"compaction\": object \
+                                         form needs \"background_ms\""
+                                            .into(),
+                                    )
+                                })
+                                .and_then(|n| uint(n, "background_ms"))?;
+                            CompactionMode::Background {
+                                interval: Duration::from_millis(ms),
+                            }
+                        }
+                        _ => {
+                            return Err(PallasError::Config(
+                                "config key \"compaction\": expected \
+                                 \"off\", \"foreground\", or \
+                                 {\"background_ms\":N}"
+                                    .into(),
+                            ))
+                        }
+                    }
+                }
+                "exec" => {
+                    cfg.exec = match strv(v, key)? {
+                        "auto" => ExecPolicy::Auto,
+                        "raw" => ExecPolicy::Force(ExecPath::Raw),
+                        "compressed" => ExecPolicy::Force(ExecPath::Compressed),
+                        "sharded" => ExecPolicy::Force(ExecPath::Sharded),
+                        "store" => ExecPolicy::Force(ExecPath::Store),
+                        s => {
+                            return Err(PallasError::Config(format!(
+                                "config key \"exec\": unknown path {s:?}"
+                            )))
+                        }
+                    }
+                }
+                "zone_maps" => {
+                    cfg.zone_maps = v.as_bool().ok_or_else(|| {
+                        PallasError::Config(
+                            "config key \"zone_maps\": expected a boolean"
+                                .into(),
+                        )
+                    })?
+                }
+                "group_commit_window_us" => {
+                    cfg.group_commit_window =
+                        Duration::from_micros(uint(v, key)?)
+                }
+                "ingest_queue" => cfg.ingest_queue = uint(v, key)? as usize,
+                "degraded" => {
+                    cfg.degraded = match strv(v, key)? {
+                        "fail_closed" => DegradedPolicy::FailClosed,
+                        "serve_healthy" => DegradedPolicy::ServeHealthy,
+                        s => {
+                            return Err(PallasError::Config(format!(
+                                "config key \"degraded\": unknown policy {s:?}"
+                            )))
+                        }
+                    }
+                }
+                "scrub_interval_ms" => {
+                    cfg.scrub_interval = match v {
+                        Json::Null => None,
+                        _ => Some(Duration::from_millis(uint(v, key)?)),
+                    }
+                }
+                other => {
+                    return Err(PallasError::Config(format!(
+                        "unknown engine config key {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_round_trips() {
+        let cfg = EngineConfig::default();
+        let back = EngineConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.to_json().render(), cfg.to_json().render());
+    }
+
+    #[test]
+    fn every_knob_round_trips() {
+        let cfg = EngineConfig {
+            batch_records: 8,
+            record_words: 16,
+            workers: 3,
+            shard: ShardPolicy::Always,
+            codec: CodecPolicy::Forced(Codec::Roaring),
+            durable_path: Some(PathBuf::from("/tmp/t0")),
+            flush_batches: 7,
+            max_segments: 9,
+            compaction: CompactionMode::Background {
+                interval: Duration::from_millis(250),
+            },
+            exec: ExecPolicy::Force(ExecPath::Store),
+            zone_maps: false,
+            group_commit_window: Duration::from_micros(1500),
+            ingest_queue: 2,
+            degraded: DegradedPolicy::ServeHealthy,
+            scrub_interval: Some(Duration::from_millis(40)),
+            vfs: Arc::new(RealVfs),
+        };
+        let doc = cfg.to_json();
+        let back = EngineConfig::from_json(&doc).unwrap();
+        assert_eq!(back.to_json().render(), doc.render());
+        assert_eq!(back.batch_records, 8);
+        assert_eq!(back.shard, ShardPolicy::Always);
+        assert_eq!(back.codec, CodecPolicy::Forced(Codec::Roaring));
+        assert_eq!(back.durable_path, Some(PathBuf::from("/tmp/t0")));
+        assert_eq!(
+            back.compaction,
+            CompactionMode::Background { interval: Duration::from_millis(250) }
+        );
+        assert_eq!(back.exec, ExecPolicy::Force(ExecPath::Store));
+        assert!(!back.zone_maps);
+        assert_eq!(back.group_commit_window, Duration::from_micros(1500));
+        assert_eq!(back.ingest_queue, 2);
+        assert_eq!(back.degraded, DegradedPolicy::ServeHealthy);
+        assert_eq!(back.scrub_interval, Some(Duration::from_millis(40)));
+    }
+
+    #[test]
+    fn partial_document_keeps_defaults() {
+        let doc = Json::parse(r#"{"ingest_queue":2,"zone_maps":false}"#)
+            .unwrap();
+        let cfg = EngineConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.ingest_queue, 2);
+        assert!(!cfg.zone_maps);
+        let d = EngineConfig::default();
+        assert_eq!(cfg.batch_records, d.batch_records);
+        assert_eq!(cfg.flush_batches, d.flush_batches);
+        assert_eq!(cfg.degraded, d.degraded);
+    }
+
+    #[test]
+    fn unknown_keys_and_bad_values_are_config_errors() {
+        for bad in [
+            r#"{"ingset_queue":2}"#,
+            r#"{"shard":"sometimes"}"#,
+            r#"{"codec":7}"#,
+            r#"{"workers":-1}"#,
+            r#"{"workers":1.5}"#,
+            r#"{"compaction":{"backgroud_ms":5}}"#,
+            r#"{"exec":"gpu"}"#,
+            r#"[1,2]"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            let err = EngineConfig::from_json(&doc).unwrap_err();
+            assert_eq!(err.class(), "config", "{bad} -> {err}");
         }
     }
 }

@@ -20,6 +20,10 @@
 //!   durable path).
 //! - [`PallasError::Runtime`] — a PJRT/artifact failure on the
 //!   accelerator path (client creation, HLO compilation, dispatch).
+//! - [`PallasError::Busy`] — admission control shed the operation: a
+//!   bounded queue (the async-ingest in-flight cap) or the service
+//!   tier's connection cap was at capacity. The system is healthy;
+//!   retry after backoff. Never returned for malformed input.
 //! - [`PallasError::Internal`] — an engine invariant broke at runtime
 //!   (a lock poisoned by a panicking thread, a dead worker). Not caused
 //!   by caller input and not retryable on the same handle; surfaced as
@@ -56,6 +60,11 @@ pub enum PallasError {
     /// PJRT/artifact failure on the accelerator path.
     #[error("runtime: {0}")]
     Runtime(String),
+    /// Admission control shed the operation (bounded queue or
+    /// connection cap at capacity). Healthy-system load shedding:
+    /// retry after backoff.
+    #[error("busy: {0}")]
+    Busy(String),
     /// An engine invariant broke at runtime (poisoned lock, dead
     /// worker thread) — not caused by caller input.
     #[error("internal: {0}")]
@@ -113,6 +122,7 @@ impl PallasError {
             PallasError::InvalidQuery(_) => "invalid-query",
             PallasError::Config(_) => "config",
             PallasError::Runtime(_) => "runtime",
+            PallasError::Busy(_) => "busy",
             PallasError::Internal(_) => "internal",
         }
     }
@@ -156,6 +166,13 @@ mod tests {
         let err = lock(&m, "counter").unwrap_err();
         assert!(matches!(err, PallasError::Internal(_)));
         assert!(err.to_string().contains("counter"));
+    }
+
+    #[test]
+    fn busy_is_its_own_class() {
+        let e = PallasError::Busy("ingest queue full (4 in flight)".into());
+        assert_eq!(e.class(), "busy");
+        assert!(e.to_string().contains("queue full"));
     }
 
     #[test]

@@ -14,7 +14,15 @@
 //! ```
 //!
 //! - **Submission** assigns a pipeline sequence number and blocks only
-//!   when the queue is full (backpressure, `ingest_queue` deep).
+//!   when the queue is full (backpressure, `ingest_queue` deep). The
+//!   bound is end to end: a batch counts against `ingest_queue` from
+//!   submission until its receipt is delivered, so the reorder buffer
+//!   and the appender's pending run can never grow past the cap either.
+//!   [`IngestPipeline::try_submit`] is the shedding variant — instead
+//!   of blocking it reports a full pipeline to the caller, which
+//!   [`Engine::try_ingest_async`] surfaces as the typed
+//!   [`PallasError::Busy`] the service tier's admission control returns
+//!   on the wire.
 //! - **Encode workers** (one per engine worker thread, each owning a
 //!   private `BicCore` like the chip's per-core CAM/buffer) index and
 //!   codec-encode batches in parallel, out of order.
@@ -49,6 +57,74 @@ use super::{Inner, IngestReceipt};
 use crate::bic::codec::CompressedIndex;
 use crate::bic::BicCore;
 
+/// The end-to-end in-flight bound: how many submitted batches may be
+/// anywhere in the pipeline (queue, encode, reorder, appender) before
+/// their receipts resolve. [`IngestPipeline::submit`] blocks on it,
+/// [`IngestPipeline::try_submit`] sheds on it.
+struct InflightGate {
+    cap: usize,
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl InflightGate {
+    fn new(cap: usize) -> Arc<InflightGate> {
+        Arc::new(InflightGate { cap, count: Mutex::new(0), cv: Condvar::new() })
+    }
+
+    /// Take a slot, waiting while the pipeline is full (backpressure).
+    fn acquire(self: &Arc<InflightGate>) -> GateToken {
+        let mut n = self.count.lock().unwrap_or_else(PoisonError::into_inner);
+        while *n >= self.cap {
+            n = self.cv.wait(n).unwrap_or_else(PoisonError::into_inner);
+        }
+        *n += 1;
+        GateToken(Arc::clone(self))
+    }
+
+    /// Take a slot only if one is free right now (admission control).
+    fn try_acquire(self: &Arc<InflightGate>) -> Option<GateToken> {
+        let mut n = self.count.lock().unwrap_or_else(PoisonError::into_inner);
+        if *n >= self.cap {
+            return None;
+        }
+        *n += 1;
+        Some(GateToken(Arc::clone(self)))
+    }
+}
+
+/// An occupied in-flight slot. Travels with the batch through every
+/// stage (inside its [`Ack`]) and releases the slot on drop — including
+/// the error paths that drop the ack without sending, so a failed batch
+/// can never leak pipeline capacity.
+struct GateToken(Arc<InflightGate>);
+
+impl Drop for GateToken {
+    fn drop(&mut self) {
+        let mut n =
+            self.0.count.lock().unwrap_or_else(PoisonError::into_inner);
+        *n = n.saturating_sub(1);
+        self.0.cv.notify_all();
+    }
+}
+
+/// The result channel of one in-flight batch, bundled with its gate
+/// token: delivering the receipt (or dropping the ack) frees the
+/// pipeline slot.
+pub(crate) struct Ack {
+    done: Sender<Result<IngestReceipt>>,
+    _token: Option<GateToken>,
+}
+
+impl Ack {
+    /// Resolve the batch's ticket. Consumes the ack, releasing its
+    /// in-flight slot; a dropped receiver (the caller discarded the
+    /// ticket) is fine — fire-and-forget submissions do exactly that.
+    pub(crate) fn send(self, result: Result<IngestReceipt>) {
+        let _ = self.done.send(result);
+    }
+}
+
 /// A submitted-but-not-yet-acknowledged asynchronous ingest.
 /// [`IngestTicket::wait`] blocks until the batch is applied (and, on a
 /// durable engine, WAL-fsynced) and returns its receipt.
@@ -76,7 +152,7 @@ impl IngestTicket {
 struct Job {
     seq: u64,
     records: Vec<Vec<i32>>,
-    done: Sender<Result<IngestReceipt>>,
+    done: Ack,
 }
 
 /// The appender's reorder buffer: encoded batches keyed by sequence,
@@ -85,7 +161,7 @@ struct Job {
 /// never stalls on a gap) and resolves its ticket with an error.
 struct Reorder {
     next: u64,
-    ready: BTreeMap<u64, (Option<CompressedIndex>, Sender<Result<IngestReceipt>>)>,
+    ready: BTreeMap<u64, (Option<CompressedIndex>, Ack)>,
     live_encoders: usize,
 }
 
@@ -95,6 +171,7 @@ struct Reorder {
 pub(super) struct IngestPipeline {
     tx: Option<SyncSender<Job>>,
     next_seq: u64,
+    gate: Arc<InflightGate>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -107,6 +184,7 @@ impl IngestPipeline {
         queue: usize,
     ) -> IngestPipeline {
         let workers = workers.max(1);
+        let gate = InflightGate::new(queue.max(1));
         let (tx, rx) = mpsc::sync_channel::<Job>(queue.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let reorder = Arc::new((
@@ -205,13 +283,11 @@ impl IngestPipeline {
                                             &mut group,
                                         ));
                                     }
-                                    let _ = done.send(Err(
-                                        PallasError::Ingest(
-                                            "async ingest batch dropped: its \
-                                             encode worker panicked"
-                                                .into(),
-                                        ),
-                                    ));
+                                    done.send(Err(PallasError::Ingest(
+                                        "async ingest batch dropped: its \
+                                         encode worker panicked"
+                                            .into(),
+                                    )));
                                 }
                             }
                         }
@@ -231,12 +307,32 @@ impl IngestPipeline {
                 }
             }));
         }
-        IngestPipeline { tx: Some(tx), next_seq: 0, threads }
+        IngestPipeline { tx: Some(tx), next_seq: 0, gate, threads }
     }
 
-    /// Enqueue one validated batch; blocks while the submission queue
-    /// is full (backpressure).
+    /// Enqueue one validated batch; blocks while `ingest_queue` batches
+    /// are already in flight (backpressure).
     pub(super) fn submit(&mut self, records: Vec<Vec<i32>>) -> IngestTicket {
+        let token = self.gate.acquire();
+        self.dispatch(records, token)
+    }
+
+    /// Enqueue one validated batch only if an in-flight slot is free
+    /// right now; `None` means the pipeline is at capacity (the caller
+    /// sheds with [`PallasError::Busy`] instead of blocking).
+    pub(super) fn try_submit(
+        &mut self,
+        records: Vec<Vec<i32>>,
+    ) -> Option<IngestTicket> {
+        let token = self.gate.try_acquire()?;
+        Some(self.dispatch(records, token))
+    }
+
+    fn dispatch(
+        &mut self,
+        records: Vec<Vec<i32>>,
+        token: GateToken,
+    ) -> IngestTicket {
         let (done, rx) = mpsc::channel();
         let seq = self.next_seq;
         self.next_seq += 1;
@@ -244,8 +340,16 @@ impl IngestPipeline {
         // the queue down); likewise `tx` is only `None` mid-shutdown.
         // Either way the dropped `done` sender surfaces as a
         // pipeline-shutdown error on the ticket's wait — no panic here.
+        // The gate token rides inside the ack, so the slot frees when
+        // the receipt is delivered (or the job is dropped), never
+        // before. Because in-flight <= queue depth, this send never
+        // blocks on a full channel.
         if let Some(tx) = self.tx.as_ref() {
-            let _ = tx.send(Job { seq, records, done });
+            let _ = tx.send(Job {
+                seq,
+                records,
+                done: Ack { done, _token: Some(token) },
+            });
         }
         IngestTicket { rx }
     }

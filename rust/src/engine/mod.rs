@@ -60,7 +60,6 @@ pub use snapshot::Snapshot;
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Duration;
 
@@ -74,7 +73,7 @@ use crate::store::{manifest, Scrubber, Store, StoreConfig, Vfs};
 use crate::substrate::json::Json;
 use error::lock;
 use exec::{EvalStats, RowChunk};
-use ingest::IngestPipeline;
+use ingest::{Ack, IngestPipeline};
 use planner::PlanInputs;
 use snapshot::PinnedView;
 
@@ -87,31 +86,6 @@ use snapshot::PinnedView;
 /// store's `seg-`/`wal-`/`.tmp` prefixes so recovery's orphan sweep
 /// never touches it.
 const SCHEMA_FILE: &str = "ENGINE_SCHEMA.json";
-
-fn schema_json(schema: &Schema) -> String {
-    Json::obj([(
-        "columns",
-        Json::Arr(
-            schema
-                .columns()
-                .iter()
-                .map(|c| {
-                    Json::obj([
-                        ("name", c.name().into()),
-                        (
-                            "values",
-                            Json::Arr(
-                                c.values().iter().map(|&v| v.into()).collect(),
-                            ),
-                        ),
-                    ])
-                })
-                .collect(),
-        ),
-    )])
-    .render()
-        + "\n"
-}
 
 /// Write the schema sidecar through the engine's VFS (so fault
 /// injection covers it like every store file). Write-fsync-rename, like
@@ -127,37 +101,11 @@ fn write_schema_sidecar(
 ) -> Result<()> {
     let tmp = path.with_extension("json.tmp");
     let mut f = vfs.create(&tmp)?;
-    f.write_all(schema_json(schema).as_bytes())?;
+    f.write_all((schema.to_json().render() + "\n").as_bytes())?;
     f.sync()?;
     drop(f);
     vfs.rename(&tmp, path)?;
     Ok(())
-}
-
-fn schema_matches(doc: &Json, schema: &Schema) -> bool {
-    let Some(cols) = doc.get("columns").and_then(Json::as_arr) else {
-        return false;
-    };
-    if cols.len() != schema.num_columns() {
-        return false;
-    }
-    for (j, c) in cols.iter().zip(schema.columns()) {
-        if j.get("name").and_then(Json::as_str) != Some(c.name()) {
-            return false;
-        }
-        let Some(vals) = j.get("values").and_then(Json::as_arr) else {
-            return false;
-        };
-        if vals.len() != c.values().len() {
-            return false;
-        }
-        for (v, &want) in vals.iter().zip(c.values()) {
-            if v.as_f64() != Some(want as f64) {
-                return false;
-            }
-        }
-    }
-    true
 }
 
 /// Builder for [`Engine`]: schema first, then tuning knobs, then
@@ -172,6 +120,23 @@ impl EngineBuilder {
     /// Start from a schema (defines the key vector and the geometry `m`).
     pub fn new(schema: Schema) -> Self {
         Self { schema, cfg: EngineConfig::default() }
+    }
+
+    /// Start from a schema and a fully-assembled [`EngineConfig`] (e.g.
+    /// one deserialized from a tenant declaration). The setter methods
+    /// below still apply on top.
+    pub fn from_config(schema: Schema, cfg: EngineConfig) -> Self {
+        Self { schema, cfg }
+    }
+
+    /// Start from a schema and the JSON form of an [`EngineConfig`]
+    /// (see [`EngineConfig::from_json`]): every knob round-trips, absent
+    /// keys take defaults, unknown keys are a typed
+    /// [`PallasError::Config`]. This is how the service tier turns a
+    /// `create_tenant` request (or a persisted `TENANT.json`) into an
+    /// engine.
+    pub fn from_json(schema: Schema, config: &Json) -> Result<Self> {
+        Ok(Self::from_config(schema, EngineConfig::from_json(config)?))
     }
 
     /// Records per batch (geometry `n`; short batches are zero-padded).
@@ -386,7 +351,12 @@ impl EngineBuilder {
                                     ))
                                 },
                             )?;
-                            if !schema_matches(&doc, &schema) {
+                            // A sidecar that parses as JSON but not as a
+                            // schema counts as a mismatch, not corruption:
+                            // the bytes committed atomically, they just
+                            // describe a schema this build rejects.
+                            let stored = Schema::from_json(&doc).ok();
+                            if stored.as_ref() != Some(&schema) {
                                 return Err(PallasError::Config(format!(
                                     "store at {} was created under a \
                                      different schema (see {})",
@@ -519,12 +489,50 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
+    /// Version of the JSON stats surface emitted by
+    /// [`EngineStats::to_json`]. Bump only when a field is renamed or
+    /// removed; adding fields is backward-compatible and does not bump.
+    pub const STATS_VERSION: u64 = 1;
+
     /// Queries served across all tiers.
     pub fn queries_total(&self) -> u64 {
         self.queries_raw
             + self.queries_compressed
             + self.queries_sharded
             + self.queries_store
+    }
+
+    /// The versioned JSON stats surface — consumed verbatim by the
+    /// service tier's `stats` and `metrics` commands, and safe for
+    /// external scrapers to parse by name. Every struct field appears
+    /// under its own name, plus `stats_version`
+    /// ([`EngineStats::STATS_VERSION`]) and the derived `queries_total`.
+    /// Field names are stable (PERF.md §service-tier documents the
+    /// contract); within one version, names never change meaning.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("stats_version", Self::STATS_VERSION.into()),
+            ("attrs", self.attrs.into()),
+            ("columns", self.columns.into()),
+            ("workers", self.workers.into()),
+            ("batches_ingested", self.batches_ingested.into()),
+            ("objects", self.objects.into()),
+            ("durable", self.durable.into()),
+            ("segments", self.segments.into()),
+            ("memtable_batches", self.memtable_batches.into()),
+            ("segment_bytes_written", self.segment_bytes_written.into()),
+            ("compressed_cache", self.compressed_cache.into()),
+            ("queries_raw", self.queries_raw.into()),
+            ("queries_compressed", self.queries_compressed.into()),
+            ("queries_sharded", self.queries_sharded.into()),
+            ("queries_store", self.queries_store.into()),
+            ("queries_total", self.queries_total().into()),
+            ("store_rows_folded", self.store_rows_folded.into()),
+            ("store_row_bytes_read", self.store_row_bytes_read.into()),
+            ("store_chunks_skipped", self.store_chunks_skipped.into()),
+            ("degraded_segments", self.degraded_segments.into()),
+            ("rows_unavailable", self.rows_unavailable.into()),
+        ])
     }
 }
 
@@ -724,10 +732,7 @@ impl Inner {
     /// acquisition, then resolve their durability tickets — the first
     /// wait leads one WAL group commit covering the whole run. Each
     /// batch's result is delivered through its `done` channel.
-    pub(crate) fn apply_run(
-        &self,
-        run: Vec<(CompressedIndex, Sender<Result<IngestReceipt>>)>,
-    ) {
+    pub(crate) fn apply_run(&self, run: Vec<(CompressedIndex, Ack)>) {
         match &self.backend {
             Backend::Durable(store) => {
                 let mut acked = Vec::with_capacity(run.len());
@@ -737,7 +742,7 @@ impl Inner {
                     // the appender thread (which would wedge callers).
                     let Ok(mut g) = store.lock() else {
                         for (_, done) in run {
-                            let _ = done.send(Err(PallasError::Internal(
+                            done.send(Err(PallasError::Internal(
                                 "poisoned lock: store".into(),
                             )));
                         }
@@ -759,7 +764,7 @@ impl Inner {
                                 acked.push((ticket, receipt, done));
                             }
                             Err(e) => {
-                                let _ = done.send(Err(e.into()));
+                                done.send(Err(e.into()));
                             }
                         }
                     }
@@ -776,7 +781,7 @@ impl Inner {
                 for (ticket, receipt, done) in acked {
                     let result =
                         ticket.wait().map(|()| receipt).map_err(Into::into);
-                    let _ = done.send(result);
+                    done.send(result);
                 }
             }
             Backend::Memory(mem) => {
@@ -788,7 +793,7 @@ impl Inner {
                 {
                     let Ok(mut g) = mem.lock() else {
                         for (_, done) in run {
-                            let _ = done.send(Err(PallasError::Internal(
+                            done.send(Err(PallasError::Internal(
                                 "poisoned lock: memtable".into(),
                             )));
                         }
@@ -809,7 +814,7 @@ impl Inner {
                 }
                 self.invalidate_views();
                 for (receipt, done) in acked {
-                    let _ = done.send(Ok(receipt));
+                    done.send(Ok(receipt));
                 }
             }
         }
@@ -981,6 +986,36 @@ impl Engine {
             )
         });
         Ok(pipeline.submit(records))
+    }
+
+    /// The shedding variant of [`Engine::ingest_async`]: submit the
+    /// batch only if an in-flight slot is free *right now*, otherwise
+    /// return the typed [`PallasError::Busy`] immediately instead of
+    /// blocking. This is the admission-control entry the service tier
+    /// calls on behalf of remote clients — a full tenant queue turns
+    /// into a `busy` wire response, never a stalled socket. The
+    /// in-flight bound is end to end (submission until receipt
+    /// delivery), so a wedged appender cannot grow the pipeline beyond
+    /// `ingest_queue` batches.
+    pub fn try_ingest_async(
+        &self,
+        records: Vec<Vec<i32>>,
+    ) -> Result<IngestTicket> {
+        self.inner.check_records(&records)?;
+        let mut slot = lock(&self.pipeline, "ingest pipeline")?;
+        let pipeline = slot.get_or_insert_with(|| {
+            IngestPipeline::spawn(
+                &self.inner,
+                self.indexer.shards(),
+                self.inner.cfg.ingest_queue,
+            )
+        });
+        pipeline.try_submit(records).ok_or_else(|| {
+            PallasError::Busy(format!(
+                "ingest queue full ({} batches in flight)",
+                self.inner.cfg.ingest_queue
+            ))
+        })
     }
 
     /// [`Engine::ingest_async`] over a whole trace: every batch is

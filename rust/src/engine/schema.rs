@@ -25,6 +25,7 @@
 use super::error::{PallasError, Result};
 use crate::bic::query::Query;
 use crate::bic::PAD;
+use crate::substrate::json::Json;
 
 /// One named column: a contiguous block of attribute rows, one per
 /// domain value.
@@ -108,6 +109,82 @@ impl Schema {
     /// the built index corresponds to `keys()[i]`.
     pub fn keys(&self) -> Vec<i32> {
         self.cols.iter().flat_map(|c| c.values.iter().copied()).collect()
+    }
+
+    /// The schema's stable JSON form — `{"columns": [{"name", "values"},
+    /// ...]}` — used verbatim by the durable store's `ENGINE_SCHEMA.json`
+    /// sidecar and by the service tier's `create_tenant` wire command.
+    /// [`Schema::from_json`] round-trips it exactly (same column order,
+    /// same value order).
+    pub fn to_json(&self) -> Json {
+        Json::obj([(
+            "columns",
+            Json::Arr(
+                self.cols
+                    .iter()
+                    .map(|c| {
+                        Json::obj([
+                            ("name", c.name.as_str().into()),
+                            (
+                                "values",
+                                Json::Arr(
+                                    c.values
+                                        .iter()
+                                        .map(|&v| v.into())
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// Rebuild a schema from its [`Schema::to_json`] form, running the
+    /// full builder validation (duplicate names/values, reserved pad,
+    /// empty domains). [`PallasError::Config`] on a structurally wrong
+    /// document or an invalid schema.
+    pub fn from_json(doc: &Json) -> Result<Schema> {
+        let cols = doc.get("columns").and_then(Json::as_arr).ok_or_else(|| {
+            PallasError::Config(
+                "schema JSON needs a \"columns\" array".into(),
+            )
+        })?;
+        let mut b = Schema::builder();
+        for (i, c) in cols.iter().enumerate() {
+            let name = c.get("name").and_then(Json::as_str).ok_or_else(|| {
+                PallasError::Config(format!(
+                    "schema column {i} needs a string \"name\""
+                ))
+            })?;
+            let vals =
+                c.get("values").and_then(Json::as_arr).ok_or_else(|| {
+                    PallasError::Config(format!(
+                        "schema column {name:?} needs a \"values\" array"
+                    ))
+                })?;
+            let values = vals
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .filter(|f| {
+                            f.fract() == 0.0
+                                && *f >= i32::MIN as f64
+                                && *f <= i32::MAX as f64
+                        })
+                        .map(|f| f as i32)
+                        .ok_or_else(|| {
+                            PallasError::Config(format!(
+                                "schema column {name:?}: values must be \
+                                 integers"
+                            ))
+                        })
+                })
+                .collect::<Result<Vec<i32>>>()?;
+            b = b.column(name, values);
+        }
+        b.build()
     }
 
     /// `(column name, value)` of attribute row `attr` — for labeling
@@ -440,6 +517,29 @@ mod tests {
         assert!(matches!(dup_value, Err(PallasError::Config(_))));
         let pad = Schema::builder().column("a", [PAD]).build();
         assert!(matches!(pad, Err(PallasError::Config(_))));
+    }
+
+    #[test]
+    fn schema_json_round_trips() {
+        let s = schema();
+        let doc = s.to_json();
+        assert_eq!(
+            doc.render(),
+            r#"{"columns":[{"name":"city","values":[1,3,9]},{"name":"age","values":[0,7,12,30]}]}"#
+        );
+        let back = Schema::from_json(&doc).unwrap();
+        assert_eq!(back, s);
+        // from_json runs full builder validation.
+        for bad in [
+            r#"{"cols":[]}"#,
+            r#"{"columns":[{"name":"a"}]}"#,
+            r#"{"columns":[{"name":"a","values":[1.5]}]}"#,
+            r#"{"columns":[{"name":"a","values":[1,1]}]}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            let err = Schema::from_json(&doc).unwrap_err();
+            assert_eq!(err.class(), "config", "{bad} -> {err}");
+        }
     }
 
     #[test]

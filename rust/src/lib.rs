@@ -11,6 +11,7 @@ pub mod engine;
 pub mod experiments;
 pub mod power;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod store;
 pub mod substrate;

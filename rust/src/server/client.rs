@@ -1,0 +1,144 @@
+//! A blocking line-protocol client — the driver side of the service
+//! tier, used by the `bic_client` binary, the contention benchmark, and
+//! the tenant-isolation tests.
+//!
+//! Transport failures (connect, write, EOF) surface as
+//! [`PallasError::Io`]; a response that is not valid JSON is
+//! [`PallasError::Corrupt`]. *Application* failures do not become
+//! `Err`: every well-formed response — `{"ok":true,...}` and
+//! `{"ok":false,"error":...}` alike — returns `Ok(Json)`, so callers
+//! can inspect the typed wire error (`busy` retries are the caller's
+//! policy, not the transport's). Use [`protocol::response_ok`] and
+//! [`protocol::response_error_code`] to branch.
+//!
+//! [`protocol::response_ok`]: super::protocol::response_ok
+//! [`protocol::response_error_code`]: super::protocol::response_error_code
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::engine::{PallasError, Result};
+use crate::substrate::json::Json;
+
+/// One connection to a `bic_server`, issuing requests synchronously.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Render an ingest batch as the wire's `records` array.
+pub fn records_to_json(records: &[Vec<i32>]) -> Json {
+    Json::Arr(records.iter().map(|r| r.clone().into()).collect())
+}
+
+impl Client {
+    /// Connect to a server.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let writer = TcpStream::connect(addr)?;
+        // One small request per round trip: latency beats batching.
+        let _ = writer.set_nodelay(true);
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(Client { reader, writer })
+    }
+
+    /// Send one request object and read its one-line response.
+    pub fn call(&mut self, request: &Json) -> Result<Json> {
+        self.writer.write_all((request.render() + "\n").as_bytes())?;
+        let mut buf = String::new();
+        if self.reader.read_line(&mut buf)? == 0 {
+            return Err(PallasError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            )));
+        }
+        Json::parse(buf.trim()).map_err(|e| PallasError::Corrupt {
+            what: "server response",
+            detail: e,
+        })
+    }
+
+    /// `ping`; `true` when the server answered `ok`.
+    pub fn ping(&mut self) -> Result<bool> {
+        let resp = self.call(&Json::obj([("cmd", "ping".into())]))?;
+        Ok(super::protocol::response_ok(&resp))
+    }
+
+    /// `create_tenant` with a schema document and an optional config
+    /// document (both in their engine JSON forms).
+    pub fn create_tenant(
+        &mut self,
+        tenant: &str,
+        schema: &Json,
+        config: Option<&Json>,
+    ) -> Result<Json> {
+        let mut req = Json::obj([
+            ("cmd", "create_tenant".into()),
+            ("tenant", tenant.into()),
+            ("schema", schema.clone()),
+        ]);
+        if let Some(cfg) = config {
+            req.set("config", cfg.clone());
+        }
+        self.call(&req)
+    }
+
+    /// `ingest` one batch. `sync: true` waits for the applied (durable)
+    /// receipt; `sync: false` returns as soon as the batch is admitted.
+    pub fn ingest(
+        &mut self,
+        tenant: &str,
+        records: &[Vec<i32>],
+        sync: bool,
+    ) -> Result<Json> {
+        self.call(&Json::obj([
+            ("cmd", "ingest".into()),
+            ("tenant", tenant.into()),
+            ("records", records_to_json(records)),
+            ("sync", sync.into()),
+        ]))
+    }
+
+    /// `query` with a predicate document (see
+    /// [`protocol::predicate_from_json`] for the grammar).
+    ///
+    /// [`protocol::predicate_from_json`]: super::protocol::predicate_from_json
+    pub fn query(&mut self, tenant: &str, predicate: &Json) -> Result<Json> {
+        self.call(&Json::obj([
+            ("cmd", "query".into()),
+            ("tenant", tenant.into()),
+            ("predicate", predicate.clone()),
+        ]))
+    }
+
+    /// `flush` the tenant's memtable.
+    pub fn flush(&mut self, tenant: &str) -> Result<Json> {
+        self.tenant_cmd("flush", tenant)
+    }
+
+    /// `stats` for one tenant (engine + server counters).
+    pub fn stats(&mut self, tenant: &str) -> Result<Json> {
+        self.tenant_cmd("stats", tenant)
+    }
+
+    /// `scrub` the tenant's store once.
+    pub fn scrub(&mut self, tenant: &str) -> Result<Json> {
+        self.tenant_cmd("scrub", tenant)
+    }
+
+    /// `close` (flush + release) the tenant.
+    pub fn close_tenant(&mut self, tenant: &str) -> Result<Json> {
+        self.tenant_cmd("close", tenant)
+    }
+
+    /// `metrics` over every open tenant.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.call(&Json::obj([("cmd", "metrics".into())]))
+    }
+
+    fn tenant_cmd(&mut self, cmd: &str, tenant: &str) -> Result<Json> {
+        self.call(&Json::obj([
+            ("cmd", cmd.into()),
+            ("tenant", tenant.into()),
+        ]))
+    }
+}

@@ -1,0 +1,215 @@
+//! Per-connection request loop: read a line, dispatch, write a line.
+//!
+//! One thread per connection (the accept loop spawned us); blocking a
+//! connection thread on a synchronous ingest receipt is fine — what is
+//! never allowed to block is *admission*: every ingest goes through
+//! [`Engine::try_ingest_async`], so a full pipeline answers `busy` on
+//! the wire immediately instead of stalling the socket (and every other
+//! request pipelined behind it).
+//!
+//! [`Engine::try_ingest_async`]: crate::engine::Engine::try_ingest_async
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::protocol::{self, Command, WireError};
+use super::tenant::Tenant;
+use super::Shared;
+use crate::engine::{EngineConfig, Schema};
+use crate::substrate::json::Json;
+
+/// RAII decrement of the server's active-connection count — the accept
+/// loop increments *before* spawning the handler thread, so the cap
+/// check can never race past `max_conns`.
+pub(crate) struct ConnGuard(pub(crate) Arc<Shared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Serve one connection until EOF or a transport error. Each request is
+/// answered on the same connection, in order; per-tenant counters are
+/// bumped for every request that resolves its tenant.
+pub(crate) fn serve(shared: Arc<Shared>, stream: TcpStream, guard: ConnGuard) {
+    let _guard = guard;
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut writer = stream;
+    let reader = BufReader::new(read_half);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (tenant, resp) = handle_line(&shared, &line);
+        let out = resp.render() + "\n";
+        if let Some(t) = &tenant {
+            let c = &t.counters;
+            c.requests.fetch_add(1, Ordering::Relaxed);
+            c.bytes_in.fetch_add(line.len() as u64 + 1, Ordering::Relaxed);
+            c.bytes_out.fetch_add(out.len() as u64, Ordering::Relaxed);
+            if !protocol::response_ok(&resp) {
+                c.errors.fetch_add(1, Ordering::Relaxed);
+                if protocol::response_error_code(&resp) == Some("busy") {
+                    c.busy_sheds.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Parse + dispatch one line; always yields a response (parse failures
+/// become `bad-request`), plus the tenant it resolved for accounting.
+fn handle_line(shared: &Shared, line: &str) -> (Option<Arc<Tenant>>, Json) {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err((id, e)) => return (None, protocol::err_response(id.as_ref(), &e)),
+    };
+    let id = req.id;
+    let (tenant, result) = dispatch(shared, req.cmd);
+    let resp = match result {
+        Ok(payload) => protocol::ok_response(id.as_ref(), payload),
+        Err(e) => protocol::err_response(id.as_ref(), &e),
+    };
+    (tenant, resp)
+}
+
+/// Resolve `name` and run `f` against its engine, attributing the
+/// outcome to the tenant's counters either way.
+fn with_tenant(
+    shared: &Shared,
+    name: &str,
+    f: impl FnOnce(&Tenant) -> Result<Json, WireError>,
+) -> (Option<Arc<Tenant>>, Result<Json, WireError>) {
+    match shared.registry.lookup(name) {
+        Ok(t) => {
+            let r = f(&t);
+            (Some(t), r)
+        }
+        Err(e) => (None, Err(e)),
+    }
+}
+
+fn dispatch(
+    shared: &Shared,
+    cmd: Command,
+) -> (Option<Arc<Tenant>>, Result<Json, WireError>) {
+    match cmd {
+        Command::Ping => (None, Ok(Json::obj([("pong", true.into())]))),
+        Command::Metrics => (None, shared.metrics_json()),
+        Command::CreateTenant { tenant, schema, config } => {
+            let created = Schema::from_json(&schema)
+                .map_err(WireError::from)
+                .and_then(|schema| {
+                    let cfg = match &config {
+                        Some(c) => EngineConfig::from_json(c)
+                            .map_err(WireError::from)?,
+                        None => EngineConfig::default(),
+                    };
+                    shared.registry.create(&tenant, schema, cfg)
+                });
+            match created {
+                Ok(t) => {
+                    let payload =
+                        Json::obj([("created", t.name.as_str().into())]);
+                    (Some(t), Ok(payload))
+                }
+                Err(e) => (None, Err(e)),
+            }
+        }
+        Command::Ingest { tenant, records, sync } => {
+            with_tenant(shared, &tenant, move |t| {
+                // Admission, not backpressure: a full pipeline is an
+                // immediate typed `busy`, the socket never blocks on
+                // submission.
+                let ticket = t.engine.try_ingest_async(records)?;
+                if sync {
+                    let receipt = ticket.wait()?;
+                    Ok(Json::obj([
+                        ("batch", receipt.batch.into()),
+                        ("objects", receipt.objects.into()),
+                        ("total_objects", receipt.total_objects.into()),
+                        ("durable", receipt.durable.into()),
+                    ]))
+                } else {
+                    // Fire-and-forget: the ack's gate slot frees when
+                    // the pipeline delivers (and discards) the receipt.
+                    drop(ticket);
+                    Ok(Json::obj([("queued", true.into())]))
+                }
+            })
+        }
+        Command::Flush { tenant } => with_tenant(shared, &tenant, |t| {
+            let flushed = t.engine.flush()?;
+            Ok(Json::obj([(
+                "flushed",
+                match flushed {
+                    Some(n) => n.into(),
+                    None => Json::Null,
+                },
+            )]))
+        }),
+        Command::Query { tenant, predicate, matches } => {
+            with_tenant(shared, &tenant, move |t| {
+                let bm = t.engine.select(&predicate)?;
+                let mut payload = Json::obj([
+                    ("count", bm.count_ones().into()),
+                    ("objects", bm.len().into()),
+                ]);
+                if matches {
+                    payload.set(
+                        "matches",
+                        Json::Arr(
+                            bm.iter_ones()
+                                .map(|i| Json::Num(i as f64))
+                                .collect(),
+                        ),
+                    );
+                }
+                Ok(payload)
+            })
+        }
+        Command::Stats { tenant } => with_tenant(shared, &tenant, |t| {
+            Ok(Json::obj([
+                ("tenant", t.name.as_str().into()),
+                ("engine", t.engine.stats().to_json()),
+                ("server", t.counters.to_json()),
+            ]))
+        }),
+        Command::Scrub { tenant } => with_tenant(shared, &tenant, |t| {
+            let r = t.engine.scrub()?;
+            Ok(Json::obj([
+                ("segments_checked", r.segments_checked.into()),
+                ("bytes_verified", r.bytes_verified.into()),
+                (
+                    "quarantined",
+                    Json::Arr(
+                        r.quarantined
+                            .iter()
+                            .map(|s| s.as_str().into())
+                            .collect(),
+                    ),
+                ),
+                ("degraded_segments", r.degraded_segments.into()),
+                ("rows_unavailable", r.rows_unavailable.into()),
+            ]))
+        }),
+        // `close` removes the tenant from the registry, so there is no
+        // live tenant to attribute the response to.
+        Command::Close { tenant } => (
+            None,
+            shared
+                .registry
+                .close(&tenant)
+                .map(|()| Json::obj([("closed", true.into())])),
+        ),
+    }
+}

@@ -1,0 +1,301 @@
+//! Multi-tenant service tier: a line-protocol network front end over
+//! [`Engine`], `std::net` only.
+//!
+//! The paper frames the BIC as a *shared indexing service* — maximize
+//! throughput during peak hours, shed and power down off-peak — and its
+//! FPGA predecessor positions the core explicitly as an offload engine
+//! serving indexing requests for many clients. This module is that
+//! request/response boundary: one process, one listening socket, one
+//! [`Engine`] + schema + durable-store namespace per tenant
+//! (directory-per-tenant under the server root), and a thread per
+//! connection.
+//!
+//! Admission control is the peak-hours half of that story, and it is
+//! load *shedding*, not backpressure: when a tenant's bounded ingest
+//! pipeline is full, or the global connection cap is hit, the server
+//! answers a typed `busy` response immediately — it never blocks the
+//! socket and never silently drops a connection. Clients retry after
+//! backoff; the `busy_sheds` counter makes the shed rate observable per
+//! tenant.
+//!
+//! The wire protocol (newline-delimited JSON, [`protocol`]), the error
+//! surface (`{code, what, detail}` via the single
+//! [`protocol::WireError`] conversion point), the tenant namespace
+//! ([`tenant`]), and the `stats`/`metrics` JSON shapes are all frozen
+//! and documented in PERF.md §service-tier. `rust/benches/hotpath.rs`
+//! (`engine/contention`) drives N concurrent ingest+query workers
+//! against one in-process server and reports per-worker and total
+//! ops/sec.
+//!
+//! ```no_run
+//! use sotb_bic::server::{client::Client, Server};
+//! use sotb_bic::substrate::json::Json;
+//!
+//! let handle = Server::bind("/tmp/bic-root", "127.0.0.1:0", 64)?.spawn();
+//! let mut c = Client::connect(handle.local_addr())?;
+//! let schema = Json::parse(r#"{"columns":[{"name":"k","values":[1,2]}]}"#)
+//!     .map_err(sotb_bic::engine::PallasError::Config)?;
+//! c.create_tenant("a", &schema, None)?;
+//! c.ingest("a", &[vec![1], vec![2]], true)?;
+//! let p = Json::parse(r#"{"col":"k","eq":1}"#)
+//!     .map_err(sotb_bic::engine::PallasError::Config)?;
+//! let r = c.query("a", &p)?;
+//! assert_eq!(r.get("count").and_then(Json::as_f64), Some(1.0));
+//! handle.stop();
+//! # Ok::<(), sotb_bic::engine::PallasError>(())
+//! ```
+
+#![deny(missing_docs)]
+
+pub mod client;
+mod conn;
+pub mod protocol;
+mod tenant;
+
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::engine::{
+    EngineConfig, EngineStats, PallasError, Result, Schema,
+};
+use crate::substrate::json::Json;
+
+use protocol::WireError;
+use tenant::Registry;
+
+/// State shared between the accept loop and every connection thread.
+pub(crate) struct Shared {
+    pub(crate) registry: Registry,
+    /// Connections currently being served (incremented by the accept
+    /// loop *before* the handler thread spawns).
+    pub(crate) active: AtomicUsize,
+    /// Connections accepted over the server's lifetime (shed included).
+    pub(crate) connections_total: AtomicU64,
+    /// Connections shed at the cap with a `busy` response.
+    pub(crate) connections_shed: AtomicU64,
+    /// The global connection cap.
+    pub(crate) max_conns: usize,
+    /// Set by [`ServerHandle::stop`]; the accept loop exits on the next
+    /// wake-up.
+    pub(crate) stop: AtomicBool,
+}
+
+impl Shared {
+    /// The `metrics` dump: per-tenant `{engine, server}` stats for
+    /// every open tenant plus the global server counters, under one
+    /// `stats_version`.
+    pub(crate) fn metrics_json(&self) -> std::result::Result<Json, WireError> {
+        Ok(Json::obj([
+            ("stats_version", EngineStats::STATS_VERSION.into()),
+            ("tenants", self.registry.tenants_json()?),
+            (
+                "server",
+                Json::obj([
+                    (
+                        "active_connections",
+                        self.active.load(Ordering::SeqCst).into(),
+                    ),
+                    (
+                        "connections_total",
+                        self.connections_total.load(Ordering::Relaxed).into(),
+                    ),
+                    (
+                        "connections_shed",
+                        self.connections_shed.load(Ordering::Relaxed).into(),
+                    ),
+                    ("max_connections", self.max_conns.into()),
+                ]),
+            ),
+        ]))
+    }
+}
+
+/// A bound (but not yet serving) server: the listening socket plus the
+/// tenant registry. [`Server::spawn`] starts the accept loop on a
+/// background thread; [`Server::serve_forever`] runs it on the calling
+/// thread (the `bic_server` binary does this).
+pub struct Server {
+    shared: Arc<Shared>,
+    listener: TcpListener,
+}
+
+impl Server {
+    /// Bind a server over tenant namespace `root` (created if absent)
+    /// listening on `addr` (use port 0 to let the OS pick), serving at
+    /// most `max_conns` concurrent connections — the `max_conns + 1`th
+    /// client receives one `busy` line and is disconnected.
+    pub fn bind(
+        root: impl Into<PathBuf>,
+        addr: impl ToSocketAddrs,
+        max_conns: usize,
+    ) -> Result<Server> {
+        if max_conns == 0 {
+            return Err(PallasError::Config(
+                "max_conns must be >= 1".into(),
+            ));
+        }
+        let registry = Registry::new(root)?;
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            shared: Arc::new(Shared {
+                registry,
+                active: AtomicUsize::new(0),
+                connections_total: AtomicU64::new(0),
+                connections_shed: AtomicU64::new(0),
+                max_conns,
+                stop: AtomicBool::new(false),
+            }),
+            listener,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Create a tenant programmatically, with a typed schema and a full
+    /// [`EngineConfig`] — the same path as the wire `create_tenant`,
+    /// plus the knobs the wire form deliberately excludes (tests use
+    /// this to give one tenant a fault-injection VFS). The config's
+    /// `durable_path` must be unset; the server pins it inside the
+    /// tenant's directory.
+    pub fn create_tenant_with(
+        &self,
+        name: &str,
+        schema: Schema,
+        cfg: EngineConfig,
+    ) -> Result<()> {
+        create_tenant_on(&self.shared, name, schema, cfg)
+    }
+
+    /// Run the accept loop on the calling thread until
+    /// [`ServerHandle::stop`] is called from elsewhere (or forever).
+    pub fn serve_forever(self) {
+        accept_loop(self.listener, self.shared);
+    }
+
+    /// Start the accept loop on a background thread and return the
+    /// handle that controls it.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.listener.local_addr().ok();
+        let shared = Arc::clone(&self.shared);
+        let listener = self.listener;
+        let accept = std::thread::spawn(move || accept_loop(listener, shared));
+        ServerHandle { addr, shared: self.shared, accept: Some(accept) }
+    }
+}
+
+fn create_tenant_on(
+    shared: &Shared,
+    name: &str,
+    schema: Schema,
+    cfg: EngineConfig,
+) -> Result<()> {
+    shared.registry.create(name, schema, cfg).map(|_| ()).map_err(|e| {
+        PallasError::Config(format!("{}: {} ({})", e.code, e.detail, e.what))
+    })
+}
+
+/// A running server: the accept loop's controller. Dropping the handle
+/// stops the server (best effort); call [`ServerHandle::stop`] for the
+/// explicit join.
+pub struct ServerHandle {
+    addr: Option<SocketAddr>,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The address the server is listening on.
+    pub fn local_addr(&self) -> SocketAddr {
+        // The listener existed when `spawn` captured this; a server
+        // whose socket could not report its address would not be
+        // serving. Fall back to an unspecified address instead of
+        // panicking.
+        self.addr.unwrap_or_else(|| SocketAddr::from(([0, 0, 0, 0], 0)))
+    }
+
+    /// Create a tenant programmatically on the running server (see
+    /// [`Server::create_tenant_with`]).
+    pub fn create_tenant_with(
+        &self,
+        name: &str,
+        schema: Schema,
+        cfg: EngineConfig,
+    ) -> Result<()> {
+        create_tenant_on(&self.shared, name, schema, cfg)
+    }
+
+    /// The `metrics` dump, without going over the wire (tests and the
+    /// bench read it in-process).
+    pub fn metrics(&self) -> Result<Json> {
+        self.shared.metrics_json().map_err(|e| {
+            PallasError::Internal(format!("metrics: {}", e.detail))
+        })
+    }
+
+    /// Stop accepting connections and join the accept loop. Connections
+    /// already being served run to completion on their own threads;
+    /// tenant engines flush their WAL-covered state on drop.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(addr) = self.addr {
+            // Wake the blocking accept with a throwaway connection.
+            let _ = TcpStream::connect(addr);
+        }
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The accept loop: admit (spawning a handler thread) or shed with one
+/// `busy` line. Never blocks on a client: the cap check happens before
+/// the handler exists, and the shed write is one small buffered write
+/// on a fresh socket.
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        shared.connections_total.fetch_add(1, Ordering::Relaxed);
+        let active = shared.active.load(Ordering::SeqCst);
+        if active >= shared.max_conns {
+            shared.connections_shed.fetch_add(1, Ordering::Relaxed);
+            shed(stream, active, shared.max_conns);
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        let guard = conn::ConnGuard(Arc::clone(&shared));
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || conn::serve(shared, stream, guard));
+    }
+}
+
+/// Tell a capped-out client it was shed — a full, typed `busy`
+/// response on the wire, then a clean close. The client saw a healthy
+/// server say "later", not a RST.
+fn shed(mut stream: TcpStream, active: usize, cap: usize) {
+    use std::io::Write as _;
+    let resp = protocol::err_response(
+        None,
+        &WireError::busy_connections(active, cap),
+    );
+    let _ = stream.write_all((resp.render() + "\n").as_bytes());
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}

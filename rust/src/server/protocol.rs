@@ -1,0 +1,546 @@
+//! The wire grammar of the service tier, and the single place engine
+//! errors become wire errors.
+//!
+//! Framing is newline-delimited JSON: every request is one JSON object
+//! on one line, every response is one JSON object on one line. A
+//! request names its command in `cmd` and may carry a free-form `id`
+//! the response echoes verbatim (clients that pipeline use it to match
+//! responses to requests; the server answers in request order anyway).
+//!
+//! Requests (PERF.md §service-tier has the full grammar):
+//!
+//! ```text
+//! {"cmd":"ping"}
+//! {"cmd":"create_tenant","tenant":T,"schema":S,"config":C?}
+//! {"cmd":"ingest","tenant":T,"records":[[w,...],...],"sync":B?}
+//! {"cmd":"flush","tenant":T}
+//! {"cmd":"query","tenant":T,"predicate":P,"matches":B?}
+//! {"cmd":"stats","tenant":T}
+//! {"cmd":"scrub","tenant":T}
+//! {"cmd":"close","tenant":T}
+//! {"cmd":"metrics"}
+//! ```
+//!
+//! `S` is the [`Schema::to_json`] form, `C` the
+//! [`EngineConfig::to_json`](crate::engine::EngineConfig::to_json) form
+//! (minus `durable_path`, which the server owns), and `P` the predicate
+//! grammar of [`predicate_from_json`].
+//!
+//! Responses are `{"ok":true,...}` with command-specific payload
+//! fields, or `{"ok":false,"error":{"code","what","detail"}}`. The
+//! `code` values are exactly the [`PallasError::class`] names plus the
+//! two protocol-native codes [`WireError::bad_request`] (unparseable or
+//! ill-formed request) and [`WireError::unknown_tenant`]. `busy` is the
+//! admission-control shed: the request was *not* enqueued, the
+//! connection stays healthy, retry after backoff.
+//!
+//! [`Schema::to_json`]: crate::engine::Schema::to_json
+
+use crate::engine::{col, PallasError, Predicate};
+use crate::substrate::json::Json;
+
+/// A typed wire error: `{code, what, detail}`. `code` is the machine
+/// key (stable, documented in PERF.md §service-tier), `what` names the
+/// subsystem or object that failed, `detail` is human-readable.
+#[derive(Clone, Debug)]
+pub struct WireError {
+    /// Stable machine-readable class (`busy`, `ingest`, `bad-request`,
+    /// ...).
+    pub code: &'static str,
+    /// What failed (a subsystem, or for `corrupt` the object read).
+    pub what: String,
+    /// Human-readable description.
+    pub detail: String,
+}
+
+/// The single `PallasError -> WireError` conversion point: every typed
+/// engine/store error crosses the wire through this `From`, so `code`
+/// is always [`PallasError::class`] and no call site invents its own
+/// mapping.
+impl From<PallasError> for WireError {
+    fn from(e: PallasError) -> WireError {
+        let code = e.class();
+        let (what, detail) = match e {
+            PallasError::Io(io) => ("filesystem".to_string(), io.to_string()),
+            PallasError::Corrupt { what, detail } => (what.to_string(), detail),
+            PallasError::Ingest(d) => ("ingest geometry".to_string(), d),
+            PallasError::InvalidQuery(d) => ("query predicate".to_string(), d),
+            PallasError::Config(d) => ("configuration".to_string(), d),
+            PallasError::Runtime(d) => ("accelerator runtime".to_string(), d),
+            PallasError::Busy(d) => ("admission control".to_string(), d),
+            PallasError::Internal(d) => ("engine invariant".to_string(), d),
+        };
+        WireError { code, what, detail }
+    }
+}
+
+impl WireError {
+    /// A request the server could not parse or that violates the
+    /// grammar (missing fields, wrong types, unknown command). The
+    /// connection stays open; only this request is rejected.
+    pub fn bad_request(detail: impl Into<String>) -> WireError {
+        WireError {
+            code: "bad-request",
+            what: "protocol".to_string(),
+            detail: detail.into(),
+        }
+    }
+
+    /// A tenant name that exists neither in the live registry nor on
+    /// disk under the server root.
+    pub fn unknown_tenant(name: &str) -> WireError {
+        WireError {
+            code: "unknown-tenant",
+            what: "tenant registry".to_string(),
+            detail: format!("no tenant {name:?} under this server root"),
+        }
+    }
+
+    /// The connection-cap shed (same `busy` code as a full ingest
+    /// queue — both mean "healthy but at capacity, retry later").
+    pub fn busy_connections(active: usize, cap: usize) -> WireError {
+        WireError {
+            code: "busy",
+            what: "connection cap".to_string(),
+            detail: format!("{active} active connections (cap {cap})"),
+        }
+    }
+
+    /// The error's wire form.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("code", self.code.into()),
+            ("what", self.what.as_str().into()),
+            ("detail", self.detail.as_str().into()),
+        ])
+    }
+}
+
+/// One parsed request: the echoed `id` (if any) plus the command.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Free-form correlation value echoed into the response.
+    pub id: Option<Json>,
+    /// The command to execute.
+    pub cmd: Command,
+}
+
+/// Every command of the line protocol.
+#[derive(Clone, Debug)]
+pub enum Command {
+    /// Liveness probe; answers `{"ok":true,"pong":true}`.
+    Ping,
+    /// Dump engine + server stats for every *open* tenant.
+    Metrics,
+    /// Create (and open) a tenant under the server root.
+    CreateTenant {
+        /// Tenant name (`[A-Za-z0-9_-]`, at most 64 chars).
+        tenant: String,
+        /// The tenant's schema, in [`Schema::to_json`] form.
+        ///
+        /// [`Schema::to_json`]: crate::engine::Schema::to_json
+        schema: Json,
+        /// Optional engine config (JSON form, partial allowed).
+        config: Option<Json>,
+    },
+    /// Ingest one batch of records.
+    Ingest {
+        /// Target tenant.
+        tenant: String,
+        /// Records as arrays of alphabet words.
+        records: Vec<Vec<i32>>,
+        /// `true` (default): reply after the batch is applied (and
+        /// WAL-durable), echoing its receipt. `false`: reply
+        /// `{"queued":true}` as soon as the batch is admitted —
+        /// fire-and-forget, receipts are discarded.
+        sync: bool,
+    },
+    /// Flush the tenant's store memtable to a segment.
+    Flush {
+        /// Target tenant.
+        tenant: String,
+    },
+    /// Evaluate a predicate.
+    Query {
+        /// Target tenant.
+        tenant: String,
+        /// The predicate to evaluate.
+        predicate: Predicate,
+        /// Include the matching object indices (`matches` array) in the
+        /// reply, not just the count.
+        matches: bool,
+    },
+    /// Engine + server stats for one tenant.
+    Stats {
+        /// Target tenant.
+        tenant: String,
+    },
+    /// Run one scrub pass over the tenant's store.
+    Scrub {
+        /// Target tenant.
+        tenant: String,
+    },
+    /// Flush the tenant and release its engine (a later request
+    /// reopens it from disk).
+    Close {
+        /// Target tenant.
+        tenant: String,
+    },
+}
+
+fn field_str(doc: &Json, key: &str) -> Result<String, WireError> {
+    doc.get(key).and_then(Json::as_str).map(str::to_string).ok_or_else(|| {
+        WireError::bad_request(format!("{key:?} must be a string"))
+    })
+}
+
+fn field_bool(doc: &Json, key: &str, default: bool) -> Result<bool, WireError> {
+    match doc.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| {
+            WireError::bad_request(format!("{key:?} must be a boolean"))
+        }),
+    }
+}
+
+fn word(v: &Json) -> Result<i32, WireError> {
+    v.as_f64()
+        .filter(|f| {
+            f.fract() == 0.0 && *f >= i32::MIN as f64 && *f <= i32::MAX as f64
+        })
+        .map(|f| f as i32)
+        .ok_or_else(|| {
+            WireError::bad_request("record words must be integers".to_string())
+        })
+}
+
+fn field_records(doc: &Json) -> Result<Vec<Vec<i32>>, WireError> {
+    let rows = doc.get("records").and_then(Json::as_arr).ok_or_else(|| {
+        WireError::bad_request("\"records\" must be an array of arrays")
+    })?;
+    rows.iter()
+        .map(|r| {
+            r.as_arr()
+                .ok_or_else(|| {
+                    WireError::bad_request(
+                        "each record must be an array of words",
+                    )
+                })?
+                .iter()
+                .map(word)
+                .collect()
+        })
+        .collect()
+}
+
+/// Parse one request line. On failure the echoed `id` (when the line at
+/// least parsed as JSON) rides along so the error response can still
+/// correlate.
+pub fn parse_request(line: &str) -> Result<Request, (Option<Json>, WireError)> {
+    let doc = Json::parse(line.trim())
+        .map_err(|e| (None, WireError::bad_request(format!("not JSON: {e}"))))?;
+    let id = doc.get("id").cloned();
+    let fail = |e: WireError| (id.clone(), e);
+    let cmd_name = field_str(&doc, "cmd").map_err(&fail)?;
+    let tenant = || field_str(&doc, "tenant");
+    let cmd = match cmd_name.as_str() {
+        "ping" => Command::Ping,
+        "metrics" => Command::Metrics,
+        "create_tenant" => Command::CreateTenant {
+            tenant: tenant().map_err(&fail)?,
+            schema: doc
+                .get("schema")
+                .cloned()
+                .ok_or_else(|| fail(WireError::bad_request(
+                    "create_tenant needs a \"schema\" document",
+                )))?,
+            config: doc.get("config").cloned(),
+        },
+        "ingest" => Command::Ingest {
+            tenant: tenant().map_err(&fail)?,
+            records: field_records(&doc).map_err(&fail)?,
+            sync: field_bool(&doc, "sync", true).map_err(&fail)?,
+        },
+        "flush" => Command::Flush { tenant: tenant().map_err(&fail)? },
+        "query" => Command::Query {
+            tenant: tenant().map_err(&fail)?,
+            predicate: doc
+                .get("predicate")
+                .ok_or_else(|| fail(WireError::bad_request(
+                    "query needs a \"predicate\" document",
+                )))
+                .and_then(|p| predicate_from_json(p).map_err(&fail))?,
+            matches: field_bool(&doc, "matches", false).map_err(&fail)?,
+        },
+        "stats" => Command::Stats { tenant: tenant().map_err(&fail)? },
+        "scrub" => Command::Scrub { tenant: tenant().map_err(&fail)? },
+        "close" => Command::Close { tenant: tenant().map_err(&fail)? },
+        other => {
+            return Err(fail(WireError::bad_request(format!(
+                "unknown command {other:?}"
+            ))))
+        }
+    };
+    Ok(Request { id, cmd })
+}
+
+/// Parse the predicate grammar:
+///
+/// ```text
+/// {"col":C,"eq":V} {"col":C,"ne":V}
+/// {"col":C,"lt":V} {"col":C,"le":V} {"col":C,"gt":V} {"col":C,"ge":V}
+/// {"col":C,"in":[V,...]}            {"col":C,"any":true}
+/// {"and":[P,...]} {"or":[P,...]} {"not":P}
+/// {"all":true}    {"none":true}
+/// ```
+///
+/// into the typed [`Predicate`] the engine lowers and validates (so an
+/// unknown column or out-of-domain `eq` value comes back as
+/// `invalid-query`, not `bad-request`).
+pub fn predicate_from_json(doc: &Json) -> Result<Predicate, WireError> {
+    if let Some(xs) = doc.get("and") {
+        let xs = xs.as_arr().ok_or_else(|| {
+            WireError::bad_request("\"and\" takes an array of predicates")
+        })?;
+        return Ok(Predicate::And(
+            xs.iter().map(predicate_from_json).collect::<Result<_, _>>()?,
+        ));
+    }
+    if let Some(xs) = doc.get("or") {
+        let xs = xs
+            .as_arr()
+            .ok_or_else(|| {
+                WireError::bad_request("\"or\" takes an array of predicates")
+            })?;
+        return Ok(Predicate::Or(
+            xs.iter().map(predicate_from_json).collect::<Result<_, _>>()?,
+        ));
+    }
+    if let Some(x) = doc.get("not") {
+        return Ok(predicate_from_json(x)?.not());
+    }
+    if doc.get("all").is_some() {
+        return Ok(Predicate::all());
+    }
+    if doc.get("none").is_some() {
+        return Ok(Predicate::none());
+    }
+    let name = doc.get("col").and_then(Json::as_str).ok_or_else(|| {
+        WireError::bad_request(
+            "predicate needs \"col\" (or and/or/not/all/none)",
+        )
+    })?;
+    for (key, make) in [
+        ("eq", fn_eq as fn(&str, i32) -> Predicate),
+        ("ne", fn_ne),
+        ("lt", fn_lt),
+        ("le", fn_le),
+        ("gt", fn_gt),
+        ("ge", fn_ge),
+    ] {
+        if let Some(v) = doc.get(key) {
+            return Ok(make(name, word(v)?));
+        }
+    }
+    if let Some(vs) = doc.get("in") {
+        let vs = vs
+            .as_arr()
+            .ok_or_else(|| {
+                WireError::bad_request("\"in\" takes an array of values")
+            })?;
+        let values =
+            vs.iter().map(word).collect::<Result<Vec<i32>, WireError>>()?;
+        return Ok(col(name).in_set(values));
+    }
+    if doc.get("any").is_some() {
+        return Ok(col(name).any());
+    }
+    Err(WireError::bad_request(format!(
+        "column predicate {name:?} needs one of eq/ne/lt/le/gt/ge/in/any"
+    )))
+}
+
+fn fn_eq(c: &str, v: i32) -> Predicate {
+    col(c).eq(v)
+}
+fn fn_ne(c: &str, v: i32) -> Predicate {
+    col(c).ne(v)
+}
+fn fn_lt(c: &str, v: i32) -> Predicate {
+    col(c).lt(v)
+}
+fn fn_le(c: &str, v: i32) -> Predicate {
+    col(c).le(v)
+}
+fn fn_gt(c: &str, v: i32) -> Predicate {
+    col(c).gt(v)
+}
+fn fn_ge(c: &str, v: i32) -> Predicate {
+    col(c).ge(v)
+}
+
+/// Render a [`Predicate`] into the grammar [`predicate_from_json`]
+/// reads (the client/bench side of the round trip). `ne` predicates
+/// were already desugared to `not(eq)` by the builder, so they emit as
+/// `{"not":{"col":C,"eq":V}}` — the grammar accepts both spellings.
+pub fn predicate_to_json(p: &Predicate) -> Json {
+    use crate::engine::CmpOp;
+    match p {
+        Predicate::Eq { col, value } => Json::obj([
+            ("col", col.as_str().into()),
+            ("eq", (*value).into()),
+        ]),
+        Predicate::Cmp { col, op, value } => {
+            let key = match op {
+                CmpOp::Lt => "lt",
+                CmpOp::Le => "le",
+                CmpOp::Gt => "gt",
+                CmpOp::Ge => "ge",
+            };
+            Json::obj([("col", col.as_str().into()), (key, (*value).into())])
+        }
+        Predicate::In { col, values } => Json::obj([
+            ("col", col.as_str().into()),
+            ("in", values.clone().into()),
+        ]),
+        Predicate::Any { col } => {
+            Json::obj([("col", col.as_str().into()), ("any", true.into())])
+        }
+        Predicate::And(xs) => Json::obj([(
+            "and",
+            Json::Arr(xs.iter().map(predicate_to_json).collect()),
+        )]),
+        Predicate::Or(xs) => Json::obj([(
+            "or",
+            Json::Arr(xs.iter().map(predicate_to_json).collect()),
+        )]),
+        Predicate::Not(x) => Json::obj([("not", predicate_to_json(x))]),
+    }
+}
+
+/// `true` when a response reports success.
+pub fn response_ok(resp: &Json) -> bool {
+    resp.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+/// The error code of a failed response, if any.
+pub fn response_error_code(resp: &Json) -> Option<&str> {
+    resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str)
+}
+
+/// Wrap a successful payload in the response envelope (echoing `id`).
+pub fn ok_response(id: Option<&Json>, mut payload: Json) -> Json {
+    if !matches!(payload, Json::Obj(_)) {
+        payload = Json::obj([("value", payload)]);
+    }
+    payload.set("ok", true);
+    if let Some(id) = id {
+        payload.set("id", id.clone());
+    }
+    payload
+}
+
+/// Wrap a wire error in the response envelope (echoing `id`).
+pub fn err_response(id: Option<&Json>, err: &WireError) -> Json {
+    let mut resp =
+        Json::obj([("ok", false.into()), ("error", err.to_json())]);
+    if let Some(id) = id {
+        resp.set("id", id.clone());
+    }
+    resp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_parse_and_echo_ids() {
+        let r = parse_request(
+            r#"{"cmd":"ingest","tenant":"a","records":[[1,2],[3]],"id":7}"#,
+        )
+        .expect("parse");
+        assert_eq!(r.id, Some(Json::Num(7.0)));
+        match r.cmd {
+            Command::Ingest { tenant, records, sync } => {
+                assert_eq!(tenant, "a");
+                assert_eq!(records, vec![vec![1, 2], vec![3]]);
+                assert!(sync, "sync defaults to true");
+            }
+            other => panic!("wrong command: {other:?}"),
+        }
+        let (id, err) =
+            parse_request(r#"{"cmd":"warp","id":"x"}"#).unwrap_err();
+        assert_eq!(id, Some(Json::Str("x".into())));
+        assert_eq!(err.code, "bad-request");
+        let (id, err) = parse_request("not json").unwrap_err();
+        assert!(id.is_none());
+        assert_eq!(err.code, "bad-request");
+    }
+
+    #[test]
+    fn predicate_grammar_round_trips() {
+        let p = col("city")
+            .eq(3)
+            .and(col("age").ge(7).not())
+            .or(col("city").in_set([1, 9]))
+            .or(col("age").any());
+        let doc = predicate_to_json(&p);
+        let back = predicate_from_json(&doc).expect("parse");
+        assert_eq!(back, p);
+        assert_eq!(
+            predicate_from_json(&Json::parse(r#"{"all":true}"#).unwrap())
+                .expect("all"),
+            Predicate::all()
+        );
+        assert_eq!(
+            predicate_from_json(&Json::parse(r#"{"none":true}"#).unwrap())
+                .expect("none"),
+            Predicate::none()
+        );
+        // ne desugars like the builder does.
+        assert_eq!(
+            predicate_from_json(
+                &Json::parse(r#"{"col":"c","ne":4}"#).unwrap()
+            )
+            .expect("ne"),
+            col("c").ne(4)
+        );
+        for bad in [
+            r#"{"col":"c"}"#,
+            r#"{"col":"c","eq":1.5}"#,
+            r#"{"and":3}"#,
+            r#"{"zzz":1}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert_eq!(
+                predicate_from_json(&doc).unwrap_err().code,
+                "bad-request",
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_mapping_is_the_single_conversion_point() {
+        let we: WireError =
+            PallasError::Busy("ingest queue full (2 batches in flight)".into())
+                .into();
+        assert_eq!(we.code, "busy");
+        assert_eq!(we.what, "admission control");
+        let we: WireError = PallasError::Corrupt {
+            what: "segment",
+            detail: "crc mismatch".into(),
+        }
+        .into();
+        assert_eq!(we.code, "corrupt");
+        assert_eq!(we.what, "segment");
+        let resp = err_response(Some(&Json::Num(3.0)), &we);
+        assert!(!response_ok(&resp));
+        assert_eq!(response_error_code(&resp), Some("corrupt"));
+        assert_eq!(resp.get("id").and_then(Json::as_f64), Some(3.0));
+        let ok = ok_response(None, Json::obj([("count", 4u64.into())]));
+        assert!(response_ok(&ok));
+        assert_eq!(response_error_code(&ok), None);
+    }
+}

@@ -1,0 +1,263 @@
+//! Tenant registry: one [`Engine`] + schema + store namespace per
+//! tenant, directory-per-tenant under the server root.
+//!
+//! ```text
+//! <root>/<tenant>/TENANT.json   {"schema":..., "config":...}
+//! <root>/<tenant>/store/        the tenant's durable store
+//! ```
+//!
+//! `TENANT.json` is the tenant's declaration — the
+//! [`Schema::to_json`](crate::engine::Schema::to_json) and
+//! [`EngineConfig::to_json`](crate::engine::EngineConfig::to_json)
+//! forms, written atomically (tmp + rename) at `create_tenant` time.
+//! The registry opens tenants lazily: the first request naming a tenant
+//! that is on disk but not in memory reopens it from its declaration,
+//! which is also how every tenant comes back after a server restart
+//! (`ci.sh --serve` kills and restarts the server mid-session to pin
+//! this).
+//!
+//! Tenant names are restricted to `[A-Za-z0-9_-]` (at most 64 chars) so
+//! a name can never traverse outside the server root.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::protocol::WireError;
+use crate::engine::error::lock;
+use crate::engine::{
+    Engine, EngineBuilder, EngineConfig, PallasError, Schema,
+};
+use crate::substrate::json::Json;
+
+/// The tenant declaration file inside each tenant directory.
+const TENANT_FILE: &str = "TENANT.json";
+/// The durable store subdirectory inside each tenant directory.
+const STORE_DIR: &str = "store";
+
+/// Per-tenant service counters (monotonic; reset only by restart).
+#[derive(Default)]
+pub(crate) struct TenantCounters {
+    /// Requests that named this tenant (including failed ones).
+    pub requests: AtomicU64,
+    /// Requests shed with `busy` by admission control.
+    pub busy_sheds: AtomicU64,
+    /// Requests answered `ok:false` (any code, `busy` included).
+    pub errors: AtomicU64,
+    /// Request bytes received for this tenant (line lengths).
+    pub bytes_in: AtomicU64,
+    /// Response bytes sent for this tenant.
+    pub bytes_out: AtomicU64,
+}
+
+impl TenantCounters {
+    /// The counters' wire form (field names are part of the `metrics`
+    /// contract, PERF.md §service-tier).
+    pub(crate) fn to_json(&self) -> Json {
+        Json::obj([
+            ("requests", self.requests.load(Ordering::Relaxed).into()),
+            ("busy_sheds", self.busy_sheds.load(Ordering::Relaxed).into()),
+            ("errors", self.errors.load(Ordering::Relaxed).into()),
+            ("bytes_in", self.bytes_in.load(Ordering::Relaxed).into()),
+            ("bytes_out", self.bytes_out.load(Ordering::Relaxed).into()),
+        ])
+    }
+}
+
+/// One live tenant: its engine plus its service counters.
+pub(crate) struct Tenant {
+    pub(crate) name: String,
+    pub(crate) engine: Engine,
+    pub(crate) counters: TenantCounters,
+}
+
+/// The set of live tenants plus the on-disk namespace they load from.
+pub(crate) struct Registry {
+    root: PathBuf,
+    tenants: Mutex<HashMap<String, Arc<Tenant>>>,
+}
+
+/// `true` iff `name` is a safe tenant name (`[A-Za-z0-9_-]{1,64}`).
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+}
+
+fn name_err(name: &str) -> WireError {
+    WireError::bad_request(format!(
+        "invalid tenant name {name:?} (want [A-Za-z0-9_-], <= 64 chars)"
+    ))
+}
+
+/// Atomically write `text` at `path` (tmp + rename) with `std::fs` —
+/// tenant declarations live outside the store directory, so they go
+/// through the real filesystem, not the engine's VFS.
+fn write_atomic(path: &Path, text: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
+impl Registry {
+    /// Open a registry over `root` (created if absent). Tenants are not
+    /// eagerly opened — each loads on its first request.
+    pub(crate) fn new(root: impl Into<PathBuf>) -> std::io::Result<Registry> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(Registry { root, tenants: Mutex::new(HashMap::new()) })
+    }
+
+    fn tenant_dir(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Create a tenant from a typed schema + config (the programmatic
+    /// hook behind the wire command; tests use it to inject a fault VFS
+    /// into one tenant). The config's `durable_path` must be unset —
+    /// the server owns the namespace and pins it to
+    /// `<root>/<name>/store`.
+    pub(crate) fn create(
+        &self,
+        name: &str,
+        schema: Schema,
+        mut cfg: EngineConfig,
+    ) -> Result<Arc<Tenant>, WireError> {
+        if !valid_name(name) {
+            return Err(name_err(name));
+        }
+        if cfg.durable_path.is_some() {
+            return Err(PallasError::Config(
+                "tenant config must not set durable_path (the server pins \
+                 it inside the tenant's directory)"
+                    .into(),
+            )
+            .into());
+        }
+        let dir = self.tenant_dir(name);
+        let mut map = lock(&self.tenants, "tenant registry")
+            .map_err(WireError::from)?;
+        if map.contains_key(name) || dir.join(TENANT_FILE).exists() {
+            return Err(PallasError::Config(format!(
+                "tenant {name:?} already exists"
+            ))
+            .into());
+        }
+        // Persist the declaration with durable_path still unset — the
+        // store location is derived from the directory, not recorded.
+        let declaration = Json::obj([
+            ("schema", schema.to_json()),
+            ("config", cfg.to_json()),
+        ]);
+        cfg.durable_path = Some(dir.join(STORE_DIR));
+        let engine = EngineBuilder::from_config(schema, cfg)
+            .build()
+            .map_err(WireError::from)?;
+        std::fs::create_dir_all(&dir)
+            .and_then(|()| {
+                write_atomic(
+                    &dir.join(TENANT_FILE),
+                    &(declaration.render() + "\n"),
+                )
+            })
+            .map_err(|e| WireError::from(PallasError::Io(e)))?;
+        let tenant = Arc::new(Tenant {
+            name: name.to_string(),
+            engine,
+            counters: TenantCounters::default(),
+        });
+        map.insert(name.to_string(), Arc::clone(&tenant));
+        Ok(tenant)
+    }
+
+    /// Resolve a tenant: live map first, then a lazy reopen from its
+    /// on-disk declaration (the restart-recovery path). The registry
+    /// lock is held across the reopen so two connections can never
+    /// build two engines over one store.
+    pub(crate) fn lookup(&self, name: &str) -> Result<Arc<Tenant>, WireError> {
+        if !valid_name(name) {
+            return Err(name_err(name));
+        }
+        let mut map = lock(&self.tenants, "tenant registry")
+            .map_err(WireError::from)?;
+        if let Some(t) = map.get(name) {
+            return Ok(Arc::clone(t));
+        }
+        let dir = self.tenant_dir(name);
+        let decl_path = dir.join(TENANT_FILE);
+        let text = match std::fs::read_to_string(&decl_path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(WireError::unknown_tenant(name))
+            }
+            Err(e) => return Err(WireError::from(PallasError::Io(e))),
+        };
+        let corrupt = |detail: String| {
+            WireError::from(PallasError::Corrupt {
+                what: "tenant declaration",
+                detail,
+            })
+        };
+        let doc = Json::parse(text.trim())
+            .map_err(|e| corrupt(format!("{}: {e}", decl_path.display())))?;
+        let schema = doc
+            .get("schema")
+            .ok_or_else(|| {
+                corrupt(format!("{}: no \"schema\"", decl_path.display()))
+            })
+            .and_then(|s| Schema::from_json(s).map_err(WireError::from))?;
+        let mut cfg = match doc.get("config") {
+            Some(c) => EngineConfig::from_json(c).map_err(WireError::from)?,
+            None => EngineConfig::default(),
+        };
+        cfg.durable_path = Some(dir.join(STORE_DIR));
+        let engine = EngineBuilder::from_config(schema, cfg)
+            .build()
+            .map_err(WireError::from)?;
+        let tenant = Arc::new(Tenant {
+            name: name.to_string(),
+            engine,
+            counters: TenantCounters::default(),
+        });
+        map.insert(name.to_string(), Arc::clone(&tenant));
+        Ok(tenant)
+    }
+
+    /// Flush a tenant and release its engine from the live map. The
+    /// next request naming it reopens from disk. Connections that
+    /// resolved the tenant before the close finish their in-flight
+    /// requests on the released handle.
+    pub(crate) fn close(&self, name: &str) -> Result<(), WireError> {
+        if !valid_name(name) {
+            return Err(name_err(name));
+        }
+        let tenant = lock(&self.tenants, "tenant registry")
+            .map_err(WireError::from)?
+            .remove(name)
+            .ok_or_else(|| WireError::unknown_tenant(name))?;
+        tenant.engine.flush().map_err(WireError::from)?;
+        Ok(())
+    }
+
+    /// Per-tenant `{engine, server}` stats for every *open* tenant
+    /// (closed or never-requested tenants on disk are not loaded just
+    /// to be counted). Keyed by tenant name.
+    pub(crate) fn tenants_json(&self) -> Result<Json, WireError> {
+        let map = lock(&self.tenants, "tenant registry")
+            .map_err(WireError::from)?;
+        let mut out = Json::obj([]);
+        for (name, t) in map.iter() {
+            out.set(
+                name,
+                Json::obj([
+                    ("engine", t.engine.stats().to_json()),
+                    ("server", t.counters.to_json()),
+                ]),
+            );
+        }
+        Ok(out)
+    }
+}

@@ -607,3 +607,69 @@ fn planner_prefers_the_store_tier_once_segments_exist() {
     engine.close().expect("close");
     let _ = fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn stats_json_surface_is_versioned_and_stable() {
+    use sotb_bic::substrate::json::Json;
+    let dir = tmpdir("stats-json");
+    let engine =
+        builder().durable(&dir).flush_batches(2).build().expect("build");
+    let data = batches(ContentDist::Uniform, 0x5a, 4);
+    engine.ingest_batches(&data).expect("ingest");
+    engine.query(&Query::attr(0)).expect("query");
+    let stats = engine.stats();
+    // Round-trip through render/parse: the wire form, not the tree.
+    let doc = Json::parse(&stats.to_json().render()).expect("valid JSON");
+    let num =
+        |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or_else(|| {
+            panic!("stats JSON missing numeric field {k:?}")
+        });
+    assert_eq!(num("stats_version"), 1.0);
+    assert_eq!(num("attrs"), CFG.m_keys as f64);
+    assert_eq!(num("batches_ingested"), 4.0);
+    assert_eq!(num("objects"), stats.objects as f64);
+    assert_eq!(num("segments"), stats.segments as f64);
+    assert_eq!(num("queries_total"), stats.queries_total() as f64);
+    assert_eq!(num("degraded_segments"), 0.0);
+    assert_eq!(num("rows_unavailable"), 0.0);
+    assert_eq!(num("store_chunks_skipped"), stats.store_chunks_skipped as f64);
+    assert_eq!(doc.get("durable").and_then(Json::as_bool), Some(true));
+    engine.close().expect("close");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn builder_from_json_round_trips_every_knob() {
+    use sotb_bic::substrate::json::Json;
+    let doc = Json::parse(
+        r#"{"batch_records":64,"record_words":8,"ingest_queue":2,
+            "codec":"wah","shard":"never","exec":"compressed",
+            "zone_maps":false,"degraded":"serve_healthy"}"#,
+    )
+    .expect("parse");
+    let b = EngineBuilder::from_json(schema(), &doc).expect("from_json");
+    assert_eq!(b.config().ingest_queue, 2);
+    assert_eq!(b.config().codec, CodecPolicy::Forced(Codec::Wah));
+    assert_eq!(b.config().shard, ShardPolicy::Never);
+    assert_eq!(b.config().exec, ExecPolicy::Force(ExecPath::Compressed));
+    assert!(!b.config().zone_maps);
+    // The emitted form re-parses to the same config.
+    let emitted = b.config().to_json();
+    let again = EngineBuilder::from_json(schema(), &emitted).expect("again");
+    assert_eq!(again.config().to_json().render(), emitted.render());
+    // And the engine it builds works.
+    let engine = b.build().expect("build");
+    let data = batches(ContentDist::Clustered, 0x77, 2);
+    engine.ingest_batches(&data).expect("ingest");
+    assert_eq!(engine.query(&Query::attr(1)).expect("q"), {
+        let r = reference(&data);
+        r.row(1).clone()
+    });
+    // A misspelled knob is a typed config error, not a silent default.
+    let bad = Json::parse(r#"{"ingset_queue":2}"#).expect("parse");
+    assert!(matches!(
+        EngineBuilder::from_json(schema(), &bad),
+        Err(PallasError::Config(_))
+    ));
+    engine.close().expect("close");
+}

@@ -1,0 +1,535 @@
+//! Integration properties of the multi-tenant service tier
+//! (`sotb_bic::server`): wire-error shape, admission control (typed
+//! `busy`, never a blocked socket), tenant isolation under concurrent
+//! load, the `metrics` surface, restart recovery, and the connection
+//! cap.
+//!
+//! Every test runs a real server on `127.0.0.1:0` and talks to it over
+//! real sockets through [`Client`] — the same transport `bic_client`
+//! and the contention bench use.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use sotb_bic::engine::{EngineConfig, Schema};
+use sotb_bic::server::client::Client;
+use sotb_bic::server::protocol::{response_error_code, response_ok};
+use sotb_bic::server::{Server, ServerHandle};
+use sotb_bic::store::vfs::{RealVfs, Vfs, VfsFile};
+use sotb_bic::substrate::json::Json;
+
+const KEYS: [i32; 4] = [1, 2, 3, 4];
+
+fn tmproot(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("bic-server-props-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn schema() -> Schema {
+    Schema::single("k", KEYS).expect("schema")
+}
+
+fn schema_json() -> Json {
+    Json::obj([(
+        "columns",
+        Json::Arr(vec![Json::obj([
+            ("name", "k".into()),
+            ("values", KEYS.to_vec().into()),
+        ])]),
+    )])
+}
+
+fn spawn_server(root: &Path, max_conns: usize) -> ServerHandle {
+    Server::bind(root, "127.0.0.1:0", max_conns).expect("bind").spawn()
+}
+
+/// A batch of one-word records, all carrying `key`.
+fn batch_of(key: i32, n: usize) -> Vec<Vec<i32>> {
+    vec![vec![key]; n]
+}
+
+fn eq(key: i32) -> Json {
+    Json::obj([("col", "k".into()), ("eq", key.into())])
+}
+
+fn count(resp: &Json) -> f64 {
+    assert!(response_ok(resp), "query failed: {}", resp.render());
+    resp.get("count").and_then(Json::as_f64).expect("count field")
+}
+
+/// Assert a failed response carries the full `{code, what, detail}`
+/// error surface, and return the code.
+fn assert_error_shape(resp: &Json, expect_code: &str) {
+    assert!(!response_ok(resp), "expected failure: {}", resp.render());
+    let err = resp.get("error").expect("error object");
+    assert_eq!(
+        err.get("code").and_then(Json::as_str),
+        Some(expect_code),
+        "code in {}",
+        resp.render()
+    );
+    for field in ["what", "detail"] {
+        let v = err.get(field).and_then(Json::as_str).unwrap_or_default();
+        assert!(!v.is_empty(), "empty {field} in {}", resp.render());
+    }
+}
+
+// ---------------------------------------------------------------------
+// A VFS that can suspend WAL fsyncs: the deterministic way to wedge a
+// tenant's appender stage so its bounded in-flight gate fills and
+// `try_ingest_async` starts shedding.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct HoldGate {
+    held: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl HoldGate {
+    fn hold(&self) {
+        *self.held.lock().expect("gate") = true;
+    }
+
+    fn release(&self) {
+        *self.held.lock().expect("gate") = false;
+        self.cv.notify_all();
+    }
+
+    fn wait_released(&self) {
+        let mut g = self.held.lock().expect("gate");
+        while *g {
+            g = self.cv.wait(g).expect("gate");
+        }
+    }
+}
+
+/// Pass-through to [`RealVfs`], except that `sync` on WAL appenders
+/// blocks while the gate is held.
+#[derive(Debug)]
+struct HoldVfs {
+    inner: RealVfs,
+    gate: Arc<HoldGate>,
+}
+
+struct HoldFile {
+    inner: Box<dyn VfsFile>,
+    gate: Option<Arc<HoldGate>>,
+}
+
+impl VfsFile for HoldFile {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        self.inner.write_all(buf)
+    }
+
+    fn sync(&mut self) -> std::io::Result<()> {
+        if let Some(g) = &self.gate {
+            g.wait_released();
+        }
+        self.inner.sync()
+    }
+}
+
+impl Vfs for HoldVfs {
+    fn create_dir_all(&self, dir: &Path) -> std::io::Result<()> {
+        self.inner.create_dir_all(dir)
+    }
+
+    fn create(&self, path: &Path) -> std::io::Result<Box<dyn VfsFile>> {
+        self.inner.create(path)
+    }
+
+    fn open_append(&self, path: &Path) -> std::io::Result<Box<dyn VfsFile>> {
+        let is_wal = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.starts_with("wal-"));
+        Ok(Box::new(HoldFile {
+            inner: self.inner.open_append(path)?,
+            gate: is_wal.then(|| Arc::clone(&self.gate)),
+        }))
+    }
+
+    fn open_truncated(
+        &self,
+        path: &Path,
+        len: u64,
+    ) -> std::io::Result<Box<dyn VfsFile>> {
+        self.inner.open_truncated(path, len)
+    }
+
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        self.inner.read(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        self.inner.rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> std::io::Result<()> {
+        self.inner.remove_file(path)
+    }
+
+    fn list(&self, dir: &Path) -> std::io::Result<Vec<String>> {
+        self.inner.list(dir)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> std::io::Result<()> {
+        self.inner.sync_dir(dir)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire-error surface
+// ---------------------------------------------------------------------
+
+/// Every failure on the wire is `{ok:false, error:{code, what,
+/// detail}}` with the documented codes — including lines that never
+/// parse into a request, which still get a full typed response instead
+/// of a dropped connection.
+#[test]
+fn wire_errors_carry_code_what_detail() {
+    let root = tmproot("errors");
+    let handle = spawn_server(&root, 8);
+    let mut c = Client::connect(handle.local_addr()).expect("connect");
+
+    // Unknown tenant.
+    let resp = c.query("ghost", &eq(1)).expect("transport");
+    assert_error_shape(&resp, "unknown-tenant");
+    // Structural problems: missing cmd, unknown cmd, bad tenant name.
+    let resp =
+        c.call(&Json::obj([("id", 9.into())])).expect("transport");
+    assert_error_shape(&resp, "bad-request");
+    assert_eq!(resp.get("id").and_then(Json::as_f64), Some(9.0), "id echo");
+    let resp =
+        c.call(&Json::obj([("cmd", "explode".into())])).expect("transport");
+    assert_error_shape(&resp, "bad-request");
+    let resp = c
+        .create_tenant("no/slashes", &schema_json(), None)
+        .expect("transport");
+    assert_error_shape(&resp, "bad-request");
+
+    // Engine-typed failures map through the single conversion point.
+    let resp =
+        c.create_tenant("t", &schema_json(), None).expect("transport");
+    assert!(response_ok(&resp), "create: {}", resp.render());
+    let resp = c.create_tenant("t", &schema_json(), None).expect("transport");
+    assert_error_shape(&resp, "config"); // duplicate tenant
+    let resp = c
+        .ingest("t", &batch_of(1, 99), true)
+        .expect("transport");
+    assert_error_shape(&resp, "ingest"); // batch exceeds capacity
+    let resp = c
+        .query("t", &Json::obj([("col", "nope".into()), ("eq", 1.into())]))
+        .expect("transport");
+    assert_error_shape(&resp, "invalid-query");
+
+    // Raw garbage on the socket: still one typed line back.
+    let mut raw =
+        TcpStream::connect(handle.local_addr()).expect("raw connect");
+    raw.write_all(b"{this is not json\n").expect("write");
+    let mut line = String::new();
+    BufReader::new(raw.try_clone().expect("clone"))
+        .read_line(&mut line)
+        .expect("read");
+    let resp = Json::parse(line.trim()).expect("valid json response");
+    assert_error_shape(&resp, "bad-request");
+
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------
+// Admission control
+// ---------------------------------------------------------------------
+
+/// A tenant whose WAL is wedged fills its 1-slot in-flight gate; the
+/// next ingest gets a typed `busy` *immediately* on a connection that
+/// stays fully usable, while an independent tenant keeps ingesting
+/// durably. Releasing the WAL drains the gate and the tenant recovers.
+#[test]
+fn full_queue_sheds_busy_while_other_tenant_ingests() {
+    let root = tmproot("busy");
+    let handle = spawn_server(&root, 8);
+    let gate = Arc::new(HoldGate::default());
+    let cfg = EngineConfig {
+        ingest_queue: 1,
+        flush_batches: 0, // manual flush only: nothing else touches disk
+        vfs: Arc::new(HoldVfs {
+            inner: RealVfs,
+            gate: Arc::clone(&gate),
+        }),
+        ..EngineConfig::default()
+    };
+    handle.create_tenant_with("a", schema(), cfg).expect("tenant a");
+    let mut c = Client::connect(handle.local_addr()).expect("connect");
+    let resp = c.create_tenant("b", &schema_json(), None).expect("transport");
+    assert!(response_ok(&resp), "create b: {}", resp.render());
+
+    gate.hold();
+    // First async batch is admitted and occupies the only slot (its
+    // receipt cannot be delivered while the WAL sync is held).
+    let resp = c.ingest("a", &batch_of(1, 2), false).expect("transport");
+    assert!(response_ok(&resp), "admit: {}", resp.render());
+    assert_eq!(resp.get("queued").and_then(Json::as_bool), Some(true));
+    // Second batch: typed busy, immediately — not a stalled socket, not
+    // a dropped connection.
+    let resp = c.ingest("a", &batch_of(2, 2), false).expect("transport");
+    assert_error_shape(&resp, "busy");
+    // The same connection still serves everything else.
+    assert!(c.ping().expect("transport"), "connection wedged by busy");
+    for _ in 0..3 {
+        let resp = c.ingest("b", &batch_of(3, 2), true).expect("transport");
+        assert!(response_ok(&resp), "tenant b: {}", resp.render());
+        assert_eq!(
+            resp.get("durable").and_then(Json::as_bool),
+            Some(true),
+            "b stays durable while a is wedged"
+        );
+    }
+    // The shed is visible in a's server counters.
+    let stats = c.stats("a").expect("transport");
+    assert!(response_ok(&stats), "stats: {}", stats.render());
+    let sheds = stats
+        .get("server")
+        .and_then(|s| s.get("busy_sheds"))
+        .and_then(Json::as_f64)
+        .expect("busy_sheds");
+    assert!(sheds >= 1.0, "busy_sheds = {sheds}");
+
+    gate.release();
+    // The wedged batch drains; the tenant accepts ingest again (a short
+    // busy tail is legal while the slot frees).
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let resp = c.ingest("a", &batch_of(1, 2), true).expect("transport");
+        if response_ok(&resp) {
+            break;
+        }
+        assert_eq!(response_error_code(&resp), Some("busy"));
+        assert!(
+            std::time::Instant::now() < deadline,
+            "tenant a never recovered after release"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // Both batches of key 1 (the queued one and the retried one) landed.
+    let resp = c.query("a", &eq(1)).expect("transport");
+    assert_eq!(count(&resp), 4.0);
+    let resp = c.query("b", &eq(3)).expect("transport");
+    assert_eq!(count(&resp), 6.0);
+
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// At the connection cap the accept loop sheds with one full typed
+/// `busy` line and a clean close — the capped-out client never hangs.
+#[test]
+fn connection_cap_sheds_with_typed_busy_line() {
+    let root = tmproot("cap");
+    let handle = spawn_server(&root, 1);
+    let mut first = Client::connect(handle.local_addr()).expect("first");
+    assert!(first.ping().expect("transport"), "first connection serves");
+    // The cap is taken; the next connection gets the busy line up
+    // front, without sending anything.
+    let second =
+        TcpStream::connect(handle.local_addr()).expect("second connect");
+    second
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("timeout");
+    let mut line = String::new();
+    BufReader::new(second).read_line(&mut line).expect("read busy line");
+    let resp = Json::parse(line.trim()).expect("valid json");
+    assert_error_shape(&resp, "busy");
+    // The admitted connection was never perturbed.
+    assert!(first.ping().expect("transport"));
+    drop(first);
+    // The slot frees; a later client is admitted normally.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut retry =
+            Client::connect(handle.local_addr()).expect("reconnect");
+        match retry.ping() {
+            Ok(true) => break,
+            _ => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "slot never freed"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------
+// Tenant isolation
+// ---------------------------------------------------------------------
+
+/// Tenant a's maintenance (flush, compaction, scrub, close) never
+/// perturbs tenant b: b ingests concurrently throughout and every
+/// record lands exactly once.
+#[test]
+fn maintenance_on_one_tenant_never_perturbs_another() {
+    let root = tmproot("isolation");
+    let handle = spawn_server(&root, 8);
+    let addr = handle.local_addr();
+    let mut c = Client::connect(addr).expect("connect");
+    // Aggressive maintenance on a: flush every 2 batches, compact in
+    // the foreground whenever more than 2 segments are live.
+    let acfg = Json::obj([
+        ("flush_batches", 2.into()),
+        ("max_segments", 2.into()),
+        ("compaction", "foreground".into()),
+    ]);
+    let resp =
+        c.create_tenant("a", &schema_json(), Some(&acfg)).expect("transport");
+    assert!(response_ok(&resp), "create a: {}", resp.render());
+    let resp = c.create_tenant("b", &schema_json(), None).expect("transport");
+    assert!(response_ok(&resp), "create b: {}", resp.render());
+
+    const B_BATCHES: usize = 40;
+    let writer = std::thread::spawn(move || -> Result<(), String> {
+        let mut w = Client::connect(addr).map_err(|e| e.to_string())?;
+        for i in 0..B_BATCHES {
+            let key = KEYS[i % KEYS.len()];
+            let resp = w
+                .ingest("b", &batch_of(key, 4), true)
+                .map_err(|e| e.to_string())?;
+            if !response_ok(&resp) {
+                return Err(format!("b ingest {i}: {}", resp.render()));
+            }
+        }
+        Ok(())
+    });
+    // Meanwhile: churn a through its whole maintenance surface.
+    for round in 0..6 {
+        let key = KEYS[round % KEYS.len()];
+        let resp = c.ingest("a", &batch_of(key, 4), true).expect("transport");
+        assert!(response_ok(&resp), "a ingest: {}", resp.render());
+        let resp = c.flush("a").expect("transport");
+        assert!(response_ok(&resp), "a flush: {}", resp.render());
+        let resp = c.scrub("a").expect("transport");
+        assert!(response_ok(&resp), "a scrub: {}", resp.render());
+        assert_eq!(
+            resp.get("quarantined").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(0),
+            "a scrub quarantined segments"
+        );
+    }
+    let resp = c.close_tenant("a").expect("transport");
+    assert!(response_ok(&resp), "a close: {}", resp.render());
+    writer.join().expect("writer thread").expect("b ingest clean");
+
+    // b: every batch landed exactly once, none lost, none duplicated.
+    let per_key = (B_BATCHES / KEYS.len() * 4) as f64;
+    for key in KEYS {
+        let resp = c.query("b", &eq(key)).expect("transport");
+        assert_eq!(count(&resp), per_key, "b key {key}");
+    }
+    // a reopens lazily (close released it) with its own data intact —
+    // 6 rounds of 4 records cycling keys 1..=4: keys 1,2 got 2 rounds.
+    let resp = c.query("a", &eq(1)).expect("transport");
+    assert_eq!(count(&resp), 8.0, "a key 1");
+    let resp = c.query("a", &eq(4)).expect("transport");
+    assert_eq!(count(&resp), 4.0, "a key 4");
+
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------
+// Metrics + restart
+// ---------------------------------------------------------------------
+
+/// `metrics` is valid JSON with the versioned per-tenant engine stats
+/// and server counters; tenants survive a full server restart (the
+/// registry reopens them lazily from their on-disk declarations).
+#[test]
+fn metrics_surface_and_restart_reopen() {
+    let root = tmproot("metrics");
+    let handle = spawn_server(&root, 8);
+    let addr = handle.local_addr();
+    let mut c = Client::connect(addr).expect("connect");
+    let resp = c.create_tenant("t", &schema_json(), None).expect("transport");
+    assert!(response_ok(&resp), "create: {}", resp.render());
+    for i in 0..5 {
+        let resp = c
+            .ingest("t", &batch_of(KEYS[i % KEYS.len()], 3), true)
+            .expect("transport");
+        assert!(response_ok(&resp), "ingest: {}", resp.render());
+    }
+
+    let m = c.metrics().expect("transport");
+    assert!(response_ok(&m), "metrics: {}", m.render());
+    assert_eq!(
+        m.get("stats_version").and_then(Json::as_f64),
+        Some(1.0),
+        "stats_version"
+    );
+    let t = m
+        .get("tenants")
+        .and_then(|ts| ts.get("t"))
+        .expect("tenant t in metrics");
+    let engine = t.get("engine").expect("engine stats");
+    // The versioned EngineStats fields, by their frozen wire names.
+    for field in [
+        "stats_version",
+        "batches_ingested",
+        "objects",
+        "attrs",
+        "queries_total",
+        "segments",
+        "durable",
+    ] {
+        assert!(
+            engine.get(field).is_some(),
+            "engine.{field} missing in {}",
+            engine.render()
+        );
+    }
+    assert_eq!(engine.get("batches_ingested").and_then(Json::as_f64), Some(5.0));
+    let server = t.get("server").expect("server counters");
+    assert!(
+        server.get("requests").and_then(Json::as_f64).unwrap_or(0.0) >= 6.0,
+        "requests counted: {}",
+        server.render()
+    );
+    let global = m.get("server").expect("global server block");
+    assert!(
+        global.get("active_connections").and_then(Json::as_f64).is_some()
+            && global.get("max_connections").and_then(Json::as_f64)
+                == Some(8.0),
+        "global counters: {}",
+        global.render()
+    );
+    // The in-process dump (what the bench reads) matches the wire shape.
+    let inproc = handle.metrics().expect("in-process metrics");
+    assert!(inproc.get("tenants").and_then(|ts| ts.get("t")).is_some());
+
+    // Kill the server, start a fresh one over the same root: the tenant
+    // reopens lazily from TENANT.json and every record is still there.
+    drop(c);
+    handle.stop();
+    let handle = spawn_server(&root, 8);
+    let mut c = Client::connect(handle.local_addr()).expect("reconnect");
+    let resp = c.query("t", &eq(KEYS[0])).expect("transport");
+    // 5 batches cycling 4 keys: key 1 carried batches 0 and 4.
+    assert_eq!(count(&resp), 6.0, "key 1 after restart");
+    let resp = c.query("t", &eq(KEYS[1])).expect("transport");
+    assert_eq!(count(&resp), 3.0, "key 2 after restart");
+    // Unknown tenants still answer typed errors after restart.
+    let resp = c.query("ghost", &eq(1)).expect("transport");
+    assert_error_shape(&resp, "unknown-tenant");
+
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
