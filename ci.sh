@@ -17,6 +17,11 @@
 #                   fleets), then kill the server, restart it over the
 #                   same root, and re-query everything (PERF.md
 #                   §service-tier).
+#   ci.sh --obs     observability smoke: spawn bic_server, hammer a
+#                   telemetry-collecting tenant, then assert the whole
+#                   surface end to end (metrics quantiles nonzero,
+#                   Prometheus text versioned, explain/slowlog/trace
+#                   round-trips — PERF.md §observability).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -63,6 +68,35 @@ if [[ "${1:-}" == "--serve" ]]; then
     exit 0
 fi
 
+if [[ "${1:-}" == "--obs" ]]; then
+    echo "== obs-smoke: cargo build --release --bins =="
+    cargo build --release --bins
+    root=$(mktemp -d)
+    server_pid=""
+    cleanup() {
+        [[ -n "$server_pid" ]] && kill "$server_pid" 2>/dev/null || true
+        rm -rf "$root"
+    }
+    trap cleanup EXIT
+    echo "== obs-smoke: start bic_server =="
+    target/release/bic_server --root "$root" --addr 127.0.0.1:0 &
+    server_pid=$!
+    for _ in $(seq 100); do
+        [[ -s "$root/ADDR" ]] && break
+        sleep 0.1
+    done
+    [[ -s "$root/ADDR" ]] || { echo "server never wrote ADDR"; exit 1; }
+    addr=$(<"$root/ADDR")
+    echo "   bic_server at $addr (pid $server_pid, root $root)"
+    echo "== obs-smoke: hammer a telemetry-collecting tenant =="
+    target/release/bic_client hammer --addr "$addr" --tenant obs \
+        --workers 4 --iters 16 --telemetry
+    echo "== obs-smoke: metrics quantiles + explain/slowlog/trace =="
+    target/release/bic_client obscheck --addr "$addr" --tenant obs
+    echo "== ci.sh --obs OK =="
+    exit 0
+fi
+
 if [[ "${1:-}" == "--chaos" ]]; then
     echo "== chaos: cargo build --release =="
     cargo build --release --tests --bins
@@ -91,9 +125,10 @@ if [[ "${1:-}" == "--bench" ]]; then
     BENCH_SMOKE=1 cargo bench --bench hotpath
     echo "== bench-smoke: compression ablation =="
     BENCH_SMOKE=1 cargo bench --bench ablations
-    # The pipelined-ingest and pruned-query pairs must be present in the
-    # emitted results (they run inside the hotpath bench above).
-    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query engine/contention; do
+    # The pipelined-ingest and pruned-query pairs, the contention case,
+    # and the telemetry-overhead twin must all be present in the emitted
+    # results (they run inside the hotpath bench above).
+    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query engine/query_telemetry engine/contention; do
         grep -q "\"$bench_case\"" BENCH_hotpath.json \
             || { echo "missing bench case $bench_case in BENCH_hotpath.json"; exit 1; }
     done

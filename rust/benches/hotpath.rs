@@ -384,6 +384,55 @@ fn main() {
             noskip_stats.store_row_bytes_read
         );
         drop(qengine_noskip);
+        // Telemetry-on twin of `engine/query_pruned`: the same store
+        // reopened with histograms + stage traces live. Comparing its
+        // mean against `engine/query_pruned` is the instrumentation
+        // overhead (the disabled path must stay within ~2% of the
+        // seed; the enabled path pays one clock read + a few relaxed
+        // atomics per query). The counter asserts pin that telemetry
+        // actually recorded — a silently dead histogram would make the
+        // "overhead" number meaningless.
+        let qengine_telem = EngineBuilder::new(
+            Schema::single("byte", 0..ecfg.m_keys as i32).expect("schema"),
+        )
+        .batch_records(ecfg.n_records)
+        .record_words(ecfg.w_words)
+        .durable(&qdir)
+        .flush_batches(12)
+        .telemetry(true)
+        .build()
+        .expect("reopen with telemetry");
+        assert_eq!(
+            qengine_telem.query(&sq).expect("query"),
+            pin,
+            "telemetry on must not change bits"
+        );
+        results.push(
+            bench("engine/query_telemetry")
+                .bytes(index_bytes)
+                .run(|| qengine_telem.query(&sq).unwrap()),
+        );
+        let telem = qengine_telem.telemetry().expect("telemetry handle");
+        let recorded: u64 = telem.query.iter().map(|h| h.count()).sum();
+        assert!(recorded > 0, "query histogram recorded nothing");
+        assert!(
+            telem.query_bytes.count() > 0,
+            "query_bytes histogram recorded nothing"
+        );
+        let snap = telem
+            .query
+            .iter()
+            .map(|h| h.snapshot())
+            .max_by_key(|s| s.count)
+            .expect("four tiers");
+        println!(
+            "telemetry: {recorded} queries recorded, busiest tier \
+             p50={} p99={} max={} cycles",
+            snap.quantile(0.5),
+            snap.quantile(0.99),
+            snap.max
+        );
+        drop(qengine_telem);
         // Full lifecycle: build -> ingest -> flush -> query -> close.
         let mut e2e_iter = 0u64;
         results.push(bench("engine/e2e").bytes(input_bytes).run(|| {
@@ -416,6 +465,8 @@ fn main() {
         use std::sync::atomic::{AtomicU64, Ordering};
         use std::time::Instant;
 
+        use sotb_bic::bic::clock;
+        use sotb_bic::obs::Histogram;
         use sotb_bic::server::client::Client;
         use sotb_bic::server::protocol::{response_error_code, response_ok};
         use sotb_bic::server::Server;
@@ -455,17 +506,25 @@ fn main() {
             Json::obj([("col", "k".into()), ("eq", 3.into())]);
         let total_ops = (WORKERS * rounds * 2) as u64;
         let busy_retries = AtomicU64::new(0);
+        // Per-op wall latency across every worker (busy retries
+        // included): the histogram's atomic buckets make it shareable
+        // by reference, and its quantiles land in the JSON case under
+        // `extra` so the perf trajectory tracks tail latency, not just
+        // the mean.
+        let latency = Histogram::new();
         let barrier = std::sync::Barrier::new(WORKERS + 1);
         let mut sample_times: Vec<f64> = Vec::with_capacity(nsamples);
         std::thread::scope(|s| {
             for _ in 0..WORKERS {
                 let (barrier, busy) = (&barrier, &busy_retries);
                 let (batch, predicate) = (&batch, &predicate);
+                let latency = &latency;
                 s.spawn(move || {
                     let mut c = Client::connect(addr).expect("worker");
                     for _ in 0..nsamples {
                         barrier.wait();
                         for _ in 0..rounds {
+                            let t0 = Instant::now();
                             loop {
                                 let r = c
                                     .ingest("bench", batch, true)
@@ -482,10 +541,13 @@ fn main() {
                                 busy.fetch_add(1, Ordering::Relaxed);
                                 std::thread::yield_now();
                             }
+                            latency.record(clock::to_cycles(t0.elapsed()));
+                            let t0 = Instant::now();
                             let r = c
                                 .query("bench", predicate)
                                 .expect("query transport");
                             assert!(response_ok(&r), "query: {}", r.render());
+                            latency.record(clock::to_cycles(t0.elapsed()));
                         }
                         barrier.wait();
                     }
@@ -500,22 +562,34 @@ fn main() {
         });
         let per_op: Vec<f64> =
             sample_times.iter().map(|t| t / total_ops as f64).collect();
+        let lat = latency.snapshot();
         let contention = BenchResult {
             name: "engine/contention".into(),
             per_iter: Summary::of(&per_op),
             iters_per_sample: total_ops,
             // Bytes in per op pair, averaged over the ingest+query mix.
             bytes_per_iter: Some((64 * 8 * 4) / 2),
+            extra: Some(Json::obj([
+                ("lat_p50_ns", lat.quantile(0.5).into()),
+                ("lat_p90_ns", lat.quantile(0.9).into()),
+                ("lat_p99_ns", lat.quantile(0.99).into()),
+                ("lat_max_ns", lat.max.into()),
+                ("lat_count", lat.count.into()),
+            ])),
         };
         println!("{}", contention.line());
         let mean_round = sample_times.iter().sum::<f64>()
             / sample_times.len().max(1) as f64;
         println!(
             "contention: {WORKERS} workers x {rounds} rounds, \
-             {:.0} ops/sec/worker, {:.0} ops/sec total, {} busy retries",
+             {:.0} ops/sec/worker, {:.0} ops/sec total, {} busy retries, \
+             lat p50={} p99={} max={} us",
             (rounds * 2) as f64 / mean_round,
             total_ops as f64 / mean_round,
-            busy_retries.load(Ordering::Relaxed)
+            busy_retries.load(Ordering::Relaxed),
+            lat.quantile(0.5) / 1_000,
+            lat.quantile(0.99) / 1_000,
+            lat.max / 1_000,
         );
         results.push(contention);
         drop(admin);

@@ -1,0 +1,52 @@
+//! Reference cycle stamping for telemetry.
+//!
+//! The paper charges everything in cycles (162.9 pJ/cycle at 41 MHz);
+//! the production engine needs one monotonic stamp all telemetry shares
+//! so stage durations and event timestamps are directly comparable to
+//! the sim side's cycle accounting. This module pins the *nominal
+//! reference clock* at 1 GHz: one cycle == one nanosecond of host
+//! monotonic time, counted from process start. Converting to the
+//! paper's 41 MHz silicon clock (or any other) is a pure scale factor
+//! applied at analysis time, never at capture time.
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// The process-wide epoch every stamp is relative to.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic reference cycles (1 GHz nominal — nanoseconds) since
+/// process start. The first call pins the epoch.
+#[inline]
+pub fn cycles() -> u64 {
+    to_cycles(epoch().elapsed())
+}
+
+/// A duration in reference cycles (saturating at `u64::MAX`, which is
+/// ~584 years at 1 GHz).
+#[inline]
+pub fn to_cycles(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_are_monotone() {
+        let a = cycles();
+        let b = cycles();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn durations_convert_to_nanos() {
+        assert_eq!(to_cycles(Duration::from_nanos(7)), 7);
+        assert_eq!(to_cycles(Duration::from_micros(3)), 3_000);
+        assert_eq!(to_cycles(Duration::MAX), u64::MAX);
+    }
+}

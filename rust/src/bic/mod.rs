@@ -10,6 +10,8 @@
 //! - [`query`] — multi-dimensional query engine (Fig. 1 use case), with a
 //!   selectivity-ordered planner over compressed rows;
 //! - [`wah`] / [`roaring`] — row compressors;
+//! - [`clock`] — the nominal 1 GHz reference cycle stamp shared by the
+//!   telemetry layer (`crate::obs`);
 //! - [`codec`] — codec-polymorphic rows ([`CodecBitmap`]) and the
 //!   adaptively compressed index ([`CompressedIndex`]) the planner
 //!   executes on.
@@ -20,6 +22,7 @@
 pub mod bitmap;
 pub mod buffer;
 pub mod cam;
+pub mod clock;
 pub mod codec;
 pub mod core;
 pub mod query;

@@ -2,11 +2,12 @@
 //! `ci.sh --serve` and by hand.
 //!
 //! ```text
-//! bic_client ping   --addr HOST:PORT
-//! bic_client smoke  --addr HOST:PORT [--tenant NAME]
-//! bic_client verify --addr HOST:PORT [--tenant NAME]
-//! bic_client hammer --addr HOST:PORT [--tenant NAME]
-//!                   [--workers N] [--iters K]
+//! bic_client ping     --addr HOST:PORT
+//! bic_client smoke    --addr HOST:PORT [--tenant NAME]
+//! bic_client verify   --addr HOST:PORT [--tenant NAME]
+//! bic_client hammer   --addr HOST:PORT [--tenant NAME]
+//!                     [--workers N] [--iters K] [--telemetry]
+//! bic_client obscheck --addr HOST:PORT [--tenant NAME]
 //! ```
 //!
 //! `smoke` creates a tenant and ingests a fixed deterministic data set;
@@ -14,11 +15,19 @@
 //! running `smoke`, killing the server, restarting it, and running
 //! `verify` pins crash recovery plus lazy tenant reopen end to end.
 //! `hammer` drives N concurrent ingest+query workers over one socket
-//! each and reports per-worker and total ops/sec (`busy` responses are
-//! retried after backoff and counted, never fatal).
+//! each and reports per-worker ops/sec *and latency percentiles*
+//! (p50/p99/max, measured client-side into a mergeable histogram;
+//! `busy` responses are retried after backoff and counted, never
+//! fatal). With `--telemetry` the tenant is created collecting
+//! telemetry, so the server-side quantiles are populated too.
+//! `obscheck` asserts the observability surface end to end: `metrics`
+//! exposes nonzero per-tenant quantiles and the Prometheus text,
+//! `explain` round-trips with `analyze`, and `slowlog`/`trace` answer.
 
 use std::process::ExitCode;
 
+use sotb_bic::bic::clock;
+use sotb_bic::obs::{HistSnapshot, Histogram};
 use sotb_bic::server::client::Client;
 use sotb_bic::server::protocol::{response_error_code, response_ok};
 use sotb_bic::substrate::cli::Args;
@@ -53,10 +62,13 @@ fn run() -> Result<(), String> {
         Some("hammer") => {
             let workers = args.get_parsed("workers", 4usize)?;
             let iters = args.get_parsed("iters", 32usize)?;
-            hammer(&addr, &tenant, workers, iters)
+            let telemetry = args.get("telemetry").is_some();
+            hammer(&addr, &tenant, workers, iters, telemetry)
         }
+        Some("obscheck") => obscheck(&addr, &tenant),
         other => Err(format!(
-            "unknown subcommand {other:?}; expected ping|smoke|verify|hammer"
+            "unknown subcommand {other:?}; expected \
+             ping|smoke|verify|hammer|obscheck"
         )),
     }
 }
@@ -215,6 +227,7 @@ fn hammer(
     tenant: &str,
     workers: usize,
     iters: usize,
+    telemetry: bool,
 ) -> Result<(), String> {
     let mut c = connect(addr)?;
     let schema = Json::obj([(
@@ -226,7 +239,8 @@ fn hammer(
     )]);
     // Racing `hammer` after `smoke` is fine: an existing tenant is a
     // config error here, not a failure.
-    if let Ok(resp) = c.create_tenant(tenant, &schema, None) {
+    let cfg = telemetry.then(|| Json::obj([("telemetry", true.into())]));
+    if let Ok(resp) = c.create_tenant(tenant, &schema, cfg.as_ref()) {
         if !response_ok(&resp)
             && response_error_code(&resp) != Some("config")
         {
@@ -247,38 +261,53 @@ fn hammer(
     let elapsed = start.elapsed().as_secs_f64().max(1e-9);
     let mut total_ops = 0u64;
     let mut total_busy = 0u64;
+    let mut total_lat = HistSnapshot::default();
     for (w, r) in results.into_iter().enumerate() {
-        let (ops, busy) = r
+        let (ops, busy, lat) = r
             .map_err(|_| format!("worker {w} panicked"))?
             .map_err(|e| format!("worker {w}: {e}"))?;
         println!(
-            "worker {w}: {ops} ops, {busy} busy retries, {:.0} ops/sec",
-            ops as f64 / elapsed
+            "worker {w}: {ops} ops, {busy} busy retries, {:.0} ops/sec, \
+             lat p50={} p99={} max={} us",
+            ops as f64 / elapsed,
+            lat.quantile(0.5) / 1_000,
+            lat.quantile(0.99) / 1_000,
+            lat.max / 1_000,
         );
         total_ops += ops;
         total_busy += busy;
+        total_lat.merge(&lat);
     }
     println!(
         "HAMMER OK workers={workers} total_ops={total_ops} \
-         busy_retries={total_busy} total_ops_per_sec={:.0}",
-        total_ops as f64 / elapsed
+         busy_retries={total_busy} total_ops_per_sec={:.0} \
+         lat_p50_us={} lat_p99_us={} lat_max_us={}",
+        total_ops as f64 / elapsed,
+        total_lat.quantile(0.5) / 1_000,
+        total_lat.quantile(0.99) / 1_000,
+        total_lat.max / 1_000,
     );
     Ok(())
 }
 
 /// One hammer worker: `iters` rounds of (sync ingest + query) on its
-/// own connection; `busy` answers back off and retry.
+/// own connection; `busy` answers back off and retry. Per-op wall
+/// latency (busy retries included — queueing is part of the latency a
+/// client observes) lands in a histogram whose snapshot merges into the
+/// run total.
 fn hammer_worker(
     addr: &str,
     tenant: &str,
     w: usize,
     iters: usize,
-) -> Result<(u64, u64), String> {
+) -> Result<(u64, u64, HistSnapshot), String> {
     let mut c = connect(addr)?;
     let mut ops = 0u64;
     let mut busy = 0u64;
+    let lat = Histogram::new();
     for i in 0..iters {
         let batch = smoke_batch(w * iters + i);
+        let t0 = std::time::Instant::now();
         loop {
             let resp = c
                 .ingest(tenant, &batch, true)
@@ -293,12 +322,108 @@ fn hammer_worker(
             }
             expect_ok("ingest", resp)?;
         }
+        lat.record(clock::to_cycles(t0.elapsed()));
         ops += 1;
+        let t0 = std::time::Instant::now();
         let resp = c
             .query(tenant, &eq_predicate(KEYS[i % KEYS.len()]))
             .map_err(|e| format!("query: {e}"))?;
         expect_ok("query", resp)?;
+        lat.record(clock::to_cycles(t0.elapsed()));
         ops += 1;
     }
-    Ok((ops, busy))
+    Ok((ops, busy, lat.snapshot()))
+}
+
+/// Assert the observability surface end to end against a tenant that
+/// was hammered with `--telemetry`: `metrics` carries nonzero
+/// per-tenant quantiles plus the Prometheus text, `explain` round-trips
+/// (with `analyze` attaching measured counters), and `slowlog`/`trace`
+/// answer without `telemetry-off`.
+fn obscheck(addr: &str, tenant: &str) -> Result<(), String> {
+    let mut c = connect(addr)?;
+
+    // metrics: per-tenant telemetry quantiles present and nonzero.
+    let metrics = c.metrics().map_err(|e| format!("metrics: {e}"))?;
+    let metrics = expect_ok("metrics", metrics)?;
+    let telem = metrics
+        .get("tenants")
+        .and_then(|t| t.get(tenant))
+        .and_then(|t| t.get("telemetry"))
+        .ok_or_else(|| {
+            format!("metrics: tenants.{tenant}.telemetry missing")
+        })?;
+    for channel in ["ingest_ack", "query"] {
+        let h = telem.get(channel).ok_or_else(|| {
+            format!("metrics: telemetry.{channel} missing")
+        })?;
+        // `query` is keyed by tier; take the busiest one.
+        let h = if channel == "query" {
+            match h {
+                Json::Obj(map) => map
+                    .values()
+                    .max_by_key(|t| {
+                        t.get("count")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0) as u64
+                    })
+                    .ok_or_else(|| "metrics: query has no tiers".to_string())?,
+                _ => return Err("metrics: telemetry.query not an object".into()),
+            }
+        } else {
+            h
+        };
+        let get = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        if get("count") <= 0.0 || get("p50") <= 0.0 || get("p99") <= 0.0 {
+            return Err(format!(
+                "metrics: telemetry.{channel} quantiles not populated \
+                 (count={} p50={} p99={}); hammer with --telemetry first",
+                get("count"),
+                get("p50"),
+                get("p99")
+            ));
+        }
+    }
+    let prom = metrics
+        .get("prometheus")
+        .and_then(Json::as_str)
+        .ok_or("metrics: prometheus text missing")?;
+    if !prom.contains("# bic_metrics_version") {
+        return Err("metrics: prometheus text lacks version header".into());
+    }
+    if !prom.contains("bic_ingest_ack_cycles") {
+        return Err("metrics: prometheus text lacks histogram series".into());
+    }
+
+    // explain: round-trips and reports a tier; analyze attaches actuals.
+    let resp = c
+        .explain(tenant, &eq_predicate(KEYS[0]), true)
+        .map_err(|e| format!("explain: {e}"))?;
+    let resp = expect_ok("explain", resp)?;
+    let explain = resp.get("explain").ok_or("explain: no report")?;
+    if explain.get("tier").and_then(Json::as_str).is_none() {
+        return Err("explain: no tier in report".into());
+    }
+    if explain.get("actual").is_none() {
+        return Err("explain: analyze=true but no actual section".into());
+    }
+
+    // slowlog + trace: answer (telemetry on), slowlog nonempty after a
+    // hammer run.
+    let resp = c.slowlog(tenant).map_err(|e| format!("slowlog: {e}"))?;
+    let resp = expect_ok("slowlog", resp)?;
+    let entries = resp
+        .get("slowlog")
+        .and_then(Json::as_arr)
+        .ok_or("slowlog: no entries array")?;
+    if entries.is_empty() {
+        return Err("slowlog: empty after a hammer run".into());
+    }
+    let resp = c.trace(tenant).map_err(|e| format!("trace: {e}"))?;
+    let resp = expect_ok("trace", resp)?;
+    if resp.get("events").and_then(Json::as_arr).is_none() {
+        return Err("trace: no events array".into());
+    }
+    println!("OBSCHECK OK tenant={tenant}");
+    Ok(())
 }

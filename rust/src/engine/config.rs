@@ -99,6 +99,10 @@ pub struct EngineConfig {
     /// Background scrubbing cadence for the durable store (`None`, the
     /// default, scrubs only on [`scrub`](crate::engine::Engine::scrub)).
     pub scrub_interval: Option<Duration>,
+    /// Collect telemetry (latency histograms, stage traces, the slow
+    /// log — see [`crate::obs`]). Off by default: the disabled path is
+    /// a `None` branch with no clock reads.
+    pub telemetry: bool,
     /// The filesystem the durable store runs on — [`RealVfs`] in
     /// production; a fault-injecting
     /// [`FaultVfs`](crate::store::vfs::FaultVfs) under test.
@@ -123,6 +127,7 @@ impl Default for EngineConfig {
             ingest_queue: 64,
             degraded: DegradedPolicy::default(),
             scrub_interval: None,
+            telemetry: false,
             vfs: Arc::new(RealVfs),
         }
     }
@@ -162,8 +167,9 @@ impl EngineConfig {
     /// (`"auto"|"raw"|"compressed"|"sharded"|"store"`), `zone_maps`,
     /// `group_commit_window_us`, `ingest_queue`, `degraded`
     /// (`"fail_closed"|"serve_healthy"`), `scrub_interval_ms`
-    /// (number or `null`). Durations serialize at the resolution their
-    /// suffix names; sub-resolution remainders truncate.
+    /// (number or `null`), `telemetry` (boolean). Durations serialize
+    /// at the resolution their suffix names; sub-resolution remainders
+    /// truncate.
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("batch_records", self.batch_records.into()),
@@ -237,6 +243,7 @@ impl EngineConfig {
                     None => Json::Null,
                 },
             ),
+            ("telemetry", self.telemetry.into()),
         ])
     }
 
@@ -369,6 +376,14 @@ impl EngineConfig {
                         _ => Some(Duration::from_millis(uint(v, key)?)),
                     }
                 }
+                "telemetry" => {
+                    cfg.telemetry = v.as_bool().ok_or_else(|| {
+                        PallasError::Config(
+                            "config key \"telemetry\": expected a boolean"
+                                .into(),
+                        )
+                    })?
+                }
                 other => {
                     return Err(PallasError::Config(format!(
                         "unknown engine config key {other:?}"
@@ -411,6 +426,7 @@ mod tests {
             ingest_queue: 2,
             degraded: DegradedPolicy::ServeHealthy,
             scrub_interval: Some(Duration::from_millis(40)),
+            telemetry: true,
             vfs: Arc::new(RealVfs),
         };
         let doc = cfg.to_json();
@@ -430,6 +446,7 @@ mod tests {
         assert_eq!(back.ingest_queue, 2);
         assert_eq!(back.degraded, DegradedPolicy::ServeHealthy);
         assert_eq!(back.scrub_interval, Some(Duration::from_millis(40)));
+        assert!(back.telemetry);
     }
 
     #[test]
@@ -455,6 +472,7 @@ mod tests {
             r#"{"workers":1.5}"#,
             r#"{"compaction":{"backgroud_ms":5}}"#,
             r#"{"exec":"gpu"}"#,
+            r#"{"telemetry":3}"#,
             r#"[1,2]"#,
         ] {
             let doc = Json::parse(bad).unwrap();

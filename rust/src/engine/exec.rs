@@ -155,6 +155,91 @@ fn est_card(chunks: &[RowChunk<'_>], attr: usize) -> u64 {
         .sum()
 }
 
+/// Predict [`eval_chunks_with`]'s touch accounting per chunk without
+/// reading a single row: the recursion mirrors the evaluator arm for
+/// arm, consulting only zone maps and serialized row sizes. `per[k]`
+/// accumulates chunk `k`'s share — this is what the `explain` command
+/// renders as per-chunk skip verdicts.
+///
+/// The prediction equals the measured [`EvalStats`] exactly whenever no
+/// `acc.is_zero()` short-circuit fires during the real evaluation
+/// (pure-positive conjunctions, `Or` queries, any query whose
+/// accumulator never empties mid-walk). When a short-circuit does fire
+/// the real evaluator stops early, so the prediction is an upper bound
+/// on rows folded.
+pub(crate) fn predict_chunks(
+    chunks: &[RowChunk<'_>],
+    q: &Query,
+    per: &mut [EvalStats],
+) {
+    debug_assert_eq!(per.len(), chunks.len());
+    match q {
+        Query::Attr(i) => predict_row_touch(chunks, *i, per),
+        Query::Not(inner) => predict_chunks(chunks, inner, per),
+        Query::Or(xs) => {
+            for x in xs {
+                if let Query::Attr(i) = x {
+                    predict_row_touch(chunks, *i, per);
+                } else {
+                    predict_chunks(chunks, x, per);
+                }
+            }
+        }
+        Query::And(xs) => {
+            // The same split as the evaluator. The cardinality sort is
+            // irrelevant here: every positive leaf folds once per
+            // non-skipped chunk regardless of order.
+            let mut pos: Vec<usize> = Vec::new();
+            let mut neg: Vec<usize> = Vec::new();
+            let mut complex: Vec<&Query> = Vec::new();
+            for x in xs {
+                match x {
+                    Query::Attr(i) => pos.push(*i),
+                    Query::Not(inner) => match **inner {
+                        Query::Attr(i) => neg.push(i),
+                        _ => complex.push(x),
+                    },
+                    other => complex.push(other),
+                }
+            }
+            if !pos.is_empty() {
+                for (k, c) in chunks.iter().enumerate() {
+                    if pos.iter().any(|&a| c.known_zero(a)) {
+                        per[k].chunks_skipped += 1;
+                        continue;
+                    }
+                    for &a in &pos {
+                        per[k].fold(&c.rows[a]);
+                    }
+                }
+            }
+            for &i in &neg {
+                predict_row_touch(chunks, i, per);
+            }
+            for x in complex {
+                predict_chunks(chunks, x, per);
+            }
+        }
+    }
+}
+
+/// Shared prediction accounting for [`or_row_into`] /
+/// [`and_not_row_into`]: both fold the row everywhere the zone cannot
+/// prove it zero.
+fn predict_row_touch(
+    chunks: &[RowChunk<'_>],
+    attr: usize,
+    per: &mut [EvalStats],
+) {
+    for (k, c) in chunks.iter().enumerate() {
+        if c.known_zero(attr) {
+            per[k].chunks_skipped += 1;
+        } else {
+            per[k].fold(&c.rows[attr]);
+        }
+    }
+}
+
 /// Evaluate `q` over the chunk-tiled index. Attribute ranges must have
 /// been validated by the caller (all referenced attrs < row count).
 pub(crate) fn eval_chunks(
@@ -411,5 +496,33 @@ mod tests {
         assert!(out.is_zero());
         assert_eq!(stats.rows_folded, 0, "no row is ever read");
         assert_eq!(stats.chunks_skipped, 3, "every chunk window skipped");
+
+        // Prediction mirrors measurement on queries whose accumulator
+        // never empties mid-walk (no short-circuit): summed per-chunk
+        // predictions equal the measured totals, chunk for chunk.
+        let no_short_circuit = [
+            Query::attr(0).and(Query::attr(1)),
+            Query::attr(0).and(Query::attr(3)),
+            Query::attr(2).or(Query::attr(5)),
+            Query::Or(vec![
+                Query::attr(1),
+                Query::attr(2).and(Query::attr(5)),
+            ]),
+        ];
+        for q in &no_short_circuit {
+            let mut measured = EvalStats::default();
+            eval_chunks_with(&chunks, n, q, &mut measured);
+            let mut per = vec![EvalStats::default(); chunks.len()];
+            predict_chunks(&chunks, q, &mut per);
+            let (mut folded, mut bytes, mut skipped) = (0u64, 0u64, 0u64);
+            for p in &per {
+                folded += p.rows_folded;
+                bytes += p.row_bytes;
+                skipped += p.chunks_skipped;
+            }
+            assert_eq!(folded, measured.rows_folded, "{q:?}");
+            assert_eq!(bytes, measured.row_bytes, "{q:?}");
+            assert_eq!(skipped, measured.chunks_skipped, "{q:?}");
+        }
     }
 }

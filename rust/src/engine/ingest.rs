@@ -51,11 +51,14 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use super::error::{PallasError, Result};
 use super::{Inner, IngestReceipt};
+use crate::bic::clock;
 use crate::bic::codec::CompressedIndex;
 use crate::bic::BicCore;
+use crate::obs::{Telemetry, TraceOp, TraceStage};
 
 /// The end-to-end in-flight bound: how many submitted batches may be
 /// anywhere in the pipeline (queue, encode, reorder, appender) before
@@ -114,6 +117,9 @@ impl Drop for GateToken {
 pub(crate) struct Ack {
     done: Sender<Result<IngestReceipt>>,
     _token: Option<GateToken>,
+    /// Submission stamp for the end-to-end ack-latency histogram;
+    /// `None` with telemetry off (no clock read on the hot path).
+    pub(crate) submitted: Option<Instant>,
 }
 
 impl Ack {
@@ -161,7 +167,9 @@ struct Job {
 /// never stalls on a gap) and resolves its ticket with an error.
 struct Reorder {
     next: u64,
-    ready: BTreeMap<u64, (Option<CompressedIndex>, Ack)>,
+    /// The optional `Instant` stamps when the encoded batch entered the
+    /// buffer (telemetry only: the reorder-wait stage duration).
+    ready: BTreeMap<u64, (Option<CompressedIndex>, Ack, Option<Instant>)>,
     live_encoders: usize,
 }
 
@@ -173,6 +181,9 @@ pub(super) struct IngestPipeline {
     next_seq: u64,
     gate: Arc<InflightGate>,
     threads: Vec<JoinHandle<()>>,
+    /// The engine's telemetry block (shared, not owned): submission
+    /// stamps and the queue-wait stage events originate here.
+    obs: Option<Arc<Telemetry>>,
 }
 
 impl IngestPipeline {
@@ -233,6 +244,7 @@ impl IngestPipeline {
                     // sequence gap (the appender would stall on it and
                     // every later ticket with it): catch it, file the
                     // slot as failed, and rebuild the core.
+                    let t0 = inner.obs.as_ref().map(|_| Instant::now());
                     let encoded = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
                             let bi = core.index(&job.records, &inner.keys);
@@ -246,10 +258,24 @@ impl IngestPipeline {
                             None
                         }
                     };
+                    let enqueued =
+                        if let (Some(t), Some(t0)) =
+                            (inner.obs.as_deref(), t0)
+                        {
+                            t.ring.push(
+                                TraceOp::Ingest,
+                                TraceStage::Encode,
+                                clock::to_cycles(t0.elapsed()),
+                                job.records.len() as u64,
+                            );
+                            Some(Instant::now())
+                        } else {
+                            None
+                        };
                     let (lock, cv) = &*reorder;
                     let mut g =
                         lock.lock().unwrap_or_else(PoisonError::into_inner);
-                    g.ready.insert(job.seq, (slot, job.done));
+                    g.ready.insert(job.seq, (slot, job.done, enqueued));
                     cv.notify_all();
                 }
             }));
@@ -274,7 +300,17 @@ impl IngestPipeline {
                         // with an error in sequence position, so acks
                         // stay ordered around it.
                         let mut group = Vec::new();
-                        for (slot, done) in run {
+                        for (slot, done, enqueued) in run {
+                            if let (Some(t), Some(t0)) =
+                                (inner.obs.as_deref(), enqueued)
+                            {
+                                t.ring.push(
+                                    TraceOp::Ingest,
+                                    TraceStage::Reorder,
+                                    clock::to_cycles(t0.elapsed()),
+                                    0,
+                                );
+                            }
                             match slot {
                                 Some(ci) => group.push((ci, done)),
                                 None => {
@@ -307,13 +343,28 @@ impl IngestPipeline {
                 }
             }));
         }
-        IngestPipeline { tx: Some(tx), next_seq: 0, gate, threads }
+        IngestPipeline {
+            tx: Some(tx),
+            next_seq: 0,
+            gate,
+            threads,
+            obs: inner.obs.clone(),
+        }
     }
 
     /// Enqueue one validated batch; blocks while `ingest_queue` batches
     /// are already in flight (backpressure).
     pub(super) fn submit(&mut self, records: Vec<Vec<i32>>) -> IngestTicket {
+        let t0 = self.obs.as_ref().map(|_| Instant::now());
         let token = self.gate.acquire();
+        if let (Some(t), Some(t0)) = (self.obs.as_deref(), t0) {
+            t.ring.push(
+                TraceOp::Ingest,
+                TraceStage::QueueWait,
+                clock::to_cycles(t0.elapsed()),
+                0,
+            );
+        }
         self.dispatch(records, token)
     }
 
@@ -348,7 +399,11 @@ impl IngestPipeline {
             let _ = tx.send(Job {
                 seq,
                 records,
-                done: Ack { done, _token: Some(token) },
+                done: Ack {
+                    done,
+                    _token: Some(token),
+                    submitted: self.obs.as_ref().map(|_| Instant::now()),
+                },
             });
         }
         IngestTicket { rx }

@@ -61,13 +61,18 @@ pub use snapshot::Snapshot;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::bic::bitmap::{Bitmap, BitmapIndex};
+use crate::bic::clock;
 use crate::bic::codec::{CodecBitmap, CompressedIndex};
 use crate::bic::query::{Query, QueryError};
 use crate::bic::{BicConfig, BicCore};
 use crate::coordinator::sharding::ShardedIndexer;
+use crate::obs::{
+    ActualRun, ChunkVerdict, ExplainReport, FoldStats, SlowEntry, Telemetry,
+    TraceEvent, TraceOp, TraceStage,
+};
 use crate::store::compaction::{CompactionPolicy, Compactor};
 use crate::store::{manifest, Scrubber, Store, StoreConfig, Vfs};
 use crate::substrate::json::Json;
@@ -244,6 +249,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Collect telemetry: per-stage latency histograms ([`crate::obs`]),
+    /// the stage-trace ring, the slow-query log, and measured
+    /// [`Engine::explain`] accounting. Off by default; when off every
+    /// recording site is a `None` branch with no clock reads and no
+    /// atomics (the overhead bench in `benches/hotpath.rs` pins this).
+    pub fn telemetry(mut self, on: bool) -> Self {
+        self.cfg.telemetry = on;
+        self
+    }
+
     /// Run all durable-store I/O through `vfs`. The default is the real
     /// filesystem ([`crate::store::RealVfs`]); tests inject a
     /// [`FaultVfs`](crate::store::vfs::FaultVfs) here to rehearse
@@ -303,6 +318,7 @@ impl EngineBuilder {
         };
         let mut compactor = None;
         let mut scrubber = None;
+        let obs = cfg.telemetry.then(|| Arc::new(Telemetry::new()));
         let backend = match &cfg.durable_path {
             Some(path) => {
                 let scfg = StoreConfig {
@@ -314,6 +330,7 @@ impl EngineBuilder {
                     group_window: cfg.group_commit_window,
                     zone_pruning: cfg.zone_maps,
                     degraded: cfg.degraded,
+                    telemetry: obs.clone(),
                     vfs: Arc::clone(&cfg.vfs),
                 };
                 let store = if manifest::exists(path) {
@@ -416,6 +433,7 @@ impl EngineBuilder {
                 cards: Mutex::new(None),
                 counters: Mutex::new(Counters::default()),
                 next_batch: AtomicU64::new(0),
+                obs,
             }),
             indexer,
             compactor,
@@ -486,13 +504,29 @@ pub struct EngineStats {
     /// [`DegradedPolicy::ServeHealthy`] query cannot see (they read as
     /// zeros).
     pub rows_unavailable: usize,
+    /// Completed scrub passes over the durable store (on-demand +
+    /// background).
+    pub scrub_passes: u64,
+    /// Segment bytes re-read and re-verified by those passes.
+    pub scrub_bytes_verified: u64,
+    /// Completed compaction merge rounds (foreground + background).
+    pub compaction_rounds: u64,
+    /// Segment bytes written by compaction merges (a subset of
+    /// [`segment_bytes_written`](EngineStats::segment_bytes_written)).
+    pub compaction_bytes_written: u64,
+    /// Telemetry (histograms, traces, slow log) is enabled.
+    pub telemetry: bool,
 }
 
 impl EngineStats {
     /// Version of the JSON stats surface emitted by
-    /// [`EngineStats::to_json`]. Bump only when a field is renamed or
-    /// removed; adding fields is backward-compatible and does not bump.
-    pub const STATS_VERSION: u64 = 1;
+    /// [`EngineStats::to_json`]. Version 2 *added* the maintenance
+    /// counters (`scrub_passes`, `scrub_bytes_verified`,
+    /// `compaction_rounds`, `compaction_bytes_written`) and the
+    /// `telemetry` flag; no version-1 field was renamed or removed, so
+    /// consumers that parse by name keep working across the bump
+    /// (`rust/tests/engine_props.rs` pins both shapes).
+    pub const STATS_VERSION: u64 = 2;
 
     /// Queries served across all tiers.
     pub fn queries_total(&self) -> u64 {
@@ -532,6 +566,14 @@ impl EngineStats {
             ("store_chunks_skipped", self.store_chunks_skipped.into()),
             ("degraded_segments", self.degraded_segments.into()),
             ("rows_unavailable", self.rows_unavailable.into()),
+            ("scrub_passes", self.scrub_passes.into()),
+            ("scrub_bytes_verified", self.scrub_bytes_verified.into()),
+            ("compaction_rounds", self.compaction_rounds.into()),
+            (
+                "compaction_bytes_written",
+                self.compaction_bytes_written.into(),
+            ),
+            ("telemetry", self.telemetry.into()),
         ])
     }
 }
@@ -591,6 +633,9 @@ pub(crate) struct Inner {
     cards: Mutex<Option<Arc<Vec<u64>>>>,
     counters: Mutex<Counters>,
     next_batch: AtomicU64,
+    /// The telemetry block when `cfg.telemetry` is set; `None` keeps
+    /// every recording site a branch with no clock reads.
+    pub(crate) obs: Option<Arc<Telemetry>>,
 }
 
 impl Inner {
@@ -650,10 +695,33 @@ impl Inner {
     /// one fsync, instead of the `k` serial fsyncs of per-batch
     /// appends. On an error the durably-acknowledged prefix keeps its
     /// receipts' meaning (they were waited before the error returns).
+    /// Record sync-path ingest acknowledgment latency: every batch of
+    /// the group became durable (or visible, on the memory backend) at
+    /// the same commit, so each records the same end-to-end duration.
+    fn note_group_acked(
+        &self,
+        t0: Option<Instant>,
+        receipts: &[IngestReceipt],
+    ) {
+        let (Some(t), Some(t0)) = (self.obs.as_deref(), t0) else {
+            return;
+        };
+        if receipts.is_empty() {
+            return;
+        }
+        let dur = clock::to_cycles(t0.elapsed());
+        for _ in receipts {
+            t.ingest_ack.record(dur);
+        }
+        let objects: u64 = receipts.iter().map(|r| r.objects as u64).sum();
+        t.ring.push(TraceOp::Ingest, TraceStage::Append, dur, objects);
+    }
+
     fn append_group(
         &self,
         encoded: Vec<CompressedIndex>,
     ) -> Result<Vec<IngestReceipt>> {
+        let t0 = self.obs.as_ref().map(|_| Instant::now());
         match &self.backend {
             Backend::Durable(store) => {
                 let mut acked = Vec::with_capacity(encoded.len());
@@ -697,6 +765,7 @@ impl Inner {
                     ticket.wait()?;
                     receipts.push(receipt);
                 }
+                self.note_group_acked(t0, &receipts);
                 match first_err {
                     Some(e) => Err(e),
                     None => Ok(receipts),
@@ -722,6 +791,7 @@ impl Inner {
                         .collect()
                 };
                 self.invalidate_views();
+                self.note_group_acked(t0, &receipts);
                 Ok(receipts)
             }
         }
@@ -733,6 +803,8 @@ impl Inner {
     /// wait leads one WAL group commit covering the whole run. Each
     /// batch's result is delivered through its `done` channel.
     pub(crate) fn apply_run(&self, run: Vec<(CompressedIndex, Ack)>) {
+        let t0 = self.obs.as_ref().map(|_| Instant::now());
+        let batches = run.len() as u64;
         match &self.backend {
             Backend::Durable(store) => {
                 let mut acked = Vec::with_capacity(run.len());
@@ -781,8 +853,16 @@ impl Inner {
                 for (ticket, receipt, done) in acked {
                     let result =
                         ticket.wait().map(|()| receipt).map_err(Into::into);
+                    if result.is_ok() {
+                        if let (Some(t), Some(s)) =
+                            (self.obs.as_deref(), done.submitted)
+                        {
+                            t.ingest_ack.record(clock::to_cycles(s.elapsed()));
+                        }
+                    }
                     done.send(result);
                 }
+                self.note_run_applied(t0, batches);
             }
             Backend::Memory(mem) => {
                 // Stale views must be invalidated before any ack goes
@@ -814,9 +894,28 @@ impl Inner {
                 }
                 self.invalidate_views();
                 for (receipt, done) in acked {
+                    if let (Some(t), Some(s)) =
+                        (self.obs.as_deref(), done.submitted)
+                    {
+                        t.ingest_ack.record(clock::to_cycles(s.elapsed()));
+                    }
                     done.send(Ok(receipt));
                 }
+                self.note_run_applied(t0, batches);
             }
+        }
+    }
+
+    /// Trace the async appender's apply: one `Append` stage event per
+    /// contiguous run (lock + WAL submits + group-commit waits).
+    fn note_run_applied(&self, t0: Option<Instant>, batches: u64) {
+        if let (Some(t), Some(t0)) = (self.obs.as_deref(), t0) {
+            t.ring.push(
+                TraceOp::Ingest,
+                TraceStage::Append,
+                clock::to_cycles(t0.elapsed()),
+                batches,
+            );
         }
     }
 
@@ -1249,7 +1348,16 @@ impl Engine {
     /// tier returns a bit-identical object bitmap.
     pub fn query(&self, q: &Query) -> Result<Bitmap> {
         self.validate(q)?;
+        let t0 = self.inner.obs.as_ref().map(|_| Instant::now());
         let plan = self.plan(q);
+        if let (Some(t), Some(t0)) = (self.inner.obs.as_deref(), t0) {
+            t.ring.push(
+                TraceOp::Query,
+                TraceStage::Plan,
+                clock::to_cycles(t0.elapsed()),
+                0,
+            );
+        }
         self.run(q, plan.path)
     }
 
@@ -1266,8 +1374,120 @@ impl Engine {
         self.query(&p.lower(&self.inner.schema)?)
     }
 
+    /// Explain what [`Engine::select`] would do with `p`: the planner's
+    /// recorded rule walk (every rule considered, in table order, with
+    /// what it saw), the chosen tier, the cost estimate, and per-chunk
+    /// zone-map skip verdicts predicted without reading a single row.
+    /// With `analyze` the query also runs for real and the report
+    /// carries the measured fold accounting, match count, and duration
+    /// next to the prediction — predicted equals measured whenever the
+    /// evaluator's empty-accumulator short-circuit never fires
+    /// (`rust/tests/obs_props.rs` pins this differentially).
+    ///
+    /// Available with telemetry off: explain reads only plans, zone
+    /// maps, and row metadata, so it costs nothing on the hot path.
+    pub fn explain(
+        &self,
+        p: &Predicate,
+        analyze: bool,
+    ) -> Result<ExplainReport> {
+        let q = p.lower(&self.inner.schema)?;
+        self.validate(&q)?;
+        let inputs = self.plan_inputs(&q);
+        let (plan, rules) =
+            planner::plan_trace(self.inner.cfg.exec, &inputs);
+        let pinned = self.inner.pin();
+        let views = pinned.views();
+        let mut per = vec![EvalStats::default(); views.len()];
+        exec::predict_chunks(&views, &q, &mut per);
+        let nsegs = pinned.segs.len();
+        let mut predicted = FoldStats::default();
+        let mut chunks = Vec::with_capacity(views.len());
+        for (k, (c, s)) in views.iter().zip(&per).enumerate() {
+            predicted.rows_folded += s.rows_folded;
+            predicted.row_bytes += s.row_bytes;
+            predicted.chunks_skipped += s.chunks_skipped;
+            chunks.push(ChunkVerdict {
+                base: c.base,
+                nbits: c.rows.first().map_or(0, CodecBitmap::len),
+                kind: if k < nsegs { "segment" } else { "memtable" },
+                zoned: c.zone.is_some(),
+                skip: s.rows_folded == 0 && s.chunks_skipped > 0,
+                rows_folded: s.rows_folded,
+                row_bytes: s.row_bytes,
+                windows_skipped: s.chunks_skipped,
+            });
+        }
+        drop(views);
+        let actual = if analyze {
+            let t0 = Instant::now();
+            let (bm, stats) = self.run_with_stats(&q, plan.path)?;
+            Some(ActualRun {
+                stats: fold_stats(&stats),
+                count: bm.count_ones(),
+                dur_cycles: clock::to_cycles(t0.elapsed()),
+            })
+        } else {
+            None
+        };
+        Ok(ExplainReport {
+            tier: plan.path.label(),
+            reason: plan.reason,
+            est_cost: inputs.est_cost as u64,
+            rules,
+            chunks,
+            predicted,
+            actual,
+        })
+    }
+
+    /// The live telemetry block, when [`EngineBuilder::telemetry`] was
+    /// enabled — `None` otherwise (a channel condition, not an error).
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.inner.obs.as_deref()
+    }
+
+    /// Exposition JSON for every telemetry channel: one histogram
+    /// summary per channel with the per-tier query histograms keyed by
+    /// tier label. `None` when telemetry is off.
+    pub fn telemetry_json(&self) -> Option<Json> {
+        self.inner
+            .obs
+            .as_ref()
+            .map(|t| t.to_json(ExecPath::ALL.map(ExecPath::label)))
+    }
+
+    /// Drain the stage-trace ring: events published since the previous
+    /// drain, oldest first, as a JSON array. Draining never stalls
+    /// writers (the ring is seqlock-style; see
+    /// [`TraceRing`](crate::obs::TraceRing)). `None` when telemetry is
+    /// off.
+    pub fn trace_json(&self) -> Option<Json> {
+        self.inner.obs.as_ref().map(|t| {
+            Json::Arr(t.ring.drain().iter().map(TraceEvent::to_json).collect())
+        })
+    }
+
+    /// The slow-query log, slowest first, as a JSON array. `None` when
+    /// telemetry is off.
+    pub fn slowlog_json(&self) -> Option<Json> {
+        self.inner.obs.as_ref().map(|t| t.slowlog.to_json())
+    }
+
     fn run(&self, q: &Query, path: ExecPath) -> Result<Bitmap> {
+        Ok(self.run_with_stats(q, path)?.0)
+    }
+
+    /// [`Engine::run`] returning the evaluation's fold accounting too
+    /// (populated on the store tier; zero elsewhere) — what
+    /// [`Engine::explain`] compares its prediction against.
+    fn run_with_stats(
+        &self,
+        q: &Query,
+        path: ExecPath,
+    ) -> Result<(Bitmap, EvalStats)> {
         self.check_degraded()?;
+        let t0 = self.inner.obs.as_ref().map(|_| Instant::now());
         let m = self.num_attrs();
         let mut fold = EvalStats::default();
         let out = match path {
@@ -1328,7 +1548,32 @@ impl Engine {
         counters.fold.row_bytes += fold.row_bytes;
         counters.fold.chunks_skipped += fold.chunks_skipped;
         drop(counters);
-        Ok(out)
+        if let (Some(t), Some(t0)) = (self.inner.obs.as_deref(), t0) {
+            let dur = clock::to_cycles(t0.elapsed());
+            t.query[slot].record(dur);
+            t.query_bytes.record(fold.row_bytes);
+            t.ring.push(TraceOp::Query, TraceStage::Fold, dur, fold.row_bytes);
+            if fold.chunks_skipped > 0 {
+                t.ring.push(
+                    TraceOp::Query,
+                    TraceStage::ZoneSkip,
+                    0,
+                    fold.chunks_skipped,
+                );
+            }
+            // Queries are small trees; the truncation only bounds a
+            // pathological one so the slow log stays cheap to copy.
+            let mut query = format!("{q:?}");
+            query.truncate(120);
+            t.slowlog.record(SlowEntry {
+                ts_cycles: clock::cycles(),
+                dur_cycles: dur,
+                tier: path.label(),
+                query,
+                stats: fold_stats(&fold),
+            });
+        }
+        Ok((out, fold))
     }
 
     /// Take a consistent snapshot: the flushed segment set is pinned
@@ -1348,6 +1593,7 @@ impl Engine {
             segment_bytes,
             degraded_segments,
             rows_unavailable,
+            maintenance,
         ) = match &self.inner.backend {
             Backend::Durable(store) => {
                 let g = store.lock().unwrap_or_else(PoisonError::into_inner);
@@ -1359,11 +1605,12 @@ impl Engine {
                     g.segment_bytes_written(),
                     g.degraded_segments(),
                     g.rows_unavailable(),
+                    g.maintenance_counters(),
                 )
             }
             Backend::Memory(mem) => {
                 let g = mem.lock().unwrap_or_else(PoisonError::into_inner);
-                (false, g.bits, 0, g.batches.len(), 0, 0, 0)
+                (false, g.bits, 0, g.batches.len(), 0, 0, 0, [0; 4])
             }
         };
         let counters =
@@ -1393,6 +1640,11 @@ impl Engine {
             store_chunks_skipped: counters.fold.chunks_skipped,
             degraded_segments,
             rows_unavailable,
+            scrub_passes: maintenance[0],
+            scrub_bytes_verified: maintenance[1],
+            compaction_rounds: maintenance[2],
+            compaction_bytes_written: maintenance[3],
+            telemetry: self.inner.obs.is_some(),
         }
     }
 
@@ -1417,6 +1669,16 @@ impl Engine {
             lock(store, "store")?.flush()?;
         }
         Ok(self.stats())
+    }
+}
+
+/// The obs-layer form of the internal [`EvalStats`] counters (the obs
+/// module never sees engine types, so the copy happens here).
+fn fold_stats(s: &EvalStats) -> FoldStats {
+    FoldStats {
+        rows_folded: s.rows_folded,
+        row_bytes: s.row_bytes,
+        chunks_skipped: s.chunks_skipped,
     }
 }
 

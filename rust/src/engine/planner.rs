@@ -49,6 +49,7 @@
 //! across all four).
 
 use super::config::ShardPolicy;
+use crate::obs::RuleTrace;
 
 /// Minimum estimated row-work bits before the sharded fan-out pays for
 /// itself.
@@ -139,37 +140,104 @@ pub(crate) struct PlanInputs {
 }
 
 pub(crate) fn plan(policy: ExecPolicy, i: &PlanInputs) -> Plan {
+    plan_trace(policy, i).0
+}
+
+/// The decision table as a *recorded* walk: every rule evaluated, in
+/// table order, with whether it fired and what it saw — the first match
+/// wins and ends the walk (rules after it were never considered). This
+/// is the substance of the `explain` wire command; [`plan`] is this
+/// with the trace discarded, so the two can never disagree.
+pub(crate) fn plan_trace(
+    policy: ExecPolicy,
+    i: &PlanInputs,
+) -> (Plan, Vec<RuleTrace>) {
+    let mut rules = Vec::new();
     if let ExecPolicy::Force(path) = policy {
-        return Plan { path, reason: "forced by policy" };
+        rules.push(RuleTrace {
+            rule: "forced-policy",
+            matched: true,
+            detail: format!("policy pins tier \"{}\"", path.label()),
+        });
+        return (Plan { path, reason: "forced by policy" }, rules);
     }
-    if i.durable && i.segments >= 1 {
-        return Plan {
+    rules.push(RuleTrace {
+        rule: "forced-policy",
+        matched: false,
+        detail: "policy is auto".into(),
+    });
+    let matched = i.durable && i.segments >= 1;
+    rules.push(RuleTrace {
+        rule: "durable-store",
+        matched,
+        detail: format!("durable={}, segments={}", i.durable, i.segments),
+    });
+    if matched {
+        let plan = Plan {
             path: ExecPath::Store,
             reason: "flushed segments: reader folds per segment",
         };
+        return (plan, rules);
     }
     let can_shard = i.chunks >= 2 && i.workers > 1;
-    if i.shard == ShardPolicy::Always && can_shard {
-        return Plan { path: ExecPath::Sharded, reason: "shard policy: always" };
+    let matched = i.shard == ShardPolicy::Always && can_shard;
+    rules.push(RuleTrace {
+        rule: "shard-always",
+        matched,
+        detail: format!(
+            "shard={:?}, chunks={}, workers={}",
+            i.shard, i.chunks, i.workers
+        ),
+    });
+    if matched {
+        let plan =
+            Plan { path: ExecPath::Sharded, reason: "shard policy: always" };
+        return (plan, rules);
     }
+    rules.push(RuleTrace {
+        rule: "compressed-cached",
+        matched: i.compressed_cached,
+        detail: format!("cached={}", i.compressed_cached),
+    });
     if i.compressed_cached {
-        return Plan {
+        let plan = Plan {
             path: ExecPath::Compressed,
             reason: "compressed view cached",
         };
+        return (plan, rules);
     }
-    if i.shard == ShardPolicy::Auto && can_shard && i.est_cost >= SHARD_MIN_BITS
-    {
-        return Plan {
+    let matched =
+        i.shard == ShardPolicy::Auto && can_shard && i.est_cost >= SHARD_MIN_BITS;
+    rules.push(RuleTrace {
+        rule: "shard-auto-cost",
+        matched,
+        detail: format!(
+            "est_cost={} (gate {SHARD_MIN_BITS}), chunks={}, workers={}",
+            i.est_cost, i.chunks, i.workers
+        ),
+    });
+    if matched {
+        let plan = Plan {
             path: ExecPath::Sharded,
             reason: "multi-chunk query with heavy estimated row work",
         };
+        return (plan, rules);
     }
-    if i.conjunctive && i.est_cost >= COMPRESS_MIN_BITS {
-        return Plan {
+    let matched = i.conjunctive && i.est_cost >= COMPRESS_MIN_BITS;
+    rules.push(RuleTrace {
+        rule: "conjunction-cost",
+        matched,
+        detail: format!(
+            "conjunctive={}, est_cost={} (gate {COMPRESS_MIN_BITS})",
+            i.conjunctive, i.est_cost
+        ),
+    });
+    if matched {
+        let plan = Plan {
             path: ExecPath::Compressed,
             reason: "conjunction with heavy estimated row work",
         };
+        return (plan, rules);
     }
     // Light estimated work over a *large* index must still avoid the
     // raw tier, which assembles every attribute row regardless of the
@@ -178,13 +246,25 @@ pub(crate) fn plan(policy: ExecPolicy, i: &PlanInputs) -> Plan {
     // does not allow fan-out — or when `ShardPolicy::Never` forbids it
     // (the engine caps its worker count to 1 for this tier then), so
     // picking it never violates the policy.
-    if i.total_bits >= COMPRESS_MIN_BITS {
-        return Plan {
+    let matched = i.total_bits >= COMPRESS_MIN_BITS;
+    rules.push(RuleTrace {
+        rule: "large-index-fold",
+        matched,
+        detail: format!("total_bits={} (gate {COMPRESS_MIN_BITS})", i.total_bits),
+    });
+    if matched {
+        let plan = Plan {
             path: ExecPath::Sharded,
             reason: "sparse query over a large index: fold referenced rows",
         };
+        return (plan, rules);
     }
-    Plan { path: ExecPath::Raw, reason: "small index" }
+    rules.push(RuleTrace {
+        rule: "small-index-raw",
+        matched: true,
+        detail: format!("total_bits={}", i.total_bits),
+    });
+    (Plan { path: ExecPath::Raw, reason: "small index" }, rules)
 }
 
 #[cfg(test)]
@@ -263,6 +343,40 @@ mod tests {
             ..inputs()
         };
         assert_eq!(plan(ExecPolicy::Auto, &sparse).path, ExecPath::Raw);
+    }
+
+    #[test]
+    fn trace_agrees_with_plan_and_ends_on_its_match() {
+        let cases = [
+            inputs(),
+            PlanInputs { durable: true, segments: 3, ..inputs() },
+            PlanInputs { shard: ShardPolicy::Always, chunks: 4, ..inputs() },
+            PlanInputs { compressed_cached: true, ..inputs() },
+            PlanInputs {
+                chunks: 8,
+                est_cost: SHARD_MIN_BITS,
+                ..inputs()
+            },
+            PlanInputs {
+                conjunctive: true,
+                est_cost: COMPRESS_MIN_BITS,
+                ..inputs()
+            },
+            PlanInputs { total_bits: 1 << 24, est_cost: 64, ..inputs() },
+        ];
+        for (k, i) in cases.iter().enumerate() {
+            for policy in [ExecPolicy::Auto, ExecPolicy::Force(ExecPath::Raw)] {
+                let (p, rules) = plan_trace(policy, i);
+                assert_eq!(p, plan(policy, i), "case {k}");
+                // Exactly the last recorded rule fired; everything
+                // before it was walked and rejected.
+                assert!(rules.last().is_some_and(|r| r.matched), "case {k}");
+                assert!(
+                    rules[..rules.len() - 1].iter().all(|r| !r.matched),
+                    "case {k}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod cli_app;
 pub mod coordinator;
 pub mod engine;
 pub mod experiments;
+pub mod obs;
 pub mod power;
 pub mod runtime;
 pub mod server;

@@ -1,0 +1,232 @@
+//! Structured EXPLAIN output: the planner's decision trace plus the
+//! zone-map skip verdicts, as plain data the engine fills in and the
+//! wire renders.
+//!
+//! The report is deliberately engine-agnostic — rule names, tier
+//! labels, and chunk verdicts arrive as strings/numbers from the
+//! engine, so this module never depends on planner internals. The JSON
+//! grammar is frozen in PERF.md §observability.
+
+use crate::substrate::json::Json;
+
+/// One planner rule's verdict: every rule the planner walked, in
+/// order, with whether it fired (the first match wins).
+#[derive(Clone, Debug)]
+pub struct RuleTrace {
+    /// Stable rule name.
+    pub rule: &'static str,
+    /// Whether this rule decided the plan.
+    pub matched: bool,
+    /// What the rule saw (inputs relevant to its predicate).
+    pub detail: String,
+}
+
+impl RuleTrace {
+    /// The wire form.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("rule", self.rule.into()),
+            ("matched", self.matched.into()),
+            ("detail", self.detail.as_str().into()),
+        ])
+    }
+}
+
+/// Fold accounting (predicted or measured) over one evaluation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FoldStats {
+    /// Compressed rows folded into an accumulator.
+    pub rows_folded: u64,
+    /// Serialized bytes of those rows.
+    pub row_bytes: u64,
+    /// Chunk windows skipped via zone maps.
+    pub chunks_skipped: u64,
+}
+
+impl FoldStats {
+    /// The wire form.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("rows_folded", self.rows_folded.into()),
+            ("row_bytes", self.row_bytes.into()),
+            ("chunks_skipped", self.chunks_skipped.into()),
+        ])
+    }
+}
+
+/// The predicted zone-map verdict for one chunk (segment or memtable
+/// window) of the tiled object space.
+#[derive(Clone, Debug)]
+pub struct ChunkVerdict {
+    /// First global object id the chunk covers.
+    pub base: usize,
+    /// Objects covered.
+    pub nbits: usize,
+    /// `"segment"` or `"memtable"`.
+    pub kind: &'static str,
+    /// Whether the chunk carries a zone map (only zoned chunks can be
+    /// skipped).
+    pub zoned: bool,
+    /// Whether the evaluator is predicted to skip this chunk outright
+    /// (no row of it read).
+    pub skip: bool,
+    /// Rows predicted to fold from this chunk.
+    pub rows_folded: u64,
+    /// Serialized bytes of those rows.
+    pub row_bytes: u64,
+    /// Per-row windows predicted skipped inside this chunk.
+    pub windows_skipped: u64,
+}
+
+impl ChunkVerdict {
+    /// The wire form.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("base", self.base.into()),
+            ("nbits", self.nbits.into()),
+            ("kind", self.kind.into()),
+            ("zoned", self.zoned.into()),
+            ("skip", self.skip.into()),
+            ("rows_folded", self.rows_folded.into()),
+            ("row_bytes", self.row_bytes.into()),
+            ("windows_skipped", self.windows_skipped.into()),
+        ])
+    }
+}
+
+/// What an `analyze: true` explain actually measured by running the
+/// query.
+#[derive(Clone, Debug)]
+pub struct ActualRun {
+    /// Measured fold accounting for this one evaluation.
+    pub stats: FoldStats,
+    /// Matching objects.
+    pub count: usize,
+    /// Wall duration in reference cycles.
+    pub dur_cycles: u64,
+}
+
+impl ActualRun {
+    /// The wire form.
+    pub fn to_json(&self) -> Json {
+        let mut doc = self.stats.to_json();
+        doc.set("count", self.count.into());
+        doc.set("dur_cycles", self.dur_cycles.into());
+        doc
+    }
+}
+
+/// The full explain report: chosen tier, the rule walk that chose it,
+/// the per-chunk skip verdicts, and predicted (plus optionally
+/// measured) fold work.
+#[derive(Clone, Debug)]
+pub struct ExplainReport {
+    /// The chosen execution tier's stable label.
+    pub tier: &'static str,
+    /// The planner's stable reason string for the choice.
+    pub reason: &'static str,
+    /// The planner's estimated row-work cost (bits).
+    pub est_cost: u64,
+    /// Every rule considered, in walk order.
+    pub rules: Vec<RuleTrace>,
+    /// Per-chunk zone-map verdicts over the pinned view.
+    pub chunks: Vec<ChunkVerdict>,
+    /// Predicted fold accounting (sums over `chunks`).
+    pub predicted: FoldStats,
+    /// Measured accounting when run with `analyze: true`.
+    pub actual: Option<ActualRun>,
+}
+
+impl ExplainReport {
+    /// The wire form (`explain` command payload).
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj([
+            ("tier", self.tier.into()),
+            ("reason", self.reason.into()),
+            ("est_cost", self.est_cost.into()),
+            (
+                "rules",
+                Json::Arr(self.rules.iter().map(RuleTrace::to_json).collect()),
+            ),
+            (
+                "chunks",
+                Json::Arr(
+                    self.chunks.iter().map(ChunkVerdict::to_json).collect(),
+                ),
+            ),
+            ("predicted", self.predicted.to_json()),
+        ]);
+        if let Some(actual) = &self.actual {
+            doc.set("actual", actual.to_json());
+        }
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_every_section() {
+        let report = ExplainReport {
+            tier: "store",
+            reason: "flushed segments: reader folds per segment",
+            est_cost: 4096,
+            rules: vec![RuleTrace {
+                rule: "durable-store",
+                matched: true,
+                detail: "2 segments".into(),
+            }],
+            chunks: vec![ChunkVerdict {
+                base: 0,
+                nbits: 128,
+                kind: "segment",
+                zoned: true,
+                skip: true,
+                rows_folded: 0,
+                row_bytes: 0,
+                windows_skipped: 1,
+            }],
+            predicted: FoldStats {
+                rows_folded: 0,
+                row_bytes: 0,
+                chunks_skipped: 1,
+            },
+            actual: Some(ActualRun {
+                stats: FoldStats {
+                    rows_folded: 0,
+                    row_bytes: 0,
+                    chunks_skipped: 1,
+                },
+                count: 0,
+                dur_cycles: 99,
+            }),
+        };
+        let doc = report.to_json();
+        assert_eq!(doc.get("tier").and_then(Json::as_str), Some("store"));
+        let rules = doc.get("rules").and_then(Json::as_arr).unwrap();
+        assert_eq!(rules.len(), 1);
+        assert_eq!(
+            rules[0].get("matched").and_then(Json::as_bool),
+            Some(true)
+        );
+        let chunks = doc.get("chunks").and_then(Json::as_arr).unwrap();
+        assert_eq!(chunks[0].get("skip").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            doc.get("predicted")
+                .and_then(|p| p.get("chunks_skipped"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            doc.get("actual")
+                .and_then(|a| a.get("dur_cycles"))
+                .and_then(Json::as_f64),
+            Some(99.0)
+        );
+        // Round-trips through the hand-rolled JSON.
+        let back = Json::parse(&doc.render()).expect("parse");
+        assert_eq!(back.render(), doc.render());
+    }
+}

@@ -1,0 +1,273 @@
+//! Log-bucketed, mergeable latency/size histogram.
+//!
+//! The bucket scheme is log-linear: values below 16 get one exact
+//! bucket each, and every power-of-two octave above that is split into
+//! 8 linear sub-buckets (3 mantissa bits). A bucket's width is at most
+//! 1/8 of its lower bound, so any quantile read back from a bucket
+//! upper bound is within 12.5% of the exact sample — tight enough for
+//! latency percentiles, small enough (496 buckets, ~4 KB) to sit inline
+//! in every telemetry handle.
+//!
+//! Recording is one relaxed `fetch_add` per value (plus a `fetch_max`
+//! for the running maximum); there is no lock anywhere. Readers take a
+//! [`HistSnapshot`] by scanning the atomics — snapshots are not a
+//! consistent cut under concurrent writers, but every counter is
+//! monotone so a snapshot is always *some* valid recent state.
+//! Snapshots merge by element-wise addition, which is associative and
+//! commutative: per-worker histograms fold into fleet totals without
+//! coordination.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::substrate::json::Json;
+
+/// Exact buckets for values `0..16`.
+const LINEAR: usize = 16;
+/// Mantissa bits per octave (8 sub-buckets each).
+const SUB_BITS: u32 = 3;
+/// Total buckets: 16 exact + 8 per octave for msb 4..=63.
+pub const BUCKETS: usize = LINEAR + 8 * 60;
+
+/// Bucket index of a value (monotone non-decreasing in `v`).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < LINEAR as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= 4
+    let sub = ((v >> (msb - SUB_BITS)) & 7) as usize;
+    LINEAR + (msb as usize - 4) * 8 + sub
+}
+
+/// Inclusive `[lo, hi]` value range of a bucket.
+#[inline]
+pub fn bucket_bounds(index: usize) -> (u64, u64) {
+    if index < LINEAR {
+        return (index as u64, index as u64);
+    }
+    let g = (index - LINEAR) as u64;
+    let msb = g / 8 + 4;
+    let sub = g % 8;
+    let lo = (1u64 << msb) | (sub << (msb - SUB_BITS as u64));
+    let hi = lo + (1u64 << (msb - SUB_BITS as u64)) - 1;
+    (lo, hi)
+}
+
+/// A lock-free histogram: fixed bucket array of atomics plus running
+/// count/sum/max. One writer cost: a relaxed add and a relaxed max.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Values recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Take a point-in-time copy (lock-free; see module docs for the
+    /// consistency contract).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].load(Ordering::Relaxed)
+            }),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain (non-atomic) copy of a histogram's state: quantile reads and
+/// merging happen here, off the hot path.
+#[derive(Clone)]
+pub struct HistSnapshot {
+    buckets: [u64; BUCKETS],
+    /// Values recorded.
+    pub count: u64,
+    /// Sum of recorded values (wrapping).
+    pub sum: u64,
+    /// Largest recorded value.
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Fold `other` into `self` (element-wise add — associative and
+    /// commutative, so merge order never changes a quantile).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.wrapping_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The quantile `q` in `[0, 1]`, reported as the upper bound of the
+    /// bucket holding the nearest-rank sample (so the estimate and the
+    /// exact sorted-reference value always land in the same bucket).
+    /// Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // 0-based nearest rank, matching substrate::stats::percentile.
+        let rank = ((self.count - 1) as f64 * q).round() as u64;
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum > rank {
+                return bucket_bounds(i).1;
+            }
+        }
+        self.max
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The exposition form: count/sum/max plus the standard quantile
+    /// set. Bucket contents stay internal — quantiles are the contract.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("count", self.count.into()),
+            ("sum", self.sum.into()),
+            ("max", self.max.into()),
+            ("p50", self.quantile(0.50).into()),
+            ("p90", self.quantile(0.90).into()),
+            ("p99", self.quantile(0.99).into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_cover_u64() {
+        let mut prev = 0usize;
+        for v in [
+            0u64,
+            1,
+            15,
+            16,
+            17,
+            31,
+            32,
+            100,
+            1_000,
+            65_535,
+            1 << 40,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let b = bucket_index(v);
+            assert!(b >= prev, "bucket_index not monotone at {v}");
+            assert!(b < BUCKETS);
+            let (lo, hi) = bucket_bounds(b);
+            assert!(lo <= v && v <= hi, "{v} outside [{lo}, {hi}]");
+            prev = b;
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bounds_tile_without_gaps() {
+        for i in 0..BUCKETS - 1 {
+            let (_, hi) = bucket_bounds(i);
+            let (lo, _) = bucket_bounds(i + 1);
+            assert_eq!(hi + 1, lo, "gap between bucket {i} and {}", i + 1);
+        }
+        assert_eq!(bucket_bounds(0).0, 0);
+        assert_eq!(bucket_bounds(BUCKETS - 1).1, u64::MAX);
+    }
+
+    #[test]
+    fn relative_error_is_within_one_eighth() {
+        for v in [16u64, 100, 999, 12_345, 1 << 33] {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!((hi - lo) as f64 <= lo as f64 / 8.0 + 1.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_exact_values() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.max, 1000);
+        // p50's exact nearest-rank sample is 500; same bucket.
+        assert_eq!(bucket_index(s.quantile(0.5)), bucket_index(500));
+        assert_eq!(bucket_index(s.quantile(0.99)), bucket_index(990));
+        assert_eq!(s.quantile(1.0), bucket_bounds(bucket_index(1000)).1);
+        assert_eq!(HistSnapshot::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn merge_is_elementwise() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in 0..100u64 {
+            a.record(v);
+            b.record(v * 10);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 200);
+        assert_eq!(m.max, 990);
+        let both = Histogram::new();
+        for v in 0..100u64 {
+            both.record(v);
+            both.record(v * 10);
+        }
+        let want = both.snapshot();
+        assert_eq!(m.quantile(0.5), want.quantile(0.5));
+        assert_eq!(m.quantile(0.99), want.quantile(0.99));
+    }
+}

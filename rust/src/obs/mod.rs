@@ -1,0 +1,252 @@
+//! Crate-wide telemetry: mergeable latency histograms, a lock-free
+//! stage-trace ring, the slow-query log, and the EXPLAIN report
+//! structures.
+//!
+//! The paper's contribution is a *measured* profile — pJ/cycle active,
+//! pW/bit standby — and the sim side charges cycles and bytes for every
+//! modelled operation. This module is the production counterpart: the
+//! running engine attributes wall cycles and bytes touched to each
+//! pipeline stage, so perf claims (zone-map pruning, group commit,
+//! future mmap/SIMD tiers) are verified on live traffic, not only in
+//! benches.
+//!
+//! Layering: `obs` depends only on [`crate::bic::clock`] (the reference
+//! cycle stamp) and the substrate JSON — never on the engine, store, or
+//! server. Those layers hold an `Option<Arc<Telemetry>>` and record
+//! into it when present; disabled telemetry is a `None` branch on the
+//! hot path, with no clock reads and no atomics (the overhead bench in
+//! `benches/hotpath.rs` pins this).
+//!
+//! - [`hist`] — log-bucketed atomic [`Histogram`] + mergeable
+//!   [`HistSnapshot`] with p50/p90/p99/max;
+//! - [`trace`] — the bounded seqlock-style [`TraceRing`] of
+//!   [`TraceEvent`]s, drained over the wire without stalling writers;
+//! - [`explain`] — the [`ExplainReport`] grammar the `explain` wire
+//!   command renders;
+//! - [`SlowLog`] — a threshold-gated log of the worst-N queries.
+
+pub mod explain;
+pub mod hist;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+pub use explain::{
+    ActualRun, ChunkVerdict, ExplainReport, FoldStats, RuleTrace,
+};
+pub use hist::{Histogram, HistSnapshot};
+pub use trace::{TraceEvent, TraceOp, TraceRing, TraceStage};
+
+use crate::substrate::json::Json;
+
+/// How many worst queries the slow log retains.
+pub const SLOWLOG_CAP: usize = 32;
+
+/// One retained slow query.
+#[derive(Clone, Debug)]
+pub struct SlowEntry {
+    /// Completion time in reference cycles since process start.
+    pub ts_cycles: u64,
+    /// Evaluation duration in reference cycles.
+    pub dur_cycles: u64,
+    /// Execution tier label the planner chose.
+    pub tier: &'static str,
+    /// Compact rendering of the evaluated query.
+    pub query: String,
+    /// What the evaluation touched.
+    pub stats: FoldStats,
+}
+
+impl SlowEntry {
+    /// The wire form (`slowlog` command payload).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("ts_cycles", self.ts_cycles.into()),
+            ("dur_cycles", self.dur_cycles.into()),
+            ("tier", self.tier.into()),
+            ("query", self.query.as_str().into()),
+            ("rows_folded", self.stats.rows_folded.into()),
+            ("row_bytes", self.stats.row_bytes.into()),
+            ("chunks_skipped", self.stats.chunks_skipped.into()),
+        ])
+    }
+}
+
+/// Threshold-gated log of the worst [`SLOWLOG_CAP`] queries by
+/// duration. Recording takes a short mutex (only on the telemetry-on
+/// path); readers copy the entries out.
+#[derive(Default)]
+pub struct SlowLog {
+    /// Only queries at least this slow (reference cycles) are eligible.
+    /// 0 (the default) admits every query — the worst-N ordering is the
+    /// real filter.
+    threshold_cycles: AtomicU64,
+    entries: Mutex<Vec<SlowEntry>>,
+}
+
+impl SlowLog {
+    /// Set the admission threshold in reference cycles.
+    pub fn set_threshold(&self, cycles: u64) {
+        self.threshold_cycles.store(cycles, Ordering::Relaxed);
+    }
+
+    /// Offer one completed query; it is kept iff it clears the
+    /// threshold and ranks among the worst [`SLOWLOG_CAP`] so far.
+    pub fn record(&self, entry: SlowEntry) {
+        if entry.dur_cycles < self.threshold_cycles.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut entries =
+            self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        let at = entries
+            .partition_point(|e| e.dur_cycles >= entry.dur_cycles);
+        if at >= SLOWLOG_CAP {
+            return;
+        }
+        entries.insert(at, entry);
+        entries.truncate(SLOWLOG_CAP);
+    }
+
+    /// The retained entries, slowest first.
+    pub fn snapshot(&self) -> Vec<SlowEntry> {
+        self.entries.lock().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// The wire form: `[entry, ...]`, slowest first.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.snapshot().iter().map(SlowEntry::to_json).collect())
+    }
+}
+
+/// Every telemetry channel of one engine, allocated once behind
+/// `Option<Arc<Telemetry>>` when `EngineConfig::telemetry` is set.
+///
+/// Latency histograms are in reference cycles
+/// ([`crate::bic::clock`] — nanoseconds at the nominal 1 GHz clock);
+/// `query_bytes` is in serialized row bytes folded per query.
+#[derive(Default)]
+pub struct Telemetry {
+    /// End-to-end ingest ack latency (submit → durable receipt).
+    pub ingest_ack: Histogram,
+    /// WAL leader group write + fsync duration.
+    pub wal_fsync: Histogram,
+    /// Query latency per execution tier (indexed by the engine's tier
+    /// slot; labels arrive at exposition time).
+    pub query: [Histogram; 4],
+    /// Serialized row bytes folded per query.
+    pub query_bytes: Histogram,
+    /// Memtable flush duration.
+    pub flush: Histogram,
+    /// Compaction round duration.
+    pub compact: Histogram,
+    /// Scrub pass duration.
+    pub scrub: Histogram,
+    /// Stage-trace ring.
+    pub ring: TraceRing,
+    /// Worst-N query log.
+    pub slowlog: SlowLog,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").finish_non_exhaustive()
+    }
+}
+
+impl Telemetry {
+    /// A fresh telemetry block with the default ring capacity.
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    /// The exposition form: one histogram summary per channel, with
+    /// `tier_labels` naming the per-tier query histograms.
+    pub fn to_json(&self, tier_labels: [&str; 4]) -> Json {
+        let mut query = Json::obj([]);
+        for (label, h) in tier_labels.iter().zip(self.query.iter()) {
+            query.set(label, h.snapshot().to_json());
+        }
+        Json::obj([
+            ("ingest_ack", self.ingest_ack.snapshot().to_json()),
+            ("wal_fsync", self.wal_fsync.snapshot().to_json()),
+            ("query", query),
+            ("query_bytes", self.query_bytes.snapshot().to_json()),
+            ("flush", self.flush.snapshot().to_json()),
+            ("compact", self.compact.snapshot().to_json()),
+            ("scrub", self.scrub.snapshot().to_json()),
+            ("trace_events", self.ring.published().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slowlog_keeps_the_worst_n() {
+        let log = SlowLog::default();
+        for d in 0..100u64 {
+            log.record(SlowEntry {
+                ts_cycles: d,
+                dur_cycles: d,
+                tier: "raw",
+                query: format!("q{d}"),
+                stats: FoldStats::default(),
+            });
+        }
+        let kept = log.snapshot();
+        assert_eq!(kept.len(), SLOWLOG_CAP);
+        assert_eq!(kept[0].dur_cycles, 99, "slowest first");
+        assert_eq!(kept.last().map(|e| e.dur_cycles), Some(68));
+        assert!(
+            kept.windows(2).all(|w| w[0].dur_cycles >= w[1].dur_cycles),
+            "sorted descending"
+        );
+    }
+
+    #[test]
+    fn slowlog_threshold_gates_admission() {
+        let log = SlowLog::default();
+        log.set_threshold(50);
+        for d in [10u64, 49, 50, 80] {
+            log.record(SlowEntry {
+                ts_cycles: 0,
+                dur_cycles: d,
+                tier: "store",
+                query: String::new(),
+                stats: FoldStats::default(),
+            });
+        }
+        let kept = log.snapshot();
+        assert_eq!(
+            kept.iter().map(|e| e.dur_cycles).collect::<Vec<_>>(),
+            vec![80, 50]
+        );
+    }
+
+    #[test]
+    fn telemetry_exposition_has_every_channel() {
+        let t = Telemetry::new();
+        t.ingest_ack.record(1_000);
+        t.query[3].record(2_000);
+        t.query_bytes.record(4_096);
+        let doc =
+            t.to_json(["raw", "compressed", "sharded", "store"]);
+        assert_eq!(
+            doc.get("ingest_ack")
+                .and_then(|h| h.get("count"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert!(doc
+            .get("query")
+            .and_then(|q| q.get("store"))
+            .and_then(|h| h.get("p50"))
+            .and_then(Json::as_f64)
+            .is_some_and(|p| p > 0.0));
+        assert!(doc.get("wal_fsync").is_some());
+        assert!(doc.get("scrub").is_some());
+    }
+}

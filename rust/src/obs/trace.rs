@@ -1,0 +1,323 @@
+//! Bounded lock-free ring of stage-level trace events.
+//!
+//! Writers (ingest workers, the WAL leader, query threads) publish a
+//! [`TraceEvent`] with three atomic stores and never block: a slot is
+//! claimed by one `fetch_add` on the head counter, its sequence word is
+//! zeroed (invalidating the old event), the payload fields are stored,
+//! and the sequence word is published last with `Release`. Readers
+//! ([`TraceRing::drain`]) validate each slot seqlock-style — load the
+//! sequence, read the payload, re-load the sequence — and simply skip a
+//! slot a writer tore mid-read. Under wrap-around contention the ring
+//! is best-effort by design: old events are overwritten, torn slots are
+//! dropped, writers are never stalled by a drain.
+//!
+//! Timestamps and durations are in *cycles* at the crate's nominal
+//! 1 GHz reference clock ([`crate::bic::clock`]) — the unit the paper's
+//! pJ/cycle framing charges, and exactly nanoseconds on the host.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::bic::clock;
+use crate::substrate::json::Json;
+
+/// Which operation a trace event belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceOp {
+    /// An ingest batch moving through the pipeline.
+    Ingest = 0,
+    /// A query evaluation.
+    Query = 1,
+    /// A memtable flush.
+    Flush = 2,
+    /// A compaction round.
+    Compact = 3,
+    /// A scrub pass.
+    Scrub = 4,
+    /// WAL group-commit machinery.
+    Wal = 5,
+}
+
+impl TraceOp {
+    /// Stable wire label.
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceOp::Ingest => "ingest",
+            TraceOp::Query => "query",
+            TraceOp::Flush => "flush",
+            TraceOp::Compact => "compact",
+            TraceOp::Scrub => "scrub",
+            TraceOp::Wal => "wal",
+        }
+    }
+
+    fn from_code(c: u64) -> TraceOp {
+        match c {
+            0 => TraceOp::Ingest,
+            1 => TraceOp::Query,
+            2 => TraceOp::Flush,
+            3 => TraceOp::Compact,
+            4 => TraceOp::Scrub,
+            _ => TraceOp::Wal,
+        }
+    }
+}
+
+/// Which pipeline stage or query phase an event spans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceStage {
+    /// Waiting for an in-flight gate slot (admission queue wait).
+    QueueWait = 0,
+    /// Encoding records into a compressed batch index.
+    Encode = 1,
+    /// Held in the in-order reorder window behind earlier batches.
+    Reorder = 2,
+    /// Applying an in-order run to WAL + memtable.
+    Append = 3,
+    /// The WAL leader's group write + fsync.
+    GroupCommit = 4,
+    /// Planner tier selection.
+    Plan = 5,
+    /// Folding rows across segment/memtable chunks.
+    Fold = 6,
+    /// Chunk windows skipped via zone maps (bytes = windows skipped).
+    ZoneSkip = 7,
+    /// A whole foreground operation (flush/compact/scrub duration).
+    Run = 8,
+}
+
+impl TraceStage {
+    /// Stable wire label.
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceStage::QueueWait => "queue-wait",
+            TraceStage::Encode => "encode",
+            TraceStage::Reorder => "reorder",
+            TraceStage::Append => "append",
+            TraceStage::GroupCommit => "group-commit",
+            TraceStage::Plan => "plan",
+            TraceStage::Fold => "fold",
+            TraceStage::ZoneSkip => "zone-skip",
+            TraceStage::Run => "run",
+        }
+    }
+
+    fn from_code(c: u64) -> TraceStage {
+        match c {
+            0 => TraceStage::QueueWait,
+            1 => TraceStage::Encode,
+            2 => TraceStage::Reorder,
+            3 => TraceStage::Append,
+            4 => TraceStage::GroupCommit,
+            5 => TraceStage::Plan,
+            6 => TraceStage::Fold,
+            7 => TraceStage::ZoneSkip,
+            _ => TraceStage::Run,
+        }
+    }
+}
+
+/// One drained trace event. `tenant` is attributed by whoever owns the
+/// ring (the service tier fills it at drain time; a bare engine leaves
+/// it empty) — the ring itself stores only numeric fields.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Event completion time, in reference cycles since process start.
+    pub ts_cycles: u64,
+    /// Owning tenant (empty outside the service tier).
+    pub tenant: String,
+    /// Operation class.
+    pub op: TraceOp,
+    /// Pipeline stage / query phase.
+    pub stage: TraceStage,
+    /// Stage duration in reference cycles.
+    pub dur_cycles: u64,
+    /// Bytes (or stage-specific count) the stage touched.
+    pub bytes: u64,
+}
+
+impl TraceEvent {
+    /// The wire form (PERF.md §observability).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("ts_cycles", self.ts_cycles.into()),
+            ("tenant", self.tenant.as_str().into()),
+            ("op", self.op.label().into()),
+            ("stage", self.stage.label().into()),
+            ("dur_cycles", self.dur_cycles.into()),
+            ("bytes", self.bytes.into()),
+        ])
+    }
+}
+
+/// One ring slot: a sequence word (0 = empty or being written; else
+/// write-index + 1, published with `Release`) plus the payload.
+struct Slot {
+    seq: AtomicU64,
+    ts: AtomicU64,
+    op: AtomicU64,
+    stage: AtomicU64,
+    dur: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            ts: AtomicU64::new(0),
+            op: AtomicU64::new(0),
+            stage: AtomicU64::new(0),
+            dur: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Default ring capacity (events kept before overwrite).
+pub const DEFAULT_RING: usize = 1024;
+
+/// The bounded lock-free event ring. See module docs for the
+/// publication protocol.
+pub struct TraceRing {
+    head: AtomicU64,
+    drained: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::new(DEFAULT_RING)
+    }
+}
+
+impl TraceRing {
+    /// A ring holding the most recent `capacity` events (min 1).
+    pub fn new(capacity: usize) -> TraceRing {
+        let n = capacity.max(1);
+        TraceRing {
+            head: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            slots: (0..n).map(|_| Slot::new()).collect(),
+        }
+    }
+
+    /// Publish one event. Never blocks; overwrites the oldest slot when
+    /// the ring is full.
+    pub fn push(&self, op: TraceOp, stage: TraceStage, dur: u64, bytes: u64) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(i % self.slots.len() as u64) as usize];
+        // Invalidate, write payload, publish. A concurrent reader that
+        // observes seq == 0 (or a changed seq) drops the slot.
+        slot.seq.store(0, Ordering::Release);
+        slot.ts.store(clock::cycles(), Ordering::Relaxed);
+        slot.op.store(op as u64, Ordering::Relaxed);
+        slot.stage.store(stage as u64, Ordering::Relaxed);
+        slot.dur.store(dur, Ordering::Relaxed);
+        slot.bytes.store(bytes, Ordering::Relaxed);
+        slot.seq.store(i + 1, Ordering::Release);
+    }
+
+    /// Events published over the ring's lifetime (including ones
+    /// already overwritten).
+    pub fn published(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Drain every event published since the previous drain and still
+    /// resident, oldest first. Torn slots (overwritten mid-read) are
+    /// skipped — drains never stall a writer.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let since = self.drained.load(Ordering::Relaxed);
+        let mut out: Vec<(u64, TraceEvent)> = Vec::new();
+        let mut high = since;
+        for slot in self.slots.iter() {
+            let seq1 = slot.seq.load(Ordering::Acquire);
+            if seq1 == 0 || seq1 <= since {
+                continue;
+            }
+            let ev = TraceEvent {
+                ts_cycles: slot.ts.load(Ordering::Relaxed),
+                tenant: String::new(),
+                op: TraceOp::from_code(slot.op.load(Ordering::Relaxed)),
+                stage: TraceStage::from_code(
+                    slot.stage.load(Ordering::Relaxed),
+                ),
+                dur_cycles: slot.dur.load(Ordering::Relaxed),
+                bytes: slot.bytes.load(Ordering::Relaxed),
+            };
+            // Seqlock validation: a writer that claimed this slot while
+            // we were reading changed (or zeroed) the sequence word.
+            if slot.seq.load(Ordering::Acquire) != seq1 {
+                continue;
+            }
+            high = high.max(seq1);
+            out.push((seq1, ev));
+        }
+        self.drained.fetch_max(high, Ordering::Relaxed);
+        out.sort_by_key(|(seq, _)| *seq);
+        out.into_iter().map(|(_, ev)| ev).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_drain_round_trips_in_order() {
+        let ring = TraceRing::new(8);
+        ring.push(TraceOp::Ingest, TraceStage::Encode, 10, 100);
+        ring.push(TraceOp::Query, TraceStage::Fold, 20, 200);
+        let evs = ring.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].op, TraceOp::Ingest);
+        assert_eq!(evs[0].stage, TraceStage::Encode);
+        assert_eq!(evs[0].dur_cycles, 10);
+        assert_eq!(evs[1].op, TraceOp::Query);
+        assert_eq!(evs[1].bytes, 200);
+        assert!(evs[1].ts_cycles >= evs[0].ts_cycles);
+        // Second drain sees only new events.
+        assert!(ring.drain().is_empty());
+        ring.push(TraceOp::Wal, TraceStage::GroupCommit, 5, 64);
+        let evs = ring.drain();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].stage, TraceStage::GroupCommit);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let ring = TraceRing::new(4);
+        for i in 0..10u64 {
+            ring.push(TraceOp::Ingest, TraceStage::Append, i, 0);
+        }
+        let evs = ring.drain();
+        assert_eq!(evs.len(), 4);
+        let durs: Vec<u64> = evs.iter().map(|e| e.dur_cycles).collect();
+        assert_eq!(durs, vec![6, 7, 8, 9], "only the newest survive");
+        assert_eq!(ring.published(), 10);
+    }
+
+    #[test]
+    fn concurrent_pushes_never_lose_the_ring() {
+        let ring = std::sync::Arc::new(TraceRing::new(64));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let ring = std::sync::Arc::clone(&ring);
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        ring.push(TraceOp::Query, TraceStage::Fold, i, i);
+                    }
+                });
+            }
+        });
+        assert_eq!(ring.published(), 4000);
+        let evs = ring.drain();
+        assert!(evs.len() <= 64);
+        for w in evs.windows(2) {
+            // drain returns publication order.
+            assert!(w[0].dur_cycles <= 999 && w[1].dur_cycles <= 999);
+        }
+    }
+}

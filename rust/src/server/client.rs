@@ -135,6 +135,33 @@ impl Client {
         self.call(&Json::obj([("cmd", "metrics".into())]))
     }
 
+    /// `explain` a predicate: the planner's decision trace and
+    /// zone-skip predictions, with the measured counters attached when
+    /// `analyze` is set.
+    pub fn explain(
+        &mut self,
+        tenant: &str,
+        predicate: &Json,
+        analyze: bool,
+    ) -> Result<Json> {
+        self.call(&Json::obj([
+            ("cmd", "explain".into()),
+            ("tenant", tenant.into()),
+            ("predicate", predicate.clone()),
+            ("analyze", analyze.into()),
+        ]))
+    }
+
+    /// `slowlog`: the tenant's worst-N query log (telemetry on).
+    pub fn slowlog(&mut self, tenant: &str) -> Result<Json> {
+        self.tenant_cmd("slowlog", tenant)
+    }
+
+    /// `trace`: drain the tenant's stage-trace ring (telemetry on).
+    pub fn trace(&mut self, tenant: &str) -> Result<Json> {
+        self.tenant_cmd("trace", tenant)
+    }
+
     fn tenant_cmd(&mut self, cmd: &str, tenant: &str) -> Result<Json> {
         self.call(&Json::obj([
             ("cmd", cmd.into()),

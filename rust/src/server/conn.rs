@@ -211,5 +211,28 @@ fn dispatch(
                 .close(&tenant)
                 .map(|()| Json::obj([("closed", true.into())])),
         ),
+        // Explain works telemetry-on or -off: the planner trace and
+        // zone-skip predictions come from the snapshot, not the
+        // telemetry block.
+        Command::Explain { tenant, predicate, analyze } => {
+            with_tenant(shared, &tenant, move |t| {
+                let report = t.engine.explain(&predicate, analyze)?;
+                Ok(Json::obj([("explain", report.to_json())]))
+            })
+        }
+        Command::SlowLog { tenant } => {
+            with_tenant(shared, &tenant, |t| {
+                t.engine
+                    .slowlog_json()
+                    .map(|log| Json::obj([("slowlog", log)]))
+                    .ok_or_else(|| WireError::telemetry_off(&t.name))
+            })
+        }
+        Command::Trace { tenant } => with_tenant(shared, &tenant, |t| {
+            t.engine
+                .trace_json()
+                .map(|events| Json::obj([("events", events)]))
+                .ok_or_else(|| WireError::telemetry_off(&t.name))
+        }),
     }
 }

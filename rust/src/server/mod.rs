@@ -84,33 +84,125 @@ pub(crate) struct Shared {
 }
 
 impl Shared {
-    /// The `metrics` dump: per-tenant `{engine, server}` stats for
-    /// every open tenant plus the global server counters, under one
-    /// `stats_version`.
+    /// The `metrics` dump: per-tenant `{engine, server[, telemetry]}`
+    /// stats for every open tenant plus the global server counters,
+    /// under one `stats_version` — and the same document flattened
+    /// into Prometheus-style exposition text (the `prometheus` string
+    /// field, leading with `# bic_metrics_version`).
     pub(crate) fn metrics_json(&self) -> std::result::Result<Json, WireError> {
+        let tenants = self.registry.tenants_json()?;
+        let server = Json::obj([
+            (
+                "active_connections",
+                self.active.load(Ordering::SeqCst).into(),
+            ),
+            (
+                "connections_total",
+                self.connections_total.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "connections_shed",
+                self.connections_shed.load(Ordering::Relaxed).into(),
+            ),
+            ("max_connections", self.max_conns.into()),
+        ]);
+        let prom = prometheus_text(&tenants, &server);
         Ok(Json::obj([
             ("stats_version", EngineStats::STATS_VERSION.into()),
-            ("tenants", self.registry.tenants_json()?),
-            (
-                "server",
-                Json::obj([
-                    (
-                        "active_connections",
-                        self.active.load(Ordering::SeqCst).into(),
-                    ),
-                    (
-                        "connections_total",
-                        self.connections_total.load(Ordering::Relaxed).into(),
-                    ),
-                    (
-                        "connections_shed",
-                        self.connections_shed.load(Ordering::Relaxed).into(),
-                    ),
-                    ("max_connections", self.max_conns.into()),
-                ]),
-            ),
+            ("tenants", tenants),
+            ("server", server),
+            ("prometheus", prom.into()),
         ]))
     }
+}
+
+/// Append one histogram summary (`{count,sum,max,p50,p90,p99}` JSON
+/// form) as Prometheus summary lines: quantile samples on the base
+/// metric name, then `_count`/`_sum`/`_max`. `labels` is the inner
+/// label list without braces (e.g. `tenant="a"`), never empty here.
+fn prom_hist(out: &mut String, metric: &str, labels: &str, h: &Json) {
+    use std::fmt::Write as _;
+    for (q, key) in [("0.5", "p50"), ("0.9", "p90"), ("0.99", "p99")] {
+        if let Some(v) = h.get(key).and_then(Json::as_f64) {
+            let _ = writeln!(
+                out,
+                "{metric}{{{labels},quantile=\"{q}\"}} {v}"
+            );
+        }
+    }
+    for key in ["count", "sum", "max"] {
+        if let Some(v) = h.get(key).and_then(Json::as_f64) {
+            let _ = writeln!(out, "{metric}_{key}{{{labels}}} {v}");
+        }
+    }
+}
+
+/// Flatten the `metrics` document into Prometheus-style exposition
+/// text: a `# bic_metrics_version` header, `bic_server_*` gauges,
+/// per-tenant `bic_engine_*`/`bic_tenant_*` counters, and — for
+/// telemetry-enabled tenants — summary quantiles per histogram channel
+/// (`bic_<channel>_cycles`, with query latency labelled per tier).
+/// The shape is documented in PERF.md §observability.
+fn prometheus_text(tenants: &Json, server: &Json) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# bic_metrics_version {}",
+        EngineStats::STATS_VERSION
+    );
+    if let Json::Obj(map) = server {
+        for (k, v) in map {
+            if let Some(n) = v.as_f64() {
+                let _ = writeln!(out, "bic_server_{k} {n}");
+            }
+        }
+    }
+    let Json::Obj(tenants) = tenants else { return out };
+    for (name, doc) in tenants {
+        let labels = format!("tenant=\"{name}\"");
+        if let Some(Json::Obj(eng)) = doc.get("engine") {
+            for (k, v) in eng {
+                if let Some(n) = v.as_f64() {
+                    let _ =
+                        writeln!(out, "bic_engine_{k}{{{labels}}} {n}");
+                }
+            }
+        }
+        if let Some(Json::Obj(srv)) = doc.get("server") {
+            for (k, v) in srv {
+                if let Some(n) = v.as_f64() {
+                    let _ =
+                        writeln!(out, "bic_tenant_{k}{{{labels}}} {n}");
+                }
+            }
+        }
+        let Some(telem) = doc.get("telemetry") else { continue };
+        for (channel, metric) in [
+            ("ingest_ack", "bic_ingest_ack_cycles"),
+            ("wal_fsync", "bic_wal_fsync_cycles"),
+            ("query_bytes", "bic_query_bytes"),
+            ("flush", "bic_flush_cycles"),
+            ("compact", "bic_compact_cycles"),
+            ("scrub", "bic_scrub_cycles"),
+        ] {
+            if let Some(h) = telem.get(channel) {
+                prom_hist(&mut out, metric, &labels, h);
+            }
+        }
+        if let Some(Json::Obj(tiers)) = telem.get("query") {
+            for (tier, h) in tiers {
+                let tier_labels = format!("{labels},tier=\"{tier}\"");
+                prom_hist(&mut out, "bic_query_cycles", &tier_labels, h);
+            }
+        }
+        if let Some(n) =
+            telem.get("trace_events").and_then(Json::as_f64)
+        {
+            let _ = writeln!(out, "bic_trace_events{{{labels}}} {n}");
+        }
+    }
+    out
 }
 
 /// A bound (but not yet serving) server: the listening socket plus the

@@ -19,6 +19,9 @@
 //! {"cmd":"scrub","tenant":T}
 //! {"cmd":"close","tenant":T}
 //! {"cmd":"metrics"}
+//! {"cmd":"explain","tenant":T,"predicate":P,"analyze":B?}
+//! {"cmd":"slowlog","tenant":T}
+//! {"cmd":"trace","tenant":T}
 //! ```
 //!
 //! `S` is the [`Schema::to_json`] form, `C` the
@@ -106,6 +109,21 @@ impl WireError {
         }
     }
 
+    /// A telemetry-backed command (`slowlog`, `trace`, per-tenant
+    /// histogram quantiles) against a tenant whose engine was built
+    /// with telemetry off. Enable it via the tenant config
+    /// (`{"telemetry":true}`) at `create_tenant` time.
+    pub fn telemetry_off(tenant: &str) -> WireError {
+        WireError {
+            code: "telemetry-off",
+            what: "telemetry".to_string(),
+            detail: format!(
+                "tenant {tenant:?} collects no telemetry (create it with \
+                 config {{\"telemetry\":true}})"
+            ),
+        }
+    }
+
     /// The error's wire form.
     pub fn to_json(&self) -> Json {
         Json::obj([
@@ -183,6 +201,28 @@ pub enum Command {
     /// Flush the tenant and release its engine (a later request
     /// reopens it from disk).
     Close {
+        /// Target tenant.
+        tenant: String,
+    },
+    /// Explain how the engine would evaluate a predicate: planner rule
+    /// trace, chosen tier, per-chunk zone-skip verdicts, predicted
+    /// fold work — optionally executing it for predicted-vs-actual.
+    Explain {
+        /// Target tenant.
+        tenant: String,
+        /// The predicate to explain.
+        predicate: Predicate,
+        /// `true`: also evaluate the query and attach the measured
+        /// counters (`actual`). Default `false` — plan only.
+        analyze: bool,
+    },
+    /// The tenant's worst-N query log (needs telemetry on).
+    SlowLog {
+        /// Target tenant.
+        tenant: String,
+    },
+    /// Drain the tenant's stage-trace ring (needs telemetry on).
+    Trace {
         /// Target tenant.
         tenant: String,
     },
@@ -275,6 +315,18 @@ pub fn parse_request(line: &str) -> Result<Request, (Option<Json>, WireError)> {
         "stats" => Command::Stats { tenant: tenant().map_err(&fail)? },
         "scrub" => Command::Scrub { tenant: tenant().map_err(&fail)? },
         "close" => Command::Close { tenant: tenant().map_err(&fail)? },
+        "explain" => Command::Explain {
+            tenant: tenant().map_err(&fail)?,
+            predicate: doc
+                .get("predicate")
+                .ok_or_else(|| fail(WireError::bad_request(
+                    "explain needs a \"predicate\" document",
+                )))
+                .and_then(|p| predicate_from_json(p).map_err(&fail))?,
+            analyze: field_bool(&doc, "analyze", false).map_err(&fail)?,
+        },
+        "slowlog" => Command::SlowLog { tenant: tenant().map_err(&fail)? },
+        "trace" => Command::Trace { tenant: tenant().map_err(&fail)? },
         other => {
             return Err(fail(WireError::bad_request(format!(
                 "unknown command {other:?}"
@@ -469,6 +521,23 @@ mod tests {
             }
             other => panic!("wrong command: {other:?}"),
         }
+        let r = parse_request(
+            r#"{"cmd":"explain","tenant":"a","predicate":{"col":"c","eq":1}}"#,
+        )
+        .expect("parse explain");
+        match r.cmd {
+            Command::Explain { tenant, analyze, .. } => {
+                assert_eq!(tenant, "a");
+                assert!(!analyze, "analyze defaults to false");
+            }
+            other => panic!("wrong command: {other:?}"),
+        }
+        let r = parse_request(r#"{"cmd":"slowlog","tenant":"a"}"#)
+            .expect("parse slowlog");
+        assert!(matches!(r.cmd, Command::SlowLog { .. }));
+        let r = parse_request(r#"{"cmd":"trace","tenant":"a"}"#)
+            .expect("parse trace");
+        assert!(matches!(r.cmd, Command::Trace { .. }));
         let (id, err) =
             parse_request(r#"{"cmd":"warp","id":"x"}"#).unwrap_err();
         assert_eq!(id, Some(Json::Str("x".into())));

@@ -244,19 +244,21 @@ impl Registry {
 
     /// Per-tenant `{engine, server}` stats for every *open* tenant
     /// (closed or never-requested tenants on disk are not loaded just
-    /// to be counted). Keyed by tenant name.
+    /// to be counted), plus a `telemetry` section (histogram quantiles
+    /// per channel) for tenants that collect it. Keyed by tenant name.
     pub(crate) fn tenants_json(&self) -> Result<Json, WireError> {
         let map = lock(&self.tenants, "tenant registry")
             .map_err(WireError::from)?;
         let mut out = Json::obj([]);
         for (name, t) in map.iter() {
-            out.set(
-                name,
-                Json::obj([
-                    ("engine", t.engine.stats().to_json()),
-                    ("server", t.counters.to_json()),
-                ]),
-            );
+            let mut doc = Json::obj([
+                ("engine", t.engine.stats().to_json()),
+                ("server", t.counters.to_json()),
+            ]);
+            if let Some(telem) = t.engine.telemetry_json() {
+                doc.set("telemetry", telem);
+            }
+            out.set(name, doc);
         }
         Ok(out)
     }

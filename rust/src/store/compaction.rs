@@ -31,13 +31,15 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::manifest::{self, ManifestState, SegmentEntry};
 use super::segment::{self, Segment};
 use super::{Result, Store};
 use crate::bic::bitmap::Bitmap;
+use crate::bic::clock;
 use crate::bic::codec::CodecBitmap;
+use crate::obs::{TraceOp, TraceStage};
 
 /// When and what to merge.
 #[derive(Clone, Copy, Debug)]
@@ -164,6 +166,7 @@ impl Store {
     /// at its offset within the merged range, re-encoded adaptively,
     /// with the zone map recomputed at write.
     fn merge_range(&mut self, start: usize, end: usize) -> Result<()> {
+        let t0 = self.cfg.telemetry.as_ref().map(|_| Instant::now());
         let span = &self.segments[start..end];
         let base = span[0].base;
         let nbits: usize = span.iter().map(|s| s.nbits).sum();
@@ -240,8 +243,15 @@ impl Store {
         self.segments.splice(start..end, [merged]);
         self.next_segment_id = id + 1;
         self.note_segment_bytes(bytes);
+        self.compaction_rounds += 1;
+        self.compaction_bytes_written += bytes;
         for f in old_files {
             let _ = self.vfs().remove_file(&self.dir.join(f));
+        }
+        if let (Some(t), Some(t0)) = (self.cfg.telemetry.as_deref(), t0) {
+            let dur = clock::to_cycles(t0.elapsed());
+            t.compact.record(dur);
+            t.ring.push(TraceOp::Compact, TraceStage::Run, dur, bytes);
         }
         Ok(())
     }

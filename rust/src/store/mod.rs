@@ -60,10 +60,12 @@ pub mod zone;
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::bic::bitmap::Bitmap;
+use crate::bic::clock;
 use crate::bic::codec::{CodecBitmap, CompressedIndex};
+use crate::obs::{Telemetry, TraceOp, TraceStage};
 use self::compaction::CompactionPolicy;
 pub use self::compaction::Compactor;
 use self::manifest::{ManifestState, SegmentEntry};
@@ -135,6 +137,11 @@ pub struct StoreConfig {
     /// (the default) is the plain filesystem; tests select
     /// [`vfs::FaultVfs`] to inject seeded faults.
     pub vfs: Arc<dyn Vfs>,
+    /// Telemetry channels shared with the owning engine: when set, the
+    /// store records flush durations and the WAL records group-commit
+    /// write+fsync timings into it. `None` (the default) keeps the
+    /// store paths free of clock reads and atomics.
+    pub telemetry: Option<Arc<Telemetry>>,
 }
 
 impl Default for StoreConfig {
@@ -146,6 +153,7 @@ impl Default for StoreConfig {
             zone_pruning: true,
             degraded: DegradedPolicy::default(),
             vfs: Arc::new(RealVfs),
+            telemetry: None,
         }
     }
 }
@@ -170,6 +178,15 @@ pub struct Store {
     pub(crate) memtable: Vec<Vec<CodecBitmap>>,
     pub(crate) memtable_bits: usize,
     segment_bytes_written: u64,
+    /// Maintenance counters, always collected (plain `u64` bumps on
+    /// already-rare operations — no telemetry gate): scrub passes run
+    /// and bytes verified, compaction rounds and segment bytes they
+    /// wrote. Surfaced through [`Store::maintenance_counters`] into
+    /// the engine's stats.
+    pub(crate) scrub_passes: u64,
+    pub(crate) scrub_bytes_verified: u64,
+    pub(crate) compaction_rounds: u64,
+    pub(crate) compaction_bytes_written: u64,
 }
 
 /// Subdirectory quarantined segment files are moved into (kept, not
@@ -214,7 +231,13 @@ impl Store {
             segments: Vec::new(),
         };
         manifest::commit(cfg.vfs.as_ref(), &dir, &state)?;
-        let wal = Wal::create(cfg.vfs.as_ref(), &dir, 0, cfg.group_window)?;
+        let wal = Wal::create(
+            cfg.vfs.as_ref(),
+            &dir,
+            0,
+            cfg.group_window,
+            cfg.telemetry.clone(),
+        )?;
         Ok(Store {
             dir,
             cfg,
@@ -227,6 +250,10 @@ impl Store {
             memtable: Vec::new(),
             memtable_bits: 0,
             segment_bytes_written: 0,
+            scrub_passes: 0,
+            scrub_bytes_verified: 0,
+            compaction_rounds: 0,
+            compaction_bytes_written: 0,
         })
     }
 
@@ -417,6 +444,7 @@ impl Store {
             state.wal_gen,
             valid_len,
             cfg.group_window,
+            cfg.telemetry.clone(),
         )?;
         let memtable_bits = memtable
             .iter()
@@ -435,6 +463,10 @@ impl Store {
             memtable,
             memtable_bits,
             segment_bytes_written: 0,
+            scrub_passes: 0,
+            scrub_bytes_verified: 0,
+            compaction_rounds: 0,
+            compaction_bytes_written: 0,
         })
     }
 
@@ -498,6 +530,20 @@ impl Store {
     /// compactions) — the extmem-side accounting quantity.
     pub fn segment_bytes_written(&self) -> u64 {
         self.segment_bytes_written
+    }
+
+    /// The maintenance counters in one shot: `[scrub_passes,
+    /// scrub_bytes_verified, compaction_rounds,
+    /// compaction_bytes_written]`. Always collected (telemetry on or
+    /// off); reset when the handle is reopened, like
+    /// [`Store::segment_bytes_written`].
+    pub(crate) fn maintenance_counters(&self) -> [u64; 4] {
+        [
+            self.scrub_passes,
+            self.scrub_bytes_verified,
+            self.compaction_rounds,
+            self.compaction_bytes_written,
+        ]
     }
 
     /// Append one encoded batch. Returns once the batch is durable in
@@ -584,6 +630,7 @@ impl Store {
         if self.memtable.is_empty() {
             return Ok(None);
         }
+        let t0 = self.cfg.telemetry.as_ref().map(|_| Instant::now());
         // Drive every outstanding group-commit submission durable before
         // the generation rotates: a ticket must never be stranded behind
         // a WAL the manifest no longer references.
@@ -613,8 +660,13 @@ impl Store {
         // next recovery sweeps). After the commit the swap below is
         // infallible, so the handle can never keep acknowledging
         // appends into a generation the manifest has rotated away.
-        let new_wal =
-            Wal::create(self.vfs(), &self.dir, new_gen, self.cfg.group_window)?;
+        let new_wal = Wal::create(
+            self.vfs(),
+            &self.dir,
+            new_gen,
+            self.cfg.group_window,
+            self.cfg.telemetry.clone(),
+        )?;
         let mut entries = self.manifest_entries();
         entries.push(SegmentEntry {
             id,
@@ -653,6 +705,11 @@ impl Store {
         self.memtable.clear();
         self.memtable_bits = 0;
         self.segment_bytes_written += bytes;
+        if let (Some(t), Some(t0)) = (self.cfg.telemetry.as_deref(), t0) {
+            let dur = clock::to_cycles(t0.elapsed());
+            t.flush.record(dur);
+            t.ring.push(TraceOp::Flush, TraceStage::Run, dur, bytes);
+        }
         Ok(Some(bytes))
     }
 

@@ -21,11 +21,13 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::manifest::{self, ManifestState, SegmentEntry};
 use super::segment::Segment;
 use super::{move_to_quarantine, Result, Store, StoreError};
+use crate::bic::clock;
+use crate::obs::{TraceOp, TraceStage};
 
 /// What one scrub pass found and did.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -51,6 +53,7 @@ impl Store {
     /// or a typed refusal under
     /// [`super::DegradedPolicy::FailClosed`].
     pub fn scrub(&mut self) -> Result<ScrubReport> {
+        let t0 = self.cfg.telemetry.as_ref().map(|_| Instant::now());
         let mut report = ScrubReport::default();
         let mut bad: Vec<usize> = Vec::new();
         for (i, seg) in self.segments.iter().enumerate() {
@@ -83,6 +86,7 @@ impl Store {
         if bad.is_empty() {
             report.degraded_segments = self.degraded_segments();
             report.rows_unavailable = self.rows_unavailable();
+            self.note_scrub_pass(t0, &report);
             return Ok(report);
         }
 
@@ -123,7 +127,25 @@ impl Store {
         self.quarantined.sort_by_key(|e| e.base);
         report.degraded_segments = self.degraded_segments();
         report.rows_unavailable = self.rows_unavailable();
+        self.note_scrub_pass(t0, &report);
         Ok(report)
+    }
+
+    /// Book one completed scrub pass: bump the always-on maintenance
+    /// counters, and record the pass duration when telemetry is on.
+    fn note_scrub_pass(&mut self, t0: Option<Instant>, report: &ScrubReport) {
+        self.scrub_passes += 1;
+        self.scrub_bytes_verified += report.bytes_verified;
+        if let (Some(t), Some(t0)) = (self.cfg.telemetry.as_deref(), t0) {
+            let dur = clock::to_cycles(t0.elapsed());
+            t.scrub.record(dur);
+            t.ring.push(
+                TraceOp::Scrub,
+                TraceStage::Run,
+                dur,
+                report.bytes_verified,
+            );
+        }
     }
 }
 

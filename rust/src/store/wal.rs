@@ -59,11 +59,13 @@
 use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::vfs::{Vfs, VfsFile};
 use super::{Result, StoreError};
+use crate::bic::clock;
 use crate::bic::codec::{read_u32, CodecBitmap};
+use crate::obs::{Telemetry, TraceOp, TraceStage};
 use crate::substrate::crc::crc32;
 
 /// How many times a transiently-failing group fsync is retried before
@@ -111,6 +113,9 @@ struct Shared {
     file: Mutex<Box<dyn VfsFile>>,
     state: Mutex<CommitState>,
     cv: Condvar,
+    /// When set, each successful leader write+fsync records its
+    /// duration (and the group's byte size) here.
+    obs: Option<Arc<Telemetry>>,
 }
 
 struct CommitState {
@@ -221,6 +226,7 @@ impl Shared {
     /// backoff: the bytes are staged, only the barrier failed, so
     /// re-issuing the fsync is safe.
     fn write_and_sync(&self, batch: &[u8]) -> io::Result<()> {
+        let t0 = self.obs.as_ref().map(|_| Instant::now());
         let mut f = self
             .file
             .lock()
@@ -230,7 +236,19 @@ impl Shared {
         let mut attempt = 0u32;
         loop {
             match f.sync() {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    if let (Some(t), Some(t0)) = (self.obs.as_deref(), t0) {
+                        let dur = clock::to_cycles(t0.elapsed());
+                        t.wal_fsync.record(dur);
+                        t.ring.push(
+                            TraceOp::Wal,
+                            TraceStage::GroupCommit,
+                            dur,
+                            batch.len() as u64,
+                        );
+                    }
+                    return Ok(());
+                }
                 Err(e) if attempt < SYNC_RETRIES && transient(e.kind()) => {
                     attempt += 1;
                     std::thread::sleep(delay);
@@ -258,7 +276,11 @@ fn encode_record(rows: &[CodecBitmap]) -> Vec<u8> {
 }
 
 impl Wal {
-    fn from_file(file: Box<dyn VfsFile>, window: Duration) -> Wal {
+    fn from_file(
+        file: Box<dyn VfsFile>,
+        window: Duration,
+        obs: Option<Arc<Telemetry>>,
+    ) -> Wal {
         Wal {
             shared: Arc::new(Shared {
                 window,
@@ -271,6 +293,7 @@ impl Wal {
                     poisoned: None,
                 }),
                 cv: Condvar::new(),
+                obs,
             }),
         }
     }
@@ -281,9 +304,10 @@ impl Wal {
         dir: &Path,
         gen: u64,
         window: Duration,
+        obs: Option<Arc<Telemetry>>,
     ) -> Result<Wal> {
         let file = vfs.open_append(&path(dir, gen))?;
-        Ok(Wal::from_file(file, window))
+        Ok(Wal::from_file(file, window, obs))
     }
 
     /// Reopen generation `gen` truncated to its valid prefix (what
@@ -294,9 +318,10 @@ impl Wal {
         gen: u64,
         valid_len: u64,
         window: Duration,
+        obs: Option<Arc<Telemetry>>,
     ) -> Result<Wal> {
         let file = vfs.open_truncated(&path(dir, gen), valid_len)?;
-        Ok(Wal::from_file(file, window))
+        Ok(Wal::from_file(file, window, obs))
     }
 
     /// Buffer one batch record and take its commit sequence. Cheap (no
@@ -429,7 +454,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let batches: Vec<_> = (0..4).map(|i| batch(500 + i, i as u64)).collect();
         {
-            let wal = Wal::create(&RealVfs, &dir, 5, Duration::ZERO).unwrap();
+            let wal = Wal::create(&RealVfs, &dir, 5, Duration::ZERO, None).unwrap();
             for b in &batches {
                 wal.append(b).unwrap();
             }
@@ -480,7 +505,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let batches: Vec<_> = (0..3).map(|i| batch(400, 10 + i)).collect();
         {
-            let wal = Wal::create(&RealVfs, &dir, 0, Duration::ZERO).unwrap();
+            let wal = Wal::create(&RealVfs, &dir, 0, Duration::ZERO, None).unwrap();
             for b in &batches {
                 wal.append(b).unwrap();
             }
@@ -508,7 +533,7 @@ mod tests {
         let b0 = batch(300, 77);
         let b1 = batch(301, 78);
         {
-            let wal = Wal::create(&RealVfs, &dir, 1, Duration::ZERO).unwrap();
+            let wal = Wal::create(&RealVfs, &dir, 1, Duration::ZERO, None).unwrap();
             wal.append(&b0).unwrap();
         }
         // Simulate a torn tail, then recover + append.
@@ -520,9 +545,15 @@ mod tests {
         assert_eq!(got.len(), 1);
         assert_eq!(valid as usize, good_len);
         {
-            let wal =
-                Wal::open_truncated(&RealVfs, &dir, 1, valid, Duration::ZERO)
-                    .unwrap();
+            let wal = Wal::open_truncated(
+                &RealVfs,
+                &dir,
+                1,
+                valid,
+                Duration::ZERO,
+                None,
+            )
+            .unwrap();
             wal.append(&b1).unwrap();
         }
         let (got, _) = replay(&RealVfs, &dir, 1, 3).unwrap();
@@ -538,7 +569,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let batches: Vec<_> = (0..6).map(|i| batch(200 + i, 50 + i as u64)).collect();
         {
-            let wal = Wal::create(&RealVfs, &dir, 2, Duration::ZERO).unwrap();
+            let wal = Wal::create(&RealVfs, &dir, 2, Duration::ZERO, None).unwrap();
             // Submit everything first (buffered, un-synced), then wait
             // the tickets out of order: the file must still hold the
             // records in submit order, and one leader sync covers all.
@@ -561,7 +592,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let b0 = batch(128, 1);
         let b1 = batch(128, 2);
-        let wal = Wal::create(&RealVfs, &dir, 3, Duration::ZERO).unwrap();
+        let wal = Wal::create(&RealVfs, &dir, 3, Duration::ZERO, None).unwrap();
         let t0 = wal.submit(&b0).unwrap();
         let t1 = wal.submit(&b1).unwrap();
         wal.sync_pending().unwrap();
@@ -580,7 +611,8 @@ mod tests {
         let _ = fs::remove_dir_all(&dir);
         fs::create_dir_all(&dir).unwrap();
         let wal =
-            Wal::create(&RealVfs, &dir, 4, Duration::from_millis(2)).unwrap();
+            Wal::create(&RealVfs, &dir, 4, Duration::from_millis(2), None)
+                .unwrap();
         let batches: Vec<_> = (0..3).map(|i| batch(64, 90 + i)).collect();
         for b in &batches {
             wal.append(b).unwrap();
@@ -606,7 +638,7 @@ mod tests {
             }],
         );
         let b = batch(128, 5);
-        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO).unwrap();
+        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO, None).unwrap();
         wal.append(&b).unwrap(); // retried fsync, no poison
         let b2 = batch(128, 6);
         wal.append(&b2).unwrap(); // generation still usable
@@ -629,7 +661,7 @@ mod tests {
             })
             .collect();
         let fv = FaultVfs::with_plan(10, plan);
-        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO).unwrap();
+        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO, None).unwrap();
         assert!(wal.append(&batch(128, 7)).is_err());
         // Poisoned: later submits refuse.
         let err = wal.submit(&batch(128, 8)).unwrap_err();
@@ -650,7 +682,7 @@ mod tests {
                 kind: FaultKind::SyncFail { transient: false },
             }],
         );
-        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO).unwrap();
+        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO, None).unwrap();
         assert!(wal.append(&batch(128, 9)).is_err());
         assert!(wal.submit(&batch(128, 10)).is_err());
         // The acked prefix (nothing) is what replay yields even though
@@ -670,7 +702,7 @@ mod tests {
             12,
             vec![FaultSpec { at_op: 1, kind: FaultKind::WriteNoSpace }],
         );
-        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO).unwrap();
+        let wal = Wal::create(&*fv, &dir, 0, Duration::ZERO, None).unwrap();
         let err = wal.append(&batch(128, 11)).unwrap_err();
         assert!(err.to_string().contains("ENOSPC"), "{err}");
         assert!(wal.submit(&batch(128, 12)).is_err());

@@ -55,6 +55,10 @@ pub struct BenchResult {
     pub iters_per_sample: u64,
     /// Optional throughput denominator: bytes processed per iteration.
     pub bytes_per_iter: Option<u64>,
+    /// Optional bench-specific structured payload (e.g. latency
+    /// quantiles), carried verbatim into the `BENCH_*.json` case under
+    /// `"extra"`. The regression gate ignores it.
+    pub extra: Option<Json>,
 }
 
 impl BenchResult {
@@ -81,6 +85,9 @@ impl BenchResult {
         match self.throughput() {
             Some(tp) => j.set("throughput_bps", tp),
             None => j.set("throughput_bps", Json::Null),
+        }
+        if let Some(extra) = &self.extra {
+            j.set("extra", extra.clone());
         }
         j
     }
@@ -164,6 +171,7 @@ impl Bench {
             per_iter: Summary::of(&samples),
             iters_per_sample: iters,
             bytes_per_iter: self.bytes,
+            extra: None,
         };
         println!("{}", result.line());
         result
@@ -214,11 +222,22 @@ mod tests {
             per_iter: Summary::of(&[1e-6, 1e-6]),
             iters_per_sample: 10,
             bytes_per_iter: None,
+            extra: None,
         };
         let j = r.to_json();
         assert_eq!(j.get("name").and_then(Json::as_str), Some("x"));
         assert!(j.get("mean_s").and_then(Json::as_f64).unwrap() > 0.0);
         assert_eq!(j.get("bytes_per_iter"), Some(&Json::Null));
+        assert_eq!(j.get("extra"), None, "no extra field unless attached");
+        let mut r2 = r;
+        r2.extra = Some(Json::obj([("p50_ns", 120u64.into())]));
+        let j2 = r2.to_json();
+        assert_eq!(
+            j2.get("extra")
+                .and_then(|e| e.get("p50_ns"))
+                .and_then(Json::as_f64),
+            Some(120.0)
+        );
     }
 
     #[test]
@@ -228,6 +247,7 @@ mod tests {
             per_iter: Summary::of(&[1e-6, 1e-6]),
             iters_per_sample: 10,
             bytes_per_iter: Some(512),
+            extra: None,
         };
         let line = r.line();
         assert!(line.contains("/iter"));

@@ -624,7 +624,7 @@ fn stats_json_surface_is_versioned_and_stable() {
         |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or_else(|| {
             panic!("stats JSON missing numeric field {k:?}")
         });
-    assert_eq!(num("stats_version"), 1.0);
+    assert_eq!(num("stats_version"), 2.0);
     assert_eq!(num("attrs"), CFG.m_keys as f64);
     assert_eq!(num("batches_ingested"), 4.0);
     assert_eq!(num("objects"), stats.objects as f64);
@@ -634,6 +634,40 @@ fn stats_json_surface_is_versioned_and_stable() {
     assert_eq!(num("rows_unavailable"), 0.0);
     assert_eq!(num("store_chunks_skipped"), stats.store_chunks_skipped as f64);
     assert_eq!(doc.get("durable").and_then(Json::as_bool), Some(true));
+    // Version 2 is additive: everything a v1 consumer parsed by name is
+    // still present under the same name (the full v1 field list), and
+    // the v2 additions sit alongside.
+    for v1_field in [
+        "stats_version",
+        "attrs",
+        "columns",
+        "workers",
+        "batches_ingested",
+        "objects",
+        "segments",
+        "queries_total",
+        "store_row_bytes_read",
+        "store_chunks_skipped",
+        "degraded_segments",
+        "rows_unavailable",
+        "durable",
+    ] {
+        assert!(doc.get(v1_field).is_some(), "v1 field {v1_field} vanished");
+    }
+    for v2_field in [
+        "scrub_passes",
+        "scrub_bytes_verified",
+        "compaction_rounds",
+        "compaction_bytes_written",
+        "telemetry",
+    ] {
+        assert!(
+            doc.get(v2_field).and_then(Json::as_f64).is_some()
+                || doc.get(v2_field).and_then(Json::as_bool).is_some(),
+            "v2 field {v2_field} missing"
+        );
+    }
+    assert_eq!(doc.get("telemetry").and_then(Json::as_bool), Some(false));
     engine.close().expect("close");
     let _ = fs::remove_dir_all(&dir);
 }

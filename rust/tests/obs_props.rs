@@ -1,0 +1,513 @@
+//! Observability properties (`sotb_bic::obs` + the engine/server
+//! surfaces built on it):
+//!
+//! - the log-bucketed histogram's quantiles land in the *same bucket*
+//!   as an exact sorted-reference nearest-rank percentile, across
+//!   uniform, heavy-tailed, constant, and sub-linear-range inputs;
+//! - snapshot merging is associative/commutative and indistinguishable
+//!   from having recorded everything into one histogram;
+//! - concurrent recording loses nothing (count/sum/max and every
+//!   quantile match a sequential replay);
+//! - `Engine::explain` is differential: the predicted zone-skip set and
+//!   fold accounting equal what the measured run's counters say;
+//! - telemetry channels populate end to end, and the whole wire surface
+//!   (`metrics` quantiles, `explain`, `slowlog`, `trace`,
+//!   `telemetry-off`) round-trips through a real server.
+
+use std::fs;
+use std::path::PathBuf;
+
+use sotb_bic::engine::{col, Engine, EngineBuilder, Schema};
+use sotb_bic::obs::hist::{bucket_index, Histogram};
+use sotb_bic::obs::HistSnapshot;
+use sotb_bic::server::client::Client;
+use sotb_bic::server::protocol::{response_error_code, response_ok};
+use sotb_bic::server::Server;
+use sotb_bic::substrate::json::Json;
+use sotb_bic::substrate::rng::Xoshiro256;
+
+const KEYS: [i32; 8] = [2, 5, 11, 23, 77, 130, 200, 251];
+
+fn schema() -> Schema {
+    Schema::single("byte", KEYS).expect("schema")
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("bic-obs-props-{}-{tag}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A batch of `n` eight-word records, every word carrying `key` — the
+/// most clusterable content possible: a segment built only from such
+/// batches has exactly one nonzero attribute row, so zone maps prove
+/// every other attribute absent.
+fn single_key_batch(key: i32, n: usize) -> Vec<Vec<i32>> {
+    vec![vec![key; 8]; n]
+}
+
+// ---------------------------------------------------------------------
+// Histogram properties
+// ---------------------------------------------------------------------
+
+/// Exact 0-based nearest-rank percentile over a sorted slice — the
+/// reference `HistSnapshot::quantile` is checked against.
+fn exact_rank(sorted: &[u64], q: f64) -> u64 {
+    let rank = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[rank]
+}
+
+fn quantile_grid() -> Vec<f64> {
+    (0..=100).map(|i| i as f64 / 100.0).collect()
+}
+
+#[test]
+fn quantiles_share_a_bucket_with_the_exact_reference() {
+    let mut rng = Xoshiro256::seeded(0x0B5);
+    let distributions: Vec<(&str, Vec<u64>)> = vec![
+        ("uniform", (0..5_000).map(|_| rng.next_below(1_000_000)).collect()),
+        (
+            // Heavy tail: uniform mantissa under an exponentially
+            // distributed magnitude, like real latency outliers.
+            "log-uniform",
+            (0..5_000)
+                .map(|_| {
+                    let mag = rng.next_below(30);
+                    (1u64 << mag) + rng.next_below((1u64 << mag).max(1))
+                })
+                .collect(),
+        ),
+        ("constant", vec![4_242; 1_000]),
+        // Entirely inside the exact sub-16 buckets.
+        ("tiny", (0..2_000).map(|_| rng.next_below(16)).collect()),
+        ("single", vec![7]),
+    ];
+    for (tag, values) in distributions {
+        let h = Histogram::new();
+        for &v in &values {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, values.len() as u64, "{tag}: count");
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        assert_eq!(snap.max, *sorted.last().expect("nonempty"), "{tag}: max");
+        for q in quantile_grid() {
+            let exact = exact_rank(&sorted, q);
+            let est = snap.quantile(q);
+            // Same bucket: the estimate is the *upper bound* of the
+            // bucket holding the exact nearest-rank sample...
+            assert_eq!(
+                bucket_index(est),
+                bucket_index(exact),
+                "{tag}: q={q} est={est} exact={exact}"
+            );
+            // ...so it never undershoots, and overshoots by at most the
+            // bucket width (<= lo/8 + 1 by construction).
+            assert!(est >= exact, "{tag}: q={q} est={est} < exact={exact}");
+            assert!(
+                est - exact <= exact / 8 + 1,
+                "{tag}: q={q} est={est} too far above exact={exact}"
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_is_associative_commutative_and_matches_single_recording() {
+    let mut rng = Xoshiro256::seeded(0x3E6);
+    let parts: Vec<Vec<u64>> = (0..3)
+        .map(|p| {
+            (0..1_500)
+                .map(|_| rng.next_below(10u64.pow(p as u32 + 3)))
+                .collect()
+        })
+        .collect();
+    let snaps: Vec<HistSnapshot> = parts
+        .iter()
+        .map(|values| {
+            let h = Histogram::new();
+            for &v in values {
+                h.record(v);
+            }
+            h.snapshot()
+        })
+        .collect();
+    // (a + b) + c, a + (b + c), and (c + a) + b.
+    let fold = |order: [usize; 3]| {
+        let mut acc = snaps[order[0]].clone();
+        acc.merge(&snaps[order[1]]);
+        acc.merge(&snaps[order[2]]);
+        acc
+    };
+    let everything = {
+        let h = Histogram::new();
+        for values in &parts {
+            for &v in values {
+                h.record(v);
+            }
+        }
+        h.snapshot()
+    };
+    for order in [[0, 1, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+        let m = fold(order);
+        assert_eq!(m.count, everything.count, "{order:?}: count");
+        assert_eq!(m.sum, everything.sum, "{order:?}: sum");
+        assert_eq!(m.max, everything.max, "{order:?}: max");
+        for q in quantile_grid() {
+            assert_eq!(
+                m.quantile(q),
+                everything.quantile(q),
+                "{order:?}: quantile({q})"
+            );
+        }
+    }
+}
+
+#[test]
+fn concurrent_recording_loses_nothing() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    let shared = Histogram::new();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let shared = &shared;
+            s.spawn(move || {
+                let mut rng = Xoshiro256::seeded(0xCC + t);
+                for _ in 0..PER_THREAD {
+                    shared.record(rng.next_below(1 << 20));
+                }
+            });
+        }
+    });
+    let got = shared.snapshot();
+    // Sequential replay with the same per-thread streams.
+    let reference = Histogram::new();
+    for t in 0..THREADS {
+        let mut rng = Xoshiro256::seeded(0xCC + t);
+        for _ in 0..PER_THREAD {
+            reference.record(rng.next_below(1 << 20));
+        }
+    }
+    let want = reference.snapshot();
+    assert_eq!(got.count, THREADS * PER_THREAD);
+    assert_eq!(got.count, want.count);
+    assert_eq!(got.sum, want.sum);
+    assert_eq!(got.max, want.max);
+    for q in quantile_grid() {
+        assert_eq!(got.quantile(q), want.quantile(q), "quantile({q})");
+    }
+}
+
+// ---------------------------------------------------------------------
+// EXPLAIN is differential
+// ---------------------------------------------------------------------
+
+/// Four flushed segments, the last two provably disjoint from the
+/// predicate: explain's predicted skip set, the measured `analyze` run,
+/// and the engine's own fold counters must all tell the same story.
+#[test]
+fn explain_predictions_match_the_measured_run() {
+    let dir = tmpdir("explain");
+    let engine = Engine::builder(schema())
+        .batch_records(64)
+        .record_words(8)
+        .durable(&dir)
+        .flush_batches(2)
+        .build()
+        .expect("build");
+    // Segments 1+2 hold only KEYS[0]; segments 3+4 only KEYS[1].
+    for _ in 0..4 {
+        engine.ingest(&single_key_batch(KEYS[0], 64)).expect("ingest");
+    }
+    for _ in 0..4 {
+        engine.ingest(&single_key_batch(KEYS[1], 64)).expect("ingest");
+    }
+    let p = col("byte").eq(KEYS[0]);
+    let before = engine.stats();
+    let report = engine.explain(&p, true).expect("explain");
+    let after = engine.stats();
+
+    // The reported tier is the planner's live decision, and exactly one
+    // rule of the walk fired.
+    let q = p.lower(&schema()).expect("lower");
+    assert_eq!(report.tier, engine.plan(&q).path.label());
+    assert_eq!(report.tier, "store", "durable segments plan to the store");
+    assert!(!report.rules.is_empty());
+    assert_eq!(
+        report.rules.iter().filter(|r| r.matched).count(),
+        1,
+        "first-match-wins rule walk"
+    );
+    assert!(report.est_cost > 0);
+
+    // Chunk verdicts: four zoned segments, the KEYS[1] half predicted
+    // skipped without reading a row.
+    let segments: Vec<_> =
+        report.chunks.iter().filter(|c| c.kind == "segment").collect();
+    assert_eq!(segments.len(), 4, "four flushed segments");
+    for c in &segments {
+        assert!(c.zoned, "segment at base {} lost its zone map", c.base);
+        assert_eq!(c.nbits, 128, "two batches of 64 per segment");
+        let holds_other_key = c.base >= 256;
+        assert_eq!(
+            c.skip, holds_other_key,
+            "segment at base {}: skip verdict",
+            c.base
+        );
+        if c.skip {
+            assert_eq!(c.rows_folded, 0);
+            assert_eq!(c.row_bytes, 0);
+            assert!(c.windows_skipped > 0);
+        } else {
+            assert!(c.rows_folded > 0);
+        }
+    }
+
+    // Differential core: prediction == measured run == engine counters.
+    let actual = report.actual.as_ref().expect("analyze ran");
+    assert_eq!(actual.stats, report.predicted, "predicted != measured");
+    assert!(report.predicted.chunks_skipped > 0, "nothing was skippable");
+    assert_eq!(
+        after.store_chunks_skipped - before.store_chunks_skipped,
+        report.predicted.chunks_skipped,
+        "engine skip counter disagrees with the predicted skip set"
+    );
+    assert_eq!(
+        after.store_row_bytes_read - before.store_row_bytes_read,
+        report.predicted.row_bytes,
+        "engine byte counter disagrees with the predicted fold"
+    );
+    // Every record carries KEYS[0] in the first half: 4 batches x 64.
+    assert_eq!(actual.count, 256);
+
+    // Without analyze the prediction half is identical and nothing runs.
+    let quiet = engine.explain(&p, false).expect("explain");
+    assert!(quiet.actual.is_none());
+    assert_eq!(quiet.predicted, report.predicted);
+    assert_eq!(engine.stats().queries_total(), after.queries_total());
+
+    engine.close().expect("close");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Telemetry channels end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn telemetry_channels_populate_and_the_ring_drains_incrementally() {
+    let dir = tmpdir("channels");
+    let engine = Engine::builder(schema())
+        .batch_records(64)
+        .record_words(8)
+        .durable(&dir)
+        .flush_batches(2)
+        .telemetry(true)
+        .build()
+        .expect("build");
+    for i in 0..4 {
+        engine
+            .ingest(&single_key_batch(KEYS[i % KEYS.len()], 64))
+            .expect("ingest");
+    }
+    let p = col("byte").eq(KEYS[0]);
+    for _ in 0..3 {
+        engine.select(&p).expect("query");
+    }
+    engine.flush().expect("flush");
+    engine.scrub().expect("scrub");
+
+    let t = engine.telemetry().expect("telemetry on");
+    assert!(t.ingest_ack.count() >= 4, "one ack per sync batch");
+    assert!(t.wal_fsync.count() > 0, "durable ingest fsynced");
+    let queries: u64 = t.query.iter().map(Histogram::count).sum();
+    assert_eq!(queries, 3, "one per-tier sample per query");
+    assert_eq!(t.query_bytes.count(), 3);
+    assert!(t.flush.count() > 0, "flush duration recorded");
+    assert!(t.scrub.count() > 0, "scrub duration recorded");
+    assert!(engine.stats().telemetry);
+
+    // The slow log saw the queries (default threshold admits all).
+    let slow = engine.slowlog_json().expect("slowlog on");
+    assert_eq!(slow.as_arr().map(<[Json]>::len), Some(3));
+
+    // Draining the ring returns events once: a second drain with no
+    // traffic in between is empty, and traffic after a drain shows up
+    // in the next one.
+    let first = engine.trace_json().expect("trace on");
+    assert!(
+        first.as_arr().is_some_and(|e| !e.is_empty()),
+        "stage events published"
+    );
+    let second = engine.trace_json().expect("trace on");
+    assert_eq!(second.as_arr().map(<[Json]>::len), Some(0));
+    engine.select(&p).expect("query");
+    let third = engine.trace_json().expect("trace on");
+    assert!(third.as_arr().is_some_and(|e| !e.is_empty()));
+
+    // The exposition JSON mirrors the channels.
+    let doc = engine.telemetry_json().expect("exposition");
+    let ack_count = doc
+        .get("ingest_ack")
+        .and_then(|h| h.get("count"))
+        .and_then(Json::as_f64)
+        .expect("ingest_ack.count");
+    assert!(ack_count >= 4.0);
+    assert!(
+        doc.get("query").and_then(|q| q.get("store")).is_some(),
+        "per-tier query histograms keyed by label"
+    );
+    engine.close().expect("close");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disabled_telemetry_is_absent_not_empty() {
+    let engine = EngineBuilder::new(schema())
+        .batch_records(64)
+        .record_words(8)
+        .build()
+        .expect("build");
+    engine.ingest(&single_key_batch(KEYS[0], 64)).expect("ingest");
+    engine.select(&col("byte").eq(KEYS[0])).expect("query");
+    assert!(engine.telemetry().is_none());
+    assert!(engine.telemetry_json().is_none());
+    assert!(engine.trace_json().is_none());
+    assert!(engine.slowlog_json().is_none());
+    assert!(!engine.stats().telemetry);
+    // Explain stays available: it reads plans and zone maps, not
+    // telemetry.
+    let report =
+        engine.explain(&col("byte").eq(KEYS[0]), false).expect("explain");
+    assert!(!report.rules.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// The wire surface
+// ---------------------------------------------------------------------
+
+#[test]
+fn wire_surface_exposes_quantiles_explain_slowlog_and_trace() {
+    let root = std::env::temp_dir()
+        .join(format!("bic-obs-wire-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&root);
+    let handle =
+        Server::bind(&root, "127.0.0.1:0", 8).expect("bind").spawn();
+    let mut c = Client::connect(handle.local_addr()).expect("connect");
+
+    let schema_doc = Json::obj([(
+        "columns",
+        Json::Arr(vec![Json::obj([
+            ("name", "k".into()),
+            ("values", vec![1, 2, 3, 4].into()),
+        ])]),
+    )]);
+    let telem_cfg = Json::obj([
+        ("telemetry", true.into()),
+        ("flush_batches", 2.into()),
+    ]);
+    for (name, cfg) in [("obs", Some(&telem_cfg)), ("plain", None)] {
+        let resp =
+            c.create_tenant(name, &schema_doc, cfg).expect("transport");
+        assert!(response_ok(&resp), "create {name}: {}", resp.render());
+    }
+    let eq1 = Json::obj([("col", "k".into()), ("eq", 1.into())]);
+    for _ in 0..6 {
+        let resp = c
+            .ingest("obs", &vec![vec![1i32]; 8], true)
+            .expect("transport");
+        assert!(response_ok(&resp), "ingest: {}", resp.render());
+        let resp = c.query("obs", &eq1).expect("transport");
+        assert!(response_ok(&resp), "query: {}", resp.render());
+    }
+    let resp = c.scrub("obs").expect("transport");
+    assert!(response_ok(&resp), "scrub: {}", resp.render());
+
+    // metrics: versioned, with per-tenant quantiles for the telemetry
+    // tenant only, maintenance counters exposed, and the Prometheus
+    // text alongside.
+    let m = c.metrics().expect("transport");
+    assert!(response_ok(&m), "metrics: {}", m.render());
+    assert_eq!(m.get("stats_version").and_then(Json::as_f64), Some(2.0));
+    let obs_tenant =
+        m.get("tenants").and_then(|t| t.get("obs")).expect("tenant obs");
+    let telem = obs_tenant.get("telemetry").expect("telemetry section");
+    let ack = telem.get("ingest_ack").expect("ingest_ack channel");
+    for field in ["count", "p50", "p90", "p99"] {
+        assert!(
+            ack.get(field).and_then(Json::as_f64).expect(field) > 0.0,
+            "ingest_ack.{field} not populated: {}",
+            ack.render()
+        );
+    }
+    let engine_stats = obs_tenant.get("engine").expect("engine stats");
+    assert!(
+        engine_stats
+            .get("scrub_passes")
+            .and_then(Json::as_f64)
+            .expect("scrub_passes exposed")
+            >= 1.0,
+        "scrub counter lost between store and metrics"
+    );
+    assert_eq!(
+        engine_stats.get("telemetry").and_then(Json::as_bool),
+        Some(true)
+    );
+    let plain_tenant =
+        m.get("tenants").and_then(|t| t.get("plain")).expect("tenant plain");
+    assert!(
+        plain_tenant.get("telemetry").is_none(),
+        "non-collecting tenant must not fake a telemetry section"
+    );
+    let prom = m
+        .get("prometheus")
+        .and_then(Json::as_str)
+        .expect("prometheus text");
+    assert!(prom.starts_with("# bic_metrics_version 2"), "version header");
+    for series in
+        ["bic_ingest_ack_cycles", "bic_query_cycles", "tenant=\"obs\""]
+    {
+        assert!(prom.contains(series), "prometheus lacks {series}");
+    }
+
+    // explain round-trips over the wire, tier + analyze attached.
+    let resp = c.explain("obs", &eq1, true).expect("transport");
+    assert!(response_ok(&resp), "explain: {}", resp.render());
+    let report = resp.get("explain").expect("report");
+    assert!(report.get("tier").and_then(Json::as_str).is_some());
+    assert!(report.get("rules").and_then(Json::as_arr).is_some());
+    assert!(report.get("actual").is_some(), "analyze:true ran");
+    // ...and works on the non-telemetry tenant too.
+    let resp = c.explain("plain", &eq1, false).expect("transport");
+    assert!(response_ok(&resp), "explain plain: {}", resp.render());
+
+    // slowlog + trace answer on the collecting tenant...
+    let resp = c.slowlog("obs").expect("transport");
+    assert!(response_ok(&resp), "slowlog: {}", resp.render());
+    assert!(resp
+        .get("slowlog")
+        .and_then(Json::as_arr)
+        .is_some_and(|e| !e.is_empty()));
+    let resp = c.trace("obs").expect("transport");
+    assert!(response_ok(&resp), "trace: {}", resp.render());
+    assert!(resp.get("events").and_then(Json::as_arr).is_some());
+
+    // ...and are a typed `telemetry-off` error on the plain tenant.
+    for resp in [
+        c.slowlog("plain").expect("transport"),
+        c.trace("plain").expect("transport"),
+    ] {
+        assert!(!response_ok(&resp), "expected failure: {}", resp.render());
+        assert_eq!(
+            response_error_code(&resp),
+            Some("telemetry-off"),
+            "in {}",
+            resp.render()
+        );
+    }
+
+    handle.stop();
+    let _ = fs::remove_dir_all(&root);
+}
