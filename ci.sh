@@ -126,9 +126,10 @@ if [[ "${1:-}" == "--bench" ]]; then
     echo "== bench-smoke: compression ablation =="
     BENCH_SMOKE=1 cargo bench --bench ablations
     # The pipelined-ingest and pruned-query pairs, the contention case,
-    # and the telemetry-overhead twin must all be present in the emitted
-    # results (they run inside the hotpath bench above).
-    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query engine/query_telemetry engine/contention; do
+    # the telemetry-overhead twin, and the bit-sliced range/aggregate
+    # cases must all be present in the emitted results (they run inside
+    # the hotpath bench above).
+    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query engine/query_telemetry engine/contention bsi/range bsi/aggregate; do
         grep -q "\"$bench_case\"" BENCH_hotpath.json \
             || { echo "missing bench case $bench_case in BENCH_hotpath.json"; exit 1; }
     done

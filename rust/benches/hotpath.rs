@@ -451,6 +451,114 @@ fn main() {
         let _ = std::fs::remove_dir_all(&bench_root);
     }
 
+    // Bit-sliced tier: range selection through the O(log span) slice
+    // circuit vs the same predicate forced onto the O(domain)
+    // OR-expansion (an engine built with `.bsi(false)`), plus the
+    // weighted-popcount aggregate vs its per-value fallback. Domain 256
+    // — wide enough that the expansion touches two orders of magnitude
+    // more rows than the 9 slice bitmaps. Bit-identity is pinned across
+    // all three content distributions before anything is timed; the
+    // timed pair runs on the uniform trace.
+    group("bit-sliced tier (1 column x domain 256, in-memory)");
+    {
+        use sotb_bic::engine::{col, AggFn, Engine, EngineBuilder, Schema};
+        // One word per record: the column is single-valued per record,
+        // so every chunk builds its slices (multi-valued chunks decline
+        // BSI and would fall back to the very expansion being paired).
+        let ecfg = BicConfig { n_records: 256, w_words: 1, m_keys: 256 };
+        let nbatches = if smoke_mode() { 8 } else { 32 };
+        let build = |bsi: bool| -> Engine {
+            EngineBuilder::new(Schema::single("v", 0..256).expect("schema"))
+                .batch_records(ecfg.n_records)
+                .record_words(ecfg.w_words)
+                .bsi(bsi)
+                .build()
+                .expect("engine")
+        };
+        let range = col("v").between(64, 191);
+        let pins = [
+            col("v").ge(200),
+            col("v").le(40),
+            col("v").between(64, 191),
+            col("v").between(0, 255),
+        ];
+        let mut timed: Option<(Engine, Engine)> = None;
+        for (dist_name, dist) in [
+            ("uniform", ContentDist::Uniform),
+            ("zipf", ContentDist::Zipf { s: 1.2 }),
+            ("clustered", ContentDist::Clustered { spread: 16 }),
+        ] {
+            let slice = build(true);
+            let orexp = build(false);
+            let mut wg = WorkloadGen::new(ecfg, dist, 0xB51);
+            for i in 0..nbatches {
+                let records = wg.batch_at(i as f64).records;
+                slice.ingest(&records).expect("ingest slice");
+                orexp.ingest(&records).expect("ingest orexp");
+            }
+            // Differential pin: the slice circuit must match the
+            // OR-expansion bit for bit on every predicate shape.
+            for p in &pins {
+                assert_eq!(
+                    slice.select(p).expect("slice select"),
+                    orexp.select(p).expect("orexp select"),
+                    "{dist_name}: slice circuit diverged on {p:?}"
+                );
+                assert_eq!(
+                    slice.aggregate("v", AggFn::Sum, Some(p)).expect("agg"),
+                    orexp.aggregate("v", AggFn::Sum, Some(p)).expect("agg"),
+                    "{dist_name}: aggregate diverged on {p:?}"
+                );
+            }
+            assert_eq!(
+                slice.top_k("v", 16, Some(&range)).expect("topk"),
+                orexp.top_k("v", 16, Some(&range)).expect("topk"),
+                "{dist_name}: top_k diverged"
+            );
+            assert!(
+                slice.stats().queries_bsi > 0,
+                "{dist_name}: planner never took the bsi tier"
+            );
+            if dist_name == "uniform" {
+                timed = Some((slice, orexp));
+            }
+        }
+        let (slice, orexp) = timed.expect("uniform pair");
+        let objects = slice.stats().objects;
+        // Bytes folded per evaluation: 9 slice bitmaps (8 + presence)
+        // vs the 128 expanded attribute rows of `between(64, 191)`.
+        let row_bytes = (objects / 8) as u64;
+        results.push(
+            bench("bsi/range")
+                .bytes(9 * row_bytes)
+                .run(|| slice.select(&range).unwrap()),
+        );
+        results.push(
+            bench("bsi/range-orexpand")
+                .bytes(128 * row_bytes)
+                .run(|| orexp.select(&range).unwrap()),
+        );
+        results.push(
+            bench("bsi/aggregate").bytes(9 * row_bytes).run(|| {
+                slice.aggregate("v", AggFn::Sum, Some(&range)).unwrap()
+            }),
+        );
+        results.push(
+            bench("bsi/aggregate-fallback").bytes(128 * row_bytes).run(
+                || orexp.aggregate("v", AggFn::Sum, Some(&range)).unwrap(),
+            ),
+        );
+        results.push(
+            bench("bsi/topk")
+                .bytes(9 * row_bytes)
+                .run(|| slice.top_k("v", 16, Some(&range)).unwrap()),
+        );
+        println!(
+            "bsi: {objects} objects, {} bsi-tier queries recorded",
+            slice.stats().queries_bsi
+        );
+    }
+
     // Service-tier contention: one in-process server, N worker threads
     // with persistent line-protocol clients over loopback, each doing
     // sync-ingest + query rounds against a shared tenant. The sample

@@ -406,6 +406,34 @@ impl Bitmap {
         );
         and_not_words_at(&mut self.words, &other.words, base, other.nbits);
     }
+
+    /// The `len`-bit window `[base, base + len)` of `self` as its own
+    /// bitmap — the extraction inverse of [`Bitmap::or_at`]'s placement.
+    /// Word-shifted, never per-bit: each destination word reads at most
+    /// two source words. This is how a global filter bitmap hands each
+    /// chunk its local slice (the aggregate kernels' filter plumbing).
+    pub fn window(&self, base: usize, len: usize) -> Bitmap {
+        assert!(
+            base + len <= self.nbits,
+            "window: {len} bits at offset {base} exceed {}",
+            self.nbits
+        );
+        let mut out = Bitmap::zeros(len);
+        if len == 0 {
+            return out;
+        }
+        let (w0, off) = (base / WORD_BITS, base % WORD_BITS);
+        let get = |i: usize| self.words.get(i).copied().unwrap_or(0);
+        for j in 0..out.words.len() {
+            out.words[j] = if off == 0 {
+                get(w0 + j)
+            } else {
+                (get(w0 + j) >> off) | (get(w0 + j + 1) << (WORD_BITS - off))
+            };
+        }
+        out.mask_tail();
+        out
+    }
 }
 
 /// Mask of bits `[lo, hi)` within one word (`lo < hi <= 64`).
@@ -577,6 +605,32 @@ impl BitmapIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn window_extracts_any_alignment() {
+        // window() must invert or_at() placement at every alignment,
+        // including word-straddling and tail-masked windows.
+        let n = 301;
+        let mut b = Bitmap::zeros(n);
+        for i in 0..n {
+            if i % 3 == 0 || i % 7 == 1 {
+                b.set(i, true);
+            }
+        }
+        for (base, len) in
+            [(0, n), (0, 64), (1, 64), (63, 65), (64, 128), (130, 171), (300, 1), (17, 0)]
+        {
+            let w = b.window(base, len);
+            assert_eq!(w.len(), len);
+            for j in 0..len {
+                assert_eq!(w.get(j), b.get(base + j), "base={base} len={len} j={j}");
+            }
+            // Round-trip: placing the window back changes nothing.
+            let mut back = b.clone();
+            back.or_at(&w, base);
+            assert_eq!(back, b);
+        }
+    }
 
     #[test]
     fn set_get_roundtrip() {

@@ -2,12 +2,16 @@
 //! `ci.sh --serve` and by hand.
 //!
 //! ```text
-//! bic_client ping     --addr HOST:PORT
-//! bic_client smoke    --addr HOST:PORT [--tenant NAME]
-//! bic_client verify   --addr HOST:PORT [--tenant NAME]
-//! bic_client hammer   --addr HOST:PORT [--tenant NAME]
-//!                     [--workers N] [--iters K] [--telemetry]
-//! bic_client obscheck --addr HOST:PORT [--tenant NAME]
+//! bic_client ping      --addr HOST:PORT
+//! bic_client smoke     --addr HOST:PORT [--tenant NAME]
+//! bic_client verify    --addr HOST:PORT [--tenant NAME]
+//! bic_client hammer    --addr HOST:PORT [--tenant NAME]
+//!                      [--workers N] [--iters K] [--telemetry]
+//! bic_client obscheck  --addr HOST:PORT [--tenant NAME]
+//! bic_client aggregate --addr HOST:PORT [--tenant NAME] [--col COL]
+//!                      [--agg count|sum|min|max] [--lo V --hi V]
+//! bic_client topk      --addr HOST:PORT [--tenant NAME] [--col COL]
+//!                      [--k N] [--lo V --hi V]
 //! ```
 //!
 //! `smoke` creates a tenant and ingests a fixed deterministic data set;
@@ -22,7 +26,11 @@
 //! telemetry, so the server-side quantiles are populated too.
 //! `obscheck` asserts the observability surface end to end: `metrics`
 //! exposes nonzero per-tenant quantiles and the Prometheus text,
-//! `explain` round-trips with `analyze`, and `slowlog`/`trace` answer.
+//! `explain` round-trips with `analyze`, `slowlog`/`trace` answer, and
+//! — after driving one `aggregate` and one `topk` — the bit-sliced
+//! kernel channels (`telemetry.aggregate`/`telemetry.topk`) populate.
+//! `aggregate` and `topk` issue one ad-hoc command against an existing
+//! tenant, with an optional `between [lo, hi]` filter.
 
 use std::process::ExitCode;
 
@@ -66,9 +74,19 @@ fn run() -> Result<(), String> {
             hammer(&addr, &tenant, workers, iters, telemetry)
         }
         Some("obscheck") => obscheck(&addr, &tenant),
+        Some("aggregate") => {
+            let col = args.get("col").unwrap_or("k").to_string();
+            let agg = args.get("agg").unwrap_or("sum").to_string();
+            aggregate(&addr, &tenant, &col, &agg, range_filter(&args)?)
+        }
+        Some("topk") => {
+            let col = args.get("col").unwrap_or("k").to_string();
+            let k = args.get_parsed("k", 3usize)?;
+            topk(&addr, &tenant, &col, k, range_filter(&args)?)
+        }
         other => Err(format!(
             "unknown subcommand {other:?}; expected \
-             ping|smoke|verify|hammer|obscheck"
+             ping|smoke|verify|hammer|obscheck|aggregate|topk"
         )),
     }
 }
@@ -116,6 +134,81 @@ fn expected_per_key() -> f64 {
 
 fn eq_predicate(key: i32) -> Json {
     Json::obj([("col", "k".into()), ("eq", key.into())])
+}
+
+/// `--lo V --hi V` into a `between` filter document (both or neither).
+fn range_filter(
+    args: &sotb_bic::substrate::cli::Args,
+) -> Result<Option<Json>, String> {
+    match (args.get("lo"), args.get("hi")) {
+        (None, None) => Ok(None),
+        (Some(_), None) | (None, Some(_)) => {
+            Err("--lo and --hi must be given together".into())
+        }
+        (Some(_), Some(_)) => {
+            let lo = args.get_parsed("lo", 0i32)?;
+            let hi = args.get_parsed("hi", 0i32)?;
+            let col = args.get("col").unwrap_or("k");
+            Ok(Some(Json::obj([
+                ("col", col.into()),
+                ("between", Json::Arr(vec![lo.into(), hi.into()])),
+            ])))
+        }
+    }
+}
+
+fn aggregate(
+    addr: &str,
+    tenant: &str,
+    col: &str,
+    agg: &str,
+    filter: Option<Json>,
+) -> Result<(), String> {
+    let mut c = connect(addr)?;
+    let resp = c
+        .aggregate(tenant, col, agg, filter.as_ref())
+        .map_err(|e| format!("aggregate: {e}"))?;
+    let resp = expect_ok("aggregate", resp)?;
+    let rows = resp.get("rows").and_then(Json::as_f64).unwrap_or(0.0);
+    let value = resp
+        .get("value")
+        .and_then(Json::as_f64)
+        .map_or("null".to_string(), |v| format!("{v}"));
+    println!("AGGREGATE OK tenant={tenant} col={col} agg={agg} rows={rows} value={value}");
+    Ok(())
+}
+
+fn topk(
+    addr: &str,
+    tenant: &str,
+    col: &str,
+    k: usize,
+    filter: Option<Json>,
+) -> Result<(), String> {
+    let mut c = connect(addr)?;
+    let resp = c
+        .topk(tenant, col, k, filter.as_ref())
+        .map_err(|e| format!("topk: {e}"))?;
+    let resp = expect_ok("topk", resp)?;
+    let top = resp
+        .get("top")
+        .and_then(Json::as_arr)
+        .ok_or("topk: no top array")?;
+    let pairs: Vec<String> = top
+        .iter()
+        .map(|p| {
+            let pair = p.as_arr().unwrap_or(&[]);
+            let field = |i: usize| {
+                pair.get(i).and_then(Json::as_f64).unwrap_or(-1.0)
+            };
+            format!("{}:{}", field(0), field(1))
+        })
+        .collect();
+    println!(
+        "TOPK OK tenant={tenant} col={col} k={k} top=[{}]",
+        pairs.join(",")
+    );
+    Ok(())
 }
 
 fn ping(addr: &str) -> Result<(), String> {
@@ -343,6 +436,27 @@ fn hammer_worker(
 fn obscheck(addr: &str, tenant: &str) -> Result<(), String> {
     let mut c = connect(addr)?;
 
+    // Drive the bit-sliced kernels once so their telemetry channels
+    // have something to show (hammer only ingests and queries).
+    let filter = Json::obj([
+        ("col", "k".into()),
+        ("between", Json::Arr(vec![KEYS[1].into(), KEYS[6].into()])),
+    ]);
+    let resp = c
+        .aggregate(tenant, "k", "sum", Some(&filter))
+        .map_err(|e| format!("aggregate: {e}"))?;
+    let resp = expect_ok("aggregate", resp)?;
+    if resp.get("rows").and_then(Json::as_f64).is_none() {
+        return Err("aggregate: no rows field".into());
+    }
+    let resp = c
+        .topk(tenant, "k", 3, None)
+        .map_err(|e| format!("topk: {e}"))?;
+    let resp = expect_ok("topk", resp)?;
+    if resp.get("top").and_then(Json::as_arr).is_none() {
+        return Err("topk: no top array".into());
+    }
+
     // metrics: per-tenant telemetry quantiles present and nonzero.
     let metrics = c.metrics().map_err(|e| format!("metrics: {e}"))?;
     let metrics = expect_ok("metrics", metrics)?;
@@ -384,6 +498,20 @@ fn obscheck(addr: &str, tenant: &str) -> Result<(), String> {
             ));
         }
     }
+    // The aggregate/topk channels populated from the calls above.
+    for channel in ["aggregate", "topk"] {
+        let count = telem
+            .get(channel)
+            .and_then(|h| h.get("count"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if count <= 0.0 {
+            return Err(format!(
+                "metrics: telemetry.{channel} not populated after an \
+                 obscheck-driven call (count={count})"
+            ));
+        }
+    }
     let prom = metrics
         .get("prometheus")
         .and_then(Json::as_str)
@@ -393,6 +521,13 @@ fn obscheck(addr: &str, tenant: &str) -> Result<(), String> {
     }
     if !prom.contains("bic_ingest_ack_cycles") {
         return Err("metrics: prometheus text lacks histogram series".into());
+    }
+    if !prom.contains("bic_aggregate_cycles")
+        || !prom.contains("bic_topk_cycles")
+    {
+        return Err(
+            "metrics: prometheus text lacks aggregate/topk series".into()
+        );
     }
 
     // explain: round-trips and reports a tier; analyze attaches actuals.

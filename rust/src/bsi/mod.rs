@@ -1,0 +1,805 @@
+//! Bit-sliced index (BSI) — range, aggregate, and top-k kernels over
+//! the equality rows' alphabet columns.
+//!
+//! The BIC core materializes one equality bitmap per alphabet word, so
+//! `col >= k` lowers to an OR over every in-domain row: O(domain)
+//! bitmap merges the planner can cost but not avoid. The classic
+//! bit-sliced encoding (O'Neil/Quass; SiM's "versatile matching",
+//! PAPERS.md) fixes that shape: store the *binary digits* of each
+//! record's column value as `width = ceil(log2(span+1))` slice bitmaps,
+//! and any comparison becomes a fixed `width`-deep ripple circuit over
+//! the same AND/OR/ANDNOT kernels the equality tiers already run —
+//! exactly the bulk-bitwise substrate argument of Buddy-RAM.
+//!
+//! Layout per column (see `PERF.md` §bit-sliced-tier):
+//!
+//! - `min` — the column's domain minimum; slices store the *offset*
+//!   `value - min`, so negative domains cost no sign slice;
+//! - `present` — OR of the column's equality rows (records that carry
+//!   the column at all; records are word *sets*, so a column can be
+//!   absent);
+//! - `slices[s]` — records whose offset has bit `s` set.
+//!
+//! **Single-valued gating.** Records are sets of alphabet words, so one
+//! record may legally contain *several* values of one column; classic
+//! BSI needs at most one. [`build_chunk`] therefore builds the slices
+//! only for chunks where the column is provably single-valued
+//! (`Σ per-row cardinality == |OR of rows|`); other chunks keep
+//! `col: None` and evaluate through the retained OR-expansion fallback
+//! — which makes the hybrid bit-identical to the equality path by
+//! construction, chunk by chunk.
+//!
+//! Persistence is the optional `BICSEG3` trailer section
+//! ([`SegmentBsi::write_bytes`]), self-describing (values travel with
+//! the slices) and rebuild-verified against the equality rows at load
+//! time, mirroring the store's lying-zone-map discipline: a decoded
+//! section that disagrees with the rows it indexes is corruption, not
+//! a soft fallback.
+
+use crate::bic::bitmap::Bitmap;
+use crate::bic::codec::{read_u32, read_u64, read_u8, CodecBitmap};
+
+/// One indexable column: where its equality rows live and what values
+/// they encode. `values[i]` is the value of attribute `attr_lo + i`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BsiColSpec {
+    /// Column name (diagnostics; not serialized).
+    pub name: String,
+    /// First attribute row of this column's equality range.
+    pub attr_lo: usize,
+    /// Domain values in attribute order.
+    pub values: Vec<i64>,
+}
+
+/// The per-schema column map the builder and the engine's slice-circuit
+/// tier share. Derived once from the schema; column order matches the
+/// schema's.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BsiLayout {
+    /// One spec per schema column, in schema order.
+    pub cols: Vec<BsiColSpec>,
+}
+
+impl BsiLayout {
+    /// A layout over the given column specs.
+    pub fn new(cols: Vec<BsiColSpec>) -> BsiLayout {
+        BsiLayout { cols }
+    }
+
+    /// Columns in the layout.
+    pub fn num_cols(&self) -> usize {
+        self.cols.len()
+    }
+}
+
+/// A built bit-sliced column over one chunk of records.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BsiColumn {
+    /// Domain values in attribute order (engine cross-checks these
+    /// against its layout before trusting the slices).
+    pub values: Vec<i64>,
+    /// Domain minimum; slices encode `value - min`.
+    pub min: i64,
+    /// Slice count: bits needed for the largest offset (≥ 1).
+    pub width: u8,
+    /// Records carrying the column at all (OR of its equality rows).
+    pub present: CodecBitmap,
+    /// `slices[s]`: records whose offset has bit `s` set.
+    pub slices: Vec<CodecBitmap>,
+}
+
+/// One column slot of a chunk's BSI section. `col` is `None` when the
+/// chunk is not single-valued for this column (or the section was
+/// built without it) — readers fall back to OR-expansion there.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BsiSlot {
+    /// First attribute row of the column's equality range.
+    pub attr_lo: usize,
+    /// Attribute rows the column spans.
+    pub nvals: usize,
+    /// The slices, when this chunk is single-valued for the column.
+    pub col: Option<BsiColumn>,
+}
+
+/// A chunk's bit-sliced section: one slot per layout column, in layout
+/// order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SegmentBsi {
+    /// One slot per layout column.
+    pub cols: Vec<BsiSlot>,
+}
+
+/// Slice count for a span of `span + 1` offsets (≥ 1 so a one-value
+/// column still round-trips a slice vector).
+fn width_for(span: u64) -> u8 {
+    let bits = 64 - span.leading_zeros() as u8;
+    bits.max(1)
+}
+
+/// Build the chunk's BSI section from its equality rows: one slot per
+/// layout column, with slices only where the chunk is single-valued
+/// (see module docs). Columns whose attribute range does not fit in
+/// `rows` get an empty slot (defensive; the engine cross-checks).
+pub fn build_chunk(layout: &BsiLayout, rows: &[CodecBitmap]) -> SegmentBsi {
+    let nbits = rows.first().map_or(0, CodecBitmap::len);
+    let cols = layout
+        .cols
+        .iter()
+        .map(|spec| {
+            let nvals = spec.values.len();
+            let lo = spec.attr_lo;
+            let slot_none = BsiSlot { attr_lo: lo, nvals, col: None };
+            let Some(range) = lo.checked_add(nvals).filter(|&hi| {
+                hi <= rows.len() && nvals > 0
+            }) else {
+                return slot_none;
+            };
+            let col_rows = &rows[lo..range];
+            let mut present = Bitmap::zeros(nbits);
+            let mut card_sum = 0usize;
+            for r in col_rows {
+                card_sum += r.count_ones();
+                r.or_into(&mut present);
+            }
+            if card_sum != present.count_ones() {
+                // A record holds several values of this column:
+                // classic BSI cannot encode it — fall back.
+                return slot_none;
+            }
+            let min = spec.values.iter().copied().min().unwrap_or(0);
+            let max = spec.values.iter().copied().max().unwrap_or(0);
+            let width = width_for((max - min) as u64);
+            let slices = (0..width)
+                .map(|s| {
+                    let mut acc = Bitmap::zeros(nbits);
+                    for (i, r) in col_rows.iter().enumerate() {
+                        if ((spec.values[i] - min) >> s) & 1 == 1 {
+                            r.or_into(&mut acc);
+                        }
+                    }
+                    CodecBitmap::from_bitmap(&acc)
+                })
+                .collect();
+            BsiSlot {
+                attr_lo: lo,
+                nvals,
+                col: Some(BsiColumn {
+                    values: spec.values.clone(),
+                    min,
+                    width,
+                    present: CodecBitmap::from_bitmap(&present),
+                    slices,
+                }),
+            }
+        })
+        .collect();
+    SegmentBsi { cols }
+}
+
+impl BsiColumn {
+    /// Records this column's chunk covers.
+    pub fn nbits(&self) -> usize {
+        self.present.len()
+    }
+
+    /// Largest encodable offset (= domain span).
+    fn max_off(&self) -> i64 {
+        let min = self.values.iter().copied().min().unwrap_or(0);
+        let max = self.values.iter().copied().max().unwrap_or(0);
+        max - min
+    }
+
+    /// The ripple comparison circuit: `(gt, eq)` record sets for the
+    /// offset threshold `ko ∈ [0, 2^width)`. MSB→LSB, one AND plus one
+    /// ANDNOT (or one AND) per slice — depth `width`, independent of
+    /// the domain size.
+    fn cmp_gt_eq(&self, ko: i64) -> (Bitmap, Bitmap) {
+        let mut eq = self.present.to_bitmap();
+        let mut gt = Bitmap::zeros(self.nbits());
+        for s in (0..self.width as usize).rev() {
+            let slice = &self.slices[s];
+            if (ko >> s) & 1 == 0 {
+                // Threshold bit 0: anything with bit `s` set pulls
+                // ahead; equality requires bit `s` clear.
+                let mut up = eq.clone();
+                slice.and_into(&mut up);
+                gt.or_assign(&up);
+                slice.and_not_into(&mut eq);
+            } else {
+                // Threshold bit 1: equality requires bit `s` set;
+                // nothing new pulls ahead.
+                slice.and_into(&mut eq);
+            }
+        }
+        (gt, eq)
+    }
+
+    /// Records whose value is `> k` (chunk-local).
+    pub fn gt(&self, k: i64) -> Bitmap {
+        let ko = k - self.min;
+        if ko < 0 {
+            return self.present.to_bitmap();
+        }
+        if ko >= self.max_off() {
+            return Bitmap::zeros(self.nbits());
+        }
+        self.cmp_gt_eq(ko).0
+    }
+
+    /// Records whose value is `>= k` (chunk-local).
+    pub fn ge(&self, k: i64) -> Bitmap {
+        let ko = k - self.min;
+        if ko <= 0 {
+            return self.present.to_bitmap();
+        }
+        if ko > self.max_off() {
+            return Bitmap::zeros(self.nbits());
+        }
+        let (mut g, e) = self.cmp_gt_eq(ko);
+        g.or_assign(&e);
+        g
+    }
+
+    /// Records whose value is `<= k` (chunk-local).
+    pub fn le(&self, k: i64) -> Bitmap {
+        let mut out = self.present.to_bitmap();
+        out.and_not_assign(&self.gt(k));
+        out
+    }
+
+    /// Records whose value is `< k` (chunk-local).
+    pub fn lt(&self, k: i64) -> Bitmap {
+        let mut out = self.present.to_bitmap();
+        out.and_not_assign(&self.ge(k));
+        out
+    }
+
+    /// Records whose value lies in `[lo, hi]` (chunk-local; empty when
+    /// `lo > hi`).
+    pub fn between(&self, lo: i64, hi: i64) -> Bitmap {
+        if lo > hi {
+            return Bitmap::zeros(self.nbits());
+        }
+        let mut out = self.ge(lo);
+        out.and_not_assign(&self.gt(hi));
+        out
+    }
+
+    /// `present ∩ filter` (the aggregate kernels' candidate set).
+    fn candidates(&self, filter: Option<&Bitmap>) -> Bitmap {
+        match filter {
+            Some(f) => {
+                let mut t = f.clone();
+                self.present.and_into(&mut t);
+                t
+            }
+            None => self.present.to_bitmap(),
+        }
+    }
+
+    /// COUNT: filtered records carrying the column.
+    pub fn count(&self, filter: Option<&Bitmap>) -> u64 {
+        self.candidates(filter).count_ones() as u64
+    }
+
+    /// SUM of the filtered records' values, by weighted popcount over
+    /// the slices: `Σ_s 2^s·|slice_s ∩ f| + min·|present ∩ f|`.
+    /// `i128` internally so `min`-rebasing cannot overflow.
+    pub fn sum(&self, filter: Option<&Bitmap>) -> i128 {
+        let mut total: i128 = 0;
+        for (s, slice) in self.slices.iter().enumerate() {
+            let ones = match filter {
+                Some(f) => {
+                    let mut t = f.clone();
+                    slice.and_into(&mut t);
+                    t.count_ones()
+                }
+                None => slice.count_ones(),
+            };
+            total += (ones as i128) << s;
+        }
+        total + self.min as i128 * self.count(filter) as i128
+    }
+
+    /// MIN over the filtered records' values, by successive refinement:
+    /// per slice MSB→LSB, keep the bit-clear branch whenever it is
+    /// non-empty. `None` when no filtered record carries the column.
+    pub fn min_value(&self, filter: Option<&Bitmap>) -> Option<i64> {
+        let mut cand = self.candidates(filter);
+        if cand.is_zero() {
+            return None;
+        }
+        let mut off = 0i64;
+        for s in (0..self.width as usize).rev() {
+            let mut t = cand.clone();
+            self.slices[s].and_not_into(&mut t);
+            if t.is_zero() {
+                // Every surviving candidate has bit `s` set.
+                off |= 1 << s;
+            } else {
+                cand = t;
+            }
+        }
+        Some(self.min + off)
+    }
+
+    /// MAX over the filtered records' values (symmetric to
+    /// [`BsiColumn::min_value`], preferring the bit-set branch).
+    pub fn max_value(&self, filter: Option<&Bitmap>) -> Option<i64> {
+        let mut cand = self.candidates(filter);
+        if cand.is_zero() {
+            return None;
+        }
+        let mut off = 0i64;
+        for s in (0..self.width as usize).rev() {
+            let mut t = cand.clone();
+            self.slices[s].and_into(&mut t);
+            if !t.is_zero() {
+                cand = t;
+                off |= 1 << s;
+            }
+        }
+        Some(self.min + off)
+    }
+
+    /// Top-k by successive refinement: `(local id, value)` for the `k`
+    /// largest filtered values, ordered value-descending with ascending
+    /// ids breaking ties. Walks the slices once MSB→LSB keeping a
+    /// definite set `g` and a candidate set `e`; when the loop ends
+    /// every remaining candidate shares one value, so the tail fills by
+    /// ascending id. O(width) slice ops plus O(k·width) extraction.
+    pub fn top_k(&self, filter: Option<&Bitmap>, k: usize) -> Vec<(usize, i64)> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut g = Bitmap::zeros(self.nbits());
+        let mut gcount = 0usize;
+        let mut e = self.candidates(filter);
+        for s in (0..self.width as usize).rev() {
+            let mut x = e.clone();
+            self.slices[s].and_into(&mut x);
+            let xc = x.count_ones();
+            if gcount + xc > k {
+                // Too many with bit `s` set: refine inside them.
+                e = x;
+            } else {
+                // All of them make the cut; candidates continue among
+                // the bit-clear records.
+                g.or_assign(&x);
+                gcount += xc;
+                self.slices[s].and_not_into(&mut e);
+                if gcount == k {
+                    e = Bitmap::zeros(self.nbits());
+                    break;
+                }
+            }
+        }
+        if gcount < k {
+            for id in e.iter_ones().take(k - gcount) {
+                g.set(id, true);
+            }
+        }
+        // Extract each winner's value by re-walking the slices over the
+        // (small) winner set.
+        let mut out: Vec<(usize, i64)> =
+            g.iter_ones().map(|id| (id, self.min)).collect();
+        for (s, slice) in self.slices.iter().enumerate() {
+            let mut t = g.clone();
+            slice.and_into(&mut t);
+            for id in t.iter_ones() {
+                if let Ok(at) = out.binary_search_by_key(&id, |&(i, _)| i) {
+                    out[at].1 += 1 << s;
+                }
+            }
+        }
+        out.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        out
+    }
+}
+
+impl SegmentBsi {
+    /// The slices for layout column `idx`, but only when the slot
+    /// matches the caller's layout (`attr_lo` and domain values agree)
+    /// — a persisted section from a different schema era degrades to
+    /// the fallback path instead of corrupting results.
+    pub fn matching(
+        &self,
+        idx: usize,
+        attr_lo: usize,
+        values: &[i64],
+    ) -> Option<&BsiColumn> {
+        let slot = self.cols.get(idx)?;
+        if slot.attr_lo != attr_lo || slot.nvals != values.len() {
+            return None;
+        }
+        slot.col.as_ref().filter(|c| c.values == values)
+    }
+
+    /// Serialized size in bytes (what [`SegmentBsi::write_bytes`]
+    /// appends).
+    pub fn serialized_bytes(&self) -> usize {
+        let mut n = 4;
+        for slot in &self.cols {
+            n += 4 + 4 + 1;
+            if let Some(c) = &slot.col {
+                n += 8 * c.values.len() + 8 + 1;
+                n += c.present.serialized_bytes();
+                n += c
+                    .slices
+                    .iter()
+                    .map(CodecBitmap::serialized_bytes)
+                    .sum::<usize>();
+            }
+        }
+        n
+    }
+
+    /// Append the section: `u32 ncols`, then per slot `u32 attr_lo,
+    /// u32 nvals, u8 flag` and, when `flag == 1`, `nvals × i64 values,
+    /// i64 min, u8 width, present, width × slices` (bitmaps in the
+    /// codec-tagged wire form).
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.cols.len() as u32).to_le_bytes());
+        for slot in &self.cols {
+            out.extend_from_slice(&(slot.attr_lo as u32).to_le_bytes());
+            out.extend_from_slice(&(slot.nvals as u32).to_le_bytes());
+            match &slot.col {
+                None => out.push(0),
+                Some(c) => {
+                    out.push(1);
+                    for &v in &c.values {
+                        out.extend_from_slice(&(v as u64).to_le_bytes());
+                    }
+                    out.extend_from_slice(&(c.min as u64).to_le_bytes());
+                    out.push(c.width);
+                    c.present.write_bytes(out);
+                    for s in &c.slices {
+                        s.write_bytes(out);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode a section written by [`SegmentBsi::write_bytes`]. Every
+    /// bitmap must cover exactly `nbits` records; structural lies are
+    /// errors, not fallbacks.
+    pub fn read_bytes(
+        buf: &[u8],
+        pos: &mut usize,
+        nbits: usize,
+    ) -> Result<SegmentBsi, String> {
+        let ncols = read_u32(buf, pos)? as usize;
+        if ncols > buf.len() {
+            return Err(format!("bsi: implausible column count {ncols}"));
+        }
+        let mut cols = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let attr_lo = read_u32(buf, pos)? as usize;
+            let nvals = read_u32(buf, pos)? as usize;
+            let flag = read_u8(buf, pos)?;
+            let col = match flag {
+                0 => None,
+                1 => {
+                    if nvals > buf.len() {
+                        return Err(format!(
+                            "bsi: implausible value count {nvals}"
+                        ));
+                    }
+                    let mut values = Vec::with_capacity(nvals);
+                    for _ in 0..nvals {
+                        values.push(read_u64(buf, pos)? as i64);
+                    }
+                    let min = read_u64(buf, pos)? as i64;
+                    let width = read_u8(buf, pos)?;
+                    if width == 0 || width > 63 {
+                        return Err(format!("bsi: bad slice width {width}"));
+                    }
+                    let present = CodecBitmap::read_bytes(buf, pos)?;
+                    if present.len() != nbits {
+                        return Err(format!(
+                            "bsi: present covers {} bits, segment has {nbits}",
+                            present.len()
+                        ));
+                    }
+                    let mut slices = Vec::with_capacity(width as usize);
+                    for s in 0..width {
+                        let slice = CodecBitmap::read_bytes(buf, pos)?;
+                        if slice.len() != nbits {
+                            return Err(format!(
+                                "bsi: slice {s} covers {} bits, segment \
+                                 has {nbits}",
+                                slice.len()
+                            ));
+                        }
+                        slices.push(slice);
+                    }
+                    Some(BsiColumn { values, min, width, present, slices })
+                }
+                other => {
+                    return Err(format!("bsi: bad slot flag {other}"));
+                }
+            };
+            cols.push(BsiSlot { attr_lo, nvals, col });
+        }
+        Ok(SegmentBsi { cols })
+    }
+
+    /// Rebuild-verify against the equality rows the section claims to
+    /// index: recompute present and every slice from `rows` and require
+    /// bit equality (and the single-valued invariant). The store calls
+    /// this at segment load so a section that lies about the rows is
+    /// quarantined like a lying zone map.
+    pub fn verify(&self, rows: &[CodecBitmap]) -> Result<(), String> {
+        let nbits = rows.first().map_or(0, CodecBitmap::len);
+        for (idx, slot) in self.cols.iter().enumerate() {
+            let Some(c) = &slot.col else { continue };
+            if c.values.len() != slot.nvals {
+                return Err(format!(
+                    "bsi col {idx}: {} values for {} slot rows",
+                    c.values.len(),
+                    slot.nvals
+                ));
+            }
+            let hi = slot
+                .attr_lo
+                .checked_add(slot.nvals)
+                .filter(|&hi| hi <= rows.len())
+                .ok_or_else(|| {
+                    format!(
+                        "bsi col {idx}: rows [{}, {}+{}) out of range",
+                        slot.attr_lo, slot.attr_lo, slot.nvals
+                    )
+                })?;
+            let col_rows = &rows[slot.attr_lo..hi];
+            let min = c.values.iter().copied().min().unwrap_or(0);
+            let max = c.values.iter().copied().max().unwrap_or(0);
+            if min != c.min {
+                return Err(format!(
+                    "bsi col {idx}: min {} disagrees with values ({min})",
+                    c.min
+                ));
+            }
+            if c.width != width_for((max - min) as u64) {
+                return Err(format!(
+                    "bsi col {idx}: width {} disagrees with span {}",
+                    c.width,
+                    max - min
+                ));
+            }
+            let mut present = Bitmap::zeros(nbits);
+            let mut card_sum = 0usize;
+            for r in col_rows {
+                card_sum += r.count_ones();
+                r.or_into(&mut present);
+            }
+            if card_sum != present.count_ones() {
+                return Err(format!(
+                    "bsi col {idx}: chunk is not single-valued"
+                ));
+            }
+            if c.present.to_bitmap() != present {
+                return Err(format!(
+                    "bsi col {idx}: present bitmap disagrees with rows"
+                ));
+            }
+            for s in 0..c.width as usize {
+                let mut acc = Bitmap::zeros(nbits);
+                for (i, r) in col_rows.iter().enumerate() {
+                    if ((c.values[i] - min) >> s) & 1 == 1 {
+                        r.or_into(&mut acc);
+                    }
+                }
+                if c.slices[s].to_bitmap() != acc {
+                    return Err(format!(
+                        "bsi col {idx}: slice {s} disagrees with rows"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Xoshiro256;
+
+    /// A single-valued chunk: `assign[j] = Some(value index)` per
+    /// record, rows materialized like the indexing core would.
+    fn chunk(
+        values: &[i64],
+        assign: &[Option<usize>],
+    ) -> (BsiLayout, Vec<CodecBitmap>) {
+        let n = assign.len();
+        let rows: Vec<CodecBitmap> = (0..values.len())
+            .map(|i| {
+                let mut b = Bitmap::zeros(n);
+                for (j, a) in assign.iter().enumerate() {
+                    if *a == Some(i) {
+                        b.set(j, true);
+                    }
+                }
+                CodecBitmap::from_bitmap(&b)
+            })
+            .collect();
+        let layout = BsiLayout::new(vec![BsiColSpec {
+            name: "c".into(),
+            attr_lo: 0,
+            values: values.to_vec(),
+        }]);
+        (layout, rows)
+    }
+
+    fn random_assign(
+        rng: &mut Xoshiro256,
+        nvals: usize,
+        n: usize,
+    ) -> Vec<Option<usize>> {
+        (0..n)
+            .map(|_| {
+                if rng.chance(0.8) {
+                    Some(rng.next_below(nvals as u64) as usize)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn compare_circuits_match_brute_force() {
+        let mut rng = Xoshiro256::seeded(0xB51);
+        let domains: [&[i64]; 3] =
+            [&[-7, -2, 0, 3, 9], &[5], &[0, 1, 2, 3, 4, 5, 6, 7, 100]];
+        for values in domains {
+            for n in [1usize, 17, 130] {
+                let assign = random_assign(&mut rng, values.len(), n);
+                let (layout, rows) = chunk(values, &assign);
+                let bsi = build_chunk(&layout, &rows);
+                let col = bsi.cols[0].col.as_ref().expect("single-valued");
+                let lo_d = *values.iter().min().unwrap();
+                let hi_d = *values.iter().max().unwrap();
+                for k in (lo_d - 2)..=(hi_d + 2) {
+                    for j in 0..n {
+                        let v = assign[j].map(|i| values[i]);
+                        assert_eq!(col.ge(k).get(j), v.is_some_and(|v| v >= k));
+                        assert_eq!(col.gt(k).get(j), v.is_some_and(|v| v > k));
+                        assert_eq!(col.le(k).get(j), v.is_some_and(|v| v <= k));
+                        assert_eq!(col.lt(k).get(j), v.is_some_and(|v| v < k));
+                    }
+                }
+                for (lo, hi) in [(lo_d, hi_d), (lo_d + 1, hi_d - 1), (3, 2)] {
+                    let got = col.between(lo, hi);
+                    for j in 0..n {
+                        let v = assign[j].map(|i| values[i]);
+                        assert_eq!(
+                            got.get(j),
+                            v.is_some_and(|v| v >= lo && v <= hi)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregates_match_brute_force() {
+        let mut rng = Xoshiro256::seeded(0xA66);
+        let values: &[i64] = &[-10, 0, 4, 7, 50];
+        for n in [1usize, 40, 200] {
+            let assign = random_assign(&mut rng, values.len(), n);
+            let (layout, rows) = chunk(values, &assign);
+            let col = build_chunk(&layout, &rows).cols[0]
+                .col
+                .clone()
+                .expect("single-valued");
+            for with_filter in [false, true] {
+                let f = with_filter.then(|| {
+                    Bitmap::from_bools(
+                        &(0..n).map(|_| rng.chance(0.5)).collect::<Vec<_>>(),
+                    )
+                });
+                let sel: Vec<i64> = (0..n)
+                    .filter(|&j| f.as_ref().is_none_or(|f| f.get(j)))
+                    .filter_map(|j| assign[j].map(|i| values[i]))
+                    .collect();
+                assert_eq!(col.count(f.as_ref()), sel.len() as u64);
+                assert_eq!(
+                    col.sum(f.as_ref()),
+                    sel.iter().map(|&v| v as i128).sum::<i128>()
+                );
+                assert_eq!(
+                    col.min_value(f.as_ref()),
+                    sel.iter().copied().min()
+                );
+                assert_eq!(
+                    col.max_value(f.as_ref()),
+                    sel.iter().copied().max()
+                );
+                for k in [0usize, 1, 5, sel.len(), sel.len() + 3] {
+                    let got = col.top_k(f.as_ref(), k);
+                    let mut expect: Vec<(usize, i64)> = (0..n)
+                        .filter(|&j| f.as_ref().is_none_or(|f| f.get(j)))
+                        .filter_map(|j| assign[j].map(|i| (j, values[i])))
+                        .collect();
+                    expect.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                    expect.truncate(k);
+                    assert_eq!(got, expect, "n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_valued_chunk_declines_slices() {
+        // Record 1 carries two values of the column: no BSI.
+        let (layout, mut rows) = chunk(&[1, 2], &[Some(0), Some(0), Some(1)]);
+        let mut b = rows[1].to_bitmap();
+        b.set(1, true);
+        rows[1] = CodecBitmap::from_bitmap(&b);
+        let bsi = build_chunk(&layout, &rows);
+        assert_eq!(bsi.cols.len(), 1);
+        assert!(bsi.cols[0].col.is_none(), "multi-valued must fall back");
+        assert_eq!(bsi.cols[0].nvals, 2);
+    }
+
+    #[test]
+    fn section_round_trips_and_verifies() {
+        let mut rng = Xoshiro256::seeded(0x5EC);
+        let values: &[i64] = &[2, 3, 5, 8];
+        let n = 97;
+        let assign = random_assign(&mut rng, values.len(), n);
+        let (layout, rows) = chunk(values, &assign);
+        let bsi = build_chunk(&layout, &rows);
+        let mut buf = Vec::new();
+        bsi.write_bytes(&mut buf);
+        assert_eq!(buf.len(), bsi.serialized_bytes());
+        let mut pos = 0;
+        let back = SegmentBsi::read_bytes(&buf, &mut pos, n).expect("decode");
+        assert_eq!(pos, buf.len());
+        assert_eq!(back, bsi);
+        back.verify(&rows).expect("verifies against rows");
+        // Engine-side layout matching.
+        assert!(back.matching(0, 0, values).is_some());
+        assert!(back.matching(0, 1, values).is_none(), "attr_lo mismatch");
+        assert!(back.matching(0, 0, &[2, 3, 5, 9]).is_none(), "values drift");
+        assert!(back.matching(1, 0, values).is_none(), "no such slot");
+    }
+
+    #[test]
+    fn lying_sections_fail_verify_or_decode() {
+        let (layout, rows) =
+            chunk(&[1, 4, 9], &[Some(0), Some(2), Some(1), None, Some(2)]);
+        let bsi = build_chunk(&layout, &rows);
+        // Slice flipped against the rows: verify must refuse.
+        let mut lying = bsi.clone();
+        if let Some(c) = &mut lying.cols[0].col {
+            let mut b = c.slices[0].to_bitmap();
+            b.set(3, !b.get(3));
+            c.slices[0] = CodecBitmap::from_bitmap(&b);
+        }
+        assert!(lying.verify(&rows).is_err());
+        // Min rebased against the values: verify must refuse.
+        let mut lying = bsi.clone();
+        if let Some(c) = &mut lying.cols[0].col {
+            c.min -= 1;
+        }
+        assert!(lying.verify(&rows).is_err());
+        // Truncated section: decode must refuse.
+        let mut buf = Vec::new();
+        bsi.write_bytes(&mut buf);
+        for cut in [0, 3, 9, buf.len() - 1] {
+            let mut pos = 0;
+            assert!(
+                SegmentBsi::read_bytes(&buf[..cut], &mut pos, rows[0].len())
+                    .is_err(),
+                "cut={cut}"
+            );
+        }
+        // Wrong record count: decode must refuse.
+        let mut pos = 0;
+        assert!(SegmentBsi::read_bytes(&buf, &mut pos, 999).is_err());
+    }
+}

@@ -1,0 +1,487 @@
+//! The bit-sliced execution tier: typed predicates evaluated with the
+//! O(log span) slice circuit instead of the O(domain) OR-expansion.
+//!
+//! [`Predicate::lower`] turns a range comparison into an `Or` over every
+//! matching domain row — correct, and retained as the differential
+//! reference, but it reads `hi - lo` compressed rows per chunk. This
+//! module lowers the same predicate to a [`PredNode`] tree that keeps
+//! range leaves *symbolic*: at evaluation each chunk that carries a
+//! matching bit-sliced section ([`SegmentBsi`], built at ingest) answers
+//! `[lo, hi]` through [`BsiColumn::between`] — `width + 1` slice
+//! operations — and every other chunk falls back to OR-ing exactly the
+//! rows the expansion would have read.
+//!
+//! **Bit identity.** Both evaluators are structural over the same
+//! algebra: `And` is the intersection of full-width child results (empty
+//! = all objects), `Or` the union (empty = none), `Not` the full-width
+//! complement, and a range leaf the union of its matching rows — which
+//! is precisely what [`BsiColumn::between`] encodes (pinned by
+//! [`SegmentBsi::verify`](crate::bsi::SegmentBsi::verify) at load and by
+//! the `bsi` property suite). So for any predicate,
+//! [`eval`] equals [`exec::eval_chunks`] over
+//! [`Predicate::lower`]'s query — the engine property tests assert this
+//! across codecs, distributions, and chunk mixes.
+//!
+//! [`BsiColumn::between`]: crate::bsi::BsiColumn::between
+//! [`SegmentBsi`]: crate::bsi::SegmentBsi
+
+use super::error::{PallasError, Result};
+use super::exec::{self, EvalStats, RowChunk};
+use super::schema::{Predicate, Schema};
+use crate::bic::bitmap::Bitmap;
+use crate::bic::query::Query;
+use crate::bsi::BsiLayout;
+
+/// A lowered predicate with symbolic range leaves.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum PredNode {
+    /// Union of attribute rows (empty = no objects; one = a plain leaf).
+    Attrs(Vec<usize>),
+    /// An inclusive value range on one column: chunks with a matching
+    /// sliced section run the circuit, the rest OR the `attrs` fallback
+    /// rows (exactly the expansion [`Predicate::lower`] would emit).
+    Range {
+        /// Layout slot (= schema column position).
+        slot: usize,
+        /// Inclusive lower bound.
+        lo: i64,
+        /// Inclusive upper bound.
+        hi: i64,
+        /// The OR-expansion rows for chunks without slices.
+        attrs: Vec<usize>,
+    },
+    /// Intersection (empty = all objects).
+    And(Vec<PredNode>),
+    /// Union (empty = no objects).
+    Or(Vec<PredNode>),
+    /// Complement.
+    Not(Box<PredNode>),
+}
+
+/// Whether the predicate contains a leaf the slice circuit accelerates
+/// (`ge`/`le`/`gt`/`lt`/`between`) — the planner's `bsi_range` input.
+pub(crate) fn has_range_leaf(p: &Predicate) -> bool {
+    match p {
+        Predicate::Cmp { .. } | Predicate::Between { .. } => true,
+        Predicate::Eq { .. } | Predicate::In { .. } | Predicate::Any { .. } => {
+            false
+        }
+        Predicate::And(xs) | Predicate::Or(xs) => xs.iter().any(has_range_leaf),
+        Predicate::Not(inner) => has_range_leaf(inner),
+    }
+}
+
+/// Lower a typed predicate to a [`PredNode`] tree, with the same strict
+/// validation as [`Predicate::lower`] (unknown columns, out-of-domain
+/// `eq`, empty `in_set`, inverted `between` bounds are all typed
+/// [`PallasError::InvalidQuery`]).
+pub(crate) fn lower(
+    p: &Predicate,
+    schema: &Schema,
+    layout: &BsiLayout,
+) -> Result<PredNode> {
+    let column = |name: &str| {
+        schema
+            .columns()
+            .iter()
+            .position(|c| c.name() == name)
+            .ok_or_else(|| {
+                PallasError::InvalidQuery(format!(
+                    "unknown column {name:?} (schema has {})",
+                    schema
+                        .columns()
+                        .iter()
+                        .map(|c| c.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    };
+    // A comparison leaf as an inclusive i64 window [lo, hi]: i64 bounds
+    // keep `Gt i32::MAX` / `Lt i32::MIN` well-formed (empty) instead of
+    // wrapping.
+    let range = |name: &str, lo: i64, hi: i64| -> Result<PredNode> {
+        let slot = column(name)?;
+        let c = &schema.columns()[slot];
+        let attrs = c.attrs_where(|v| lo <= v as i64 && v as i64 <= hi);
+        debug_assert_eq!(layout.cols[slot].attr_lo, c.attr_of(c.values()[0]).unwrap_or(0));
+        Ok(PredNode::Range { slot, lo, hi, attrs })
+    };
+    Ok(match p {
+        Predicate::Eq { col, value } => {
+            let c = &schema.columns()[column(col)?];
+            let attr = c.attr_of(*value).ok_or_else(|| {
+                PallasError::InvalidQuery(format!(
+                    "column {col:?} has no value {value} (domain {:?})",
+                    c.values()
+                ))
+            })?;
+            PredNode::Attrs(vec![attr])
+        }
+        Predicate::Cmp { col, op, value } => {
+            use super::schema::CmpOp;
+            let v = *value as i64;
+            let (lo, hi) = match op {
+                CmpOp::Ge => (v, i32::MAX as i64),
+                CmpOp::Gt => (v + 1, i32::MAX as i64),
+                CmpOp::Le => (i32::MIN as i64, v),
+                CmpOp::Lt => (i32::MIN as i64, v - 1),
+            };
+            range(col, lo, hi)?
+        }
+        Predicate::Between { col, lo, hi } => {
+            if lo > hi {
+                return Err(PallasError::InvalidQuery(format!(
+                    "between on column {col:?}: inverted bounds [{lo}, {hi}]"
+                )));
+            }
+            range(col, *lo as i64, *hi as i64)?
+        }
+        Predicate::In { col, values } => {
+            let c = &schema.columns()[column(col)?];
+            if values.is_empty() {
+                return Err(PallasError::InvalidQuery(format!(
+                    "in_set on column {col:?} with an empty value set"
+                )));
+            }
+            PredNode::Attrs(c.attrs_where(|v| values.contains(&v)))
+        }
+        Predicate::Any { col } => {
+            let c = &schema.columns()[column(col)?];
+            PredNode::Attrs(c.attrs_where(|_| true))
+        }
+        Predicate::And(xs) => PredNode::And(
+            xs.iter().map(|x| lower(x, schema, layout)).collect::<Result<_>>()?,
+        ),
+        Predicate::Or(xs) => PredNode::Or(
+            xs.iter().map(|x| lower(x, schema, layout)).collect::<Result<_>>()?,
+        ),
+        Predicate::Not(inner) => {
+            PredNode::Not(Box::new(lower(inner, schema, layout)?))
+        }
+    })
+}
+
+impl PredNode {
+    /// Wrap a lowered [`Query`] — no symbolic ranges, so a forced-`Bsi`
+    /// query entry point evaluates structurally and stays bit-identical
+    /// to every other tier.
+    pub(crate) fn from_query(q: &Query) -> PredNode {
+        match q {
+            Query::Attr(i) => PredNode::Attrs(vec![*i]),
+            Query::And(xs) => {
+                PredNode::And(xs.iter().map(PredNode::from_query).collect())
+            }
+            Query::Or(xs) => {
+                PredNode::Or(xs.iter().map(PredNode::from_query).collect())
+            }
+            Query::Not(inner) => {
+                PredNode::Not(Box::new(PredNode::from_query(inner)))
+            }
+        }
+    }
+}
+
+/// Evaluate a [`PredNode`] over the chunk-tiled index. `stats` gets the
+/// rows (or slices) folded; `slice_chunks` counts chunk windows the
+/// circuit answered (vs the fallback) — the `slice-circuit` trace
+/// event's payload. `layout` may be `None` (engine built with the `bsi`
+/// knob off): every range leaf then takes the fallback, and query-shaped
+/// trees never consult it at all.
+pub(crate) fn eval(
+    chunks: &[RowChunk<'_>],
+    nbits: usize,
+    node: &PredNode,
+    layout: Option<&BsiLayout>,
+    stats: &mut EvalStats,
+    slice_chunks: &mut u64,
+) -> Bitmap {
+    match node {
+        PredNode::Attrs(attrs) => {
+            let mut acc = Bitmap::zeros(nbits);
+            for &a in attrs {
+                exec::or_row_into(chunks, a, &mut acc, stats);
+            }
+            acc
+        }
+        PredNode::Range { slot, lo, hi, attrs } => {
+            let spec = layout.map(|l| &l.cols[*slot]);
+            let mut acc = Bitmap::zeros(nbits);
+            for c in chunks {
+                match spec.and_then(|sp| {
+                    c.bsi
+                        .and_then(|s| s.matching(*slot, sp.attr_lo, &sp.values))
+                }) {
+                    Some(bc) => {
+                        *slice_chunks += 1;
+                        stats.rows_folded += 1 + bc.slices.len() as u64;
+                        stats.row_bytes +=
+                            bc.present.serialized_bytes() as u64;
+                        for s in &bc.slices {
+                            stats.row_bytes += s.serialized_bytes() as u64;
+                        }
+                        acc.or_at(&bc.between(*lo, *hi), c.base);
+                    }
+                    None => {
+                        for &a in attrs {
+                            exec::or_row_into(
+                                std::slice::from_ref(c),
+                                a,
+                                &mut acc,
+                                stats,
+                            );
+                        }
+                    }
+                }
+            }
+            acc
+        }
+        PredNode::And(xs) => {
+            let mut acc = Bitmap::ones(nbits);
+            for x in xs {
+                if acc.is_zero() {
+                    break;
+                }
+                acc.and_assign(&eval(
+                    chunks,
+                    nbits,
+                    x,
+                    layout,
+                    stats,
+                    slice_chunks,
+                ));
+            }
+            acc
+        }
+        PredNode::Or(xs) => {
+            let mut acc = Bitmap::zeros(nbits);
+            for x in xs {
+                acc.or_assign(&eval(
+                    chunks,
+                    nbits,
+                    x,
+                    layout,
+                    stats,
+                    slice_chunks,
+                ));
+            }
+            acc
+        }
+        PredNode::Not(inner) => {
+            eval(chunks, nbits, inner, layout, stats, slice_chunks).not()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bic::codec::CodecBitmap;
+    use crate::bsi::{build_chunk, BsiColSpec, SegmentBsi};
+    use crate::engine::schema::col;
+    use crate::substrate::rng::Xoshiro256;
+
+    fn schema() -> Schema {
+        Schema::builder()
+            .column("city", [1, 3, 9])
+            .column("age", [0, 7, 12, 30])
+            .build()
+            .unwrap()
+    }
+
+    fn layout_of(s: &Schema) -> BsiLayout {
+        BsiLayout::new(
+            s.columns()
+                .iter()
+                .map(|c| BsiColSpec {
+                    name: c.name().to_string(),
+                    attr_lo: c.attr_of(c.values()[0]).unwrap(),
+                    values: c.values().iter().map(|&v| v as i64).collect(),
+                })
+                .collect(),
+        )
+    }
+
+    /// One chunk of single-valued records over `schema()`: per record
+    /// one city and (usually) one age value, some records ageless.
+    fn chunk_rows(rng: &mut Xoshiro256, n: usize) -> Vec<CodecBitmap> {
+        let mut bits = vec![Bitmap::zeros(n); 7];
+        for j in 0..n {
+            bits[rng.next_below(3) as usize].set(j, true);
+            if !rng.chance(0.15) {
+                bits[3 + rng.next_below(4) as usize].set(j, true);
+            }
+        }
+        bits.iter().map(CodecBitmap::from_bitmap).collect()
+    }
+
+    #[test]
+    fn lowering_mirrors_the_expansion_and_validation() {
+        let s = schema();
+        let l = layout_of(&s);
+        // ge(7) on age: window [7, i32::MAX], fallback rows 4..=6.
+        match lower(&col("age").ge(7), &s, &l).unwrap() {
+            PredNode::Range { slot, lo, hi, attrs } => {
+                assert_eq!(slot, 1);
+                assert_eq!((lo, hi), (7, i32::MAX as i64));
+                assert_eq!(attrs, vec![4, 5, 6]);
+            }
+            other => panic!("expected Range, got {other:?}"),
+        }
+        // lt(i32::MIN) must stay well-formed and empty, not wrap.
+        match lower(&col("age").lt(i32::MIN), &s, &l).unwrap() {
+            PredNode::Range { attrs, lo, hi, .. } => {
+                assert!(attrs.is_empty());
+                assert!(lo > hi);
+            }
+            other => panic!("expected Range, got {other:?}"),
+        }
+        // The fallback rows always equal the reference expansion.
+        for p in [
+            col("age").ge(7),
+            col("age").gt(7),
+            col("age").le(12),
+            col("age").lt(12),
+            col("age").between(0, 12),
+            col("city").between(2, 100),
+        ] {
+            let q = p.lower(&s).unwrap();
+            match lower(&p, &s, &l).unwrap() {
+                PredNode::Range { attrs, .. } => {
+                    assert_eq!(attrs, q.attrs(), "{p:?}");
+                }
+                other => panic!("expected Range, got {other:?}"),
+            }
+        }
+        // Validation parity with Predicate::lower.
+        for p in [
+            col("nope").ge(1),
+            col("age").between(9, 2),
+            col("age").in_set([]),
+            col("nope").eq(1),
+        ] {
+            assert!(
+                matches!(
+                    lower(&p, &s, &l),
+                    Err(PallasError::InvalidQuery(_))
+                ),
+                "{p:?}"
+            );
+            assert!(p.lower(&s).is_err(), "{p:?}");
+        }
+        assert!(has_range_leaf(&col("age").ge(7)));
+        assert!(has_range_leaf(
+            &col("city").eq(1).and(col("age").between(0, 9).not())
+        ));
+        assert!(!has_range_leaf(&col("city").eq(1).and(col("age").any())));
+    }
+
+    #[test]
+    fn slice_circuit_is_bit_identical_to_the_expansion() {
+        let s = schema();
+        let l = layout_of(&s);
+        let mut rng = Xoshiro256::seeded(0xB51E);
+        let lens = [192usize, 64, 300];
+        let owned: Vec<(usize, Vec<CodecBitmap>, SegmentBsi)> = {
+            let mut out = Vec::new();
+            let mut base = 0;
+            for &n in &lens {
+                let rows = chunk_rows(&mut rng, n);
+                let bsi = build_chunk(&l, &rows);
+                out.push((base, rows, bsi));
+                base += n;
+            }
+            out
+        };
+        let nbits: usize = lens.iter().sum();
+        let preds = [
+            col("age").ge(7),
+            col("age").le(12),
+            col("age").gt(0),
+            col("age").lt(30),
+            col("age").between(7, 12),
+            col("age").between(31, 1000),
+            col("city").eq(3).and(col("age").ge(7)),
+            col("city").eq(1).or(col("age").between(0, 7).not()),
+            col("age").ge(7).and(col("age").le(12)).and(col("city").ne(9)),
+        ];
+        // Every mix of sliced/unsliced chunks must agree with the
+        // OR-expansion reference evaluator.
+        for mask in 0..1u32 << lens.len() {
+            let chunks: Vec<RowChunk<'_>> = owned
+                .iter()
+                .enumerate()
+                .map(|(k, (base, rows, bsi))| RowChunk {
+                    base: *base,
+                    rows,
+                    zone: None,
+                    bsi: (mask >> k & 1 == 1).then_some(bsi),
+                })
+                .collect();
+            for p in &preds {
+                let expect =
+                    exec::eval_chunks(&chunks, nbits, &p.lower(&s).unwrap());
+                let node = lower(p, &s, &l).unwrap();
+                let (mut st, mut sc) = (EvalStats::default(), 0u64);
+                let got =
+                    eval(&chunks, nbits, &node, Some(&l), &mut st, &mut sc);
+                assert_eq!(got, expect, "mask={mask:#b} {p:?}");
+                if mask == 0 {
+                    assert_eq!(sc, 0, "no slices available");
+                }
+            }
+        }
+        // With every chunk sliced, range evaluation actually uses the
+        // circuit.
+        let chunks: Vec<RowChunk<'_>> = owned
+            .iter()
+            .map(|(base, rows, bsi)| RowChunk {
+                base: *base,
+                rows,
+                zone: None,
+                bsi: Some(bsi),
+            })
+            .collect();
+        let node = lower(&col("age").ge(7), &s, &l).unwrap();
+        let (mut st, mut sc) = (EvalStats::default(), 0u64);
+        eval(&chunks, nbits, &node, Some(&l), &mut st, &mut sc);
+        assert_eq!(sc, lens.len() as u64, "every chunk ran on slices");
+        assert!(st.rows_folded > 0);
+        // Without a layout (the `bsi` knob off) every leaf falls back,
+        // and the result is still the expansion's.
+        let (mut st, mut sc) = (EvalStats::default(), 0u64);
+        let got = eval(&chunks, nbits, &node, None, &mut st, &mut sc);
+        let q = col("age").ge(7).lower(&s).unwrap();
+        assert_eq!(got, exec::eval_chunks(&chunks, nbits, &q));
+        assert_eq!(sc, 0, "no layout, no circuit");
+    }
+
+    #[test]
+    fn from_query_matches_eval_chunks() {
+        let s = schema();
+        let l = layout_of(&s);
+        let mut rng = Xoshiro256::seeded(0xFACE);
+        let rows = chunk_rows(&mut rng, 400);
+        let bsi = build_chunk(&l, &rows);
+        let chunks =
+            [RowChunk { base: 0, rows: &rows, zone: None, bsi: Some(&bsi) }];
+        for q in [
+            Query::attr(0).and(Query::attr(4).not()),
+            Query::Or(vec![]),
+            Query::And(vec![]),
+            Query::attr(2).or(Query::attr(5)).not(),
+        ] {
+            let (mut st, mut sc) = (EvalStats::default(), 0u64);
+            let got = eval(
+                &chunks,
+                400,
+                &PredNode::from_query(&q),
+                Some(&l),
+                &mut st,
+                &mut sc,
+            );
+            assert_eq!(got, exec::eval_chunks(&chunks, 400, &q), "{q:?}");
+            assert_eq!(sc, 0, "no symbolic ranges in a lowered query");
+        }
+    }
+}

@@ -103,6 +103,11 @@ pub struct EngineConfig {
     /// log — see [`crate::obs`]). Off by default: the disabled path is
     /// a `None` branch with no clock reads.
     pub telemetry: bool,
+    /// Build bit-sliced sections ([`crate::bsi`]) at ingest and let the
+    /// planner route range predicates to the slice circuit. On by
+    /// default; off is the differential switch pinning every range to
+    /// the OR-expansion reference.
+    pub bsi: bool,
     /// The filesystem the durable store runs on — [`RealVfs`] in
     /// production; a fault-injecting
     /// [`FaultVfs`](crate::store::vfs::FaultVfs) under test.
@@ -128,6 +133,7 @@ impl Default for EngineConfig {
             degraded: DegradedPolicy::default(),
             scrub_interval: None,
             telemetry: false,
+            bsi: true,
             vfs: Arc::new(RealVfs),
         }
     }
@@ -164,10 +170,11 @@ impl EngineConfig {
     /// (`"adaptive"|"raw"|"wah"|"roaring"`), `durable_path`
     /// (string or `null`), `flush_batches`, `max_segments`, `compaction`
     /// (`"off"|"foreground"|{"background_ms":N}`), `exec`
-    /// (`"auto"|"raw"|"compressed"|"sharded"|"store"`), `zone_maps`,
+    /// (`"auto"|"raw"|"compressed"|"sharded"|"store"|"bsi"`), `zone_maps`,
     /// `group_commit_window_us`, `ingest_queue`, `degraded`
     /// (`"fail_closed"|"serve_healthy"`), `scrub_interval_ms`
-    /// (number or `null`), `telemetry` (boolean). Durations serialize
+    /// (number or `null`), `telemetry` (boolean), `bsi` (boolean).
+    /// Durations serialize
     /// at the resolution their suffix names; sub-resolution remainders
     /// truncate.
     pub fn to_json(&self) -> Json {
@@ -244,6 +251,7 @@ impl EngineConfig {
                 },
             ),
             ("telemetry", self.telemetry.into()),
+            ("bsi", self.bsi.into()),
         ])
     }
 
@@ -339,6 +347,7 @@ impl EngineConfig {
                         "compressed" => ExecPolicy::Force(ExecPath::Compressed),
                         "sharded" => ExecPolicy::Force(ExecPath::Sharded),
                         "store" => ExecPolicy::Force(ExecPath::Store),
+                        "bsi" => ExecPolicy::Force(ExecPath::Bsi),
                         s => {
                             return Err(PallasError::Config(format!(
                                 "config key \"exec\": unknown path {s:?}"
@@ -381,6 +390,13 @@ impl EngineConfig {
                         PallasError::Config(
                             "config key \"telemetry\": expected a boolean"
                                 .into(),
+                        )
+                    })?
+                }
+                "bsi" => {
+                    cfg.bsi = v.as_bool().ok_or_else(|| {
+                        PallasError::Config(
+                            "config key \"bsi\": expected a boolean".into(),
                         )
                     })?
                 }
@@ -427,6 +443,7 @@ mod tests {
             degraded: DegradedPolicy::ServeHealthy,
             scrub_interval: Some(Duration::from_millis(40)),
             telemetry: true,
+            bsi: false,
             vfs: Arc::new(RealVfs),
         };
         let doc = cfg.to_json();
@@ -447,6 +464,7 @@ mod tests {
         assert_eq!(back.degraded, DegradedPolicy::ServeHealthy);
         assert_eq!(back.scrub_interval, Some(Duration::from_millis(40)));
         assert!(back.telemetry);
+        assert!(!back.bsi);
     }
 
     #[test]

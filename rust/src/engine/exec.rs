@@ -44,6 +44,7 @@
 use crate::bic::bitmap::Bitmap;
 use crate::bic::codec::CodecBitmap;
 use crate::bic::query::Query;
+use crate::bsi::SegmentBsi;
 use crate::store::zone::ZoneMap;
 
 /// One contiguous slice of the global object space: `rows[attr]` holds
@@ -56,6 +57,9 @@ pub(crate) struct RowChunk<'a> {
     pub rows: &'a [CodecBitmap],
     /// Exact per-row cardinalities when known (`None` = never skip).
     pub zone: Option<&'a ZoneMap>,
+    /// The chunk's bit-sliced section when built (`None` = the
+    /// slice-circuit tier falls back to OR-expansion here).
+    pub bsi: Option<&'a SegmentBsi>,
 }
 
 impl RowChunk<'_> {
@@ -384,6 +388,7 @@ mod tests {
                         base: *base,
                         rows,
                         zone: zoned.then_some(zone),
+                        bsi: None,
                     })
                     .collect();
                 let mut stats = EvalStats::default();
@@ -484,6 +489,7 @@ mod tests {
                 base: *base,
                 rows,
                 zone: Some(zone),
+                bsi: None,
             })
             .collect();
         let mut stats = EvalStats::default();

@@ -21,9 +21,10 @@
 //!   |                     |                 |      ^               |
 //!   |  flush() ----------- \----------------+      | Compactor     |
 //!   |                                       v      | (off/fg/bg)   |
-//!   |  query(q) --> planner --> raw | compressed | sharded | store |
+//!   |  query(q) --> planner --> raw|compressed|sharded|store|bsi   |
 //!   |               (cardinality cost model + zone-map skipping)   |
-//!   |  select(pred) -> Schema lowering -> query(q)                 |
+//!   |  select(pred) -> lowering -> bsi slice circuit | query(q)    |
+//!   |  aggregate()/top_k() -> weighted popcount over bit slices    |
 //!   |  snapshot() -> pinned segment set + memtable clone           |
 //!   |  stats() / close()                                           |
 //!   +--------------------------------------------------------------+
@@ -42,6 +43,7 @@
 
 #![deny(missing_docs)]
 
+pub(crate) mod bsi_exec;
 pub mod config;
 pub mod error;
 pub(crate) mod exec;
@@ -68,6 +70,7 @@ use crate::bic::clock;
 use crate::bic::codec::{CodecBitmap, CompressedIndex};
 use crate::bic::query::{Query, QueryError};
 use crate::bic::{BicConfig, BicCore};
+use crate::bsi::{build_chunk, BsiColSpec, BsiLayout, SegmentBsi};
 use crate::coordinator::sharding::ShardedIndexer;
 use crate::obs::{
     ActualRun, ChunkVerdict, ExplainReport, FoldStats, SlowEntry, Telemetry,
@@ -76,6 +79,7 @@ use crate::obs::{
 use crate::store::compaction::{CompactionPolicy, Compactor};
 use crate::store::{manifest, Scrubber, Store, StoreConfig, Vfs};
 use crate::substrate::json::Json;
+use bsi_exec::PredNode;
 use error::lock;
 use exec::{EvalStats, RowChunk};
 use ingest::{Ack, IngestPipeline};
@@ -259,6 +263,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Build bit-sliced sections ([`crate::bsi`]) at ingest and let the
+    /// planner answer range predicates through the O(log span) slice
+    /// circuit. On by default; off is the differential switch that
+    /// forces every range back onto the O(domain) OR-expansion.
+    pub fn bsi(mut self, on: bool) -> Self {
+        self.cfg.bsi = on;
+        self
+    }
+
     /// Run all durable-store I/O through `vfs`. The default is the real
     /// filesystem ([`crate::store::RealVfs`]); tests inject a
     /// [`FaultVfs`](crate::store::vfs::FaultVfs) here to rehearse
@@ -319,6 +332,27 @@ impl EngineBuilder {
         let mut compactor = None;
         let mut scrubber = None;
         let obs = cfg.telemetry.then(|| Arc::new(Telemetry::new()));
+        // The bit-sliced layout mirrors the schema column for column:
+        // slot `k` of every chunk's section answers ranges on column
+        // `k`. Both backends build sections against this one layout, so
+        // a chunk's section either matches it exactly or is ignored.
+        let bsi_layout = cfg.bsi.then(|| {
+            Arc::new(BsiLayout::new(
+                schema
+                    .columns()
+                    .iter()
+                    .map(|c| BsiColSpec {
+                        name: c.name().to_string(),
+                        attr_lo: c.attr_of(c.values()[0]).unwrap_or(0),
+                        values: c
+                            .values()
+                            .iter()
+                            .map(|&v| i64::from(v))
+                            .collect(),
+                    })
+                    .collect(),
+            ))
+        });
         let backend = match &cfg.durable_path {
             Some(path) => {
                 let scfg = StoreConfig {
@@ -331,6 +365,7 @@ impl EngineBuilder {
                     zone_pruning: cfg.zone_maps,
                     degraded: cfg.degraded,
                     telemetry: obs.clone(),
+                    bsi_layout: bsi_layout.clone(),
                     vfs: Arc::clone(&cfg.vfs),
                 };
                 let store = if manifest::exists(path) {
@@ -434,6 +469,7 @@ impl EngineBuilder {
                 counters: Mutex::new(Counters::default()),
                 next_batch: AtomicU64::new(0),
                 obs,
+                bsi_layout,
             }),
             indexer,
             compactor,
@@ -455,6 +491,53 @@ pub struct IngestReceipt {
     pub total_objects: usize,
     /// `true` when the batch is durable (WAL fsynced) on return.
     pub durable: bool,
+}
+
+/// Aggregate function selector for [`Engine::aggregate`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggFn {
+    /// Filtered objects carrying the column at all.
+    Count,
+    /// Sum of every contained value over the filtered objects
+    /// (saturating at the `i64` range).
+    Sum,
+    /// Smallest contained value among the filtered objects.
+    Min,
+    /// Largest contained value among the filtered objects.
+    Max,
+}
+
+impl AggFn {
+    /// Stable wire label (the `aggregate` command's `agg` field).
+    pub fn label(self) -> &'static str {
+        match self {
+            AggFn::Count => "count",
+            AggFn::Sum => "sum",
+            AggFn::Min => "min",
+            AggFn::Max => "max",
+        }
+    }
+
+    /// Parse a wire label back; `None` for anything else.
+    pub fn parse(s: &str) -> Option<AggFn> {
+        match s {
+            "count" => Some(AggFn::Count),
+            "sum" => Some(AggFn::Sum),
+            "min" => Some(AggFn::Min),
+            "max" => Some(AggFn::Max),
+            _ => None,
+        }
+    }
+}
+
+/// Result of [`Engine::aggregate`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AggResult {
+    /// Filtered objects carrying the aggregated column.
+    pub rows: u64,
+    /// The aggregate value: the count for `Count`, the (possibly zero)
+    /// sum for `Sum`, and `None` for `Min`/`Max` over zero rows.
+    pub value: Option<i64>,
 }
 
 /// A point-in-time census of the engine.
@@ -488,6 +571,13 @@ pub struct EngineStats {
     pub queries_sharded: u64,
     /// Queries served by the store reader.
     pub queries_store: u64,
+    /// Queries served by the bit-sliced tier (range predicates through
+    /// the slice circuit, and forced-`bsi` structural evaluation).
+    pub queries_bsi: u64,
+    /// Aggregate evaluations served ([`Engine::aggregate`]).
+    pub aggregates: u64,
+    /// Top-k evaluations served ([`Engine::top_k`]).
+    pub topk_queries: u64,
     /// Compressed rows folded by store-tier queries.
     pub store_rows_folded: u64,
     /// Serialized (on-disk) bytes of the rows store-tier queries folded
@@ -523,10 +613,12 @@ impl EngineStats {
     /// [`EngineStats::to_json`]. Version 2 *added* the maintenance
     /// counters (`scrub_passes`, `scrub_bytes_verified`,
     /// `compaction_rounds`, `compaction_bytes_written`) and the
-    /// `telemetry` flag; no version-1 field was renamed or removed, so
-    /// consumers that parse by name keep working across the bump
-    /// (`rust/tests/engine_props.rs` pins both shapes).
-    pub const STATS_VERSION: u64 = 2;
+    /// `telemetry` flag; version 3 *added* the bit-sliced tier counters
+    /// (`queries_bsi`, `aggregates`, `topk_queries`, and `queries_bsi`
+    /// joining `queries_total`). No earlier field was renamed or
+    /// removed, so consumers that parse by name keep working across the
+    /// bumps (`rust/tests/engine_props.rs` pins the shapes).
+    pub const STATS_VERSION: u64 = 3;
 
     /// Queries served across all tiers.
     pub fn queries_total(&self) -> u64 {
@@ -534,6 +626,7 @@ impl EngineStats {
             + self.queries_compressed
             + self.queries_sharded
             + self.queries_store
+            + self.queries_bsi
     }
 
     /// The versioned JSON stats surface — consumed verbatim by the
@@ -560,7 +653,10 @@ impl EngineStats {
             ("queries_compressed", self.queries_compressed.into()),
             ("queries_sharded", self.queries_sharded.into()),
             ("queries_store", self.queries_store.into()),
+            ("queries_bsi", self.queries_bsi.into()),
             ("queries_total", self.queries_total().into()),
+            ("aggregates", self.aggregates.into()),
+            ("topk_queries", self.topk_queries.into()),
             ("store_rows_folded", self.store_rows_folded.into()),
             ("store_row_bytes_read", self.store_row_bytes_read.into()),
             ("store_chunks_skipped", self.store_chunks_skipped.into()),
@@ -580,7 +676,9 @@ impl EngineStats {
 
 #[derive(Default)]
 struct Counters {
-    queries: [u64; 4],
+    queries: [u64; 5],
+    aggregates: u64,
+    topk: u64,
     fold: EvalStats,
 }
 
@@ -588,6 +686,9 @@ struct Counters {
 /// for a query or snapshot is O(batches) pointer bumps, not a copy.
 struct MemTable {
     batches: Vec<Arc<Vec<CodecBitmap>>>,
+    /// Per-batch bit-sliced sections, parallel to `batches` (`None`
+    /// entries when the engine's `bsi` knob is off).
+    bsis: Vec<Option<Arc<SegmentBsi>>>,
     bits: usize,
     /// Exact per-attribute cardinalities, maintained at push — atomic
     /// with the batch append under the same lock, so the planner's
@@ -597,18 +698,27 @@ struct MemTable {
 
 impl MemTable {
     fn new(num_attrs: usize) -> MemTable {
-        MemTable { batches: Vec::new(), bits: 0, cards: vec![0; num_attrs] }
+        MemTable {
+            batches: Vec::new(),
+            bsis: Vec::new(),
+            bits: 0,
+            cards: vec![0; num_attrs],
+        }
     }
 
     /// Append one encoded batch, folding its (build-time cached) row
-    /// cardinalities into the running totals. Returns its object count.
-    fn push(&mut self, ci: CompressedIndex) -> usize {
+    /// cardinalities into the running totals and building its
+    /// bit-sliced section when a layout is configured. Returns its
+    /// object count.
+    fn push(&mut self, ci: CompressedIndex, layout: Option<&BsiLayout>) -> usize {
         let objects = ci.num_objects();
         self.bits += objects;
         for (a, card) in self.cards.iter_mut().enumerate() {
             *card += ci.cardinality(a) as u64;
         }
-        self.batches.push(Arc::new(ci.into_rows()));
+        let rows = ci.into_rows();
+        self.bsis.push(layout.map(|l| Arc::new(build_chunk(l, &rows))));
+        self.batches.push(Arc::new(rows));
         objects
     }
 }
@@ -636,6 +746,10 @@ pub(crate) struct Inner {
     /// The telemetry block when `cfg.telemetry` is set; `None` keeps
     /// every recording site a branch with no clock reads.
     pub(crate) obs: Option<Arc<Telemetry>>,
+    /// The bit-sliced column layout when `cfg.bsi` is set: the shape
+    /// every ingest-built section follows and the spec the slice
+    /// circuit validates chunk sections against before trusting them.
+    bsi_layout: Option<Arc<BsiLayout>>,
 }
 
 impl Inner {
@@ -777,7 +891,8 @@ impl Inner {
                     encoded
                         .into_iter()
                         .map(|ci| {
-                            let objects = g.push(ci);
+                            let objects =
+                                g.push(ci, self.bsi_layout.as_deref());
                             let batch = self
                                 .next_batch
                                 .fetch_add(1, Ordering::Relaxed);
@@ -880,7 +995,7 @@ impl Inner {
                         return;
                     };
                     for (ci, done) in run {
-                        let objects = g.push(ci);
+                        let objects = g.push(ci, self.bsi_layout.as_deref());
                         let batch =
                             self.next_batch.fetch_add(1, Ordering::Relaxed);
                         let receipt = IngestReceipt {
@@ -932,13 +1047,18 @@ impl Inner {
                 // clones `Arc`s; fallible paths surface poison as
                 // [`PallasError::Internal`] before evaluating).
                 let g = store.lock().unwrap_or_else(PoisonError::into_inner);
+                let mem: Vec<_> = g
+                    .memtable
+                    .iter()
+                    .map(|b| Arc::new(b.clone()))
+                    .collect();
                 PinnedView {
                     segs: g.segments.clone(),
-                    mem: g
-                        .memtable
-                        .iter()
-                        .map(|b| Arc::new(b.clone()))
-                        .collect(),
+                    // Durable memtable batches carry no slices until
+                    // flush writes the segment section; they range-query
+                    // through the fallback (bounded by `flush_batches`).
+                    mem_bsi: vec![None; mem.len()],
+                    mem,
                     mem_base: g.segment_bits(),
                     nbits: g.num_objects(),
                     prune,
@@ -955,6 +1075,7 @@ impl Inner {
                 PinnedView {
                     segs: Vec::new(),
                     mem: g.batches.clone(),
+                    mem_bsi: g.bsis.clone(),
                     mem_base: 0,
                     nbits: g.bits,
                     prune,
@@ -1279,6 +1400,15 @@ impl Engine {
     }
 
     fn plan_inputs(&self, q: &Query) -> PlanInputs {
+        self.plan_inputs_at(q, false)
+    }
+
+    /// `exact_cost` (the explain path) computes `est_cost` even when
+    /// the planner's decision would never read it (forced policy,
+    /// durable store with flushed segments): introspection wants the
+    /// zone-clamped estimate, while the query hot path skips the
+    /// counting work.
+    fn plan_inputs_at(&self, q: &Query, exact_cost: bool) -> PlanInputs {
         let conjunctive = matches!(q, Query::And(xs) if xs.len() >= 2);
         let (durable, segments, chunks, total_bits) = match &self.inner.backend {
             Backend::Durable(store) => {
@@ -1305,17 +1435,32 @@ impl Engine {
         let attrs = q.attrs();
         let decided_early = matches!(self.inner.cfg.exec, ExecPolicy::Force(_))
             || (durable && segments >= 1);
-        let est_cost = if attrs.is_empty() || decided_early {
+        let est_cost = if attrs.is_empty() || (decided_early && !exact_cost) {
             0
         } else {
             let cards = self.row_cards();
+            // Each leaf's cost is clamped by what the fold would really
+            // touch: only the chunks whose zone map does not prove the
+            // row empty. A wide range expansion references many leaves,
+            // but zone maps typically prove most of them absent from
+            // most chunks — charging each such leaf the full index
+            // width (the old clamp) over-estimated by orders of
+            // magnitude. Zone-less chunks count in full (safe upper
+            // bound).
+            let pinned = self.inner.pin();
+            let views = pinned.views();
             attrs
                 .iter()
                 .filter(|&&a| a < cards.len())
                 .map(|&a| {
+                    let live_bits: usize = views
+                        .iter()
+                        .filter(|c| !c.zone.is_some_and(|z| z.is_zero(a)))
+                        .map(|c| c.rows.first().map_or(0, CodecBitmap::len))
+                        .sum();
                     (cards[a] as usize)
                         .saturating_mul(planner::COST_BITS_PER_SET_BIT)
-                        .min(total_bits)
+                        .min(live_bits)
                 })
                 .sum()
         };
@@ -1325,6 +1470,7 @@ impl Engine {
             chunks,
             total_bits,
             est_cost,
+            bsi_range: false,
             workers: self.indexer.shards(),
             compressed_cached: self
                 .inner
@@ -1363,15 +1509,382 @@ impl Engine {
 
     /// Evaluate on a specific tier (differential testing, benches).
     /// [`PallasError::Config`] for [`ExecPath::Store`] without a durable
-    /// store.
+    /// store. [`ExecPath::Bsi`] works on any backend: a lowered query
+    /// has no symbolic ranges, so the tier evaluates it structurally and
+    /// stays bit-identical to the others.
     pub fn query_via(&self, q: &Query, path: ExecPath) -> Result<Bitmap> {
         self.validate(q)?;
         self.run(q, path)
     }
 
-    /// Lower a predicate against the schema and [`Engine::query`] it.
+    /// Lower a predicate against the schema and evaluate it. Range
+    /// comparisons (`ge`/`le`/`gt`/`lt`/`between`) take the bit-sliced
+    /// tier when the engine builds slices (planner rule 2): each range
+    /// leaf stays *symbolic* and chunks carrying a matching sliced
+    /// section answer it through the O(log span) slice circuit, every
+    /// other chunk OR-ing exactly the rows [`Predicate::lower`]'s
+    /// expansion would read — bit-identical by construction (see
+    /// [`bsi_exec`]; `rust/tests/bsi_props.rs` asserts it across
+    /// distributions). Everything else lowers to a [`Query`] and goes
+    /// through [`Engine::query`].
     pub fn select(&self, p: &Predicate) -> Result<Bitmap> {
-        self.query(&p.lower(&self.inner.schema)?)
+        let q = p.lower(&self.inner.schema)?;
+        let layout = match self.inner.bsi_layout.as_deref() {
+            Some(l) if bsi_exec::has_range_leaf(p) => l,
+            _ => return self.query(&q),
+        };
+        let t0 = self.inner.obs.as_ref().map(|_| Instant::now());
+        let mut inputs = self.plan_inputs(&q);
+        inputs.bsi_range = true;
+        let plan = planner::plan(self.inner.cfg.exec, &inputs);
+        if let (Some(t), Some(t0)) = (self.inner.obs.as_deref(), t0) {
+            t.ring.push(
+                TraceOp::Query,
+                TraceStage::Plan,
+                clock::to_cycles(t0.elapsed()),
+                0,
+            );
+        }
+        if plan.path == ExecPath::Bsi {
+            let node = bsi_exec::lower(p, &self.inner.schema, layout)?;
+            Ok(self.run_bsi(&node, || format!("{p:?}"))?.0)
+        } else {
+            self.run(&q, plan.path)
+        }
+    }
+
+    /// Evaluate a lowered [`PredNode`] on the bit-sliced tier: chunks
+    /// carrying a matching sliced section answer range leaves through
+    /// the slice circuit, the rest fall back to the expansion rows.
+    /// `desc` renders the query for the slow log (lazily — only when
+    /// telemetry is on).
+    fn run_bsi(
+        &self,
+        node: &PredNode,
+        desc: impl FnOnce() -> String,
+    ) -> Result<(Bitmap, EvalStats)> {
+        self.check_degraded()?;
+        let t0 = self.inner.obs.as_ref().map(|_| Instant::now());
+        let layout = self.inner.bsi_layout.as_deref();
+        let mut fold = EvalStats::default();
+        let mut slices = 0u64;
+        let out = self.eval_with(|chunks, nbits| {
+            bsi_exec::eval(chunks, nbits, node, layout, &mut fold, &mut slices)
+        });
+        let slot = ExecPath::ALL
+            .iter()
+            .position(|&p| p == ExecPath::Bsi)
+            .ok_or_else(|| {
+                PallasError::Internal("exec path missing from ALL".into())
+            })?;
+        let mut counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        // Fold accounting stays out of `counters.fold`: those feed the
+        // `store_*` stats fields, whose meaning (store-tier touches)
+        // must survive the new tier.
+        counters.queries[slot] += 1;
+        drop(counters);
+        if let (Some(t), Some(t0)) = (self.inner.obs.as_deref(), t0) {
+            let dur = clock::to_cycles(t0.elapsed());
+            t.query[slot].record(dur);
+            t.query_bytes.record(fold.row_bytes);
+            t.ring.push(
+                TraceOp::Query,
+                TraceStage::SliceCircuit,
+                dur,
+                slices,
+            );
+            let mut query = desc();
+            query.truncate(120);
+            t.slowlog.record(SlowEntry {
+                ts_cycles: clock::cycles(),
+                dur_cycles: dur,
+                tier: ExecPath::Bsi.label(),
+                query,
+                stats: fold_stats(&fold),
+            });
+        }
+        Ok((out, fold))
+    }
+
+    /// Resolve a column name to its schema slot, with the same typed
+    /// error as predicate lowering.
+    fn column_slot(&self, col: &str) -> Result<usize> {
+        self.inner
+            .schema
+            .columns()
+            .iter()
+            .position(|c| c.name() == col)
+            .ok_or_else(|| {
+                PallasError::InvalidQuery(format!(
+                    "unknown column {col:?} (schema has {})",
+                    self.inner
+                        .schema
+                        .columns()
+                        .iter()
+                        .map(|c| c.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    /// Evaluate the optional aggregate/top-k filter over an
+    /// already-pinned view (the filter and the kernels must see one
+    /// capture): symbolic range leaves when a layout is present,
+    /// structural evaluation of the lowered query otherwise.
+    fn filter_bitmap(
+        &self,
+        views: &[RowChunk<'_>],
+        nbits: usize,
+        filter: Option<&Predicate>,
+        fold: &mut EvalStats,
+        slices: &mut u64,
+    ) -> Result<Option<Bitmap>> {
+        let Some(p) = filter else { return Ok(None) };
+        let layout = self.inner.bsi_layout.as_deref();
+        let node = match layout {
+            Some(l) => bsi_exec::lower(p, &self.inner.schema, l)?,
+            None => PredNode::from_query(&p.lower(&self.inner.schema)?),
+        };
+        Ok(Some(bsi_exec::eval(views, nbits, &node, layout, fold, slices)))
+    }
+
+    /// Aggregate a column over the (optionally filtered) index. `Count`
+    /// counts filtered objects carrying the column, `Sum` adds every
+    /// contained value (containment-weighted on multi-valued objects),
+    /// `Min`/`Max` take the extreme contained value. Chunks carrying a
+    /// bit-sliced section answer by weighted popcount over their
+    /// `log2(span)` slices; the rest fall back to the per-value rows —
+    /// the same answer by construction (`rust/tests/bsi_props.rs` pins
+    /// both against a brute-force reference). Typed
+    /// [`PallasError::InvalidQuery`] on an unknown column or a filter
+    /// that fails predicate validation.
+    pub fn aggregate(
+        &self,
+        col: &str,
+        agg: AggFn,
+        filter: Option<&Predicate>,
+    ) -> Result<AggResult> {
+        let slot = self.column_slot(col)?;
+        self.check_degraded()?;
+        let t0 = self.inner.obs.as_ref().map(|_| Instant::now());
+        let pinned = self.inner.pin();
+        let views = pinned.views();
+        let mut fold = EvalStats::default();
+        let mut slices = 0u64;
+        let fbm = self.filter_bitmap(
+            &views,
+            pinned.nbits,
+            filter,
+            &mut fold,
+            &mut slices,
+        )?;
+        let schema_col = &self.inner.schema.columns()[slot];
+        let pairs: Vec<(usize, i32)> = schema_col
+            .values()
+            .iter()
+            .filter_map(|&v| schema_col.attr_of(v).map(|a| (a, v)))
+            .collect();
+        let spec = self.inner.bsi_layout.as_deref().map(|l| &l.cols[slot]);
+        let (mut rows, mut sum) = (0u64, 0i128);
+        let (mut min, mut max) = (None::<i64>, None::<i64>);
+        for c in &views {
+            let len = c.rows.first().map_or(0, CodecBitmap::len);
+            if len == 0 {
+                continue;
+            }
+            let fwin = fbm.as_ref().map(|f| f.window(c.base, len));
+            match spec.and_then(|sp| {
+                c.bsi.and_then(|s| s.matching(slot, sp.attr_lo, &sp.values))
+            }) {
+                Some(bc) => {
+                    slices += 1;
+                    rows += bc.count(fwin.as_ref());
+                    match agg {
+                        AggFn::Count => {}
+                        AggFn::Sum => sum += bc.sum(fwin.as_ref()),
+                        AggFn::Min => {
+                            if let Some(v) = bc.min_value(fwin.as_ref()) {
+                                min = Some(min.map_or(v, |m| m.min(v)));
+                            }
+                        }
+                        AggFn::Max => {
+                            if let Some(v) = bc.max_value(fwin.as_ref()) {
+                                max = Some(max.map_or(v, |m| m.max(v)));
+                            }
+                        }
+                    }
+                }
+                None => {
+                    // Per-value fallback over the column's rows.
+                    let mut present = Bitmap::zeros(len);
+                    for &(a, v) in &pairs {
+                        let mut t = c.rows[a].to_bitmap();
+                        if let Some(f) = &fwin {
+                            t.and_assign(f);
+                        }
+                        let n = t.count_ones();
+                        if n == 0 {
+                            continue;
+                        }
+                        match agg {
+                            AggFn::Count => {}
+                            AggFn::Sum => {
+                                sum += i128::from(v) * n as i128;
+                            }
+                            AggFn::Min => {
+                                let v = i64::from(v);
+                                min = Some(min.map_or(v, |m| m.min(v)));
+                            }
+                            AggFn::Max => {
+                                let v = i64::from(v);
+                                max = Some(max.map_or(v, |m| m.max(v)));
+                            }
+                        }
+                        present.or_assign(&t);
+                    }
+                    rows += present.count_ones() as u64;
+                }
+            }
+        }
+        drop(views);
+        let value = match agg {
+            AggFn::Count => Some(rows as i64),
+            AggFn::Sum => Some(
+                sum.clamp(i128::from(i64::MIN), i128::from(i64::MAX)) as i64,
+            ),
+            AggFn::Min => min,
+            AggFn::Max => max,
+        };
+        let mut counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        counters.aggregates += 1;
+        drop(counters);
+        if let (Some(t), Some(t0)) = (self.inner.obs.as_deref(), t0) {
+            let dur = clock::to_cycles(t0.elapsed());
+            t.aggregate.record(dur);
+            t.ring.push(
+                TraceOp::Aggregate,
+                TraceStage::SliceCircuit,
+                dur,
+                slices,
+            );
+        }
+        Ok(AggResult { rows, value })
+    }
+
+    /// The `k` largest-valued objects of a column (optionally
+    /// filtered), as `(object id, value)` sorted by value descending,
+    /// object id ascending on ties. Sliced chunks refine candidates
+    /// from the most significant slice down (successive refinement);
+    /// the rest scan the domain rows from the top value down, and the
+    /// per-chunk winners merge globally. A multi-valued object ranks by
+    /// its largest contained value. Typed
+    /// [`PallasError::InvalidQuery`] on an unknown column or a filter
+    /// that fails predicate validation.
+    pub fn top_k(
+        &self,
+        col: &str,
+        k: usize,
+        filter: Option<&Predicate>,
+    ) -> Result<Vec<(u64, i64)>> {
+        let slot = self.column_slot(col)?;
+        self.check_degraded()?;
+        let t0 = self.inner.obs.as_ref().map(|_| Instant::now());
+        let pinned = self.inner.pin();
+        let views = pinned.views();
+        let mut fold = EvalStats::default();
+        let mut slices = 0u64;
+        let fbm = self.filter_bitmap(
+            &views,
+            pinned.nbits,
+            filter,
+            &mut fold,
+            &mut slices,
+        )?;
+        let schema_col = &self.inner.schema.columns()[slot];
+        // Domain values descending, for the fallback scan.
+        let mut by_value: Vec<(i32, usize)> = schema_col
+            .values()
+            .iter()
+            .filter_map(|&v| schema_col.attr_of(v).map(|a| (v, a)))
+            .collect();
+        by_value.sort_unstable_by(|x, y| y.0.cmp(&x.0));
+        let spec = self.inner.bsi_layout.as_deref().map(|l| &l.cols[slot]);
+        let mut out: Vec<(u64, i64)> = Vec::new();
+        for c in &views {
+            let len = c.rows.first().map_or(0, CodecBitmap::len);
+            if len == 0 || k == 0 {
+                continue;
+            }
+            let fwin = fbm.as_ref().map(|f| f.window(c.base, len));
+            match spec.and_then(|sp| {
+                c.bsi.and_then(|s| s.matching(slot, sp.attr_lo, &sp.values))
+            }) {
+                Some(bc) => {
+                    slices += 1;
+                    for (id, v) in bc.top_k(fwin.as_ref(), k) {
+                        out.push(((c.base + id) as u64, v));
+                    }
+                }
+                None => {
+                    // The chunk's own top-k by descending domain value;
+                    // ids within one value ascend, and `taken` keeps a
+                    // multi-valued object at its largest value only.
+                    let mut taken = Bitmap::zeros(len);
+                    let mut got = 0usize;
+                    for &(v, a) in &by_value {
+                        if got >= k {
+                            break;
+                        }
+                        let mut t = c.rows[a].to_bitmap();
+                        if let Some(f) = &fwin {
+                            t.and_assign(f);
+                        }
+                        t.and_not_assign(&taken);
+                        for id in t.iter_ones() {
+                            if got >= k {
+                                break;
+                            }
+                            out.push(((c.base + id) as u64, i64::from(v)));
+                            got += 1;
+                        }
+                        taken.or_assign(&t);
+                    }
+                }
+            }
+        }
+        drop(views);
+        // Global merge: each chunk contributed its own top-k, and the
+        // global winners are among them. Same order contract as the
+        // per-chunk kernel.
+        out.sort_unstable_by(|x, y| y.1.cmp(&x.1).then(x.0.cmp(&y.0)));
+        out.truncate(k);
+        let mut counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        counters.topk += 1;
+        drop(counters);
+        if let (Some(t), Some(t0)) = (self.inner.obs.as_deref(), t0) {
+            let dur = clock::to_cycles(t0.elapsed());
+            t.topk.record(dur);
+            t.ring.push(
+                TraceOp::Aggregate,
+                TraceStage::SliceCircuit,
+                dur,
+                slices,
+            );
+        }
+        Ok(out)
     }
 
     /// Explain what [`Engine::select`] would do with `p`: the planner's
@@ -1382,7 +1895,10 @@ impl Engine {
     /// carries the measured fold accounting, match count, and duration
     /// next to the prediction — predicted equals measured whenever the
     /// evaluator's empty-accumulator short-circuit never fires
-    /// (`rust/tests/obs_props.rs` pins this differentially).
+    /// (`rust/tests/obs_props.rs` pins this differentially). On the
+    /// bit-sliced tier the prediction still models the OR-expansion
+    /// while the measured run counts slices — the gap between the two
+    /// is exactly the circuit's saving.
     ///
     /// Available with telemetry off: explain reads only plans, zone
     /// maps, and row metadata, so it costs nothing on the hot path.
@@ -1393,7 +1909,9 @@ impl Engine {
     ) -> Result<ExplainReport> {
         let q = p.lower(&self.inner.schema)?;
         self.validate(&q)?;
-        let inputs = self.plan_inputs(&q);
+        let mut inputs = self.plan_inputs_at(&q, true);
+        inputs.bsi_range = self.inner.bsi_layout.is_some()
+            && bsi_exec::has_range_leaf(p);
         let (plan, rules) =
             planner::plan_trace(self.inner.cfg.exec, &inputs);
         let pinned = self.inner.pin();
@@ -1421,7 +1939,20 @@ impl Engine {
         drop(views);
         let actual = if analyze {
             let t0 = Instant::now();
-            let (bm, stats) = self.run_with_stats(&q, plan.path)?;
+            // The bit-sliced tier analyzes what `select` would really
+            // run: symbolic range leaves when a layout is present,
+            // structural evaluation otherwise (a forced `bsi` policy on
+            // an engine built without slices).
+            let (bm, stats) = match self.inner.bsi_layout.as_deref() {
+                Some(l)
+                    if plan.path == ExecPath::Bsi
+                        && bsi_exec::has_range_leaf(p) =>
+                {
+                    let node = bsi_exec::lower(p, &self.inner.schema, l)?;
+                    self.run_bsi(&node, || format!("{p:?}"))?
+                }
+                _ => self.run_with_stats(&q, plan.path)?,
+            };
             Some(ActualRun {
                 stats: fold_stats(&stats),
                 count: bm.count_ones(),
@@ -1486,6 +2017,18 @@ impl Engine {
         q: &Query,
         path: ExecPath,
     ) -> Result<(Bitmap, EvalStats)> {
+        if path == ExecPath::Bsi {
+            // A lowered query has no symbolic ranges, so the bit-sliced
+            // tier evaluates it structurally — bit-identical to every
+            // other tier and available on any backend, which is what
+            // lets forced policies and differential `ExecPath::ALL`
+            // loops include this tier. Symbolic range entry comes
+            // through [`Engine::select`], which lowers the predicate
+            // itself.
+            return self.run_bsi(&PredNode::from_query(q), || {
+                format!("{q:?}")
+            });
+        }
         self.check_degraded()?;
         let t0 = self.inner.obs.as_ref().map(|_| Instant::now());
         let m = self.num_attrs();
@@ -1529,6 +2072,11 @@ impl Engine {
                 self.eval_with(|chunks, nbits| {
                     exec::eval_chunks_with(chunks, nbits, q, &mut fold)
                 })
+            }
+            ExecPath::Bsi => {
+                return Err(PallasError::Internal(
+                    "bsi path handled before the tier match".into(),
+                ))
             }
         };
         let slot =
@@ -1635,6 +2183,9 @@ impl Engine {
             queries_compressed: counters.queries[1],
             queries_sharded: counters.queries[2],
             queries_store: counters.queries[3],
+            queries_bsi: counters.queries[4],
+            aggregates: counters.aggregates,
+            topk_queries: counters.topk,
             store_rows_folded: counters.fold.rows_folded,
             store_row_bytes_read: counters.fold.row_bytes,
             store_chunks_skipped: counters.fold.chunks_skipped,
@@ -1713,6 +2264,7 @@ fn sharded_eval(
                             base: c.base - base,
                             rows: c.rows,
                             zone: c.zone,
+                            bsi: c.bsi,
                         })
                         .collect();
                     let last = &slice[slice.len() - 1];

@@ -23,13 +23,27 @@
 //! | # | condition                                                 | path       |
 //! |---|-----------------------------------------------------------|------------|
 //! | 1 | policy is `Force(p)`                                      | `p`        |
-//! | 2 | durable store with ≥ 1 flushed segment                    | Store      |
-//! | 3 | `ShardPolicy::Always`, ≥ 2 chunks, > 1 worker             | Sharded    |
-//! | 4 | compressed view already cached                            | Compressed |
-//! | 5 | `ShardPolicy::Auto`, ≥ 2 chunks, > 1 worker, cost ≥ 256 Kb | Sharded   |
-//! | 6 | conjunctive query, cost ≥ 64 Kb                           | Compressed |
-//! | 7 | index ≥ 64 Kbit (sparse query over a large index)         | Sharded*   |
-//! | 8 | otherwise                                                 | Raw        |
+//! | 2 | range predicate and the bit-sliced tier applies           | Bsi        |
+//! | 3 | durable store with ≥ 1 flushed segment                    | Store      |
+//! | 4 | `ShardPolicy::Always`, ≥ 2 chunks, > 1 worker             | Sharded    |
+//! | 5 | compressed view already cached                            | Compressed |
+//! | 6 | `ShardPolicy::Auto`, ≥ 2 chunks, > 1 worker, cost ≥ 256 Kb | Sharded   |
+//! | 7 | conjunctive query, cost ≥ 64 Kb                           | Compressed |
+//! | 8 | index ≥ 64 Kbit (sparse query over a large index)         | Sharded*   |
+//! | 9 | otherwise                                                 | Raw        |
+//!
+//! Rule 2 fires only on the predicate entry points ([`Engine::select`] /
+//! [`Engine::explain`](crate::engine::Engine::explain)): a lowered
+//! [`Query`](crate::bic::query::Query) has already OR-expanded its
+//! ranges, so only the typed predicate knows a `ge`/`le`/`between` leaf
+//! is present. The engine sets [`PlanInputs::bsi_range`] when the
+//! predicate carries a range comparison *and* the bit-sliced layout is
+//! built (`EngineBuilder::bsi`, on by default) — the slice circuit
+//! replaces O(domain) OR-merges with O(log span) AND/ANDNOT passes and
+//! stays bit-identical to the retained expansion (chunks that declined
+//! slices fall back per chunk).
+//!
+//! [`Engine::select`]: crate::engine::Engine::select
 //!
 //! \* under `ShardPolicy::Never` the sharded tier runs as a
 //! single-threaded chunk fold (the engine caps its worker count to 1),
@@ -63,7 +77,7 @@ pub const COMPRESS_MIN_BITS: usize = 1 << 16;
 /// run/container touch costs about a word).
 pub const COST_BITS_PER_SET_BIT: usize = 64;
 
-/// One of the four query execution tiers.
+/// One of the five query execution tiers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ExecPath {
     /// Assemble the full index and run `Query::eval` (the reference).
@@ -77,12 +91,23 @@ pub enum ExecPath {
     /// The durable store's reader: segment-by-segment fold kernels with
     /// zone-map skipping, memtable included. Requires a durable path.
     Store,
+    /// The bit-sliced tier: range predicates run the O(log span) slice
+    /// circuit per chunk ([`crate::bsi`]) instead of the O(domain)
+    /// OR-expansion, falling back per chunk where slices were declined.
+    /// Predicate entry points only
+    /// ([`Engine::select`](crate::engine::Engine::select)).
+    Bsi,
 }
 
 impl ExecPath {
     /// All paths, in stats order.
-    pub const ALL: [ExecPath; 4] =
-        [ExecPath::Raw, ExecPath::Compressed, ExecPath::Sharded, ExecPath::Store];
+    pub const ALL: [ExecPath; 5] = [
+        ExecPath::Raw,
+        ExecPath::Compressed,
+        ExecPath::Sharded,
+        ExecPath::Store,
+        ExecPath::Bsi,
+    ];
 
     /// Stable lowercase label (stats keys, bench case names).
     pub fn label(self) -> &'static str {
@@ -91,6 +116,7 @@ impl ExecPath {
             ExecPath::Compressed => "compressed",
             ExecPath::Sharded => "sharded",
             ExecPath::Store => "store",
+            ExecPath::Bsi => "bsi",
         }
     }
 }
@@ -137,6 +163,11 @@ pub(crate) struct PlanInputs {
     pub shard: ShardPolicy,
     /// Query is a top-level `And` of ≥ 2 terms.
     pub conjunctive: bool,
+    /// The caller is a predicate entry point, the predicate carries a
+    /// range comparison (`ge`/`le`/`gt`/`lt`/`between`), and the
+    /// bit-sliced layout is enabled. Query entry points always pass
+    /// `false` (a lowered query has already OR-expanded its ranges).
+    pub bsi_range: bool,
 }
 
 pub(crate) fn plan(policy: ExecPolicy, i: &PlanInputs) -> Plan {
@@ -166,6 +197,18 @@ pub(crate) fn plan_trace(
         matched: false,
         detail: "policy is auto".into(),
     });
+    rules.push(RuleTrace {
+        rule: "bsi-range",
+        matched: i.bsi_range,
+        detail: format!("bsi_range={}", i.bsi_range),
+    });
+    if i.bsi_range {
+        let plan = Plan {
+            path: ExecPath::Bsi,
+            reason: "range predicate: slice circuit over bit-sliced index",
+        };
+        return (plan, rules);
+    }
     let matched = i.durable && i.segments >= 1;
     rules.push(RuleTrace {
         rule: "durable-store",
@@ -282,7 +325,24 @@ mod tests {
             compressed_cached: false,
             shard: ShardPolicy::Auto,
             conjunctive: false,
+            bsi_range: false,
         }
+    }
+
+    #[test]
+    fn range_predicates_take_the_bit_sliced_tier() {
+        // bsi_range beats every later rule, including the store reader.
+        let i = PlanInputs {
+            bsi_range: true,
+            durable: true,
+            segments: 5,
+            ..inputs()
+        };
+        assert_eq!(plan(ExecPolicy::Auto, &i).path, ExecPath::Bsi);
+        // A forced policy still wins over the slice circuit.
+        assert_eq!(plan(ExecPolicy::Force(ExecPath::Raw), &i).path, ExecPath::Raw);
+        // Without a range predicate nothing routes to the tier.
+        assert_ne!(plan(ExecPolicy::Auto, &inputs()).path, ExecPath::Bsi);
     }
 
     #[test]
@@ -363,6 +423,7 @@ mod tests {
                 ..inputs()
             },
             PlanInputs { total_bits: 1 << 24, est_cost: 64, ..inputs() },
+            PlanInputs { bsi_range: true, durable: true, segments: 2, ..inputs() },
         ];
         for (k, i) in cases.iter().enumerate() {
             for policy in [ExecPolicy::Auto, ExecPolicy::Force(ExecPath::Raw)] {

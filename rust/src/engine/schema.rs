@@ -54,7 +54,7 @@ impl Column {
     }
 
     /// Global attribute indices of every row whose value satisfies `f`.
-    fn attrs_where(&self, f: impl Fn(i32) -> bool) -> Vec<usize> {
+    pub(crate) fn attrs_where(&self, f: impl Fn(i32) -> bool) -> Vec<usize> {
         self.values
             .iter()
             .enumerate()
@@ -308,9 +308,19 @@ impl ColRef {
     }
 
     /// Records containing any of `values` (values outside the domain
-    /// contribute nothing).
+    /// contribute nothing; an *empty* set is a typed
+    /// [`PallasError::InvalidQuery`] at lowering — it always means a
+    /// bug upstream, not "no rows please").
     pub fn in_set(self, values: impl IntoIterator<Item = i32>) -> Predicate {
         Predicate::In { col: self.name, values: values.into_iter().collect() }
+    }
+
+    /// Records containing any domain value in `[lo, hi]` (inclusive).
+    /// An inverted bound (`lo > hi`) is a typed
+    /// [`PallasError::InvalidQuery`] at lowering; a well-formed range
+    /// that happens to cover no domain value lowers to "no objects".
+    pub fn between(self, lo: i32, hi: i32) -> Predicate {
+        Predicate::Between { col: self.name, lo, hi }
     }
 
     /// Records containing *any* value of this column.
@@ -369,8 +379,18 @@ pub enum Predicate {
     In {
         /// Column name.
         col: String,
-        /// Candidate values (out-of-domain entries contribute nothing).
+        /// Candidate values (out-of-domain entries contribute nothing;
+        /// an empty list is rejected at lowering).
         values: Vec<i32>,
+    },
+    /// Records containing any domain value in `[lo, hi]` (inclusive).
+    Between {
+        /// Column name.
+        col: String,
+        /// Lower bound (inclusive).
+        lo: i32,
+        /// Upper bound (inclusive; must be `>= lo`).
+        hi: i32,
     },
     /// Records containing any value of the column.
     Any {
@@ -456,7 +476,23 @@ impl Predicate {
                 or_of(column(col)?.attrs_where(|v| op.matches(v, *value)))
             }
             Predicate::In { col, values } => {
-                or_of(column(col)?.attrs_where(|v| values.contains(&v)))
+                let c = column(col)?;
+                if values.is_empty() {
+                    return Err(PallasError::InvalidQuery(format!(
+                        "in_set on column {col:?} with an empty value set"
+                    )));
+                }
+                or_of(c.attrs_where(|v| values.contains(&v)))
+            }
+            Predicate::Between { col, lo, hi } => {
+                let c = column(col)?;
+                if lo > hi {
+                    return Err(PallasError::InvalidQuery(format!(
+                        "between on column {col:?}: inverted bounds \
+                         [{lo}, {hi}]"
+                    )));
+                }
+                or_of(c.attrs_where(|v| *lo <= v && v <= *hi))
             }
             Predicate::Any { col } => or_of(column(col)?.attrs_where(|_| true)),
             Predicate::And(xs) => Query::And(
@@ -573,6 +609,18 @@ mod tests {
             col("age").in_set([0, 30, 999]).lower(&s).unwrap(),
             Query::Or(vec![Query::Attr(3), Query::Attr(6)])
         );
+        // between is inclusive on both bounds...
+        assert_eq!(
+            col("age").between(7, 12).lower(&s).unwrap(),
+            Query::Or(vec![Query::Attr(4), Query::Attr(5)])
+        );
+        // ...single-match ranges drop the Or wrapper like Cmp does...
+        assert_eq!(col("age").between(1, 7).lower(&s).unwrap(), Query::Attr(4));
+        // ...and an in-domain-empty range is "no objects", not an error.
+        assert_eq!(
+            col("age").between(13, 29).lower(&s).unwrap(),
+            Query::Or(vec![])
+        );
         assert_eq!(
             col("city").any().lower(&s).unwrap(),
             Query::Or(vec![Query::Attr(0), Query::Attr(1), Query::Attr(2)])
@@ -592,6 +640,24 @@ mod tests {
         ));
         assert!(matches!(
             col("city").eq(2).lower(&s),
+            Err(PallasError::InvalidQuery(_))
+        ));
+        // The new builders validate through the same path: unknown
+        // columns, empty sets, inverted bounds.
+        assert!(matches!(
+            col("country").between(1, 5).lower(&s),
+            Err(PallasError::InvalidQuery(_))
+        ));
+        assert!(matches!(
+            col("country").in_set([1]).lower(&s),
+            Err(PallasError::InvalidQuery(_))
+        ));
+        assert!(matches!(
+            col("age").between(12, 7).lower(&s),
+            Err(PallasError::InvalidQuery(_))
+        ));
+        assert!(matches!(
+            col("age").in_set([]).lower(&s),
             Err(PallasError::InvalidQuery(_))
         ));
     }

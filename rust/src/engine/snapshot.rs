@@ -34,6 +34,11 @@ pub(crate) struct PinnedView {
     pub segs: Vec<Arc<Segment>>,
     /// Memtable batches, shared or cloned in their compressed encoding.
     pub mem: Vec<Arc<Vec<CodecBitmap>>>,
+    /// Per-batch bit-sliced sections, parallel to `mem` (the in-memory
+    /// backend builds them at push; the durable memtable leaves them
+    /// `None` — its batches range-query through the fallback until
+    /// flush builds the segment section).
+    pub mem_bsi: Vec<Option<Arc<crate::bsi::SegmentBsi>>>,
     /// First global object id of `mem[0]` (= flushed segment bits).
     pub mem_base: usize,
     /// Total objects covered.
@@ -78,11 +83,17 @@ impl PinnedView {
                 base: s.base,
                 rows: &s.rows,
                 zone: if self.prune { s.zone.as_ref() } else { None },
+                bsi: s.bsi.as_ref(),
             })
             .collect();
         let mut off = self.mem_base;
-        for batch in &self.mem {
-            out.push(RowChunk { base: off, rows: batch, zone: None });
+        for (k, batch) in self.mem.iter().enumerate() {
+            out.push(RowChunk {
+                base: off,
+                rows: batch,
+                zone: None,
+                bsi: self.mem_bsi.get(k).and_then(|b| b.as_deref()),
+            });
             off += batch.first().map_or(0, CodecBitmap::len);
         }
         out

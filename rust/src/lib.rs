@@ -5,6 +5,7 @@
 
 pub mod baselines;
 pub mod bic;
+pub mod bsi;
 pub mod cli_app;
 pub mod coordinator;
 pub mod engine;
@@ -18,4 +19,4 @@ pub mod store;
 pub mod substrate;
 
 pub use cli_app::cli_main;
-pub use engine::{Engine, EngineBuilder, PallasError};
+pub use engine::{AggFn, AggResult, Engine, EngineBuilder, PallasError};

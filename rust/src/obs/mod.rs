@@ -133,9 +133,18 @@ pub struct Telemetry {
     pub wal_fsync: Histogram,
     /// Query latency per execution tier (indexed by the engine's tier
     /// slot; labels arrive at exposition time).
-    pub query: [Histogram; 4],
+    pub query: [Histogram; 5],
     /// Serialized row bytes folded per query.
     pub query_bytes: Histogram,
+    /// Aggregate-kernel latency ([`Engine::aggregate`] — weighted
+    /// popcount over bit slices or the per-value fallback).
+    ///
+    /// [`Engine::aggregate`]: crate::engine::Engine::aggregate
+    pub aggregate: Histogram,
+    /// Top-k latency ([`Engine::top_k`] successive refinement).
+    ///
+    /// [`Engine::top_k`]: crate::engine::Engine::top_k
+    pub topk: Histogram,
     /// Memtable flush duration.
     pub flush: Histogram,
     /// Compaction round duration.
@@ -162,7 +171,7 @@ impl Telemetry {
 
     /// The exposition form: one histogram summary per channel, with
     /// `tier_labels` naming the per-tier query histograms.
-    pub fn to_json(&self, tier_labels: [&str; 4]) -> Json {
+    pub fn to_json(&self, tier_labels: [&str; 5]) -> Json {
         let mut query = Json::obj([]);
         for (label, h) in tier_labels.iter().zip(self.query.iter()) {
             query.set(label, h.snapshot().to_json());
@@ -172,6 +181,8 @@ impl Telemetry {
             ("wal_fsync", self.wal_fsync.snapshot().to_json()),
             ("query", query),
             ("query_bytes", self.query_bytes.snapshot().to_json()),
+            ("aggregate", self.aggregate.snapshot().to_json()),
+            ("topk", self.topk.snapshot().to_json()),
             ("flush", self.flush.snapshot().to_json()),
             ("compact", self.compact.snapshot().to_json()),
             ("scrub", self.scrub.snapshot().to_json()),
@@ -231,9 +242,12 @@ mod tests {
         let t = Telemetry::new();
         t.ingest_ack.record(1_000);
         t.query[3].record(2_000);
+        t.query[4].record(3_000);
         t.query_bytes.record(4_096);
+        t.aggregate.record(500);
+        t.topk.record(700);
         let doc =
-            t.to_json(["raw", "compressed", "sharded", "store"]);
+            t.to_json(["raw", "compressed", "sharded", "store", "bsi"]);
         assert_eq!(
             doc.get("ingest_ack")
                 .and_then(|h| h.get("count"))
@@ -246,7 +260,25 @@ mod tests {
             .and_then(|h| h.get("p50"))
             .and_then(Json::as_f64)
             .is_some_and(|p| p > 0.0));
+        assert!(doc
+            .get("query")
+            .and_then(|q| q.get("bsi"))
+            .and_then(|h| h.get("count"))
+            .and_then(Json::as_f64)
+            .is_some_and(|c| c == 1.0));
         assert!(doc.get("wal_fsync").is_some());
         assert!(doc.get("scrub").is_some());
+        assert_eq!(
+            doc.get("aggregate")
+                .and_then(|h| h.get("count"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            doc.get("topk")
+                .and_then(|h| h.get("count"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
     }
 }

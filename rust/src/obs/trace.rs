@@ -36,6 +36,8 @@ pub enum TraceOp {
     Scrub = 4,
     /// WAL group-commit machinery.
     Wal = 5,
+    /// An aggregate or top-k evaluation over bit slices.
+    Aggregate = 6,
 }
 
 impl TraceOp {
@@ -48,6 +50,7 @@ impl TraceOp {
             TraceOp::Compact => "compact",
             TraceOp::Scrub => "scrub",
             TraceOp::Wal => "wal",
+            TraceOp::Aggregate => "aggregate",
         }
     }
 
@@ -58,6 +61,7 @@ impl TraceOp {
             2 => TraceOp::Flush,
             3 => TraceOp::Compact,
             4 => TraceOp::Scrub,
+            6 => TraceOp::Aggregate,
             _ => TraceOp::Wal,
         }
     }
@@ -85,6 +89,10 @@ pub enum TraceStage {
     ZoneSkip = 7,
     /// A whole foreground operation (flush/compact/scrub duration).
     Run = 8,
+    /// A bit-sliced evaluation: the ripple comparison circuit or a
+    /// weighted-popcount aggregate pass (bytes = chunks that ran on
+    /// slices rather than the fallback).
+    SliceCircuit = 9,
 }
 
 impl TraceStage {
@@ -100,6 +108,7 @@ impl TraceStage {
             TraceStage::Fold => "fold",
             TraceStage::ZoneSkip => "zone-skip",
             TraceStage::Run => "run",
+            TraceStage::SliceCircuit => "slice-circuit",
         }
     }
 
@@ -113,6 +122,7 @@ impl TraceStage {
             5 => TraceStage::Plan,
             6 => TraceStage::Fold,
             7 => TraceStage::ZoneSkip,
+            9 => TraceStage::SliceCircuit,
             _ => TraceStage::Run,
         }
     }

@@ -162,6 +162,48 @@ impl Client {
         self.tenant_cmd("trace", tenant)
     }
 
+    /// `aggregate` one column (`agg` is `count`/`sum`/`min`/`max`),
+    /// optionally filtered by a predicate document.
+    pub fn aggregate(
+        &mut self,
+        tenant: &str,
+        col: &str,
+        agg: &str,
+        filter: Option<&Json>,
+    ) -> Result<Json> {
+        let mut req = Json::obj([
+            ("cmd", "aggregate".into()),
+            ("tenant", tenant.into()),
+            ("col", col.into()),
+            ("agg", agg.into()),
+        ]);
+        if let Some(f) = filter {
+            req.set("filter", f.clone());
+        }
+        self.call(&req)
+    }
+
+    /// `topk`: the `k` largest values of a column as `[object, value]`
+    /// pairs, optionally filtered.
+    pub fn topk(
+        &mut self,
+        tenant: &str,
+        col: &str,
+        k: usize,
+        filter: Option<&Json>,
+    ) -> Result<Json> {
+        let mut req = Json::obj([
+            ("cmd", "topk".into()),
+            ("tenant", tenant.into()),
+            ("col", col.into()),
+            ("k", k.into()),
+        ]);
+        if let Some(f) = filter {
+            req.set("filter", f.clone());
+        }
+        self.call(&req)
+    }
+
     fn tenant_cmd(&mut self, cmd: &str, tenant: &str) -> Result<Json> {
         self.call(&Json::obj([
             ("cmd", cmd.into()),

@@ -234,5 +234,36 @@ fn dispatch(
                 .map(|events| Json::obj([("events", events)]))
                 .ok_or_else(|| WireError::telemetry_off(&t.name))
         }),
+        Command::Aggregate { tenant, col, agg, filter } => {
+            with_tenant(shared, &tenant, move |t| {
+                let r = t.engine.aggregate(&col, agg, filter.as_ref())?;
+                Ok(Json::obj([
+                    ("agg", agg.label().into()),
+                    ("rows", r.rows.into()),
+                    (
+                        "value",
+                        match r.value {
+                            Some(v) => v.into(),
+                            None => Json::Null,
+                        },
+                    ),
+                ]))
+            })
+        }
+        Command::TopK { tenant, col, k, filter } => {
+            with_tenant(shared, &tenant, move |t| {
+                let top = t.engine.top_k(&col, k, filter.as_ref())?;
+                Ok(Json::obj([(
+                    "top",
+                    Json::Arr(
+                        top.iter()
+                            .map(|&(id, v)| {
+                                Json::Arr(vec![id.into(), v.into()])
+                            })
+                            .collect(),
+                    ),
+                )]))
+            })
+        }
     }
 }

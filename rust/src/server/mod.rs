@@ -182,6 +182,8 @@ fn prometheus_text(tenants: &Json, server: &Json) -> String {
             ("ingest_ack", "bic_ingest_ack_cycles"),
             ("wal_fsync", "bic_wal_fsync_cycles"),
             ("query_bytes", "bic_query_bytes"),
+            ("aggregate", "bic_aggregate_cycles"),
+            ("topk", "bic_topk_cycles"),
             ("flush", "bic_flush_cycles"),
             ("compact", "bic_compact_cycles"),
             ("scrub", "bic_scrub_cycles"),

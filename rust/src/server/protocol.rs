@@ -22,7 +22,11 @@
 //! {"cmd":"explain","tenant":T,"predicate":P,"analyze":B?}
 //! {"cmd":"slowlog","tenant":T}
 //! {"cmd":"trace","tenant":T}
+//! {"cmd":"aggregate","tenant":T,"col":C,"agg":A,"filter":P?}
+//! {"cmd":"topk","tenant":T,"col":C,"k":N,"filter":P?}
 //! ```
+//!
+//! `A` is one of `count`/`sum`/`min`/`max` ([`AggFn::parse`]).
 //!
 //! `S` is the [`Schema::to_json`] form, `C` the
 //! [`EngineConfig::to_json`](crate::engine::EngineConfig::to_json) form
@@ -39,7 +43,7 @@
 //!
 //! [`Schema::to_json`]: crate::engine::Schema::to_json
 
-use crate::engine::{col, PallasError, Predicate};
+use crate::engine::{col, AggFn, PallasError, Predicate};
 use crate::substrate::json::Json;
 
 /// A typed wire error: `{code, what, detail}`. `code` is the machine
@@ -226,6 +230,30 @@ pub enum Command {
         /// Target tenant.
         tenant: String,
     },
+    /// Aggregate one column (bit-sliced weighted popcount when the
+    /// tenant's engine keeps slices; per-value fallback otherwise).
+    Aggregate {
+        /// Target tenant.
+        tenant: String,
+        /// Column to aggregate.
+        col: String,
+        /// The aggregate function.
+        agg: AggFn,
+        /// Optional row filter.
+        filter: Option<Predicate>,
+    },
+    /// The k largest values of one column (successive bit-slice
+    /// refinement when slices are present).
+    TopK {
+        /// Target tenant.
+        tenant: String,
+        /// Column to rank.
+        col: String,
+        /// How many `(object, value)` pairs to return.
+        k: usize,
+        /// Optional row filter.
+        filter: Option<Predicate>,
+    },
 }
 
 fn field_str(doc: &Json, key: &str) -> Result<String, WireError> {
@@ -271,6 +299,10 @@ fn field_records(doc: &Json) -> Result<Vec<Vec<i32>>, WireError> {
                 .collect()
         })
         .collect()
+}
+
+fn field_filter(doc: &Json) -> Result<Option<Predicate>, WireError> {
+    doc.get("filter").map(predicate_from_json).transpose()
 }
 
 /// Parse one request line. On failure the echoed `id` (when the line at
@@ -327,6 +359,34 @@ pub fn parse_request(line: &str) -> Result<Request, (Option<Json>, WireError)> {
         },
         "slowlog" => Command::SlowLog { tenant: tenant().map_err(&fail)? },
         "trace" => Command::Trace { tenant: tenant().map_err(&fail)? },
+        "aggregate" => Command::Aggregate {
+            tenant: tenant().map_err(&fail)?,
+            col: field_str(&doc, "col").map_err(&fail)?,
+            agg: field_str(&doc, "agg")
+                .map_err(&fail)
+                .and_then(|a| {
+                    AggFn::parse(&a).ok_or_else(|| fail(
+                        WireError::bad_request(format!(
+                            "\"agg\" must be one of count/sum/min/max, \
+                             got {a:?}"
+                        )),
+                    ))
+                })?,
+            filter: field_filter(&doc).map_err(&fail)?,
+        },
+        "topk" => Command::TopK {
+            tenant: tenant().map_err(&fail)?,
+            col: field_str(&doc, "col").map_err(&fail)?,
+            k: doc
+                .get("k")
+                .and_then(Json::as_f64)
+                .filter(|f| f.fract() == 0.0 && *f >= 0.0 && *f <= 1e9)
+                .map(|f| f as usize)
+                .ok_or_else(|| fail(WireError::bad_request(
+                    "\"k\" must be a non-negative integer",
+                )))?,
+            filter: field_filter(&doc).map_err(&fail)?,
+        },
         other => {
             return Err(fail(WireError::bad_request(format!(
                 "unknown command {other:?}"
@@ -342,6 +402,7 @@ pub fn parse_request(line: &str) -> Result<Request, (Option<Json>, WireError)> {
 /// {"col":C,"eq":V} {"col":C,"ne":V}
 /// {"col":C,"lt":V} {"col":C,"le":V} {"col":C,"gt":V} {"col":C,"ge":V}
 /// {"col":C,"in":[V,...]}            {"col":C,"any":true}
+/// {"col":C,"between":[LO,HI]}
 /// {"and":[P,...]} {"or":[P,...]} {"not":P}
 /// {"all":true}    {"none":true}
 /// ```
@@ -404,11 +465,25 @@ pub fn predicate_from_json(doc: &Json) -> Result<Predicate, WireError> {
             vs.iter().map(word).collect::<Result<Vec<i32>, WireError>>()?;
         return Ok(col(name).in_set(values));
     }
+    if let Some(b) = doc.get("between") {
+        let bounds = b
+            .as_arr()
+            .filter(|xs| xs.len() == 2)
+            .ok_or_else(|| {
+                WireError::bad_request(
+                    "\"between\" takes a two-element [lo, hi] array",
+                )
+            })?;
+        // Inverted bounds (lo > hi) pass through: the engine rejects
+        // them at lowering as `invalid-query`, like other domain checks.
+        return Ok(col(name).between(word(&bounds[0])?, word(&bounds[1])?));
+    }
     if doc.get("any").is_some() {
         return Ok(col(name).any());
     }
     Err(WireError::bad_request(format!(
-        "column predicate {name:?} needs one of eq/ne/lt/le/gt/ge/in/any"
+        "column predicate {name:?} needs one of \
+         eq/ne/lt/le/gt/ge/in/between/any"
     )))
 }
 
@@ -454,6 +529,10 @@ pub fn predicate_to_json(p: &Predicate) -> Json {
         Predicate::In { col, values } => Json::obj([
             ("col", col.as_str().into()),
             ("in", values.clone().into()),
+        ]),
+        Predicate::Between { col, lo, hi } => Json::obj([
+            ("col", col.as_str().into()),
+            ("between", Json::Arr(vec![(*lo).into(), (*hi).into()])),
         ]),
         Predicate::Any { col } => {
             Json::obj([("col", col.as_str().into()), ("any", true.into())])
@@ -538,6 +617,42 @@ mod tests {
         let r = parse_request(r#"{"cmd":"trace","tenant":"a"}"#)
             .expect("parse trace");
         assert!(matches!(r.cmd, Command::Trace { .. }));
+        let r = parse_request(
+            r#"{"cmd":"aggregate","tenant":"a","col":"c","agg":"sum",
+                "filter":{"col":"c","between":[2,5]}}"#,
+        )
+        .expect("parse aggregate");
+        match r.cmd {
+            Command::Aggregate { tenant, col, agg, filter } => {
+                assert_eq!(tenant, "a");
+                assert_eq!(col, "c");
+                assert_eq!(agg, AggFn::Sum);
+                assert_eq!(filter, Some(crate::engine::col("c").between(2, 5)));
+            }
+            other => panic!("wrong command: {other:?}"),
+        }
+        let r = parse_request(
+            r#"{"cmd":"topk","tenant":"a","col":"c","k":3}"#,
+        )
+        .expect("parse topk");
+        match r.cmd {
+            Command::TopK { col, k, filter, .. } => {
+                assert_eq!(col, "c");
+                assert_eq!(k, 3);
+                assert!(filter.is_none(), "filter is optional");
+            }
+            other => panic!("wrong command: {other:?}"),
+        }
+        let (_, err) = parse_request(
+            r#"{"cmd":"aggregate","tenant":"a","col":"c","agg":"median"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad-request");
+        let (_, err) = parse_request(
+            r#"{"cmd":"topk","tenant":"a","col":"c","k":2.5}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, "bad-request");
         let (id, err) =
             parse_request(r#"{"cmd":"warp","id":"x"}"#).unwrap_err();
         assert_eq!(id, Some(Json::Str("x".into())));
@@ -553,6 +668,7 @@ mod tests {
             .eq(3)
             .and(col("age").ge(7).not())
             .or(col("city").in_set([1, 9]))
+            .or(col("age").between(2, 6))
             .or(col("age").any());
         let doc = predicate_to_json(&p);
         let back = predicate_from_json(&doc).expect("parse");
@@ -578,6 +694,9 @@ mod tests {
         for bad in [
             r#"{"col":"c"}"#,
             r#"{"col":"c","eq":1.5}"#,
+            r#"{"col":"c","between":[1]}"#,
+            r#"{"col":"c","between":[1,2,3]}"#,
+            r#"{"col":"c","between":7}"#,
             r#"{"and":3}"#,
             r#"{"zzz":1}"#,
         ] {

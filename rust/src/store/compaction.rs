@@ -189,8 +189,14 @@ impl Store {
             span.iter().map(|s| s.file.clone()).collect();
 
         let id = self.next_segment_id;
-        let (file, bytes, zone) =
-            segment::write(self.vfs(), &self.dir, id, base, &rows)?;
+        let (file, bytes, zone, bsi) = segment::write(
+            self.vfs(),
+            &self.dir,
+            id,
+            base,
+            &rows,
+            self.cfg.bsi_layout.as_deref(),
+        )?;
         // `start..end` indexes the healthy list; build the committed
         // entry set by splicing there, then re-interleaving the
         // quarantine tombstones by base.
@@ -239,6 +245,7 @@ impl Store {
             bytes,
             rows,
             zone: Some(zone),
+            bsi,
         });
         self.segments.splice(start..end, [merged]);
         self.next_segment_id = id + 1;

@@ -142,6 +142,10 @@ pub struct StoreConfig {
     /// write+fsync timings into it. `None` (the default) keeps the
     /// store paths free of clock reads and atomics.
     pub telemetry: Option<Arc<Telemetry>>,
+    /// When set, flushed (and compacted) segments carry a bit-sliced
+    /// index section over these columns (`BICSEG3`; see
+    /// [`crate::bsi`]). `None` writes plain v2 segments.
+    pub bsi_layout: Option<Arc<crate::bsi::BsiLayout>>,
 }
 
 impl Default for StoreConfig {
@@ -154,6 +158,7 @@ impl Default for StoreConfig {
             degraded: DegradedPolicy::default(),
             vfs: Arc::new(RealVfs),
             telemetry: None,
+            bsi_layout: None,
         }
     }
 }
@@ -650,8 +655,14 @@ impl Store {
             .collect();
 
         let id = self.next_segment_id;
-        let (file, bytes, zone) =
-            segment::write(self.vfs(), &self.dir, id, base, &rows)?;
+        let (file, bytes, zone, bsi) = segment::write(
+            self.vfs(),
+            &self.dir,
+            id,
+            base,
+            &rows,
+            self.cfg.bsi_layout.as_deref(),
+        )?;
         let new_gen = self.wal_gen + 1;
         // Open the next WAL generation *before* the commit: every
         // fallible step happens while the old state is still the
@@ -701,6 +712,7 @@ impl Store {
             bytes,
             rows,
             zone: Some(zone),
+            bsi,
         }));
         self.memtable.clear();
         self.memtable_bits = 0;
@@ -739,11 +751,17 @@ impl Store {
                 base: s.base,
                 rows: &s.rows,
                 zone: if prune { s.zone.as_ref() } else { None },
+                bsi: s.bsi.as_ref(),
             })
             .collect();
         let mut off = self.segment_bits();
         for batch in &self.memtable {
-            out.push(RowChunk { base: off, rows: batch, zone: None });
+            out.push(RowChunk {
+                base: off,
+                rows: batch,
+                zone: None,
+                bsi: None,
+            });
             off += batch.first().map_or(0, CodecBitmap::len);
         }
         out

@@ -23,6 +23,16 @@
 //! re-verifies every stored cardinality against the decoded row, so a
 //! zone map can never silently disagree with the bits it summarizes.
 //!
+//! Version 3 (`b"BICSEG3\0"`) is the v2 layout with one optional
+//! section appended between the payloads and the CRC: the chunk's
+//! bit-sliced index ([`SegmentBsi`], PERF.md §bit-sliced-tier),
+//! written when the store carries a BSI layout. v1/v2 files still load
+//! with `bsi: None` — the slice-circuit tier simply falls back to
+//! OR-expansion over them — and a loaded v3 section is rebuild-verified
+//! against the decoded rows (same discipline as the zone cards), so
+//! lying slices quarantine the segment instead of corrupting range
+//! results.
+//!
 //! Write protocol: serialize fully in memory, write to `<name>.tmp`,
 //! fsync, rename into place, fsync the directory. A segment file is
 //! referenced by the manifest only after this completes, so a torn
@@ -36,12 +46,15 @@ use super::vfs::Vfs;
 use super::zone::ZoneMap;
 use super::{Result, StoreError};
 use crate::bic::codec::{read_u32, read_u64, CodecBitmap};
+use crate::bsi::{self, BsiLayout, SegmentBsi};
 use crate::substrate::crc::crc32;
 
 /// Version-2 magic (zone-mapped directory).
 pub(crate) const MAGIC: &[u8; 8] = b"BICSEG2\0";
 /// Version-1 magic (pre-zone-map files; still loadable).
 pub(crate) const MAGIC_V1: &[u8; 8] = b"BICSEG1\0";
+/// Version-3 magic (v2 plus the trailing bit-sliced-index section).
+pub(crate) const MAGIC_V3: &[u8; 8] = b"BICSEG3\0";
 const HEADER_LEN: usize = 36;
 const DIR_ENTRY_LEN: usize = 20;
 const DIR_ENTRY_LEN_V1: usize = 12;
@@ -64,6 +77,9 @@ pub struct Segment {
     /// Per-row cardinalities (`None` for version-1 files — unknown,
     /// never used to skip).
     pub(crate) zone: Option<ZoneMap>,
+    /// The chunk's bit-sliced index (`None` for v1/v2 files or stores
+    /// without a BSI layout — the range tier falls back there).
+    pub(crate) bsi: Option<SegmentBsi>,
 }
 
 /// File name for segment `id`.
@@ -82,19 +98,22 @@ pub fn encoded_len(rows: &[CodecBitmap]) -> usize {
 }
 
 /// Serialize a segment to its byte image; `zone` must have been
-/// measured over exactly these `rows`.
+/// measured over exactly these `rows`, and `bsi` (when present — it
+/// selects the v3 magic) built over exactly these `rows`.
 pub(crate) fn encode(
     id: u64,
     base: usize,
     rows: &[CodecBitmap],
     zone: &ZoneMap,
+    bsi: Option<&SegmentBsi>,
 ) -> Vec<u8> {
     let nbits = rows.first().map_or(0, CodecBitmap::len);
     debug_assert!(rows.iter().all(|r| r.len() == nbits), "ragged rows");
     debug_assert_eq!(zone.num_attrs(), rows.len(), "zone map width");
-    let total = encoded_len(rows);
+    let total = encoded_len(rows)
+        + bsi.map_or(0, SegmentBsi::serialized_bytes);
     let mut out = Vec::with_capacity(total);
-    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(if bsi.is_some() { MAGIC_V3 } else { MAGIC });
     out.extend_from_slice(&id.to_le_bytes());
     out.extend_from_slice(&(base as u64).to_le_bytes());
     out.extend_from_slice(&(nbits as u64).to_le_bytes());
@@ -111,6 +130,9 @@ pub(crate) fn encode(
     for r in rows {
         r.write_bytes(&mut out);
     }
+    if let Some(b) = bsi {
+        b.write_bytes(&mut out);
+    }
     debug_assert_eq!(out.len() + 4, total, "encoded_len drifted from encode");
     let crc = crc32(&out);
     out.extend_from_slice(&crc.to_le_bytes());
@@ -118,17 +140,20 @@ pub(crate) fn encode(
 }
 
 /// Write a segment file durably into `dir`; returns
-/// `(file_name, bytes, zone_map)` — the zone map is measured here so
-/// the in-memory [`Segment`] and the on-disk directory always agree.
+/// `(file_name, bytes, zone_map, bsi)` — the zone map (and, when a
+/// layout is given, the bit-sliced section) is measured here so the
+/// in-memory [`Segment`] and the on-disk image always agree.
 pub(crate) fn write(
     vfs: &dyn Vfs,
     dir: &Path,
     id: u64,
     base: usize,
     rows: &[CodecBitmap],
-) -> Result<(String, u64, ZoneMap)> {
+    layout: Option<&BsiLayout>,
+) -> Result<(String, u64, ZoneMap, Option<SegmentBsi>)> {
     let zone = ZoneMap::from_rows(rows);
-    let bytes = encode(id, base, rows, &zone);
+    let bsi = layout.map(|l| bsi::build_chunk(l, rows));
+    let bytes = encode(id, base, rows, &zone, bsi.as_ref());
     let name = file_name(id);
     let tmp = dir.join(format!("{name}.tmp"));
     let final_path = dir.join(&name);
@@ -139,7 +164,7 @@ pub(crate) fn write(
     }
     vfs.rename(&tmp, &final_path)?;
     sync_dir(vfs, dir);
-    Ok((name, bytes.len() as u64, zone))
+    Ok((name, bytes.len() as u64, zone, bsi))
 }
 
 /// Best-effort directory fsync (makes the rename itself durable; not
@@ -170,9 +195,10 @@ impl Segment {
                 format!("{} bytes is too short", buf.len()),
             ));
         }
-        let zoned = match &buf[..8] {
-            m if m == MAGIC => true,
-            m if m == MAGIC_V1 => false,
+        let (zoned, sliced) = match &buf[..8] {
+            m if m == MAGIC_V3 => (true, true),
+            m if m == MAGIC => (true, false),
+            m if m == MAGIC_V1 => (false, false),
             _ => return Err(corrupt(path, "bad magic")),
         };
         let entry_len = if zoned { DIR_ENTRY_LEN } else { DIR_ENTRY_LEN_V1 };
@@ -252,6 +278,21 @@ impl Segment {
             rows.push(row);
             expected_offset = end;
         }
+        let bsi = if sliced {
+            let mut bpos = expected_offset;
+            let section = SegmentBsi::read_bytes(body, &mut bpos, nbits)
+                .map_err(|e| corrupt(path, format!("bsi section: {e}")))?;
+            // The re-verify discipline of the zone cards, extended: a
+            // decoded slice set that disagrees with the rows it claims
+            // to index is corruption, not a soft fallback.
+            section
+                .verify(&rows)
+                .map_err(|e| corrupt(path, format!("bsi section: {e}")))?;
+            expected_offset = bpos;
+            Some(section)
+        } else {
+            None
+        };
         if expected_offset != body.len() {
             return Err(corrupt(
                 path,
@@ -267,7 +308,16 @@ impl Segment {
             .unwrap_or_default()
             .to_string();
         let zone = zoned.then(|| ZoneMap::from_cards(cards));
-        Ok(Segment { id, file, base, nbits, bytes: buf.len() as u64, rows, zone })
+        Ok(Segment {
+            id,
+            file,
+            base,
+            nbits,
+            bytes: buf.len() as u64,
+            rows,
+            zone,
+            bsi,
+        })
     }
 }
 
@@ -335,8 +385,9 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         for n in [0usize, 65, 10_007, 70_000] {
             let rows = rows_for(n, n as u64 + 1);
-            let (name, bytes, zone) =
-                write(&RealVfs, &dir, 7, 1234, &rows).unwrap();
+            let (name, bytes, zone, bsi) =
+                write(&RealVfs, &dir, 7, 1234, &rows, None).unwrap();
+            assert!(bsi.is_none(), "no layout, no section");
             assert_eq!(bytes as usize, encoded_len(&rows), "n={n}");
             let seg = Segment::load(&RealVfs, &dir.join(&name)).unwrap();
             assert_eq!(seg.id, 7);
@@ -373,10 +424,86 @@ mod tests {
         let _ = fs::remove_dir_all(&dir);
     }
 
+    /// A single-valued column layout + matching rows: record `j` takes
+    /// value index `j % nvals` when `j % 5 != 0` (some records lack
+    /// the column).
+    fn bsi_fixture(
+        n: usize,
+        values: &[i64],
+    ) -> (crate::bsi::BsiLayout, Vec<CodecBitmap>) {
+        let rows = (0..values.len())
+            .map(|i| {
+                let mut b = Bitmap::zeros(n);
+                for j in 0..n {
+                    if j % 5 != 0 && j % values.len() == i {
+                        b.set(j, true);
+                    }
+                }
+                CodecBitmap::from_bitmap(&b)
+            })
+            .collect();
+        let layout = crate::bsi::BsiLayout::new(vec![crate::bsi::BsiColSpec {
+            name: "v".into(),
+            attr_lo: 0,
+            values: values.to_vec(),
+        }]);
+        (layout, rows)
+    }
+
+    #[test]
+    fn v3_files_round_trip_the_bsi_section() {
+        let dir = std::env::temp_dir()
+            .join(format!("bic-seg-v3-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let (layout, rows) = bsi_fixture(1_200, &[3, 7, 11, 20]);
+        let (name, bytes, _, bsi) =
+            write(&RealVfs, &dir, 4, 0, &rows, Some(&layout)).unwrap();
+        let bsi = bsi.expect("layout given, section built");
+        assert!(bsi.cols[0].col.is_some(), "fixture is single-valued");
+        assert_eq!(
+            bytes as usize,
+            encoded_len(&rows) + bsi.serialized_bytes()
+        );
+        let seg = Segment::load(&RealVfs, &dir.join(&name)).unwrap();
+        assert_eq!(seg.bsi.as_ref(), Some(&bsi), "section round-trips");
+        assert!(seg.zone.is_some(), "v3 still carries the zone map");
+        assert_eq!(seg.rows, rows);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_a_lying_bsi_section_even_with_a_valid_crc() {
+        let (layout, rows) = bsi_fixture(900, &[1, 2, 5]);
+        let bsi = crate::bsi::build_chunk(&layout, &rows);
+        let mut lying = bsi.clone();
+        if let Some(c) = &mut lying.cols[0].col {
+            let mut b = c.slices[0].to_bitmap();
+            b.set(6, !b.get(6));
+            c.slices[0] = CodecBitmap::from_bitmap(&b);
+        }
+        let image =
+            encode(2, 0, &rows, &ZoneMap::from_rows(&rows), Some(&lying));
+        let dir = std::env::temp_dir()
+            .join(format!("bic-seg-bsilie-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg-bsilie.bic");
+        fs::write(&path, &image).unwrap();
+        let err = Segment::load(&RealVfs, &path).expect_err("lying slices");
+        assert!(err.to_string().contains("bsi"), "{err}");
+        // The honest section loads.
+        let image =
+            encode(2, 0, &rows, &ZoneMap::from_rows(&rows), Some(&bsi));
+        fs::write(&path, &image).unwrap();
+        assert!(Segment::load(&RealVfs, &path).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
     #[test]
     fn load_rejects_corruption_at_every_byte() {
         let rows = rows_for(2_000, 99);
-        let image = encode(3, 0, &rows, &ZoneMap::from_rows(&rows));
+        let image = encode(3, 0, &rows, &ZoneMap::from_rows(&rows), None);
         let dir = std::env::temp_dir()
             .join(format!("bic-seg-corrupt-{}", std::process::id()));
         let _ = fs::remove_dir_all(&dir);
@@ -404,7 +531,8 @@ mod tests {
     #[test]
     fn load_rejects_a_lying_zone_map_even_with_a_valid_crc() {
         let rows = rows_for(1_500, 7);
-        let mut image = encode(1, 0, &rows, &ZoneMap::from_rows(&rows));
+        let mut image =
+            encode(1, 0, &rows, &ZoneMap::from_rows(&rows), None);
         // Patch row 0's stored cardinality (directory entry bytes
         // 36+8+4 .. 36+20) and re-stamp the CRC so only the semantic
         // check can catch the lie.

@@ -44,6 +44,11 @@ impl From<i32> for Json {
         Json::Num(v as f64)
     }
 }
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Num(v as f64)
+    }
+}
 impl From<&str> for Json {
     fn from(v: &str) -> Self {
         Json::Str(v.to_string())

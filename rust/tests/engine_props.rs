@@ -624,7 +624,7 @@ fn stats_json_surface_is_versioned_and_stable() {
         |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or_else(|| {
             panic!("stats JSON missing numeric field {k:?}")
         });
-    assert_eq!(num("stats_version"), 2.0);
+    assert_eq!(num("stats_version"), 3.0);
     assert_eq!(num("attrs"), CFG.m_keys as f64);
     assert_eq!(num("batches_ingested"), 4.0);
     assert_eq!(num("objects"), stats.objects as f64);
@@ -665,6 +665,13 @@ fn stats_json_surface_is_versioned_and_stable() {
             doc.get(v2_field).and_then(Json::as_f64).is_some()
                 || doc.get(v2_field).and_then(Json::as_bool).is_some(),
             "v2 field {v2_field} missing"
+        );
+    }
+    // Version 3 additions (bit-sliced tier) are additive the same way.
+    for v3_field in ["queries_bsi", "aggregates", "topk_queries"] {
+        assert!(
+            doc.get(v3_field).and_then(Json::as_f64).is_some(),
+            "v3 field {v3_field} missing"
         );
     }
     assert_eq!(doc.get("telemetry").and_then(Json::as_bool), Some(false));

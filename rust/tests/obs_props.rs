@@ -430,7 +430,7 @@ fn wire_surface_exposes_quantiles_explain_slowlog_and_trace() {
     // text alongside.
     let m = c.metrics().expect("transport");
     assert!(response_ok(&m), "metrics: {}", m.render());
-    assert_eq!(m.get("stats_version").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(m.get("stats_version").and_then(Json::as_f64), Some(3.0));
     let obs_tenant =
         m.get("tenants").and_then(|t| t.get("obs")).expect("tenant obs");
     let telem = obs_tenant.get("telemetry").expect("telemetry section");
@@ -465,7 +465,7 @@ fn wire_surface_exposes_quantiles_explain_slowlog_and_trace() {
         .get("prometheus")
         .and_then(Json::as_str)
         .expect("prometheus text");
-    assert!(prom.starts_with("# bic_metrics_version 2"), "version header");
+    assert!(prom.starts_with("# bic_metrics_version 3"), "version header");
     for series in
         ["bic_ingest_ack_cycles", "bic_query_cycles", "tenant=\"obs\""]
     {

@@ -472,7 +472,7 @@ fn metrics_surface_and_restart_reopen() {
     assert!(response_ok(&m), "metrics: {}", m.render());
     assert_eq!(
         m.get("stats_version").and_then(Json::as_f64),
-        Some(2.0),
+        Some(3.0),
         "stats_version"
     );
     let t = m
