@@ -126,10 +126,10 @@ if [[ "${1:-}" == "--bench" ]]; then
     echo "== bench-smoke: compression ablation =="
     BENCH_SMOKE=1 cargo bench --bench ablations
     # The pipelined-ingest and pruned-query pairs, the contention case,
-    # the telemetry-overhead twin, and the bit-sliced range/aggregate
-    # cases must all be present in the emitted results (they run inside
-    # the hotpath bench above).
-    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query engine/query_telemetry engine/contention bsi/range bsi/aggregate; do
+    # the telemetry-overhead twin, the bit-sliced range/aggregate cases,
+    # and the kernel-tier scalar-vs-dispatched pairs must all be present
+    # in the emitted results (they run inside the hotpath bench above).
+    for bench_case in engine/ingest_async engine/ingest engine/query_pruned engine/query engine/query_telemetry engine/contention bsi/range bsi/aggregate kernel/and-1Mbit kernel/and-1Mbit-scalar kernel/or-1Mbit kernel/or-1Mbit-scalar; do
         grep -q "\"$bench_case\"" BENCH_hotpath.json \
             || { echo "missing bench case $bench_case in BENCH_hotpath.json"; exit 1; }
     done
@@ -189,6 +189,11 @@ cargo build --release --examples
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+# The scalar leg pins the dispatch override: the full suite must pass
+# bit-identically with the SIMD tier forced off (PERF.md §kernel-tier).
+echo "== tier-1 (force-scalar): PALLAS_KERNEL_TIER=scalar cargo test -q =="
+PALLAS_KERNEL_TIER=scalar cargo test -q
 
 echo "== store-smoke: tmpdir ingest -> kill -> recover -> query =="
 cargo run --release --quiet --bin store_smoke

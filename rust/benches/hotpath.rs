@@ -15,6 +15,7 @@
 //! `BENCH_baseline.json` (see `ci.sh --bench`).
 
 use sotb_bic::baselines::SoftwareIndexer;
+use sotb_bic::bic::kernel;
 use sotb_bic::bic::transpose::{pack_rows, transpose, transpose_packed};
 use sotb_bic::bic::{
     BicConfig, BicCore, Bitmap, Cam, CompressedIndex, Query, WahBitmap,
@@ -88,6 +89,71 @@ fn main() {
         bench("bitmap/count_ones-1Mbit")
             .bytes((nbits / 8) as u64)
             .run(|| a.count_ones()),
+    );
+
+    // Scalar-vs-dispatched pairs over the raw kernel table: the same
+    // word slices through `kernel::SCALAR` and through whatever tier
+    // runtime dispatch selected (identical when the host lacks AVX2 or
+    // PALLAS_KERNEL_TIER=scalar is set — the pair then measures noise).
+    group("kernel tier (scalar vs dispatched, 1 Mbit)");
+    println!("active kernel tier: {}", kernel::tier().label());
+    let nw = nbits / 64;
+    let ksrc: Vec<u64> = (0..nw).map(|_| rng.next_u64()).collect();
+    let mut kdst: Vec<u64> = (0..nw).map(|_| rng.next_u64()).collect();
+    let kt = kernel::table();
+    results.push(
+        bench("kernel/and-1Mbit-scalar")
+            .bytes((nbits / 8) as u64)
+            .run(|| (kernel::SCALAR.and)(&mut kdst, &ksrc)),
+    );
+    results.push(
+        bench("kernel/and-1Mbit")
+            .bytes((nbits / 8) as u64)
+            .run(|| (kt.and)(&mut kdst, &ksrc)),
+    );
+    results.push(
+        bench("kernel/or-1Mbit-scalar")
+            .bytes((nbits / 8) as u64)
+            .run(|| (kernel::SCALAR.or)(&mut kdst, &ksrc)),
+    );
+    results.push(
+        bench("kernel/or-1Mbit")
+            .bytes((nbits / 8) as u64)
+            .run(|| (kt.or)(&mut kdst, &ksrc)),
+    );
+    results.push(
+        bench("kernel/count_ones-1Mbit-scalar")
+            .bytes((nbits / 8) as u64)
+            .run(|| (kernel::SCALAR.count_ones)(&ksrc)),
+    );
+    results.push(
+        bench("kernel/count_ones-1Mbit")
+            .bytes((nbits / 8) as u64)
+            .run(|| (kt.count_ones)(&ksrc)),
+    );
+    let mut tile = [0u64; 64];
+    for (i, w) in tile.iter_mut().enumerate() {
+        *w = ksrc[i];
+    }
+    results.push(
+        bench("kernel/transpose64-scalar")
+            .bytes(64 * 8)
+            .run(|| (kernel::SCALAR.transpose64)(&mut tile)),
+    );
+    results.push(
+        bench("kernel/transpose64")
+            .bytes(64 * 8)
+            .run(|| (kt.transpose64)(&mut tile)),
+    );
+    results.push(
+        bench("kernel/wah-compress-1Mbit-scalar")
+            .bytes((nbits / 8) as u64)
+            .run(|| WahBitmap::compress_with(&a, &kernel::SCALAR)),
+    );
+    results.push(
+        bench("kernel/wah-compress-1Mbit")
+            .bytes((nbits / 8) as u64)
+            .run(|| WahBitmap::compress_with(&a, kt)),
     );
 
     group("transpose (4096 records x 64 keys)");

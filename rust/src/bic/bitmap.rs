@@ -12,6 +12,14 @@
 //!
 //! Trailing bits past `nbits` in the last word are always zero — every
 //! operation maintains that invariant so word-level comparisons are exact.
+//!
+//! The bulk kernels (AND/OR/XOR/ANDNOT/NOT, the fused `and_all`,
+//! popcount, run counting) issue through [`kernel::table()`] — the
+//! runtime-dispatched SIMD tier — with the scalar loops retained in
+//! [`kernel::SCALAR`] as the differential reference
+//! (`rust/tests/kernel_props.rs` pins both tiers bit-identical).
+
+use super::kernel;
 
 /// Internal word width (host-native).
 pub const WORD_BITS: usize = 64;
@@ -20,9 +28,9 @@ pub const WORD_BITS: usize = 64;
 /// 32-bit output port and the Python kernels).
 pub const PACKED_WORD_BITS: usize = 32;
 
-/// Words per cache block: 8 x 8 B = one 64-byte line. The bulk kernels
-/// walk block-by-block so the compiler sees fixed-trip-count inner loops.
-const BLOCK_WORDS: usize = 8;
+/// Words per cache block (one 64-byte line) — re-exported home is
+/// [`kernel::BLOCK_WORDS`]; `and_all` probes liveness at this grain.
+const BLOCK_WORDS: usize = kernel::BLOCK_WORDS;
 
 /// A fixed-length bitmap packed into `u64` words.
 #[derive(Clone, PartialEq, Eq, Debug, Hash)]
@@ -42,45 +50,6 @@ pub fn words_for(nbits: usize) -> usize {
 #[inline]
 pub fn packed_words_for(nbits: usize) -> usize {
     nbits.div_ceil(PACKED_WORD_BITS)
-}
-
-/// Elementwise `op` over two word slices into a fresh vector, walked in
-/// cache-block chunks (fixed-size inner loops vectorize; the remainder
-/// tail is at most `BLOCK_WORDS - 1` words).
-#[inline]
-fn zip_map(a: &[u64], b: &[u64], op: impl Fn(u64, u64) -> u64 + Copy) -> Vec<u64> {
-    debug_assert_eq!(a.len(), b.len());
-    let mut out = vec![0u64; a.len()];
-    let ac = a.chunks_exact(BLOCK_WORDS);
-    let bc = b.chunks_exact(BLOCK_WORDS);
-    let (a_rem, b_rem) = (ac.remainder(), bc.remainder());
-    let mut oc = out.chunks_exact_mut(BLOCK_WORDS);
-    for ((o, x), y) in (&mut oc).zip(ac).zip(bc) {
-        for i in 0..BLOCK_WORDS {
-            o[i] = op(x[i], y[i]);
-        }
-    }
-    for ((o, &x), &y) in oc.into_remainder().iter_mut().zip(a_rem).zip(b_rem) {
-        *o = op(x, y);
-    }
-    out
-}
-
-/// In-place variant of [`zip_map`].
-#[inline]
-fn zip_assign(a: &mut [u64], b: &[u64], op: impl Fn(u64, u64) -> u64 + Copy) {
-    debug_assert_eq!(a.len(), b.len());
-    let bc = b.chunks_exact(BLOCK_WORDS);
-    let b_rem = bc.remainder();
-    let mut ac = a.chunks_exact_mut(BLOCK_WORDS);
-    for (x, y) in (&mut ac).zip(bc) {
-        for i in 0..BLOCK_WORDS {
-            x[i] = op(x[i], y[i]);
-        }
-    }
-    for (x, &y) in ac.into_remainder().iter_mut().zip(b_rem) {
-        *x = op(*x, y);
-    }
 }
 
 impl Bitmap {
@@ -207,9 +176,10 @@ impl Bitmap {
         self.words[i / WORD_BITS] |= 1 << (i % WORD_BITS);
     }
 
-    /// Number of set bits.
+    /// Number of set bits (dispatched: vectorized nibble-LUT popcount
+    /// on the AVX2 tier).
     pub fn count_ones(&self) -> usize {
-        self.words.iter().map(|w| w.count_ones() as usize).sum()
+        (kernel::table().count_ones)(&self.words)
     }
 
     /// Number of maximal runs of consecutive set bits — the run statistic
@@ -219,13 +189,7 @@ impl Bitmap {
     /// so `one_runs = popcount(w & !(w << 1 | carry))` summed over words
     /// (the tail invariant keeps padding bits out of the count).
     pub fn one_runs(&self) -> usize {
-        let mut carry = 0u64; // MSB of the previous word, in bit 0
-        let mut runs = 0usize;
-        for &w in &self.words {
-            runs += (w & !((w << 1) | carry)).count_ones() as usize;
-            carry = w >> (WORD_BITS - 1);
-        }
-        runs
+        (kernel::table().one_runs)(&self.words)
     }
 
     /// Indices of set bits, ascending.
@@ -255,36 +219,40 @@ impl Bitmap {
         );
     }
 
+    /// Clone-then-kernel: every binary bitwise op is the in-place
+    /// dispatched kernel over a copy of `self`'s words.
+    #[inline]
+    fn zip2(&self, other: &Self, op: fn(&mut [u64], &[u64])) -> Self {
+        self.check_len(other);
+        let mut words = self.words.clone();
+        op(&mut words, &other.words);
+        Self { nbits: self.nbits, words }
+    }
+
     /// `self & other`, elementwise.
     pub fn and(&self, other: &Self) -> Self {
-        self.check_len(other);
-        Self { nbits: self.nbits, words: zip_map(&self.words, &other.words, |a, b| a & b) }
+        self.zip2(other, kernel::table().and)
     }
 
     /// `self | other`, elementwise.
     pub fn or(&self, other: &Self) -> Self {
-        self.check_len(other);
-        Self { nbits: self.nbits, words: zip_map(&self.words, &other.words, |a, b| a | b) }
+        self.zip2(other, kernel::table().or)
     }
 
     /// `self ^ other`, elementwise.
     pub fn xor(&self, other: &Self) -> Self {
-        self.check_len(other);
-        Self { nbits: self.nbits, words: zip_map(&self.words, &other.words, |a, b| a ^ b) }
+        self.zip2(other, kernel::table().xor)
     }
 
     /// `self & !other` (the query engine's ANDNOT primitive).
     pub fn and_not(&self, other: &Self) -> Self {
-        self.check_len(other);
-        Self { nbits: self.nbits, words: zip_map(&self.words, &other.words, |a, b| a & !b) }
+        self.zip2(other, kernel::table().and_not)
     }
 
     /// Bitwise complement (trailing bits stay zero).
     pub fn not(&self) -> Self {
-        let mut out = Self {
-            nbits: self.nbits,
-            words: self.words.iter().map(|w| !w).collect(),
-        };
+        let mut out = Self { nbits: self.nbits, words: self.words.clone() };
+        (kernel::table().not)(&mut out.words);
         out.mask_tail();
         out
     }
@@ -292,19 +260,19 @@ impl Bitmap {
     /// In-place AND — the allocation-free hot-path variant.
     pub fn and_assign(&mut self, other: &Self) {
         self.check_len(other);
-        zip_assign(&mut self.words, &other.words, |a, b| a & b);
+        (kernel::table().and)(&mut self.words, &other.words);
     }
 
     /// In-place OR.
     pub fn or_assign(&mut self, other: &Self) {
         self.check_len(other);
-        zip_assign(&mut self.words, &other.words, |a, b| a | b);
+        (kernel::table().or)(&mut self.words, &other.words);
     }
 
     /// In-place ANDNOT.
     pub fn and_not_assign(&mut self, other: &Self) {
         self.check_len(other);
-        zip_assign(&mut self.words, &other.words, |a, b| a & !b);
+        (kernel::table().and_not)(&mut self.words, &other.words);
     }
 
     /// Fused multi-operand AND: `self & others[0] & others[1] & ...` in a
@@ -320,6 +288,7 @@ impl Bitmap {
         if others.is_empty() {
             return out;
         }
+        let k = kernel::table();
         let nw = out.words.len();
         let mut base = 0;
         while base < nw {
@@ -330,13 +299,7 @@ impl Bitmap {
                 if !live {
                     break;
                 }
-                let ob = &o.words[base..end];
-                let mut any = 0u64;
-                for i in 0..blk.len() {
-                    blk[i] &= ob[i];
-                    any |= blk[i];
-                }
-                live = any != 0;
+                live = (k.and_live)(blk, &o.words[base..end]) != 0;
             }
             base = end;
         }

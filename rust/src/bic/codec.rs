@@ -16,6 +16,7 @@
 //! constants — see PERF.md §codec selection for the crossover points.
 
 use super::bitmap::{packed_words_for, Bitmap, BitmapIndex};
+use super::kernel;
 use super::roaring::RoaringBitmap;
 use super::wah::WahBitmap;
 
@@ -66,8 +67,16 @@ pub struct RowStats {
 }
 
 impl RowStats {
+    /// One pass per statistic through the dispatched kernel tier — the
+    /// popcount and run-count scans are the analyze hot loops, so the
+    /// table is fetched once here rather than per `Bitmap` call.
     pub fn analyze(bm: &Bitmap) -> Self {
-        Self { nbits: bm.len(), ones: bm.count_ones(), one_runs: bm.one_runs() }
+        let k = kernel::table();
+        Self {
+            nbits: bm.len(),
+            ones: (k.count_ones)(bm.words()),
+            one_runs: (k.one_runs)(bm.words()),
+        }
     }
 
     /// Fraction of set bits.

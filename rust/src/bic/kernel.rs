@@ -1,0 +1,673 @@
+//! Runtime-dispatched SIMD kernel tier for the word-level hot loops.
+//!
+//! The paper's BIC core wins by moving many bits per cycle through
+//! dedicated hardware; the u64 kernels in [`bitmap`](super::bitmap) are
+//! word-parallel but scalar-issued. This module is the software analogue
+//! of widening the datapath: one [`Kernels`] table of function pointers
+//! per tier — [`SCALAR`] (the exact pre-dispatch loops, retained as the
+//! differential reference) and an AVX2 tier moving four words per
+//! instruction — selected **once** per process and returned by
+//! [`table()`].
+//!
+//! Tier selection ([`tier()`]):
+//!
+//! 1. `PALLAS_KERNEL_TIER=scalar` forces the scalar reference.
+//! 2. `PALLAS_KERNEL_TIER=avx2` requests AVX2; if the CPU lacks it the
+//!    process falls back to scalar rather than faulting.
+//! 3. Otherwise `is_x86_feature_detected!("avx2")` decides. Non-x86_64
+//!    builds always resolve to scalar.
+//!
+//! Unknown values of the variable fall through to auto-detection, so a
+//! typo degrades to the default rather than silently forcing a tier.
+//!
+//! Every dispatched kernel is bit-identical to its scalar twin — pinned
+//! by `rust/tests/kernel_props.rs` across ragged tails, empty inputs,
+//! and saturated words — so the tier choice is invisible to everything
+//! above this layer except the clock. The active tier label surfaces in
+//! `EngineStats::kernel_tier`, the server's `bic_kernel_tier` metric,
+//! and EXPLAIN output; `SchedulerConfig::vector_system` feeds the same
+//! tier into the simulator's vector-unit cost channel. Dispatch rules
+//! and measured numbers live in PERF.md §kernel-tier.
+
+use std::sync::OnceLock;
+
+/// Words per cache-friendly block in the scalar kernels. Eight `u64`
+/// words (one 64-byte cache line); also the granularity at which
+/// `Bitmap::and_all` probes blocks for the absorbing-zero skip.
+pub const BLOCK_WORDS: usize = 8;
+
+/// The selectable kernel tiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Plain u64 loops — one word per issued operation. The
+    /// differential reference every other tier is tested against.
+    Scalar,
+    /// 256-bit AVX2 — four u64 words per issued operation.
+    Avx2,
+}
+
+impl Tier {
+    /// Stable lowercase label, used in stats/metrics/EXPLAIN and by the
+    /// `PALLAS_KERNEL_TIER` override.
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+        }
+    }
+
+    /// u64 words one vector-unit operation moves on this tier — the
+    /// issue-width divisor `SchedulerConfig::vector_system` charges
+    /// through the simulator's vector-cycle channel.
+    pub fn vector_words(self) -> usize {
+        match self {
+            Tier::Scalar => 1,
+            Tier::Avx2 => 4,
+        }
+    }
+}
+
+/// One tier's full kernel set, as plain function pointers so the table
+/// can be picked once and passed around without generics or dynamic
+/// dispatch overhead beyond a single indirect call per kernel.
+///
+/// Contracts shared by every tier (and pinned by the parity property
+/// tests): binary kernels require `dst.len() == src.len()`; `not` does
+/// **not** re-mask the tail (the caller owns the tail invariant);
+/// all kernels are bit-exact matches of the scalar reference.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    /// The tier's stable label (`"scalar"` / `"avx2"`).
+    pub label: &'static str,
+    /// `dst[i] &= src[i]`.
+    pub and: fn(&mut [u64], &[u64]),
+    /// `dst[i] |= src[i]`.
+    pub or: fn(&mut [u64], &[u64]),
+    /// `dst[i] ^= src[i]`.
+    pub xor: fn(&mut [u64], &[u64]),
+    /// `dst[i] &= !src[i]`.
+    pub and_not: fn(&mut [u64], &[u64]),
+    /// `dst[i] = !dst[i]`. Callers holding a tail invariant re-mask.
+    pub not: fn(&mut [u64]),
+    /// `dst[i] &= src[i]`, returning the OR of the resulting words —
+    /// the liveness probe `Bitmap::and_all` uses to kill dead blocks.
+    pub and_live: fn(&mut [u64], &[u64]) -> u64,
+    /// Total population count over the words.
+    pub count_ones: fn(&[u64]) -> usize,
+    /// Number of maximal runs of consecutive 1-bits, LSB-first across
+    /// word boundaries (`Bitmap::one_runs` semantics).
+    pub one_runs: fn(&[u64]) -> usize,
+    /// In-place 64x64 bit-matrix transpose (`transpose::transpose64`
+    /// semantics: bit j of word i moves to bit i of word j).
+    pub transpose64: fn(&mut [u64; 64]),
+    /// `dst[i] = value` — the WAH fill writer.
+    pub fill: fn(&mut [u64], u64),
+    /// Length of the run of words equal to `value` starting at index
+    /// `from` (0 when `from` is at/past the end) — the WAH compressor's
+    /// run scanner.
+    pub uniform_span: fn(&[u64], usize, u64) -> usize,
+}
+
+/// The scalar reference tier: the exact pre-dispatch u64 loops.
+pub static SCALAR: Kernels = Kernels {
+    label: "scalar",
+    and: scalar::and,
+    or: scalar::or,
+    xor: scalar::xor,
+    and_not: scalar::and_not,
+    not: scalar::not,
+    and_live: scalar::and_live,
+    count_ones: scalar::count_ones,
+    one_runs: scalar::one_runs,
+    transpose64: super::transpose::transpose64,
+    fill: scalar::fill,
+    uniform_span: scalar::uniform_span,
+};
+
+static ACTIVE: OnceLock<Tier> = OnceLock::new();
+
+/// The tier serving this process, resolved once on first use (see the
+/// module docs for the resolution order).
+pub fn tier() -> Tier {
+    *ACTIVE.get_or_init(|| {
+        resolve(
+            std::env::var("PALLAS_KERNEL_TIER").ok().as_deref(),
+            avx2_available(),
+        )
+    })
+}
+
+/// The active tier's kernel table.
+pub fn table() -> &'static Kernels {
+    match tier() {
+        Tier::Scalar => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => &avx2::TABLE,
+        #[cfg(not(target_arch = "x86_64"))]
+        Tier::Avx2 => &SCALAR,
+    }
+}
+
+/// Pure tier-resolution policy, split from [`tier()`] so the override /
+/// fallback rules are unit-testable without touching process globals.
+fn resolve(env: Option<&str>, avx2: bool) -> Tier {
+    match env {
+        Some(v) if v.eq_ignore_ascii_case("scalar") => Tier::Scalar,
+        Some(v) if v.eq_ignore_ascii_case("avx2") && avx2 => Tier::Avx2,
+        Some(v) if v.eq_ignore_ascii_case("avx2") => Tier::Scalar,
+        _ if avx2 => Tier::Avx2,
+        _ => Tier::Scalar,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// The scalar loops. These are the former `bitmap::zip_*` bodies plus
+/// the popcount/run/fill scans, kept in the 8-word blocked shape the
+/// pre-dispatch code used so the reference tier's codegen is unchanged.
+mod scalar {
+    use super::BLOCK_WORDS;
+
+    #[inline]
+    fn zip(dst: &mut [u64], src: &[u64], op: impl Fn(u64, u64) -> u64 + Copy) {
+        debug_assert_eq!(dst.len(), src.len());
+        let src_blocks = src.chunks_exact(BLOCK_WORDS);
+        let src_rem = src_blocks.remainder();
+        let mut dst_blocks = dst.chunks_exact_mut(BLOCK_WORDS);
+        for (d, s) in (&mut dst_blocks).zip(src_blocks) {
+            for i in 0..BLOCK_WORDS {
+                d[i] = op(d[i], s[i]);
+            }
+        }
+        for (d, &s) in dst_blocks.into_remainder().iter_mut().zip(src_rem) {
+            *d = op(*d, s);
+        }
+    }
+
+    pub(super) fn and(dst: &mut [u64], src: &[u64]) {
+        zip(dst, src, |a, b| a & b);
+    }
+
+    pub(super) fn or(dst: &mut [u64], src: &[u64]) {
+        zip(dst, src, |a, b| a | b);
+    }
+
+    pub(super) fn xor(dst: &mut [u64], src: &[u64]) {
+        zip(dst, src, |a, b| a ^ b);
+    }
+
+    pub(super) fn and_not(dst: &mut [u64], src: &[u64]) {
+        zip(dst, src, |a, b| a & !b);
+    }
+
+    pub(super) fn not(dst: &mut [u64]) {
+        for w in dst.iter_mut() {
+            *w = !*w;
+        }
+    }
+
+    pub(super) fn and_live(dst: &mut [u64], src: &[u64]) -> u64 {
+        debug_assert_eq!(dst.len(), src.len());
+        let mut any = 0u64;
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d &= s;
+            any |= *d;
+        }
+        any
+    }
+
+    pub(super) fn count_ones(words: &[u64]) -> usize {
+        words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    // A run starts at every 1-bit whose predecessor (previous bit in the
+    // word, or the MSB carried in from the previous word) is 0:
+    // starts = w & !((w << 1) | carry).
+    pub(super) fn one_runs(words: &[u64]) -> usize {
+        let mut runs = 0usize;
+        let mut carry = 0u64;
+        for &w in words {
+            runs += (w & !((w << 1) | carry)).count_ones() as usize;
+            carry = w >> 63;
+        }
+        runs
+    }
+
+    pub(super) fn fill(dst: &mut [u64], value: u64) {
+        for w in dst.iter_mut() {
+            *w = value;
+        }
+    }
+
+    pub(super) fn uniform_span(words: &[u64], from: usize, value: u64) -> usize {
+        if from >= words.len() {
+            return 0;
+        }
+        words[from..].iter().take_while(|&&w| w == value).count()
+    }
+}
+
+/// The AVX2 tier: 256-bit loads/stores, four u64 words per operation,
+/// scalar tails for the last `len % 4` words. Every public entry is a
+/// safe wrapper around a `#[target_feature(enable = "avx2")]` body;
+/// this table is only ever returned by [`table()`] after
+/// `is_x86_feature_detected!("avx2")` succeeded, so the wrapped calls
+/// are sound.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::Kernels;
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi64, _mm256_add_epi8, _mm256_and_si256,
+        _mm256_andnot_si256, _mm256_cmpeq_epi64, _mm256_insert_epi64,
+        _mm256_loadu_si256, _mm256_movemask_epi8, _mm256_or_si256,
+        _mm256_permute4x64_epi64, _mm256_sad_epu8, _mm256_set1_epi64x,
+        _mm256_set1_epi8, _mm256_setr_epi8, _mm256_setzero_si256,
+        _mm256_shuffle_epi8, _mm256_slli_epi64, _mm256_sll_epi64,
+        _mm256_srli_epi16, _mm256_srli_epi64, _mm256_srl_epi64,
+        _mm256_storeu_si256, _mm256_xor_si256, _mm_cvtsi32_si128,
+    };
+
+    /// Vector width in u64 words.
+    const LANES: usize = 4;
+
+    pub(super) static TABLE: Kernels = Kernels {
+        label: "avx2",
+        and,
+        or,
+        xor,
+        and_not,
+        not,
+        and_live,
+        count_ones,
+        one_runs,
+        transpose64,
+        fill,
+        uniform_span,
+    };
+
+    fn and(dst: &mut [u64], src: &[u64]) {
+        unsafe { and_impl(dst, src) }
+    }
+
+    fn or(dst: &mut [u64], src: &[u64]) {
+        unsafe { or_impl(dst, src) }
+    }
+
+    fn xor(dst: &mut [u64], src: &[u64]) {
+        unsafe { xor_impl(dst, src) }
+    }
+
+    fn and_not(dst: &mut [u64], src: &[u64]) {
+        unsafe { and_not_impl(dst, src) }
+    }
+
+    fn not(dst: &mut [u64]) {
+        unsafe { not_impl(dst) }
+    }
+
+    fn and_live(dst: &mut [u64], src: &[u64]) -> u64 {
+        unsafe { and_live_impl(dst, src) }
+    }
+
+    fn count_ones(words: &[u64]) -> usize {
+        unsafe { count_ones_impl(words) }
+    }
+
+    fn one_runs(words: &[u64]) -> usize {
+        unsafe { one_runs_impl(words) }
+    }
+
+    fn transpose64(a: &mut [u64; 64]) {
+        unsafe { transpose64_impl(a) }
+    }
+
+    fn fill(dst: &mut [u64], value: u64) {
+        unsafe { fill_impl(dst, value) }
+    }
+
+    fn uniform_span(words: &[u64], from: usize, value: u64) -> usize {
+        unsafe { uniform_span_impl(words, from, value) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn and_impl(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = _mm256_loadu_si256(dp.add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            _mm256_storeu_si256(dp.add(i) as *mut __m256i, _mm256_and_si256(d, s));
+            i += LANES;
+        }
+        while i < n {
+            dst[i] &= src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn or_impl(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = _mm256_loadu_si256(dp.add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            _mm256_storeu_si256(dp.add(i) as *mut __m256i, _mm256_or_si256(d, s));
+            i += LANES;
+        }
+        while i < n {
+            dst[i] |= src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor_impl(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = _mm256_loadu_si256(dp.add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            _mm256_storeu_si256(dp.add(i) as *mut __m256i, _mm256_xor_si256(d, s));
+            i += LANES;
+        }
+        while i < n {
+            dst[i] ^= src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn and_not_impl(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = _mm256_loadu_si256(dp.add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            // andnot computes (!first) & second, so src goes first.
+            _mm256_storeu_si256(
+                dp.add(i) as *mut __m256i,
+                _mm256_andnot_si256(s, d),
+            );
+            i += LANES;
+        }
+        while i < n {
+            dst[i] &= !src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn not_impl(dst: &mut [u64]) {
+        let n = dst.len();
+        let dp = dst.as_mut_ptr();
+        let ones = _mm256_set1_epi64x(-1);
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = _mm256_loadu_si256(dp.add(i) as *const __m256i);
+            _mm256_storeu_si256(dp.add(i) as *mut __m256i, _mm256_xor_si256(d, ones));
+            i += LANES;
+        }
+        while i < n {
+            dst[i] = !dst[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn and_live_impl(dst: &mut [u64], src: &[u64]) -> u64 {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut live = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + LANES <= n {
+            let d = _mm256_loadu_si256(dp.add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            let r = _mm256_and_si256(d, s);
+            _mm256_storeu_si256(dp.add(i) as *mut __m256i, r);
+            live = _mm256_or_si256(live, r);
+            i += LANES;
+        }
+        let mut lanes = [0u64; LANES];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, live);
+        let mut any = lanes[0] | lanes[1] | lanes[2] | lanes[3];
+        while i < n {
+            dst[i] &= src[i];
+            any |= dst[i];
+            i += 1;
+        }
+        any
+    }
+
+    /// Per-byte popcount of a 256-bit vector via the nibble-LUT method
+    /// (Mula): shuffle each nibble through a 16-entry count table, add
+    /// the halves, then `sad_epu8` horizontally sums each 8-byte lane
+    /// into its u64.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount256(v: __m256i) -> __m256i {
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+        let cnt = _mm256_add_epi8(
+            _mm256_shuffle_epi8(lut, lo),
+            _mm256_shuffle_epi8(lut, hi),
+        );
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn count_ones_impl(words: &[u64]) -> usize {
+        let n = words.len();
+        let p = words.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + LANES <= n {
+            let v = _mm256_loadu_si256(p.add(i) as *const __m256i);
+            acc = _mm256_add_epi64(acc, popcount256(v));
+            i += LANES;
+        }
+        let mut lanes = [0u64; LANES];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut total =
+            (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as usize;
+        while i < n {
+            total += words[i].count_ones() as usize;
+            i += 1;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn one_runs_impl(words: &[u64]) -> usize {
+        let n = words.len();
+        let p = words.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut carry = 0u64;
+        let mut i = 0;
+        while i + LANES <= n {
+            let v = _mm256_loadu_si256(p.add(i) as *const __m256i);
+            // Each lane's carry-in is the previous lane's MSB; lane 0
+            // takes the running carry. permute 0x93 rotates the MSB
+            // lanes left by one: [m3, m0, m1, m2].
+            let msbs = _mm256_srli_epi64::<63>(v);
+            let rot = _mm256_permute4x64_epi64::<0x93>(msbs);
+            let carries = _mm256_insert_epi64::<0>(rot, carry as i64);
+            let shifted =
+                _mm256_or_si256(_mm256_slli_epi64::<1>(v), carries);
+            let starts = _mm256_andnot_si256(shifted, v);
+            acc = _mm256_add_epi64(acc, popcount256(starts));
+            carry = words[i + LANES - 1] >> 63;
+            i += LANES;
+        }
+        let mut lanes = [0u64; LANES];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut runs =
+            (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as usize;
+        while i < n {
+            let w = words[i];
+            runs += (w & !((w << 1) | carry)).count_ones() as usize;
+            carry = w >> 63;
+            i += 1;
+        }
+        runs
+    }
+
+    /// The same XOR-swap butterfly as `transpose::transpose64`, with
+    /// the j >= 4 rounds vectorized: at those rounds the row pairs
+    /// (k, k+j) form contiguous runs of j rows (j divisible by 4), so
+    /// four pairs load as one 256-bit op. The j = 2 and j = 1 rounds
+    /// interleave below the vector width and stay scalar; the (j, m)
+    /// state updates are identical to the scalar loop throughout, so
+    /// the handoff is exact.
+    #[target_feature(enable = "avx2")]
+    unsafe fn transpose64_impl(a: &mut [u64; 64]) {
+        let p = a.as_mut_ptr();
+        let mut j = 32usize;
+        let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+        while j >= LANES {
+            let mv = _mm256_set1_epi64x(m as i64);
+            let jc = _mm_cvtsi32_si128(j as i32);
+            let mut base = 0usize;
+            while base < 64 {
+                let mut k = base;
+                while k < base + j {
+                    let lo_p = p.add(k) as *mut __m256i;
+                    let hi_p = p.add(k + j) as *mut __m256i;
+                    let lo = _mm256_loadu_si256(lo_p as *const __m256i);
+                    let hi = _mm256_loadu_si256(hi_p as *const __m256i);
+                    let t = _mm256_and_si256(
+                        _mm256_xor_si256(_mm256_srl_epi64(lo, jc), hi),
+                        mv,
+                    );
+                    _mm256_storeu_si256(
+                        lo_p,
+                        _mm256_xor_si256(lo, _mm256_sll_epi64(t, jc)),
+                    );
+                    _mm256_storeu_si256(hi_p, _mm256_xor_si256(hi, t));
+                    k += LANES;
+                }
+                base += 2 * j;
+            }
+            j >>= 1;
+            m ^= m << j;
+        }
+        while j != 0 {
+            let mut k = 0usize;
+            while k < 64 {
+                let t = ((a[k] >> j) ^ a[k + j]) & m;
+                a[k] ^= t << j;
+                a[k + j] ^= t;
+                k = (k + j + 1) & !j;
+            }
+            j >>= 1;
+            m ^= m << j;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn fill_impl(dst: &mut [u64], value: u64) {
+        let n = dst.len();
+        let dp = dst.as_mut_ptr();
+        let v = _mm256_set1_epi64x(value as i64);
+        let mut i = 0;
+        while i + LANES <= n {
+            _mm256_storeu_si256(dp.add(i) as *mut __m256i, v);
+            i += LANES;
+        }
+        while i < n {
+            dst[i] = value;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn uniform_span_impl(words: &[u64], from: usize, value: u64) -> usize {
+        let n = words.len();
+        let p = words.as_ptr();
+        let v = _mm256_set1_epi64x(value as i64);
+        let mut i = from;
+        while i + LANES <= n {
+            let w = _mm256_loadu_si256(p.add(i) as *const __m256i);
+            let eq = _mm256_cmpeq_epi64(w, v);
+            let mask = _mm256_movemask_epi8(eq) as u32;
+            if mask != u32::MAX {
+                // cmpeq lanes are uniformly 0xFF/0x00 bytes, so the
+                // matching prefix is trailing_ones / 8 whole words.
+                return i + mask.trailing_ones() as usize / 8 - from;
+            }
+            i += LANES;
+        }
+        while i < n && words[i] == value {
+            i += 1;
+        }
+        i.saturating_sub(from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolution_policy() {
+        assert_eq!(resolve(Some("scalar"), true), Tier::Scalar);
+        assert_eq!(resolve(Some("SCALAR"), true), Tier::Scalar);
+        assert_eq!(resolve(Some("avx2"), true), Tier::Avx2);
+        assert_eq!(resolve(Some("avx2"), false), Tier::Scalar);
+        assert_eq!(resolve(Some("warp9"), true), Tier::Avx2);
+        assert_eq!(resolve(Some("warp9"), false), Tier::Scalar);
+        assert_eq!(resolve(None, true), Tier::Avx2);
+        assert_eq!(resolve(None, false), Tier::Scalar);
+    }
+
+    #[test]
+    fn tier_is_stable_and_labelled() {
+        let t = tier();
+        assert_eq!(t, tier(), "tier must resolve once");
+        assert_eq!(table().label, t.label());
+        assert!(t.vector_words() >= 1);
+    }
+
+    #[test]
+    fn scalar_table_matches_struct_label() {
+        assert_eq!(SCALAR.label, Tier::Scalar.label());
+    }
+
+    #[test]
+    fn uniform_span_edges() {
+        let w = [7u64, 7, 7, 0];
+        assert_eq!((SCALAR.uniform_span)(&w, 0, 7), 3);
+        assert_eq!((SCALAR.uniform_span)(&w, 1, 7), 2);
+        assert_eq!((SCALAR.uniform_span)(&w, 3, 7), 0);
+        assert_eq!((SCALAR.uniform_span)(&w, 4, 7), 0);
+        assert_eq!((SCALAR.uniform_span)(&w, 9, 7), 0);
+        assert_eq!((SCALAR.uniform_span)(&[], 0, 0), 0);
+    }
+}

@@ -14,7 +14,9 @@
 //!   telemetry layer (`crate::obs`);
 //! - [`codec`] — codec-polymorphic rows ([`CodecBitmap`]) and the
 //!   adaptively compressed index ([`CompressedIndex`]) the planner
-//!   executes on.
+//!   executes on;
+//! - [`kernel`] — the runtime-dispatched SIMD tier (scalar / AVX2) the
+//!   bitmap, transpose, and WAH hot loops issue through.
 //!
 //! Timing/energy behaviour deliberately lives elsewhere (`crate::sim`,
 //! `crate::power`): this module answers only "what is the correct bitmap".
@@ -25,6 +27,7 @@ pub mod cam;
 pub mod clock;
 pub mod codec;
 pub mod core;
+pub mod kernel;
 pub mod query;
 pub mod roaring;
 pub mod transpose;

@@ -13,9 +13,13 @@
 //! - [`transpose_packed`] — the hot path: a Hacker's-Delight-style 64x64
 //!   bit-matrix block transpose over the packed row buffer, 64 bits per
 //!   XOR (adapted to this crate's LSB-first bit order), skipping all-zero
-//!   blocks entirely.
+//!   blocks entirely. The per-tile butterfly issues through
+//!   [`kernel::table()`], so on an AVX2 host the wide rounds move four
+//!   rows per instruction; [`transpose64`] is the scalar reference the
+//!   dispatched variant is property-tested against.
 
 use super::bitmap::{words_for, Bitmap, BitmapIndex};
+use super::kernel;
 
 /// Transpose drained buffer contents (record-major `N x M` bools) into a
 /// key-major `M x N` [`BitmapIndex`]. Scalar reference path.
@@ -105,6 +109,7 @@ pub fn transpose_packed(rows: &[u64], n: usize, m: usize) -> BitmapIndex {
     // Output: m rows of nw u64 words, row-major.
     let mut out = vec![0u64; m * nw];
     let mut tile = [0u64; 64];
+    let kernel_transpose64 = kernel::table().transpose64;
     for jb in 0..nw {
         let rec_base = jb * 64;
         let rec_count = 64.min(n - rec_base);
@@ -121,7 +126,7 @@ pub fn transpose_packed(rows: &[u64], n: usize, m: usize) -> BitmapIndex {
             for t in tile.iter_mut().skip(rec_count) {
                 *t = 0;
             }
-            transpose64(&mut tile);
+            kernel_transpose64(&mut tile);
             let key_count = 64.min(m - ib * 64);
             for (c, &w) in tile.iter().enumerate().take(key_count) {
                 out[(ib * 64 + c) * nw + jb] = w;

@@ -11,8 +11,19 @@
 //!
 //! The last (possibly partial) group carries `len % 31` meaningful bits;
 //! the uncompressed length is stored alongside so round-trips are exact.
+//!
+//! The encode/decode hot loops issue through the dispatched kernel tier
+//! ([`kernel::table()`]): the compressor scans uniform backing-word runs
+//! with the tier's `uniform_span` kernel and emits them as one
+//! `push_run` (identical encoder state transitions to the per-group
+//! path, so the encoding is word-identical across tiers), and the
+//! decode-side fill writers (`set_ones_range`/`clear_range`) fill whole
+//! word spans with the tier's `fill` kernel. `compress_with` /
+//! `decompress_with` take an explicit [`Kernels`] table so the parity
+//! property tests can drive both tiers in one process.
 
 use super::bitmap::Bitmap;
+use super::kernel::{self, Kernels};
 
 const GROUP_BITS: usize = 31;
 const GROUP_MASK: u32 = (1 << GROUP_BITS) - 1;
@@ -134,21 +145,74 @@ impl GroupCompressor {
 impl WahBitmap {
     /// Compress a bitmap. Groups are extracted word-at-a-time (a u64
     /// window across the two backing words), not bit-by-bit — the §Perf
-    /// pass took this from 75 MB/s to GB/s-class.
+    /// pass took this from 75 MB/s to GB/s-class — and uniform spans of
+    /// backing words are detected with the dispatched `uniform_span`
+    /// kernel and emitted as one run instead of 31 bits at a time.
     pub fn compress(bm: &Bitmap) -> Self {
+        Self::compress_with(bm, kernel::table())
+    }
+
+    /// [`WahBitmap::compress`] through an explicit kernel table — the
+    /// hook the SIMD parity tests use to run the scalar reference and
+    /// the dispatched tier in one process. The output is word-identical
+    /// for any conforming table: the run fast path batches exactly the
+    /// uniform full groups the per-group path would have pushed, and
+    /// `push_run` performs the same encoder state transitions as the
+    /// equivalent sequence of `push` calls.
+    pub fn compress_with(bm: &Bitmap, k: &Kernels) -> Self {
         let nbits = bm.len();
         let ngroups = nbits.div_ceil(GROUP_BITS);
+        let has_partial = nbits % GROUP_BITS != 0;
+        // Groups eligible for fills (the trailing partial group never
+        // joins a run — its padding bits are not real).
+        let full_groups = if has_partial { ngroups - 1 } else { ngroups };
+        let words = bm.words();
         let mut enc = GroupCompressor::with_capacity(ngroups);
-        for g in 0..ngroups {
+        let mut g = 0usize;
+        while g < ngroups {
+            if g < full_groups {
+                // Run fast path: if the rest of the current backing
+                // word is uniform, extend across the span of equal
+                // words and emit every full group it covers as one run.
+                let start = g * GROUP_BITS;
+                let (wi, off) = (start / 64, start % 64);
+                let head = words[wi] >> off;
+                let bit = if head == 0 {
+                    Some(false)
+                } else if head == u64::MAX >> off {
+                    Some(true)
+                } else {
+                    None
+                };
+                if let Some(bit) = bit {
+                    let fill = if bit { u64::MAX } else { 0 };
+                    let span = (k.uniform_span)(words, wi + 1, fill);
+                    let end_bit = (wi + 1 + span) * 64;
+                    let take = ((end_bit - start) / GROUP_BITS)
+                        .min(full_groups - g)
+                        .min(u32::MAX as usize);
+                    if take >= 2 {
+                        enc.push_run(bit, take as u32);
+                        g += take;
+                        continue;
+                    }
+                }
+            }
             let group = extract_group(bm, g);
-            let is_partial = g == ngroups - 1 && nbits % GROUP_BITS != 0;
-            enc.push(group, is_partial);
+            enc.push(group, has_partial && g == ngroups - 1);
+            g += 1;
         }
         Self { nbits, words: enc.finish() }
     }
 
     /// Decompress back to a plain bitmap (word-level writes).
     pub fn decompress(&self) -> Bitmap {
+        self.decompress_with(kernel::table())
+    }
+
+    /// [`WahBitmap::decompress`] through an explicit kernel table (the
+    /// SIMD parity tests' hook; fills write via the table's `fill`).
+    pub fn decompress_with(&self, k: &Kernels) -> Bitmap {
         let mut bm = Bitmap::zeros(self.nbits);
         let mut bit_pos = 0usize;
         for &w in &self.words {
@@ -156,7 +220,7 @@ impl WahBitmap {
                 let bit = w & FILL_BIT != 0;
                 let len = (w & MAX_RUN) as usize;
                 if bit {
-                    set_ones_range(bm.words_mut(), bit_pos, len * GROUP_BITS);
+                    set_ones_range(bm.words_mut(), bit_pos, len * GROUP_BITS, k);
                 }
                 bit_pos += len * GROUP_BITS;
             } else {
@@ -322,13 +386,14 @@ impl WahBitmap {
             self.nbits,
             acc.len()
         );
+        let k = kernel::table();
         let end = base + self.nbits;
         let mut bit_pos = base;
         for &w in &self.words {
             if w & FILL_FLAG != 0 {
                 let len = (w & MAX_RUN) as usize * GROUP_BITS;
                 if w & FILL_BIT != 0 {
-                    set_ones_range(acc.words_mut(), bit_pos, len);
+                    set_ones_range(acc.words_mut(), bit_pos, len, k);
                 }
                 bit_pos += len;
             } else {
@@ -352,13 +417,14 @@ impl WahBitmap {
             self.nbits,
             acc.len()
         );
+        let k = kernel::table();
         let end = base + self.nbits;
         let mut bit_pos = base;
         for &w in &self.words {
             if w & FILL_FLAG != 0 {
                 let len = (w & MAX_RUN) as usize * GROUP_BITS;
                 if w & FILL_BIT == 0 {
-                    clear_range(acc.words_mut(), bit_pos, len);
+                    clear_range(acc.words_mut(), bit_pos, len, k);
                 }
                 bit_pos += len;
             } else {
@@ -380,13 +446,14 @@ impl WahBitmap {
             self.nbits,
             acc.len()
         );
+        let k = kernel::table();
         let end = base + self.nbits;
         let mut bit_pos = base;
         for &w in &self.words {
             if w & FILL_FLAG != 0 {
                 let len = (w & MAX_RUN) as usize * GROUP_BITS;
                 if w & FILL_BIT != 0 {
-                    clear_range(acc.words_mut(), bit_pos, len);
+                    clear_range(acc.words_mut(), bit_pos, len, k);
                 }
                 bit_pos += len;
             } else {
@@ -535,8 +602,10 @@ fn clear_group(words: &mut [u64], start: usize, mask: u32) {
     }
 }
 
-/// Clear `len` consecutive bits starting at `start`, word-at-a-time.
-fn clear_range(words: &mut [u64], start: usize, len: usize) {
+/// Clear `len` consecutive bits starting at `start`: edge words get
+/// masked writes, the whole-word middle span goes through the tier's
+/// `fill` kernel.
+fn clear_range(words: &mut [u64], start: usize, len: usize, k: &Kernels) {
     if len == 0 {
         return;
     }
@@ -548,16 +617,16 @@ fn clear_range(words: &mut [u64], start: usize, len: usize) {
         return;
     }
     words[w0] &= !(u64::MAX << b0);
-    for w in words.iter_mut().take(w1).skip(w0 + 1) {
-        *w = 0;
-    }
+    (k.fill)(&mut words[(w0 + 1)..w1], 0);
     if b1 > 0 {
         words[w1] &= !((1u64 << b1) - 1);
     }
 }
 
-/// Set `len` consecutive bits starting at `start`, word-at-a-time.
-fn set_ones_range(words: &mut [u64], start: usize, len: usize) {
+/// Set `len` consecutive bits starting at `start`: edge words get
+/// masked writes, the whole-word middle span goes through the tier's
+/// `fill` kernel.
+fn set_ones_range(words: &mut [u64], start: usize, len: usize, k: &Kernels) {
     if len == 0 {
         return;
     }
@@ -569,9 +638,7 @@ fn set_ones_range(words: &mut [u64], start: usize, len: usize) {
         return;
     }
     words[w0] |= u64::MAX << b0;
-    for w in words.iter_mut().take(w1).skip(w0 + 1) {
-        *w = u64::MAX;
-    }
+    (k.fill)(&mut words[(w0 + 1)..w1], u64::MAX);
     if b1 > 0 {
         words[w1] |= (1u64 << b1) - 1;
     }

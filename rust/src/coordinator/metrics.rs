@@ -65,6 +65,10 @@ pub struct SimReport {
     /// compressed tier is off) — the compression side of the energy
     /// story, charged as active core time by the scheduler.
     pub encode_cycles: u64,
+    /// Of `encode_cycles`, the cycles issued on a modeled vector unit
+    /// (`SchedulerConfig::vector_words > 1`); 0 when encoding was
+    /// scalar-issued.
+    pub vector_cycles: u64,
 }
 
 impl SimReport {
@@ -137,6 +141,7 @@ mod tests {
             output_bytes_raw: 4_000,
             output_bytes_stored: 1_000,
             encode_cycles: 0,
+            vector_cycles: 0,
         };
         assert!((r.throughput_mbps() - 2.0).abs() < 1e-12);
         assert!((r.energy_per_byte() - 0.5e-6).abs() < 1e-15);
@@ -159,6 +164,7 @@ mod tests {
             output_bytes_raw: 0,
             output_bytes_stored: 0,
             encode_cycles: 0,
+            vector_cycles: 0,
         };
         assert_eq!(r.output_compression_ratio(), 1.0);
         r.output_bytes_raw = 10;

@@ -54,6 +54,14 @@ pub struct SchedulerConfig {
     /// output transfer starts, and the total is surfaced as
     /// `SimReport::encode_cycles`.
     pub compress_results: bool,
+    /// Vector issue width of the modeled encode unit, in 64-bit words
+    /// per cycle. `1` is scalar issue (the chip of the paper); wider
+    /// widths model a host-class vector unit: the same encode work
+    /// retires in `ceil(cycles / vector_words)` issued cycles, which is
+    /// how the kernel tier's SIMD win enters the pJ/cycle energy
+    /// accounting. Cycles issued at width > 1 are also surfaced as
+    /// `SimReport::vector_cycles`.
+    pub vector_words: usize,
     /// Model durable persistence: the output channel is charged the
     /// *actual segment bytes* the store would write for each result
     /// (checksummed header + row directory + codec-tagged payloads,
@@ -78,6 +86,7 @@ impl SchedulerConfig {
             extmem_bandwidth: 400e6,
             compute_results: true,
             compress_results: false,
+            vector_words: 1,
             persist_segments: false,
             core_failures: Vec::new(),
         }
@@ -94,6 +103,17 @@ impl SchedulerConfig {
     /// directory + payload), not bare rows.
     pub fn durable_system(cores: usize) -> Self {
         Self { persist_segments: true, ..Self::compressed_system(cores) }
+    }
+
+    /// [`SchedulerConfig::compressed_system`] with the encode unit's
+    /// issue width taken from the process's active kernel tier
+    /// ([`crate::bic::kernel::tier`]): scalar hosts model scalar issue,
+    /// AVX2 hosts model a 4-words/cycle vector unit.
+    pub fn vector_system(cores: usize) -> Self {
+        Self {
+            vector_words: crate::bic::kernel::tier().vector_words(),
+            ..Self::compressed_system(cores)
+        }
     }
 
     pub fn frequency(&self) -> Hertz {
@@ -159,6 +179,7 @@ pub struct Scheduler {
     completed: Vec<CompletedBatch>,
     requeued: u64,
     encode_cycles: u64,
+    vector_cycles: u64,
 }
 
 impl Scheduler {
@@ -180,6 +201,7 @@ impl Scheduler {
             completed: Vec::new(),
             requeued: 0,
             encode_cycles: 0,
+            vector_cycles: 0,
             cfg,
         }
     }
@@ -261,6 +283,7 @@ impl Scheduler {
             output_bytes_raw,
             output_bytes_stored,
             encode_cycles: self.encode_cycles,
+            vector_cycles: self.vector_cycles,
         };
         (report, self.completed)
     }
@@ -292,8 +315,15 @@ impl Scheduler {
                     let bi = self.golden.index(&b.records, &b.keys);
                     let ci = CompressedIndex::from_index(&bi);
                     let enc = ci.encode_cycles();
-                    let enc_time = enc as f64 / self.cfg.frequency();
-                    self.encode_cycles += enc;
+                    // A width-W vector unit retires the same encode
+                    // work in ceil(enc / W) issued cycles.
+                    let width = self.cfg.vector_words.max(1) as u64;
+                    let issued = enc.div_ceil(width);
+                    let enc_time = issued as f64 / self.cfg.frequency();
+                    self.encode_cycles += issued;
+                    if width > 1 {
+                        self.vector_cycles += issued;
+                    }
                     let stored = if self.cfg.persist_segments {
                         crate::store::segment::encoded_len(ci.rows())
                     } else {
@@ -572,6 +602,39 @@ mod tests {
             rc.horizon,
             rp.horizon
         );
+    }
+
+    #[test]
+    fn vector_issue_shrinks_encode_cycles_and_charges_the_channel() {
+        let trace = steady_trace(12, 1000.0, 12);
+        let mut scalar = SchedulerConfig::compressed_system(2);
+        scalar.extmem_bandwidth = 1e12; // isolate the encode tax
+        let mut vector = scalar.clone();
+        vector.vector_words = 4;
+        let (rs, _) = Scheduler::new(scalar).run_collect(trace.clone());
+        let (rv, cv) = Scheduler::new(vector).run_collect(trace);
+        assert_eq!(rs.vector_cycles, 0, "scalar issue never charges it");
+        assert_eq!(
+            rv.vector_cycles, rv.encode_cycles,
+            "every compressed encode issued on the vector unit"
+        );
+        // Width 4 retires each batch's encode in ceil(enc / 4) cycles.
+        let expect: u64 = cv
+            .iter()
+            .map(|c| c.compressed.as_ref().unwrap().encode_cycles().div_ceil(4))
+            .sum();
+        assert_eq!(rv.encode_cycles, expect);
+        assert!(rv.encode_cycles < rs.encode_cycles);
+    }
+
+    #[test]
+    fn vector_system_preset_tracks_the_kernel_tier() {
+        let cfg = SchedulerConfig::vector_system(2);
+        assert_eq!(
+            cfg.vector_words,
+            crate::bic::kernel::tier().vector_words()
+        );
+        assert!(cfg.compress_results);
     }
 
     #[test]

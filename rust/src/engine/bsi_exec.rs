@@ -22,6 +22,12 @@
 //! [`Predicate::lower`]'s query — the engine property tests assert this
 //! across codecs, distributions, and chunk mixes.
 //!
+//! The slice circuit's per-level bitmap algebra (`and`/`or`/`and_not`
+//! over slice rows) issues through the runtime-dispatched SIMD kernel
+//! tier ([`crate::bic::kernel`]), so the O(log span) ripple rides the
+//! vector path on AVX2 hosts; parity with the scalar reference is
+//! pinned by `rust/tests/kernel_props.rs`.
+//!
 //! [`BsiColumn::between`]: crate::bsi::BsiColumn::between
 //! [`SegmentBsi`]: crate::bsi::SegmentBsi
 

@@ -38,6 +38,13 @@
 //! windows it skipped, which is how the pruning win is asserted rather
 //! than just timed.
 //!
+//! Every fold issues through the runtime-dispatched SIMD kernel tier
+//! ([`crate::bic::kernel`]): the offset AND/OR/ANDNOT kernels' word
+//! spans, the accumulator emptiness probes, and the WAH fill writes all
+//! ride `kernel::table()`, so on an AVX2 host the executor moves four
+//! words per instruction with no change here. The tier serving a query
+//! is surfaced in `EngineStats::kernel_tier` and EXPLAIN output.
+//!
 //! [`Snapshot`]: crate::engine::Snapshot
 //! [`ZoneMap`]: crate::store::zone::ZoneMap
 

@@ -68,6 +68,7 @@ use std::time::{Duration, Instant};
 use crate::bic::bitmap::{Bitmap, BitmapIndex};
 use crate::bic::clock;
 use crate::bic::codec::{CodecBitmap, CompressedIndex};
+use crate::bic::kernel;
 use crate::bic::query::{Query, QueryError};
 use crate::bic::{BicConfig, BicCore};
 use crate::bsi::{build_chunk, BsiColSpec, BsiLayout, SegmentBsi};
@@ -606,6 +607,10 @@ pub struct EngineStats {
     pub compaction_bytes_written: u64,
     /// Telemetry (histograms, traces, slow log) is enabled.
     pub telemetry: bool,
+    /// The SIMD kernel tier serving this process (`"scalar"` /
+    /// `"avx2"`), resolved once at startup by [`crate::bic::kernel`];
+    /// every bitmap/transpose/WAH hot loop issues through it.
+    pub kernel_tier: &'static str,
 }
 
 impl EngineStats {
@@ -615,10 +620,12 @@ impl EngineStats {
     /// `compaction_rounds`, `compaction_bytes_written`) and the
     /// `telemetry` flag; version 3 *added* the bit-sliced tier counters
     /// (`queries_bsi`, `aggregates`, `topk_queries`, and `queries_bsi`
-    /// joining `queries_total`). No earlier field was renamed or
-    /// removed, so consumers that parse by name keep working across the
-    /// bumps (`rust/tests/engine_props.rs` pins the shapes).
-    pub const STATS_VERSION: u64 = 3;
+    /// joining `queries_total`); version 4 *added* `kernel_tier` (the
+    /// active SIMD dispatch tier — a string, the surface's first
+    /// non-numeric field). No earlier field was renamed or removed, so
+    /// consumers that parse by name keep working across the bumps
+    /// (`rust/tests/engine_props.rs` pins the shapes).
+    pub const STATS_VERSION: u64 = 4;
 
     /// Queries served across all tiers.
     pub fn queries_total(&self) -> u64 {
@@ -670,6 +677,7 @@ impl EngineStats {
                 self.compaction_bytes_written.into(),
             ),
             ("telemetry", self.telemetry.into()),
+            ("kernel_tier", self.kernel_tier.into()),
         ])
     }
 }
@@ -1963,6 +1971,7 @@ impl Engine {
         };
         Ok(ExplainReport {
             tier: plan.path.label(),
+            kernel_tier: kernel::tier().label(),
             reason: plan.reason,
             est_cost: inputs.est_cost as u64,
             rules,
@@ -2196,6 +2205,7 @@ impl Engine {
             compaction_rounds: maintenance[2],
             compaction_bytes_written: maintenance[3],
             telemetry: self.inner.obs.is_some(),
+            kernel_tier: kernel::tier().label(),
         }
     }
 

@@ -123,6 +123,9 @@ impl ActualRun {
 pub struct ExplainReport {
     /// The chosen execution tier's stable label.
     pub tier: &'static str,
+    /// The active kernel tier ("scalar" or "avx2") every fold in the
+    /// plan runs through.
+    pub kernel_tier: &'static str,
     /// The planner's stable reason string for the choice.
     pub reason: &'static str,
     /// The planner's estimated row-work cost (bits).
@@ -142,6 +145,7 @@ impl ExplainReport {
     pub fn to_json(&self) -> Json {
         let mut doc = Json::obj([
             ("tier", self.tier.into()),
+            ("kernel_tier", self.kernel_tier.into()),
             ("reason", self.reason.into()),
             ("est_cost", self.est_cost.into()),
             (
@@ -171,6 +175,7 @@ mod tests {
     fn report_renders_every_section() {
         let report = ExplainReport {
             tier: "store",
+            kernel_tier: "scalar",
             reason: "flushed segments: reader folds per segment",
             est_cost: 4096,
             rules: vec![RuleTrace {
@@ -205,6 +210,10 @@ mod tests {
         };
         let doc = report.to_json();
         assert_eq!(doc.get("tier").and_then(Json::as_str), Some("store"));
+        assert_eq!(
+            doc.get("kernel_tier").and_then(Json::as_str),
+            Some("scalar")
+        );
         let rules = doc.get("rules").and_then(Json::as_arr).unwrap();
         assert_eq!(rules.len(), 1);
         assert_eq!(

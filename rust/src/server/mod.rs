@@ -58,6 +58,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::bic::kernel;
 use crate::engine::{
     EngineConfig, EngineStats, PallasError, Result, Schema,
 };
@@ -109,6 +110,7 @@ impl Shared {
         let prom = prometheus_text(&tenants, &server);
         Ok(Json::obj([
             ("stats_version", EngineStats::STATS_VERSION.into()),
+            ("bic_kernel_tier", kernel::tier().label().into()),
             ("tenants", tenants),
             ("server", server),
             ("prometheus", prom.into()),
@@ -150,6 +152,11 @@ fn prometheus_text(tenants: &Json, server: &Json) -> String {
         out,
         "# bic_metrics_version {}",
         EngineStats::STATS_VERSION
+    );
+    let _ = writeln!(
+        out,
+        "bic_kernel_tier{{tier=\"{}\"}} 1",
+        kernel::tier().label()
     );
     if let Json::Obj(map) = server {
         for (k, v) in map {

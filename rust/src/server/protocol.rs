@@ -34,7 +34,12 @@
 //! grammar of [`predicate_from_json`].
 //!
 //! Responses are `{"ok":true,...}` with command-specific payload
-//! fields, or `{"ok":false,"error":{"code","what","detail"}}`. The
+//! fields, or `{"ok":false,"error":{"code","what","detail"}}`.
+//! `stats`/`metrics` payloads carry `stats_version` (currently 4:
+//! version 4 added the string field `kernel_tier` to engine stats and
+//! `bic_kernel_tier` to the `metrics` document; numeric fields are
+//! unchanged from version 3, so version-3 readers that ignore unknown
+//! fields keep working). The
 //! `code` values are exactly the [`PallasError::class`] names plus the
 //! two protocol-native codes [`WireError::bad_request`] (unparseable or
 //! ill-formed request) and [`WireError::unknown_tenant`]. `busy` is the

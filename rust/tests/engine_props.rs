@@ -624,7 +624,7 @@ fn stats_json_surface_is_versioned_and_stable() {
         |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or_else(|| {
             panic!("stats JSON missing numeric field {k:?}")
         });
-    assert_eq!(num("stats_version"), 3.0);
+    assert_eq!(num("stats_version"), 4.0);
     assert_eq!(num("attrs"), CFG.m_keys as f64);
     assert_eq!(num("batches_ingested"), 4.0);
     assert_eq!(num("objects"), stats.objects as f64);
@@ -674,6 +674,15 @@ fn stats_json_surface_is_versioned_and_stable() {
             "v3 field {v3_field} missing"
         );
     }
+    // Version 4 adds the surface's first non-numeric field: the active
+    // kernel tier label. Still additive — numeric consumers skip it.
+    assert!(
+        matches!(
+            doc.get("kernel_tier").and_then(Json::as_str),
+            Some("scalar") | Some("avx2")
+        ),
+        "v4 field kernel_tier missing or unlabelled"
+    );
     assert_eq!(doc.get("telemetry").and_then(Json::as_bool), Some(false));
     engine.close().expect("close");
     let _ = fs::remove_dir_all(&dir);

@@ -1,0 +1,280 @@
+//! Kernel-tier parity properties: every dispatched kernel in
+//! `bic::kernel` must be **bit-identical** to the retained scalar
+//! reference ([`kernel::SCALAR`]) — across ragged word tails, empty
+//! slices, all-zeros/all-ones saturation, and random densities — and
+//! both tiers must agree with an independent brute-force reference, so
+//! a broken SIMD lane cannot hide behind a matching scalar bug.
+//!
+//! The bitmap-level twin drives the same kernels through [`Bitmap`]
+//! algebra at the ISSUE's ragged bit widths (0, 1, 63, 64, 65,
+//! 4096 ± 1), and the WAH property pins `compress_with`/
+//! `decompress_with` word-identical through both tiers. On a host
+//! without AVX2 (or under `PALLAS_KERNEL_TIER=scalar` — the ci.sh
+//! force-scalar leg) the dispatched table *is* the scalar table and
+//! every parity check degenerates to self-comparison, which is exactly
+//! the bit-identical guarantee the override promises.
+
+use sotb_bic::bic::kernel::{self, Kernels, SCALAR};
+use sotb_bic::bic::{Bitmap, WahBitmap};
+use sotb_bic::substrate::proptest::{check, Gen};
+
+/// Word-slice lengths covering empty input, sub-vector tails (< 4
+/// words), the vector width and every tail residue around it, and a
+/// bulk length.
+const WORD_LENS: [usize; 10] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 67];
+
+/// The ISSUE's ragged bit widths for the bitmap-level twin.
+const BIT_LENS: [usize; 8] = [0, 1, 63, 64, 65, 4095, 4096, 4097];
+
+fn arb_words(g: &mut Gen, n: usize) -> Vec<u64> {
+    // Mix saturated and random words so fills, runs, and tails all get
+    // exercised at every length.
+    g.vec(n, |g| match g.usize_in(0, 3) {
+        0 => 0,
+        1 => u64::MAX,
+        _ => g.u64(),
+    })
+}
+
+fn arb_bitmap(g: &mut Gen, nbits: usize) -> Bitmap {
+    let density = match g.usize_in(0, 3) {
+        0 => 0.0,
+        1 => 1.0,
+        _ => g.f64_in(0.0, 1.0),
+    };
+    let bits: Vec<bool> = (0..nbits).map(|_| g.chance(density)).collect();
+    Bitmap::from_bools(&bits)
+}
+
+#[test]
+fn binary_kernels_match_scalar_and_brute_force() {
+    let d: &Kernels = kernel::table();
+    type Bin = fn(&mut [u64], &[u64]);
+    let cases: [(&str, Bin, Bin, fn(u64, u64) -> u64); 4] = [
+        ("and", SCALAR.and, d.and, |a, b| a & b),
+        ("or", SCALAR.or, d.or, |a, b| a | b),
+        ("xor", SCALAR.xor, d.xor, |a, b| a ^ b),
+        ("and_not", SCALAR.and_not, d.and_not, |a, b| a & !b),
+    ];
+    check("kernel-binops", 0x4B00, 120, |g| {
+        let n = WORD_LENS[g.usize_in(0, WORD_LENS.len() - 1)];
+        let dst = arb_words(g, n);
+        let src = arb_words(g, n);
+        for (name, sc, dp, word) in cases {
+            let mut a = dst.clone();
+            let mut b = dst.clone();
+            sc(&mut a, &src);
+            dp(&mut b, &src);
+            let expect: Vec<u64> =
+                dst.iter().zip(&src).map(|(&x, &y)| word(x, y)).collect();
+            if a != expect {
+                return Err(format!("scalar {name} vs brute force, n={n}"));
+            }
+            if b != expect {
+                return Err(format!("dispatched {name} vs brute force, n={n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn unary_and_fill_kernels_match_scalar() {
+    let d = kernel::table();
+    check("kernel-unary", 0x4B01, 120, |g| {
+        let n = WORD_LENS[g.usize_in(0, WORD_LENS.len() - 1)];
+        let dst = arb_words(g, n);
+        let mut a = dst.clone();
+        let mut b = dst.clone();
+        (SCALAR.not)(&mut a);
+        (d.not)(&mut b);
+        let expect: Vec<u64> = dst.iter().map(|&w| !w).collect();
+        if a != expect || b != expect {
+            return Err(format!("not parity, n={n}"));
+        }
+        let v = if g.bool() { u64::MAX } else { g.u64() };
+        (SCALAR.fill)(&mut a, v);
+        (d.fill)(&mut b, v);
+        if a != vec![v; n] || a != b {
+            return Err(format!("fill parity, n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn and_live_matches_scalar_words_and_liveness() {
+    let d = kernel::table();
+    check("kernel-and-live", 0x4B02, 120, |g| {
+        let n = WORD_LENS[g.usize_in(0, WORD_LENS.len() - 1)];
+        let dst = arb_words(g, n);
+        // Force the dead-block case often: all-zero src kills the OR.
+        let src = if g.chance(0.25) { vec![0; n] } else { arb_words(g, n) };
+        let mut a = dst.clone();
+        let mut b = dst.clone();
+        let la = (SCALAR.and_live)(&mut a, &src);
+        let lb = (d.and_live)(&mut b, &src);
+        if a != b {
+            return Err(format!("and_live words diverge, n={n}"));
+        }
+        let any = a.iter().fold(0u64, |x, &w| x | w);
+        if (la != 0) != (any != 0) || (lb != 0) != (any != 0) {
+            return Err(format!("and_live liveness diverges, n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn count_and_runs_match_scalar_and_bit_reference() {
+    let d = kernel::table();
+    check("kernel-count-runs", 0x4B03, 120, |g| {
+        let n = WORD_LENS[g.usize_in(0, WORD_LENS.len() - 1)];
+        let words = arb_words(g, n);
+        let bits: Vec<bool> = (0..n * 64)
+            .map(|i| words[i / 64] >> (i % 64) & 1 == 1)
+            .collect();
+        let ones = bits.iter().filter(|&&b| b).count();
+        let runs = bits
+            .iter()
+            .enumerate()
+            .filter(|&(i, &b)| b && (i == 0 || !bits[i - 1]))
+            .count();
+        if (SCALAR.count_ones)(&words) != ones
+            || (d.count_ones)(&words) != ones
+        {
+            return Err(format!("count_ones parity, n={n}"));
+        }
+        if (SCALAR.one_runs)(&words) != runs || (d.one_runs)(&words) != runs {
+            return Err(format!("one_runs parity, n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn transpose64_matches_scalar_and_definition() {
+    let d = kernel::table();
+    check("kernel-transpose64", 0x4B04, 120, |g| {
+        let mut tile = [0u64; 64];
+        for w in tile.iter_mut() {
+            *w = match g.usize_in(0, 3) {
+                0 => 0,
+                1 => u64::MAX,
+                _ => g.u64(),
+            };
+        }
+        let mut a = tile;
+        let mut b = tile;
+        (SCALAR.transpose64)(&mut a);
+        (d.transpose64)(&mut b);
+        if a != b {
+            return Err("transpose64 tiers diverge".into());
+        }
+        for i in 0..64 {
+            for j in 0..64 {
+                if a[j] >> i & 1 != tile[i] >> j & 1 {
+                    return Err(format!("transpose64 bit ({i},{j}) wrong"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn uniform_span_matches_scalar_everywhere() {
+    let d = kernel::table();
+    check("kernel-uniform-span", 0x4B05, 200, |g| {
+        let n = WORD_LENS[g.usize_in(0, WORD_LENS.len() - 1)];
+        // Run-heavy words so spans of every length occur.
+        let words = g.vec(n, |g| if g.bool() { 0 } else { u64::MAX });
+        let from = g.usize_in(0, n + 2);
+        for value in [0u64, u64::MAX, 7] {
+            let expect = if from >= n {
+                0
+            } else {
+                words[from..].iter().take_while(|&&w| w == value).count()
+            };
+            if (SCALAR.uniform_span)(&words, from, value) != expect {
+                return Err(format!("scalar span, n={n} from={from}"));
+            }
+            if (d.uniform_span)(&words, from, value) != expect {
+                return Err(format!("dispatched span, n={n} from={from}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bitmap_algebra_is_tier_invariant_at_ragged_widths() {
+    // The Bitmap facade routes through the dispatched table; pin it
+    // against a bool-level model at every ragged width, so the tail
+    // invariant (bits past nbits stay zero) survives the SIMD tier.
+    check("kernel-bitmap-twin", 0x4B06, 80, |g| {
+        let n = BIT_LENS[g.usize_in(0, BIT_LENS.len() - 1)];
+        let a = arb_bitmap(g, n);
+        let b = arb_bitmap(g, n);
+        let pairs: [(&str, Bitmap, fn(bool, bool) -> bool); 4] = [
+            ("and", a.and(&b), |x, y| x & y),
+            ("or", a.or(&b), |x, y| x | y),
+            ("xor", a.xor(&b), |x, y| x ^ y),
+            ("and_not", a.and_not(&b), |x, y| x & !y),
+        ];
+        for (name, got, bit) in pairs {
+            let expect = Bitmap::from_bools(
+                &(0..n).map(|i| bit(a.get(i), b.get(i))).collect::<Vec<_>>(),
+            );
+            if got != expect {
+                return Err(format!("bitmap {name} diverges at n={n}"));
+            }
+        }
+        if a.not() != Bitmap::from_bools(
+            &(0..n).map(|i| !a.get(i)).collect::<Vec<_>>(),
+        ) {
+            return Err(format!("bitmap not diverges at n={n}"));
+        }
+        let ones = (0..n).filter(|&i| a.get(i)).count();
+        if a.count_ones() != ones {
+            return Err(format!("bitmap count_ones diverges at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wah_round_trips_word_identical_through_both_tiers() {
+    let d = kernel::table();
+    check("kernel-wah-tiers", 0x4B07, 60, |g| {
+        let n = BIT_LENS[g.usize_in(0, BIT_LENS.len() - 1)];
+        let bm = arb_bitmap(g, n);
+        let ws = WahBitmap::compress_with(&bm, &SCALAR);
+        let wd = WahBitmap::compress_with(&bm, d);
+        if ws != wd {
+            return Err(format!("compress_with tiers diverge at n={n}"));
+        }
+        if WahBitmap::compress(&bm) != wd {
+            return Err(format!("compress != dispatched compress_with, n={n}"));
+        }
+        if ws.decompress_with(&SCALAR) != bm || ws.decompress_with(d) != bm {
+            return Err(format!("decompress_with round-trip fails at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tier_honors_the_env_override() {
+    let label = kernel::tier().label();
+    assert_eq!(kernel::table().label, label);
+    match std::env::var("PALLAS_KERNEL_TIER").ok().as_deref() {
+        Some(v) if v.eq_ignore_ascii_case("scalar") => {
+            assert_eq!(label, "scalar", "override must force the scalar tier")
+        }
+        _ => assert!(
+            label == "scalar" || label == "avx2",
+            "unknown tier label {label}"
+        ),
+    }
+}

@@ -430,7 +430,14 @@ fn wire_surface_exposes_quantiles_explain_slowlog_and_trace() {
     // text alongside.
     let m = c.metrics().expect("transport");
     assert!(response_ok(&m), "metrics: {}", m.render());
-    assert_eq!(m.get("stats_version").and_then(Json::as_f64), Some(3.0));
+    assert_eq!(m.get("stats_version").and_then(Json::as_f64), Some(4.0));
+    assert!(
+        matches!(
+            m.get("bic_kernel_tier").and_then(Json::as_str),
+            Some("scalar") | Some("avx2")
+        ),
+        "metrics must name the active kernel tier"
+    );
     let obs_tenant =
         m.get("tenants").and_then(|t| t.get("obs")).expect("tenant obs");
     let telem = obs_tenant.get("telemetry").expect("telemetry section");
@@ -465,10 +472,13 @@ fn wire_surface_exposes_quantiles_explain_slowlog_and_trace() {
         .get("prometheus")
         .and_then(Json::as_str)
         .expect("prometheus text");
-    assert!(prom.starts_with("# bic_metrics_version 3"), "version header");
-    for series in
-        ["bic_ingest_ack_cycles", "bic_query_cycles", "tenant=\"obs\""]
-    {
+    assert!(prom.starts_with("# bic_metrics_version 4"), "version header");
+    for series in [
+        "bic_ingest_ack_cycles",
+        "bic_query_cycles",
+        "tenant=\"obs\"",
+        "bic_kernel_tier{tier=\"",
+    ] {
         assert!(prom.contains(series), "prometheus lacks {series}");
     }
 
@@ -477,6 +487,7 @@ fn wire_surface_exposes_quantiles_explain_slowlog_and_trace() {
     assert!(response_ok(&resp), "explain: {}", resp.render());
     let report = resp.get("explain").expect("report");
     assert!(report.get("tier").and_then(Json::as_str).is_some());
+    assert!(report.get("kernel_tier").and_then(Json::as_str).is_some());
     assert!(report.get("rules").and_then(Json::as_arr).is_some());
     assert!(report.get("actual").is_some(), "analyze:true ran");
     // ...and works on the non-telemetry tenant too.

@@ -470,10 +470,19 @@ fn metrics_surface_and_restart_reopen() {
 
     let m = c.metrics().expect("transport");
     assert!(response_ok(&m), "metrics: {}", m.render());
+    // Version 4 (kernel tier): purely additive over version 3 — every
+    // numeric field keeps its v3 name and meaning, the new
+    // `kernel_tier`/`bic_kernel_tier` fields are strings a v3 reader
+    // that ignores unknown keys never sees. Protocol note in
+    // `server::protocol`.
     assert_eq!(
         m.get("stats_version").and_then(Json::as_f64),
-        Some(3.0),
+        Some(4.0),
         "stats_version"
+    );
+    assert!(
+        m.get("bic_kernel_tier").and_then(Json::as_str).is_some(),
+        "metrics must carry the kernel tier"
     );
     let t = m
         .get("tenants")
@@ -489,6 +498,7 @@ fn metrics_surface_and_restart_reopen() {
         "queries_total",
         "segments",
         "durable",
+        "kernel_tier",
     ] {
         assert!(
             engine.get(field).is_some(),
